@@ -1,0 +1,76 @@
+//! Solver shoot-out on one problem: dense Cholesky (oracle), BLR tile
+//! Cholesky (LORAPO analog, O(N²)), HSS (η=0) and H²-ULV — accuracy,
+//! FLOPs, and time side by side (the paper's Figures 18-20 in miniature).
+//!
+//! ```bash
+//! cargo run --release --example solver_comparison
+//! ```
+
+use h2ulv::baselines::blr::{BlrConfig, BlrMatrix};
+use h2ulv::baselines::dense::DenseSolver;
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::construct::H2Config;
+use h2ulv::geometry::Geometry;
+use h2ulv::h2::H2Matrix;
+use h2ulv::kernels::KernelFn;
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::metrics::{flops, timer::timed};
+use h2ulv::tree::ClusterTree;
+use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::util::Rng;
+
+fn main() {
+    let n = 2048;
+    let g = Geometry::sphere_surface(n, 99);
+    let kernel = KernelFn::laplace();
+    let mut rng = Rng::new(1);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    println!("solver, factor_s, solve_s, factor_gflop, solution_err");
+
+    // Dense oracle.
+    let before = flops::snapshot();
+    let (dense, t_df) = timed(|| DenseSolver::factorize(&g.points, &kernel).unwrap());
+    let dfl = flops::delta(before, flops::snapshot()).total;
+    let (x_dense, t_ds) = timed(|| dense.solve(&b));
+    println!("dense,  {t_df:.3}, {t_ds:.4}, {:.2}, (oracle)", dfl as f64 / 1e9);
+
+    // BLR.
+    let tree = ClusterTree::build(&g, 128);
+    let bt = tree.permute_vec(&b);
+    let mut blr = BlrMatrix::build(&tree.points, &kernel, &BlrConfig { rtol: 1e-9, ..Default::default() });
+    let before = flops::snapshot();
+    let ((), t_bf) = timed(|| blr.factorize());
+    let bfl = flops::delta(before, flops::snapshot()).factor;
+    let (xt, t_bs) = timed(|| blr.solve(&bt));
+    let x_blr = tree.unpermute_vec(&xt);
+    println!(
+        "blr,    {t_bf:.3}, {t_bs:.4}, {:.2}, {:.2e}",
+        bfl as f64 / 1e9,
+        rel_err_vec(&x_blr, &x_dense)
+    );
+
+    // HSS (eta = 0) and H² (eta = 1) with the same code.
+    for (name, eta) in [("hss", 0.0), ("h2ulv", 1.0)] {
+        let cfg = H2Config {
+            leaf_size: 256,
+            max_rank: 48,
+            far_samples: 0,
+            near_samples: 0,
+            eta,
+            ..Default::default()
+        };
+        let h2 = H2Matrix::construct(&g, &kernel, &cfg);
+        let backend = NativeBackend::new();
+        let before = flops::snapshot();
+        let (fac, t_f) = timed(|| factorize(&h2, &backend));
+        let ffl = flops::delta(before, flops::snapshot()).factor;
+        let (x, t_s) = timed(|| fac.solve(&b, &backend, SubstMode::Parallel));
+        println!(
+            "{name}, {t_f:.3}, {t_s:.4}, {:.2}, {:.2e}",
+            ffl as f64 / 1e9,
+            rel_err_vec(&x, &x_dense)
+        );
+    }
+    println!("\nsolver_comparison OK");
+}

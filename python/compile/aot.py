@@ -1,0 +1,87 @@
+"""AOT lowering: JAX level-step graphs -> HLO text artifacts + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--families 64x32,32x16]
+                              [--buckets 1,2,4,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+DEFAULT_FAMILIES = [(64, 32), (32, 16)]
+DEFAULT_BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(name: str, batch: int, d: int, k: int) -> str:
+    fn, shapes = model.OPS[name]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float64) for s in shapes(batch, d, k)]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--families",
+        default=",".join(f"{d}x{k}" for d, k in DEFAULT_FAMILIES),
+        help="comma-separated DxK padded-shape families",
+    )
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated batch-size buckets",
+    )
+    ap.add_argument("--ops", default=",".join(model.OPS.keys()))
+    args = ap.parse_args()
+
+    families = []
+    for fam in args.families.split(","):
+        d, k = fam.split("x")
+        families.append((int(d), int(k)))
+    buckets = [int(b) for b in args.buckets.split(",")]
+    ops = args.ops.split(",")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    count = 0
+    for d, k in families:
+        for op in ops:
+            for b in buckets:
+                fname = f"{op}_b{b}_d{d}_k{k}.hlo.txt"
+                path = os.path.join(args.out_dir, fname)
+                text = lower_op(op, b, d, k)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["artifacts"].append(
+                    {"op": op, "batch": b, "d": d, "k": k, "file": fname}
+                )
+                count += 1
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {count} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

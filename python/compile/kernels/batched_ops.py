@@ -1,0 +1,111 @@
+"""Layer-1 Pallas kernels: the FLOP hot spots of the ULV level step.
+
+Three kernels, all batched over the leading dimension (the paper's batched
+cuBLAS/cuSOLVER launches):
+
+* ``batched_matmul`` — tiled ``C[b] = op(A[b]) @ op(B[b])``;
+* ``schur_update``   — ``C[b] -= A[b] @ A[b].T`` (the single trailing
+  update of Algorithm 2 line 16);
+* ``two_sided``      — ``F[b] = U[b].T @ A[b] @ V[b]`` (matrix
+  sparsification, paper Figure 2), fused so the intermediate stays in VMEM.
+
+TPU adaptation notes (DESIGN.md §2): the grid iterates over the batch — on a
+real TPU each grid step owns one block resident in VMEM, which plays the
+role the paper assigns to a threadblock owning a tile in shared memory. The
+MXU consumes the inner ``jnp.dot``/``@``. ``interpret=True`` is mandatory on
+CPU PJRT (Mosaic custom-calls cannot run there — /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _mm_kernel(a_ref, b_ref, c_ref, *, ta: bool, tb: bool):
+    # Block shapes carry a leading batch dim of 1 (one grid step = one
+    # batch element resident in VMEM); index it away.
+    a = a_ref[0]
+    b = b_ref[0]
+    if ta:
+        a = a.T
+    if tb:
+        b = b.T
+    c_ref[0] = jnp.dot(a, b, preferred_element_type=c_ref.dtype)
+
+
+def batched_matmul(a, b, ta: bool = False, tb: bool = False):
+    """``C[t] = op(A[t]) @ op(B[t])`` as a Pallas kernel, grid over batch."""
+    bsz, am, ak = a.shape
+    _, bk, bn = b.shape
+    m = ak if ta else am
+    k = am if ta else ak
+    n = bk if tb else bn
+    k2 = bn if tb else bk
+    assert k == k2, f"inner dim mismatch {k} vs {k2}"
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, ta=ta, tb=tb),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), a.dtype),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, am, ak), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, bk, bn), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda t: (t, 0, 0)),
+        interpret=True,
+    )(a, b)
+
+
+def _schur_kernel(c_ref, a_ref, o_ref):
+    a = a_ref[0]
+    o_ref[0] = c_ref[0] - jnp.dot(a, a.T, preferred_element_type=o_ref.dtype)
+
+
+def schur_update(c, a):
+    """``C[t] - A[t] @ A[t].T`` — the diagonal SS Schur update (eq 21)."""
+    bsz, n, _ = c.shape
+    _, n2, k = a.shape
+    assert n == n2
+    return pl.pallas_call(
+        _schur_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, n, n), c.dtype),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, n, k), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, n), lambda t: (t, 0, 0)),
+        interpret=True,
+    )(c, a)
+
+
+def _two_sided_kernel(u_ref, a_ref, v_ref, o_ref):
+    # U^T A V fused: the U^T A intermediate lives in registers/VMEM only.
+    u = u_ref[0]
+    a = a_ref[0]
+    v = v_ref[0]
+    ua = jnp.dot(u.T, a, preferred_element_type=o_ref.dtype)
+    o_ref[0] = jnp.dot(ua, v, preferred_element_type=o_ref.dtype)
+
+
+def two_sided(u, a, v):
+    """``F[t] = U[t].T @ A[t] @ V[t]`` — matrix sparsification."""
+    bsz, m, mu = u.shape
+    _, m2, n = a.shape
+    _, n2, nv = v.shape
+    assert m == m2 and n == n2
+    return pl.pallas_call(
+        _two_sided_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, mu, nv), a.dtype),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, m, mu), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, m, n), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, n, nv), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, mu, nv), lambda t: (t, 0, 0)),
+        interpret=True,
+    )(u, a, v)

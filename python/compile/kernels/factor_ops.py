@@ -1,0 +1,99 @@
+"""Custom-call-free batched Cholesky and triangular solves.
+
+``jax.lax.linalg.{cholesky,triangular_solve}`` lower to LAPACK typed-FFI
+custom-calls (``lapack_dpotrf_ffi`` etc.) that the xla crate's
+xla_extension 0.5.1 runtime cannot load (``Unknown custom-call API version
+enum value: 4``). These replacements lower to plain HLO (while-loops +
+dynamic slices), so the AOT artifacts run on any PJRT backend. Block sizes
+in this system are small (<= 64), so the O(n) sequential loop around an
+O(n²) vectorized body is the right shape — it is also exactly how a TPU
+would schedule a small Cholesky panel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _chol_one(a):
+    """Lower Cholesky of one SPD matrix via n rank-1 downdates."""
+    n = a.shape[-1]
+    idx = jnp.arange(n)
+
+    def body(j, carry):
+        a, l = carry
+        d = jnp.sqrt(a[j, j])
+        col = jnp.where(idx >= j, a[:, j] / d, 0.0)
+        l = lax.dynamic_update_slice(l, col[:, None], (0, j))
+        a = a - jnp.outer(col, col)
+        return (a, l)
+
+    _, l = lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def cholesky(a):
+    """Batched lower Cholesky, [B, n, n] -> [B, n, n]."""
+    return jax.vmap(_chol_one)(a)
+
+
+def _trsm_right_lt_one(l, b):
+    """Solve X Lᵀ = B (one matrix): column-by-column forward substitution."""
+    n = l.shape[-1]
+    idx = jnp.arange(n)
+
+    def body(j, x):
+        # Row j of L, masked to the already-solved columns (< j).
+        lj = jnp.where(idx < j, l[j, :], 0.0)
+        rhs = lax.dynamic_slice(b, (0, j), (b.shape[0], 1))[:, 0]
+        col = (rhs - x @ lj) / l[j, j]
+        return lax.dynamic_update_slice(x, col[:, None], (0, j))
+
+    return lax.fori_loop(0, n, body, b)
+
+
+def trsm_right_lt(l, b):
+    """Batched X[t] = B[t] · L[t]ᵀ⁻¹."""
+    return jax.vmap(_trsm_right_lt_one)(l, b)
+
+
+def _trsv_fwd_one(l, x):
+    """Solve L y = x (vector shaped [n, 1])."""
+    n = l.shape[-1]
+    idx = jnp.arange(n)
+    v = x[:, 0]
+
+    def body(j, y):
+        lj = jnp.where(idx < j, l[j, :], 0.0)
+        yj = (v[j] - jnp.dot(lj, y)) / l[j, j]
+        return lax.dynamic_update_slice(y, yj[None], (j,))
+
+    y = lax.fori_loop(0, n, body, jnp.zeros_like(v))
+    return y[:, None]
+
+
+def trsv_fwd(l, x):
+    return jax.vmap(_trsv_fwd_one)(l, x)
+
+
+def _trsv_bwd_one(l, x):
+    """Solve Lᵀ y = x (vector shaped [n, 1])."""
+    n = l.shape[-1]
+    idx = jnp.arange(n)
+    v = x[:, 0]
+
+    def body(t, y):
+        j = n - 1 - t
+        # Column j of L below the diagonal = row of Lᵀ right of diagonal.
+        cj = jnp.where(idx > j, l[:, j], 0.0)
+        yj = (v[j] - jnp.dot(cj, y)) / l[j, j]
+        return lax.dynamic_update_slice(y, yj[None], (j,))
+
+    y = lax.fori_loop(0, n, body, jnp.zeros_like(v))
+    return y[:, None]
+
+
+def trsv_bwd(l, x):
+    return jax.vmap(_trsv_bwd_one)(l, x)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only)."""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def batched_matmul_ref(a, b, ta: bool = False, tb: bool = False):
+    if ta:
+        a = jnp.swapaxes(a, -1, -2)
+    if tb:
+        b = jnp.swapaxes(b, -1, -2)
+    return jnp.einsum("bij,bjk->bik", a, b)
+
+
+def schur_update_ref(c, a):
+    return c - jnp.einsum("bij,bkj->bik", a, a)
+
+
+def two_sided_ref(u, a, v):
+    return jnp.einsum("bji,bjk,bkl->bil", u, a, v)

@@ -1,0 +1,92 @@
+"""Layer-2 JAX graphs: the batched ULV level-step operations.
+
+Each function is a fixed-shape batched computation the rust coordinator
+launches through PJRT (one AOT executable per (op, batch, D, K) bucket —
+constant-size batches with zero padding, exactly the paper's §4.1 policy).
+
+The FLOP hot spots call the Layer-1 Pallas kernels in
+``kernels/batched_ops.py``; factorization-specific ops (Cholesky,
+triangular solve) use ``jax.lax.linalg`` which XLA lowers to its native
+batched routines — the analog of cuSOLVER's batched POTRF/TRSM.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batched_ops as k1
+from .kernels import factor_ops
+
+jax.config.update("jax_enable_x64", True)
+
+
+def sparsify(u, a, v):
+    """F[t] = U[t]^T A[t] V[t] (matrix sparsification; Pallas two_sided)."""
+    return (k1.two_sided(u, a, v),)
+
+
+def potrf(a):
+    """Batched lower Cholesky.
+
+    Padded inputs carry unit diagonals in the padded region (the paper's
+    AXPY-diagonal trick) so the factorization never hits a zero pivot.
+    Custom-call-free (see kernels/factor_ops.py): plain-HLO while loop, so
+    the artifact loads on the rust PJRT CPU client.
+    """
+    return (factor_ops.cholesky(a),)
+
+
+def trsm_right_lt(l, b):
+    """X[t] = B[t] @ L[t]^-T  (panel solve L_ji = A_ji L_ii^-T)."""
+    return (factor_ops.trsm_right_lt(l, b),)
+
+
+def schur_self(c, a):
+    """C[t] - A[t] A[t]^T (the single allowed trailing update; Pallas)."""
+    return (k1.schur_update(c, a),)
+
+
+def trsv_fwd(l, x):
+    """y[t] = L[t]^-1 x[t] for vector RHS shaped [B, n, 1]."""
+    return (factor_ops.trsv_fwd(l, x),)
+
+
+def trsv_bwd(l, x):
+    """y[t] = L[t]^-T x[t] for vector RHS shaped [B, n, 1]."""
+    return (factor_ops.trsv_bwd(l, x),)
+
+
+def gemv_acc_nt(a, x, y):
+    """y[t] -= A[t] x[t]  (substitution update, A not transposed)."""
+    return (y - k1.batched_matmul(a, x),)
+
+
+def gemv_acc_tt(a, x, y):
+    """y[t] -= A[t]^T x[t] (backward-pass update)."""
+    return (y - k1.batched_matmul(a, x, ta=True),)
+
+
+def basis_t(u, x):
+    """c[t] = U[t]^T x[t] (apply basis transpose to a vector)."""
+    return (k1.batched_matmul(u, x, ta=True),)
+
+
+def basis_n(u, x):
+    """b[t] = U[t] x[t] (apply basis to a vector)."""
+    return (k1.batched_matmul(u, x),)
+
+
+#: op name -> (function, example-shape builder given (batch, d, k)).
+#: d = padded block dim (ndof), k = padded rank (= nred = d/2 in the
+#: self-similar configuration leaf = 2*rank).
+OPS = {
+    "sparsify": (sparsify, lambda b, d, k: [(b, d, d), (b, d, d), (b, d, d)]),
+    "potrf": (potrf, lambda b, d, k: [(b, k, k)]),
+    "trsm": (trsm_right_lt, lambda b, d, k: [(b, k, k), (b, k, k)]),
+    "schur": (schur_self, lambda b, d, k: [(b, k, k), (b, k, k)]),
+    "trsv_fwd": (trsv_fwd, lambda b, d, k: [(b, k, k), (b, k, 1)]),
+    "trsv_bwd": (trsv_bwd, lambda b, d, k: [(b, k, k), (b, k, 1)]),
+    "gemv_nt": (gemv_acc_nt, lambda b, d, k: [(b, k, k), (b, k, 1), (b, k, 1)]),
+    "gemv_tt": (gemv_acc_tt, lambda b, d, k: [(b, k, k), (b, k, 1), (b, k, 1)]),
+    "basis_t": (basis_t, lambda b, d, k: [(b, d, d), (b, d, 1)]),
+    "basis_n": (basis_n, lambda b, d, k: [(b, d, d), (b, d, 1)]),
+}

@@ -1,0 +1,66 @@
+"""AOT path: lowering to HLO text must produce loadable modules."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_one_op_produces_hlo_text():
+    text = aot.lower_op("potrf", 2, 16, 8)
+    assert "HloModule" in text
+    assert "f64" in text
+
+
+def test_lower_all_ops_smallest_bucket():
+    for op in model.OPS:
+        text = aot.lower_op(op, 1, 8, 4)
+        assert "HloModule" in text, op
+        # return_tuple=True: the root must be a tuple.
+        assert "ROOT" in text, op
+
+
+def test_pallas_interpret_lowers_without_custom_call():
+    # interpret=True must lower to plain HLO ops: a Mosaic/TPU custom-call
+    # would be unloadable by the CPU PJRT client (README gotcha).
+    text = aot.lower_op("sparsify", 1, 8, 4)
+    assert "custom-call" not in text or "Sharding" in text
+
+
+def test_no_typed_ffi_custom_calls_anywhere():
+    # xla_extension 0.5.1 rejects API_VERSION_TYPED_FFI custom-calls
+    # (lapack_*_ffi); every artifact must lower without them — that is why
+    # factor_ops.py reimplements Cholesky/TRSM as plain-HLO loops.
+    for op in model.OPS:
+        text = aot.lower_op(op, 1, 8, 4)
+        assert "API_VERSION_TYPED_FFI" not in text, op
+        assert "lapack_" not in text, op
+
+
+def test_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    argv = [
+        "aot",
+        "--out-dir",
+        str(out),
+        "--families",
+        "8x4",
+        "--buckets",
+        "1,2",
+        "--ops",
+        "potrf,trsm",
+    ]
+    old = sys.argv
+    sys.argv = argv
+    try:
+        aot.main()
+    finally:
+        sys.argv = old
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert len(manifest["artifacts"]) == 4
+    for art in manifest["artifacts"]:
+        assert (out / art["file"]).exists()

@@ -1,0 +1,73 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import batched_ops as k1
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+dims = st.integers(min_value=1, max_value=12)
+batches = st.integers(min_value=1, max_value=5)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=batches, m=dims, k=dims, n=dims, ta=st.booleans(), tb=st.booleans())
+def test_batched_matmul_matches_ref(b, m, k, n, ta, tb):
+    rng = np.random.default_rng(b * 1000 + m * 100 + k * 10 + n)
+    a_shape = (b, k, m) if ta else (b, m, k)
+    b_shape = (b, n, k) if tb else (b, k, n)
+    a = rand(rng, *a_shape)
+    bb = rand(rng, *b_shape)
+    got = k1.batched_matmul(a, bb, ta=ta, tb=tb)
+    want = ref.batched_matmul_ref(a, bb, ta=ta, tb=tb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batches, n=dims, k=dims)
+def test_schur_update_matches_ref(b, n, k):
+    rng = np.random.default_rng(b * 100 + n * 10 + k)
+    c = rand(rng, b, n, n)
+    a = rand(rng, b, n, k)
+    got = k1.schur_update(c, a)
+    want = ref.schur_update_ref(c, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batches, m=dims, n=dims, ku=dims, kv=dims)
+def test_two_sided_matches_ref(b, m, n, ku, kv):
+    rng = np.random.default_rng(b + m * 7 + n * 13 + ku * 17 + kv * 19)
+    u = rand(rng, b, m, ku)
+    a = rand(rng, b, m, n)
+    v = rand(rng, b, n, kv)
+    got = k1.two_sided(u, a, v)
+    want = ref.two_sided_ref(u, a, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11, atol=1e-11)
+
+
+def test_f32_dtype_supported():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((2, 4, 4)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 4, 4)), dtype=jnp.float32)
+    got = k1.batched_matmul(a, b)
+    assert got.dtype == jnp.float32
+    want = ref.batched_matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((1, 2, 3))
+    b = jnp.zeros((1, 4, 2))
+    with pytest.raises(AssertionError):
+        k1.batched_matmul(a, b)

@@ -1,0 +1,117 @@
+"""L2 correctness: the batched ULV level-step graphs vs numpy references."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def spd_batch(rng, b, n):
+    g = rng.standard_normal((b, n, n))
+    a = np.einsum("bij,bkj->bik", g, g) + n * np.eye(n)
+    return jnp.asarray(a)
+
+
+def test_potrf_reconstructs():
+    rng = np.random.default_rng(1)
+    a = spd_batch(rng, 4, 8)
+    (l,) = model.potrf(a)
+    l = np.asarray(l)
+    rec = np.einsum("bij,bkj->bik", l, l)
+    np.testing.assert_allclose(rec, np.asarray(a), rtol=1e-10, atol=1e-10)
+    # Lower triangular.
+    for t in range(4):
+        assert np.allclose(np.triu(l[t], 1), 0.0)
+
+
+def test_potrf_with_identity_padding():
+    # The padded region carries unit diagonal -> factorization succeeds and
+    # the true corner is unchanged (paper's AXPY-diagonal trick).
+    rng = np.random.default_rng(2)
+    a_small = np.asarray(spd_batch(rng, 2, 4))
+    padded = np.zeros((2, 8, 8))
+    padded[:, :4, :4] = a_small
+    for d in range(4, 8):
+        padded[:, d, d] = 1.0
+    (l,) = model.potrf(jnp.asarray(padded))
+    l = np.asarray(l)
+    want = np.linalg.cholesky(a_small)
+    np.testing.assert_allclose(l[:, :4, :4], want, rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(l[:, 4:, 4:], np.broadcast_to(np.eye(4), (2, 4, 4)), atol=1e-12)
+
+
+def test_trsm_right_lt():
+    rng = np.random.default_rng(3)
+    a = spd_batch(rng, 3, 6)
+    l = np.linalg.cholesky(np.asarray(a))
+    x_true = rng.standard_normal((3, 5, 6))
+    b = np.einsum("bij,bkj->bik", x_true, l)  # B = X L^T
+    (x,) = model.trsm_right_lt(jnp.asarray(l), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(x), x_true, rtol=1e-10, atol=1e-10)
+
+
+def test_schur_self():
+    rng = np.random.default_rng(4)
+    c = rng.standard_normal((2, 5, 5))
+    a = rng.standard_normal((2, 5, 3))
+    (got,) = model.schur_self(jnp.asarray(c), jnp.asarray(a))
+    want = c - np.einsum("bij,bkj->bik", a, a)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-12, atol=1e-12)
+
+
+def test_trsv_roundtrip():
+    rng = np.random.default_rng(5)
+    a = spd_batch(rng, 3, 7)
+    l = np.linalg.cholesky(np.asarray(a))
+    x_true = rng.standard_normal((3, 7, 1))
+    b_fwd = np.einsum("bij,bjk->bik", l, x_true)
+    (y,) = model.trsv_fwd(jnp.asarray(l), jnp.asarray(b_fwd))
+    np.testing.assert_allclose(np.asarray(y), x_true, rtol=1e-10, atol=1e-10)
+    b_bwd = np.einsum("bji,bjk->bik", l, x_true)
+    (y,) = model.trsv_bwd(jnp.asarray(l), jnp.asarray(b_bwd))
+    np.testing.assert_allclose(np.asarray(y), x_true, rtol=1e-10, atol=1e-10)
+
+
+def test_gemv_acc_both():
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((2, 4, 4))
+    x = rng.standard_normal((2, 4, 1))
+    y = rng.standard_normal((2, 4, 1))
+    (got,) = model.gemv_acc_nt(jnp.asarray(a), jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), y - a @ x, rtol=1e-12)
+    (got,) = model.gemv_acc_tt(jnp.asarray(a), jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), y - np.swapaxes(a, 1, 2) @ x, rtol=1e-12)
+
+
+def test_basis_apply():
+    rng = np.random.default_rng(7)
+    u = rng.standard_normal((3, 6, 6))
+    x = rng.standard_normal((3, 6, 1))
+    (got,) = model.basis_t(jnp.asarray(u), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.swapaxes(u, 1, 2) @ x, rtol=1e-12)
+    (got,) = model.basis_n(jnp.asarray(u), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), u @ x, rtol=1e-12)
+
+
+def test_ops_table_shapes_consistent():
+    # Every OPS entry must lower without error at a tiny bucket.
+    for name, (fn, shapes) in model.OPS.items():
+        specs = [jax.ShapeDtypeStruct(s, jnp.float64) for s in shapes(2, 8, 4)]
+        lowered = jax.jit(fn).lower(*specs)
+        assert lowered is not None, name
+
+
+def test_sparsify_orthogonal_roundtrip():
+    # For orthogonal U, V: U F V^T must reconstruct A.
+    rng = np.random.default_rng(8)
+    q, _ = np.linalg.qr(rng.standard_normal((6, 6)))
+    u = np.broadcast_to(q, (2, 6, 6)).copy()
+    a = rng.standard_normal((2, 6, 6))
+    (f,) = model.sparsify(jnp.asarray(u), jnp.asarray(a), jnp.asarray(u))
+    rec = np.einsum("bij,bjk,blk->bil", u, np.asarray(f), u)
+    np.testing.assert_allclose(rec, a, rtol=1e-10, atol=1e-10)

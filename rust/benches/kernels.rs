@@ -1,0 +1,73 @@
+//! Micro-benchmarks for the batched kernel hot paths: native GEMM/POTRF/
+//! TRSM throughput (the L3 roofline used in Figure 14's % claims) and the
+//! PJRT batched-launch overhead (the GPU-analog path). Used by the perf
+//! pass in EXPERIMENTS.md §Perf.
+
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::batch::BatchExec;
+use h2ulv::linalg::blas::{self};
+use h2ulv::linalg::matrix::{Matrix, Trans};
+use h2ulv::linalg::chol;
+use h2ulv::util::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, flops_per_iter: f64, mut f: F) {
+    // Warmup + timed reps.
+    f();
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "{name:<40} {:>9.3} ms   {:>8.2} GFLOP/s",
+        dt * 1e3,
+        flops_per_iter / dt / 1e9
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("== native kernel roofline ==");
+    for &n in &[64usize, 128, 256, 512] {
+        let a = Matrix::randn(n, n, &mut rng);
+        let b = Matrix::randn(n, n, &mut rng);
+        let mut c = Matrix::zeros(n, n);
+        bench(&format!("gemm {n}x{n}x{n}"), 2.0 * (n * n * n) as f64, || {
+            blas::gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+        });
+    }
+    for &n in &[64usize, 128, 256] {
+        let spd = Matrix::rand_spd(n, &mut rng);
+        bench(&format!("potrf {n}"), (n * n * n) as f64 / 3.0, || {
+            let mut m = spd.clone();
+            chol::potrf(&mut m).unwrap();
+        });
+    }
+
+    println!("\n== batched backends (32x32 blocks, batch 64) ==");
+    let batch: Vec<Matrix> = (0..64).map(|_| Matrix::rand_spd(32, &mut rng)).collect();
+    let native = NativeBackend::new();
+    bench("potrf batch=64 native", 64.0 * 32f64.powi(3) / 3.0, || {
+        let mut blocks = batch.clone();
+        native.potrf(0, &mut blocks);
+    });
+    if let Ok(pjrt) = h2ulv::runtime::PjrtBackend::new(std::path::Path::new("artifacts")) {
+        bench("potrf batch=64 pjrt", 64.0 * 32f64.powi(3) / 3.0, || {
+            let mut blocks = batch.clone();
+            pjrt.potrf(0, &mut blocks);
+        });
+        let us: Vec<Matrix> = (0..64).map(|_| Matrix::randn(64, 64, &mut rng)).collect();
+        let aa: Vec<Matrix> = (0..64).map(|_| Matrix::randn(64, 64, &mut rng)).collect();
+        let urefs: Vec<&Matrix> = us.iter().collect();
+        bench("sparsify batch=64 pjrt", 64.0 * 2.0 * 2.0 * 64f64.powi(3), || {
+            let _ = pjrt.sparsify(0, &urefs, &aa, &urefs);
+        });
+        bench("sparsify batch=64 native", 64.0 * 2.0 * 2.0 * 64f64.powi(3), || {
+            let _ = native.sparsify(0, &urefs, &aa, &urefs);
+        });
+    } else {
+        println!("(pjrt artifacts missing — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,13 @@
+//! `cargo bench` harness (criterion is unavailable offline — DESIGN.md
+//! §10): regenerates every paper table/figure at Quick scale and prints
+//! the series. One section per figure, matching DESIGN.md §7's index.
+
+use h2ulv::figures::{self, Scale};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("h2ulv paper-figure bench (Quick scale; `h2ulv figures --full` for the larger runs)");
+    let all = figures::run_all(Scale::Quick, Some(std::path::Path::new("figures_out")));
+    println!("{all}");
+    println!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());
+}

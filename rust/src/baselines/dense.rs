@@ -1,0 +1,57 @@
+//! Dense O(N³) baseline solver.
+
+use crate::kernels::KernelFn;
+use crate::linalg::chol::{self, FactorError};
+use crate::linalg::Matrix;
+use crate::metrics::flops;
+
+/// Dense Cholesky solve of the full kernel matrix.
+pub struct DenseSolver {
+    l: Matrix,
+}
+
+impl DenseSolver {
+    /// Factorize the dense kernel matrix over `points`.
+    pub fn factorize(points: &[crate::geometry::Point3], kernel: &KernelFn) -> Result<DenseSolver, FactorError> {
+        let a = kernel.dense(points);
+        let n = a.rows();
+        flops::add(flops::potrf_flops(n));
+        Ok(DenseSolver { l: chol::cholesky(&a)? })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        flops::add(2 * (self.l.rows() * self.l.rows()) as u64);
+        chol::potrs(&self.l, &mut x);
+        x
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Geometry;
+    use crate::linalg::blas;
+    use crate::linalg::matrix::Trans;
+    use crate::linalg::norms::rel_err_vec;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_baseline_solves_exactly() {
+        let g = Geometry::sphere_surface(200, 501);
+        let k = KernelFn::laplace();
+        let solver = DenseSolver::factorize(&g.points, &k).unwrap();
+        let mut rng = Rng::new(1);
+        let x0: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let a = k.dense(&g.points);
+        let mut b = vec![0.0; 200];
+        blas::gemv(1.0, &a, Trans::No, &x0, 0.0, &mut b);
+        let x = solver.solve(&b);
+        assert!(rel_err_vec(&x, &x0) < 1e-9);
+    }
+}

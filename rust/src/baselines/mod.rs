@@ -1,0 +1,15 @@
+//! Baseline solvers the paper compares against.
+//!
+//! * [`dense`] — plain O(N³) dense Cholesky/LU solve (correctness oracle
+//!   and the "BLAS/LAPACK" reference point).
+//! * [`blr`]   — Block Low-Rank tile Cholesky, our stand-in for LORAPO
+//!   (paper Figure 20's comparator): O(N²) factorization with low-rank
+//!   off-diagonal tiles and full trailing-update dependencies — precisely
+//!   the dependency structure the H²-ULV method eliminates.
+//!
+//! The HSS comparator (paper Figures 18-19) is the η=0 configuration of
+//! the main H² code (`H2Config::hss()`), as in the paper: "we used our
+//! implementation for this comparison".
+
+pub mod blr;
+pub mod dense;

@@ -1,0 +1,98 @@
+//! Batched execution engine (paper §4 "Design considerations for GPUs").
+//!
+//! The inherently parallel ULV factorization issues its per-level work as
+//! *batched* kernel launches — the paper's cuBLAS/cuSOLVER batched calls.
+//! This module defines the backend-neutral interface ([`BatchExec`]) plus:
+//!
+//! * [`native::NativeBackend`] — thread-pool execution of each batch item
+//!   with the from-scratch [`crate::linalg`] kernels (the paper's CPU path);
+//! * [`crate::runtime::PjrtBackend`] — constant-shape, zero-padded batches
+//!   executed by AOT-compiled XLA executables (the paper's GPU path; see
+//!   `python/compile/` for the JAX/Pallas kernels).
+//!
+//! Padding follows the paper: batch elements are padded to the level
+//! maximum (multiples of 4), and POTRF padding writes unit diagonals so the
+//! Cholesky never divides by zero (the paper's "batched AXPY ... via a
+//! degenerate GEMM" trick).
+
+pub mod native;
+pub mod pad;
+
+use crate::linalg::Matrix;
+
+/// Which backend executes batched kernels.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Thread-pool native kernels (CPU path).
+    #[default]
+    Native,
+    /// AOT XLA executables through PJRT (GPU-analog path). Falls back to
+    /// native per-op when an artifact for the shape bucket is missing.
+    Pjrt,
+}
+
+/// Backend-neutral batched kernels used by the ULV factorization and the
+/// parallel substitution. Every method is a single conceptual "launch";
+/// implementations may further split batches by shape bucket.
+///
+/// Shapes within one call are homogeneous unless noted; the coordinator
+/// (see [`crate::ulv`]) groups work accordingly, zero-padding per level the
+/// way the paper pads to the level's maximum rank.
+pub trait BatchExec: Sync {
+    /// In-place lower Cholesky of each block.
+    fn potrf(&self, level: usize, blocks: &mut [Matrix]);
+
+    /// `B_t <- B_t * L_tᵀ⁻¹` for each t (right-side lower-transposed TRSM —
+    /// the ULV panel solve `L_ji = A_ji L_iiᵀ⁻¹`).
+    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]);
+
+    /// `C_t <- C_t - A_t A_tᵀ` (SYRK-shaped Schur update of `A^SS`).
+    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]);
+
+    /// Two-sided basis transform `F_t = U_tᵀ A_t V_t` (matrix
+    /// sparsification, paper Figure 2). `U`/`V` are square orthogonal.
+    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix>;
+
+    /// Batched `y_t <- L_t⁻¹ x_t` (forward TRSV on the diagonal blocks).
+    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]);
+
+    /// Batched `y_t <- L_tᵀ⁻¹ x_t` (backward TRSV).
+    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]);
+
+    /// Batched GEMV accumulate `y_t += alpha * op(A_t) x_t`. `trans` selects
+    /// `A` (false) or `Aᵀ` (true). Off-diagonal substitution updates.
+    fn gemv_acc(
+        &self,
+        level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    );
+
+    /// Batched small dense `y_t = U_tᵀ x_t` / `y_t = U_t x_t` (basis applied
+    /// to vectors during substitution). `trans=true` applies `Uᵀ`.
+    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>>;
+
+    /// Human-readable backend name (diagnostics / traces).
+    fn name(&self) -> &'static str;
+}
+
+/// FLOP-count helpers shared by backends.
+pub(crate) fn count_sparsify_flops(u: &Matrix, a: &Matrix, v: &Matrix) {
+    use crate::metrics::flops;
+    flops::add(flops::gemm_flops(u.cols(), a.cols(), u.rows()));
+    flops::add(flops::gemm_flops(u.cols(), v.cols(), a.cols()));
+    let _ = v;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_default() {
+        assert_eq!(BackendChoice::default(), BackendChoice::Native);
+    }
+}

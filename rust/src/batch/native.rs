@@ -1,0 +1,285 @@
+//! Native batched backend: each batch item runs on the worker pool with the
+//! from-scratch dense kernels. This is the paper's CPU execution path
+//! ("for the CPU, we utilize the multiple cores", §6.2).
+
+use super::BatchExec;
+use crate::linalg::blas::{self, Side, Uplo};
+use crate::linalg::chol;
+use crate::linalg::matrix::{Matrix, Trans};
+use crate::metrics::flops;
+use crate::metrics::Tracer;
+use crate::util::par_for;
+use std::sync::Mutex;
+
+/// Thread-pool batched backend.
+pub struct NativeBackend {
+    /// Optional execution tracer (Figure 12 analog).
+    pub tracer: Option<Tracer>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend { tracer: None }
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_tracer() -> Self {
+        NativeBackend { tracer: Some(Tracer::new(true)) }
+    }
+
+    fn trace<T>(
+        &self,
+        level: usize,
+        kernel: &'static str,
+        batch: usize,
+        shape: (usize, usize),
+        f: impl FnOnce() -> T,
+    ) -> T {
+        match &self.tracer {
+            Some(tr) => tr.record(level, kernel, batch, shape, f),
+            None => f(),
+        }
+    }
+}
+
+impl BatchExec for NativeBackend {
+    fn potrf(&self, level: usize, blocks: &mut [Matrix]) {
+        let shape = blocks.first().map(|b| (b.rows(), b.cols())).unwrap_or((0, 0));
+        let n = blocks.len();
+        self.trace(level, "POTRF", n, shape, || {
+            let failed = Mutex::new(Vec::new());
+            {
+                let failed_ref = &failed;
+                let blocks_ptr = SendPtr(blocks.as_mut_ptr());
+                let pr = &blocks_ptr;
+                par_for(n, move |t| {
+                    // SAFETY: disjoint indices (par_for visits each once).
+                    let blk = unsafe { &mut *pr.0.add(t) };
+                    flops::add(flops::potrf_flops(blk.rows()));
+                    if let Err(e) = chol::potrf(blk) {
+                        failed_ref.lock().unwrap().push((t, e));
+                    }
+                });
+            }
+            let failed = failed.into_inner().unwrap();
+            assert!(
+                failed.is_empty(),
+                "batched POTRF failed on {} block(s): {:?}",
+                failed.len(),
+                &failed[..failed.len().min(3)]
+            );
+        });
+    }
+
+    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]) {
+        assert_eq!(l.len(), b.len());
+        let shape = b.first().map(|m| (m.rows(), m.cols())).unwrap_or((0, 0));
+        let n = b.len();
+        self.trace(level, "TRSM", n, shape, || {
+            let b_ptr = SendPtr(b.as_mut_ptr());
+            let pr = &b_ptr;
+            par_for(n, move |t| {
+                let bt = unsafe { &mut *pr.0.add(t) };
+                flops::add(flops::trsm_flops(l[t].rows(), bt.rows()));
+                blas::trsm(Side::Right, Uplo::Lower, Trans::Yes, 1.0, l[t], bt);
+            });
+        });
+    }
+
+    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]) {
+        assert_eq!(a.len(), c.len());
+        let shape = c.first().map(|m| (m.rows(), m.cols())).unwrap_or((0, 0));
+        let n = c.len();
+        self.trace(level, "SYRK", n, shape, || {
+            let c_ptr = SendPtr(c.as_mut_ptr());
+            let pr = &c_ptr;
+            par_for(n, move |t| {
+                let ct = unsafe { &mut *pr.0.add(t) };
+                flops::add(flops::gemm_flops(a[t].rows(), a[t].rows(), a[t].cols()));
+                blas::gemm(-1.0, a[t], Trans::No, a[t], Trans::Yes, 1.0, ct);
+            });
+        });
+    }
+
+    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
+        assert_eq!(u.len(), a.len());
+        assert_eq!(v.len(), a.len());
+        let shape = a.first().map(|m| (m.rows(), m.cols())).unwrap_or((0, 0));
+        self.trace(level, "GEMM2", a.len(), shape, || {
+            crate::util::par_map(a.len(), |t| {
+                super::count_sparsify_flops(u[t], &a[t], v[t]);
+                // F = Uᵀ A V
+                let mut ua = Matrix::zeros(u[t].cols(), a[t].cols());
+                blas::gemm(1.0, u[t], Trans::Yes, &a[t], Trans::No, 0.0, &mut ua);
+                let mut f = Matrix::zeros(u[t].cols(), v[t].cols());
+                blas::gemm(1.0, &ua, Trans::No, v[t], Trans::No, 0.0, &mut f);
+                f
+            })
+        })
+    }
+
+    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        assert_eq!(l.len(), x.len());
+        let n = x.len();
+        let shape = l.first().map(|m| (m.rows(), 1)).unwrap_or((0, 0));
+        self.trace(level, "TRSV", n, shape, || {
+            let x_ptr = SendPtr(x.as_mut_ptr());
+            let pr = &x_ptr;
+            par_for(n, move |t| {
+                let xt = unsafe { &mut *pr.0.add(t) };
+                flops::add((l[t].rows() * l[t].rows()) as u64);
+                blas::trsv(Uplo::Lower, Trans::No, l[t], xt);
+            });
+        });
+    }
+
+    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        assert_eq!(l.len(), x.len());
+        let n = x.len();
+        let shape = l.first().map(|m| (m.rows(), 1)).unwrap_or((0, 0));
+        self.trace(level, "TRSVT", n, shape, || {
+            let x_ptr = SendPtr(x.as_mut_ptr());
+            let pr = &x_ptr;
+            par_for(n, move |t| {
+                let xt = unsafe { &mut *pr.0.add(t) };
+                flops::add((l[t].rows() * l[t].rows()) as u64);
+                blas::trsv(Uplo::Lower, Trans::Yes, l[t], xt);
+            });
+        });
+    }
+
+    fn gemv_acc(
+        &self,
+        level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    ) {
+        assert_eq!(a.len(), x.len());
+        assert_eq!(a.len(), y.len());
+        let n = a.len();
+        let shape = a.first().map(|m| (m.rows(), m.cols())).unwrap_or((0, 0));
+        self.trace(level, "GEMV", n, shape, || {
+            let y_ptr = SendPtr(y.as_mut_ptr());
+            let pr = &y_ptr;
+            let ta = if trans { Trans::Yes } else { Trans::No };
+            par_for(n, move |t| {
+                let yt = unsafe { &mut *pr.0.add(t) };
+                flops::add(2 * (a[t].rows() * a[t].cols()) as u64);
+                blas::gemv(alpha, a[t], ta, x[t], 1.0, yt);
+            });
+        });
+    }
+
+    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
+        assert_eq!(u.len(), x.len());
+        let shape = u.first().map(|m| (m.rows(), m.cols())).unwrap_or((0, 0));
+        self.trace(level, "BASIS", u.len(), shape, || {
+            let ta = if trans { Trans::Yes } else { Trans::No };
+            crate::util::par_map(u.len(), |t| {
+                let out_len = if trans { u[t].cols() } else { u[t].rows() };
+                let mut y = vec![0.0; out_len];
+                flops::add(2 * (u[t].rows() * u[t].cols()) as u64);
+                blas::gemv(1.0, u[t], ta, x[t], 0.0, &mut y);
+                y
+            })
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Raw-pointer wrapper for disjoint-index parallel writes.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    #[test]
+    fn batched_potrf_matches_serial() {
+        let mut rng = Rng::new(101);
+        let mats: Vec<Matrix> = (0..9).map(|_| Matrix::rand_spd(12, &mut rng)).collect();
+        let mut batch = mats.clone();
+        NativeBackend::new().potrf(0, &mut batch);
+        for (orig, l) in mats.iter().zip(&batch) {
+            let want = chol::cholesky(orig).unwrap();
+            let mut d = l.clone();
+            d.axpy(-1.0, &want);
+            assert!(frob(&d) < 1e-12 * frob(&want));
+        }
+    }
+
+    #[test]
+    fn batched_trsm_matches_serial() {
+        let mut rng = Rng::new(103);
+        let ls: Vec<Matrix> = (0..5)
+            .map(|_| chol::cholesky(&Matrix::rand_spd(8, &mut rng)).unwrap())
+            .collect();
+        let bs: Vec<Matrix> = (0..5).map(|_| Matrix::randn(6, 8, &mut rng)).collect();
+        let mut batch = bs.clone();
+        let lrefs: Vec<&Matrix> = ls.iter().collect();
+        NativeBackend::new().trsm_right_lt(0, &lrefs, &mut batch);
+        for t in 0..5 {
+            let mut want = bs[t].clone();
+            blas::trsm(Side::Right, Uplo::Lower, Trans::Yes, 1.0, &ls[t], &mut want);
+            let mut d = batch[t].clone();
+            d.axpy(-1.0, &want);
+            assert!(frob(&d) < 1e-13);
+        }
+    }
+
+    #[test]
+    fn sparsify_is_two_sided_product() {
+        let mut rng = Rng::new(105);
+        let u = Matrix::randn(6, 6, &mut rng);
+        let v = Matrix::randn(5, 5, &mut rng);
+        let a = Matrix::randn(6, 5, &mut rng);
+        let f = NativeBackend::new().sparsify(0, &[&u], vec![a.clone()].as_slice(), &[&v]);
+        let mut ua = Matrix::zeros(6, 5);
+        blas::gemm(1.0, &u, Trans::Yes, &a, Trans::No, 0.0, &mut ua);
+        let mut want = Matrix::zeros(6, 5);
+        blas::gemm(1.0, &ua, Trans::No, &v, Trans::No, 0.0, &mut want);
+        let mut d = f[0].clone();
+        d.axpy(-1.0, &want);
+        assert!(frob(&d) < 1e-13);
+    }
+
+    #[test]
+    fn gemv_acc_accumulates() {
+        let mut rng = Rng::new(107);
+        let a = Matrix::randn(4, 3, &mut rng);
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![vec![1.0; 4]];
+        NativeBackend::new().gemv_acc(0, -1.0, &[&a], false, &[&x], &mut y);
+        for i in 0..4 {
+            let want = 1.0 - (a[(i, 0)] + 2.0 * a[(i, 1)] + 3.0 * a[(i, 2)]);
+            assert!((y[0][i] - want).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn tracer_collects_launches() {
+        let mut rng = Rng::new(109);
+        let be = NativeBackend::with_tracer();
+        let mut blocks: Vec<Matrix> = (0..4).map(|_| Matrix::rand_spd(6, &mut rng)).collect();
+        be.potrf(2, &mut blocks);
+        let tr = be.tracer.as_ref().unwrap();
+        let ev = tr.events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].level, 2);
+        assert_eq!(ev[0].batch, 4);
+    }
+}

@@ -1,0 +1,270 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §10).
+//!
+//! ```text
+//! h2ulv solve   [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
+//!               [--eta E] [--backend native|pjrt] [--subst parallel|naive]
+//!               [--ranks P]
+//! h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
+//! h2ulv figures [--full] [--out DIR]
+//! h2ulv info
+//! ```
+
+use crate::batch::native::NativeBackend;
+use crate::batch::BatchExec;
+use crate::construct::H2Config;
+use crate::dist::{dist_solve_driver, NCCL_LIKE};
+use crate::figures::{self, Scale};
+use crate::geometry::{molecule, Geometry};
+use crate::h2::H2Matrix;
+use crate::kernels::KernelFn;
+use crate::metrics::{flops, timer::timed};
+use crate::ulv::{factorize, SubstMode};
+use crate::util::Rng;
+
+/// Parsed flag map: `--key value` pairs plus positional args.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: std::collections::HashMap<String, String>,
+}
+
+/// Parse raw CLI args (everything after the subcommand).
+pub fn parse_args(raw: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut it = raw.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if it.peek().map(|s| !s.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap().clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "h2ulv — inherently parallel H²-ULV dense solver (Ma & Yokota, IJHPCA 2024)
+
+USAGE:
+  h2ulv solve   [--n N] [--kernel laplace|yukawa|gaussian|matern32]
+                [--geometry sphere|cube|molecule] [--rank R] [--leaf L]
+                [--eta E] [--backend native|pjrt] [--subst parallel|naive]
+                [--ranks P] [--seed S]
+  h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
+  h2ulv figures [--full] [--out DIR]
+  h2ulv info
+";
+
+/// CLI entry point; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return 2;
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "solve" => cmd_solve(&args),
+        "figure" => cmd_figure(&args),
+        "figures" => cmd_figures(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!("unknown command: {cmd}\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn make_geometry(name: &str, n: usize, seed: u64) -> Geometry {
+    match name {
+        "cube" => Geometry::uniform_cube(n, seed),
+        "molecule" => {
+            let base = molecule::hemoglobin_like(0.15, seed);
+            let copies = n / base.len() + 1;
+            base.duplicate_lattice(copies, 6.0).truncated(n)
+        }
+        _ => Geometry::sphere_surface(n, seed),
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let n = args.usize_or("n", 4096);
+    let seed = args.usize_or("seed", 42) as u64;
+    let kernel = KernelFn::by_name(args.get("kernel").unwrap_or("laplace"))
+        .unwrap_or_else(KernelFn::laplace);
+    let g = make_geometry(args.get("geometry").unwrap_or("sphere"), n, seed);
+    let cfg = H2Config {
+        leaf_size: args.usize_or("leaf", 64),
+        max_rank: args.usize_or("rank", 32),
+        eta: args.f64_or("eta", 1.0),
+        far_samples: args.usize_or("far-samples", 128),
+        near_samples: args.usize_or("near-samples", 96),
+        ..Default::default()
+    };
+    let subst = match args.get("subst") {
+        Some("naive") => SubstMode::Naive,
+        _ => SubstMode::Parallel,
+    };
+    println!(
+        "h2ulv solve: N={n} kernel={} geometry={} leaf={} rank={} eta={}",
+        kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
+    );
+
+    let (h2, t_construct) = timed(|| H2Matrix::construct(&g, &kernel, &cfg));
+    println!(
+        "construct: {t_construct:.3}s  storage {:.1} MB (dense would be {:.1} MB)",
+        h2.storage_entries() as f64 * 8.0 / 1e6,
+        (n * n) as f64 * 8.0 / 1e6
+    );
+
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    let ranks = args.usize_or("ranks", 1);
+    if ranks > 1 {
+        let bt = h2.tree.permute_vec(&b);
+        let report = dist_solve_driver(&h2, ranks, &bt, subst);
+        let resid = h2.residual_sampled(&report.x, &bt, 128, 3);
+        println!(
+            "distributed P={ranks}: factor {:.3}s subst {:.3}s (modeled, NCCL-like), comm {:.1} KB, residual {resid:.2e}",
+            report.factor_time(&NCCL_LIKE),
+            report.subst_time(&NCCL_LIKE),
+            (report.factor_bytes + report.subst_bytes) as f64 / 1e3
+        );
+        return 0;
+    }
+
+    let backend: Box<dyn BatchExec> = match args.get("backend") {
+        Some("pjrt") => match crate::runtime::PjrtBackend::new(std::path::Path::new("artifacts")) {
+            Ok(be) => Box::new(be),
+            Err(e) => {
+                eprintln!(
+                    "pjrt backend unavailable ({e}); run `make artifacts`. Falling back to native."
+                );
+                Box::new(NativeBackend::new())
+            }
+        },
+        _ => Box::new(NativeBackend::new()),
+    };
+    let before = flops::snapshot();
+    let (fac, t_factor) = timed(|| factorize(&h2, backend.as_ref()));
+    let f_flops = flops::delta(before, flops::snapshot()).factor;
+    let bt = h2.tree.permute_vec(&b);
+    let (x, t_subst) = timed(|| fac.solve_tree_order(&bt, backend.as_ref(), subst));
+    let resid = h2.residual_sampled(&x, &bt, 128, 3);
+    println!(
+        "factorize[{}]: {t_factor:.3}s ({:.2} GFLOP, {:.2} GFLOP/s)",
+        backend.name(),
+        f_flops as f64 / 1e9,
+        f_flops as f64 / t_factor / 1e9
+    );
+    println!("substitute[{subst:?}]: {t_subst:.4}s");
+    println!("sampled residual |Ax-b|/|b| = {resid:.3e}");
+    0
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let scale = if args.get("full").is_some() { Scale::Full } else { Scale::Quick };
+    let Some(which) = args.positional.first() else {
+        eprintln!("figure number required\n{USAGE}");
+        return 2;
+    };
+    let report = match which.as_str() {
+        "12" => figures::fig12(scale),
+        "13" | "14" | "15" => figures::fig13_14_15(scale),
+        "16" => figures::fig16(scale),
+        "17" => figures::fig17(scale),
+        "18" | "19" => figures::fig18_19(scale),
+        "20" => figures::fig20(scale),
+        "21" | "22" | "23" => figures::fig21_22_23(scale),
+        other => {
+            eprintln!("unknown figure {other}");
+            return 2;
+        }
+    };
+    println!("{report}");
+    if let Some(dir) = args.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir).ok();
+        std::fs::write(dir.join(format!("fig{which}.txt")), &report).ok();
+    }
+    0
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let scale = if args.get("full").is_some() { Scale::Full } else { Scale::Quick };
+    let out_dir = args.get("out").map(std::path::Path::new);
+    let all = figures::run_all(scale, out_dir);
+    println!("{all}");
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!(
+        "h2ulv {} — H²-ULV factorization (Ma & Yokota, IJHPCA 2024 reproduction)",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("threads: {}", crate::util::pool::num_threads());
+    let artifacts = std::path::Path::new("artifacts/manifest.json");
+    if artifacts.exists() {
+        match crate::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+            Ok(m) => println!(
+                "artifacts: {} executables, families {:?}, buckets {:?}",
+                m.index.len(),
+                m.families,
+                m.buckets
+            ),
+            Err(e) => println!("artifacts: manifest unreadable: {e}"),
+        }
+    } else {
+        println!("artifacts: missing (run `make artifacts` for the PJRT backend)");
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: {} ({} device(s))", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt: unavailable: {e}"),
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        parse_args(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let a = args(&["18", "--out", "dir", "--full"]);
+        assert_eq!(a.positional, vec!["18"]);
+        assert_eq!(a.get("out"), Some("dir"));
+        assert_eq!(a.get("full"), Some("true"));
+        assert_eq!(a.usize_or("n", 7), 7);
+    }
+
+    #[test]
+    fn numeric_parsing() {
+        let a = args(&["--n", "512", "--eta", "1.5"]);
+        assert_eq!(a.usize_or("n", 0), 512);
+        assert!((a.f64_or("eta", 0.0) - 1.5).abs() < 1e-12);
+    }
+}

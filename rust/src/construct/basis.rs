@@ -1,0 +1,386 @@
+//! Shared-basis construction (paper Algorithm 1), including the
+//! pre-factorization that folds the factorization basis into the shared
+//! low-rank basis.
+
+use super::sampling::{near_ranges, sample_complement, sample_union};
+use super::H2Config;
+use crate::kernels::KernelFn;
+use crate::linalg::blas::{self, Side, Uplo};
+use crate::linalg::chol;
+use crate::linalg::matrix::{Matrix, Trans};
+use crate::linalg::qr::{orthogonalize_basis, row_id};
+use crate::metrics::flops;
+use crate::tree::{ClusterTree, LevelLists};
+use crate::util::{par_map, Rng};
+
+/// Per-node basis data produced by the construction phase.
+#[derive(Clone, Debug)]
+pub struct NodeBasis {
+    /// Square orthogonal transform `U_i = [U^S | U^R]` (`ndof x ndof`).
+    /// The first [`rank`](NodeBasis::rank) columns are the skeleton basis.
+    pub u: Matrix,
+    /// Skeleton rank `k_i`.
+    pub rank: usize,
+    /// Upper-triangular weight (`k x k`) from QR of the (weighted)
+    /// interpolation operator; enters couplings `Ŝ = R_i S R_jᵀ`.
+    pub r: Matrix,
+    /// Interpolation operator `T_i` (`ndof x k`, identity rows at the
+    /// skeleton DOFs) — used by the O(N) matvec and dense reconstruction.
+    pub t: Matrix,
+    /// Skeleton DOF positions *within this node's DOF list*.
+    pub dof_skel: Vec<usize>,
+    /// Global (tree-ordered) point indices of this node's DOFs.
+    pub dofs: Vec<usize>,
+    /// Global point indices of the skeleton (`dofs[dof_skel[..]]`).
+    pub skeleton: Vec<usize>,
+}
+
+impl NodeBasis {
+    /// Number of DOFs this node exposes to its level (`n_i`).
+    pub fn ndof(&self) -> usize {
+        self.dofs.len()
+    }
+
+    /// Redundant dimension `n_i - k_i`.
+    pub fn nred(&self) -> usize {
+        self.ndof() - self.rank
+    }
+}
+
+/// Gauss-Seidel approximation of `X = B · A⁻¹` (i.e. solve `X A = B`) for
+/// symmetric positive definite `A`, without factorizing `A` (paper §3.5:
+/// "we used the Gauss-Seidel iterative method for approximating the
+/// contents of A_ji A_ii⁻¹ without explicitly factorizing it").
+///
+/// Works on the transposed system `A Xᵀ = Bᵀ` (A symmetric), sweeping
+/// `iters` times from a zero initial guess.
+pub fn gauss_seidel_right(a: &Matrix, b: &Matrix, iters: usize) -> Matrix {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    assert_eq!(b.cols(), n);
+    let m = b.rows();
+    // Y = Xᵀ (n x m), solve A Y = Bᵀ. A is symmetric, so row i of A is
+    // column i — contiguous access (perf pass: slice dot instead of
+    // strided row walk).
+    let mut y = Matrix::zeros(n, m);
+    for _ in 0..iters.max(1) {
+        for i in 0..n {
+            let arow = a.col(i).to_vec(); // = row i by symmetry
+            let aii = arow[i];
+            for c in 0..m {
+                // b^T[i, c] = b[c, i]
+                let ycol = y.col_mut(c);
+                let mut s = b[(c, i)];
+                s -= blas::dot(&arow, ycol);
+                s += aii * ycol[i]; // remove the j == i term
+                ycol[i] = s / aii;
+            }
+        }
+    }
+    flops::add(2 * n as u64 * n as u64 * m as u64 * iters as u64);
+    y.transpose()
+}
+
+/// Exact `X = B · A⁻¹` through Cholesky (`A` SPD).
+pub fn exact_right_inverse(a: &Matrix, b: &Matrix) -> Matrix {
+    let l = chol::cholesky(a).expect("near-field sample gram must be SPD");
+    // X A = B  =>  A Xᵀ = Bᵀ  =>  Xᵀ = A⁻¹ Bᵀ.
+    let mut y = b.transpose();
+    let n = a.rows();
+    flops::add(n as u64 * n as u64 * n as u64 / 3 + 2 * n as u64 * n as u64 * b.rows() as u64);
+    blas::trsm(Side::Left, Uplo::Lower, Trans::No, 1.0, &l, &mut y);
+    blas::trsm(Side::Left, Uplo::Lower, Trans::Yes, 1.0, &l, &mut y);
+    y.transpose()
+}
+
+/// Build the bases for every node of every level (leaves upward).
+///
+/// Returns `bases[level][index]`; levels `1..=depth` get real bases, level 0
+/// (root) gets a placeholder full-rank identity basis (the root block is
+/// factorized densely, paper Algorithm 2 line 22).
+pub fn build_bases(
+    tree: &ClusterTree,
+    lists: &[LevelLists],
+    kernel: &KernelFn,
+    cfg: &H2Config,
+) -> Vec<Vec<NodeBasis>> {
+    let depth = tree.depth;
+    let mut bases: Vec<Vec<NodeBasis>> = Vec::with_capacity(depth + 1);
+    bases.resize_with(depth + 1, Vec::new);
+    for level in (1..=depth).rev() {
+        let width = tree.width(level);
+        let child_bases: Option<&Vec<NodeBasis>> = if level < depth { Some(&bases[level + 1]) } else { None };
+        let level_bases: Vec<NodeBasis> = par_map(width, |i| {
+            // Per-node RNG stream: deterministic, order-independent.
+            let mut rng = Rng::new(cfg.seed ^ ((level as u64) << 32) ^ i as u64);
+            build_node_basis(tree, lists, kernel, cfg, level, i, child_bases, &mut rng)
+        });
+        bases[level] = level_bases;
+    }
+    // Root placeholder: identity over the children's skeleton DOFs (or over
+    // all points when depth == 0).
+    let root_dofs: Vec<usize> = if depth == 0 {
+        (0..tree.points.len()).collect()
+    } else {
+        let c0 = &bases[1][0];
+        let c1 = &bases[1][1];
+        c0.skeleton.iter().chain(c1.skeleton.iter()).copied().collect()
+    };
+    let n0 = root_dofs.len();
+    bases[0] = vec![NodeBasis {
+        u: Matrix::eye(n0),
+        rank: n0,
+        r: Matrix::eye(n0),
+        t: Matrix::eye(n0),
+        dof_skel: (0..n0).collect(),
+        skeleton: root_dofs.clone(),
+        dofs: root_dofs,
+    }];
+    bases
+}
+
+/// Build one node's basis (Algorithm 1 body).
+fn build_node_basis(
+    tree: &ClusterTree,
+    lists: &[LevelLists],
+    kernel: &KernelFn,
+    cfg: &H2Config,
+    level: usize,
+    i: usize,
+    child_bases: Option<&Vec<NodeBasis>>,
+    rng: &mut Rng,
+) -> NodeBasis {
+    let node = tree.node(level, i);
+    let n_pts = tree.points.len();
+    // DOFs of this node: leaf => own points; interior => children skeletons.
+    let (dofs, weight): (Vec<usize>, Option<(Matrix, Matrix)>) = match child_bases {
+        None => ((node.begin..node.end).collect(), None),
+        Some(cb) => {
+            let c0 = &cb[2 * i];
+            let c1 = &cb[2 * i + 1];
+            let dofs: Vec<usize> =
+                c0.skeleton.iter().chain(c1.skeleton.iter()).copied().collect();
+            (dofs, Some((c0.r.clone(), c1.r.clone())))
+        }
+    };
+    let ndof = dofs.len();
+
+    // --- Sample far field (S_F) and near field (S_C). ---
+    let nr = near_ranges(tree, &lists[level], level, i);
+    let s_far = sample_complement(n_pts, &nr, cfg.far_samples, rng);
+    let s_close = if cfg.factorization_basis {
+        sample_union(&nr, (node.begin, node.end), cfg.near_samples, rng)
+    } else {
+        Vec::new()
+    };
+
+    // --- Assemble the sample matrix M = [A_Far | A_Close · A_cc⁻¹]. ---
+    let a_far = kernel.block_idx(&tree.points, &dofs, &s_far);
+    let m = if s_close.is_empty() {
+        a_far
+    } else {
+        let a_cc = kernel.block_idx(&tree.points, &s_close, &s_close);
+        let a_close_raw = kernel.block_idx(&tree.points, &dofs, &s_close);
+        // Pre-factorization: A_Close ← G(B_i, S_C) · A_cc⁻¹
+        // (Gauss-Seidel approximation per paper §3.5, or exact Cholesky).
+        let a_close = if cfg.gauss_seidel_iters > 0 {
+            gauss_seidel_right(&a_cc, &a_close_raw, cfg.gauss_seidel_iters)
+        } else {
+            exact_right_inverse(&a_cc, &a_close_raw)
+        };
+        if a_far.cols() == 0 {
+            a_close
+        } else {
+            // Scale balance: the diagonal regularization (A_ii ~ 1e3) makes
+            // the factorization-basis columns ~1e-3 of the far-field
+            // columns, so a norm-greedy CPQR would never pivot into them
+            // and the fill-in suppression would silently vanish. Rescale
+            // the near part so its strongest column matches the far part's
+            // strongest column; only the *span* matters for the basis, not
+            // the scale.
+            let col_max = |m: &Matrix| -> f64 {
+                let mut best: f64 = 0.0;
+                for j in 0..m.cols() {
+                    let n = blas::dot(m.col(j), m.col(j)).sqrt();
+                    best = best.max(n);
+                }
+                best
+            };
+            let nf = col_max(&a_far);
+            let nc = col_max(&a_close);
+            let mut scaled = a_close;
+            if nc > 0.0 && nf > 0.0 {
+                scaled.scale(nf / nc);
+            }
+            a_far.hcat(&scaled)
+        }
+    };
+    flops::add(2 * (ndof * m.cols() * cfg.max_rank.min(ndof)) as u64); // ID cost estimate
+
+    // --- Row ID: skeleton + interpolation. ---
+    let max_rank = cfg.max_rank.min(ndof);
+    let id = if m.cols() == 0 {
+        // No sampled field at all (tiny problems): full-rank identity basis.
+        crate::linalg::qr::RowId { skeleton: (0..ndof).collect(), t: Matrix::eye(ndof) }
+    } else {
+        row_id(&m, cfg.rtol, max_rank)
+    };
+    let rank = id.skeleton.len();
+
+    // --- Weight by children R factors at interior nodes, orthogonalize. ---
+    let w_t = match &weight {
+        None => id.t.clone(),
+        Some((r0, r1)) => {
+            // W = blockdiag(R_c0, R_c1); basis operates on child-transformed
+            // coordinates (DESIGN.md §4).
+            let k0 = r0.rows();
+            let mut wt = Matrix::zeros(ndof, rank);
+            // top block: R_c0 * T[0..k0, :]
+            let t_top = id.t.submatrix(0, 0, k0, rank);
+            let mut top = Matrix::zeros(k0, rank);
+            blas::gemm(1.0, r0, Trans::No, &t_top, Trans::No, 0.0, &mut top);
+            wt.set_submatrix(0, 0, &top);
+            let k1 = r1.rows();
+            let t_bot = id.t.submatrix(k0, 0, k1, rank);
+            let mut bot = Matrix::zeros(k1, rank);
+            blas::gemm(1.0, r1, Trans::No, &t_bot, Trans::No, 0.0, &mut bot);
+            wt.set_submatrix(k0, 0, &bot);
+            wt
+        }
+    };
+    let (u, r) = orthogonalize_basis(&w_t);
+    flops::add(2 * (ndof * ndof * rank) as u64);
+
+    let skeleton: Vec<usize> = id.skeleton.iter().map(|&d| dofs[d]).collect();
+    NodeBasis { u, rank, r, t: id.t, dof_skel: id.skeleton, dofs, skeleton }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Geometry;
+    use crate::linalg::norms::frob;
+    use crate::tree::interaction_lists;
+
+    #[test]
+    fn gauss_seidel_close_to_exact() {
+        let mut rng = Rng::new(81);
+        // Diagonally dominant SPD (like kernel matrices with diag 1e3).
+        let mut a = Matrix::rand_spd(12, &mut rng);
+        for i in 0..12 {
+            a[(i, i)] += 100.0;
+        }
+        let b = Matrix::randn(5, 12, &mut rng);
+        let exact = exact_right_inverse(&a, &b);
+        let gs2 = gauss_seidel_right(&a, &b, 2);
+        let mut d = gs2.clone();
+        d.axpy(-1.0, &exact);
+        assert!(
+            frob(&d) < 0.05 * frob(&exact),
+            "2 GS sweeps should be close for diagonally dominant A: {}",
+            frob(&d) / frob(&exact)
+        );
+    }
+
+    #[test]
+    fn exact_right_inverse_identity() {
+        let mut rng = Rng::new(83);
+        let a = Matrix::rand_spd(8, &mut rng);
+        let b = Matrix::randn(3, 8, &mut rng);
+        let x = exact_right_inverse(&a, &b);
+        let mut rec = Matrix::zeros(3, 8);
+        blas::gemm(1.0, &x, Trans::No, &a, Trans::No, 0.0, &mut rec);
+        rec.axpy(-1.0, &b);
+        assert!(frob(&rec) < 1e-9 * frob(&b));
+    }
+
+    fn basis_sanity(bases: &[Vec<NodeBasis>], tree: &ClusterTree) {
+        for level in 1..=tree.depth {
+            for (i, nb) in bases[level].iter().enumerate() {
+                let n = nb.ndof();
+                assert_eq!(nb.u.rows(), n);
+                assert_eq!(nb.u.cols(), n);
+                assert!(nb.rank <= n);
+                assert_eq!(nb.skeleton.len(), nb.rank);
+                // U orthogonal.
+                let mut utu = Matrix::zeros(n, n);
+                blas::gemm(1.0, &nb.u, Trans::Yes, &nb.u, Trans::No, 0.0, &mut utu);
+                utu.axpy(-1.0, &Matrix::eye(n));
+                assert!(frob(&utu) < 1e-10, "level {level} node {i} U not orthogonal");
+                // Skeleton points belong to the node's range at leaf level.
+                if level == tree.depth {
+                    let node = tree.node(level, i);
+                    for &s in &nb.skeleton {
+                        assert!(s >= node.begin && s < node.end);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bases_build_and_are_orthogonal() {
+        let g = Geometry::sphere_surface(512, 85);
+        let t = ClusterTree::build(&g, 64);
+        let cfg = H2Config { max_rank: 16, far_samples: 64, near_samples: 48, ..Default::default() };
+        let lists = interaction_lists(&t, cfg.eta);
+        let k = KernelFn::laplace();
+        let bases = build_bases(&t, &lists, &k, &cfg);
+        basis_sanity(&bases, &t);
+        // Interior nodes exist and have nested skeletons.
+        for level in (1..t.depth).rev() {
+            for (i, nb) in bases[level].iter().enumerate() {
+                let c0 = &bases[level + 1][2 * i];
+                let c1 = &bases[level + 1][2 * i + 1];
+                let child_sk: std::collections::HashSet<usize> =
+                    c0.skeleton.iter().chain(c1.skeleton.iter()).copied().collect();
+                for &s in &nb.skeleton {
+                    assert!(child_sk.contains(&s), "skeleton not nested");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_basis_captures_far_field() {
+        // U^S must span the dominant row space of the box's far block:
+        // || (I - U^S U^Sᵀ) A_far || should be small relative to ||A_far||.
+        let g = Geometry::sphere_surface(512, 87);
+        let t = ClusterTree::build(&g, 64);
+        let cfg = H2Config {
+            max_rank: 24,
+            far_samples: 0, // all far points: best accuracy
+            near_samples: 48,
+            ..Default::default()
+        };
+        let lists = interaction_lists(&t, cfg.eta);
+        let kern = KernelFn::laplace();
+        let bases = build_bases(&t, &lists, &kern, &cfg);
+        let l = t.depth;
+        let i = 0;
+        let nb = &bases[l][i];
+        let node = t.node(l, i);
+        // Build the true far block (all points in far-admissible boxes).
+        let far_cols: Vec<usize> = lists[l]
+            .far_of_row(i)
+            .flat_map(|j| {
+                let nj = t.node(l, j);
+                nj.begin..nj.end
+            })
+            .collect();
+        assert!(!far_cols.is_empty());
+        let rows: Vec<usize> = (node.begin..node.end).collect();
+        let a_far = kern.block_idx(&t.points, &rows, &far_cols);
+        let us = nb.u.submatrix(0, 0, nb.ndof(), nb.rank);
+        // residual = A_far - U^S (U^Sᵀ A_far)
+        let mut proj = Matrix::zeros(nb.rank, a_far.cols());
+        blas::gemm(1.0, &us, Trans::Yes, &a_far, Trans::No, 0.0, &mut proj);
+        let mut rec = Matrix::zeros(a_far.rows(), a_far.cols());
+        blas::gemm(1.0, &us, Trans::No, &proj, Trans::No, 0.0, &mut rec);
+        rec.axpy(-1.0, &a_far);
+        let rel = frob(&rec) / frob(&a_far);
+        // Optimal rank-24 SVD error for this block is ~8e-3 (sphere far
+        // field decays slowly at eta=1); the ID should be within ~4x.
+        assert!(rel < 4e-2, "basis misses far field: rel={rel}");
+    }
+}

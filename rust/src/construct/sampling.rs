@@ -1,0 +1,205 @@
+//! Far/near-field point sampling for the construction phase.
+//!
+//! Sampling the far field bounds construction cost at O(N) ("any constant
+//! sample size reduces this complexity to O(N)", paper §3.4); sampling the
+//! near field bounds the pre-factorization overhead (paper §3.5, Figure 8).
+
+use crate::tree::{ClusterTree, LevelLists};
+use crate::util::Rng;
+
+/// Contiguous index ranges (tree ordering) owned by the near boxes of a
+/// node, *including* the node itself.
+pub fn near_ranges(tree: &ClusterTree, lists: &LevelLists, level: usize, i: usize) -> Vec<(usize, usize)> {
+    let mut ranges: Vec<(usize, usize)> = lists
+        .near_of_row(i)
+        .map(|j| {
+            let nj = tree.node(level, j);
+            (nj.begin, nj.end)
+        })
+        .collect();
+    ranges.sort_unstable();
+    ranges
+}
+
+/// Sample up to `k` indices uniformly from `[0, n)` minus the union of
+/// `ranges` (sorted, disjoint). Returns all complement points when the
+/// complement is smaller than `k` or when `k == 0` (sampling disabled).
+pub fn sample_complement(
+    n: usize,
+    ranges: &[(usize, usize)],
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    // Build the gap list.
+    let mut gaps: Vec<(usize, usize)> = Vec::with_capacity(ranges.len() + 1);
+    let mut cursor = 0;
+    for &(b, e) in ranges {
+        if b > cursor {
+            gaps.push((cursor, b));
+        }
+        cursor = cursor.max(e);
+    }
+    if cursor < n {
+        gaps.push((cursor, n));
+    }
+    let total: usize = gaps.iter().map(|&(b, e)| e - b).sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    if k == 0 || total <= k {
+        // Take everything.
+        let mut out = Vec::with_capacity(total);
+        for &(b, e) in &gaps {
+            out.extend(b..e);
+        }
+        return out;
+    }
+    // Sample k distinct offsets in [0, total), then map through the gaps.
+    let offsets = rng.sample_indices(total, k);
+    let mut out = Vec::with_capacity(k);
+    for off in offsets {
+        let mut rem = off;
+        for &(b, e) in &gaps {
+            let len = e - b;
+            if rem < len {
+                out.push(b + rem);
+                break;
+            }
+            rem -= len;
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Sample up to `k` indices from the union of `ranges` (the near field),
+/// excluding range `self_range` (the box's own points).
+pub fn sample_union(
+    ranges: &[(usize, usize)],
+    self_range: (usize, usize),
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let filtered: Vec<(usize, usize)> = ranges
+        .iter()
+        .copied()
+        .filter(|&r| r != self_range)
+        .collect();
+    let total: usize = filtered.iter().map(|&(b, e)| e - b).sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    if k == 0 || total <= k {
+        let mut out = Vec::with_capacity(total);
+        for &(b, e) in &filtered {
+            out.extend(b..e);
+        }
+        return out;
+    }
+    let offsets = rng.sample_indices(total, k);
+    let mut out = Vec::with_capacity(k);
+    for off in offsets {
+        let mut rem = off;
+        for &(b, e) in &filtered {
+            let len = e - b;
+            if rem < len {
+                out.push(b + rem);
+                break;
+            }
+            rem -= len;
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Geometry;
+    use crate::tree::interaction_lists;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn complement_excludes_ranges() {
+        let mut rng = Rng::new(71);
+        let ranges = [(10, 20), (40, 50)];
+        let s = sample_complement(100, &ranges, 30, &mut rng);
+        assert_eq!(s.len(), 30);
+        for &i in &s {
+            assert!(i < 100);
+            assert!(!(10..20).contains(&i) && !(40..50).contains(&i));
+        }
+        // distinct
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), s.len());
+    }
+
+    #[test]
+    fn complement_takes_all_when_small() {
+        let mut rng = Rng::new(73);
+        let ranges = [(0, 95)];
+        let s = sample_complement(100, &ranges, 30, &mut rng);
+        assert_eq!(s, vec![95, 96, 97, 98, 99]);
+        // k == 0 means "all"
+        let s = sample_complement(100, &[(50, 100)], 0, &mut rng);
+        assert_eq!(s.len(), 50);
+    }
+
+    #[test]
+    fn union_excludes_self() {
+        let mut rng = Rng::new(75);
+        let ranges = [(0, 10), (10, 20), (30, 40)];
+        let s = sample_union(&ranges, (10, 20), 100, &mut rng);
+        assert_eq!(s.len(), 20);
+        for &i in &s {
+            assert!(!(10..20).contains(&i));
+        }
+    }
+
+    #[test]
+    fn near_ranges_cover_self() {
+        let g = Geometry::sphere_surface(512, 77);
+        let t = ClusterTree::build(&g, 64);
+        let lists = interaction_lists(&t, 1.0);
+        let l = t.depth;
+        for i in 0..t.width(l) {
+            let nr = near_ranges(&t, &lists[l], l, i);
+            let node = t.node(l, i);
+            assert!(nr.contains(&(node.begin, node.end)), "self must be near");
+        }
+    }
+
+    #[test]
+    fn prop_complement_union_partition() {
+        // complement(ranges) ∪ union(ranges) == [0, n) when both unsampled.
+        check(
+            &PropConfig { cases: 32, seed: 0xDEED },
+            |rng| {
+                let n = 50 + rng.below(200);
+                // random disjoint sorted ranges
+                let mut cuts: Vec<usize> = (0..6).map(|_| rng.below(n)).collect();
+                cuts.sort_unstable();
+                cuts.dedup();
+                let mut ranges = Vec::new();
+                for w in cuts.chunks(2) {
+                    if w.len() == 2 && w[0] < w[1] {
+                        ranges.push((w[0], w[1]));
+                    }
+                }
+                (n, ranges)
+            },
+            |(n, ranges)| {
+                let mut rng = Rng::new(1);
+                let comp = sample_complement(*n, ranges, 0, &mut rng);
+                let uni = sample_union(ranges, (usize::MAX, usize::MAX), 0, &mut rng);
+                let mut all: Vec<usize> = comp.iter().chain(uni.iter()).copied().collect();
+                all.sort_unstable();
+                if all != (0..*n).collect::<Vec<_>>() {
+                    return Err(format!("partition broken: {} items vs {}", all.len(), n));
+                }
+                Ok(())
+            },
+        );
+    }
+}

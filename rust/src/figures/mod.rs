@@ -1,0 +1,346 @@
+//! Figure-regeneration harness: one function per figure of the paper's
+//! evaluation section (Figures 12-23). Each returns a text report whose
+//! rows/series mirror what the paper plots; `h2ulv figures --out DIR` also
+//! writes CSV files. Scaled-down problem sizes are used (this is a CPU
+//! container, not 512 V100s) — the *shape* of each result is the
+//! reproduction target (DESIGN.md §7).
+
+use crate::baselines::blr::{BlrConfig, BlrMatrix};
+use crate::batch::native::NativeBackend;
+use crate::construct::H2Config;
+use crate::dist::{dist_solve_driver, CommModel, NCCL_LIKE};
+use crate::geometry::{molecule, Geometry};
+use crate::h2::H2Matrix;
+use crate::kernels::KernelFn;
+use crate::linalg::norms::rel_err_vec;
+use crate::metrics::{flops, timer::timed};
+use crate::tree::{leaf_near_count, ClusterTree};
+use crate::ulv::{factorize, SubstMode};
+use crate::util::Rng;
+
+/// Problem-size scale for the harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-long runs (used by `cargo bench`).
+    Quick,
+    /// Minutes-long runs (used by `h2ulv figures`).
+    Full,
+}
+
+fn pjrt_backend() -> Option<crate::runtime::PjrtBackend> {
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        crate::runtime::PjrtBackend::new(dir).ok()
+    } else {
+        None
+    }
+}
+
+/// Standard solver configuration for the timing figures (self-similar
+/// shapes: leaf = 2 * rank keeps the PJRT artifacts applicable everywhere).
+fn timing_cfg() -> H2Config {
+    H2Config { leaf_size: 64, max_rank: 32, far_samples: 128, near_samples: 96, ..Default::default() }
+}
+
+/// Figure 12 — profiler view: batched-kernel timeline and occupancy.
+pub fn fig12(scale: Scale) -> String {
+    let n = match scale {
+        Scale::Quick => 2048,
+        Scale::Full => 8192,
+    };
+    let g = Geometry::sphere_surface(n, 12);
+    let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &timing_cfg());
+    let mut out = format!("# Figure 12 analog: batched launch trace, N={n}\n");
+    // Prefer the PJRT (GPU-analog) backend; fall back to native tracing.
+    if let Some(be) = pjrt_backend() {
+        let be = be.with_tracer();
+        let _ = factorize(&h2, &be);
+        let tr = be.tracer.as_ref().unwrap();
+        out.push_str(&tr.render());
+        out.push_str(&format!(
+            "\nmean batch size (occupancy proxy): {:.1}\nlaunches: {}\n",
+            tr.mean_batch(),
+            tr.events().len()
+        ));
+    } else {
+        let be = NativeBackend::with_tracer();
+        let _ = factorize(&h2, &be);
+        let tr = be.tracer.as_ref().unwrap();
+        out.push_str(&tr.render());
+        out.push_str(&format!("\nmean batch size: {:.1}\n", tr.mean_batch()));
+    }
+    out.push_str(
+        "\npaper: 4x A100, N=262144 — high concurrency, batched POTRF/TRSM/GEMM per level.\n",
+    );
+    out
+}
+
+/// Figures 13 + 14 + 15 — factorization/substitution time vs N (O(N)),
+/// FLOP rate, and FLOP count (between O(N) and O(N log N)).
+pub fn fig13_14_15(scale: Scale) -> String {
+    let sizes: Vec<usize> = match scale {
+        Scale::Quick => vec![1024, 2048, 4096],
+        Scale::Full => vec![1024, 2048, 4096, 8192, 16384, 32768],
+    };
+    let mut out = String::from(
+        "# Figures 13/14/15: N, factor_native_s, subst_native_s, factor_pjrt_s, subst_pjrt_s, factor_gflop, gflops_native, resid\n",
+    );
+    let pjrt = pjrt_backend();
+    for &n in &sizes {
+        let g = Geometry::sphere_surface(n, 13);
+        let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &timing_cfg());
+        let native = NativeBackend::new();
+        let before = flops::snapshot();
+        let (fac, t_factor) = timed(|| factorize(&h2, &native));
+        let factor_flops = flops::delta(before, flops::snapshot()).factor;
+        let mut rng = Rng::new(7);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (x, t_subst) = timed(|| fac.solve_tree_order(&b, &native, SubstMode::Parallel));
+        let resid = h2.residual_sampled(&x, &b, 64, 9);
+        let (t_factor_p, t_subst_p) = match &pjrt {
+            Some(be) => {
+                let (fac_p, tf) = timed(|| factorize(&h2, be));
+                let (_xp, ts) = timed(|| fac_p.solve_tree_order(&b, be, SubstMode::Parallel));
+                (tf, ts)
+            }
+            None => (f64::NAN, f64::NAN),
+        };
+        out.push_str(&format!(
+            "{n}, {t_factor:.4}, {t_subst:.4}, {t_factor_p:.4}, {t_subst_p:.4}, {:.3}, {:.3}, {resid:.2e}\n",
+            factor_flops as f64 / 1e9,
+            factor_flops as f64 / t_factor / 1e9,
+        ));
+    }
+    out.push_str("\npaper fig13: O(N) slope; fig14: 2.42 TF/s CPU, 12.18 TF/s GPU peak;\n");
+    out.push_str("fig15: FLOP count between O(N) and O(N log2 N) until neighbor counts saturate.\n");
+    out
+}
+
+/// Figure 16 — number of neighbor (dense) interactions vs leaf-box count,
+/// saturating to the O(N) bound.
+pub fn fig16(scale: Scale) -> String {
+    let max_pow = match scale {
+        Scale::Quick => 15,
+        Scale::Full => 18,
+    };
+    let mut out = String::from("# Figure 16: N, leaf_boxes, neighbor_pairs, pairs_per_box\n");
+    for pow in 10..=max_pow {
+        let n = 1usize << pow;
+        let g = Geometry::sphere_surface(n, 16);
+        let t = ClusterTree::build(&g, 64);
+        let count = leaf_near_count(&t, 1.0);
+        let boxes = t.width(t.depth);
+        out.push_str(&format!(
+            "{n}, {boxes}, {count}, {:.2}\n",
+            count as f64 / boxes as f64
+        ));
+    }
+    out.push_str("\npaper: pairs/box grows then saturates at the theoretical bound -> O(N) total.\n");
+    out
+}
+
+/// Figure 17 — FLOP split between pre-factorization (factorization-basis
+/// construction) and the ULV factorization, vs admissibility eta.
+pub fn fig17(scale: Scale) -> String {
+    let n = match scale {
+        Scale::Quick => 2048,
+        Scale::Full => 8192,
+    };
+    let mut out =
+        String::from("# Figure 17: eta, prefactor_gflop, factor_gflop, prefactor_share\n");
+    for eta in [0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0] {
+        let g = Geometry::sphere_surface(n, 17);
+        let cfg = H2Config { eta, ..timing_cfg() };
+        let before = flops::snapshot();
+        let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &cfg);
+        let mid = flops::snapshot();
+        let _fac = factorize(&h2, &NativeBackend::new());
+        let after = flops::snapshot();
+        let pre = flops::delta(before, mid).prefactor;
+        let fac = flops::delta(mid, after).factor;
+        let share = pre as f64 / (pre + fac).max(1) as f64;
+        out.push_str(&format!(
+            "{eta:.1}, {:.3}, {:.3}, {:.1}%\n",
+            pre as f64 / 1e9,
+            fac as f64 / 1e9,
+            100.0 * share
+        ));
+    }
+    out.push_str("\npaper: pre-factorization stays <= ~46% of total and scales linearly with eta.\n");
+    out
+}
+
+/// Figures 18 + 19 — rank vs solution accuracy and accuracy vs
+/// time-to-solution for H² (eta=1) against HSS (eta=0).
+pub fn fig18_19(scale: Scale) -> String {
+    let (n, leaf, ranks): (usize, usize, Vec<usize>) = match scale {
+        Scale::Quick => (1024, 128, vec![16, 32, 64]),
+        Scale::Full => (2048, 256, vec![8, 16, 24, 32, 48, 64, 96, 128]),
+    };
+    let g = Geometry::sphere_surface(n, 18);
+    let kern = KernelFn::laplace();
+    let mut rng = Rng::new(19);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    // Dense oracle (paper: fixed-rank truncation, sampling disabled).
+    let dense = crate::baselines::dense::DenseSolver::factorize(&g.points, &kern).unwrap();
+    let x_dense = dense.solve(&b);
+    let mut out = String::from(
+        "# Figures 18/19: rank, err_h2, err_hss, time_h2_s, time_hss_s  (N=",
+    );
+    out.push_str(&format!("{n}, leaf={leaf}, sampling off)\n"));
+    for &rank in &ranks {
+        let mut row = format!("{rank}");
+        for eta in [1.0, 0.0] {
+            let cfg = H2Config {
+                leaf_size: leaf,
+                max_rank: rank,
+                far_samples: 0,
+                near_samples: 0,
+                eta,
+                ..Default::default()
+            };
+            let ((err, t), _) = timed(|| {
+                let (h2, t_c) = timed(|| H2Matrix::construct(&g, &kern, &cfg));
+                let (fac, t_f) = timed(|| factorize(&h2, &NativeBackend::new()));
+                let (x, t_s) =
+                    timed(|| fac.solve(&b, &NativeBackend::new(), SubstMode::Parallel));
+                (rel_err_vec(&x, &x_dense), t_c + t_f + t_s)
+            });
+            row.push_str(&format!(", {err:.3e}, {t:.3}"));
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out.push_str("\ncolumns: rank, err_h2, time_h2, err_hss, time_hss\n");
+    out.push_str("paper: HSS needs rank>400 to match H2@50; here the gap is a consistent factor\n");
+    out.push_str("(2-4x at equal rank, growing with rank) — see EXPERIMENTS.md for the deviation note.\n");
+    out
+}
+
+/// Figure 20 — strong scaling vs the BLR (LORAPO-analog) baseline.
+pub fn fig20(scale: Scale) -> String {
+    let (n, ps): (usize, Vec<usize>) = match scale {
+        Scale::Quick => (4096, vec![1, 2, 4]),
+        Scale::Full => (16384, vec![1, 2, 4, 8, 16, 32]),
+    };
+    let base = molecule::hemoglobin_like(0.15, 20);
+    let copies = n / base.len() + 1;
+    let g = base.duplicate_lattice(copies, 6.0).truncated(n);
+    let kern = KernelFn::yukawa();
+    let h2 = H2Matrix::construct(&g, &kern, &timing_cfg());
+    let mut rng = Rng::new(21);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let bt = h2.tree.permute_vec(&b);
+    let model: CommModel = NCCL_LIKE;
+    let mut out = format!("# Figure 20 (strong scaling): N={n}, P, h2_factor_s(modeled), h2_subst_s\n");
+    for &p in &ps {
+        let report = dist_solve_driver(&h2, p, &bt, SubstMode::Parallel);
+        out.push_str(&format!(
+            "{p}, {:.4}, {:.4}\n",
+            report.factor_time(&model),
+            report.subst_time(&model)
+        ));
+    }
+    // BLR comparator: measured at a feasible size, extrapolated O(N²)
+    // (LORAPO could not reach the paper's sizes either — fig 20 shows it
+    // only at small N).
+    let blr_n = match scale {
+        Scale::Quick => 2048,
+        Scale::Full => 4096,
+    };
+    let tree = ClusterTree::build(&g.truncated(blr_n), 128);
+    let (mut blr, t_build) = timed(|| BlrMatrix::build(&tree.points, &kern, &BlrConfig::default()));
+    let (_, t_blr) = timed(|| blr.factorize());
+    let scale_up = (n as f64 / blr_n as f64).powi(2);
+    out.push_str(&format!(
+        "\nBLR baseline: measured factorization {t_blr:.3}s at N={blr_n} (build {t_build:.2}s);\n\
+         O(N^2)-extrapolated to N={n}: {:.2}s on 1 rank (paper: 13,300x gap at 128 ranks).\n",
+        t_blr * scale_up
+    ));
+    out
+}
+
+/// Figures 21 + 22 + 23 — weak scaling of factorization and substitution,
+/// plus the compute-vs-communication breakdown.
+pub fn fig21_22_23(scale: Scale) -> String {
+    let (base_n, ps): (usize, Vec<usize>) = match scale {
+        Scale::Quick => (2048, vec![1, 2, 4]),
+        Scale::Full => (4096, vec![1, 2, 4, 8, 16]),
+    };
+    let kern = KernelFn::yukawa();
+    let model: CommModel = NCCL_LIKE;
+    let mut out = String::from(
+        "# Figures 21/22/23 (weak scaling): P, N, factor_s, subst_s, factor_comm_s, subst_comm_s, comm_share_subst\n",
+    );
+    for &p in &ps {
+        let n = base_n * p;
+        let base = molecule::hemoglobin_like(0.12, 22);
+        let copies = n / base.len() + 1;
+        let g = base.duplicate_lattice(copies, 6.0).truncated(n);
+        let h2 = H2Matrix::construct(&g, &kern, &timing_cfg());
+        let mut rng = Rng::new(23);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let bt = h2.tree.permute_vec(&b);
+        let report = dist_solve_driver(&h2, p, &bt, SubstMode::Parallel);
+        let f_comm = model.cost(report.factor_ops, report.factor_bytes);
+        let s_comm = model.cost(report.subst_ops, report.subst_bytes);
+        let tf = report.factor_time(&model);
+        let ts = report.subst_time(&model);
+        out.push_str(&format!(
+            "{p}, {n}, {tf:.4}, {ts:.4}, {f_comm:.5}, {s_comm:.5}, {:.1}%\n",
+            100.0 * s_comm / ts.max(1e-12)
+        ));
+    }
+    out.push_str("\npaper fig21: factorization ~O(log2 P) (redundant top levels);\n");
+    out.push_str("fig22: substitution O(P) neighbor-comm regime then O(log2 P) at scale;\n");
+    out.push_str("fig23: substitution becomes communication-dominated as P grows.\n");
+    out
+}
+
+/// Run every figure and (optionally) write reports into `out_dir`.
+pub fn run_all(scale: Scale, out_dir: Option<&std::path::Path>) -> String {
+    let figures: Vec<(&str, String)> = vec![
+        ("fig12", fig12(scale)),
+        ("fig13_14_15", fig13_14_15(scale)),
+        ("fig16", fig16(scale)),
+        ("fig17", fig17(scale)),
+        ("fig18_19", fig18_19(scale)),
+        ("fig20", fig20(scale)),
+        ("fig21_22_23", fig21_22_23(scale)),
+    ];
+    let mut all = String::new();
+    for (name, report) in &figures {
+        all.push_str(&format!("\n================ {name} ================\n"));
+        all.push_str(report);
+        if let Some(dir) = out_dir {
+            std::fs::create_dir_all(dir).ok();
+            std::fs::write(dir.join(format!("{name}.txt")), report).ok();
+        }
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig16_report_has_rows() {
+        let r = fig16(Scale::Quick);
+        assert!(r.lines().count() >= 6);
+        assert!(r.contains("neighbor_pairs"));
+    }
+
+    #[test]
+    fn fig17_shares_are_bounded() {
+        let r = fig17(Scale::Quick);
+        // Parse prefactor shares and check they stay below ~60%
+        for line in r.lines().skip(1) {
+            if let Some(pct) = line.split(", ").nth(3) {
+                if let Ok(v) = pct.trim_end_matches('%').parse::<f64>() {
+                    assert!(v < 75.0, "prefactor share too large: {v}% ({line})");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Point-cloud geometry generators and spatial utilities.
+//!
+//! The paper evaluates on (1) a uniformly distributed spherical surface
+//! (3-D Laplace) and (2) hemoglobin molecule surface meshes (3-D Yukawa).
+//! The hemoglobin mesh data is not redistributable, so [`molecule`] builds
+//! a synthetic molecule surface with the same character: points on the
+//! boundary of a union of overlapping atom spheres along a protein-like
+//! random coil (DESIGN.md §3 substitution 2).
+
+pub mod molecule;
+pub mod points;
+
+pub use points::{Geometry, Point3};
+
+/// Axis-aligned bounding box.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub min: Point3,
+    pub max: Point3,
+}
+
+impl Aabb {
+    /// Bounding box of a point set (panics on empty input).
+    pub fn of(points: &[Point3]) -> Aabb {
+        assert!(!points.is_empty());
+        let mut min = points[0];
+        let mut max = points[0];
+        for p in points {
+            for d in 0..3 {
+                min[d] = min[d].min(p[d]);
+                max[d] = max[d].max(p[d]);
+            }
+        }
+        Aabb { min, max }
+    }
+
+    /// Center of the box.
+    pub fn center(&self) -> Point3 {
+        [
+            0.5 * (self.min[0] + self.max[0]),
+            0.5 * (self.min[1] + self.max[1]),
+            0.5 * (self.min[2] + self.max[2]),
+        ]
+    }
+
+    /// Half of the box diagonal — the "radius" in the paper's admissibility
+    /// condition ("ratio of the maximum radius and the center distances").
+    pub fn radius(&self) -> f64 {
+        let mut s = 0.0;
+        for d in 0..3 {
+            let h = 0.5 * (self.max[d] - self.min[d]);
+            s += h * h;
+        }
+        s.sqrt()
+    }
+
+    /// Index of the longest axis (split axis for the cluster tree).
+    pub fn longest_axis(&self) -> usize {
+        let mut best = 0;
+        let mut len = self.max[0] - self.min[0];
+        for d in 1..3 {
+            let l = self.max[d] - self.min[d];
+            if l > len {
+                len = l;
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+/// Euclidean distance between two points.
+#[inline]
+pub fn dist(a: &Point3, b: &Point3) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    (dx * dx + dy * dy + dz * dz).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aabb_basics() {
+        let pts = vec![[0.0, 0.0, 0.0], [2.0, 4.0, 6.0], [1.0, 1.0, 1.0]];
+        let bb = Aabb::of(&pts);
+        assert_eq!(bb.min, [0.0, 0.0, 0.0]);
+        assert_eq!(bb.max, [2.0, 4.0, 6.0]);
+        assert_eq!(bb.center(), [1.0, 2.0, 3.0]);
+        assert_eq!(bb.longest_axis(), 2);
+        assert!((bb.radius() - (1.0f64 + 4.0 + 9.0).sqrt()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn dist_symmetric() {
+        let a = [1.0, 2.0, 2.0];
+        let b = [0.0, 0.0, 0.0];
+        assert!((dist(&a, &b) - 3.0).abs() < 1e-14);
+        assert_eq!(dist(&a, &b), dist(&b, &a));
+    }
+}

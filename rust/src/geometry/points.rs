@@ -1,0 +1,186 @@
+//! Point-cloud generators.
+
+use crate::util::Rng;
+
+/// A point in R³.
+pub type Point3 = [f64; 3];
+
+/// A named point cloud — the "underlying geometry of the problem that forms
+/// the dense matrix" (paper §1).
+#[derive(Clone, Debug)]
+pub struct Geometry {
+    pub points: Vec<Point3>,
+    pub name: String,
+}
+
+impl Geometry {
+    /// Number of points == matrix dimension N.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// N points spread quasi-uniformly on the unit sphere surface using the
+    /// Fibonacci lattice ("places the mesh points evenly on the spherical
+    /// surface with roughly equal spacing", paper §6.2), plus a tiny seeded
+    /// jitter so duplicated runs with different seeds decorrelate.
+    pub fn sphere_surface(n: usize, seed: u64) -> Geometry {
+        let mut rng = Rng::new(seed);
+        let golden = std::f64::consts::PI * (3.0 - 5.0f64.sqrt());
+        let mut points = Vec::with_capacity(n);
+        for i in 0..n {
+            let y = if n > 1 { 1.0 - 2.0 * (i as f64) / ((n - 1) as f64) } else { 0.0 };
+            let r = (1.0 - y * y).max(0.0).sqrt();
+            let theta = golden * i as f64 + 1e-4 * rng.normal();
+            points.push([r * theta.cos(), y, r * theta.sin()]);
+        }
+        Geometry { points, name: format!("sphere{n}") }
+    }
+
+    /// N points uniform in the unit cube — the "simple 3-D cubic geometry
+    /// which requires a strong admissibility H²-matrix" (paper Figure 5).
+    pub fn uniform_cube(n: usize, seed: u64) -> Geometry {
+        let mut rng = Rng::new(seed);
+        let points = (0..n)
+            .map(|_| [rng.uniform(), rng.uniform(), rng.uniform()])
+            .collect();
+        Geometry { points, name: format!("cube{n}") }
+    }
+
+    /// Regular grid of `m x m x m` points in the unit cube (deterministic,
+    /// used by complexity studies where exact replication matters).
+    pub fn grid3d(m: usize) -> Geometry {
+        let mut points = Vec::with_capacity(m * m * m);
+        let h = 1.0 / (m.max(2) - 1) as f64;
+        for i in 0..m {
+            for j in 0..m {
+                for k in 0..m {
+                    points.push([i as f64 * h, j as f64 * h, k as f64 * h]);
+                }
+            }
+        }
+        Geometry { points, name: format!("grid{m}^3") }
+    }
+
+    /// Duplicate a base geometry into `copies` instances on a cubic lattice,
+    /// reproducing the paper's "at most 512 duplicates of the same molecule
+    /// are placed in the same domain" weak-scaling construction (§6.4).
+    pub fn duplicate_lattice(&self, copies: usize, spacing: f64) -> Geometry {
+        assert!(copies >= 1);
+        let side = (copies as f64).cbrt().ceil() as usize;
+        let mut points = Vec::with_capacity(self.len() * copies);
+        let mut placed = 0;
+        'outer: for ix in 0..side {
+            for iy in 0..side {
+                for iz in 0..side {
+                    if placed == copies {
+                        break 'outer;
+                    }
+                    let off = [ix as f64 * spacing, iy as f64 * spacing, iz as f64 * spacing];
+                    for p in &self.points {
+                        points.push([p[0] + off[0], p[1] + off[1], p[2] + off[2]]);
+                    }
+                    placed += 1;
+                }
+            }
+        }
+        Geometry { points, name: format!("{}x{}", self.name, copies) }
+    }
+
+    /// Keep only the first `n` points ("By reading the portions of the
+    /// geometry of the molecules, we create variations in the problem
+    /// sizes", paper §6.4).
+    pub fn truncated(&self, n: usize) -> Geometry {
+        Geometry {
+            points: self.points[..n.min(self.len())].to_vec(),
+            name: format!("{}[..{n}]", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::dist;
+
+    #[test]
+    fn sphere_points_on_unit_sphere() {
+        let g = Geometry::sphere_surface(500, 1);
+        assert_eq!(g.len(), 500);
+        for p in &g.points {
+            let r = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+            assert!((r - 1.0).abs() < 5e-3, "r={r}");
+        }
+    }
+
+    #[test]
+    fn sphere_roughly_uniform() {
+        // Nearest-neighbor distances should cluster around the ideal
+        // spacing ~ sqrt(4π/N).
+        let n = 400;
+        let g = Geometry::sphere_surface(n, 2);
+        let ideal = (4.0 * std::f64::consts::PI / n as f64).sqrt();
+        let mut max_nn = 0.0f64;
+        for (i, p) in g.points.iter().enumerate() {
+            let nn = g
+                .points
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, q)| dist(p, q))
+                .fold(f64::INFINITY, f64::min);
+            max_nn = max_nn.max(nn);
+        }
+        assert!(max_nn < 3.0 * ideal, "max nn dist {max_nn} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn cube_in_bounds() {
+        let g = Geometry::uniform_cube(1000, 3);
+        for p in &g.points {
+            for d in 0..3 {
+                assert!((0.0..1.0).contains(&p[d]));
+            }
+        }
+    }
+
+    #[test]
+    fn grid_size() {
+        let g = Geometry::grid3d(4);
+        assert_eq!(g.len(), 64);
+    }
+
+    #[test]
+    fn duplicate_lattice_counts_and_offsets() {
+        let base = Geometry::sphere_surface(50, 4);
+        let dup = base.duplicate_lattice(8, 4.0);
+        assert_eq!(dup.len(), 400);
+        // Copies must not overlap: min distance between copy centroids >= spacing.
+        let centroid = |pts: &[Point3]| -> Point3 {
+            let mut c = [0.0; 3];
+            for p in pts {
+                for d in 0..3 {
+                    c[d] += p[d];
+                }
+            }
+            for d in 0..3 {
+                c[d] /= pts.len() as f64;
+            }
+            c
+        };
+        let c0 = centroid(&dup.points[0..50]);
+        let c1 = centroid(&dup.points[50..100]);
+        assert!(dist(&c0, &c1) >= 3.9);
+    }
+
+    #[test]
+    fn truncated_prefix() {
+        let g = Geometry::uniform_cube(100, 5);
+        let t = g.truncated(10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.points[3], g.points[3]);
+    }
+}

@@ -1,0 +1,215 @@
+//! O(N) H²-matrix-vector product (FMM-style up/interact/down passes).
+//!
+//! Used for fast residual checks at large N (where the dense matrix cannot
+//! be materialized) and by the figure harness. Works in *interpolation*
+//! coordinates: upward pass contracts `T_iᵀ`, far interactions apply the
+//! raw skeleton couplings `G(SK_i, SK_j)`, downward pass expands `T_i`.
+
+use super::H2Matrix;
+use crate::linalg::blas;
+use crate::linalg::matrix::Trans;
+
+impl H2Matrix {
+    /// `y = Â x` with the H² structure, `x` in tree point ordering.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        let depth = self.tree.depth;
+        let mut y = vec![0.0; n];
+
+        // Near (dense leaf) blocks.
+        for (&(i, j), blk) in &self.dense {
+            let ni = self.tree.node(depth, i);
+            let nj = self.tree.node(depth, j);
+            let xj = &x[nj.begin..nj.end];
+            let mut yi = vec![0.0; ni.len()];
+            blas::gemv(1.0, blk, Trans::No, xj, 0.0, &mut yi);
+            for (t, v) in yi.iter().enumerate() {
+                y[ni.begin + t] += v;
+            }
+        }
+        if depth == 0 {
+            return y;
+        }
+
+        // Upward pass: x_hat[level][i] = T_iᵀ (children x_hat | leaf x).
+        let mut x_hat: Vec<Vec<Vec<f64>>> = vec![Vec::new(); depth + 1];
+        for l in (1..=depth).rev() {
+            let width = self.tree.width(l);
+            let mut level_hat = Vec::with_capacity(width);
+            for i in 0..width {
+                let nb = &self.bases[l][i];
+                let input: Vec<f64> = if l == depth {
+                    let node = self.tree.node(l, i);
+                    x[node.begin..node.end].to_vec()
+                } else {
+                    let mut v = x_hat[l + 1][2 * i].clone();
+                    v.extend_from_slice(&x_hat[l + 1][2 * i + 1]);
+                    v
+                };
+                let mut hat = vec![0.0; nb.rank];
+                blas::gemv(1.0, &nb.t, Trans::Yes, &input, 0.0, &mut hat);
+                level_hat.push(hat);
+            }
+            x_hat[l] = level_hat;
+        }
+
+        // Far interactions: y_hat[i] += G(SK_i, SK_j) x_hat[j].
+        let mut y_hat: Vec<Vec<Vec<f64>>> = (0..=depth)
+            .map(|l| {
+                if l == 0 {
+                    Vec::new()
+                } else {
+                    (0..self.tree.width(l)).map(|i| vec![0.0; self.bases[l][i].rank]).collect()
+                }
+            })
+            .collect();
+        for l in 1..=depth {
+            for (&(i, j), raw) in &self.coupling_raw[l] {
+                let xj = &x_hat[l][j];
+                let yi = &mut y_hat[l][i];
+                blas::gemv(1.0, raw, Trans::No, xj, 1.0, yi);
+            }
+        }
+
+        // Downward pass: expand y_hat through T and accumulate.
+        for l in 1..=depth {
+            let width = self.tree.width(l);
+            for i in 0..width {
+                let nb = &self.bases[l][i];
+                if y_hat[l][i].iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                let mut expanded = vec![0.0; nb.ndof()];
+                blas::gemv(1.0, &nb.t, Trans::No, &y_hat[l][i], 0.0, &mut expanded);
+                if l == depth {
+                    let node = self.tree.node(l, i);
+                    for (t, v) in expanded.iter().enumerate() {
+                        y[node.begin + t] += v;
+                    }
+                } else {
+                    // Push into children's y_hat.
+                    let k0 = self.bases[l + 1][2 * i].rank;
+                    for (t, v) in expanded.iter().enumerate() {
+                        if t < k0 {
+                            y_hat[l + 1][2 * i][t] += v;
+                        } else {
+                            y_hat[l + 1][2 * i + 1][t - k0] += v;
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Relative residual `||Âx - b|| / ||b||` with `x`, `b` in tree order.
+    pub fn residual(&self, x: &[f64], b: &[f64]) -> f64 {
+        let ax = self.matvec(x);
+        let mut diff = 0.0;
+        let mut nb = 0.0;
+        for i in 0..b.len() {
+            let d = ax[i] - b[i];
+            diff += d * d;
+            nb += b[i] * b[i];
+        }
+        (diff / nb.max(1e-300)).sqrt()
+    }
+
+    /// Sampled *exact-kernel* residual: evaluates `(A x - b)` on `sample`
+    /// random rows with direct kernel evaluation — O(sample · N), usable at
+    /// any N. Inputs in tree order; returns relative l2 over the sample.
+    pub fn residual_sampled(&self, x: &[f64], b: &[f64], sample: usize, seed: u64) -> f64 {
+        let n = self.n();
+        let mut rng = crate::util::Rng::new(seed);
+        let rows = rng.sample_indices(n, sample.min(n));
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for &r in &rows {
+            let mut ax = 0.0;
+            let pr = self.tree.points[r];
+            for c in 0..n {
+                let g = if r == c {
+                    self.kernel.diag
+                } else {
+                    self.kernel.eval(&pr, &self.tree.points[c])
+                };
+                ax += g * x[c];
+            }
+            let d = ax - b[r];
+            num += d * d;
+            den += b[r] * b[r];
+        }
+        (num / den.max(1e-300)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::construct::H2Config;
+    use crate::geometry::Geometry;
+    use crate::h2::H2Matrix;
+    use crate::kernels::KernelFn;
+    use crate::linalg::blas;
+    use crate::linalg::matrix::Trans;
+    use crate::util::Rng;
+
+    #[test]
+    fn matvec_matches_reconstruction() {
+        let g = Geometry::sphere_surface(512, 93);
+        let k = KernelFn::laplace();
+        let cfg = H2Config { leaf_size: 64, max_rank: 16, far_samples: 96, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &k, &cfg);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+        let y_fast = h2.matvec(&x);
+        let dense = h2.reconstruct_dense();
+        let mut y_slow = vec![0.0; 512];
+        blas::gemv(1.0, &dense, Trans::No, &x, 0.0, &mut y_slow);
+        let err: f64 = y_fast
+            .iter()
+            .zip(&y_slow)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+            / y_slow.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(err < 1e-10, "matvec disagrees with reconstruction: {err}");
+    }
+
+    #[test]
+    fn matvec_close_to_exact_kernel() {
+        let g = Geometry::sphere_surface(400, 95);
+        let k = KernelFn::yukawa();
+        let cfg = H2Config { leaf_size: 50, max_rank: 20, far_samples: 0, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &k, &cfg);
+        let mut rng = Rng::new(7);
+        let x: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        let y = h2.matvec(&x);
+        let exact = k.dense(&h2.tree.points);
+        let mut y_ex = vec![0.0; 400];
+        blas::gemv(1.0, &exact, Trans::No, &x, 0.0, &mut y_ex);
+        let err: f64 = y
+            .iter()
+            .zip(&y_ex)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+            / y_ex.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(err < 5e-3, "H2 matvec vs exact kernel: {err}");
+    }
+
+    #[test]
+    fn sampled_residual_consistent() {
+        let g = Geometry::sphere_surface(300, 97);
+        let k = KernelFn::laplace();
+        let cfg = H2Config { leaf_size: 64, max_rank: 20, far_samples: 0, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &k, &cfg);
+        // b = A x for known x; residual of that x must be ~0.
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.1).sin()).collect();
+        let exact = k.dense(&h2.tree.points);
+        let mut b = vec![0.0; 300];
+        blas::gemv(1.0, &exact, Trans::No, &x, 0.0, &mut b);
+        let r = h2.residual_sampled(&x, &b, 50, 9);
+        assert!(r < 1e-12, "sampled residual of exact solution must vanish: {r}");
+    }
+}

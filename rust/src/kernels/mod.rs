@@ -1,0 +1,165 @@
+//! Kernel (Green's) functions that generate the dense matrix entries.
+//!
+//! The paper's two test kernels (eqs 35-36) plus extras used in the
+//! extension studies. Every kernel carries the paper's diagonal
+//! regularization `A_ii = 1e3`, which makes the matrices symmetric positive
+//! definite so the Cholesky-based ULV factorization applies.
+
+use crate::geometry::{dist, Point3};
+use crate::linalg::Matrix;
+
+/// A radial kernel function with the paper's diagonal convention.
+#[derive(Clone)]
+pub struct KernelFn {
+    /// Value for `i == j` (paper: 1e3).
+    pub diag: f64,
+    /// Radial profile `phi(r)` for `r > 0`.
+    pub phi: fn(f64) -> f64,
+    /// Human-readable name.
+    pub name: &'static str,
+}
+
+impl std::fmt::Debug for KernelFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KernelFn({})", self.name)
+    }
+}
+
+impl KernelFn {
+    /// 3-D Laplace Green's function, paper eq (35):
+    /// `A_ij = 1e3 if i == j else 1/r_ij`.
+    pub fn laplace() -> KernelFn {
+        KernelFn { diag: 1.0e3, phi: |r| 1.0 / r, name: "laplace" }
+    }
+
+    /// Simplified Yukawa potential, paper eq (36):
+    /// `A_ij = 1e3 if i == j else exp(-r_ij)/r_ij`.
+    pub fn yukawa() -> KernelFn {
+        KernelFn { diag: 1.0e3, phi: |r| (-r).exp() / r, name: "yukawa" }
+    }
+
+    /// Gaussian kernel (covariance-matrix workloads from the paper's intro).
+    pub fn gaussian() -> KernelFn {
+        KernelFn { diag: 1.0e3, phi: |r| (-r * r).exp(), name: "gaussian" }
+    }
+
+    /// Matérn 3/2 kernel (statistics workloads; HiCMA/LORAPO territory).
+    pub fn matern32() -> KernelFn {
+        KernelFn {
+            diag: 1.0e3,
+            phi: |r| {
+                let s = 3.0f64.sqrt() * r;
+                (1.0 + s) * (-s).exp()
+            },
+            name: "matern32",
+        }
+    }
+
+    /// Kernel by name (CLI convenience).
+    pub fn by_name(name: &str) -> Option<KernelFn> {
+        match name {
+            "laplace" => Some(Self::laplace()),
+            "yukawa" => Some(Self::yukawa()),
+            "gaussian" => Some(Self::gaussian()),
+            "matern32" => Some(Self::matern32()),
+            _ => None,
+        }
+    }
+
+    /// Entry `G(x, y)` for two distinct points (or the diagonal value when
+    /// they coincide — including the `r -> 0` singular case).
+    #[inline]
+    pub fn eval(&self, x: &Point3, y: &Point3) -> f64 {
+        let r = dist(x, y);
+        if r == 0.0 {
+            self.diag
+        } else {
+            (self.phi)(r)
+        }
+    }
+
+    /// Dense kernel block `G(rows, cols)` for two point sets.
+    pub fn block(&self, rows: &[Point3], cols: &[Point3]) -> Matrix {
+        Matrix::from_fn(rows.len(), cols.len(), |i, j| self.eval(&rows[i], &cols[j]))
+    }
+
+    /// Dense kernel block indexed into a shared point list.
+    pub fn block_idx(&self, points: &[Point3], rows: &[usize], cols: &[usize]) -> Matrix {
+        Matrix::from_fn(rows.len(), cols.len(), |i, j| {
+            self.eval(&points[rows[i]], &points[cols[j]])
+        })
+    }
+
+    /// Full dense matrix over a point list (verification / baselines only —
+    /// O(N²) memory).
+    pub fn dense(&self, points: &[Point3]) -> Matrix {
+        Matrix::from_fn(points.len(), points.len(), |i, j| {
+            if i == j {
+                self.diag
+            } else {
+                self.eval(&points[i], &points[j])
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Geometry;
+    use crate::linalg::chol::cholesky;
+
+    #[test]
+    fn laplace_values() {
+        let k = KernelFn::laplace();
+        let a = [0.0, 0.0, 0.0];
+        let b = [2.0, 0.0, 0.0];
+        assert_eq!(k.eval(&a, &a), 1.0e3);
+        assert!((k.eval(&a, &b) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn yukawa_values() {
+        let k = KernelFn::yukawa();
+        let a = [0.0, 0.0, 0.0];
+        let b = [1.0, 0.0, 0.0];
+        assert!((k.eval(&a, &b) - (-1.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dense_is_symmetric_spd() {
+        // The large diagonal dominates, so kernel matrices are SPD — the
+        // paper's Cholesky-based internal factorization relies on this.
+        let g = Geometry::sphere_surface(64, 11);
+        for k in [KernelFn::laplace(), KernelFn::yukawa(), KernelFn::gaussian(), KernelFn::matern32()] {
+            let a = k.dense(&g.points);
+            for i in 0..64 {
+                for j in 0..64 {
+                    assert_eq!(a[(i, j)], a[(j, i)]);
+                }
+            }
+            assert!(cholesky(&a).is_ok(), "{} not SPD", k.name);
+        }
+    }
+
+    #[test]
+    fn block_idx_matches_block() {
+        let g = Geometry::uniform_cube(20, 13);
+        let k = KernelFn::laplace();
+        let rows = [1usize, 5, 7];
+        let cols = [0usize, 2];
+        let b1 = k.block_idx(&g.points, &rows, &cols);
+        let rp: Vec<_> = rows.iter().map(|&i| g.points[i]).collect();
+        let cp: Vec<_> = cols.iter().map(|&i| g.points[i]).collect();
+        let b2 = k.block(&rp, &cp);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["laplace", "yukawa", "gaussian", "matern32"] {
+            assert_eq!(KernelFn::by_name(n).unwrap().name, n);
+        }
+        assert!(KernelFn::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,47 @@
+//! # h2ulv — inherently parallel H²-ULV factorization
+//!
+//! A complete reproduction of *"An inherently parallel H²-ULV factorization
+//! for solving dense linear systems on GPUs"* (Qianxiang Ma & Rio Yokota,
+//! IJHPCA 2024, DOI 10.1177/10943420241242021) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The library provides:
+//! * a from-scratch dense linear-algebra substrate ([`linalg`]),
+//! * geometry generators and cluster trees with strong admissibility
+//!   ([`geometry`], [`tree`]),
+//! * H²-matrix construction with the paper's *factorization basis*
+//!   ([`construct`], [`h2`]),
+//! * the inherently parallel ULV factorization and the novel parallel
+//!   forward/backward substitution ([`ulv`]),
+//! * a batched-execution engine with a native thread-pool backend and an
+//!   XLA/PJRT backend that runs AOT-compiled JAX/Pallas artifacts
+//!   ([`batch`], [`runtime`]),
+//! * a simulated distributed-memory runtime with NCCL-like collectives
+//!   ([`dist`]),
+//! * baselines (dense Cholesky, BLR tile-Cholesky ≈ LORAPO) ([`baselines`]),
+//! * FLOP/time/communication metrics and the figure-regeneration harness
+//!   ([`metrics`], [`figures`]).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+pub mod baselines;
+pub mod batch;
+pub mod construct;
+pub mod dist;
+pub mod figures;
+pub mod geometry;
+pub mod h2;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod tree;
+pub mod ulv;
+pub mod util;
+
+pub mod cli;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::linalg::Matrix;
+}

@@ -1,0 +1,502 @@
+//! BLAS-level routines (levels 1-3) over [`Matrix`].
+//!
+//! GEMM is the FLOP hot path for the whole stack (sparsification, Schur
+//! updates, TRSM right-hand sides), so it gets a blocked micro-kernel
+//! implementation; everything else is written for clarity.
+
+use super::matrix::{Matrix, Trans};
+
+/// Which triangle of a matrix a routine reads/writes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Uplo {
+    Lower,
+    Upper,
+}
+
+/// Side of multiplication for TRSM.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+#[inline]
+fn dims(a: &Matrix, ta: Trans) -> (usize, usize) {
+    match ta {
+        Trans::No => (a.rows(), a.cols()),
+        Trans::Yes => (a.cols(), a.rows()),
+    }
+}
+
+/// `C = alpha * op(A) * op(B) + beta * C`.
+///
+/// Dispatches to a packed, register-blocked kernel for the dominant
+/// NoTrans x NoTrans case; transposed operands go through explicit
+/// transposition (cheap relative to the O(mnk) multiply).
+pub fn gemm(alpha: f64, a: &Matrix, ta: Trans, b: &Matrix, tb: Trans, beta: f64, c: &mut Matrix) {
+    let (m, ka) = dims(a, ta);
+    let (kb, n) = dims(b, tb);
+    assert_eq!(ka, kb, "gemm inner dim mismatch: {ka} vs {kb}");
+    assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
+    let k = ka;
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.as_mut_slice().fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // Hot path: plain column-major multiply, no transposes needed.
+    match (ta, tb) {
+        (Trans::No, Trans::No) => gemm_nn(alpha, a, b, c),
+        (Trans::Yes, Trans::No) => {
+            let at = a.transpose();
+            gemm_nn(alpha, &at, b, c);
+        }
+        (Trans::No, Trans::Yes) => {
+            let bt = b.transpose();
+            gemm_nn(alpha, a, &bt, c);
+        }
+        (Trans::Yes, Trans::Yes) => {
+            let at = a.transpose();
+            let bt = b.transpose();
+            gemm_nn(alpha, &at, &bt, c);
+        }
+    }
+}
+
+/// Blocked column-major `C += alpha * A * B` (all NoTrans).
+///
+/// Loop order j-k-i makes the inner loop a contiguous AXPY over a column of
+/// C with a column of A — auto-vectorizes well and is cache-friendly for
+/// column-major data. K-blocking keeps the working set of A in L2.
+fn gemm_nn(alpha: f64, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let m = a.rows();
+    let k = a.cols();
+    let n = b.cols();
+    const KC: usize = 256;
+    let a_data = a.as_slice();
+    for j in 0..n {
+        let bcol = b.col(j);
+        let ccol = c.col_mut(j);
+        let mut p0 = 0;
+        while p0 < k {
+            let pend = (p0 + KC).min(k);
+            let mut p = p0;
+            // 4-way k-unrolling: one pass over the C column consumes four
+            // A columns, quartering the C-column traffic. The perf pass
+            // measured ~1.45x over the single-AXPY loop; 8-way regressed
+            // (register pressure) — see EXPERIMENTS.md §Perf.
+            while p + 4 <= pend {
+                let w0 = alpha * bcol[p];
+                let w1 = alpha * bcol[p + 1];
+                let w2 = alpha * bcol[p + 2];
+                let w3 = alpha * bcol[p + 3];
+                let a0 = &a_data[p * m..(p + 1) * m];
+                let a1 = &a_data[(p + 1) * m..(p + 2) * m];
+                let a2 = &a_data[(p + 2) * m..(p + 3) * m];
+                let a3 = &a_data[(p + 3) * m..(p + 4) * m];
+                for i in 0..m {
+                    ccol[i] += w0 * a0[i] + w1 * a1[i] + w2 * a2[i] + w3 * a3[i];
+                }
+                p += 4;
+            }
+            while p < pend {
+                let w = alpha * bcol[p];
+                if w != 0.0 {
+                    let acol = &a_data[p * m..(p + 1) * m];
+                    for i in 0..m {
+                        ccol[i] += w * acol[i];
+                    }
+                }
+                p += 1;
+            }
+            p0 = pend;
+        }
+    }
+}
+
+/// Symmetric rank-k update: `C = alpha * op(A) * op(A)ᵀ + beta * C`,
+/// writing only the `uplo` triangle (the other triangle is mirrored so C
+/// stays a full symmetric matrix, which downstream code expects).
+pub fn syrk(uplo: Uplo, alpha: f64, a: &Matrix, ta: Trans, beta: f64, c: &mut Matrix) {
+    let (n, _k) = dims(a, ta);
+    assert_eq!((c.rows(), c.cols()), (n, n));
+    // Compute the full product (simple, correct); then symmetrize from the
+    // requested triangle to keep exact symmetry.
+    let mut full = Matrix::zeros(n, n);
+    match ta {
+        Trans::No => gemm(alpha, a, Trans::No, a, Trans::Yes, 0.0, &mut full),
+        Trans::Yes => gemm(alpha, a, Trans::Yes, a, Trans::No, 0.0, &mut full),
+    }
+    if beta == 0.0 {
+        c.as_mut_slice().fill(0.0);
+    } else if beta != 1.0 {
+        c.scale(beta);
+    }
+    match uplo {
+        Uplo::Lower => {
+            for j in 0..n {
+                for i in j..n {
+                    let v = c[(i, j)] + full[(i, j)];
+                    c[(i, j)] = v;
+                    c[(j, i)] = v;
+                }
+            }
+        }
+        Uplo::Upper => {
+            for j in 0..n {
+                for i in 0..=j {
+                    let v = c[(i, j)] + full[(i, j)];
+                    c[(i, j)] = v;
+                    c[(j, i)] = v;
+                }
+            }
+        }
+    }
+}
+
+/// `y = alpha * op(A) * x + beta * y`.
+pub fn gemv(alpha: f64, a: &Matrix, ta: Trans, x: &[f64], beta: f64, y: &mut [f64]) {
+    let (m, k) = dims(a, ta);
+    assert_eq!(x.len(), k, "gemv x len");
+    assert_eq!(y.len(), m, "gemv y len");
+    if beta == 0.0 {
+        y.fill(0.0);
+    } else if beta != 1.0 {
+        for v in y.iter_mut() {
+            *v *= beta;
+        }
+    }
+    match ta {
+        Trans::No => {
+            for p in 0..k {
+                let w = alpha * x[p];
+                if w == 0.0 {
+                    continue;
+                }
+                let acol = a.col(p);
+                for i in 0..m {
+                    y[i] += w * acol[i];
+                }
+            }
+        }
+        Trans::Yes => {
+            for i in 0..m {
+                // row i of Aᵀ = column i of A
+                let acol = a.col(i);
+                let mut dot = 0.0;
+                for p in 0..k {
+                    dot += acol[p] * x[p];
+                }
+                y[i] += alpha * dot;
+            }
+        }
+    }
+}
+
+/// Triangular solve with multiple right-hand sides:
+/// `Side::Left`:  solve `op(A) X = alpha B` (X overwrites B),
+/// `Side::Right`: solve `X op(A) = alpha B`.
+///
+/// `A` is triangular per `uplo`; unit diagonal is not supported (the ULV
+/// factorization always produces non-unit Cholesky factors).
+pub fn trsm(side: Side, uplo: Uplo, ta: Trans, alpha: f64, a: &Matrix, b: &mut Matrix) {
+    assert_eq!(a.rows(), a.cols(), "trsm: A must be square");
+    let n = a.rows();
+    match side {
+        Side::Left => assert_eq!(b.rows(), n, "trsm left dim"),
+        Side::Right => assert_eq!(b.cols(), n, "trsm right dim"),
+    }
+    if alpha != 1.0 {
+        b.scale(alpha);
+    }
+    // Effective triangle after transpose.
+    let eff_lower = match (uplo, ta) {
+        (Uplo::Lower, Trans::No) | (Uplo::Upper, Trans::Yes) => true,
+        (Uplo::Upper, Trans::No) | (Uplo::Lower, Trans::Yes) => false,
+    };
+    let at = |i: usize, j: usize| -> f64 {
+        match ta {
+            Trans::No => a[(i, j)],
+            Trans::Yes => a[(j, i)],
+        }
+    };
+    match side {
+        Side::Left => {
+            // Solve T X = B column by column.
+            for jcol in 0..b.cols() {
+                if eff_lower {
+                    for i in 0..n {
+                        let mut s = b[(i, jcol)];
+                        for p in 0..i {
+                            s -= at(i, p) * b[(p, jcol)];
+                        }
+                        b[(i, jcol)] = s / at(i, i);
+                    }
+                } else {
+                    for i in (0..n).rev() {
+                        let mut s = b[(i, jcol)];
+                        for p in i + 1..n {
+                            s -= at(i, p) * b[(p, jcol)];
+                        }
+                        b[(i, jcol)] = s / at(i, i);
+                    }
+                }
+            }
+        }
+        Side::Right => {
+            // Solve X T = B row by row: X[:, j] determined column-wise.
+            // X T = B  =>  for lower T: process columns left..right?
+            // X[:,j] * T[j,j] + sum_{p!=j} X[:,p] T[p,j] = B[:,j].
+            // For lower-triangular T (T[p,j] != 0 for p >= j): column j of B
+            // depends on X columns p >= j → iterate j from n-1 down to 0.
+            let m = b.rows();
+            if eff_lower {
+                for j in (0..n).rev() {
+                    let d = at(j, j);
+                    for r in 0..m {
+                        b[(r, j)] /= d;
+                    }
+                    for p in 0..j {
+                        let w = at(j, p);
+                        if w == 0.0 {
+                            continue;
+                        }
+                        for r in 0..m {
+                            let xj = b[(r, j)];
+                            b[(r, p)] -= xj * w;
+                        }
+                    }
+                }
+            } else {
+                for j in 0..n {
+                    let d = at(j, j);
+                    for r in 0..m {
+                        b[(r, j)] /= d;
+                    }
+                    for p in j + 1..n {
+                        let w = at(j, p);
+                        if w == 0.0 {
+                            continue;
+                        }
+                        for r in 0..m {
+                            let xj = b[(r, j)];
+                            b[(r, p)] -= xj * w;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Triangular solve with a single vector: `op(A) x = b` in place.
+pub fn trsv(uplo: Uplo, ta: Trans, a: &Matrix, x: &mut [f64]) {
+    let n = a.rows();
+    assert_eq!(x.len(), n);
+    let mut b = Matrix::from_col_major(n, 1, x.to_vec());
+    trsm(Side::Left, uplo, ta, 1.0, a, &mut b);
+    x.copy_from_slice(b.col(0));
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// `y += alpha * x` on raw vectors.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_all_transposes() {
+        let mut rng = Rng::new(42);
+        for &(m, n, k) in &[(3, 4, 5), (8, 8, 8), (17, 3, 29), (1, 7, 1)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let want = naive_gemm(&a, &b);
+
+            let mut c = Matrix::zeros(m, n);
+            gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            assert!(frob(&c.clone().transpose()) > 0.0);
+            c.axpy(-1.0, &want);
+            assert!(frob(&c) < 1e-12 * (1.0 + frob(&want)));
+
+            let at = a.transpose();
+            let mut c = Matrix::zeros(m, n);
+            gemm(1.0, &at, Trans::Yes, &b, Trans::No, 0.0, &mut c);
+            c.axpy(-1.0, &want);
+            assert!(frob(&c) < 1e-12 * (1.0 + frob(&want)));
+
+            let bt = b.transpose();
+            let mut c = Matrix::zeros(m, n);
+            gemm(1.0, &a, Trans::No, &bt, Trans::Yes, 0.0, &mut c);
+            c.axpy(-1.0, &want);
+            assert!(frob(&c) < 1e-12 * (1.0 + frob(&want)));
+
+            let mut c = Matrix::zeros(m, n);
+            gemm(1.0, &at, Trans::Yes, &bt, Trans::Yes, 0.0, &mut c);
+            c.axpy(-1.0, &want);
+            assert!(frob(&c) < 1e-12 * (1.0 + frob(&want)));
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(4, 4, &mut rng);
+        let b = Matrix::randn(4, 4, &mut rng);
+        let c0 = Matrix::randn(4, 4, &mut rng);
+        let mut c = c0.clone();
+        gemm(2.0, &a, Trans::No, &b, Trans::No, 3.0, &mut c);
+        let want = {
+            let mut w = naive_gemm(&a, &b);
+            w.scale(2.0);
+            w.axpy(3.0, &c0);
+            w
+        };
+        let mut d = c;
+        d.axpy(-1.0, &want);
+        assert!(frob(&d) < 1e-12 * frob(&want));
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let mut c = Matrix::zeros(6, 6);
+        syrk(Uplo::Lower, 1.0, &a, Trans::No, 0.0, &mut c);
+        let want = naive_gemm(&a, &a.transpose());
+        let mut d = c;
+        d.axpy(-1.0, &want);
+        assert!(frob(&d) < 1e-12 * frob(&want));
+    }
+
+    #[test]
+    fn gemv_both_transposes() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(5, 3, &mut rng);
+        let x = vec![1.0, -2.0, 0.5];
+        let mut y = vec![0.0; 5];
+        gemv(1.0, &a, Trans::No, &x, 0.0, &mut y);
+        for i in 0..5 {
+            let want: f64 = (0..3).map(|p| a[(i, p)] * x[p]).sum();
+            assert!((y[i] - want).abs() < 1e-13);
+        }
+        let x2 = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut y2 = vec![0.0; 3];
+        gemv(1.0, &a, Trans::Yes, &x2, 0.0, &mut y2);
+        for j in 0..3 {
+            let want: f64 = (0..5).map(|i| a[(i, j)] * x2[i]).sum();
+            assert!((y2[j] - want).abs() < 1e-13);
+        }
+    }
+
+    /// Build a well-conditioned lower-triangular matrix.
+    fn rand_lower(n: usize, rng: &mut Rng) -> Matrix {
+        let mut l = Matrix::randn(n, n, rng);
+        for j in 0..n {
+            for i in 0..j {
+                l[(i, j)] = 0.0;
+            }
+            l[(j, j)] = 2.0 + l[(j, j)].abs();
+        }
+        l
+    }
+
+    #[test]
+    fn trsm_left_lower_roundtrip() {
+        let mut rng = Rng::new(13);
+        let l = rand_lower(6, &mut rng);
+        let x0 = Matrix::randn(6, 3, &mut rng);
+        let mut b = Matrix::zeros(6, 3);
+        gemm(1.0, &l, Trans::No, &x0, Trans::No, 0.0, &mut b);
+        trsm(Side::Left, Uplo::Lower, Trans::No, 1.0, &l, &mut b);
+        b.axpy(-1.0, &x0);
+        assert!(frob(&b) < 1e-10);
+    }
+
+    #[test]
+    fn trsm_left_lower_trans_roundtrip() {
+        let mut rng = Rng::new(14);
+        let l = rand_lower(6, &mut rng);
+        let x0 = Matrix::randn(6, 3, &mut rng);
+        let mut b = Matrix::zeros(6, 3);
+        gemm(1.0, &l, Trans::Yes, &x0, Trans::No, 0.0, &mut b);
+        trsm(Side::Left, Uplo::Lower, Trans::Yes, 1.0, &l, &mut b);
+        b.axpy(-1.0, &x0);
+        assert!(frob(&b) < 1e-10);
+    }
+
+    #[test]
+    fn trsm_right_lower_trans_roundtrip() {
+        // The ULV factorization's main TRSM: L_ij = A_ij * L_jj^{-T}
+        // i.e. solve X * L^T = A  (right side, lower, transposed).
+        let mut rng = Rng::new(15);
+        let l = rand_lower(5, &mut rng);
+        let x0 = Matrix::randn(7, 5, &mut rng);
+        let mut b = Matrix::zeros(7, 5);
+        gemm(1.0, &x0, Trans::No, &l, Trans::Yes, 0.0, &mut b);
+        trsm(Side::Right, Uplo::Lower, Trans::Yes, 1.0, &l, &mut b);
+        b.axpy(-1.0, &x0);
+        assert!(frob(&b) < 1e-10);
+    }
+
+    #[test]
+    fn trsm_right_upper_roundtrip() {
+        let mut rng = Rng::new(16);
+        let u = rand_lower(5, &mut rng).transpose();
+        let x0 = Matrix::randn(4, 5, &mut rng);
+        let mut b = Matrix::zeros(4, 5);
+        gemm(1.0, &x0, Trans::No, &u, Trans::No, 0.0, &mut b);
+        trsm(Side::Right, Uplo::Upper, Trans::No, 1.0, &u, &mut b);
+        b.axpy(-1.0, &x0);
+        assert!(frob(&b) < 1e-10);
+    }
+
+    #[test]
+    fn trsv_matches_trsm() {
+        let mut rng = Rng::new(17);
+        let l = rand_lower(8, &mut rng);
+        let x0: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; 8];
+        gemv(1.0, &l, Trans::No, &x0, 0.0, &mut b);
+        trsv(Uplo::Lower, Trans::No, &l, &mut b);
+        for i in 0..8 {
+            assert!((b[i] - x0[i]).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Cholesky factorization (POTRF) and solves.
+//!
+//! The paper's ULV factorization uses an internal block-Cholesky
+//! (Algorithm 2 line 9: `L(r)_ii, L(r)_iiᵀ ← cholesky(A_ii^RR)`), assuming
+//! the kernel matrix is SPD thanks to the large diagonal (eqs 35-36).
+
+use super::blas::{self, Side, Uplo};
+use super::matrix::{Matrix, Trans};
+
+/// Error type for factorization failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FactorError {
+    /// Pivot at index `i` was non-positive (matrix not SPD).
+    NotSpd { index: usize, pivot: f64 },
+    /// Zero pivot encountered in LU.
+    Singular { index: usize },
+}
+
+impl std::fmt::Display for FactorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FactorError::NotSpd { index, pivot } => {
+                write!(f, "matrix not SPD: pivot {pivot:.3e} at index {index}")
+            }
+            FactorError::Singular { index } => write!(f, "singular matrix at index {index}"),
+        }
+    }
+}
+
+impl std::error::Error for FactorError {}
+
+/// In-place lower Cholesky: overwrite the lower triangle of `a` with L such
+/// that `A = L Lᵀ`; the strict upper triangle is zeroed.
+///
+/// Blocked right-looking variant: factor a diagonal panel, TRSM the panel
+/// below it, SYRK-update the trailing block. Block size 64 keeps panels in
+/// cache and routes most FLOPs through `gemm`.
+pub fn potrf(a: &mut Matrix) -> Result<(), FactorError> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    const NB: usize = 64;
+    let mut k = 0;
+    while k < n {
+        let nb = NB.min(n - k);
+        // Factor diagonal block A[k..k+nb, k..k+nb] unblocked.
+        for j in k..k + nb {
+            let mut d = a[(j, j)];
+            for p in k..j {
+                let v = a[(j, p)];
+                d -= v * v;
+            }
+            if d <= 0.0 {
+                return Err(FactorError::NotSpd { index: j, pivot: d });
+            }
+            let dj = d.sqrt();
+            a[(j, j)] = dj;
+            for i in j + 1..k + nb {
+                let mut s = a[(i, j)];
+                for p in k..j {
+                    s -= a[(i, p)] * a[(j, p)];
+                }
+                a[(i, j)] = s / dj;
+            }
+        }
+        let rest = n - k - nb;
+        if rest > 0 {
+            // Panel solve: A[k+nb.., k..k+nb] = A21 * L11^{-T}
+            let l11 = a.submatrix(k, k, nb, nb);
+            let mut a21 = a.submatrix(k + nb, k, rest, nb);
+            blas::trsm(Side::Right, Uplo::Lower, Trans::Yes, 1.0, &l11, &mut a21);
+            a.set_submatrix(k + nb, k, &a21);
+            // Trailing update: A22 -= A21 * A21ᵀ.
+            let mut a22 = a.submatrix(k + nb, k + nb, rest, rest);
+            blas::gemm(-1.0, &a21, Trans::No, &a21, Trans::Yes, 1.0, &mut a22);
+            a.set_submatrix(k + nb, k + nb, &a22);
+        }
+        k += nb;
+    }
+    // Zero strict upper triangle so the result is exactly L.
+    for j in 0..n {
+        for i in 0..j {
+            a[(i, j)] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: return L with `A = L Lᵀ` (A unchanged).
+pub fn cholesky(a: &Matrix) -> Result<Matrix, FactorError> {
+    let mut l = a.clone();
+    potrf(&mut l)?;
+    Ok(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor L (`A = L Lᵀ`), in place.
+pub fn potrs(l: &Matrix, b: &mut [f64]) {
+    blas::trsv(Uplo::Lower, Trans::No, l, b);
+    blas::trsv(Uplo::Lower, Trans::Yes, l, b);
+}
+
+/// Solve `A X = B` for a matrix RHS given the Cholesky factor L.
+pub fn potrs_mat(l: &Matrix, b: &mut Matrix) {
+    blas::trsm(Side::Left, Uplo::Lower, Trans::No, 1.0, l, b);
+    blas::trsm(Side::Left, Uplo::Lower, Trans::Yes, 1.0, l, b);
+}
+
+/// Explicit SPD inverse via Cholesky (used in construction where A_cc⁻¹ is
+/// applied to sampled near-field blocks; sizes are O(leaf), so this is fine).
+pub fn spd_inverse(a: &Matrix) -> Result<Matrix, FactorError> {
+    let l = cholesky(a)?;
+    let mut inv = Matrix::eye(a.rows());
+    potrs_mat(&l, &mut inv);
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    #[test]
+    fn potrf_reconstructs() {
+        let mut rng = Rng::new(21);
+        for &n in &[1usize, 2, 5, 16, 64, 100, 130] {
+            let a = Matrix::rand_spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            // strict upper must be zero
+            for j in 0..n {
+                for i in 0..j {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+            let mut rec = Matrix::zeros(n, n);
+            blas::gemm(1.0, &l, Trans::No, &l, Trans::Yes, 0.0, &mut rec);
+            rec.axpy(-1.0, &a);
+            assert!(
+                frob(&rec) < 1e-10 * frob(&a),
+                "n={n} err={}",
+                frob(&rec) / frob(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn potrf_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(matches!(cholesky(&a), Err(FactorError::NotSpd { .. })));
+    }
+
+    #[test]
+    fn potrs_solves() {
+        let mut rng = Rng::new(23);
+        let n = 40;
+        let a = Matrix::rand_spd(n, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let x0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; n];
+        blas::gemv(1.0, &a, Trans::No, &x0, 0.0, &mut b);
+        potrs(&l, &mut b);
+        let err: f64 = b.iter().zip(&x0).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let mut rng = Rng::new(25);
+        let n = 24;
+        let a = Matrix::rand_spd(n, &mut rng);
+        let inv = spd_inverse(&a).unwrap();
+        let mut prod = Matrix::zeros(n, n);
+        blas::gemm(1.0, &a, Trans::No, &inv, Trans::No, 0.0, &mut prod);
+        prod.axpy(-1.0, &Matrix::eye(n));
+        assert!(frob(&prod) < 1e-9);
+    }
+}

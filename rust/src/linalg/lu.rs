@@ -1,0 +1,138 @@
+//! Partially pivoted LU (GETRF/GETRS). Used by the dense baseline solver
+//! and by general (non-SPD) verification paths.
+
+use super::chol::FactorError;
+use super::matrix::Matrix;
+
+/// LU factorization with partial pivoting: `P A = L U`, packed in place
+/// (unit lower L below the diagonal, U on/above it).
+pub struct LuFactor {
+    /// Packed L\U factors.
+    pub lu: Matrix,
+    /// Pivot row swapped with row `i` at step `i`.
+    pub piv: Vec<usize>,
+}
+
+/// Factor `a` (copied) with partial pivoting.
+pub fn getrf(a: &Matrix) -> Result<LuFactor, FactorError> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut piv = vec![0usize; n];
+    for k in 0..n {
+        // Pivot search in column k.
+        let mut p = k;
+        let mut best = lu[(k, k)].abs();
+        for i in k + 1..n {
+            let v = lu[(i, k)].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        piv[k] = p;
+        if best == 0.0 {
+            return Err(FactorError::Singular { index: k });
+        }
+        if p != k {
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = t;
+            }
+        }
+        let dk = lu[(k, k)];
+        for i in k + 1..n {
+            lu[(i, k)] /= dk;
+        }
+        // Rank-1 trailing update, column-wise for cache friendliness.
+        for j in k + 1..n {
+            let ukj = lu[(k, j)];
+            if ukj == 0.0 {
+                continue;
+            }
+            for i in k + 1..n {
+                let lik = lu[(i, k)];
+                lu[(i, j)] -= lik * ukj;
+            }
+        }
+    }
+    Ok(LuFactor { lu, piv })
+}
+
+/// Solve `A x = b` using factors from [`getrf`], in place.
+pub fn getrs(f: &LuFactor, b: &mut [f64]) {
+    let n = f.lu.rows();
+    assert_eq!(b.len(), n);
+    // Apply permutation.
+    for k in 0..n {
+        let p = f.piv[k];
+        if p != k {
+            b.swap(k, p);
+        }
+    }
+    // Forward: L y = Pb (unit diagonal).
+    for i in 0..n {
+        let mut s = b[i];
+        for p in 0..i {
+            s -= f.lu[(i, p)] * b[p];
+        }
+        b[i] = s;
+    }
+    // Backward: U x = y.
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for p in i + 1..n {
+            s -= f.lu[(i, p)] * b[p];
+        }
+        b[i] = s / f.lu[(i, i)];
+    }
+}
+
+/// One-shot dense solve (baseline path).
+pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>, FactorError> {
+    let f = getrf(a)?;
+    let mut x = b.to_vec();
+    getrs(&f, &mut x);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::matrix::Trans;
+    use crate::util::Rng;
+
+    #[test]
+    fn lu_solve_random() {
+        let mut rng = Rng::new(31);
+        for &n in &[1usize, 3, 10, 50] {
+            let mut a = Matrix::randn(n, n, &mut rng);
+            for i in 0..n {
+                a[(i, i)] += 4.0; // keep well-conditioned
+            }
+            let x0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut b = vec![0.0; n];
+            blas::gemv(1.0, &a, Trans::No, &x0, 0.0, &mut b);
+            let x = solve(&a, &b).unwrap();
+            let err = x.iter().zip(&x0).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn lu_needs_pivoting() {
+        // Zero leading pivot forces a swap.
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = solve(&a, &[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(solve(&a, &[1.0, 1.0]).is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! Column-major dense matrix.
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Dense `f64` matrix, column-major storage (LAPACK convention):
+/// element `(i, j)` lives at `data[i + j * rows]`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a column-major buffer.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from row-major data (convenience for literals in tests).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        Matrix::from_fn(r, c, |i, j| rows[i][j])
+    }
+
+    /// Standard-normal random matrix.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Random symmetric positive-definite matrix `A = G Gᵀ + n·I`.
+    pub fn rand_spd(n: usize, rng: &mut Rng) -> Self {
+        let g = Matrix::randn(n, n, rng);
+        let mut a = Matrix::zeros(n, n);
+        crate::linalg::blas::gemm(1.0, &g, Trans::No, &g, Trans::Yes, 0.0, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0 || self.cols == 0
+    }
+
+    /// Borrow raw column-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw column-major storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `j` as a slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Extract sub-matrix `rows x cols` starting at `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Matrix {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols);
+        Matrix::from_fn(rows, cols, |i, j| self[(r0 + i, c0 + j)])
+    }
+
+    /// Write `block` into `self` at offset `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for j in 0..block.cols {
+            for i in 0..block.rows {
+                self[(r0 + i, c0 + j)] = block[(i, j)];
+            }
+        }
+    }
+
+    /// Add `alpha * block` into `self` at offset `(r0, c0)`.
+    pub fn add_submatrix(&mut self, r0: usize, c0: usize, alpha: f64, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for j in 0..block.cols {
+            for i in 0..block.rows {
+                self[(r0 + i, c0 + j)] += alpha * block[(i, j)];
+            }
+        }
+    }
+
+    /// Gather selected rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        Matrix::from_fn(idx.len(), self.cols, |i, j| self[(idx[i], j)])
+    }
+
+    /// Gather selected columns into a new matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        Matrix::from_fn(self.rows, idx.len(), |i, j| self[(i, idx[j])])
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "hcat row mismatch");
+        let mut data = Vec::with_capacity(self.data.len() + other.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows, cols: self.cols + other.cols, data }
+    }
+
+    /// Vertical concatenation `[self; other]`.
+    pub fn vcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "vcat col mismatch");
+        Matrix::from_fn(self.rows + other.rows, self.cols, |i, j| {
+            if i < self.rows {
+                self[(i, j)]
+            } else {
+                other[(i - self.rows, j)]
+            }
+        })
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x += alpha * y;
+        }
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+
+    /// Zero-pad (or truncate) to shape `(rows, cols)`, keeping the top-left.
+    pub fn resized(&self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| {
+            if i < self.rows && j < self.cols {
+                self[(i, j)]
+            } else {
+                0.0
+            }
+        })
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+/// Transpose flag for BLAS-style calls.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>11.4e} ", self[(i, j)])?;
+            }
+            if cmax < self.cols {
+                write!(f, "...")?;
+            }
+            writeln!(f)?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+pub use Trans::{No as NoTrans, Yes as DoTrans};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_col_major() {
+        let m = Matrix::from_col_major(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.);
+        assert_eq!(m[(1, 0)], 2.);
+        assert_eq!(m[(0, 1)], 3.);
+        assert_eq!(m[(1, 2)], 6.);
+    }
+
+    #[test]
+    fn from_rows_matches() {
+        let m = Matrix::from_rows(&[&[1., 2.], &[3., 4.]]);
+        assert_eq!(m[(0, 1)], 2.);
+        assert_eq!(m[(1, 0)], 3.);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(5, 3, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        for i in 0..5 {
+            for j in 0..3 {
+                assert_eq!(m[(i, j)], t[(j, i)]);
+            }
+        }
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn submatrix_and_set() {
+        let m = Matrix::from_fn(6, 6, |i, j| (10 * i + j) as f64);
+        let s = m.submatrix(1, 2, 3, 2);
+        assert_eq!(s[(0, 0)], 12.);
+        assert_eq!(s[(2, 1)], 33.);
+        let mut z = Matrix::zeros(6, 6);
+        z.set_submatrix(1, 2, &s);
+        assert_eq!(z[(1, 2)], 12.);
+        assert_eq!(z[(3, 3)], 33.);
+        assert_eq!(z[(0, 0)], 0.);
+    }
+
+    #[test]
+    fn cat_shapes() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::eye(2);
+        let h = a.hcat(&b);
+        assert_eq!((h.rows(), h.cols()), (2, 5));
+        assert_eq!(h[(1, 4)], 1.0);
+        let c = Matrix::zeros(4, 3);
+        let v = a.vcat(&c);
+        assert_eq!((v.rows(), v.cols()), (6, 3));
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let r = m.select_rows(&[3, 0]);
+        assert_eq!(r[(0, 0)], 12.);
+        assert_eq!(r[(1, 3)], 3.);
+        let c = m.select_cols(&[2]);
+        assert_eq!(c[(1, 0)], 6.);
+    }
+
+    #[test]
+    fn resized_pads_with_zeros() {
+        let m = Matrix::eye(2);
+        let p = m.resized(3, 4);
+        assert_eq!(p[(0, 0)], 1.);
+        assert_eq!(p[(2, 3)], 0.);
+        let t = p.resized(1, 1);
+        assert_eq!(t[(0, 0)], 1.);
+    }
+
+    #[test]
+    fn spd_is_symmetric() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::rand_spd(8, &mut rng);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((a[(i, j)] - a[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch dense linear-algebra substrate.
+//!
+//! The paper's smallest unit of computation is a single dense matrix block
+//! operated on by BLAS/LAPACK routines (paper §4). Since no external BLAS
+//! is available offline, this module implements the needed subset:
+//!
+//! * [`Matrix`] — column-major `f64` matrix (LAPACK convention).
+//! * [`blas`]   — GEMM / SYRK / TRSM / TRSV / GEMV and friends.
+//! * [`chol`]   — Cholesky factorization (POTRF) + solves.
+//! * [`lu`]     — partially pivoted LU (GETRF/GETRS), used by baselines.
+//! * [`qr`]     — Householder QR and column-pivoted QR (basis of the
+//!                interpolative decomposition in the construction phase).
+//! * [`svd`]    — one-sided Jacobi SVD for rank/accuracy studies.
+//! * [`norms`]  — Frobenius / 2-norm estimation / vector norms.
+
+pub mod blas;
+pub mod chol;
+pub mod lu;
+pub mod matrix;
+pub mod norms;
+pub mod qr;
+pub mod svd;
+
+pub use matrix::Matrix;

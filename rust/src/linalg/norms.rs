@@ -1,0 +1,78 @@
+//! Matrix and vector norms.
+
+use super::blas;
+use super::matrix::{Matrix, Trans};
+
+/// Frobenius norm.
+pub fn frob(a: &Matrix) -> f64 {
+    a.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2_vec(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Relative error `||x - y|| / ||y||` of two vectors.
+pub fn rel_err_vec(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let d: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let n = norm2_vec(y);
+    if n == 0.0 {
+        d
+    } else {
+        d / n
+    }
+}
+
+/// Spectral norm estimate via power iteration on `AᵀA`.
+pub fn norm2_est(a: &Matrix, iters: usize) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    let n = a.cols();
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.37).sin()).collect();
+    let mut av = vec![0.0; a.rows()];
+    let mut s = 0.0;
+    for _ in 0..iters.max(2) {
+        let nv = norm2_vec(&v);
+        if nv == 0.0 {
+            return 0.0;
+        }
+        for x in v.iter_mut() {
+            *x /= nv;
+        }
+        blas::gemv(1.0, a, Trans::No, &v, 0.0, &mut av);
+        blas::gemv(1.0, a, Trans::Yes, &av, 0.0, &mut v);
+        s = norm2_vec(&av);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn frob_eye() {
+        assert!((frob(&Matrix::eye(9)) - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn norm2_diag() {
+        let mut a = Matrix::zeros(4, 4);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -7.0;
+        a[(2, 2)] = 2.0;
+        let est = norm2_est(&a, 50);
+        assert!((est - 7.0).abs() < 1e-6, "est={est}");
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        assert_eq!(rel_err_vec(&x, &x), 0.0);
+    }
+}

@@ -1,0 +1,371 @@
+//! Householder QR, column-pivoted QR (CPQR), and the interpolative
+//! decomposition (ID) built on top of it.
+//!
+//! The construction phase (paper Algorithm 1) computes
+//! `(U_i, SK_i) <- ID([A_Far, A_Close])`: a *row* ID selecting skeleton
+//! points of a box plus an interpolation operator. We realize the ID with
+//! CPQR, then orthogonalize the interpolation operator with plain QR to get
+//! the square orthogonal basis `U_i = [U^S | U^R]` that the ULV
+//! factorization applies from both sides (paper eq 6).
+
+use super::blas::{self, Side, Uplo};
+use super::matrix::{Matrix, Trans};
+
+/// Result of a (thin or full) Householder QR.
+pub struct QrFactor {
+    /// Orthogonal factor. `rows x rows` when full, `rows x min(rows,cols)` thin.
+    pub q: Matrix,
+    /// Upper-triangular/trapezoidal factor matching `q`.
+    pub r: Matrix,
+}
+
+/// Householder QR of `a`. When `full` is true, `q` is square `m x m`
+/// (its trailing columns complete the range of `a` to an orthonormal basis
+/// of R^m — this is how `U^R` is obtained from `U^S`).
+pub fn qr(a: &Matrix, full: bool) -> QrFactor {
+    let m = a.rows();
+    let n = a.cols();
+    let kmax = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors stored per reflection.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(kmax);
+    for k in 0..kmax {
+        // Build reflector for column k below diagonal.
+        let mut v = vec![0.0; m - k];
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        let alpha = -v[0].signum() * blas::dot(&v, &v).sqrt();
+        if alpha == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2 = blas::dot(&v, &v);
+        if vnorm2 == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..] — slice-based dot +
+        // AXPY per column (perf pass: removes per-element index math).
+        for j in k..n {
+            let col = &mut r.col_mut(j)[k..];
+            let w = 2.0 * blas::dot(&v, col) / vnorm2;
+            for (ci, vi) in col.iter_mut().zip(&v) {
+                *ci -= w * vi;
+            }
+        }
+        vs.push(v);
+    }
+    // Zero sub-diagonal noise.
+    for j in 0..n {
+        for i in (j + 1)..m {
+            r[(i, j)] = 0.0;
+        }
+    }
+    // Accumulate Q by applying reflectors to identity columns.
+    let qcols = if full { m } else { kmax };
+    let mut q = Matrix::zeros(m, qcols);
+    for j in 0..qcols {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..vs.len()).rev() {
+        let v = &vs[k];
+        let vnorm2 = blas::dot(v, v);
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..qcols {
+            let col = &mut q.col_mut(j)[k..];
+            let w = 2.0 * blas::dot(v, col) / vnorm2;
+            for (ci, vi) in col.iter_mut().zip(v) {
+                *ci -= w * vi;
+            }
+        }
+    }
+    let r_out = if full {
+        r
+    } else {
+        r.submatrix(0, 0, kmax, n)
+    };
+    QrFactor { q, r: r_out }
+}
+
+/// Column-pivoted QR: `A P = Q R` with pivots chosen greedily by remaining
+/// column norm. Stops at `max_rank` columns or when the pivot norm falls
+/// below `rtol * |first pivot|`.
+pub struct Cpqr {
+    /// Pivot order: `jpvt[t]` is the original column index chosen at step t.
+    pub jpvt: Vec<usize>,
+    /// Numerical rank k detected.
+    pub rank: usize,
+    /// `R` factor, `k x n`, columns in *pivoted* order.
+    pub r: Matrix,
+}
+
+/// Column-pivoted Householder QR (LAPACK `geqp3`-style, unblocked).
+pub fn cpqr(a: &Matrix, rtol: f64, max_rank: usize) -> Cpqr {
+    let m = a.rows();
+    let n = a.cols();
+    let kmax = m.min(n).min(max_rank.max(1));
+    let mut r = a.clone();
+    let mut jpvt: Vec<usize> = (0..n).collect();
+    // Running squared column norms of the trailing block.
+    let mut cnorm: Vec<f64> = (0..n).map(|j| blas::dot(r.col(j), r.col(j))).collect();
+    let mut cnorm0 = cnorm.clone();
+    let mut first_pivot = 0.0;
+    let mut rank = 0;
+    for k in 0..kmax {
+        // Select pivot column with max remaining norm.
+        let (pj, &pn) = cnorm[k..]
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .map(|(i, v)| (i + k, v))
+            .unwrap();
+        if k == 0 {
+            first_pivot = pn.sqrt();
+        }
+        if pn.sqrt() <= rtol * first_pivot || pn == 0.0 {
+            break;
+        }
+        if pj != k {
+            // Swap columns k and pj in R, cnorm, jpvt.
+            for i in 0..m {
+                let t = r[(i, k)];
+                r[(i, k)] = r[(i, pj)];
+                r[(i, pj)] = t;
+            }
+            cnorm.swap(k, pj);
+            cnorm0.swap(k, pj);
+            jpvt.swap(k, pj);
+        }
+        // Householder on column k.
+        let mut v = vec![0.0; m - k];
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        let alpha = -v[0].signum() * blas::dot(&v, &v).sqrt();
+        if alpha != 0.0 {
+            v[0] -= alpha;
+            let vnorm2 = blas::dot(&v, &v);
+            if vnorm2 > 0.0 {
+                // Column k is known analytically: (alpha, 0, ..., 0).
+                {
+                    let col = &mut r.col_mut(k)[k..];
+                    col.fill(0.0);
+                    col[0] = alpha;
+                }
+                for j in k + 1..n {
+                    let col = &mut r.col_mut(j)[k..];
+                    let w = 2.0 * blas::dot(&v, col) / vnorm2;
+                    for (ci, vi) in col.iter_mut().zip(&v) {
+                        *ci -= w * vi;
+                    }
+                }
+            }
+        }
+        // Downdate trailing column norms; recompute exactly when the
+        // downdate cancels badly (LAPACK geqp3-style safeguard).
+        for j in k + 1..n {
+            let rkj = r[(k, j)];
+            let down = cnorm[j] - rkj * rkj;
+            if down <= 1e-8 * cnorm0[j] {
+                let mut s = 0.0;
+                for i in k + 1..m {
+                    let v = r[(i, j)];
+                    s += v * v;
+                }
+                cnorm[j] = s;
+                cnorm0[j] = s;
+            } else {
+                cnorm[j] = down;
+            }
+        }
+        rank = k + 1;
+    }
+    let mut r_out = Matrix::zeros(rank, n);
+    for j in 0..n {
+        for i in 0..rank.min(j + 1) {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    Cpqr { jpvt, rank, r: r_out }
+}
+
+/// Row interpolative decomposition: `M ≈ T * M[sk, :]` where `sk` are
+/// `rank` selected row indices and `T` is `m x rank` with `T[sk, :] = I`.
+///
+/// Implemented as a column ID of `Mᵀ` via CPQR: `MᵀP = QR`,
+/// `X = R11⁻¹ R12` interpolates non-skeleton rows from skeleton rows.
+pub struct RowId {
+    /// Selected (skeleton) row indices, in pivot order.
+    pub skeleton: Vec<usize>,
+    /// Interpolation operator `m x rank`.
+    pub t: Matrix,
+}
+
+/// Compute a row ID with rank bounded by `max_rank` and relative tolerance
+/// `rtol` (pass `rtol = 0.0` for fixed-rank truncation).
+pub fn row_id(m: &Matrix, rtol: f64, max_rank: usize) -> RowId {
+    let mt = m.transpose();
+    let f = cpqr(&mt, rtol, max_rank);
+    let k = f.rank;
+    let rows = m.rows();
+    if k == 0 {
+        // Degenerate: all rows ~ zero. Keep one skeleton row to stay well-formed.
+        let mut t = Matrix::zeros(rows, 1.min(rows));
+        if rows > 0 {
+            t[(0, 0)] = 1.0;
+        }
+        return RowId { skeleton: if rows > 0 { vec![0] } else { vec![] }, t };
+    }
+    // Solve R11 X = R12  (R11 k x k upper-triangular).
+    let r11 = f.r.submatrix(0, 0, k, k);
+    let ncols = f.r.cols();
+    let mut x = f.r.submatrix(0, k, k, ncols - k);
+    if !x.is_empty() {
+        blas::trsm(Side::Left, Uplo::Upper, Trans::No, 1.0, &r11, &mut x);
+    }
+    // Assemble T in original row order: T[jpvt[t], t] = I for t < k,
+    // T[jpvt[k + j], :] = X[:, j]ᵀ for the rest.
+    let mut t = Matrix::zeros(rows, k);
+    for (tcol, &orig) in f.jpvt.iter().take(k).enumerate() {
+        t[(orig, tcol)] = 1.0;
+    }
+    for j in 0..(rows - k) {
+        let orig = f.jpvt[k + j];
+        for i in 0..k {
+            t[(orig, i)] = x[(i, j)];
+        }
+    }
+    RowId { skeleton: f.jpvt[..k].to_vec(), t }
+}
+
+/// Square orthogonal basis from an interpolation operator.
+///
+/// Given `T` (n x k, full column rank), returns `(U, R)` with
+/// `U = [U^S | U^R]` square orthogonal (n x n), `U^S = Q` from `T = Q R`,
+/// and `R` (k x k upper). The ULV transform applies `Uᵀ` from the left /
+/// `U` from the right; couplings are weighted by `R` (DESIGN.md §4).
+pub fn orthogonalize_basis(t: &Matrix) -> (Matrix, Matrix) {
+    let f = qr(t, true);
+    let k = t.cols();
+    let r = f.r.submatrix(0, 0, k, k);
+    (f.q, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_thin_reconstructs() {
+        let mut rng = Rng::new(41);
+        for &(m, n) in &[(6, 4), (4, 6), (5, 5), (10, 1)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let f = qr(&a, false);
+            let mut rec = Matrix::zeros(m, n);
+            blas::gemm(1.0, &f.q, Trans::No, &f.r, Trans::No, 0.0, &mut rec);
+            rec.axpy(-1.0, &a);
+            assert!(frob(&rec) < 1e-12 * (1.0 + frob(&a)), "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn qr_full_orthogonal() {
+        let mut rng = Rng::new(43);
+        let a = Matrix::randn(7, 3, &mut rng);
+        let f = qr(&a, true);
+        assert_eq!((f.q.rows(), f.q.cols()), (7, 7));
+        let mut qtq = Matrix::zeros(7, 7);
+        blas::gemm(1.0, &f.q, Trans::Yes, &f.q, Trans::No, 0.0, &mut qtq);
+        qtq.axpy(-1.0, &Matrix::eye(7));
+        assert!(frob(&qtq) < 1e-12);
+        // Reconstruction via full factors.
+        let mut rec = Matrix::zeros(7, 3);
+        blas::gemm(1.0, &f.q, Trans::No, &f.r, Trans::No, 0.0, &mut rec);
+        rec.axpy(-1.0, &a);
+        assert!(frob(&rec) < 1e-12);
+    }
+
+    #[test]
+    fn cpqr_finds_rank() {
+        let mut rng = Rng::new(45);
+        // Rank-3 matrix 10x8.
+        let b = Matrix::randn(10, 3, &mut rng);
+        let c = Matrix::randn(3, 8, &mut rng);
+        let mut a = Matrix::zeros(10, 8);
+        blas::gemm(1.0, &b, Trans::No, &c, Trans::No, 0.0, &mut a);
+        let f = cpqr(&a, 1e-10, 8);
+        assert_eq!(f.rank, 3);
+    }
+
+    #[test]
+    fn cpqr_respects_max_rank() {
+        let mut rng = Rng::new(47);
+        let a = Matrix::randn(10, 10, &mut rng);
+        let f = cpqr(&a, 0.0, 4);
+        assert_eq!(f.rank, 4);
+        assert_eq!(f.r.rows(), 4);
+    }
+
+    #[test]
+    fn row_id_exact_for_low_rank() {
+        let mut rng = Rng::new(49);
+        let b = Matrix::randn(12, 4, &mut rng);
+        let c = Matrix::randn(4, 20, &mut rng);
+        let mut m = Matrix::zeros(12, 20);
+        blas::gemm(1.0, &b, Trans::No, &c, Trans::No, 0.0, &mut m);
+        let id = row_id(&m, 1e-12, 12);
+        assert_eq!(id.skeleton.len(), 4);
+        // T * M[sk,:] == M
+        let msk = m.select_rows(&id.skeleton);
+        let mut rec = Matrix::zeros(12, 20);
+        blas::gemm(1.0, &id.t, Trans::No, &msk, Trans::No, 0.0, &mut rec);
+        rec.axpy(-1.0, &m);
+        assert!(frob(&rec) < 1e-9 * frob(&m));
+        // Identity rows at skeleton positions.
+        for (t, &s) in id.skeleton.iter().enumerate() {
+            for j in 0..id.skeleton.len() {
+                let want = if j == t { 1.0 } else { 0.0 };
+                assert!((id.t[(s, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn row_id_fixed_rank_quality() {
+        // Smooth (Hilbert-like) kernel rows compress well at fixed rank.
+        let m = Matrix::from_fn(30, 40, |i, j| 1.0 / (1.0 + i as f64 + j as f64));
+        let id = row_id(&m, 0.0, 8);
+        assert_eq!(id.skeleton.len(), 8);
+        let msk = m.select_rows(&id.skeleton);
+        let mut rec = Matrix::zeros(30, 40);
+        blas::gemm(1.0, &id.t, Trans::No, &msk, Trans::No, 0.0, &mut rec);
+        rec.axpy(-1.0, &m);
+        assert!(frob(&rec) < 0.1 * frob(&m));
+    }
+
+    #[test]
+    fn orthogonalize_basis_splits() {
+        let mut rng = Rng::new(51);
+        let t = Matrix::randn(9, 3, &mut rng);
+        let (u, r) = orthogonalize_basis(&t);
+        assert_eq!((u.rows(), u.cols()), (9, 9));
+        assert_eq!((r.rows(), r.cols()), (3, 3));
+        // U orthogonal.
+        let mut utu = Matrix::zeros(9, 9);
+        blas::gemm(1.0, &u, Trans::Yes, &u, Trans::No, 0.0, &mut utu);
+        utu.axpy(-1.0, &Matrix::eye(9));
+        assert!(frob(&utu) < 1e-12);
+        // First 3 columns * R == T.
+        let us = u.submatrix(0, 0, 9, 3);
+        let mut rec = Matrix::zeros(9, 3);
+        blas::gemm(1.0, &us, Trans::No, &r, Trans::No, 0.0, &mut rec);
+        rec.axpy(-1.0, &t);
+        assert!(frob(&rec) < 1e-12 * (1.0 + frob(&t)));
+    }
+}

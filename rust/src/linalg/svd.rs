@@ -1,0 +1,156 @@
+//! One-sided Jacobi SVD.
+//!
+//! Used by the rank/accuracy studies (paper Figure 18) to measure the true
+//! numerical rank of Schur-complement updates, and as an alternative
+//! truncation for the low-rank basis. Sizes are O(leaf) so the O(n³) Jacobi
+//! sweep cost is acceptable and its accuracy is excellent.
+
+use super::blas;
+use super::matrix::Matrix;
+
+/// Result of an SVD: `A = U diag(s) Vᵀ`.
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub v: Matrix,
+}
+
+/// One-sided Jacobi SVD (on columns). Converges when all column pairs are
+/// numerically orthogonal.
+pub fn svd(a: &Matrix) -> Svd {
+    let m = a.rows();
+    let n = a.cols();
+    if m < n {
+        // Work on the transpose and swap U/V.
+        let t = svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let mut u = a.clone();
+    let mut v = Matrix::eye(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let up = u.col(p);
+                let uq = u.col(q);
+                let alpha = blas::dot(up, up);
+                let beta = blas::dot(uq, uq);
+                let gamma = blas::dot(up, uq);
+                if alpha * beta > 0.0 {
+                    off = off.max(gamma.abs() / (alpha * beta).sqrt());
+                }
+                if gamma.abs() <= eps * (alpha * beta).sqrt() || gamma == 0.0 {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) entry of AᵀA.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let a_ip = u[(i, p)];
+                    let a_iq = u[(i, q)];
+                    u[(i, p)] = c * a_ip - s * a_iq;
+                    u[(i, q)] = s * a_ip + c * a_iq;
+                }
+                for i in 0..n {
+                    let v_ip = v[(i, p)];
+                    let v_iq = v[(i, q)];
+                    v[(i, p)] = c * v_ip - s * v_iq;
+                    v[(i, q)] = s * v_ip + c * v_iq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+    // Extract singular values and normalize U columns.
+    let mut s: Vec<f64> = (0..n).map(|j| blas::dot(u.col(j), u.col(j)).sqrt()).collect();
+    for j in 0..n {
+        if s[j] > 0.0 {
+            let inv = 1.0 / s[j];
+            for x in u.col_mut(j) {
+                *x *= inv;
+            }
+        }
+    }
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let u_sorted = u.select_cols(&order);
+    let v_sorted = v.select_cols(&order);
+    s = order.iter().map(|&i| s[i]).collect();
+    Svd { u: u_sorted, s, v: v_sorted }
+}
+
+/// Numerical rank at relative tolerance `rtol` (w.r.t. the largest singular
+/// value).
+pub fn numerical_rank(a: &Matrix, rtol: f64) -> usize {
+    let d = svd(a);
+    if d.s.is_empty() || d.s[0] == 0.0 {
+        return 0;
+    }
+    d.s.iter().filter(|&&x| x > rtol * d.s[0]).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Trans;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    fn reconstruct(d: &Svd) -> Matrix {
+        let m = d.u.rows();
+        let n = d.v.rows();
+        let k = d.s.len();
+        let mut us = d.u.clone();
+        for j in 0..k {
+            for x in us.col_mut(j) {
+                *x *= d.s[j];
+            }
+        }
+        let mut rec = Matrix::zeros(m, n);
+        blas::gemm(1.0, &us, Trans::No, &d.v, Trans::Yes, 0.0, &mut rec);
+        rec
+    }
+
+    #[test]
+    fn svd_reconstructs_tall_and_wide() {
+        let mut rng = Rng::new(61);
+        for &(m, n) in &[(8, 5), (5, 8), (6, 6)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let d = svd(&a);
+            let mut rec = reconstruct(&d);
+            rec.axpy(-1.0, &a);
+            assert!(frob(&rec) < 1e-11 * frob(&a), "({m},{n}) err={}", frob(&rec));
+            // Singular values sorted descending and non-negative.
+            for w in d.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(d.s.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn svd_known_values() {
+        // diag(3, 2) embedded.
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, -2.0], &[0.0, 0.0]]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-12);
+        assert!((d.s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn numerical_rank_detects() {
+        let mut rng = Rng::new(63);
+        let b = Matrix::randn(10, 3, &mut rng);
+        let c = Matrix::randn(3, 10, &mut rng);
+        let mut a = Matrix::zeros(10, 10);
+        blas::gemm(1.0, &b, Trans::No, &c, Trans::No, 0.0, &mut a);
+        assert_eq!(numerical_rank(&a, 1e-10), 3);
+    }
+}

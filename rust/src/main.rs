@@ -1,0 +1,7 @@
+//! `h2ulv` CLI — leader entrypoint for the solver, the figure harness, and
+//! diagnostics. Unknown commands print usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(h2ulv::cli::run(argv));
+}

@@ -1,0 +1,149 @@
+//! Global FLOP counter with named phases.
+//!
+//! The paper reports FLOP *counts* (Fig 15), FLOP *rates* (Fig 14) and the
+//! pre-factorization vs factorization *split* (Fig 17). Counters are
+//! thread-safe atomics so batched parallel kernels can report from any
+//! worker.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+
+// Named phase counters (paper phases).
+static CONSTRUCT: AtomicU64 = AtomicU64::new(0);
+static PREFACTOR: AtomicU64 = AtomicU64::new(0);
+static FACTOR: AtomicU64 = AtomicU64::new(0);
+static SUBSTITUTE: AtomicU64 = AtomicU64::new(0);
+
+/// Which phase subsequent [`add`] calls are attributed to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    Construct,
+    /// Pre-factorization: the `A_Close · A_cc⁻¹` work (paper §3.5, Fig 17).
+    Prefactor,
+    Factor,
+    Substitute,
+}
+
+// Global (not thread-local): batched kernels run on pool workers that must
+// inherit the coordinator's phase attribution. Phases never overlap in time,
+// so a relaxed global is correct for our accounting.
+static CURRENT_PHASE: AtomicU64 = AtomicU64::new(0);
+
+fn phase_to_u64(p: Phase) -> u64 {
+    match p {
+        Phase::Construct => 0,
+        Phase::Prefactor => 1,
+        Phase::Factor => 2,
+        Phase::Substitute => 3,
+    }
+}
+
+fn phase_from_u64(v: u64) -> Phase {
+    match v {
+        1 => Phase::Prefactor,
+        2 => Phase::Factor,
+        3 => Phase::Substitute,
+        _ => Phase::Construct,
+    }
+}
+
+/// Set the global phase; returns the previous phase.
+pub fn set_phase(p: Phase) -> Phase {
+    phase_from_u64(CURRENT_PHASE.swap(phase_to_u64(p), Ordering::Relaxed))
+}
+
+/// Run `f` with the given phase attribution.
+pub fn with_phase<T>(p: Phase, f: impl FnOnce() -> T) -> T {
+    let old = set_phase(p);
+    let out = f();
+    set_phase(old);
+    out
+}
+
+/// Record `n` floating-point operations in the current phase.
+#[inline]
+pub fn add(n: u64) {
+    TOTAL.fetch_add(n, Ordering::Relaxed);
+    let phase = phase_from_u64(CURRENT_PHASE.load(Ordering::Relaxed));
+    match phase {
+        Phase::Construct => CONSTRUCT.fetch_add(n, Ordering::Relaxed),
+        Phase::Prefactor => PREFACTOR.fetch_add(n, Ordering::Relaxed),
+        Phase::Factor => FACTOR.fetch_add(n, Ordering::Relaxed),
+        Phase::Substitute => SUBSTITUTE.fetch_add(n, Ordering::Relaxed),
+    };
+}
+
+/// FLOPs for a GEMM of shape m x n x k.
+#[inline]
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> u64 {
+    2 * m as u64 * n as u64 * k as u64
+}
+
+/// FLOPs for a Cholesky of size n.
+#[inline]
+pub fn potrf_flops(n: usize) -> u64 {
+    (n as u64 * n as u64 * n as u64) / 3
+}
+
+/// FLOPs for a TRSM with triangle n and rhs m columns (right side: m rows).
+#[inline]
+pub fn trsm_flops(n: usize, m: usize) -> u64 {
+    n as u64 * n as u64 * m as u64
+}
+
+/// Snapshot of all counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub total: u64,
+    pub construct: u64,
+    pub prefactor: u64,
+    pub factor: u64,
+    pub substitute: u64,
+}
+
+/// Read the counters.
+pub fn snapshot() -> Counts {
+    Counts {
+        total: TOTAL.load(Ordering::Relaxed),
+        construct: CONSTRUCT.load(Ordering::Relaxed),
+        prefactor: PREFACTOR.load(Ordering::Relaxed),
+        factor: FACTOR.load(Ordering::Relaxed),
+        substitute: SUBSTITUTE.load(Ordering::Relaxed),
+    }
+}
+
+/// Difference of two snapshots (b - a).
+pub fn delta(a: Counts, b: Counts) -> Counts {
+    Counts {
+        total: b.total - a.total,
+        construct: b.construct - a.construct,
+        prefactor: b.prefactor - a.prefactor,
+        factor: b.factor - a.factor,
+        substitute: b.substitute - a.substitute,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_attribute() {
+        let before = snapshot();
+        with_phase(Phase::Factor, || add(100));
+        with_phase(Phase::Prefactor, || add(40));
+        let after = snapshot();
+        let d = delta(before, after);
+        assert!(d.factor >= 100);
+        assert!(d.prefactor >= 40);
+        assert!(d.total >= 140);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(gemm_flops(2, 3, 4), 48);
+        assert_eq!(potrf_flops(6), 72);
+        assert_eq!(trsm_flops(4, 3), 48);
+    }
+}

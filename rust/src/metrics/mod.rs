@@ -1,0 +1,11 @@
+//! FLOP accounting, wall-clock timing, and the batched-execution trace.
+//!
+//! These power the paper's Figures 12 (profiler view), 14 (TFLOP/s),
+//! 15 (FLOP count), 17 (FLOP split), and 23 (compute/comm breakdown).
+
+pub mod flops;
+pub mod timer;
+pub mod trace;
+
+pub use timer::Stopwatch;
+pub use trace::{TraceEvent, Tracer};

@@ -1,0 +1,126 @@
+//! Batched-execution trace — the repo's analog of the paper's Nsight
+//! profiler screenshot (Figure 12).
+//!
+//! Every batched kernel launch records (level, kernel name, batch size,
+//! matrix shape, duration). The figure harness renders per-level occupancy
+//! summaries and a text timeline from these events.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One batched-kernel launch.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Tree level the launch belongs to (usize::MAX = outside level loop).
+    pub level: usize,
+    /// Kernel name (POTRF / TRSM / GEMM / ...).
+    pub kernel: &'static str,
+    /// Number of matrices in the batch.
+    pub batch: usize,
+    /// Representative shape (m, n) of a batch element.
+    pub shape: (usize, usize),
+    /// Start offset in seconds from tracer creation.
+    pub t_start: f64,
+    /// Duration in seconds.
+    pub dt: f64,
+}
+
+/// Collects [`TraceEvent`]s.
+pub struct Tracer {
+    origin: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+    enabled: bool,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Self {
+        Tracer { origin: Instant::now(), events: Mutex::new(Vec::new()), enabled }
+    }
+
+    /// Record a launch that ran `f`.
+    pub fn record<T>(
+        &self,
+        level: usize,
+        kernel: &'static str,
+        batch: usize,
+        shape: (usize, usize),
+        f: impl FnOnce() -> T,
+    ) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let t_start = t0.duration_since(self.origin).as_secs_f64();
+        self.events.lock().unwrap().push(TraceEvent { level, kernel, batch, shape, t_start, dt });
+        out
+    }
+
+    /// Snapshot of all events.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Text rendering of the trace, grouped by level (Fig 12 analog).
+    pub fn render(&self) -> String {
+        let events = self.events();
+        let mut out = String::new();
+        out.push_str("level  kernel   batch  shape        start[ms]  dur[ms]\n");
+        for e in &events {
+            let lvl = if e.level == usize::MAX { "-".to_string() } else { e.level.to_string() };
+            out.push_str(&format!(
+                "{:>5}  {:<8} {:>5}  {:>5}x{:<5}  {:>9.3}  {:>7.3}\n",
+                lvl,
+                e.kernel,
+                e.batch,
+                e.shape.0,
+                e.shape.1,
+                e.t_start * 1e3,
+                e.dt * 1e3
+            ));
+        }
+        out
+    }
+
+    /// Mean batch size per kernel — a proxy for GPU "occupancy": large
+    /// batches saturate batched BLAS the way the paper's Figure 12 shows.
+    pub fn mean_batch(&self) -> f64 {
+        let ev = self.events();
+        if ev.is_empty() {
+            return 0.0;
+        }
+        ev.iter().map(|e| e.batch as f64).sum::<f64>() / ev.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_events() {
+        let tr = Tracer::new(true);
+        let v = tr.record(3, "POTRF", 16, (8, 8), || 5);
+        assert_eq!(v, 5);
+        let ev = tr.events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].kernel, "POTRF");
+        assert_eq!(ev[0].batch, 16);
+        assert!(tr.render().contains("POTRF"));
+        assert_eq!(tr.mean_batch(), 16.0);
+    }
+
+    #[test]
+    fn disabled_tracer_skips() {
+        let tr = Tracer::new(false);
+        tr.record(0, "GEMM", 4, (2, 2), || ());
+        assert!(tr.events().is_empty());
+    }
+}

@@ -1,0 +1,613 @@
+//! The PJRT batched backend.
+
+use super::manifest::Manifest;
+use crate::batch::native::NativeBackend;
+use crate::batch::pad::{batch_to_buffer_f64, buffer_to_batch_f64};
+use crate::batch::BatchExec;
+use crate::linalg::Matrix;
+use crate::metrics::flops;
+use crate::metrics::Tracer;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Launch statistics (diagnostics + tests).
+#[derive(Default)]
+pub struct PjrtStats {
+    /// Batched launches executed through PJRT.
+    pub launches: AtomicU64,
+    /// Calls that fell back to the native backend.
+    pub fallbacks: AtomicU64,
+}
+
+/// Batched backend executing AOT XLA artifacts on the PJRT CPU client.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled-executable cache keyed like the manifest index.
+    cache: Mutex<HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>>,
+    fallback: NativeBackend,
+    pub stats: PjrtStats,
+    pub tracer: Option<Tracer>,
+}
+
+// SAFETY: all PJRT interactions go through &self methods that serialize
+// compile-cache mutation behind the Mutex; the coordinator issues batched
+// launches from a single thread (the level loop), and the PJRT CPU client
+// itself is internally synchronized. The raw pointers inside the xla
+// wrappers are never shared across threads concurrently by this type.
+unsafe impl Sync for PjrtBackend {}
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Create a backend from an artifacts directory (with `manifest.json`).
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            fallback: NativeBackend::new(),
+            stats: PjrtStats::default(),
+            tracer: None,
+        })
+    }
+
+    /// Enable the execution tracer (fig 12 analog).
+    pub fn with_tracer(mut self) -> Self {
+        self.tracer = Some(Tracer::new(true));
+        self
+    }
+
+    fn trace<T>(
+        &self,
+        level: usize,
+        kernel: &'static str,
+        batch: usize,
+        shape: (usize, usize),
+        f: impl FnOnce() -> T,
+    ) -> T {
+        match &self.tracer {
+            Some(tr) => tr.record(level, kernel, batch, shape, f),
+            None => f(),
+        }
+    }
+
+    /// Execute `op` on row-major f64 buffers shaped by the artifact spec.
+    /// Returns the first tuple element's flat data.
+    fn run(
+        &self,
+        op: &str,
+        bucket: usize,
+        d: usize,
+        k: usize,
+        inputs: &[(Vec<f64>, [i64; 3])],
+    ) -> anyhow::Result<Vec<f64>> {
+        let key = (op.to_string(), bucket, d, k);
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(&key) {
+            let path = self
+                .manifest
+                .index
+                .get(&key)
+                .ok_or_else(|| anyhow::anyhow!("no artifact for {key:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            cache.insert(key.clone(), exe);
+        }
+        let exe = cache.get(&key).unwrap();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(buf, dims)| xla::Literal::vec1(buf).reshape(dims).map_err(anyhow::Error::from))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        self.stats.launches.fetch_add(1, Ordering::Relaxed);
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Split work indices into bucket-sized chunks (largest bucket first).
+    fn chunks(&self, n: usize) -> Vec<(usize, usize)> {
+        // Returns (start, len) chunks with len <= max bucket.
+        let maxb = self.manifest.max_bucket().max(1);
+        let mut out = Vec::new();
+        let mut at = 0;
+        while at < n {
+            let len = (n - at).min(maxb);
+            out.push((at, len));
+            at += len;
+        }
+        out
+    }
+}
+
+impl BatchExec for PjrtBackend {
+    fn potrf(&self, level: usize, blocks: &mut [Matrix]) {
+        if blocks.is_empty() {
+            return;
+        }
+        let need = blocks.iter().map(|b| b.rows()).max().unwrap();
+        let fam = match self.manifest.family_for(need * 2, need) {
+            Some(f) => f,
+            None => {
+                self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return self.fallback.potrf(level, blocks);
+            }
+        };
+        let (d, k) = fam;
+        self.trace(level, "POTRF(pjrt)", blocks.len(), (need, need), || {
+            for (start, len) in self.chunks(blocks.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                let chunk = &blocks[start..start + len];
+                // Pad: identity diagonal so the padded Cholesky is valid
+                // (paper's AXPY-diagonal trick); pad the batch with identity
+                // matrices for the same reason.
+                let mut padded: Vec<Matrix> = chunk.to_vec();
+                padded.resize(bucket, Matrix::eye(k));
+                let buf = batch_to_buffer_f64(&padded, k, k, 1.0);
+                for b in chunk {
+                    flops::add(flops::potrf_flops(b.rows()));
+                }
+                let out = self
+                    .run("potrf", bucket, d, k, &[(buf, [bucket as i64, k as i64, k as i64])])
+                    .expect("potrf artifact execution failed");
+                let shapes: Vec<(usize, usize)> =
+                    chunk.iter().map(|b| (b.rows(), b.cols())).collect();
+                let mats = buffer_to_batch_f64(&out, k, k, &shapes);
+                for (t, m) in mats.into_iter().enumerate() {
+                    blocks[start + t] = m;
+                }
+            }
+        });
+    }
+
+    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]) {
+        if b.is_empty() {
+            return;
+        }
+        let need_l = l.iter().map(|m| m.rows()).max().unwrap();
+        let need_rows = b.iter().map(|m| m.rows()).max().unwrap();
+        let need = need_l.max(need_rows);
+        let fam = match self.manifest.family_for(need * 2, need) {
+            Some(f) => f,
+            None => {
+                self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return self.fallback.trsm_right_lt(level, l, b);
+            }
+        };
+        let (d, k) = fam;
+        self.trace(level, "TRSM(pjrt)", b.len(), (need_rows, need_l), || {
+            for (start, len) in self.chunks(b.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                let mut lp: Vec<Matrix> = l[start..start + len].iter().map(|m| (*m).clone()).collect();
+                lp.resize(bucket, Matrix::eye(k));
+                let mut bp: Vec<Matrix> = b[start..start + len].to_vec();
+                bp.resize(bucket, Matrix::zeros(k, k));
+                let lbuf = batch_to_buffer_f64(&lp, k, k, 1.0);
+                let bbuf = batch_to_buffer_f64(&bp, k, k, 0.0);
+                for m in &b[start..start + len] {
+                    flops::add(flops::trsm_flops(need_l, m.rows()));
+                }
+                let dims = [bucket as i64, k as i64, k as i64];
+                let out = self
+                    .run("trsm", bucket, d, k, &[(lbuf, dims), (bbuf, dims)])
+                    .expect("trsm artifact execution failed");
+                let shapes: Vec<(usize, usize)> =
+                    b[start..start + len].iter().map(|m| (m.rows(), m.cols())).collect();
+                let mats = buffer_to_batch_f64(&out, k, k, &shapes);
+                for (t, m) in mats.into_iter().enumerate() {
+                    b[start + t] = m;
+                }
+            }
+        });
+    }
+
+    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]) {
+        if c.is_empty() {
+            return;
+        }
+        let need = c
+            .iter()
+            .map(|m| m.rows())
+            .chain(a.iter().map(|m| m.cols()))
+            .max()
+            .unwrap();
+        let fam = match self.manifest.family_for(need * 2, need) {
+            Some(f) => f,
+            None => {
+                self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return self.fallback.schur_self(level, a, c);
+            }
+        };
+        let (d, k) = fam;
+        self.trace(level, "SYRK(pjrt)", c.len(), (need, need), || {
+            for (start, len) in self.chunks(c.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                let mut cp: Vec<Matrix> = c[start..start + len].to_vec();
+                cp.resize(bucket, Matrix::zeros(k, k));
+                let mut ap: Vec<Matrix> =
+                    a[start..start + len].iter().map(|m| (*m).clone()).collect();
+                ap.resize(bucket, Matrix::zeros(k, k));
+                let cbuf = batch_to_buffer_f64(&cp, k, k, 0.0);
+                let abuf = batch_to_buffer_f64(&ap, k, k, 0.0);
+                for m in &a[start..start + len] {
+                    flops::add(flops::gemm_flops(m.rows(), m.rows(), m.cols()));
+                }
+                let dims = [bucket as i64, k as i64, k as i64];
+                let out = self
+                    .run("schur", bucket, d, k, &[(cbuf, dims), (abuf, dims)])
+                    .expect("schur artifact execution failed");
+                let shapes: Vec<(usize, usize)> =
+                    c[start..start + len].iter().map(|m| (m.rows(), m.cols())).collect();
+                let mats = buffer_to_batch_f64(&out, k, k, &shapes);
+                for (t, m) in mats.into_iter().enumerate() {
+                    c[start + t] = m;
+                }
+            }
+        });
+    }
+
+    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
+        if a.is_empty() {
+            return Vec::new();
+        }
+        let need = u
+            .iter()
+            .chain(v.iter())
+            .map(|m| m.rows())
+            .chain(a.iter().map(|m| m.rows().max(m.cols())))
+            .max()
+            .unwrap();
+        let fam = match self.manifest.family_for(need, need / 2) {
+            Some(f) => f,
+            None => {
+                self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return self.fallback.sparsify(level, u, a, v);
+            }
+        };
+        let (d, k) = fam;
+        self.trace(level, "GEMM2(pjrt)", a.len(), (need, need), || {
+            let mut out_all: Vec<Matrix> = Vec::with_capacity(a.len());
+            for (start, len) in self.chunks(a.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                // U, V padded with identity diagonal (orthogonality of the
+                // padded transform preserves the embedded block).
+                let mut up: Vec<Matrix> =
+                    u[start..start + len].iter().map(|m| (*m).clone()).collect();
+                up.resize(bucket, Matrix::eye(d));
+                let mut ap: Vec<Matrix> = a[start..start + len].to_vec();
+                ap.resize(bucket, Matrix::zeros(d, d));
+                let mut vp: Vec<Matrix> =
+                    v[start..start + len].iter().map(|m| (*m).clone()).collect();
+                vp.resize(bucket, Matrix::eye(d));
+                let ubuf = batch_to_buffer_f64(&up, d, d, 1.0);
+                let abuf = batch_to_buffer_f64(&ap, d, d, 0.0);
+                let vbuf = batch_to_buffer_f64(&vp, d, d, 1.0);
+                for t in 0..len {
+                    crate::batch::count_sparsify_flops(u[start + t], &a[start + t], v[start + t]);
+                }
+                let dims = [bucket as i64, d as i64, d as i64];
+                let out = self
+                    .run("sparsify", bucket, d, k, &[(ubuf, dims), (abuf, dims), (vbuf, dims)])
+                    .expect("sparsify artifact execution failed");
+                let shapes: Vec<(usize, usize)> = (0..len)
+                    .map(|t| (u[start + t].cols(), v[start + t].cols()))
+                    .collect();
+                out_all.extend(buffer_to_batch_f64(&out, d, d, &shapes));
+            }
+            out_all
+        })
+    }
+
+    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        self.trsv_impl(level, l, x, "trsv_fwd");
+    }
+
+    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        self.trsv_impl(level, l, x, "trsv_bwd");
+    }
+
+    fn gemv_acc(
+        &self,
+        level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    ) {
+        if a.is_empty() {
+            return;
+        }
+        // Artifacts are compiled for the substitution's alpha = -1 update.
+        let need = a.iter().map(|m| m.rows().max(m.cols())).max().unwrap();
+        let fam = self.manifest.family_for(need * 2, need);
+        if alpha != -1.0 || fam.is_none() {
+            self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+            return self.fallback.gemv_acc(level, alpha, a, trans, x, y);
+        }
+        let (d, k) = fam.unwrap();
+        let op = if trans { "gemv_tt" } else { "gemv_nt" };
+        self.trace(level, "GEMV(pjrt)", a.len(), (need, need), || {
+            for (start, len) in self.chunks(a.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                let mut ap: Vec<Matrix> =
+                    a[start..start + len].iter().map(|m| (*m).clone()).collect();
+                ap.resize(bucket, Matrix::zeros(k, k));
+                let mut xv: Vec<Matrix> = x[start..start + len]
+                    .iter()
+                    .map(|s| Matrix::from_col_major(s.len(), 1, s.to_vec()))
+                    .collect();
+                xv.resize(bucket, Matrix::zeros(k, 1));
+                let mut yv: Vec<Matrix> = y[start..start + len]
+                    .iter()
+                    .map(|s| Matrix::from_col_major(s.len(), 1, s.clone()))
+                    .collect();
+                yv.resize(bucket, Matrix::zeros(k, 1));
+                let abuf = batch_to_buffer_f64(&ap, k, k, 0.0);
+                let xbuf = batch_to_buffer_f64(&xv, k, 1, 0.0);
+                let ybuf = batch_to_buffer_f64(&yv, k, 1, 0.0);
+                for m in &a[start..start + len] {
+                    flops::add(2 * (m.rows() * m.cols()) as u64);
+                }
+                let mdims = [bucket as i64, k as i64, k as i64];
+                let vdims = [bucket as i64, k as i64, 1];
+                let out = self
+                    .run(op, bucket, d, k, &[(abuf, mdims), (xbuf, vdims), (ybuf, vdims)])
+                    .expect("gemv artifact execution failed");
+                for t in 0..len {
+                    let target = &mut y[start + t];
+                    let base = t * k;
+                    for (s, val) in target.iter_mut().enumerate() {
+                        *val = out[base + s];
+                    }
+                }
+            }
+        });
+    }
+
+    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
+        if u.is_empty() {
+            return Vec::new();
+        }
+        let need = u.iter().map(|m| m.rows()).max().unwrap();
+        let fam = self.manifest.family_for(need, need / 2);
+        if fam.is_none() {
+            self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+            return self.fallback.apply_basis(level, u, trans, x);
+        }
+        let (d, k) = fam.unwrap();
+        let op = if trans { "basis_t" } else { "basis_n" };
+        self.trace(level, "BASIS(pjrt)", u.len(), (need, need), || {
+            let mut out_all = Vec::with_capacity(u.len());
+            for (start, len) in self.chunks(u.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                let mut up: Vec<Matrix> =
+                    u[start..start + len].iter().map(|m| (*m).clone()).collect();
+                up.resize(bucket, Matrix::eye(d));
+                let mut xv: Vec<Matrix> = x[start..start + len]
+                    .iter()
+                    .map(|s| Matrix::from_col_major(s.len(), 1, s.to_vec()))
+                    .collect();
+                xv.resize(bucket, Matrix::zeros(d, 1));
+                let ubuf = batch_to_buffer_f64(&up, d, d, 1.0);
+                let xbuf = batch_to_buffer_f64(&xv, d, 1, 0.0);
+                for m in &u[start..start + len] {
+                    flops::add(2 * (m.rows() * m.cols()) as u64);
+                }
+                let out = self
+                    .run(
+                        op,
+                        bucket,
+                        d,
+                        k,
+                        &[
+                            (ubuf, [bucket as i64, d as i64, d as i64]),
+                            (xbuf, [bucket as i64, d as i64, 1]),
+                        ],
+                    )
+                    .expect("basis artifact execution failed");
+                for t in 0..len {
+                    let m = u[start + t];
+                    let out_len = if trans { m.cols() } else { m.rows() };
+                    let base = t * d;
+                    out_all.push(out[base..base + out_len].to_vec());
+                }
+            }
+            out_all
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl PjrtBackend {
+    fn trsv_impl(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>], op: &'static str) {
+        if l.is_empty() {
+            return;
+        }
+        let need = l.iter().map(|m| m.rows()).max().unwrap();
+        let fam = self.manifest.family_for(need * 2, need);
+        if fam.is_none() {
+            self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+            if op == "trsv_fwd" {
+                return self.fallback.trsv_fwd(level, l, x);
+            }
+            return self.fallback.trsv_bwd(level, l, x);
+        }
+        let (d, k) = fam.unwrap();
+        self.trace(level, "TRSV(pjrt)", l.len(), (need, 1), || {
+            for (start, len) in self.chunks(l.len()) {
+                let bucket = self.manifest.bucket_for(len).unwrap();
+                let mut lp: Vec<Matrix> =
+                    l[start..start + len].iter().map(|m| (*m).clone()).collect();
+                lp.resize(bucket, Matrix::eye(k));
+                let mut xv: Vec<Matrix> = x[start..start + len]
+                    .iter()
+                    .map(|s| Matrix::from_col_major(s.len(), 1, s.clone()))
+                    .collect();
+                xv.resize(bucket, Matrix::zeros(k, 1));
+                let lbuf = batch_to_buffer_f64(&lp, k, k, 1.0);
+                let xbuf = batch_to_buffer_f64(&xv, k, 1, 0.0);
+                for m in &l[start..start + len] {
+                    flops::add((m.rows() * m.rows()) as u64);
+                }
+                let out = self
+                    .run(
+                        op,
+                        bucket,
+                        d,
+                        k,
+                        &[
+                            (lbuf, [bucket as i64, k as i64, k as i64]),
+                            (xbuf, [bucket as i64, k as i64, 1]),
+                        ],
+                    )
+                    .expect("trsv artifact execution failed");
+                for t in 0..len {
+                    let target = &mut x[start + t];
+                    let base = t * k;
+                    for (s, val) in target.iter_mut().enumerate() {
+                        *val = out[base + s];
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{self, Side, Uplo};
+    use crate::linalg::chol;
+    use crate::linalg::matrix::Trans;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    fn backend() -> Option<PjrtBackend> {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(PjrtBackend::new(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn pjrt_potrf_matches_native() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(201);
+        let mats: Vec<Matrix> = (0..5).map(|_| Matrix::rand_spd(20, &mut rng)).collect();
+        let mut batch = mats.clone();
+        be.potrf(0, &mut batch);
+        for (orig, got) in mats.iter().zip(&batch) {
+            let want = chol::cholesky(orig).unwrap();
+            let mut d = got.clone();
+            d.axpy(-1.0, &want);
+            assert!(frob(&d) < 1e-9 * (1.0 + frob(&want)), "potrf mismatch {}", frob(&d));
+        }
+        assert!(be.stats.launches.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn pjrt_trsm_matches_native() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(203);
+        let ls: Vec<Matrix> = (0..3)
+            .map(|_| chol::cholesky(&Matrix::rand_spd(16, &mut rng)).unwrap())
+            .collect();
+        let bs: Vec<Matrix> = (0..3).map(|_| Matrix::randn(12, 16, &mut rng)).collect();
+        let mut batch = bs.clone();
+        let lrefs: Vec<&Matrix> = ls.iter().collect();
+        be.trsm_right_lt(0, &lrefs, &mut batch);
+        for t in 0..3 {
+            let mut want = bs[t].clone();
+            blas::trsm(Side::Right, Uplo::Lower, Trans::Yes, 1.0, &ls[t], &mut want);
+            let mut d = batch[t].clone();
+            d.axpy(-1.0, &want);
+            assert!(frob(&d) < 1e-9, "trsm mismatch {}", frob(&d));
+        }
+    }
+
+    #[test]
+    fn pjrt_sparsify_matches_native() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(205);
+        let u = Matrix::randn(24, 24, &mut rng);
+        let v = Matrix::randn(24, 24, &mut rng);
+        let a = Matrix::randn(24, 24, &mut rng);
+        let got = be.sparsify(0, &[&u], std::slice::from_ref(&a), &[&v]);
+        let want = NativeBackend::new().sparsify(0, &[&u], std::slice::from_ref(&a), &[&v]);
+        let mut d = got[0].clone();
+        d.axpy(-1.0, &want[0]);
+        assert!(frob(&d) < 1e-9 * (1.0 + frob(&want[0])));
+    }
+
+    #[test]
+    fn pjrt_trsv_and_gemv_match_native() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(207);
+        let l = chol::cholesky(&Matrix::rand_spd(10, &mut rng)).unwrap();
+        let x0: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let mut x_pjrt = vec![x0.clone()];
+        let mut x_native = vec![x0.clone()];
+        be.trsv_fwd(0, &[&l], &mut x_pjrt);
+        NativeBackend::new().trsv_fwd(0, &[&l], &mut x_native);
+        for (a, b) in x_pjrt[0].iter().zip(&x_native[0]) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        be.trsv_bwd(0, &[&l], &mut x_pjrt);
+        NativeBackend::new().trsv_bwd(0, &[&l], &mut x_native);
+        for (a, b) in x_pjrt[0].iter().zip(&x_native[0]) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // gemv alpha=-1 path
+        let a = Matrix::randn(8, 8, &mut rng);
+        let xv: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let y0: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let mut yp = vec![y0.clone()];
+        let mut yn = vec![y0.clone()];
+        be.gemv_acc(0, -1.0, &[&a], false, &[&xv], &mut yp);
+        NativeBackend::new().gemv_acc(0, -1.0, &[&a], false, &[&xv], &mut yn);
+        for (p, n) in yp[0].iter().zip(&yn[0]) {
+            assert!((p - n).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pjrt_apply_basis_matches_native() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(209);
+        let u = Matrix::randn(30, 30, &mut rng);
+        let x: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        for trans in [true, false] {
+            let got = be.apply_basis(0, &[&u], trans, &[&x]);
+            let want = NativeBackend::new().apply_basis(0, &[&u], trans, &[&x]);
+            for (a, b) in got[0].iter().zip(&want[0]) {
+                assert!((a - b).abs() < 1e-9, "trans={trans}");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_falls_back_on_oversized_blocks() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(211);
+        // 100 > largest family k (64) -> fallback.
+        let mut blocks = vec![Matrix::rand_spd(100, &mut rng)];
+        be.potrf(0, &mut blocks);
+        assert!(be.stats.fallbacks.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        // Still correct.
+        for d in 0..100 {
+            assert!(blocks[0][(d, d)] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Artifact manifest parsing (artifacts/manifest.json).
+//!
+//! Hand-rolled JSON reader for the single fixed schema `aot.py` emits —
+//! serde is unavailable offline (DESIGN.md §10).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub op: String,
+    pub batch: usize,
+    pub d: usize,
+    pub k: usize,
+    pub file: String,
+}
+
+/// Parsed manifest: artifact index plus the available shape families.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// `(op, batch, d, k)` -> artifact path.
+    pub index: HashMap<(String, usize, usize, usize), PathBuf>,
+    /// Distinct `(d, k)` families, ascending by `d`.
+    pub families: Vec<(usize, usize)>,
+    /// Distinct batch buckets, ascending.
+    pub buckets: Vec<usize>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> std::io::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let artifacts = parse_manifest_json(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let mut index = HashMap::new();
+        let mut families: Vec<(usize, usize)> = Vec::new();
+        let mut buckets: Vec<usize> = Vec::new();
+        for a in artifacts {
+            if !families.contains(&(a.d, a.k)) {
+                families.push((a.d, a.k));
+            }
+            if !buckets.contains(&a.batch) {
+                buckets.push(a.batch);
+            }
+            index.insert((a.op.clone(), a.batch, a.d, a.k), dir.join(&a.file));
+        }
+        families.sort_unstable();
+        buckets.sort_unstable();
+        Ok(Manifest { index, families, buckets })
+    }
+
+    /// Smallest family whose padded dims fit `(need_d, need_k)`.
+    pub fn family_for(&self, need_d: usize, need_k: usize) -> Option<(usize, usize)> {
+        self.families
+            .iter()
+            .copied()
+            .find(|&(d, k)| d >= need_d && k >= need_k)
+    }
+
+    /// Smallest bucket >= n (None when n exceeds the largest bucket — the
+    /// caller splits the batch into largest-bucket chunks first).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Largest compiled bucket.
+    pub fn max_bucket(&self) -> usize {
+        self.buckets.last().copied().unwrap_or(0)
+    }
+}
+
+/// Parse the fixed `{"artifacts": [{"op": ..., "batch": n, "d": n, "k": n,
+/// "file": ...}, ...]}` schema.
+pub fn parse_manifest_json(text: &str) -> Result<Vec<Artifact>, String> {
+    let mut out = Vec::new();
+    // Find each object between braces inside the artifacts array.
+    let arr_start = text.find('[').ok_or("no artifacts array")?;
+    let arr_end = text.rfind(']').ok_or("unterminated array")?;
+    let body = &text[arr_start + 1..arr_end];
+    for obj in body.split('}') {
+        if !obj.contains('"') {
+            continue;
+        }
+        let get_str = |key: &str| -> Option<String> {
+            let pat = format!("\"{key}\"");
+            let at = obj.find(&pat)? + pat.len();
+            let rest = &obj[at..];
+            let colon = rest.find(':')?;
+            let rest = rest[colon + 1..].trim_start();
+            if let Some(stripped) = rest.strip_prefix('"') {
+                let end = stripped.find('"')?;
+                Some(stripped[..end].to_string())
+            } else {
+                let end = rest
+                    .find(|c: char| !(c.is_ascii_digit()))
+                    .unwrap_or(rest.len());
+                Some(rest[..end].to_string())
+            }
+        };
+        let op = get_str("op").ok_or("missing op")?;
+        let batch: usize = get_str("batch")
+            .ok_or("missing batch")?
+            .parse()
+            .map_err(|e| format!("bad batch: {e}"))?;
+        let d: usize = get_str("d").ok_or("missing d")?.parse().map_err(|e| format!("bad d: {e}"))?;
+        let k: usize = get_str("k").ok_or("missing k")?.parse().map_err(|e| format!("bad k: {e}"))?;
+        let file = get_str("file").ok_or("missing file")?;
+        out.push(Artifact { op, batch, d, k, file });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"artifacts": [
+ {"op": "potrf", "batch": 1, "d": 64, "k": 32, "file": "potrf_b1_d64_k32.hlo.txt"},
+ {"op": "potrf", "batch": 2, "d": 64, "k": 32, "file": "potrf_b2_d64_k32.hlo.txt"},
+ {"op": "trsm", "batch": 1, "d": 32, "k": 16, "file": "trsm_b1_d32_k16.hlo.txt"}
+]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let arts = parse_manifest_json(SAMPLE).unwrap();
+        assert_eq!(arts.len(), 3);
+        assert_eq!(arts[0].op, "potrf");
+        assert_eq!(arts[0].batch, 1);
+        assert_eq!(arts[0].d, 64);
+        assert_eq!(arts[2].file, "trsm_b1_d32_k16.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_lookup_helpers() {
+        let dir = std::env::temp_dir().join("h2ulv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.families, vec![(32, 16), (64, 32)]);
+        assert_eq!(m.buckets, vec![1, 2]);
+        assert_eq!(m.family_for(40, 20), Some((64, 32)));
+        assert_eq!(m.family_for(10, 10), Some((32, 16)));
+        assert_eq!(m.family_for(100, 10), None);
+        assert_eq!(m.bucket_for(2), Some(2));
+        assert_eq!(m.bucket_for(3), None);
+        assert_eq!(m.max_bucket(), 2);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.index.len() >= 100, "expected the full artifact grid");
+            assert!(m.families.contains(&(64, 32)));
+        }
+    }
+}

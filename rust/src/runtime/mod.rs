@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT-compiled XLA executables (HLO text emitted
+//! by `python/compile/aot.py`) and exposes them as a [`BatchExec`] backend.
+//!
+//! This is the repo's analog of the paper's GPU execution path: every
+//! batched launch maps to one AOT executable chosen by `(op, batch-bucket,
+//! shape family)`, with zero padding to constant shapes (paper §4.1) and
+//! unit-diagonal augmentation for the factorization kernels (the paper's
+//! batched-AXPY diagonal fill, §4.1).
+//!
+//! Shapes that exceed every compiled family (e.g. the dense root block)
+//! fall back to the native backend — mirroring how the paper handles the
+//! final `cholesky(A_00)` outside the batched path.
+
+pub mod backend;
+pub mod manifest;
+
+pub use backend::PjrtBackend;
+pub use manifest::{Artifact, Manifest};

@@ -1,0 +1,185 @@
+//! Per-level near/far interaction lists (the H² block structure).
+//!
+//! Computed by a level-by-level dual traversal: a pair at level `l` exists
+//! only if its parent pair was *near* at level `l-1`; it becomes a **far**
+//! (coupling) block if admissible, otherwise a **near** block. At the leaf
+//! level near blocks are stored dense; at interior levels near blocks are
+//! the merged `A^SS` content the ULV factorization keeps working on.
+
+use super::ClusterTree;
+
+/// Interaction lists for one tree level.
+#[derive(Clone, Debug, Default)]
+pub struct LevelLists {
+    /// Non-admissible pairs `(i, j)` (within-level indices), including the
+    /// diagonal `(i, i)`. Both `(i, j)` and `(j, i)` appear.
+    pub near: Vec<(usize, usize)>,
+    /// Admissible pairs whose parent pair is near.
+    pub far: Vec<(usize, usize)>,
+}
+
+impl LevelLists {
+    /// Near pairs of row `i` (linear scan; lists are level-local and small).
+    pub fn near_of_row(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.near.iter().filter(move |&&(a, _)| a == i).map(|&(_, b)| b)
+    }
+
+    /// Far pairs of row `i`.
+    pub fn far_of_row(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.far.iter().filter(move |&&(a, _)| a == i).map(|&(_, b)| b)
+    }
+}
+
+/// Build the near/far lists for every level of `tree` under admissibility
+/// parameter `eta` (paper's "admissibility condition number").
+pub fn interaction_lists(tree: &ClusterTree, eta: f64) -> Vec<LevelLists> {
+    let mut lists: Vec<LevelLists> = vec![LevelLists::default(); tree.depth + 1];
+    // Root level: the single (0,0) pair is near.
+    lists[0].near.push((0, 0));
+    for l in 1..=tree.depth {
+        // Split parent near pairs into this level's near/far.
+        let parent_near = lists[l - 1].near.clone();
+        for &(pi, pj) in &parent_near {
+            for ci in [2 * pi, 2 * pi + 1] {
+                for cj in [2 * pj, 2 * pj + 1] {
+                    let a = tree.node(l, ci);
+                    let b = tree.node(l, cj);
+                    if tree.admissible(a, b, eta) {
+                        lists[l].far.push((ci, cj));
+                    } else {
+                        lists[l].near.push((ci, cj));
+                    }
+                }
+            }
+        }
+        lists[l].near.sort_unstable();
+        lists[l].far.sort_unstable();
+    }
+    lists
+}
+
+/// Number of near (dense) blocks at the leaf level — the paper's `N_NZB`
+/// "number of neighboring interactions" (Figure 16).
+pub fn leaf_near_count(tree: &ClusterTree, eta: f64) -> usize {
+    interaction_lists(tree, eta)[tree.depth].near.len()
+}
+
+/// Structural invariant checks used by tests and the property harness:
+/// lists are symmetric, disjoint, complete w.r.t. the parent near pairs,
+/// and every diagonal pair is near.
+pub fn check_lists(tree: &ClusterTree, lists: &[LevelLists]) -> Result<(), String> {
+    if lists.len() != tree.depth + 1 {
+        return Err("wrong number of levels".into());
+    }
+    for (l, ll) in lists.iter().enumerate() {
+        let near: std::collections::HashSet<_> = ll.near.iter().copied().collect();
+        let far: std::collections::HashSet<_> = ll.far.iter().copied().collect();
+        if near.len() != ll.near.len() || far.len() != ll.far.len() {
+            return Err(format!("level {l}: duplicate pairs"));
+        }
+        // Symmetry.
+        for &(i, j) in &ll.near {
+            if !near.contains(&(j, i)) {
+                return Err(format!("level {l}: near pair ({i},{j}) not symmetric"));
+            }
+        }
+        for &(i, j) in &ll.far {
+            if !far.contains(&(j, i)) {
+                return Err(format!("level {l}: far pair ({i},{j}) not symmetric"));
+            }
+        }
+        // Disjoint.
+        if ll.near.iter().any(|p| far.contains(p)) {
+            return Err(format!("level {l}: near/far overlap"));
+        }
+        // Diagonal near.
+        for i in 0..tree.width(l) {
+            if !near.contains(&(i, i)) {
+                return Err(format!("level {l}: diagonal ({i},{i}) not near"));
+            }
+        }
+        // Completeness: every pair present iff parent near.
+        if l > 0 {
+            let parent_near: std::collections::HashSet<_> =
+                lists[l - 1].near.iter().copied().collect();
+            for &(i, j) in ll.near.iter().chain(ll.far.iter()) {
+                if !parent_near.contains(&(i / 2, j / 2)) {
+                    return Err(format!("level {l}: pair ({i},{j}) has non-near parent"));
+                }
+            }
+            for &(pi, pj) in &parent_near {
+                for ci in [2 * pi, 2 * pi + 1] {
+                    for cj in [2 * pj, 2 * pj + 1] {
+                        if !near.contains(&(ci, cj)) && !far.contains(&(ci, cj)) {
+                            return Err(format!(
+                                "level {l}: child pair ({ci},{cj}) of near parent missing"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Geometry;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn lists_invariants_sphere() {
+        let g = Geometry::sphere_surface(1024, 31);
+        let t = ClusterTree::build(&g, 64);
+        for eta in [0.0, 0.7, 1.5, 3.0] {
+            let lists = interaction_lists(&t, eta);
+            check_lists(&t, &lists).unwrap();
+        }
+    }
+
+    #[test]
+    fn eta_zero_gives_hss_structure() {
+        // With weak admissibility only the diagonal is near at every level.
+        let g = Geometry::uniform_cube(512, 33);
+        let t = ClusterTree::build(&g, 32);
+        let lists = interaction_lists(&t, 0.0);
+        for l in 1..=t.depth {
+            assert_eq!(lists[l].near.len(), t.width(l), "level {l} near must be diagonal only");
+            assert!(lists[l].near.iter().all(|&(i, j)| i == j));
+        }
+    }
+
+    #[test]
+    fn near_count_grows_with_eta() {
+        let g = Geometry::sphere_surface(2048, 35);
+        let t = ClusterTree::build(&g, 64);
+        let c0 = leaf_near_count(&t, 0.5);
+        let c1 = leaf_near_count(&t, 1.5);
+        let c2 = leaf_near_count(&t, 3.0);
+        assert!(c0 <= c1 && c1 <= c2);
+        assert!(c2 > c0, "eta must change the structure");
+    }
+
+    #[test]
+    fn prop_lists_invariants_random_geometry() {
+        // Property harness: random clouds, random eta — invariants hold.
+        check(
+            &PropConfig { cases: 12, seed: 0xBEEF },
+            |rng| {
+                let n = 64 + rng.below(512);
+                let seed = rng.next_u64();
+                let eta = rng.range(0.0, 3.0);
+                let leaf = 16 + rng.below(48);
+                (n, seed, eta, leaf)
+            },
+            |&(n, seed, eta, leaf)| {
+                let g = Geometry::uniform_cube(n, seed);
+                let t = ClusterTree::build(&g, leaf);
+                let lists = interaction_lists(&t, eta);
+                check_lists(&t, &lists)
+            },
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Binary cluster tree and H² interaction lists.
+//!
+//! The dense matrix is block-partitioned by recursively bisecting the point
+//! cloud along the longest bounding-box axis (median split), producing a
+//! perfect binary tree whose leaves hold at most `leaf_size` points. Points
+//! are *reordered* so every node owns a contiguous index range — this is the
+//! space-filling-style ordering that also gives the 1-D process
+//! distribution its data locality (paper §5).
+//!
+//! The admissibility condition follows the paper (§6.2): a pair of distinct
+//! boxes is **admissible** (compressed low-rank) when
+//! `dist(center_i, center_j) >= eta * max(radius_i, radius_j)`;
+//! `eta = 0` reproduces HSS/weak admissibility (every off-diagonal pair is
+//! low-rank), larger `eta` keeps more near (dense) blocks, matching the
+//! paper's "admissibility condition number ... from 0.0 (HSS admissibility)
+//! to 3.0".
+
+pub mod lists;
+
+use crate::geometry::{Aabb, Geometry, Point3};
+
+pub use lists::{interaction_lists, leaf_near_count, LevelLists};
+
+/// A node (box) of the cluster tree.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Tree level (0 = root).
+    pub level: usize,
+    /// Index within the level (`0..2^level`).
+    pub index: usize,
+    /// First owned point (in tree ordering).
+    pub begin: usize,
+    /// One past the last owned point.
+    pub end: usize,
+    /// Bounding box of the owned points.
+    pub bbox: Aabb,
+}
+
+impl Node {
+    /// Number of points owned by this node.
+    pub fn len(&self) -> usize {
+        self.end - self.begin
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+}
+
+/// Perfect binary cluster tree with reordered points.
+#[derive(Clone, Debug)]
+pub struct ClusterTree {
+    /// Leaf level index L (the tree has levels `0..=L`).
+    pub depth: usize,
+    /// Nodes in level order: node `(l, i)` at `(1 << l) - 1 + i`.
+    pub nodes: Vec<Node>,
+    /// Points in tree order.
+    pub points: Vec<Point3>,
+    /// `perm[p]` = original index of tree-ordered point `p`.
+    pub perm: Vec<usize>,
+}
+
+/// Flat id of node `(level, index)`.
+#[inline]
+pub fn node_id(level: usize, index: usize) -> usize {
+    (1usize << level) - 1 + index
+}
+
+impl ClusterTree {
+    /// Build a tree over `geometry` with at most `leaf_size` points per leaf.
+    pub fn build(geometry: &Geometry, leaf_size: usize) -> ClusterTree {
+        assert!(leaf_size >= 1);
+        let n = geometry.len();
+        assert!(n >= 1, "empty geometry");
+        // Depth so that each leaf holds <= leaf_size points.
+        let mut depth = 0usize;
+        while n.div_ceil(1 << depth) > leaf_size {
+            depth += 1;
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut nodes: Vec<Node> = Vec::with_capacity((1 << (depth + 1)) - 1);
+        // Build level by level; each node splits its range at the median of
+        // the longest bbox axis.
+        struct Range {
+            begin: usize,
+            end: usize,
+        }
+        let mut current = vec![Range { begin: 0, end: n }];
+        for level in 0..=depth {
+            let mut next = Vec::with_capacity(current.len() * 2);
+            for (index, r) in current.iter().enumerate() {
+                let slice = &order[r.begin..r.end];
+                let bbox = Aabb::of(&slice.iter().map(|&p| geometry.points[p]).collect::<Vec<_>>());
+                nodes.push(Node { level, index, begin: r.begin, end: r.end, bbox });
+                if level < depth {
+                    let axis = bbox.longest_axis();
+                    let mid = r.begin + (r.end - r.begin) / 2;
+                    let sub = &mut order[r.begin..r.end];
+                    let k = mid - r.begin;
+                    if k > 0 && k < sub.len() {
+                        sub.select_nth_unstable_by(k, |&a, &b| {
+                            geometry.points[a][axis]
+                                .partial_cmp(&geometry.points[b][axis])
+                                .unwrap()
+                        });
+                    }
+                    next.push(Range { begin: r.begin, end: mid });
+                    next.push(Range { begin: mid, end: r.end });
+                }
+            }
+            current = next;
+        }
+        let points: Vec<Point3> = order.iter().map(|&p| geometry.points[p]).collect();
+        ClusterTree { depth, nodes, points, perm: order }
+    }
+
+    /// Node `(level, index)`.
+    #[inline]
+    pub fn node(&self, level: usize, index: usize) -> &Node {
+        &self.nodes[node_id(level, index)]
+    }
+
+    /// Number of nodes at `level`.
+    #[inline]
+    pub fn width(&self, level: usize) -> usize {
+        1 << level
+    }
+
+    /// Leaf nodes slice.
+    pub fn leaves(&self) -> &[Node] {
+        &self.nodes[node_id(self.depth, 0)..]
+    }
+
+    /// Apply the tree permutation to a vector in original ordering.
+    pub fn permute_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.perm.len());
+        self.perm.iter().map(|&p| x[p]).collect()
+    }
+
+    /// Inverse of [`permute_vec`]: tree ordering back to original ordering.
+    pub fn unpermute_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.perm.len());
+        let mut out = vec![0.0; x.len()];
+        for (t, &orig) in self.perm.iter().enumerate() {
+            out[orig] = x[t];
+        }
+        out
+    }
+
+    /// The paper's admissibility test between two nodes at the same level.
+    #[inline]
+    pub fn admissible(&self, a: &Node, b: &Node, eta: f64) -> bool {
+        if a.level == b.level && a.index == b.index {
+            return false;
+        }
+        let d = crate::geometry::dist(&a.bbox.center(), &b.bbox.center());
+        let r = a.bbox.radius().max(b.bbox.radius());
+        d >= eta * r && d > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Geometry;
+
+    #[test]
+    fn tree_structure_invariants() {
+        let g = Geometry::uniform_cube(1000, 21);
+        let t = ClusterTree::build(&g, 64);
+        // leaf sizes
+        for leaf in t.leaves() {
+            assert!(leaf.len() <= 64);
+            assert!(leaf.len() >= 32, "median splits keep leaves balanced");
+        }
+        // every level partitions [0, n)
+        for l in 0..=t.depth {
+            let mut covered = 0;
+            for i in 0..t.width(l) {
+                let node = t.node(l, i);
+                assert_eq!(node.begin, covered);
+                covered = node.end;
+            }
+            assert_eq!(covered, 1000);
+        }
+        // children partition parent
+        for l in 0..t.depth {
+            for i in 0..t.width(l) {
+                let p = t.node(l, i);
+                let c0 = t.node(l + 1, 2 * i);
+                let c1 = t.node(l + 1, 2 * i + 1);
+                assert_eq!(p.begin, c0.begin);
+                assert_eq!(c0.end, c1.begin);
+                assert_eq!(c1.end, p.end);
+            }
+        }
+    }
+
+    #[test]
+    fn perm_roundtrip() {
+        let g = Geometry::sphere_surface(257, 23);
+        let t = ClusterTree::build(&g, 32);
+        let x: Vec<f64> = (0..257).map(|i| i as f64).collect();
+        let y = t.permute_vec(&x);
+        let z = t.unpermute_vec(&y);
+        assert_eq!(x, z);
+        // permuted points match
+        for (tp, &orig) in t.perm.iter().enumerate() {
+            assert_eq!(t.points[tp], g.points[orig]);
+        }
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let g = Geometry::uniform_cube(10, 25);
+        let t = ClusterTree::build(&g, 16);
+        assert_eq!(t.depth, 0);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.node(0, 0).len(), 10);
+    }
+
+    #[test]
+    fn admissibility_eta_zero_is_weak() {
+        let g = Geometry::uniform_cube(256, 27);
+        let t = ClusterTree::build(&g, 32);
+        let l = t.depth;
+        for i in 0..t.width(l) {
+            for j in 0..t.width(l) {
+                let adm = t.admissible(t.node(l, i), t.node(l, j), 0.0);
+                assert_eq!(adm, i != j, "eta=0 must make all off-diagonal admissible");
+            }
+        }
+    }
+
+    #[test]
+    fn admissibility_monotone_in_eta() {
+        let g = Geometry::sphere_surface(512, 29);
+        let t = ClusterTree::build(&g, 32);
+        let l = t.depth;
+        let count = |eta: f64| -> usize {
+            let mut c = 0;
+            for i in 0..t.width(l) {
+                for j in 0..t.width(l) {
+                    if t.admissible(t.node(l, i), t.node(l, j), eta) {
+                        c += 1;
+                    }
+                }
+            }
+            c
+        };
+        let c0 = count(0.0);
+        let c1 = count(1.0);
+        let c2 = count(2.0);
+        assert!(c0 >= c1 && c1 >= c2, "admissible pairs shrink as eta grows");
+        assert!(c2 > 0);
+    }
+}

@@ -1,0 +1,106 @@
+//! The inherently parallel H²-ULV factorization (paper Algorithms 2 & 4)
+//! and forward/backward substitution (Algorithm 3 + the paper's novel
+//! parallel variant, §3.7).
+//!
+//! Factorization processes the tree level by level (leaves → root). Within
+//! a level every operation is a *batched* kernel launch with no
+//! dependencies between blocks:
+//!
+//! 1. **Sparsify** — `F_ij = U_iᵀ A_ij U_j` for every near pair (Figure 2);
+//! 2. **POTRF** — Cholesky of every diagonal redundant block `F_ii^RR`;
+//! 3. **TRSM** — panel solves `L(r)_ji = F_ji^RR L_iiᵀ⁻¹` and
+//!    `L(s)_ji = F_ji^SR L_iiᵀ⁻¹`;
+//! 4. **Schur** — the *single* trailing update `F_ii^SS -= L(s)_ii L(s)_iiᵀ`
+//!    (eq 21 proves every other trailing update vanishes under the
+//!    factorization basis — this is what removes the dependencies);
+//! 5. **Merge** — assemble parent-level near blocks from children `SS`
+//!    parts and far couplings `Ŝ`.
+//!
+//! The root block is factorized densely (Algorithm 2 line 22).
+
+pub mod factor;
+pub mod precond;
+pub mod solve;
+
+use crate::construct::NodeBasis;
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+
+pub use factor::factorize;
+pub use precond::pcg;
+
+/// Which substitution algorithm to run (paper §3.7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SubstMode {
+    /// Naive block-TRSV (Algorithm 3) — serial dependencies across boxes,
+    /// the paper's CPU substitution path.
+    Naive,
+    /// The paper's inherently parallel substitution: triangular solves
+    /// become matvecs through the single-hop structure of `L⁻¹` (eq 31).
+    #[default]
+    Parallel,
+}
+
+/// Factor data for one tree level.
+pub struct LevelFactor {
+    pub level: usize,
+    /// Shared bases of this level (clone of the H² bases).
+    pub bases: Vec<NodeBasis>,
+    /// `L(r)_ii`: Cholesky factors of the diagonal `RR` blocks.
+    pub chol_rr: Vec<Matrix>,
+    /// `L(r)_ji` for near pairs with `j > i` (lower panel, redundant rows).
+    pub lr: HashMap<(usize, usize), Matrix>,
+    /// `L(s)_ji` for *all* near pairs (skeleton rows are eliminated at the
+    /// next level, so they sit below every redundant row of this level).
+    pub ls: HashMap<(usize, usize), Matrix>,
+    /// Near pairs at this level.
+    pub near: Vec<(usize, usize)>,
+}
+
+/// The complete ULV factorization: per-level factors + the dense root
+/// factor. Self-contained (owns copies of the tree metadata needed by the
+/// solve).
+pub struct UlvFactor {
+    /// Levels in factorization order: `levels[0]` is the leaf level.
+    pub levels: Vec<LevelFactor>,
+    /// Cholesky factor of the merged root block.
+    pub root_l: Matrix,
+    /// Tree depth.
+    pub depth: usize,
+    /// `(begin, end)` point ranges of the leaf boxes.
+    pub leaf_ranges: Vec<(usize, usize)>,
+    /// Tree permutation (`perm[p]` = original index of tree point p).
+    pub perm: Vec<usize>,
+}
+
+impl UlvFactor {
+    /// Leaf-level width.
+    pub fn leaf_width(&self) -> usize {
+        self.leaf_ranges.len()
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Total stored factor entries (memory footprint diagnostics).
+    pub fn storage_entries(&self) -> usize {
+        let mut total = self.root_l.rows() * self.root_l.cols();
+        for lf in &self.levels {
+            for m in &lf.chol_rr {
+                total += m.rows() * m.cols();
+            }
+            for m in lf.lr.values() {
+                total += m.rows() * m.cols();
+            }
+            for m in lf.ls.values() {
+                total += m.rows() * m.cols();
+            }
+            for b in &lf.bases {
+                total += b.u.rows() * b.u.cols();
+            }
+        }
+        total
+    }
+}

@@ -1,0 +1,126 @@
+//! ULV-preconditioned conjugate gradients.
+//!
+//! The paper positions the factorization as "an essential part of the
+//! direct solver **or preconditioner**" (§3.7). At aggressive (low-rank /
+//! heavily sampled) configurations the ULV solve is cheap but only
+//! approximate; wrapping it as a CG preconditioner recovers full accuracy
+//! in a handful of iterations while keeping the O(N) per-iteration cost
+//! (H² matvec + ULV substitution).
+
+use super::{SubstMode, UlvFactor};
+use crate::batch::BatchExec;
+use crate::h2::H2Matrix;
+
+/// Outcome of a preconditioned-CG solve.
+#[derive(Debug, Clone)]
+pub struct PcgResult {
+    /// Solution in tree ordering.
+    pub x: Vec<f64>,
+    /// Iterations used.
+    pub iters: usize,
+    /// Final relative residual (w.r.t. the H² operator).
+    pub rel_residual: f64,
+}
+
+/// Solve `Â x = b` (tree ordering) by CG on the H² operator, preconditioned
+/// with the ULV factorization. `tol` is the relative residual target.
+pub fn pcg(
+    h2: &H2Matrix,
+    fac: &UlvFactor,
+    exec: &dyn BatchExec,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> PcgResult {
+    let n = b.len();
+    let norm_b = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = fac.solve_tree_order(&r, exec, SubstMode::Parallel);
+    let mut p = z.clone();
+    let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+    let mut iters = 0;
+    let mut rel = 1.0;
+    for it in 0..max_iters {
+        let ap = h2.matvec(&p);
+        let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if pap.abs() < 1e-300 {
+            break;
+        }
+        let alpha = rz / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        rel = r.iter().map(|v| v * v).sum::<f64>().sqrt() / norm_b;
+        iters = it + 1;
+        if rel < tol {
+            break;
+        }
+        z = fac.solve_tree_order(&r, exec, SubstMode::Parallel);
+        let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    PcgResult { x, iters, rel_residual: rel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::native::NativeBackend;
+    use crate::construct::H2Config;
+    use crate::geometry::Geometry;
+    use crate::kernels::KernelFn;
+    use crate::linalg::norms::rel_err_vec;
+    use crate::ulv::factorize;
+    use crate::util::Rng;
+
+    #[test]
+    fn pcg_converges_fast_with_ulv_preconditioner() {
+        // Aggressively sampled, low-rank construction: direct ULV solve is
+        // only ~1e-2 accurate; PCG polishes it to 1e-8 in a few iterations.
+        let n = 1024;
+        let g = Geometry::sphere_surface(n, 801);
+        let kern = KernelFn::laplace();
+        let cfg = H2Config {
+            leaf_size: 64,
+            max_rank: 16,
+            far_samples: 64,
+            near_samples: 48,
+            ..Default::default()
+        };
+        let h2 = crate::h2::H2Matrix::construct(&g, &kern, &cfg);
+        let fac = factorize(&h2, &NativeBackend::new());
+        let mut rng = Rng::new(1);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let bt = h2.tree.permute_vec(&b);
+        let res = pcg(&h2, &fac, &NativeBackend::new(), &bt, 1e-8, 30);
+        assert!(res.rel_residual < 1e-8, "PCG residual {}", res.rel_residual);
+        assert!(res.iters <= 15, "preconditioner too weak: {} iters", res.iters);
+        // And the polished solution really solves the H² system better
+        // than the direct ULV solve.
+        let direct = fac.solve_tree_order(&bt, &NativeBackend::new(), crate::ulv::SubstMode::Parallel);
+        let r_direct = h2.residual(&direct, &bt);
+        let r_pcg = h2.residual(&res.x, &bt);
+        assert!(r_pcg < 0.1 * r_direct, "pcg {r_pcg} vs direct {r_direct}");
+    }
+
+    #[test]
+    fn pcg_exact_rhs_zero_iterations_tolerance() {
+        let n = 256;
+        let g = Geometry::sphere_surface(n, 803);
+        let kern = KernelFn::laplace();
+        let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() };
+        let h2 = crate::h2::H2Matrix::construct(&g, &kern, &cfg);
+        let fac = factorize(&h2, &NativeBackend::new());
+        // b = Â x_true: PCG must recover x_true.
+        let x_true: Vec<f64> = (0..n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+        let b = h2.matvec(&x_true);
+        let res = pcg(&h2, &fac, &NativeBackend::new(), &b, 1e-10, 50);
+        assert!(rel_err_vec(&res.x, &x_true) < 1e-8);
+    }
+}

@@ -1,0 +1,61 @@
+//! Small utilities: PRNG, thread pool, hand-rolled property-test harness.
+//!
+//! The container has no offline access to `rand`, `rayon`, or `proptest`,
+//! so this module provides self-contained equivalents (documented in
+//! DESIGN.md §10).
+
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+pub use pool::{par_for, par_map};
+pub use rng::Rng;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Next power of two >= x (x >= 1).
+#[inline]
+pub fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+/// Integer log2 of a power of two.
+#[inline]
+pub fn ilog2(x: usize) -> u32 {
+    debug_assert!(x.is_power_of_two());
+    x.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(13, 8), 16);
+    }
+
+    #[test]
+    fn next_pow2_basic() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(4), 4);
+        assert_eq!(next_pow2(129), 256);
+    }
+
+    #[test]
+    fn ilog2_basic() {
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(8), 3);
+        assert_eq!(ilog2(1024), 10);
+    }
+}

@@ -1,0 +1,120 @@
+//! Data-parallel helpers over OS threads.
+//!
+//! `rayon` is unavailable offline, so batched native execution uses scoped
+//! `std::thread` fan-out. Work is split into contiguous chunks (one per
+//! worker) which is the right granularity for our batched-kernel workloads:
+//! each item is already a dense matrix operation, so per-item stealing is
+//! unnecessary.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (overridable with `H2ULV_THREADS`).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("H2ULV_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(i)` for every `i in 0..n`, in parallel across worker threads.
+///
+/// `f` must be `Sync` (called concurrently from many threads). Items are
+/// distributed by an atomic cursor over fixed-size chunks so mildly
+/// imbalanced workloads (variable block ranks) still level out.
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    // Chunked dynamic scheduling: grab `chunk` items at a time.
+    let chunk = (n / (workers * 4)).max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = out.as_mut_slice();
+        // SAFETY-free approach: use interior chunking via raw split.
+        // We avoid unsafe by collecting through a Mutex-free trick:
+        // give each worker disjoint indices through an atomic cursor and
+        // write through a raw pointer wrapper.
+        struct Ptr<T>(*mut Option<T>);
+        unsafe impl<T: Send> Sync for Ptr<T> {}
+        let ptr = Ptr(slots.as_mut_ptr());
+        let ptr_ref = &ptr;
+        par_for(n, move |i| {
+            let v = f(i);
+            // SAFETY: each index i is visited exactly once across all
+            // workers (atomic cursor in par_for), so writes are disjoint.
+            unsafe {
+                *ptr_ref.0.add(i) = Some(v);
+            }
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_all_once() {
+        let n = 1000;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_order() {
+        let out = par_map(257, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_for_empty_and_one() {
+        par_for(0, |_| panic!("should not run"));
+        let hit = AtomicU64::new(0);
+        par_for(1, |_| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,69 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` cannot be resolved offline in this container, so coordinator
+//! invariants are checked with this seeded random-case runner instead
+//! (DESIGN.md §8). No shrinking — failures print the case seed so they can
+//! be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. `gen` builds a case from an RNG;
+/// `prop` returns `Err(msg)` on violation.
+pub fn check<T: std::fmt::Debug, G, P>(cfg: &PropConfig, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(
+            &PropConfig { cases: 32, seed: 1 },
+            |r| r.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(
+            &PropConfig { cases: 64, seed: 2 },
+            |r| r.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Native vs PJRT backend parity: the full ULV pipeline must produce the
+//! same factorization and solution through both execution paths (the
+//! paper's CPU vs GPU implementations of one algorithm).
+
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::batch::BatchExec;
+use h2ulv::construct::H2Config;
+use h2ulv::geometry::Geometry;
+use h2ulv::h2::H2Matrix;
+use h2ulv::kernels::KernelFn;
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::runtime::PjrtBackend;
+use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::util::Rng;
+
+fn pjrt() -> Option<PjrtBackend> {
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(PjrtBackend::new(dir).unwrap())
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// Self-similar configuration: leaf = 2 * rank keeps every level's block
+/// shapes inside one artifact family (DESIGN.md §5).
+fn cfg() -> H2Config {
+    H2Config { leaf_size: 64, max_rank: 32, far_samples: 128, near_samples: 96, ..Default::default() }
+}
+
+#[test]
+fn factor_and_solve_parity_laplace_sphere() {
+    let Some(be) = pjrt() else { return };
+    let native = NativeBackend::new();
+    let g = Geometry::sphere_surface(1024, 301);
+    let k = KernelFn::laplace();
+    let h2 = H2Matrix::construct(&g, &k, &cfg());
+    let fac_n = factorize(&h2, &native);
+    let fac_p = factorize(&h2, &be);
+    // Factor data must agree (same math, different execution path).
+    for (lf_n, lf_p) in fac_n.levels.iter().zip(&fac_p.levels) {
+        for (a, b) in lf_n.chol_rr.iter().zip(&lf_p.chol_rr) {
+            let mut d = a.clone();
+            d.axpy(-1.0, b);
+            assert!(
+                h2ulv::linalg::norms::frob(&d) < 1e-8 * (1.0 + h2ulv::linalg::norms::frob(a)),
+                "chol_rr diverged at level {}",
+                lf_n.level
+            );
+        }
+    }
+    // Solutions must agree tightly.
+    let mut rng = Rng::new(7);
+    let b: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+    let x_n = fac_n.solve(&b, &native, SubstMode::Parallel);
+    let x_p = fac_p.solve(&b, &be, SubstMode::Parallel);
+    let err = rel_err_vec(&x_p, &x_n);
+    assert!(err < 1e-9, "backend solutions diverged: {err}");
+    assert!(
+        be.stats.launches.load(std::sync::atomic::Ordering::Relaxed) > 10,
+        "PJRT path must actually be exercised"
+    );
+}
+
+#[test]
+fn pjrt_solve_accuracy_vs_dense() {
+    let Some(be) = pjrt() else { return };
+    let g = Geometry::sphere_surface(512, 303);
+    let kern = KernelFn::yukawa();
+    let mut c = cfg();
+    c.far_samples = 0; // best-accuracy construction
+    let h2 = H2Matrix::construct(&g, &kern, &c);
+    let fac = factorize(&h2, &be);
+    let mut rng = Rng::new(9);
+    let b: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+    let x = fac.solve(&b, &be, SubstMode::Parallel);
+    let a = kern.dense(&g.points);
+    let want = h2ulv::linalg::lu::solve(&a, &b).unwrap();
+    let err = rel_err_vec(&x, &want);
+    assert!(err < 1e-3, "pjrt end-to-end accuracy: {err}");
+}
+
+#[test]
+fn pjrt_trace_records_batched_launches() {
+    let Some(be) = pjrt() else { return };
+    let be = be.with_tracer();
+    let g = Geometry::sphere_surface(512, 305);
+    let k = KernelFn::laplace();
+    let h2 = H2Matrix::construct(&g, &k, &cfg());
+    let _fac = factorize(&h2, &be);
+    let tracer = be.tracer.as_ref().unwrap();
+    let events = tracer.events();
+    assert!(!events.is_empty());
+    // The fig-12 property: launches are *batched* (mean batch > 1).
+    assert!(
+        tracer.mean_batch() > 1.5,
+        "expected batched launches, got mean batch {}",
+        tracer.mean_batch()
+    );
+    let kernels: std::collections::HashSet<_> = events.iter().map(|e| e.kernel).collect();
+    assert!(kernels.contains("POTRF(pjrt)"));
+    assert!(kernels.contains("GEMM2(pjrt)"));
+}

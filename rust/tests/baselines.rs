@@ -1,0 +1,114 @@
+//! Cross-solver integration: H²-ULV vs dense vs BLR vs HSS on the same
+//! problems — the comparisons behind paper Figures 18-20.
+
+use h2ulv::baselines::blr::{BlrConfig, BlrMatrix};
+use h2ulv::baselines::dense::DenseSolver;
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::construct::H2Config;
+use h2ulv::geometry::Geometry;
+use h2ulv::h2::H2Matrix;
+use h2ulv::kernels::KernelFn;
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::metrics::flops;
+use h2ulv::tree::ClusterTree;
+use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::util::Rng;
+
+#[test]
+fn all_solvers_agree_on_laplace_sphere() {
+    let n = 512;
+    let g = Geometry::sphere_surface(n, 601);
+    let kern = KernelFn::laplace();
+    let mut rng = Rng::new(1);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    // Oracle.
+    let dense = DenseSolver::factorize(&g.points, &kern).unwrap();
+    let x_dense = dense.solve(&b);
+
+    // H2-ULV.
+    let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() };
+    let h2 = H2Matrix::construct(&g, &kern, &cfg);
+    let fac = factorize(&h2, &NativeBackend::new());
+    let x_h2 = fac.solve(&b, &NativeBackend::new(), SubstMode::Parallel);
+    assert!(rel_err_vec(&x_h2, &x_dense) < 2e-3);
+
+    // BLR (needs the tree ordering; solve in tree coordinates).
+    let tree = ClusterTree::build(&g, 128);
+    let mut blr = BlrMatrix::build(&tree.points, &kern, &BlrConfig { rtol: 1e-9, ..Default::default() });
+    blr.factorize();
+    let bt = tree.permute_vec(&b);
+    let xt = blr.solve(&bt);
+    let x_blr = tree.unpermute_vec(&xt);
+    assert!(rel_err_vec(&x_blr, &x_dense) < 1e-4);
+}
+
+#[test]
+fn h2_beats_hss_in_accuracy_at_equal_rank() {
+    // Paper Figure 18's claim: at equal rank the H² (strong admissibility)
+    // solve is more accurate than HSS (eta = 0), because HSS is forced to
+    // compress touching blocks. Our separation is a consistent 2-4x rather
+    // than the paper's orders of magnitude (different ID details and
+    // smaller N — see EXPERIMENTS.md fig 18); the ordering is what we
+    // assert here, across two ranks.
+    let n = 2048;
+    let g = Geometry::sphere_surface(n, 603);
+    let kern = KernelFn::laplace();
+    let mut rng = Rng::new(3);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let dense = DenseSolver::factorize(&g.points, &kern).unwrap();
+    let x_dense = dense.solve(&b);
+
+    for rank in [48usize, 96] {
+        let mut errs = Vec::new();
+        for eta in [1.0, 0.0] {
+            let cfg = H2Config {
+                leaf_size: 256,
+                max_rank: rank,
+                far_samples: 0,
+                near_samples: 0,
+                eta,
+                ..Default::default()
+            };
+            let h2 = H2Matrix::construct(&g, &kern, &cfg);
+            let fac = factorize(&h2, &NativeBackend::new());
+            let x = fac.solve(&b, &NativeBackend::new(), SubstMode::Parallel);
+            errs.push(rel_err_vec(&x, &x_dense));
+        }
+        assert!(
+            errs[0] < 0.8 * errs[1],
+            "rank {rank}: H2 ({}) must beat HSS ({}) at equal rank",
+            errs[0],
+            errs[1]
+        );
+    }
+}
+
+#[test]
+fn h2_factorization_flops_scale_better_than_blr() {
+    // Paper Figure 20's complexity story: BLR is O(N²), H²-ULV is ~O(N).
+    let kern = KernelFn::laplace();
+    let mut h2_flops = Vec::new();
+    let mut blr_flops = Vec::new();
+    for n in [1024usize, 2048] {
+        let g = Geometry::sphere_surface(n, 605);
+        let cfg = H2Config { leaf_size: 64, max_rank: 24, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &kern, &cfg);
+        let before = flops::snapshot();
+        let _fac = factorize(&h2, &NativeBackend::new());
+        h2_flops.push(flops::delta(before, flops::snapshot()).factor as f64);
+
+        let tree = ClusterTree::build(&g, 128);
+        let mut blr = BlrMatrix::build(&tree.points, &kern, &BlrConfig::default());
+        let before = flops::snapshot();
+        blr.factorize();
+        blr_flops.push(flops::delta(before, flops::snapshot()).factor as f64);
+    }
+    let h2_ratio = h2_flops[1] / h2_flops[0];
+    let blr_ratio = blr_flops[1] / blr_flops[0];
+    assert!(
+        h2_ratio < blr_ratio,
+        "H2 growth {h2_ratio} must beat BLR growth {blr_ratio}"
+    );
+    assert!(h2_ratio < 3.0, "H2 should be near-linear, got {h2_ratio}");
+}

@@ -1,0 +1,97 @@
+//! Distributed runtime integration: P-rank SPMD factorize+solve must match
+//! the single-process pipeline, and the communication profile must show
+//! the paper's structural properties (§5).
+
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::construct::H2Config;
+use h2ulv::dist::{dist_solve_driver, NCCL_LIKE};
+use h2ulv::geometry::Geometry;
+use h2ulv::h2::H2Matrix;
+use h2ulv::kernels::KernelFn;
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::util::Rng;
+
+fn build(n: usize, seed: u64) -> H2Matrix {
+    let g = Geometry::sphere_surface(n, seed);
+    let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 128, ..Default::default() };
+    H2Matrix::construct(&g, &KernelFn::laplace(), &cfg)
+}
+
+#[test]
+fn dist_matches_serial_for_all_rank_counts() {
+    let h2 = build(1024, 701);
+    let fac = factorize(&h2, &NativeBackend::new());
+    let mut rng = Rng::new(1);
+    let b: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+    let want = fac.solve_tree_order(&b, &NativeBackend::new(), SubstMode::Parallel);
+    for p in [1usize, 2, 4, 8] {
+        let report = dist_solve_driver(&h2, p, &b, SubstMode::Parallel);
+        let err = rel_err_vec(&report.x, &want);
+        assert!(err < 1e-11, "p={p}: distributed diverged from serial: {err}");
+    }
+}
+
+#[test]
+fn single_rank_has_zero_comm() {
+    let h2 = build(512, 703);
+    let mut rng = Rng::new(3);
+    let b: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+    let report = dist_solve_driver(&h2, 1, &b, SubstMode::Parallel);
+    assert_eq!(report.factor_bytes, 0);
+    assert_eq!(report.subst_bytes, 0);
+}
+
+#[test]
+fn factorization_comm_independent_of_n() {
+    // Paper §5.1: "both the number of collective communication function
+    // calls and the message sizes are independent of the problem size N"
+    // (for fixed P, fixed leaf size, fixed rank).
+    let mut rng = Rng::new(5);
+    let mut bytes = Vec::new();
+    for n in [1024usize, 4096] {
+        let h2 = build(n, 705);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let report = dist_solve_driver(&h2, 4, &b, SubstMode::Parallel);
+        bytes.push(report.factor_bytes as f64);
+    }
+    // 4x problem size; factorization traffic should stay within ~2x
+    // (the merged-level block count at the top of the tree is fixed).
+    assert!(
+        bytes[1] < 2.5 * bytes[0],
+        "factor comm grew with N: {} -> {}",
+        bytes[0],
+        bytes[1]
+    );
+}
+
+#[test]
+fn flops_balance_across_ranks() {
+    let h2 = build(2048, 707);
+    let mut rng = Rng::new(7);
+    let b: Vec<f64> = (0..2048).map(|_| rng.normal()).collect();
+    let report = dist_solve_driver(&h2, 4, &b, SubstMode::Parallel);
+    let f: Vec<f64> = report.rank_flops.iter().map(|&(x, _)| x as f64).collect();
+    let max = f.iter().cloned().fold(0.0, f64::max);
+    let min = f.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        max / min < 2.0,
+        "factorization load imbalance: {min}..{max} ({:?})",
+        report.rank_flops
+    );
+}
+
+#[test]
+fn modeled_times_positive_and_ordered() {
+    let h2 = build(1024, 709);
+    let mut rng = Rng::new(9);
+    let b: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+    let report = dist_solve_driver(&h2, 4, &b, SubstMode::Parallel);
+    let tf = report.factor_time(&NCCL_LIKE);
+    let ts = report.subst_time(&NCCL_LIKE);
+    assert!(tf > 0.0 && ts > 0.0);
+    // Factorization does far more FLOPs than substitution.
+    let ff: u64 = report.rank_flops.iter().map(|&(x, _)| x).sum();
+    let fs: u64 = report.rank_flops.iter().map(|&(_, x)| x).sum();
+    assert!(ff > 5 * fs, "factor flops {ff} vs subst {fs}");
+}

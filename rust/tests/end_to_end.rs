@@ -1,0 +1,175 @@
+//! End-to-end integration: geometry -> construction -> ULV factorization ->
+//! substitution -> residual, across kernels, geometries, admissibilities.
+
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::construct::H2Config;
+use h2ulv::geometry::molecule::hemoglobin_like;
+use h2ulv::geometry::Geometry;
+use h2ulv::h2::H2Matrix;
+use h2ulv::kernels::KernelFn;
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::util::Rng;
+
+fn solve_and_check(g: &Geometry, kern: &KernelFn, cfg: &H2Config, tol: f64, seed: u64) {
+    let n = g.len();
+    let h2 = H2Matrix::construct(g, kern, cfg);
+    let fac = factorize(&h2, &NativeBackend::new());
+    let mut rng = Rng::new(seed);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let x = fac.solve(&b, &NativeBackend::new(), SubstMode::Parallel);
+    let a = kern.dense(&g.points);
+    let want = h2ulv::linalg::lu::solve(&a, &b).unwrap();
+    let err = rel_err_vec(&x, &want);
+    assert!(
+        err < tol,
+        "{} on {}: solution error {err} > {tol}",
+        kern.name,
+        g.name
+    );
+}
+
+#[test]
+fn laplace_sphere_full_pipeline() {
+    let g = Geometry::sphere_surface(1024, 401);
+    let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() };
+    solve_and_check(&g, &KernelFn::laplace(), &cfg, 2e-3, 1);
+}
+
+#[test]
+fn yukawa_molecule_full_pipeline() {
+    // The paper's second workload: Yukawa potential on a molecule surface.
+    let g = hemoglobin_like(0.06, 403); // ~900 points
+    let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() };
+    solve_and_check(&g, &KernelFn::yukawa(), &cfg, 2e-3, 3);
+}
+
+#[test]
+fn gaussian_cube_full_pipeline() {
+    let g = Geometry::uniform_cube(768, 405);
+    let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() };
+    solve_and_check(&g, &KernelFn::gaussian(), &cfg, 2e-3, 5);
+}
+
+#[test]
+fn admissibility_sweep_all_solve() {
+    let g = Geometry::sphere_surface(512, 407);
+    for eta in [0.0, 0.7, 1.5, 2.5] {
+        let cfg = H2Config {
+            leaf_size: 64,
+            max_rank: 32,
+            far_samples: 0,
+            eta,
+            ..Default::default()
+        };
+        // Accuracy degrades as eta shrinks (HSS limit compresses touching
+        // boxes); just require a sane solve everywhere.
+        let tol = if eta < 0.5 { 0.2 } else { 5e-3 };
+        solve_and_check(&g, &KernelFn::laplace(), &cfg, tol, 7);
+    }
+}
+
+#[test]
+fn sampled_construction_still_solves() {
+    let g = Geometry::sphere_surface(2048, 409);
+    let cfg = H2Config {
+        leaf_size: 64,
+        max_rank: 32,
+        far_samples: 128,
+        near_samples: 96,
+        ..Default::default()
+    };
+    solve_and_check(&g, &KernelFn::laplace(), &cfg, 2e-2, 9);
+}
+
+#[test]
+fn residual_sampled_agrees_with_direct() {
+    // The sampled residual estimator (used at large N) must agree with the
+    // dense residual at small N.
+    let g = Geometry::sphere_surface(600, 411);
+    let kern = KernelFn::laplace();
+    let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() };
+    let h2 = H2Matrix::construct(&g, &kern, &cfg);
+    let fac = factorize(&h2, &NativeBackend::new());
+    let mut rng = Rng::new(11);
+    let bt: Vec<f64> = (0..600).map(|_| rng.normal()).collect();
+    let xt = fac.solve_tree_order(&bt, &NativeBackend::new(), SubstMode::Parallel);
+    let sampled = h2.residual_sampled(&xt, &bt, 128, 13);
+    // Direct dense residual.
+    let a = kern.dense(&h2.tree.points);
+    let mut ax = vec![0.0; 600];
+    h2ulv::linalg::blas::gemv(1.0, &a, h2ulv::linalg::matrix::Trans::No, &xt, 0.0, &mut ax);
+    let direct = rel_err_vec(&ax, &bt);
+    assert!(
+        sampled < 10.0 * direct + 1e-12 && direct < 10.0 * sampled + 1e-12,
+        "sampled {sampled} vs direct {direct}"
+    );
+}
+
+#[test]
+fn gauss_seidel_prefactorization_matches_exact() {
+    // Paper §3.5: 1-2 Gauss-Seidel sweeps suffice for the pre-factorization.
+    let g = Geometry::sphere_surface(512, 413);
+    let kern = KernelFn::laplace();
+    let mut errs = Vec::new();
+    for gs in [0usize, 2] {
+        let cfg = H2Config {
+            leaf_size: 64,
+            max_rank: 32,
+            far_samples: 0,
+            gauss_seidel_iters: gs,
+            ..Default::default()
+        };
+        let h2 = H2Matrix::construct(&g, &kern, &cfg);
+        let fac = factorize(&h2, &NativeBackend::new());
+        let mut rng = Rng::new(15);
+        let b: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+        let x = fac.solve(&b, &NativeBackend::new(), SubstMode::Parallel);
+        let a = kern.dense(&g.points);
+        let want = h2ulv::linalg::lu::solve(&a, &b).unwrap();
+        errs.push(rel_err_vec(&x, &want));
+    }
+    // GS-based construction must be in the same accuracy class as exact.
+    assert!(errs[1] < 10.0 * errs[0] + 1e-6, "exact {} vs GS {}", errs[0], errs[1]);
+}
+
+#[test]
+fn factorization_basis_ablation_suppresses_skipped_updates() {
+    // The paper's central design point (eq 21): with the factorization
+    // basis folded into the shared basis, the trailing updates the ULV
+    // factorization *skips* are negligible. We measure that directly as
+    // the residual of the ULV solve against the H² reconstruction Â
+    // (naive substitution inverts the computed factor exactly, so this
+    // residual *is* the skipped-update error). Note the trade-off: at a
+    // fixed rank budget the near-field content costs some far-field
+    // accuracy, so plain solution error can favor either variant — the
+    // paper's claim is specifically about the skip term.
+    let g = Geometry::sphere_surface(512, 415);
+    let kern = KernelFn::laplace();
+    let mut rng = Rng::new(17);
+    let b: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+    let mut skip = Vec::new();
+    for fb in [true, false] {
+        let cfg = H2Config {
+            leaf_size: 64,
+            max_rank: 48,
+            far_samples: 0,
+            near_samples: 0,
+            factorization_basis: fb,
+            ..Default::default()
+        };
+        let h2 = H2Matrix::construct(&g, &kern, &cfg);
+        let fac = factorize(&h2, &NativeBackend::new());
+        let x = fac.solve_tree_order(&b, &NativeBackend::new(), SubstMode::Naive);
+        let rec = h2.reconstruct_dense();
+        let mut ax = vec![0.0; 512];
+        h2ulv::linalg::blas::gemv(1.0, &rec, h2ulv::linalg::matrix::Trans::No, &x, 0.0, &mut ax);
+        skip.push(rel_err_vec(&ax, &b));
+    }
+    assert!(
+        skip[0] < 0.25 * skip[1],
+        "factorization basis must suppress skipped updates: with={} without={}",
+        skip[0],
+        skip[1]
+    );
+}
