@@ -1,52 +1,57 @@
-//! End-to-end driver (DESIGN.md §"End-to-end validation"): the full
-//! three-layer stack on the paper's first workload — 3-D Laplace on a
-//! sphere surface — exercising construction, the **PJRT backend running
-//! the AOT JAX/Pallas artifacts**, both substitution modes, and an O(N)
-//! complexity check across problem sizes. Results land in EXPERIMENTS.md.
+//! End-to-end driver (DESIGN.md §"End-to-end validation"): the full stack
+//! on the paper's first workload — 3-D Laplace on a sphere surface — now
+//! through the [`H2Solver`] facade: native and PJRT backends, both
+//! substitution modes, and an O(N) complexity check across problem sizes.
+//! Results land in EXPERIMENTS.md.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example laplace_sphere
 //! ```
 
-use h2ulv::batch::native::NativeBackend;
-use h2ulv::construct::H2Config;
-use h2ulv::geometry::Geometry;
-use h2ulv::h2::H2Matrix;
-use h2ulv::kernels::KernelFn;
-use h2ulv::metrics::{flops, timer::timed};
-use h2ulv::runtime::PjrtBackend;
-use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::prelude::*;
 use h2ulv::util::Rng;
 
 fn main() {
     let kernel = KernelFn::laplace();
     let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 128, ..Default::default() };
-    let pjrt = PjrtBackend::new(std::path::Path::new("artifacts")).ok();
-    if pjrt.is_none() {
-        eprintln!("NOTE: artifacts/ missing — run `make artifacts` for the PJRT path.");
-    }
+    let mut pjrt_warned = false;
     println!("N, construct_s, factor_native_s, factor_pjrt_s, gflops_native, subst_par_s, subst_naive_s, residual");
     let mut prev_time = None;
     for n in [2048usize, 4096, 8192, 16384] {
         let g = Geometry::sphere_surface(n, 1);
-        let (h2, t_c) = timed(|| H2Matrix::construct(&g, &kernel, &cfg));
-        let native = NativeBackend::new();
-        let before = flops::snapshot();
-        let (fac, t_f) = timed(|| factorize(&h2, &native));
-        let fl = flops::delta(before, flops::snapshot()).factor;
-        let t_fp = match &pjrt {
-            Some(be) => timed(|| factorize(&h2, be)).1,
-            None => f64::NAN,
+        let solver = H2SolverBuilder::new(g.clone(), kernel.clone())
+            .config(cfg.clone())
+            .build()
+            .expect("well-formed problem");
+        let t_c = solver.stats().construct_time;
+        let t_f = solver.stats().factor_time;
+        let fl = solver.stats().factor_flops;
+        // PJRT column: built separately; NaN when artifacts are missing.
+        let t_fp = match H2SolverBuilder::new(g, kernel.clone())
+            .config(cfg.clone())
+            .backend(BackendSpec::pjrt())
+            .residual_samples(0)
+            .build()
+        {
+            Ok(ps) => ps.stats().factor_time,
+            Err(e) => {
+                if !pjrt_warned {
+                    eprintln!("NOTE: pjrt backend unavailable ({e}); run `make artifacts`.");
+                    pjrt_warned = true;
+                }
+                f64::NAN
+            }
         };
         let mut rng = Rng::new(5);
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let bt = h2.tree.permute_vec(&b);
-        let (x, t_sp) = timed(|| fac.solve_tree_order(&bt, &native, SubstMode::Parallel));
-        let (_, t_sn) = timed(|| fac.solve_tree_order(&bt, &native, SubstMode::Naive));
-        let resid = h2.residual_sampled(&x, &bt, 128, 9);
+        let rep_par = solver.solve(&b).expect("rhs matches");
+        let rep_naive = solver.solve_with(&b, SubstMode::Naive).expect("rhs matches");
+        let resid = rep_par.residual.unwrap_or(f64::NAN);
         println!(
-            "{n}, {t_c:.3}, {t_f:.3}, {t_fp:.3}, {:.2}, {t_sp:.4}, {t_sn:.4}, {resid:.2e}",
-            fl as f64 / t_f / 1e9
+            "{n}, {t_c:.3}, {t_f:.3}, {t_fp:.3}, {:.2}, {:.4}, {:.4}, {resid:.2e}",
+            fl as f64 / t_f / 1e9,
+            rep_par.subst_time,
+            rep_naive.subst_time
         );
         // O(N) check: doubling N should scale time by ~2, not 4+.
         if let Some(prev) = prev_time {
@@ -61,13 +66,6 @@ fn main() {
         // with depth (the paper uses adaptive ranks to pin accuracy; our
         // artifact families fix leaf=2*rank). Require sane accuracy only.
         assert!(resid < 1e-1, "residual {resid} too large at N={n}");
-    }
-    if let Some(be) = &pjrt {
-        println!(
-            "\npjrt launches: {}, fallbacks: {}",
-            be.stats.launches.load(std::sync::atomic::Ordering::Relaxed),
-            be.stats.fallbacks.load(std::sync::atomic::Ordering::Relaxed)
-        );
     }
     println!("laplace_sphere end-to-end OK");
 }

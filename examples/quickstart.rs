@@ -1,49 +1,70 @@
-//! Quickstart: build an H²-matrix over a sphere, factorize with the
-//! inherently parallel ULV scheme, solve, and verify the residual.
+//! Quickstart: describe the problem, build an [`H2Solver`] session, solve,
+//! and read the report — no permutation bookkeeping, no free-function
+//! factorize, no panics on bad input.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use h2ulv::batch::native::NativeBackend;
-use h2ulv::construct::H2Config;
-use h2ulv::geometry::Geometry;
-use h2ulv::h2::H2Matrix;
-use h2ulv::kernels::KernelFn;
-use h2ulv::ulv::{factorize, SubstMode};
+use h2ulv::prelude::*;
 use h2ulv::util::Rng;
 
 fn main() {
     let n = 4096;
-    // 1. Geometry + kernel: 3-D Laplace on a sphere surface (paper eq 35).
+    // 1. Problem description: 3-D Laplace on a sphere surface (paper eq 35).
     let geometry = Geometry::sphere_surface(n, 42);
     let kernel = KernelFn::laplace();
+    let config = H2Config { leaf_size: 64, max_rank: 32, eta: 1.0, ..Default::default() };
 
-    // 2. H² construction with the factorization basis (Algorithm 1).
-    let cfg = H2Config { leaf_size: 64, max_rank: 32, eta: 1.0, ..Default::default() };
-    let h2 = H2Matrix::construct(&geometry, &kernel, &cfg);
+    // 2. One build() runs H² construction (Algorithm 1) and the inherently
+    //    parallel ULV factorization (Algorithms 2/4) on the chosen backend.
+    let solver = H2SolverBuilder::new(geometry, kernel)
+        .config(config)
+        .backend(BackendSpec::Native)
+        .subst_mode(SubstMode::Parallel)
+        .build()
+        .expect("quickstart problem is well-formed");
+    let stats = solver.stats();
     println!(
-        "H² built: N={n}, depth={}, storage {:.1} MB vs dense {:.1} MB",
-        h2.tree.depth,
-        h2.storage_entries() as f64 * 8.0 / 1e6,
-        (n * n) as f64 * 8.0 / 1e6
+        "H² built: N={n}, depth={}, storage {:.1} MB vs dense {:.1} MB, \
+         construct {:.3}s, factorize {:.3}s",
+        stats.depth,
+        stats.h2_entries as f64 * 8.0 / 1e6,
+        (n * n) as f64 * 8.0 / 1e6,
+        stats.construct_time,
+        stats.factor_time
     );
 
-    // 3. ULV factorization (Algorithm 2/4) — every level is batched,
-    //    dependency-free work.
-    let backend = NativeBackend::new();
-    let factor = factorize(&h2, &backend);
-
-    // 4. Inherently parallel forward/backward substitution (paper §3.7).
+    // 3. Solve in the caller's point ordering; the report carries a sampled
+    //    exact-kernel residual.
     let mut rng = Rng::new(7);
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let x = factor.solve(&b, &backend, SubstMode::Parallel);
-
-    // 5. Verify with a sampled exact-kernel residual.
-    let bt = h2.tree.permute_vec(&b);
-    let xt = h2.tree.permute_vec(&x);
-    let resid = h2.residual_sampled(&xt, &bt, 256, 3);
-    println!("sampled residual |Ax-b|/|b| = {resid:.3e}");
+    let report = solver.solve(&b).expect("rhs length matches N");
+    let resid = report.residual.expect("residual sampling enabled by default");
+    println!(
+        "solved[{}/{:?}] in {:.4}s, sampled residual |Ax-b|/|b| = {resid:.3e}",
+        report.backend, report.subst_mode, report.subst_time
+    );
     assert!(resid < 1e-2, "quickstart residual too large");
+
+    // 4. Malformed input is a typed error, not a panic.
+    let wrong = vec![0.0; n - 1];
+    match solver.solve(&wrong) {
+        Err(H2Error::DimensionMismatch { expected, got }) => {
+            println!("wrong-length RHS rejected: expected {expected}, got {got}");
+        }
+        other => panic!("expected DimensionMismatch, got {other:?}"),
+    }
+
+    // 5. The same factorization serves many right-hand sides.
+    let rhs: Vec<Vec<f64>> = (0..3)
+        .map(|s| {
+            let mut r = Rng::new(100 + s);
+            (0..n).map(|_| r.normal()).collect()
+        })
+        .collect();
+    let reports = solver.solve_many(&rhs).expect("all rhs lengths match");
+    println!("solve_many: {} right-hand sides reused one factorization", reports.len());
+
     println!("quickstart OK");
 }

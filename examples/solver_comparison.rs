@@ -8,15 +8,10 @@
 
 use h2ulv::baselines::blr::{BlrConfig, BlrMatrix};
 use h2ulv::baselines::dense::DenseSolver;
-use h2ulv::batch::native::NativeBackend;
-use h2ulv::construct::H2Config;
-use h2ulv::geometry::Geometry;
-use h2ulv::h2::H2Matrix;
-use h2ulv::kernels::KernelFn;
 use h2ulv::linalg::norms::rel_err_vec;
 use h2ulv::metrics::{flops, timer::timed};
+use h2ulv::prelude::*;
 use h2ulv::tree::ClusterTree;
-use h2ulv::ulv::{factorize, SubstMode};
 use h2ulv::util::Rng;
 
 fn main() {
@@ -50,7 +45,7 @@ fn main() {
         rel_err_vec(&x_blr, &x_dense)
     );
 
-    // HSS (eta = 0) and H² (eta = 1) with the same code.
+    // HSS (eta = 0) and H² (eta = 1) through the same facade.
     for (name, eta) in [("hss", 0.0), ("h2ulv", 1.0)] {
         let cfg = H2Config {
             leaf_size: 256,
@@ -60,16 +55,18 @@ fn main() {
             eta,
             ..Default::default()
         };
-        let h2 = H2Matrix::construct(&g, &kernel, &cfg);
-        let backend = NativeBackend::new();
-        let before = flops::snapshot();
-        let (fac, t_f) = timed(|| factorize(&h2, &backend));
-        let ffl = flops::delta(before, flops::snapshot()).factor;
-        let (x, t_s) = timed(|| fac.solve(&b, &backend, SubstMode::Parallel));
+        let solver = H2SolverBuilder::new(g.clone(), kernel.clone())
+            .config(cfg)
+            .residual_samples(0)
+            .build()
+            .expect("well-formed problem");
+        let rep = solver.solve(&b).expect("rhs matches");
         println!(
-            "{name}, {t_f:.3}, {t_s:.4}, {:.2}, {:.2e}",
-            ffl as f64 / 1e9,
-            rel_err_vec(&x, &x_dense)
+            "{name}, {:.3}, {:.4}, {:.2}, {:.2e}",
+            solver.stats().factor_time,
+            rep.subst_time,
+            solver.stats().factor_flops as f64 / 1e9,
+            rel_err_vec(&rep.x, &x_dense)
         );
     }
     println!("\nsolver_comparison OK");

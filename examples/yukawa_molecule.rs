@@ -1,17 +1,14 @@
 //! The paper's second workload (§6.4): Yukawa potential on (synthetic)
-//! hemoglobin-like molecule surfaces, solved with the distributed runtime
-//! — strong + weak scaling in one run, with communication accounting.
+//! hemoglobin-like molecule surfaces, solved through the facade's
+//! simulated distributed runtime — strong scaling with communication
+//! accounting, all permutation handled inside [`H2Solver`].
 //!
 //! ```bash
 //! cargo run --release --example yukawa_molecule
 //! ```
 
-use h2ulv::construct::H2Config;
-use h2ulv::dist::{dist_solve_driver, NCCL_LIKE};
 use h2ulv::geometry::molecule::hemoglobin_like;
-use h2ulv::h2::H2Matrix;
-use h2ulv::kernels::KernelFn;
-use h2ulv::ulv::SubstMode;
+use h2ulv::prelude::*;
 use h2ulv::util::Rng;
 
 fn main() {
@@ -24,29 +21,32 @@ fn main() {
     let copies = n / base.len() + 1;
     let g = base.duplicate_lattice(copies, 6.0).truncated(n);
     println!("geometry: {} ({} points)", g.name, g.len());
-    let h2 = H2Matrix::construct(&g, &kernel, &cfg);
+    let solver = H2SolverBuilder::new(g, kernel)
+        .config(cfg)
+        .residual_samples(128)
+        .build()
+        .expect("well-formed problem");
     let mut rng = Rng::new(3);
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let bt = h2.tree.permute_vec(&b);
 
     println!("\nstrong scaling (N={n}):");
     println!("P, factor_s, subst_s, factor_comm_KB, subst_comm_KB, residual");
     let mut x1: Option<Vec<f64>> = None;
     for p in [1usize, 2, 4, 8] {
-        let report = dist_solve_driver(&h2, p, &bt, SubstMode::Parallel);
-        let resid = h2.residual_sampled(&report.x, &bt, 128, 7);
+        let rep = solver.solve_dist(&b, p).expect("rhs matches");
+        let resid = rep.residual.unwrap_or(f64::NAN);
         println!(
             "{p}, {:.4}, {:.4}, {:.1}, {:.1}, {resid:.2e}",
-            report.factor_time(&NCCL_LIKE),
-            report.subst_time(&NCCL_LIKE),
-            report.factor_bytes as f64 / 1e3,
-            report.subst_bytes as f64 / 1e3
+            rep.factor_time,
+            rep.subst_time,
+            rep.factor_bytes as f64 / 1e3,
+            rep.subst_bytes as f64 / 1e3
         );
         // All rank counts must produce the same solution.
         match &x1 {
-            None => x1 = Some(report.x),
+            None => x1 = Some(rep.x),
             Some(ref_x) => {
-                let err = h2ulv::linalg::norms::rel_err_vec(&report.x, ref_x);
+                let err = h2ulv::linalg::norms::rel_err_vec(&rep.x, ref_x);
                 assert!(err < 1e-10, "P={p} diverged: {err}");
             }
         }

@@ -2,23 +2,19 @@
 //!
 //! ```text
 //! h2ulv solve   [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-//!               [--eta E] [--backend native|pjrt] [--subst parallel|naive]
-//!               [--ranks P]
+//!               [--eta E] [--backend native|pjrt|serial]
+//!               [--subst parallel|naive] [--ranks P]
 //! h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
 //! h2ulv figures [--full] [--out DIR]
 //! h2ulv info
 //! ```
 
-use crate::batch::native::NativeBackend;
-use crate::batch::BatchExec;
 use crate::construct::H2Config;
-use crate::dist::{dist_solve_driver, NCCL_LIKE};
 use crate::figures::{self, Scale};
 use crate::geometry::{molecule, Geometry};
-use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
-use crate::metrics::{flops, timer::timed};
-use crate::ulv::{factorize, SubstMode};
+use crate::solver::{BackendSpec, H2Error, H2SolverBuilder};
+use crate::ulv::SubstMode;
 use crate::util::Rng;
 
 /// Parsed flag map: `--key value` pairs plus positional args.
@@ -66,8 +62,8 @@ const USAGE: &str = "h2ulv — inherently parallel H²-ULV dense solver (Ma & Yo
 USAGE:
   h2ulv solve   [--n N] [--kernel laplace|yukawa|gaussian|matern32]
                 [--geometry sphere|cube|molecule] [--rank R] [--leaf L]
-                [--eta E] [--backend native|pjrt] [--subst parallel|naive]
-                [--ranks P] [--seed S]
+                [--eta E] [--backend native|pjrt|serial]
+                [--subst parallel|naive] [--ranks P] [--seed S]
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
   h2ulv info
@@ -123,15 +119,49 @@ fn cmd_solve(args: &Args) -> i32 {
         Some("naive") => SubstMode::Naive,
         _ => SubstMode::Parallel,
     };
+    let spec = match args.get("backend") {
+        None => BackendSpec::Native,
+        Some(name) => match BackendSpec::by_name(name) {
+            Some(s) => s,
+            None => {
+                eprintln!("unknown backend: {name}\n{USAGE}");
+                return 2;
+            }
+        },
+    };
     println!(
         "h2ulv solve: N={n} kernel={} geometry={} leaf={} rank={} eta={}",
         kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
     );
 
-    let (h2, t_construct) = timed(|| H2Matrix::construct(&g, &kernel, &cfg));
+    let builder = H2SolverBuilder::new(g, kernel)
+        .config(cfg)
+        .backend(spec)
+        .subst_mode(subst)
+        .residual_samples(128);
+    // PJRT artifacts missing is a soft failure on the CLI: warn + native.
+    let solver = match builder.clone().build() {
+        Ok(s) => s,
+        Err(H2Error::BackendUnavailable { backend, reason }) => {
+            eprintln!("{backend} backend unavailable ({reason}); falling back to native.");
+            match builder.backend(BackendSpec::Native).build() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("h2ulv solve: {e}");
+                    return 1;
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("h2ulv solve: {e}");
+            return 1;
+        }
+    };
+    let stats = solver.stats();
     println!(
-        "construct: {t_construct:.3}s  storage {:.1} MB (dense would be {:.1} MB)",
-        h2.storage_entries() as f64 * 8.0 / 1e6,
+        "construct: {:.3}s  storage {:.1} MB (dense would be {:.1} MB)",
+        stats.construct_time,
+        stats.h2_entries as f64 * 8.0 / 1e6,
         (n * n) as f64 * 8.0 / 1e6
     );
 
@@ -140,45 +170,43 @@ fn cmd_solve(args: &Args) -> i32 {
 
     let ranks = args.usize_or("ranks", 1);
     if ranks > 1 {
-        let bt = h2.tree.permute_vec(&b);
-        let report = dist_solve_driver(&h2, ranks, &bt, subst);
-        let resid = h2.residual_sampled(&report.x, &bt, 128, 3);
-        println!(
-            "distributed P={ranks}: factor {:.3}s subst {:.3}s (modeled, NCCL-like), comm {:.1} KB, residual {resid:.2e}",
-            report.factor_time(&NCCL_LIKE),
-            report.subst_time(&NCCL_LIKE),
-            (report.factor_bytes + report.subst_bytes) as f64 / 1e3
-        );
-        return 0;
+        match solver.solve_dist(&b, ranks) {
+            Ok(rep) => {
+                println!(
+                    "distributed P={}: factor {:.3}s subst {:.3}s (modeled, NCCL-like), comm {:.1} KB, residual {:.2e}",
+                    rep.ranks,
+                    rep.factor_time,
+                    rep.subst_time,
+                    (rep.factor_bytes + rep.subst_bytes) as f64 / 1e3,
+                    rep.residual.unwrap_or(f64::NAN)
+                );
+                return 0;
+            }
+            Err(e) => {
+                eprintln!("h2ulv solve: {e}");
+                return 1;
+            }
+        }
     }
 
-    let backend: Box<dyn BatchExec> = match args.get("backend") {
-        Some("pjrt") => match crate::runtime::PjrtBackend::new(std::path::Path::new("artifacts")) {
-            Ok(be) => Box::new(be),
-            Err(e) => {
-                eprintln!(
-                    "pjrt backend unavailable ({e}); run `make artifacts`. Falling back to native."
-                );
-                Box::new(NativeBackend::new())
-            }
-        },
-        _ => Box::new(NativeBackend::new()),
-    };
-    let before = flops::snapshot();
-    let (fac, t_factor) = timed(|| factorize(&h2, backend.as_ref()));
-    let f_flops = flops::delta(before, flops::snapshot()).factor;
-    let bt = h2.tree.permute_vec(&b);
-    let (x, t_subst) = timed(|| fac.solve_tree_order(&bt, backend.as_ref(), subst));
-    let resid = h2.residual_sampled(&x, &bt, 128, 3);
     println!(
-        "factorize[{}]: {t_factor:.3}s ({:.2} GFLOP, {:.2} GFLOP/s)",
-        backend.name(),
-        f_flops as f64 / 1e9,
-        f_flops as f64 / t_factor / 1e9
+        "factorize[{}]: {:.3}s ({:.2} GFLOP, {:.2} GFLOP/s)",
+        solver.backend_name(),
+        stats.factor_time,
+        stats.factor_flops as f64 / 1e9,
+        stats.factor_flops as f64 / stats.factor_time / 1e9
     );
-    println!("substitute[{subst:?}]: {t_subst:.4}s");
-    println!("sampled residual |Ax-b|/|b| = {resid:.3e}");
-    0
+    match solver.solve(&b) {
+        Ok(rep) => {
+            println!("substitute[{subst:?}]: {:.4}s", rep.subst_time);
+            println!("sampled residual |Ax-b|/|b| = {:.3e}", rep.residual.unwrap_or(f64::NAN));
+            0
+        }
+        Err(e) => {
+            eprintln!("h2ulv solve: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_figure(args: &Args) -> i32 {

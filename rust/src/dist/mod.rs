@@ -1,0 +1,265 @@
+//! Simulated distributed-memory runtime with NCCL-like collectives
+//! (paper §5).
+//!
+//! SPMD execution over `P` ranks is *simulated*: the numerical pipeline
+//! runs exactly the same math as the single-process path (so every rank
+//! count produces bit-identical solutions — asserted in
+//! `tests/distributed.rs`), while communication volume and the per-rank
+//! FLOP split are modeled from the H² structure the way the paper's NCCL
+//! implementation communicates:
+//!
+//! * every rank owns a contiguous range of leaf subtrees — the 1-D
+//!   distribution enabled by the tree-ordered points (paper §5);
+//! * within a *distributed* level (width ≥ P) the inherently parallel
+//!   factorization has no cross-box dependencies, so it needs **no**
+//!   communication there at all;
+//! * the top `log2 P` levels are computed redundantly on every rank after
+//!   an allgather whose message sizes depend only on leaf size and rank —
+//!   *not* on N (the paper's §5.1 claim: "both the number of collective
+//!   communication function calls and the message sizes are independent of
+//!   the problem size N");
+//! * substitution additionally exchanges neighbor segments at distributed
+//!   levels — the O(P) neighbor-communication regime of Figure 22.
+//!
+//! Modeled wall times combine the per-rank FLOP split with an α-β
+//! (latency/bandwidth) collective cost model ([`CommModel`], [`NCCL_LIKE`]).
+
+use crate::batch::native::NativeBackend;
+use crate::batch::BatchExec;
+use crate::h2::H2Matrix;
+use crate::metrics::flops;
+use crate::ulv::{factorize, SubstMode, UlvFactor};
+use std::collections::HashSet;
+
+/// α-β (latency/bandwidth) communication cost model plus a modeled
+/// per-rank dense compute rate for converting FLOP splits into times.
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    /// Seconds per communication call (α).
+    pub latency_s: f64,
+    /// Link bandwidth in GB/s (1/β).
+    pub gb_per_s: f64,
+    /// Modeled per-rank compute rate in FLOP/s.
+    pub flop_per_s: f64,
+}
+
+impl CommModel {
+    /// Modeled wall time of `ops` communication calls moving `bytes` bytes.
+    pub fn cost(&self, ops: u64, bytes: u64) -> f64 {
+        ops as f64 * self.latency_s + bytes as f64 / (self.gb_per_s * 1e9)
+    }
+}
+
+/// NCCL-over-NVLink-like constants (the paper's A100 platform class).
+pub const NCCL_LIKE: CommModel =
+    CommModel { latency_s: 12e-6, gb_per_s: 80.0, flop_per_s: 2.0e12 };
+
+/// Result of a simulated distributed factorize + solve.
+pub struct DistReport {
+    /// Solution in tree ordering (same ordering as the input right-hand
+    /// side), identical across rank counts.
+    pub x: Vec<f64>,
+    /// Effective rank count used (power of two, clamped to the leaf width).
+    pub ranks: usize,
+    /// Factorization communication volume in bytes.
+    pub factor_bytes: u64,
+    /// Factorization collective-call count.
+    pub factor_ops: u64,
+    /// Substitution communication volume in bytes.
+    pub subst_bytes: u64,
+    /// Substitution communication-call count.
+    pub subst_ops: u64,
+    /// Per-rank `(factorization, substitution)` FLOPs.
+    pub rank_flops: Vec<(u64, u64)>,
+}
+
+impl DistReport {
+    /// Modeled factorization time: slowest rank's compute + communication.
+    pub fn factor_time(&self, model: &CommModel) -> f64 {
+        let peak = self.rank_flops.iter().map(|&(f, _)| f).max().unwrap_or(0);
+        peak as f64 / model.flop_per_s + model.cost(self.factor_ops, self.factor_bytes)
+    }
+
+    /// Modeled substitution time: slowest rank's compute + communication.
+    pub fn subst_time(&self, model: &CommModel) -> f64 {
+        let peak = self.rank_flops.iter().map(|&(_, s)| s).max().unwrap_or(0);
+        peak as f64 / model.flop_per_s + model.cost(self.subst_ops, self.subst_bytes)
+    }
+}
+
+/// Owner rank of box `i` at a level of `width` boxes (`width >= p`,
+/// contiguous subtree distribution).
+#[inline]
+fn owner(i: usize, width: usize, p: usize) -> usize {
+    i * p / width
+}
+
+/// Run the simulated P-rank SPMD factorize + solve.
+///
+/// `b` is the right-hand side in **tree** ordering; the returned solution
+/// is in tree ordering too (the [`crate::solver::H2Solver`] facade handles
+/// the permutation for callers working in original point order). `ranks`
+/// is rounded down to a power of two and clamped to one rank per leaf.
+///
+/// Factorizes `h2` on a fresh native backend; callers that already hold a
+/// ULV factor (notably [`crate::solver::H2Solver::solve_dist`]) should use
+/// [`dist_solve_driver_with`] to avoid the redundant factorization.
+pub fn dist_solve_driver(
+    h2: &H2Matrix,
+    ranks: usize,
+    b: &[f64],
+    mode: SubstMode,
+) -> DistReport {
+    let exec = NativeBackend::new();
+    let fac = factorize(h2, &exec);
+    dist_solve_driver_with(h2, &fac, &exec, ranks, b, mode)
+}
+
+/// [`dist_solve_driver`] over an existing ULV factor and backend: only the
+/// substitution runs numerically; factorization cost is *modeled* from the
+/// factor's block shapes.
+pub fn dist_solve_driver_with(
+    h2: &H2Matrix,
+    fac: &UlvFactor,
+    exec: &dyn BatchExec,
+    ranks: usize,
+    b: &[f64],
+    mode: SubstMode,
+) -> DistReport {
+    let leaf_width = 1usize << h2.tree.depth;
+    let mut p = 1usize;
+    while p * 2 <= ranks.max(1) && p * 2 <= leaf_width {
+        p *= 2;
+    }
+
+    // The numerical pipeline: identical math for every rank count.
+    let x = fac.solve_tree_order(b, exec, mode);
+
+    let mut rank_flops = vec![(0u64, 0u64); p];
+    let mut factor_bytes = 0u64;
+    let mut factor_ops = 0u64;
+    let mut subst_bytes = 0u64;
+    let mut subst_ops = 0u64;
+
+    for lf in &fac.levels {
+        let width = 1usize << lf.level;
+        let distributed = width >= p;
+
+        // Per-box compute estimates from the factor's actual block shapes.
+        let mut box_factor = vec![0u64; width];
+        let mut box_subst = vec![0u64; width];
+        for i in 0..width {
+            let nb = &lf.bases[i];
+            let ndof = nb.u.rows();
+            box_factor[i] += flops::potrf_flops(nb.nred());
+            if nb.rank > 0 && nb.nred() > 0 {
+                box_factor[i] += flops::gemm_flops(nb.rank, nb.rank, nb.nred());
+            }
+            // Basis applied twice (forward + backward) plus the two
+            // diagonal TRSVs.
+            box_subst[i] += 4 * (ndof * ndof) as u64 + 4 * (nb.nred() * nb.nred()) as u64;
+        }
+        for &(j, i) in &lf.near {
+            let ni = lf.bases[i].u.rows();
+            let nj = lf.bases[j].u.rows();
+            // Sparsify F_ji = U_jᵀ A_ji U_i, charged to the column owner.
+            box_factor[i] += flops::gemm_flops(nj, ni, nj) + flops::gemm_flops(nj, ni, ni);
+            if let Some(m) = lf.lr.get(&(j, i)) {
+                box_factor[i] += flops::trsm_flops(lf.bases[i].nred(), m.rows());
+                box_subst[i] += 4 * (m.rows() * m.cols()) as u64;
+            }
+            if let Some(m) = lf.ls.get(&(j, i)) {
+                box_factor[i] += flops::trsm_flops(lf.bases[i].nred(), m.rows());
+                box_subst[i] += 4 * (m.rows() * m.cols()) as u64;
+            }
+        }
+
+        if distributed {
+            for i in 0..width {
+                let o = owner(i, width, p);
+                rank_flops[o].0 += box_factor[i];
+                rank_flops[o].1 += box_subst[i];
+            }
+            // Substitution-only neighbor exchange: near pairs straddling a
+            // rank boundary ship the source box's solved segments.
+            let mut links: HashSet<(usize, usize)> = HashSet::new();
+            for &(j, i) in &lf.near {
+                let oi = owner(i, width, p);
+                let oj = owner(j, width, p);
+                if oi != oj {
+                    subst_bytes += 8 * (lf.bases[i].nred() + lf.bases[i].rank) as u64;
+                    links.insert((oi.min(oj), oi.max(oj)));
+                }
+            }
+            subst_ops += links.len() as u64;
+        } else {
+            // Redundant top levels: every rank computes every box after an
+            // allgather of the level's sparsified near blocks (factor) and
+            // solved segments (substitution). Block shapes here are bounded
+            // by the rank budget — independent of N.
+            let bf: u64 = box_factor.iter().sum();
+            let bs: u64 = box_subst.iter().sum();
+            for r in rank_flops.iter_mut() {
+                r.0 += bf;
+                r.1 += bs;
+            }
+            for &(j, i) in &lf.near {
+                factor_bytes += 8 * (lf.bases[j].u.rows() * lf.bases[i].u.rows()) as u64;
+            }
+            factor_ops += 1;
+            let seg: usize = lf.bases.iter().map(|nb| nb.u.rows()).sum();
+            subst_bytes += 8 * seg as u64;
+            subst_ops += 1;
+        }
+    }
+
+    // Root factorization + solve: redundant on every rank (Algorithm 2
+    // line 22); the merged root block is allgathered first when P > 1.
+    let root_n = fac.root_l.rows();
+    for r in rank_flops.iter_mut() {
+        r.0 += flops::potrf_flops(root_n);
+        r.1 += 2 * (root_n * root_n) as u64;
+    }
+    if p > 1 {
+        factor_bytes += 8 * (root_n * root_n) as u64;
+        factor_ops += 1;
+        subst_bytes += 8 * root_n as u64;
+        subst_ops += 1;
+    }
+
+    DistReport { x, ranks: p, factor_bytes, factor_ops, subst_bytes, subst_ops, rank_flops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construct::H2Config;
+    use crate::geometry::Geometry;
+    use crate::kernels::KernelFn;
+    use crate::util::Rng;
+
+    #[test]
+    fn rank_count_is_clamped_to_leaf_width() {
+        let g = Geometry::sphere_surface(256, 51);
+        let cfg = H2Config { leaf_size: 64, max_rank: 16, far_samples: 64, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &cfg);
+        let mut rng = Rng::new(1);
+        let b: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        // 256 points / leaf 64 -> 4 leaves; asking for 64 ranks clamps to 4.
+        let report = dist_solve_driver(&h2, 64, &b, SubstMode::Parallel);
+        assert_eq!(report.ranks, 4);
+        assert_eq!(report.rank_flops.len(), 4);
+        // Non-power-of-two requests round down.
+        let report3 = dist_solve_driver(&h2, 3, &b, SubstMode::Parallel);
+        assert_eq!(report3.ranks, 2);
+    }
+
+    #[test]
+    fn comm_model_cost_is_linear() {
+        let m = CommModel { latency_s: 1e-6, gb_per_s: 100.0, flop_per_s: 1e12 };
+        let c1 = m.cost(1, 0);
+        let c2 = m.cost(2, 0);
+        assert!((c2 - 2.0 * c1).abs() < 1e-18);
+        assert!(m.cost(0, 1_000_000_000) > 0.0);
+    }
+}

@@ -8,12 +8,13 @@
 use crate::baselines::blr::{BlrConfig, BlrMatrix};
 use crate::batch::native::NativeBackend;
 use crate::construct::H2Config;
-use crate::dist::{dist_solve_driver, CommModel, NCCL_LIKE};
+use crate::dist::{dist_solve_driver, dist_solve_driver_with, CommModel, NCCL_LIKE};
 use crate::geometry::{molecule, Geometry};
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
 use crate::linalg::norms::rel_err_vec;
 use crate::metrics::{flops, timer::timed};
+use crate::solver::{BackendSpec, H2SolverBuilder};
 use crate::tree::{leaf_near_count, ClusterTree};
 use crate::ulv::{factorize, SubstMode};
 use crate::util::Rng;
@@ -85,30 +86,36 @@ pub fn fig13_14_15(scale: Scale) -> String {
     let mut out = String::from(
         "# Figures 13/14/15: N, factor_native_s, subst_native_s, factor_pjrt_s, subst_pjrt_s, factor_gflop, gflops_native, resid\n",
     );
-    let pjrt = pjrt_backend();
     for &n in &sizes {
         let g = Geometry::sphere_surface(n, 13);
-        let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &timing_cfg());
-        let native = NativeBackend::new();
-        let before = flops::snapshot();
-        let (fac, t_factor) = timed(|| factorize(&h2, &native));
-        let factor_flops = flops::delta(before, flops::snapshot()).factor;
+        let solver = H2SolverBuilder::new(g.clone(), KernelFn::laplace())
+            .config(timing_cfg())
+            .residual_samples(64)
+            .build()
+            .expect("figure problem is well-formed");
+        let t_factor = solver.stats().factor_time;
+        let factor_flops = solver.stats().factor_flops;
         let mut rng = Rng::new(7);
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let (x, t_subst) = timed(|| fac.solve_tree_order(&b, &native, SubstMode::Parallel));
-        let resid = h2.residual_sampled(&x, &b, 64, 9);
-        let (t_factor_p, t_subst_p) = match &pjrt {
-            Some(be) => {
-                let (fac_p, tf) = timed(|| factorize(&h2, be));
-                let (_xp, ts) = timed(|| fac_p.solve_tree_order(&b, be, SubstMode::Parallel));
-                (tf, ts)
+        let rep = solver.solve(&b).expect("rhs length matches");
+        let (t_factor_p, t_subst_p) = match H2SolverBuilder::new(g, KernelFn::laplace())
+            .config(timing_cfg())
+            .backend(BackendSpec::pjrt())
+            .residual_samples(0)
+            .build()
+        {
+            Ok(ps) => {
+                let rp = ps.solve(&b).expect("rhs length matches");
+                (ps.stats().factor_time, rp.subst_time)
             }
-            None => (f64::NAN, f64::NAN),
+            Err(_) => (f64::NAN, f64::NAN),
         };
         out.push_str(&format!(
-            "{n}, {t_factor:.4}, {t_subst:.4}, {t_factor_p:.4}, {t_subst_p:.4}, {:.3}, {:.3}, {resid:.2e}\n",
+            "{n}, {t_factor:.4}, {:.4}, {t_factor_p:.4}, {t_subst_p:.4}, {:.3}, {:.3}, {:.2e}\n",
+            rep.subst_time,
             factor_flops as f64 / 1e9,
             factor_flops as f64 / t_factor / 1e9,
+            rep.residual.unwrap_or(f64::NAN),
         ));
     }
     out.push_str("\npaper fig13: O(N) slope; fig14: 2.42 TF/s CPU, 12.18 TF/s GPU peak;\n");
@@ -199,13 +206,14 @@ pub fn fig18_19(scale: Scale) -> String {
                 eta,
                 ..Default::default()
             };
-            let ((err, t), _) = timed(|| {
-                let (h2, t_c) = timed(|| H2Matrix::construct(&g, &kern, &cfg));
-                let (fac, t_f) = timed(|| factorize(&h2, &NativeBackend::new()));
-                let (x, t_s) =
-                    timed(|| fac.solve(&b, &NativeBackend::new(), SubstMode::Parallel));
-                (rel_err_vec(&x, &x_dense), t_c + t_f + t_s)
-            });
+            let solver = H2SolverBuilder::new(g.clone(), kern.clone())
+                .config(cfg)
+                .residual_samples(0)
+                .build()
+                .expect("figure problem is well-formed");
+            let rep = solver.solve(&b).expect("rhs length matches");
+            let err = rel_err_vec(&rep.x, &x_dense);
+            let t = solver.stats().construct_time + solver.stats().factor_time + rep.subst_time;
             row.push_str(&format!(", {err:.3e}, {t:.3}"));
         }
         out.push_str(&row);
@@ -233,8 +241,11 @@ pub fn fig20(scale: Scale) -> String {
     let bt = h2.tree.permute_vec(&b);
     let model: CommModel = NCCL_LIKE;
     let mut out = format!("# Figure 20 (strong scaling): N={n}, P, h2_factor_s(modeled), h2_subst_s\n");
+    // One factorization serves every rank count (times are modeled).
+    let exec = NativeBackend::new();
+    let fac = factorize(&h2, &exec);
     for &p in &ps {
-        let report = dist_solve_driver(&h2, p, &bt, SubstMode::Parallel);
+        let report = dist_solve_driver_with(&h2, &fac, &exec, p, &bt, SubstMode::Parallel);
         out.push_str(&format!(
             "{p}, {:.4}, {:.4}\n",
             report.factor_time(&model),

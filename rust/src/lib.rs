@@ -20,7 +20,11 @@
 //!   ([`dist`]),
 //! * baselines (dense Cholesky, BLR tile-Cholesky ≈ LORAPO) ([`baselines`]),
 //! * FLOP/time/communication metrics and the figure-regeneration harness
-//!   ([`metrics`], [`figures`]).
+//!   ([`metrics`], [`figures`]),
+//! * the end-to-end session facade — builder-configured, `Result`-based,
+//!   backend-pluggable ([`solver`]). **Start here**: the layered modules
+//!   stay public for benchmarks, but [`solver::H2SolverBuilder`] /
+//!   [`solver::H2Solver`] are the intended entry point.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
@@ -35,13 +39,22 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod solver;
 pub mod tree;
 pub mod ulv;
 pub mod util;
 
 pub mod cli;
 
-/// Convenience re-exports for downstream users.
+/// Convenience re-exports for downstream users: the solver facade plus the
+/// types needed to describe a problem.
 pub mod prelude {
+    pub use crate::construct::H2Config;
+    pub use crate::geometry::Geometry;
+    pub use crate::kernels::KernelFn;
     pub use crate::linalg::Matrix;
+    pub use crate::solver::{
+        BackendSpec, BuildStats, DistSolveReport, H2Error, H2Solver, H2SolverBuilder, SolveReport,
+    };
+    pub use crate::ulv::SubstMode;
 }

@@ -1,0 +1,211 @@
+//! Backend selection for the solver facade, plus the serial reference
+//! backend.
+//!
+//! [`BackendSpec`] is the *description* of an execution engine; the facade
+//! instantiates it once at `build()` time and owns the resulting boxed
+//! [`BatchExec`], so no concrete backend type ever crosses the facade
+//! boundary.
+
+use super::H2Error;
+use crate::batch::native::NativeBackend;
+use crate::batch::BatchExec;
+use crate::linalg::blas::{self, Side, Uplo};
+use crate::linalg::chol;
+use crate::linalg::matrix::{Matrix, Trans};
+use crate::metrics::flops;
+use std::path::PathBuf;
+
+/// Which execution engine runs the batched kernels.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Thread-pool native kernels (the paper's CPU path). Default.
+    #[default]
+    Native,
+    /// AOT XLA executables through PJRT (the paper's GPU-analog path).
+    /// Fails with [`H2Error::BackendUnavailable`] when the artifacts or
+    /// the XLA runtime are missing.
+    Pjrt {
+        /// Directory holding `manifest.json` and the `.hlo.txt` artifacts.
+        artifacts_dir: PathBuf,
+    },
+    /// Single-threaded golden-reference execution: same kernels as
+    /// [`BackendSpec::Native`], no thread pool, no unsafe — bit-identical
+    /// to native and useful for debugging and determinism checks.
+    SerialReference,
+}
+
+impl BackendSpec {
+    /// PJRT with the conventional `artifacts/` directory.
+    pub fn pjrt() -> BackendSpec {
+        BackendSpec::Pjrt { artifacts_dir: PathBuf::from("artifacts") }
+    }
+
+    /// Parse a CLI-style backend name (`native`, `pjrt`, `serial`).
+    pub fn by_name(name: &str) -> Option<BackendSpec> {
+        match name {
+            "native" => Some(BackendSpec::Native),
+            "pjrt" => Some(BackendSpec::pjrt()),
+            "serial" => Some(BackendSpec::SerialReference),
+            _ => None,
+        }
+    }
+
+    /// Human-readable spec name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Native => "native",
+            BackendSpec::Pjrt { .. } => "pjrt",
+            BackendSpec::SerialReference => "serial",
+        }
+    }
+
+    /// Instantiate the described backend.
+    pub(crate) fn instantiate(&self) -> Result<Box<dyn BatchExec>, H2Error> {
+        match self {
+            BackendSpec::Native => Ok(Box::new(NativeBackend::new())),
+            BackendSpec::SerialReference => Ok(Box::new(SerialBackend)),
+            BackendSpec::Pjrt { artifacts_dir } => {
+                match crate::runtime::PjrtBackend::new(artifacts_dir) {
+                    Ok(be) => Ok(Box::new(be)),
+                    Err(e) => Err(H2Error::BackendUnavailable {
+                        backend: "pjrt".to_string(),
+                        reason: e.to_string(),
+                    }),
+                }
+            }
+        }
+    }
+}
+
+/// Single-threaded reference implementation of [`BatchExec`].
+///
+/// Runs every batch item sequentially with the same `linalg` kernels the
+/// native backend dispatches to the worker pool, so results are
+/// bit-identical to [`NativeBackend`] while execution stays deterministic
+/// and free of unsafe pointer sharing.
+pub struct SerialBackend;
+
+impl BatchExec for SerialBackend {
+    fn potrf(&self, _level: usize, blocks: &mut [Matrix]) {
+        for (t, blk) in blocks.iter_mut().enumerate() {
+            flops::add(flops::potrf_flops(blk.rows()));
+            if let Err(e) = chol::potrf(blk) {
+                panic!("serial POTRF failed on block {t}: {e:?} (matrix not SPD)");
+            }
+        }
+    }
+
+    fn trsm_right_lt(&self, _level: usize, l: &[&Matrix], b: &mut [Matrix]) {
+        assert_eq!(l.len(), b.len());
+        for (lt, bt) in l.iter().zip(b.iter_mut()) {
+            flops::add(flops::trsm_flops(lt.rows(), bt.rows()));
+            blas::trsm(Side::Right, Uplo::Lower, Trans::Yes, 1.0, lt, bt);
+        }
+    }
+
+    fn schur_self(&self, _level: usize, a: &[&Matrix], c: &mut [Matrix]) {
+        assert_eq!(a.len(), c.len());
+        for (at, ct) in a.iter().zip(c.iter_mut()) {
+            flops::add(flops::gemm_flops(at.rows(), at.rows(), at.cols()));
+            blas::gemm(-1.0, at, Trans::No, at, Trans::Yes, 1.0, ct);
+        }
+    }
+
+    fn sparsify(&self, _level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
+        assert_eq!(u.len(), a.len());
+        assert_eq!(v.len(), a.len());
+        let mut out = Vec::with_capacity(a.len());
+        for t in 0..a.len() {
+            crate::batch::count_sparsify_flops(u[t], &a[t], v[t]);
+            let mut ua = Matrix::zeros(u[t].cols(), a[t].cols());
+            blas::gemm(1.0, u[t], Trans::Yes, &a[t], Trans::No, 0.0, &mut ua);
+            let mut f = Matrix::zeros(u[t].cols(), v[t].cols());
+            blas::gemm(1.0, &ua, Trans::No, v[t], Trans::No, 0.0, &mut f);
+            out.push(f);
+        }
+        out
+    }
+
+    fn trsv_fwd(&self, _level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        assert_eq!(l.len(), x.len());
+        for (lt, xt) in l.iter().zip(x.iter_mut()) {
+            flops::add((lt.rows() * lt.rows()) as u64);
+            blas::trsv(Uplo::Lower, Trans::No, lt, xt);
+        }
+    }
+
+    fn trsv_bwd(&self, _level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        assert_eq!(l.len(), x.len());
+        for (lt, xt) in l.iter().zip(x.iter_mut()) {
+            flops::add((lt.rows() * lt.rows()) as u64);
+            blas::trsv(Uplo::Lower, Trans::Yes, lt, xt);
+        }
+    }
+
+    fn gemv_acc(
+        &self,
+        _level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    ) {
+        assert_eq!(a.len(), x.len());
+        assert_eq!(a.len(), y.len());
+        let ta = if trans { Trans::Yes } else { Trans::No };
+        for t in 0..a.len() {
+            flops::add(2 * (a[t].rows() * a[t].cols()) as u64);
+            blas::gemv(alpha, a[t], ta, x[t], 1.0, &mut y[t]);
+        }
+    }
+
+    fn apply_basis(&self, _level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
+        assert_eq!(u.len(), x.len());
+        let ta = if trans { Trans::Yes } else { Trans::No };
+        let mut out = Vec::with_capacity(u.len());
+        for t in 0..u.len() {
+            let out_len = if trans { u[t].cols() } else { u[t].rows() };
+            let mut y = vec![0.0; out_len];
+            flops::add(2 * (u[t].rows() * u[t].cols()) as u64);
+            blas::gemv(1.0, u[t], ta, x[t], 0.0, &mut y);
+            out.push(y);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::frob;
+    use crate::util::Rng;
+
+    #[test]
+    fn spec_names_and_parsing() {
+        assert_eq!(BackendSpec::default(), BackendSpec::Native);
+        assert_eq!(BackendSpec::by_name("native"), Some(BackendSpec::Native));
+        assert_eq!(BackendSpec::by_name("serial"), Some(BackendSpec::SerialReference));
+        assert_eq!(BackendSpec::by_name("pjrt").map(|s| s.name()), Some("pjrt"));
+        assert_eq!(BackendSpec::by_name("gpu"), None);
+    }
+
+    #[test]
+    fn serial_matches_native_kernels() {
+        let mut rng = Rng::new(77);
+        let mats: Vec<Matrix> = (0..4).map(|_| Matrix::rand_spd(10, &mut rng)).collect();
+        let mut serial = mats.clone();
+        let mut native = mats.clone();
+        SerialBackend.potrf(0, &mut serial);
+        NativeBackend::new().potrf(0, &mut native);
+        for (s, n) in serial.iter().zip(&native) {
+            let mut d = s.clone();
+            d.axpy(-1.0, n);
+            assert!(frob(&d) == 0.0, "serial and native POTRF must be bit-identical");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Builder for [`H2Solver`] sessions.
+
+use super::backend::BackendSpec;
+use super::session::H2Solver;
+use super::H2Error;
+use crate::construct::H2Config;
+use crate::geometry::Geometry;
+use crate::kernels::KernelFn;
+use crate::ulv::SubstMode;
+
+/// Configures and builds an [`H2Solver`]: geometry + kernel are mandatory
+/// (constructor arguments), everything else has sensible defaults.
+///
+/// ```
+/// use h2ulv::prelude::*;
+///
+/// let solver = H2SolverBuilder::new(Geometry::sphere_surface(128, 7), KernelFn::yukawa())
+///     .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
+///     .subst_mode(SubstMode::Parallel)
+///     .residual_samples(64)
+///     .build()?;
+/// assert_eq!(solver.n(), 128);
+/// # Ok::<(), h2ulv::solver::H2Error>(())
+/// ```
+#[derive(Clone)]
+pub struct H2SolverBuilder {
+    geometry: Geometry,
+    kernel: KernelFn,
+    config: H2Config,
+    backend: BackendSpec,
+    subst: SubstMode,
+    residual_samples: usize,
+}
+
+impl H2SolverBuilder {
+    /// Start a builder for the given problem. Defaults: [`H2Config::default`],
+    /// [`BackendSpec::Native`], [`SubstMode::Parallel`], 128 residual samples.
+    pub fn new(geometry: Geometry, kernel: KernelFn) -> H2SolverBuilder {
+        H2SolverBuilder {
+            geometry,
+            kernel,
+            config: H2Config::default(),
+            backend: BackendSpec::Native,
+            subst: SubstMode::default(),
+            residual_samples: 128,
+        }
+    }
+
+    /// Set the construction/factorization configuration.
+    pub fn config(mut self, config: H2Config) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Select the execution backend (default [`BackendSpec::Native`]).
+    pub fn backend(mut self, spec: BackendSpec) -> Self {
+        self.backend = spec;
+        self
+    }
+
+    /// Select the substitution algorithm (default [`SubstMode::Parallel`]).
+    pub fn subst_mode(mut self, mode: SubstMode) -> Self {
+        self.subst = mode;
+        self
+    }
+
+    /// Number of sampled exact-kernel rows used for the per-solve residual
+    /// estimate in [`super::SolveReport::residual`]; `0` disables the
+    /// estimate (default 128).
+    pub fn residual_samples(mut self, samples: usize) -> Self {
+        self.residual_samples = samples;
+        self
+    }
+
+    /// Validate the problem, instantiate the backend, construct the H²
+    /// matrix, and run the ULV factorization.
+    ///
+    /// Every failure mode returns a typed [`H2Error`] — see the taxonomy in
+    /// [`crate::solver`].
+    pub fn build(self) -> Result<H2Solver, H2Error> {
+        validate(&self.geometry, &self.config)?;
+        let backend = self.backend.instantiate()?;
+        H2Solver::assemble(
+            self.geometry,
+            self.kernel,
+            self.config,
+            self.backend,
+            backend,
+            self.subst,
+            self.residual_samples,
+        )
+    }
+}
+
+/// Shared problem/config validation (also used by
+/// [`H2Solver::refactorize`]).
+pub(crate) fn validate(geometry: &Geometry, config: &H2Config) -> Result<(), H2Error> {
+    if geometry.is_empty() {
+        return Err(H2Error::EmptyGeometry);
+    }
+    if config.leaf_size == 0 {
+        return Err(H2Error::InvalidConfig("leaf_size must be >= 1".to_string()));
+    }
+    if config.max_rank == 0 {
+        return Err(H2Error::InvalidConfig("max_rank must be >= 1".to_string()));
+    }
+    if !config.eta.is_finite() || config.eta < 0.0 {
+        return Err(H2Error::InvalidConfig(format!(
+            "eta must be a finite non-negative number, got {}",
+            config.eta
+        )));
+    }
+    if !config.rtol.is_finite() || config.rtol < 0.0 {
+        return Err(H2Error::InvalidConfig(format!(
+            "rtol must be a finite non-negative number, got {}",
+            config.rtol
+        )));
+    }
+    if geometry.len() < config.leaf_size {
+        return Err(H2Error::ProblemTooSmall { n: geometry.len(), leaf_size: config.leaf_size });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_catches_malformed_problems() {
+        let g = Geometry::uniform_cube(100, 1);
+        let ok = H2Config { leaf_size: 32, ..Default::default() };
+        assert!(validate(&g, &ok).is_ok());
+
+        let empty = Geometry { points: Vec::new(), name: "empty".to_string() };
+        assert_eq!(validate(&empty, &ok), Err(H2Error::EmptyGeometry));
+
+        let zero_leaf = H2Config { leaf_size: 0, ..Default::default() };
+        assert!(matches!(validate(&g, &zero_leaf), Err(H2Error::InvalidConfig(_))));
+
+        let zero_rank = H2Config { max_rank: 0, leaf_size: 32, ..Default::default() };
+        assert!(matches!(validate(&g, &zero_rank), Err(H2Error::InvalidConfig(_))));
+
+        let nan_eta = H2Config { eta: f64::NAN, leaf_size: 32, ..Default::default() };
+        assert!(matches!(validate(&g, &nan_eta), Err(H2Error::InvalidConfig(_))));
+
+        let inf_eta = H2Config { eta: f64::INFINITY, leaf_size: 32, ..Default::default() };
+        assert!(matches!(validate(&g, &inf_eta), Err(H2Error::InvalidConfig(_))));
+
+        let inf_rtol = H2Config { rtol: f64::INFINITY, leaf_size: 32, ..Default::default() };
+        assert!(matches!(validate(&g, &inf_rtol), Err(H2Error::InvalidConfig(_))));
+
+        let big_leaf = H2Config { leaf_size: 512, ..Default::default() };
+        assert_eq!(
+            validate(&g, &big_leaf),
+            Err(H2Error::ProblemTooSmall { n: 100, leaf_size: 512 })
+        );
+    }
+}

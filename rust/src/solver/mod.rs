@@ -1,0 +1,192 @@
+//! The `H2Solver` facade: one coherent, `Result`-based session API over the
+//! layered pipeline (geometry → construction → ULV factorization →
+//! substitution).
+//!
+//! The layered modules ([`crate::construct`], [`crate::ulv`],
+//! [`crate::batch`], [`crate::runtime`], [`crate::dist`]) stay public for
+//! benchmarks and research code, but they expose three footguns the facade
+//! removes:
+//!
+//! 1. **Permutation bookkeeping** — the cluster tree reorders points, and
+//!    the low-level solve works in tree ordering. The facade accepts and
+//!    returns vectors in the caller's original point ordering; every
+//!    `permute_vec`/`unpermute_vec` happens inside.
+//! 2. **Panics on bad input** — the layered code asserts. The facade
+//!    validates inputs up front and converts any residual panic into a
+//!    structured [`H2Error`] via an unwind guard.
+//! 3. **Concrete backend types threaded through every call** — the facade
+//!    owns a boxed [`crate::batch::BatchExec`] selected by [`BackendSpec`]
+//!    at build time; callers never see backend types.
+//!
+//! # Error taxonomy
+//!
+//! | Variant | Meaning | Typical cause |
+//! |---------|---------|---------------|
+//! | [`H2Error::EmptyGeometry`] | geometry has zero points | empty point cloud |
+//! | [`H2Error::ProblemTooSmall`] | `N < leaf_size`, no hierarchy exists | tiny N or huge leaf — shrink `leaf_size` or use `baselines::dense` |
+//! | [`H2Error::InvalidConfig`] | a config field is out of range | `leaf_size == 0`, `max_rank == 0`, negative/NaN `eta` or `rtol` |
+//! | [`H2Error::DimensionMismatch`] | right-hand-side length ≠ N | wrong RHS |
+//! | [`H2Error::BackendUnavailable`] | requested backend cannot start | PJRT artifacts missing, XLA runtime absent |
+//! | [`H2Error::NotPositiveDefinite`] | Cholesky broke down | kernel matrix not SPD (diagonal regularization removed) |
+//! | [`H2Error::ConvergenceFailure`] | iterative refinement missed its target | tolerance too tight for the factor quality |
+//! | [`H2Error::Internal`] | a layered-code panic was caught | bug — please report |
+//!
+//! # Quickstart
+//!
+//! ```
+//! use h2ulv::prelude::*;
+//!
+//! let geometry = Geometry::sphere_surface(96, 1);
+//! let solver = H2SolverBuilder::new(geometry, KernelFn::laplace())
+//!     .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
+//!     .backend(BackendSpec::Native)
+//!     .build()?;
+//! let b = vec![1.0; solver.n()];
+//! let report = solver.solve(&b)?;
+//! assert_eq!(report.x.len(), 96);
+//! # Ok::<(), h2ulv::solver::H2Error>(())
+//! ```
+
+pub mod backend;
+pub mod builder;
+pub mod session;
+
+pub use backend::BackendSpec;
+pub use builder::H2SolverBuilder;
+pub use session::{BuildStats, DistSolveReport, H2Solver, SolveReport};
+
+use std::fmt;
+
+/// Structured error type for the solver facade. Every fallible path in
+/// construction, factorization, and substitution surfaces here instead of
+/// panicking (see the module-level taxonomy table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum H2Error {
+    /// The geometry has no points.
+    EmptyGeometry,
+    /// `N < leaf_size`: the cluster tree would be a single box with no
+    /// hierarchy to exploit. Shrink `leaf_size` or use a dense solver.
+    ProblemTooSmall { n: usize, leaf_size: usize },
+    /// A configuration field is out of its valid range.
+    InvalidConfig(String),
+    /// A supplied vector's length does not match the matrix dimension N.
+    DimensionMismatch { expected: usize, got: usize },
+    /// The requested execution backend could not be instantiated.
+    BackendUnavailable { backend: String, reason: String },
+    /// A Cholesky factorization broke down: the (regularized) kernel
+    /// matrix or one of its Schur complements lost positive definiteness.
+    NotPositiveDefinite { stage: String, detail: String },
+    /// Iterative refinement did not reach the requested tolerance.
+    ConvergenceFailure { achieved: f64, target: f64, iterations: usize },
+    /// A panic from the layered code was caught and converted.
+    Internal { stage: String, detail: String },
+}
+
+impl fmt::Display for H2Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            H2Error::EmptyGeometry => write!(f, "geometry has no points"),
+            H2Error::ProblemTooSmall { n, leaf_size } => write!(
+                f,
+                "problem too small for a hierarchical solve: N = {n} < leaf_size = {leaf_size} \
+                 (shrink leaf_size or use the dense baseline)"
+            ),
+            H2Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            H2Error::DimensionMismatch { expected, got } => {
+                write!(f, "vector has length {got}, expected the matrix dimension N = {expected}")
+            }
+            H2Error::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            H2Error::NotPositiveDefinite { stage, detail } => {
+                write!(f, "lost positive definiteness during {stage}: {detail}")
+            }
+            H2Error::ConvergenceFailure { achieved, target, iterations } => write!(
+                f,
+                "iterative refinement stalled at relative residual {achieved:.3e} \
+                 (target {target:.3e}) after {iterations} iteration(s)"
+            ),
+            H2Error::Internal { stage, detail } => {
+                write!(f, "internal failure during {stage}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for H2Error {}
+
+thread_local! {
+    /// Set while [`guard`] is unwinding-protected on this thread, so the
+    /// process-wide panic hook stays quiet for panics we convert to errors.
+    static SUPPRESS_PANIC_OUTPUT: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+static PANIC_HOOK_INIT: std::sync::Once = std::sync::Once::new();
+
+/// Run `f`, converting any panic from the layered code into an [`H2Error`].
+///
+/// The facade validates inputs before calling into the layers, so this is
+/// a safety net for genuinely exceptional states (e.g. a Schur complement
+/// losing positive definiteness on an adversarial kernel). While `f` runs,
+/// the default panic hook is silenced on this thread so the caller sees
+/// only the returned [`H2Error`], not a spurious backtrace on stderr
+/// (panics raised on pool worker threads still print before propagating).
+pub(crate) fn guard<T>(stage: &str, f: impl FnOnce() -> T) -> Result<T, H2Error> {
+    PANIC_HOOK_INIT.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SUPPRESS_PANIC_OUTPUT.with(|s| s.get()) {
+                prev(info);
+            }
+        }));
+    });
+    SUPPRESS_PANIC_OUTPUT.with(|s| s.set(true));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    SUPPRESS_PANIC_OUTPUT.with(|s| s.set(false));
+    result.map_err(|payload| {
+        let detail = payload
+            .downcast_ref::<&'static str>()
+            .map(|s| (*s).to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "unknown panic payload".to_string());
+        // Matches every Cholesky-breakdown panic text in the layers:
+        // "NotSpd { .. }" (Debug of FactorError), "matrix not SPD",
+        // "block must stay SPD", "not positive definite".
+        let lower = detail.to_lowercase();
+        if lower.contains("spd") || lower.contains("positive definite") {
+            H2Error::NotPositiveDefinite { stage: stage.to_string(), detail }
+        } else {
+            H2Error::Internal { stage: stage.to_string(), detail }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_actionable() {
+        let e = H2Error::DimensionMismatch { expected: 100, got: 7 };
+        let s = e.to_string();
+        assert!(s.contains("7") && s.contains("100"), "{s}");
+        let e = H2Error::ProblemTooSmall { n: 10, leaf_size: 64 };
+        assert!(e.to_string().contains("leaf_size"));
+    }
+
+    #[test]
+    fn guard_converts_panics() {
+        let err = guard("test", || panic!("block must stay SPD")).unwrap_err();
+        assert!(matches!(err, H2Error::NotPositiveDefinite { .. }), "{err:?}");
+        // The native backend's batched-POTRF assert carries the Debug form
+        // of FactorError::NotSpd — it must classify the same way.
+        let err = guard("test", || {
+            panic!("batched POTRF failed on 1 block(s): [(0, NotSpd {{ index: 3, pivot: -1.0 }})]")
+        })
+        .unwrap_err();
+        assert!(matches!(err, H2Error::NotPositiveDefinite { .. }), "{err:?}");
+        let err = guard("test", || panic!("index out of bounds")).unwrap_err();
+        assert!(matches!(err, H2Error::Internal { .. }), "{err:?}");
+        let ok = guard("test", || 41 + 1).unwrap();
+        assert_eq!(ok, 42);
+    }
+}

@@ -1,0 +1,355 @@
+//! The [`H2Solver`] session: owns the H² matrix, the ULV factor, and the
+//! execution backend; every solve handles tree-order permutation
+//! internally and reports through [`SolveReport`].
+
+use super::backend::BackendSpec;
+use super::builder::validate;
+use super::{guard, H2Error};
+use crate::batch::BatchExec;
+use crate::construct::H2Config;
+use crate::dist::{dist_solve_driver_with, NCCL_LIKE};
+use crate::geometry::Geometry;
+use crate::h2::H2Matrix;
+use crate::kernels::KernelFn;
+use crate::metrics::{flops, timer::timed};
+use crate::ulv::{factorize, pcg, SubstMode, UlvFactor};
+
+/// Seed for the sampled residual estimator (fixed so reports are
+/// reproducible across solves of the same problem).
+const RESIDUAL_SEED: u64 = 0xCAFE;
+
+/// Timings and footprint of one `build()`/`refactorize()`.
+#[derive(Clone, Debug)]
+pub struct BuildStats {
+    /// Matrix dimension N.
+    pub n: usize,
+    /// Cluster-tree depth (leaf level index).
+    pub depth: usize,
+    /// H² construction wall time in seconds.
+    pub construct_time: f64,
+    /// ULV factorization wall time in seconds.
+    pub factor_time: f64,
+    /// FLOPs attributed to the factorization phase.
+    pub factor_flops: u64,
+    /// H² storage footprint in f64 entries.
+    pub h2_entries: usize,
+    /// ULV factor storage footprint in f64 entries.
+    pub factor_entries: usize,
+}
+
+/// Result of one [`H2Solver::solve`] (or one right-hand side of
+/// [`H2Solver::solve_many`]).
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Solution in the caller's original point ordering.
+    pub x: Vec<f64>,
+    /// Substitution wall time in seconds.
+    pub subst_time: f64,
+    /// Sampled exact-kernel relative residual `|Ax-b|/|b|`, or `None` when
+    /// the builder disabled residual sampling.
+    pub residual: Option<f64>,
+    /// Refinement iterations used (1 for a direct solve).
+    pub iterations: usize,
+    /// Substitution algorithm that produced `x`.
+    pub subst_mode: SubstMode,
+    /// Name of the backend that executed the batched kernels.
+    pub backend: &'static str,
+}
+
+/// Result of a facade-level simulated distributed solve
+/// ([`H2Solver::solve_dist`]). Times are modeled with [`NCCL_LIKE`]; use
+/// [`crate::dist::dist_solve_driver`] directly for custom communication
+/// models.
+#[derive(Clone, Debug)]
+pub struct DistSolveReport {
+    /// Solution in the caller's original point ordering (identical across
+    /// rank counts).
+    pub x: Vec<f64>,
+    /// Effective rank count (power of two, clamped to the leaf width).
+    pub ranks: usize,
+    /// Modeled factorization time (slowest rank + communication).
+    pub factor_time: f64,
+    /// Modeled substitution time.
+    pub subst_time: f64,
+    /// Factorization communication volume in bytes.
+    pub factor_bytes: u64,
+    /// Substitution communication volume in bytes.
+    pub subst_bytes: u64,
+    /// Sampled exact-kernel relative residual (as in [`SolveReport`]).
+    pub residual: Option<f64>,
+}
+
+/// A built H² solver session: construction and factorization are done;
+/// [`solve`](H2Solver::solve) is cheap and reusable across right-hand
+/// sides.
+pub struct H2Solver {
+    geometry: Geometry,
+    kernel: KernelFn,
+    spec: BackendSpec,
+    backend: Box<dyn BatchExec>,
+    subst: SubstMode,
+    residual_samples: usize,
+    h2: H2Matrix,
+    factor: UlvFactor,
+    stats: BuildStats,
+}
+
+impl H2Solver {
+    /// Construct + factorize (called by the builder; inputs are already
+    /// validated).
+    pub(crate) fn assemble(
+        geometry: Geometry,
+        kernel: KernelFn,
+        config: H2Config,
+        spec: BackendSpec,
+        backend: Box<dyn BatchExec>,
+        subst: SubstMode,
+        residual_samples: usize,
+    ) -> Result<H2Solver, H2Error> {
+        let (h2, factor, stats) =
+            build_pipeline(&geometry, &kernel, &config, backend.as_ref())?;
+        Ok(H2Solver {
+            geometry,
+            kernel,
+            spec,
+            backend,
+            subst,
+            residual_samples,
+            h2,
+            factor,
+            stats,
+        })
+    }
+
+    /// Matrix dimension N.
+    pub fn n(&self) -> usize {
+        self.h2.n()
+    }
+
+    /// Timings and footprint of the last build/refactorize.
+    pub fn stats(&self) -> &BuildStats {
+        &self.stats
+    }
+
+    /// Active configuration.
+    pub fn config(&self) -> &H2Config {
+        &self.h2.cfg
+    }
+
+    /// Name of the instantiated backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Default substitution mode for [`solve`](H2Solver::solve).
+    pub fn subst_mode(&self) -> SubstMode {
+        self.subst
+    }
+
+    /// Low-level access to the H² matrix (benchmarks, diagnostics).
+    pub fn matrix(&self) -> &H2Matrix {
+        &self.h2
+    }
+
+    /// Low-level access to the ULV factor (benchmarks, diagnostics).
+    pub fn factor(&self) -> &UlvFactor {
+        &self.factor
+    }
+
+    /// Solve `A x = b` with `b` in the caller's original point ordering;
+    /// the returned [`SolveReport::x`] is in original ordering too. All
+    /// tree-order permutation happens inside.
+    ///
+    /// ```
+    /// use h2ulv::prelude::*;
+    ///
+    /// let solver = H2SolverBuilder::new(Geometry::sphere_surface(96, 1), KernelFn::laplace())
+    ///     .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
+    ///     .build()?;
+    /// let b = vec![1.0; solver.n()];
+    /// let report = solver.solve(&b)?;
+    /// assert!(report.residual.unwrap() < 1e-2);
+    ///
+    /// // Malformed input is a typed error, not a panic:
+    /// let err = solver.solve(&b[..10]).unwrap_err();
+    /// assert!(matches!(err, H2Error::DimensionMismatch { expected: 96, got: 10 }));
+    /// # Ok::<(), h2ulv::solver::H2Error>(())
+    /// ```
+    pub fn solve(&self, b: &[f64]) -> Result<SolveReport, H2Error> {
+        self.solve_with(b, self.subst)
+    }
+
+    /// [`solve`](H2Solver::solve) with an explicit substitution mode
+    /// (overriding the builder's choice for this call only).
+    pub fn solve_with(&self, b: &[f64], mode: SubstMode) -> Result<SolveReport, H2Error> {
+        self.check_rhs(b)?;
+        let bt = self.h2.tree.permute_vec(b);
+        let (xt, subst_time) = {
+            let (res, t) = timed(|| {
+                guard("substitution", || {
+                    self.factor.solve_tree_order(&bt, self.backend.as_ref(), mode)
+                })
+            });
+            (res?, t)
+        };
+        let residual = self.sample_residual(&xt, &bt);
+        let x = self.h2.tree.unpermute_vec(&xt);
+        Ok(SolveReport {
+            x,
+            subst_time,
+            residual,
+            iterations: 1,
+            subst_mode: mode,
+            backend: self.backend.name(),
+        })
+    }
+
+    /// Solve one factorization against many right-hand sides. Lengths are
+    /// validated up front so either every RHS is solved or none is.
+    pub fn solve_many(&self, rhs: &[Vec<f64>]) -> Result<Vec<SolveReport>, H2Error> {
+        for b in rhs {
+            self.check_rhs(b)?;
+        }
+        rhs.iter().map(|b| self.solve_with(b, self.subst)).collect()
+    }
+
+    /// Direct solve + ULV-preconditioned CG refinement until the relative
+    /// residual (w.r.t. the H² operator) drops below `tol`. Recovers full
+    /// accuracy from aggressively compressed factorizations at O(N) cost
+    /// per iteration (paper §3.7: "direct solver or preconditioner").
+    pub fn solve_refined(
+        &self,
+        b: &[f64],
+        tol: f64,
+        max_iters: usize,
+    ) -> Result<SolveReport, H2Error> {
+        self.check_rhs(b)?;
+        if tol <= 0.0 || tol.is_nan() {
+            return Err(H2Error::InvalidConfig(format!(
+                "refinement tolerance must be positive, got {tol}"
+            )));
+        }
+        let bt = self.h2.tree.permute_vec(b);
+        let (result, subst_time) = {
+            let (res, t) = timed(|| {
+                guard("refined substitution", || {
+                    pcg(&self.h2, &self.factor, self.backend.as_ref(), &bt, tol, max_iters)
+                })
+            });
+            (res?, t)
+        };
+        if result.rel_residual > tol {
+            return Err(H2Error::ConvergenceFailure {
+                achieved: result.rel_residual,
+                target: tol,
+                iterations: result.iters,
+            });
+        }
+        let residual = self.sample_residual(&result.x, &bt);
+        let x = self.h2.tree.unpermute_vec(&result.x);
+        Ok(SolveReport {
+            x,
+            subst_time,
+            residual,
+            iterations: result.iters,
+            subst_mode: SubstMode::Parallel,
+            backend: self.backend.name(),
+        })
+    }
+
+    /// Simulated distributed solve over `ranks` ranks (paper §5); times
+    /// are modeled with [`NCCL_LIKE`]. The solution is identical to
+    /// [`solve`](H2Solver::solve) for every rank count. Reuses the
+    /// session's ULV factor and backend — only the substitution runs per
+    /// call; the factorization cost in the report is modeled.
+    pub fn solve_dist(&self, b: &[f64], ranks: usize) -> Result<DistSolveReport, H2Error> {
+        self.check_rhs(b)?;
+        let bt = self.h2.tree.permute_vec(b);
+        let report = guard("distributed solve", || {
+            dist_solve_driver_with(
+                &self.h2,
+                &self.factor,
+                self.backend.as_ref(),
+                ranks,
+                &bt,
+                self.subst,
+            )
+        })?;
+        let residual = self.sample_residual(&report.x, &bt);
+        let x = self.h2.tree.unpermute_vec(&report.x);
+        Ok(DistSolveReport {
+            x,
+            ranks: report.ranks,
+            factor_time: report.factor_time(&NCCL_LIKE),
+            subst_time: report.subst_time(&NCCL_LIKE),
+            factor_bytes: report.factor_bytes,
+            subst_bytes: report.subst_bytes,
+            residual,
+        })
+    }
+
+    /// Rebuild the H² matrix and the ULV factor with a new configuration
+    /// (changed rank budget / tolerance / admissibility), reusing the
+    /// stored geometry, kernel, and backend. Returns the new build stats.
+    pub fn refactorize(&mut self, config: H2Config) -> Result<&BuildStats, H2Error> {
+        validate(&self.geometry, &config)?;
+        let (h2, factor, stats) =
+            build_pipeline(&self.geometry, &self.kernel, &config, self.backend.as_ref())?;
+        self.h2 = h2;
+        self.factor = factor;
+        self.stats = stats;
+        Ok(&self.stats)
+    }
+
+    /// The backend spec this session was built with.
+    pub fn backend_spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn check_rhs(&self, b: &[f64]) -> Result<(), H2Error> {
+        if b.len() != self.n() {
+            return Err(H2Error::DimensionMismatch { expected: self.n(), got: b.len() });
+        }
+        Ok(())
+    }
+
+    /// Sampled exact-kernel residual of a tree-ordered solution (or `None`
+    /// when sampling is disabled).
+    fn sample_residual(&self, xt: &[f64], bt: &[f64]) -> Option<f64> {
+        if self.residual_samples == 0 {
+            return None;
+        }
+        Some(self.h2.residual_sampled(xt, bt, self.residual_samples, RESIDUAL_SEED))
+    }
+}
+
+/// Guarded construct + factorize shared by `build()` and `refactorize()`.
+fn build_pipeline(
+    geometry: &Geometry,
+    kernel: &KernelFn,
+    config: &H2Config,
+    backend: &dyn BatchExec,
+) -> Result<(H2Matrix, UlvFactor, BuildStats), H2Error> {
+    let (h2, construct_time) = {
+        let (res, t) = timed(|| {
+            guard("construction", || H2Matrix::construct(geometry, kernel, config))
+        });
+        (res?, t)
+    };
+    let before = flops::snapshot();
+    let (factor, factor_time) = {
+        let (res, t) = timed(|| guard("factorization", || factorize(&h2, backend)));
+        (res?, t)
+    };
+    let factor_flops = flops::delta(before, flops::snapshot()).factor;
+    let stats = BuildStats {
+        n: h2.n(),
+        depth: h2.tree.depth,
+        construct_time,
+        factor_time,
+        factor_flops,
+        h2_entries: h2.storage_entries(),
+        factor_entries: factor.storage_entries(),
+    };
+    Ok((h2, factor, stats))
+}

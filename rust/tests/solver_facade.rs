@@ -1,0 +1,217 @@
+//! Integration tests for the `H2Solver` facade: round-trip accuracy across
+//! kernels and substitution modes, typed errors for malformed inputs,
+//! batched right-hand sides, refactorization, backend plumbing, and the
+//! facade-level distributed solve.
+
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::prelude::*;
+use h2ulv::util::Rng;
+
+const N: usize = 192;
+
+/// Full-rank configuration: `max_rank >= ndof` at every level, so the H²
+/// representation (and therefore the ULV solve) is exact up to roundoff —
+/// this is what makes the 1e-6 residual assertions robust.
+fn exact_cfg() -> H2Config {
+    H2Config { leaf_size: 48, max_rank: 512, far_samples: 0, near_samples: 0, ..Default::default() }
+}
+
+/// Compressed configuration exercising the real low-rank path.
+fn compressed_cfg() -> H2Config {
+    H2Config { leaf_size: 48, max_rank: 24, far_samples: 0, ..Default::default() }
+}
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn build(kernel: KernelFn, cfg: H2Config, mode: SubstMode) -> H2Solver {
+    H2SolverBuilder::new(Geometry::sphere_surface(N, 811), kernel)
+        .config(cfg)
+        .subst_mode(mode)
+        .residual_samples(128)
+        .build()
+        .expect("well-formed facade problem")
+}
+
+#[test]
+fn roundtrip_laplace_yukawa_both_modes() {
+    let g = Geometry::sphere_surface(N, 811);
+    for kernel in [KernelFn::laplace(), KernelFn::yukawa()] {
+        let dense = kernel.dense(&g.points);
+        let b = rhs(N, 3);
+        let want = h2ulv::linalg::lu::solve(&dense, &b).unwrap();
+        for mode in [SubstMode::Parallel, SubstMode::Naive] {
+            let solver = build(kernel.clone(), exact_cfg(), mode);
+            let rep = solver.solve(&b).unwrap();
+            let resid = rep.residual.expect("sampling enabled");
+            assert!(resid < 1e-6, "{} {mode:?}: residual {resid}", kernel.name);
+            let err = rel_err_vec(&rep.x, &want);
+            assert!(err < 1e-6, "{} {mode:?}: error vs dense {err}", kernel.name);
+            assert_eq!(rep.subst_mode, mode);
+            assert_eq!(rep.iterations, 1);
+        }
+    }
+}
+
+#[test]
+fn compressed_roundtrip_still_accurate() {
+    for mode in [SubstMode::Parallel, SubstMode::Naive] {
+        let solver = build(KernelFn::laplace(), compressed_cfg(), mode);
+        let b = rhs(N, 5);
+        let rep = solver.solve(&b).unwrap();
+        let resid = rep.residual.unwrap();
+        assert!(resid < 5e-3, "{mode:?}: compressed residual {resid}");
+    }
+}
+
+#[test]
+fn wrong_rhs_length_is_dimension_mismatch() {
+    let solver = build(KernelFn::laplace(), compressed_cfg(), SubstMode::Parallel);
+    match solver.solve(&[1.0; 100]) {
+        Err(H2Error::DimensionMismatch { expected, got }) => {
+            assert_eq!(expected, N);
+            assert_eq!(got, 100);
+        }
+        other => panic!("expected DimensionMismatch, got {other:?}"),
+    }
+    // solve_many validates every RHS before solving any.
+    let mixed = vec![rhs(N, 1), rhs(N - 1, 2)];
+    assert!(matches!(
+        solver.solve_many(&mixed),
+        Err(H2Error::DimensionMismatch { got, .. }) if got == N - 1
+    ));
+}
+
+#[test]
+fn problem_smaller_than_leaf_is_typed_error() {
+    let g = Geometry::uniform_cube(16, 5);
+    let res = H2SolverBuilder::new(g, KernelFn::laplace())
+        .config(H2Config { leaf_size: 64, ..Default::default() })
+        .build();
+    match res {
+        Err(H2Error::ProblemTooSmall { n, leaf_size }) => {
+            assert_eq!(n, 16);
+            assert_eq!(leaf_size, 64);
+        }
+        Err(e) => panic!("expected ProblemTooSmall, got {e:?}"),
+        Ok(_) => panic!("expected ProblemTooSmall, got a solver"),
+    }
+}
+
+#[test]
+fn malformed_configs_and_geometry_are_typed_errors() {
+    let empty = Geometry { points: Vec::new(), name: "empty".to_string() };
+    assert!(matches!(
+        H2SolverBuilder::new(empty, KernelFn::laplace()).build(),
+        Err(H2Error::EmptyGeometry)
+    ));
+    let g = Geometry::sphere_surface(N, 7);
+    for bad in [
+        H2Config { leaf_size: 0, ..Default::default() },
+        H2Config { max_rank: 0, ..Default::default() },
+        H2Config { eta: -1.0, ..Default::default() },
+        H2Config { eta: f64::NAN, ..Default::default() },
+        H2Config { rtol: -0.5, ..Default::default() },
+    ] {
+        let res = H2SolverBuilder::new(g.clone(), KernelFn::laplace()).config(bad).build();
+        assert!(matches!(&res, Err(H2Error::InvalidConfig(_))), "got {:?}", res.err());
+    }
+}
+
+#[test]
+fn solve_many_matches_individual_solves() {
+    let solver = build(KernelFn::laplace(), compressed_cfg(), SubstMode::Parallel);
+    let many: Vec<Vec<f64>> = (0..3).map(|s| rhs(N, 20 + s)).collect();
+    let reports = solver.solve_many(&many).unwrap();
+    assert_eq!(reports.len(), 3);
+    for (b, rep) in many.iter().zip(&reports) {
+        let single = solver.solve(b).unwrap();
+        assert_eq!(rep.x, single.x, "solve_many must match per-rhs solve exactly");
+    }
+}
+
+#[test]
+fn refactorize_improves_accuracy() {
+    let mut solver = build(
+        KernelFn::laplace(),
+        H2Config { leaf_size: 48, max_rank: 8, far_samples: 0, ..Default::default() },
+        SubstMode::Parallel,
+    );
+    let b = rhs(N, 31);
+    let coarse = solver.solve(&b).unwrap().residual.unwrap();
+    let stats = solver.refactorize(exact_cfg()).unwrap().clone();
+    assert_eq!(stats.n, N);
+    let fine = solver.solve(&b).unwrap().residual.unwrap();
+    assert!(fine < 1e-6, "refactorized solve must be exact: {fine}");
+    assert!(fine < coarse, "rank 8 ({coarse}) must be worse than full rank ({fine})");
+}
+
+#[test]
+fn serial_reference_matches_native_exactly() {
+    let b = rhs(N, 41);
+    let mut solutions = Vec::new();
+    for spec in [BackendSpec::Native, BackendSpec::SerialReference] {
+        let solver = H2SolverBuilder::new(Geometry::sphere_surface(N, 811), KernelFn::laplace())
+            .config(compressed_cfg())
+            .backend(spec.clone())
+            .build()
+            .unwrap();
+        assert_eq!(solver.backend_spec(), &spec);
+        solutions.push(solver.solve(&b).unwrap().x);
+    }
+    let err = rel_err_vec(&solutions[0], &solutions[1]);
+    assert!(err < 1e-12, "serial reference diverged from native: {err}");
+}
+
+#[test]
+fn missing_pjrt_artifacts_is_backend_unavailable() {
+    let res = H2SolverBuilder::new(Geometry::sphere_surface(N, 811), KernelFn::laplace())
+        .config(compressed_cfg())
+        .backend(BackendSpec::Pjrt { artifacts_dir: "definitely_missing_dir".into() })
+        .build();
+    match res {
+        Err(H2Error::BackendUnavailable { backend, .. }) => assert_eq!(backend, "pjrt"),
+        Err(e) => panic!("expected BackendUnavailable, got {e:?}"),
+        Ok(_) => panic!("expected BackendUnavailable, got a solver"),
+    }
+}
+
+#[test]
+fn solve_refined_reaches_tight_tolerance() {
+    // Aggressive compression: the direct solve is only approximate, but the
+    // ULV-preconditioned refinement recovers a tight H²-operator residual.
+    let solver = build(
+        KernelFn::laplace(),
+        H2Config { leaf_size: 48, max_rank: 12, far_samples: 64, ..Default::default() },
+        SubstMode::Parallel,
+    );
+    let b = rhs(N, 51);
+    let rep = solver.solve_refined(&b, 1e-10, 50).unwrap();
+    assert!(rep.iterations >= 1);
+    // Verify the refined residual against the H² operator directly.
+    let bt = solver.matrix().tree.permute_vec(&b);
+    let xt = solver.matrix().tree.permute_vec(&rep.x);
+    let resid = solver.matrix().residual(&xt, &bt);
+    assert!(resid < 1e-9, "refined H2-operator residual {resid}");
+    // Nonsense tolerance is a typed error.
+    assert!(matches!(solver.solve_refined(&b, -1.0, 10), Err(H2Error::InvalidConfig(_))));
+}
+
+#[test]
+fn facade_dist_solve_matches_serial_and_reports_comm() {
+    let solver = build(KernelFn::laplace(), compressed_cfg(), SubstMode::Parallel);
+    let b = rhs(N, 61);
+    let serial = solver.solve(&b).unwrap();
+    let dist = solver.solve_dist(&b, 4).unwrap();
+    assert_eq!(dist.ranks, 4); // N=192, leaf 48 -> 4 leaves
+    let err = rel_err_vec(&dist.x, &serial.x);
+    assert!(err < 1e-12, "distributed diverged from serial: {err}");
+    assert!(dist.factor_bytes > 0 && dist.subst_bytes > 0);
+    assert!(dist.factor_time > 0.0 && dist.subst_time > 0.0);
+    // Single rank: no communication.
+    let single = solver.solve_dist(&b, 1).unwrap();
+    assert_eq!(single.factor_bytes, 0);
+    assert_eq!(single.subst_bytes, 0);
+}

@@ -1,0 +1,67 @@
+//! Minimal offline stand-in for the `anyhow` crate (this build environment
+//! has no crates.io access — DESIGN.md §10). Implements exactly the subset
+//! the workspace uses: [`Error`], [`Result`], and the [`anyhow!`] macro.
+//!
+//! Like the real crate, [`Error`] deliberately does *not* implement
+//! `std::error::Error`; that is what makes the blanket
+//! `impl From<E: std::error::Error>` coherent.
+
+use std::fmt;
+
+/// A type-erased error carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($tt:tt)*) => {
+        $crate::Error::msg(format!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_std_error_and_macro() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        let m = anyhow!("bad {}", 7);
+        assert_eq!(m.to_string(), "bad 7");
+    }
+}
