@@ -2,7 +2,9 @@
 //! on the paper's first workload — 3-D Laplace on a sphere surface — now
 //! through the [`H2Solver`] facade: native and PJRT backends, both
 //! substitution modes, and an O(N) complexity check across problem sizes.
-//! Results land in EXPERIMENTS.md.
+//! The PJRT column reuses the native session via `rebind_backend` (one H²
+//! construction, one recorded plan, two executions). Results land in
+//! EXPERIMENTS.md.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example laplace_sphere
@@ -15,25 +17,27 @@ fn main() {
     let kernel = KernelFn::laplace();
     let cfg = H2Config { leaf_size: 64, max_rank: 32, far_samples: 128, ..Default::default() };
     let mut pjrt_warned = false;
-    println!("N, construct_s, factor_native_s, factor_pjrt_s, gflops_native, subst_par_s, subst_naive_s, residual");
+    println!("N, construct_s, factor_native_s, factor_pjrt_s, gflops_native, subst_par_s, subst_naive_s, launches, residual");
     let mut prev_time = None;
     for n in [2048usize, 4096, 8192, 16384] {
         let g = Geometry::sphere_surface(n, 1);
-        let solver = H2SolverBuilder::new(g.clone(), kernel.clone())
+        let mut solver = H2SolverBuilder::new(g, kernel.clone())
             .config(cfg.clone())
             .build()
             .expect("well-formed problem");
         let t_c = solver.stats().construct_time;
         let t_f = solver.stats().factor_time;
         let fl = solver.stats().factor_flops;
-        // PJRT column: built separately; NaN when artifacts are missing.
-        let t_fp = match H2SolverBuilder::new(g, kernel.clone())
-            .config(cfg.clone())
-            .backend(BackendSpec::pjrt())
-            .residual_samples(0)
-            .build()
-        {
-            Ok(ps) => ps.stats().factor_time,
+        let launches = solver.stats().schedule.factor_launches();
+        let mut rng = Rng::new(5);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let rep_par = solver.solve(&b).expect("rhs matches");
+        let rep_naive = solver.solve_with(&b, SubstMode::Naive).expect("rhs matches");
+        let resid = rep_par.residual.unwrap_or(f64::NAN);
+        // PJRT column: rebind the backend over the existing H² matrix and
+        // replay the cached plan; NaN when artifacts are missing.
+        let t_fp = match solver.rebind_backend(BackendSpec::pjrt()) {
+            Ok(stats) => stats.factor_time,
             Err(e) => {
                 if !pjrt_warned {
                     eprintln!("NOTE: pjrt backend unavailable ({e}); run `make artifacts`.");
@@ -42,13 +46,13 @@ fn main() {
                 f64::NAN
             }
         };
-        let mut rng = Rng::new(5);
-        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let rep_par = solver.solve(&b).expect("rhs matches");
-        let rep_naive = solver.solve_with(&b, SubstMode::Naive).expect("rhs matches");
-        let resid = rep_par.residual.unwrap_or(f64::NAN);
+        assert_eq!(
+            solver.plan_recordings(),
+            1,
+            "backend rebinding must not re-derive the schedule"
+        );
         println!(
-            "{n}, {t_c:.3}, {t_f:.3}, {t_fp:.3}, {:.2}, {:.4}, {:.4}, {resid:.2e}",
+            "{n}, {t_c:.3}, {t_f:.3}, {t_fp:.3}, {:.2}, {:.4}, {:.4}, {launches}, {resid:.2e}",
             fl as f64 / t_f / 1e9,
             rep_par.subst_time,
             rep_naive.subst_time

@@ -29,6 +29,21 @@ pub fn dim_pad(d: usize) -> usize {
     round_up(d.max(1), 4)
 }
 
+/// Number of batch slots a constant-size batched launch executes for `n`
+/// useful items: the next compiled bucket, or whole 256-slot splits past
+/// the largest bucket. Used by the plan IR to report padding waste.
+pub fn padded_batch(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let top = *BATCH_BUCKETS.last().unwrap();
+    if n <= top {
+        batch_bucket(n)
+    } else {
+        n.div_ceil(top) * top
+    }
+}
+
 /// Pad `m` into shape `(rows, cols)`, writing `diag_fill` on padded diagonal
 /// entries (the paper's AXPY-diagonal trick: keeps padded POTRF/TRSM
 /// non-singular, zero elsewhere so GEMM results are unaffected).
@@ -128,6 +143,15 @@ mod tests {
         assert_eq!(batch_bucket(64), 64);
         assert_eq!(batch_bucket(65), 128);
         assert_eq!(batch_bucket(1000), 256); // saturates, caller splits
+    }
+
+    #[test]
+    fn padded_batch_buckets_and_splits() {
+        assert_eq!(padded_batch(0), 0);
+        assert_eq!(padded_batch(3), 4);
+        assert_eq!(padded_batch(256), 256);
+        assert_eq!(padded_batch(257), 512); // two 256-slot launches
+        assert_eq!(padded_batch(1000), 1024);
     }
 
     #[test]

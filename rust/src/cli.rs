@@ -1,11 +1,12 @@
 //! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §10).
 //!
 //! ```text
-//! h2ulv solve   [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-//!               [--eta E] [--backend native|pjrt|serial]
-//!               [--subst parallel|naive] [--ranks P]
-//! h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
-//! h2ulv figures [--full] [--out DIR]
+//! h2ulv solve     [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
+//!                 [--eta E] [--backend native|pjrt|serial]
+//!                 [--subst parallel|naive] [--ranks P]
+//! h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L] [--eta E]
+//! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
+//! h2ulv figures   [--full] [--out DIR]
 //! h2ulv info
 //! ```
 
@@ -64,6 +65,10 @@ USAGE:
                 [--geometry sphere|cube|molecule] [--rank R] [--leaf L]
                 [--eta E] [--backend native|pjrt|serial]
                 [--subst parallel|naive] [--ranks P] [--seed S]
+  h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
+                [--eta E] [--seed S]
+                (record the execution plan only; print per-level launch
+                 counts and padded-vs-useful FLOP ratios — no numerics)
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
   h2ulv info
@@ -79,6 +84,7 @@ pub fn run(argv: Vec<String>) -> i32 {
     let args = parse_args(&argv[1..]);
     match cmd.as_str() {
         "solve" => cmd_solve(&args),
+        "plan-dump" => cmd_plan_dump(&args),
         "figure" => cmd_figure(&args),
         "figures" => cmd_figures(&args),
         "info" => cmd_info(),
@@ -101,7 +107,10 @@ fn make_geometry(name: &str, n: usize, seed: u64) -> Geometry {
     }
 }
 
-fn cmd_solve(args: &Args) -> i32 {
+/// Problem setup shared by `solve` and `plan-dump`: same flags, same
+/// defaults, so a dumped schedule always describes the problem `solve`
+/// would run.
+fn problem_from_args(args: &Args) -> (usize, u64, KernelFn, Geometry, H2Config) {
     let n = args.usize_or("n", 4096);
     let seed = args.usize_or("seed", 42) as u64;
     let kernel = KernelFn::by_name(args.get("kernel").unwrap_or("laplace"))
@@ -115,6 +124,11 @@ fn cmd_solve(args: &Args) -> i32 {
         near_samples: args.usize_or("near-samples", 96),
         ..Default::default()
     };
+    (n, seed, kernel, g, cfg)
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let (n, seed, kernel, g, cfg) = problem_from_args(args);
     let subst = match args.get("subst") {
         Some("naive") => SubstMode::Naive,
         _ => SubstMode::Parallel,
@@ -207,6 +221,34 @@ fn cmd_solve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Record the execution plan for a problem and print its schedule: the
+/// per-level launch counts and padded-vs-useful FLOP ratios come straight
+/// from the IR — no factorization (and no kernel numerics beyond H²
+/// construction) runs.
+fn cmd_plan_dump(args: &Args) -> i32 {
+    let (n, _seed, kernel, g, cfg) = problem_from_args(args);
+    if let Err(e) = crate::solver::builder::validate(&g, &cfg) {
+        eprintln!("h2ulv plan-dump: {e}");
+        return 1;
+    }
+    println!(
+        "h2ulv plan-dump: N={n} kernel={} geometry={} leaf={} rank={} eta={}",
+        kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
+    );
+    let plan = match crate::solver::guard("planning", || {
+        let h2 = crate::h2::H2Matrix::construct(&g, &kernel, &cfg);
+        crate::plan::record(&h2)
+    }) {
+        Ok(plan) => plan,
+        Err(e) => {
+            eprintln!("h2ulv plan-dump: {e}");
+            return 1;
+        }
+    };
+    print!("{}", plan.render_schedule());
+    0
 }
 
 fn cmd_figure(args: &Args) -> i32 {

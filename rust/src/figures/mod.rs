@@ -78,46 +78,63 @@ pub fn fig12(scale: Scale) -> String {
 
 /// Figures 13 + 14 + 15 — factorization/substitution time vs N (O(N)),
 /// FLOP rate, and FLOP count (between O(N) and O(N log N)).
+///
+/// The PJRT column reuses the native session via
+/// [`crate::solver::H2Solver::rebind_backend`]: the H² matrix is built
+/// once and the recorded plan is replayed on the second backend, so the
+/// comparison isolates execution cost. Schedule statistics (launch counts
+/// per level, padding waste) come straight from the plan IR.
 pub fn fig13_14_15(scale: Scale) -> String {
     let sizes: Vec<usize> = match scale {
         Scale::Quick => vec![1024, 2048, 4096],
         Scale::Full => vec![1024, 2048, 4096, 8192, 16384, 32768],
     };
     let mut out = String::from(
-        "# Figures 13/14/15: N, factor_native_s, subst_native_s, factor_pjrt_s, subst_pjrt_s, factor_gflop, gflops_native, resid\n",
+        "# Figures 13/14/15: N, factor_native_s, subst_native_s, factor_pjrt_s, subst_pjrt_s, factor_gflop, gflops_native, launches, pad_waste, resid\n",
     );
+    let mut schedule_note = String::new();
     for &n in &sizes {
         let g = Geometry::sphere_surface(n, 13);
-        let solver = H2SolverBuilder::new(g.clone(), KernelFn::laplace())
+        let mut solver = H2SolverBuilder::new(g, KernelFn::laplace())
             .config(timing_cfg())
             .residual_samples(64)
             .build()
             .expect("figure problem is well-formed");
         let t_factor = solver.stats().factor_time;
         let factor_flops = solver.stats().factor_flops;
+        let launches = solver.stats().schedule.factor_launches();
+        let pad_waste = solver.stats().schedule.factor_padding_waste();
         let mut rng = Rng::new(7);
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let rep = solver.solve(&b).expect("rhs length matches");
-        let (t_factor_p, t_subst_p) = match H2SolverBuilder::new(g, KernelFn::laplace())
-            .config(timing_cfg())
-            .backend(BackendSpec::pjrt())
-            .residual_samples(0)
-            .build()
-        {
-            Ok(ps) => {
-                let rp = ps.solve(&b).expect("rhs length matches");
-                (ps.stats().factor_time, rp.subst_time)
+        // PJRT column: replay the same plan on the rebound backend (no
+        // second H² construction); NaN when artifacts are missing.
+        let (t_factor_p, t_subst_p) = match solver.rebind_backend(BackendSpec::pjrt()) {
+            Ok(stats) => {
+                let t_f = stats.factor_time;
+                let rp = solver
+                    .solve_opts(&b, &crate::solver::SolveOptions::no_residual())
+                    .expect("rhs length matches");
+                (t_f, rp.subst_time)
             }
             Err(_) => (f64::NAN, f64::NAN),
         };
         out.push_str(&format!(
-            "{n}, {t_factor:.4}, {:.4}, {t_factor_p:.4}, {t_subst_p:.4}, {:.3}, {:.3}, {:.2e}\n",
+            "{n}, {t_factor:.4}, {:.4}, {t_factor_p:.4}, {t_subst_p:.4}, {:.3}, {:.3}, {launches}, {:.1}%, {:.2e}\n",
             rep.subst_time,
             factor_flops as f64 / 1e9,
             factor_flops as f64 / t_factor / 1e9,
+            100.0 * pad_waste,
             rep.residual.unwrap_or(f64::NAN),
         ));
+        if n == *sizes.last().unwrap() {
+            schedule_note = format!(
+                "\nschedule (from the plan IR, N={n}):\n{}",
+                solver.plan().render_schedule()
+            );
+        }
     }
+    out.push_str(&schedule_note);
     out.push_str("\npaper fig13: O(N) slope; fig14: 2.42 TF/s CPU, 12.18 TF/s GPU peak;\n");
     out.push_str("fig15: FLOP count between O(N) and O(N log2 N) until neighbor counts saturate.\n");
     out

@@ -12,7 +12,8 @@
 //! * H²-matrix construction with the paper's *factorization basis*
 //!   ([`construct`], [`h2`]),
 //! * the inherently parallel ULV factorization and the novel parallel
-//!   forward/backward substitution ([`ulv`]),
+//!   forward/backward substitution ([`ulv`]), driven by a recorded,
+//!   replayable execution-plan IR ([`plan`]),
 //! * a batched-execution engine with a native thread-pool backend and an
 //!   XLA/PJRT backend that runs AOT-compiled JAX/Pallas artifacts
 //!   ([`batch`], [`runtime`]),
@@ -38,6 +39,7 @@ pub mod h2;
 pub mod kernels;
 pub mod linalg;
 pub mod metrics;
+pub mod plan;
 pub mod runtime;
 pub mod solver;
 pub mod tree;
@@ -54,7 +56,8 @@ pub mod prelude {
     pub use crate::kernels::KernelFn;
     pub use crate::linalg::Matrix;
     pub use crate::solver::{
-        BackendSpec, BuildStats, DistSolveReport, H2Error, H2Solver, H2SolverBuilder, SolveReport,
+        BackendSpec, BuildStats, DistSolveReport, H2Error, H2Solver, H2SolverBuilder,
+        SolveOptions, SolveReport,
     };
     pub use crate::ulv::SubstMode;
 }

@@ -1,11 +1,21 @@
-//! Global FLOP counter with named phases.
+//! FLOP counters with named phases: per-session [`FlopScope`] handles plus
+//! deprecated process-global totals.
 //!
 //! The paper reports FLOP *counts* (Fig 15), FLOP *rates* (Fig 14) and the
 //! pre-factorization vs factorization *split* (Fig 17). Counters are
 //! thread-safe atomics so batched parallel kernels can report from any
 //! worker.
+//!
+//! **Scoping.** The free functions ([`add`], [`snapshot`], …) feed
+//! process-global statics — concurrent solver sessions cross-contaminate
+//! them, so they are kept only as a deprecated process-wide sum for
+//! single-session harnesses (the figure scripts). Session-accurate
+//! accounting uses a [`FlopScope`]: the plan executor credits each
+//! program's statically-known FLOP total to the scope threaded through it,
+//! so `BuildStats::factor_flops` is correct even with concurrent sessions.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 static TOTAL: AtomicU64 = AtomicU64::new(0);
 
@@ -113,6 +123,56 @@ pub fn snapshot() -> Counts {
     }
 }
 
+/// Per-session FLOP counters.
+///
+/// Cheap to clone (shared atomics); thread the same scope through every
+/// executor of one session. Unlike the process-global statics, scopes from
+/// different sessions never see each other's work.
+#[derive(Clone, Debug, Default)]
+pub struct FlopScope {
+    inner: Arc<ScopeCounters>,
+}
+
+#[derive(Debug, Default)]
+struct ScopeCounters {
+    construct: AtomicU64,
+    prefactor: AtomicU64,
+    factor: AtomicU64,
+    substitute: AtomicU64,
+}
+
+impl FlopScope {
+    pub fn new() -> FlopScope {
+        FlopScope::default()
+    }
+
+    /// Record `n` FLOPs against `phase` in this scope only.
+    pub fn add(&self, phase: Phase, n: u64) {
+        let c = match phase {
+            Phase::Construct => &self.inner.construct,
+            Phase::Prefactor => &self.inner.prefactor,
+            Phase::Factor => &self.inner.factor,
+            Phase::Substitute => &self.inner.substitute,
+        };
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Read this scope's counters.
+    pub fn snapshot(&self) -> Counts {
+        let construct = self.inner.construct.load(Ordering::Relaxed);
+        let prefactor = self.inner.prefactor.load(Ordering::Relaxed);
+        let factor = self.inner.factor.load(Ordering::Relaxed);
+        let substitute = self.inner.substitute.load(Ordering::Relaxed);
+        Counts {
+            total: construct + prefactor + factor + substitute,
+            construct,
+            prefactor,
+            factor,
+            substitute,
+        }
+    }
+}
+
 /// Difference of two snapshots (b - a).
 pub fn delta(a: Counts, b: Counts) -> Counts {
     Counts {
@@ -138,6 +198,23 @@ mod tests {
         assert!(d.factor >= 100);
         assert!(d.prefactor >= 40);
         assert!(d.total >= 140);
+    }
+
+    #[test]
+    fn scopes_are_isolated() {
+        let a = FlopScope::new();
+        let b = FlopScope::new();
+        a.add(Phase::Factor, 100);
+        b.add(Phase::Substitute, 7);
+        assert_eq!(a.snapshot().factor, 100);
+        assert_eq!(a.snapshot().substitute, 0);
+        assert_eq!(b.snapshot().substitute, 7);
+        assert_eq!(b.snapshot().factor, 0);
+        assert_eq!(a.snapshot().total, 100);
+        // Clones share counters (one scope per session, threaded around).
+        let a2 = a.clone();
+        a2.add(Phase::Factor, 1);
+        assert_eq!(a.snapshot().factor, 101);
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! The [`Executor`]: replays a recorded [`Plan`] against any
+//! [`BatchExec`] backend.
+//!
+//! Replay is deterministic: the instruction stream fixes the launch order
+//! and the grouping of every batch, so two replays of the same plan on the
+//! same backend are bit-identical — the property the plan-replay tests
+//! assert and the property that makes backend rebinding
+//! ([`crate::solver::H2Solver::rebind_backend`]) a pure re-execution.
+
+use super::*;
+use crate::batch::BatchExec;
+use crate::h2::H2Matrix;
+use crate::linalg::chol;
+use crate::linalg::Matrix;
+use crate::metrics::flops::{self, FlopScope, Phase};
+use crate::ulv::{LevelFactor, SubstMode, UlvFactor};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Replays plans. Holds the backend and an optional per-session
+/// [`FlopScope`] that the plan's static FLOP metadata is credited to.
+pub struct Executor<'a> {
+    exec: &'a dyn BatchExec,
+    scope: Option<&'a FlopScope>,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(exec: &'a dyn BatchExec) -> Executor<'a> {
+        Executor { exec, scope: None }
+    }
+
+    /// Credit executed FLOPs (from the plan's metadata) to `scope` in
+    /// addition to the deprecated process-global counters the backends
+    /// still feed.
+    pub fn with_scope(mut self, scope: &'a FlopScope) -> Executor<'a> {
+        self.scope = Some(scope);
+        self
+    }
+
+    // ---------------- Factorization replay ----------------
+
+    /// Replay the factorization program against `h2`, producing a
+    /// [`UlvFactor`] that shares `plan` for its substitution replays.
+    ///
+    /// `h2` may be any matrix structurally identical to the one the plan
+    /// was recorded from ([`Plan::compatible`]).
+    pub fn factorize(&self, plan: &Arc<Plan>, h2: &H2Matrix) -> UlvFactor {
+        assert!(plan.compatible(h2), "plan recorded for a different H2 structure");
+        let prev_phase = flops::set_phase(Phase::Factor);
+        let prog = &plan.factor;
+        let mut arena: Vec<Option<Matrix>> = (0..prog.buf_count).map(|_| None).collect();
+
+        self.exec_factor_steps(&prog.prologue, &mut arena, h2);
+        for lp in &prog.levels {
+            self.exec_factor_steps(&lp.steps, &mut arena, h2);
+        }
+        self.finish_factor(plan, h2, arena, prev_phase)
+    }
+
+    /// Execute one stream of factorization instructions against the arena.
+    fn exec_factor_steps(
+        &self,
+        steps: &[Instr],
+        arena: &mut Vec<Option<Matrix>>,
+        h2: &H2Matrix,
+    ) {
+        for step in steps {
+            match step {
+                Instr::LoadDense { items } => {
+                    for &(key, dst) in items {
+                        put(&mut arena, dst, h2.dense[&key].clone());
+                    }
+                }
+                Instr::Sparsify { level, items } => {
+                    let blocks: Vec<Matrix> =
+                        items.iter().map(|it| take(&mut arena, it.a)).collect();
+                    let us: Vec<&Matrix> =
+                        items.iter().map(|it| &h2.bases[it.u.level][it.u.index].u).collect();
+                    let vs: Vec<&Matrix> =
+                        items.iter().map(|it| &h2.bases[it.v.level][it.v.index].u).collect();
+                    let out = self.exec.sparsify(*level, &us, &blocks, &vs);
+                    for (it, m) in items.iter().zip(out) {
+                        put(&mut arena, it.dst, m);
+                    }
+                }
+                Instr::Extract { items } => {
+                    for it in items {
+                        let m = get(&arena, it.src).submatrix(it.r0, it.c0, it.rows, it.cols);
+                        put(&mut arena, it.dst, m);
+                    }
+                }
+                Instr::Potrf { level, bufs } => {
+                    let mut batch: Vec<Matrix> =
+                        bufs.iter().map(|&b| take(&mut arena, b)).collect();
+                    self.exec.potrf(*level, &mut batch);
+                    for (&b, m) in bufs.iter().zip(batch) {
+                        put(&mut arena, b, m);
+                    }
+                }
+                Instr::TrsmRightLt { level, items } => {
+                    let mut panels: Vec<Matrix> =
+                        items.iter().map(|it| take(&mut arena, it.b)).collect();
+                    {
+                        let diags: Vec<&Matrix> =
+                            items.iter().map(|it| get(&arena, it.l)).collect();
+                        self.exec.trsm_right_lt(*level, &diags, &mut panels);
+                    }
+                    for (it, m) in items.iter().zip(panels) {
+                        put(&mut arena, it.b, m);
+                    }
+                }
+                Instr::SchurSelf { level, items } => {
+                    let mut cs: Vec<Matrix> =
+                        items.iter().map(|it| take(&mut arena, it.c)).collect();
+                    {
+                        let aas: Vec<&Matrix> =
+                            items.iter().map(|it| get(&arena, it.a)).collect();
+                        self.exec.schur_self(*level, &aas, &mut cs);
+                    }
+                    for (it, m) in items.iter().zip(cs) {
+                        put(&mut arena, it.c, m);
+                    }
+                }
+                Instr::Merge { level: _, items } => {
+                    for item in items {
+                        let mut merged = Matrix::zeros(item.rows, item.cols);
+                        for part in &item.parts {
+                            match &part.src {
+                                MergeSrc::BufferSub(b) => {
+                                    let src = get(&arena, *b);
+                                    if src.rows() == part.rows && src.cols() == part.cols {
+                                        merged.set_submatrix(part.roff, part.coff, src);
+                                    } else {
+                                        let blk = src.submatrix(0, 0, part.rows, part.cols);
+                                        merged.set_submatrix(part.roff, part.coff, &blk);
+                                    }
+                                }
+                                MergeSrc::Coupling(l, key) => {
+                                    let s = h2.coupling[*l]
+                                        .get(key)
+                                        .expect("plan coupling ref missing in H2 matrix");
+                                    merged.set_submatrix(part.roff, part.coff, s);
+                                }
+                            }
+                        }
+                        put(&mut arena, item.dst, merged);
+                    }
+                }
+                Instr::Free { bufs } => {
+                    for &b in bufs {
+                        arena[b.0 as usize] = None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Assemble the [`UlvFactor`] from the output wiring and run the dense
+    /// root Cholesky (Algorithm 2 line 22).
+    fn finish_factor(
+        &self,
+        plan: &Arc<Plan>,
+        h2: &H2Matrix,
+        mut arena: Vec<Option<Matrix>>,
+        prev_phase: Phase,
+    ) -> UlvFactor {
+        let prog = &plan.factor;
+        // Assemble the factor from the output wiring.
+        let mut levels: Vec<LevelFactor> = Vec::with_capacity(prog.outputs.len());
+        for out in &prog.outputs {
+            let chol_rr: Vec<Matrix> =
+                out.chol_rr.iter().map(|&b| take(&mut arena, b)).collect();
+            let lr: HashMap<(usize, usize), Matrix> =
+                out.lr.iter().map(|&(k, b)| (k, take(&mut arena, b))).collect();
+            let ls: HashMap<(usize, usize), Matrix> =
+                out.ls.iter().map(|&(k, b)| (k, take(&mut arena, b))).collect();
+            levels.push(LevelFactor {
+                level: out.level,
+                bases: h2.bases[out.level].clone(),
+                chol_rr,
+                lr,
+                ls,
+                near: out.near.clone(),
+            });
+        }
+
+        // Root factorization (Algorithm 2 line 22).
+        let root = take(&mut arena, prog.root_src);
+        flops::add(flops::potrf_flops(root.rows()));
+        let root_l = chol::cholesky(&root).expect("root block must stay SPD");
+        flops::set_phase(prev_phase);
+        if let Some(scope) = self.scope {
+            scope.add(Phase::Factor, prog.total_flops);
+        }
+
+        UlvFactor {
+            levels,
+            root_l,
+            depth: plan.depth,
+            leaf_ranges: h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect(),
+            perm: h2.tree.perm.clone(),
+            plan: plan.clone(),
+        }
+    }
+
+    // ---------------- Substitution replay ----------------
+
+    /// Replay the substitution program for `mode` against a tree-ordered
+    /// right-hand side; returns the tree-ordered solution.
+    pub fn solve(
+        &self,
+        plan: &Plan,
+        factor: &UlvFactor,
+        b: &[f64],
+        mode: SubstMode,
+    ) -> Vec<f64> {
+        assert_eq!(b.len(), plan.n);
+        let prev_phase = flops::set_phase(Phase::Substitute);
+        let prog = plan.solve_program(mode);
+        let mut varena: Vec<Vec<f64>> =
+            prog.vec_lens.iter().map(|&len| vec![0.0; len]).collect();
+        let mut x = vec![0.0; plan.n];
+
+        for step in &prog.steps {
+            match step {
+                SolveInstr::LoadRhs { items } => {
+                    for &(s, e, v) in items {
+                        varena[v.0 as usize].copy_from_slice(&b[s..e]);
+                    }
+                }
+                SolveInstr::ApplyBasis { level_idx, level, trans, items } => {
+                    let us: Vec<&Matrix> = items
+                        .iter()
+                        .map(|&(i, _, _)| &factor.levels[*level_idx].bases[i].u)
+                        .collect();
+                    let outs = {
+                        let refs: Vec<&[f64]> = items
+                            .iter()
+                            .map(|&(_, s, _)| varena[s.0 as usize].as_slice())
+                            .collect();
+                        self.exec.apply_basis(*level, &us, *trans, &refs)
+                    };
+                    for (&(_, _, d), o) in items.iter().zip(outs) {
+                        varena[d.0 as usize] = o;
+                    }
+                }
+                SolveInstr::Split { items } => {
+                    for &(src, at, lo, hi) in items {
+                        let (a, b2) = {
+                            let s = &varena[src.0 as usize];
+                            (s[..at].to_vec(), s[at..].to_vec())
+                        };
+                        varena[lo.0 as usize] = a;
+                        varena[hi.0 as usize] = b2;
+                    }
+                }
+                SolveInstr::Concat { items } => {
+                    for &(dst, a, b2) in items {
+                        let mut v = varena[a.0 as usize].clone();
+                        v.extend_from_slice(&varena[b2.0 as usize]);
+                        varena[dst.0 as usize] = v;
+                    }
+                }
+                SolveInstr::Copy { items } => {
+                    for &(dst, src) in items {
+                        varena[dst.0 as usize] = varena[src.0 as usize].clone();
+                    }
+                }
+                SolveInstr::TrsvFwd { level, items } => {
+                    let mut xs: Vec<Vec<f64>> = items
+                        .iter()
+                        .map(|&(_, v)| std::mem::take(&mut varena[v.0 as usize]))
+                        .collect();
+                    let ls: Vec<&Matrix> = items.iter().map(|(m, _)| mat(factor, m)).collect();
+                    self.exec.trsv_fwd(*level, &ls, &mut xs);
+                    for (&(_, v), xv) in items.iter().zip(xs) {
+                        varena[v.0 as usize] = xv;
+                    }
+                }
+                SolveInstr::TrsvBwd { level, items } => {
+                    let mut xs: Vec<Vec<f64>> = items
+                        .iter()
+                        .map(|&(_, v)| std::mem::take(&mut varena[v.0 as usize]))
+                        .collect();
+                    let ls: Vec<&Matrix> = items.iter().map(|(m, _)| mat(factor, m)).collect();
+                    self.exec.trsv_bwd(*level, &ls, &mut xs);
+                    for (&(_, v), xv) in items.iter().zip(xs) {
+                        varena[v.0 as usize] = xv;
+                    }
+                }
+                SolveInstr::GemvAcc { level, trans, items } => {
+                    let mut ys: Vec<Vec<f64>> = items
+                        .iter()
+                        .map(|&(_, _, y)| std::mem::take(&mut varena[y.0 as usize]))
+                        .collect();
+                    {
+                        let mats: Vec<&Matrix> =
+                            items.iter().map(|(m, _, _)| mat(factor, m)).collect();
+                        let xs: Vec<&[f64]> = items
+                            .iter()
+                            .map(|&(_, xv, _)| varena[xv.0 as usize].as_slice())
+                            .collect();
+                        self.exec.gemv_acc(*level, -1.0, &mats, *trans, &xs, &mut ys);
+                    }
+                    for (&(_, _, y), yv) in items.iter().zip(ys) {
+                        varena[y.0 as usize] = yv;
+                    }
+                }
+                SolveInstr::Add { items } => {
+                    for &(dst, a, b2) in items {
+                        let v: Vec<f64> = varena[a.0 as usize]
+                            .iter()
+                            .zip(&varena[b2.0 as usize])
+                            .map(|(&p, &q)| p + q)
+                            .collect();
+                        varena[dst.0 as usize] = v;
+                    }
+                }
+                SolveInstr::RootSolve { vec } => {
+                    let n = factor.root_l.rows();
+                    flops::add(2 * (n * n) as u64);
+                    chol::potrs(&factor.root_l, &mut varena[vec.0 as usize]);
+                }
+                SolveInstr::StoreSol { items } => {
+                    for &(s, e, v) in items {
+                        x[s..e].copy_from_slice(&varena[v.0 as usize]);
+                    }
+                }
+            }
+        }
+
+        flops::set_phase(prev_phase);
+        if let Some(scope) = self.scope {
+            scope.add(Phase::Substitute, prog.total_flops);
+        }
+        x
+    }
+}
+
+fn take(arena: &mut [Option<Matrix>], b: BufferId) -> Matrix {
+    arena[b.0 as usize].take().expect("plan buffer read after free")
+}
+
+fn get<'m>(arena: &'m [Option<Matrix>], b: BufferId) -> &'m Matrix {
+    arena[b.0 as usize].as_ref().expect("plan buffer read before write")
+}
+
+fn put(arena: &mut [Option<Matrix>], b: BufferId, m: Matrix) {
+    arena[b.0 as usize] = Some(m);
+}
+
+fn mat<'f>(factor: &'f UlvFactor, m: &MatRef) -> &'f Matrix {
+    match *m {
+        MatRef::CholRr { level_idx, index } => &factor.levels[level_idx].chol_rr[index],
+        MatRef::Lr { level_idx, key } => &factor.levels[level_idx].lr[&key],
+        MatRef::Ls { level_idx, key } => &factor.levels[level_idx].ls[&key],
+    }
+}

@@ -1,0 +1,560 @@
+//! Recorded, replayable execution plans for the ULV factorization and
+//! substitution.
+//!
+//! The paper's central structural claim is that the H²-ULV schedule is
+//! *static*: every batched launch of every level can be enumerated before a
+//! single numeric kernel runs — within a level there are no dependencies,
+//! and across levels the order is fixed by the tree. This module turns that
+//! claim into an explicit artifact: a [`Plan`] is a backend-neutral
+//! instruction stream recorded once per H² *structure* (tree + interaction
+//! lists + ranks) by the [`Recorder`](record::Recorder), and replayed any
+//! number of times by the [`Executor`](exec::Executor) against any
+//! [`crate::batch::BatchExec`] backend.
+//!
+//! Separating the task graph from its execution is the same move the
+//! runtime-system literature makes (Deshmukh & Yokota's O(N) distributed
+//! factorization over StarPU/PaRSEC; Ma et al.'s trailing-dependency-free
+//! scheduling); here the graph degenerates into a *level-ordered list of
+//! batched launches*, which is exactly why the method is GPU-friendly.
+//!
+//! # Instruction ↔ paper mapping
+//!
+//! Factorization ([`Instr`], paper Algorithms 2 and 4):
+//!
+//! | `Instr` | Paper step |
+//! |---------|------------|
+//! | [`Instr::LoadDense`] | Algorithm 2 input: leaf near blocks `A_ij` |
+//! | [`Instr::Sparsify`] | Alg 2 l.6 / Alg 4 l.4: `F_ij = U_iᵀ A_ij U_j` (Figure 2 "matrix sparsification") |
+//! | [`Instr::Potrf`] | Alg 2 l.8: batched Cholesky of the diagonal `F_ii^RR` blocks |
+//! | [`Instr::TrsmRightLt`] | Alg 2 l.10-13 / Alg 4 l.6-8: panels `L(r)_ji = F_ji^RR L_iiᵀ⁻¹`, `L(s)_ji = F_ji^SR L_iiᵀ⁻¹` |
+//! | [`Instr::SchurSelf`] | Alg 2 l.15, eq 21: the *single* trailing update `F_ii^SS -= L(s)_ii L(s)_iiᵀ` |
+//! | [`Instr::Merge`] | Alg 2 l.18-20: assemble parent near blocks from children `SS` parts and couplings `Ŝ` |
+//! | [`FactorProgram::root_launch`] | Alg 2 l.22: dense Cholesky of the merged root |
+//!
+//! Substitution ([`SolveInstr`], paper Algorithm 3 and §3.7):
+//!
+//! | `SolveInstr` | Paper step |
+//! |--------------|------------|
+//! | [`SolveInstr::ApplyBasis`] (trans) | Alg 3 l.3: `c_i = U_iᵀ b_i` |
+//! | [`SolveInstr::TrsvFwd`] | Alg 3 l.5 (naive) / §3.7 eq 31 `z_i = L_ii⁻¹ b_i` (parallel, batched) |
+//! | [`SolveInstr::GemvAcc`] | Alg 3 l.6-8 trailing updates / §3.7 single-hop matvec rounds |
+//! | [`SolveInstr::RootSolve`] | root forward+backward solve |
+//! | [`SolveInstr::TrsvBwd`] | backward variant of the above |
+//! | [`SolveInstr::ApplyBasis`] (no-trans) | Alg 3 end: `x_i = U_i [x^S; x^R]` |
+//!
+//! Data-movement steps ([`Instr::Extract`], [`SolveInstr::Split`],
+//! [`SolveInstr::Concat`], …) are bookkeeping the eager implementation did
+//! inline between launches; they carry no FLOPs and are not counted as
+//! launches in [`ScheduleStats`].
+//!
+//! # Why record?
+//!
+//! * **Replay** — `H2Solver::refactorize` with an unchanged structure and
+//!   every additional right-hand side re-execute the cached plan; schedule
+//!   discovery never runs twice ([`Plan::compatible`] guards reuse).
+//! * **Backend rebinding** — `H2Solver::rebind_backend` re-executes the
+//!   same plan on a different [`crate::solver::BackendSpec`] without
+//!   rebuilding the H² matrix.
+//! * **Introspection** — the plan carries per-launch shape/FLOP metadata,
+//!   so launch counts per level and constant-shape padding waste
+//!   ([`ScheduleStats`]) are reported from the IR, not measured.
+
+pub mod exec;
+pub mod record;
+
+pub use exec::Executor;
+pub use record::{record, Recorder};
+
+use crate::batch::pad::{dim_pad, padded_batch};
+use crate::h2::H2Matrix;
+use crate::metrics::flops;
+
+/// Index of a matrix block in the factorization arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BufferId(pub u32);
+
+/// Index of a vector in the substitution arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct VecId(pub u32);
+
+/// Reference to a shared basis `U_i` of the H² matrix, by `(level, box)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BasisRef {
+    pub level: usize,
+    pub index: usize,
+}
+
+/// Reference to a factor matrix resolved against a [`crate::ulv::UlvFactor`]
+/// during substitution replay. `level_idx` indexes `UlvFactor::levels`
+/// (0 = leaf level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatRef {
+    /// Diagonal Cholesky factor `L_ii` of box `index`.
+    CholRr { level_idx: usize, index: usize },
+    /// Redundant-row panel `L(r)_ji` keyed `(j, i)`.
+    Lr { level_idx: usize, key: (usize, usize) },
+    /// Skeleton-row panel `L(s)_ji` keyed `(j, i)`.
+    Ls { level_idx: usize, key: (usize, usize) },
+}
+
+/// One batched item of [`Instr::Sparsify`]: `dst = U_uᵀ · a · U_v`.
+#[derive(Clone, Debug)]
+pub struct SparsifyItem {
+    pub u: BasisRef,
+    pub a: BufferId,
+    pub v: BasisRef,
+    pub dst: BufferId,
+}
+
+/// One item of [`Instr::Extract`]: `dst = src[r0.., c0..][..rows, ..cols]`.
+#[derive(Clone, Debug)]
+pub struct ExtractItem {
+    pub src: BufferId,
+    pub r0: usize,
+    pub c0: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub dst: BufferId,
+}
+
+/// One batched item of [`Instr::TrsmRightLt`]: `b <- b · L_lᵀ⁻¹`.
+#[derive(Clone, Debug)]
+pub struct TrsmItem {
+    pub l: BufferId,
+    pub b: BufferId,
+}
+
+/// One batched item of [`Instr::SchurSelf`]: `c <- c - a aᵀ`.
+#[derive(Clone, Debug)]
+pub struct SyrkItem {
+    pub a: BufferId,
+    pub c: BufferId,
+}
+
+/// Where one tile of a merged parent block comes from.
+#[derive(Clone, Debug)]
+pub enum MergeSrc {
+    /// Leading `rows × cols` of a factorization buffer (a child's `SS`
+    /// part, post-Schur for diagonal children).
+    BufferSub(BufferId),
+    /// A far-field coupling `Ŝ_(i,j)` of the H² matrix at `(level, key)`.
+    Coupling(usize, (usize, usize)),
+}
+
+/// One tile of a [`MergeItem`].
+#[derive(Clone, Debug)]
+pub struct MergePart {
+    pub roff: usize,
+    pub coff: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub src: MergeSrc,
+}
+
+/// One item of [`Instr::Merge`]: assemble a parent near block.
+#[derive(Clone, Debug)]
+pub struct MergeItem {
+    pub dst: BufferId,
+    pub rows: usize,
+    pub cols: usize,
+    pub parts: Vec<MergePart>,
+}
+
+/// One factorization instruction. Batched variants are single conceptual
+/// kernel launches (the paper's batched cuBLAS/cuSOLVER calls);
+/// `LoadDense`/`Extract`/`Merge`/`Free` are data movement.
+#[derive(Clone, Debug)]
+pub enum Instr {
+    /// Gather dense leaf near blocks `A_ij` from the H² matrix.
+    LoadDense { items: Vec<((usize, usize), BufferId)> },
+    /// Batched two-sided basis transform (matrix sparsification).
+    Sparsify { level: usize, items: Vec<SparsifyItem> },
+    /// Submatrix extraction (data movement between launches).
+    Extract { items: Vec<ExtractItem> },
+    /// Batched in-place Cholesky of diagonal `RR` blocks.
+    Potrf { level: usize, bufs: Vec<BufferId> },
+    /// Batched right-side lower-transposed TRSM panel solves.
+    TrsmRightLt { level: usize, items: Vec<TrsmItem> },
+    /// Batched SYRK-shaped Schur update (eq 21).
+    SchurSelf { level: usize, items: Vec<SyrkItem> },
+    /// Assemble parent-level near blocks (`level` = child level).
+    Merge { level: usize, items: Vec<MergeItem> },
+    /// Release buffers that no later instruction reads.
+    Free { bufs: Vec<BufferId> },
+}
+
+/// Output wiring of one factorization level: which arena buffers hold the
+/// [`crate::ulv::LevelFactor`] content after replay.
+#[derive(Clone, Debug)]
+pub struct LevelOut {
+    pub level: usize,
+    /// One buffer per box (0×0 for boxes with no redundant DOFs).
+    pub chol_rr: Vec<BufferId>,
+    pub lr: Vec<((usize, usize), BufferId)>,
+    pub ls: Vec<((usize, usize), BufferId)>,
+    pub near: Vec<(usize, usize)>,
+}
+
+/// The instruction stream of one tree level: every batched launch of the
+/// level plus the data movement between launches. Within a level the
+/// launches have no mutual dependencies — the paper's core property — so
+/// a future async executor can overlap them freely; across levels the
+/// order is fixed.
+#[derive(Clone, Debug)]
+pub struct LevelProgram {
+    pub level: usize,
+    pub steps: Vec<Instr>,
+    /// Per-launch metadata (see [`LaunchMeta`]), in issue order.
+    pub launches: Vec<LaunchMeta>,
+}
+
+/// The complete factorization program (Algorithm 2 end to end).
+#[derive(Clone, Debug)]
+pub struct FactorProgram {
+    /// Arena size needed to replay.
+    pub buf_count: usize,
+    /// Arena prologue: gather the dense leaf blocks (no launches).
+    pub prologue: Vec<Instr>,
+    /// Level programs, finest level first (matching `UlvFactor::levels`).
+    pub levels: Vec<LevelProgram>,
+    /// Output wiring, leaf level first.
+    pub outputs: Vec<LevelOut>,
+    /// Buffer holding the merged root block.
+    pub root_src: BufferId,
+    /// Root dimension.
+    pub root_n: usize,
+    /// The dense root Cholesky (Algorithm 2 line 22).
+    pub root_launch: LaunchMeta,
+    /// Total useful FLOPs of the whole program.
+    pub total_flops: u64,
+}
+
+impl FactorProgram {
+    /// Every launch of the program, level order then root.
+    pub fn launches(&self) -> impl Iterator<Item = &LaunchMeta> {
+        self.levels
+            .iter()
+            .flat_map(|l| l.launches.iter())
+            .chain(std::iter::once(&self.root_launch))
+    }
+}
+
+/// One batched item of [`SolveInstr::ApplyBasis`]: `(box, src, dst)`.
+pub type BasisItem = (usize, VecId, VecId);
+
+/// One substitution instruction. As in [`Instr`], batched variants are
+/// launches; the rest is segment bookkeeping.
+#[derive(Clone, Debug)]
+pub enum SolveInstr {
+    /// `dst = b[begin..end]` — scatter the RHS into leaf segments.
+    LoadRhs { items: Vec<(usize, usize, VecId)> },
+    /// Batched `dst = U_iᵀ src` (trans) or `dst = U_i src`.
+    ApplyBasis { level_idx: usize, level: usize, trans: bool, items: Vec<BasisItem> },
+    /// `(src, at, lo, hi)`: `lo = src[..at]`, `hi = src[at..]`.
+    Split { items: Vec<(VecId, usize, VecId, VecId)> },
+    /// `(dst, a, b)`: `dst = [a; b]`.
+    Concat { items: Vec<(VecId, VecId, VecId)> },
+    /// `(dst, src)`: `dst = src`.
+    Copy { items: Vec<(VecId, VecId)> },
+    /// Batched forward TRSV `x <- L⁻¹ x` in place.
+    TrsvFwd { level: usize, items: Vec<(MatRef, VecId)> },
+    /// Batched backward TRSV `x <- Lᵀ⁻¹ x` in place.
+    TrsvBwd { level: usize, items: Vec<(MatRef, VecId)> },
+    /// Batched `y += -op(A) x`; `(a, x, y)` with unique `y` per launch.
+    GemvAcc { level: usize, trans: bool, items: Vec<(MatRef, VecId, VecId)> },
+    /// `(dst, a, b)`: elementwise `dst = a + b`.
+    Add { items: Vec<(VecId, VecId, VecId)> },
+    /// Dense root solve `x <- (L Lᵀ)⁻¹ x` in place.
+    RootSolve { vec: VecId },
+    /// `x[begin..end] = src` — gather leaf segments into the solution.
+    StoreSol { items: Vec<(usize, usize, VecId)> },
+}
+
+/// One substitution program (forward + root + backward) for a fixed
+/// [`crate::ulv::SubstMode`].
+#[derive(Clone, Debug)]
+pub struct SolveProgram {
+    /// Number of vectors in the replay arena.
+    pub vec_count: usize,
+    /// Length of each vector (arena slots are zero-initialized per replay).
+    pub vec_lens: Vec<usize>,
+    pub steps: Vec<SolveInstr>,
+    pub launches: Vec<LaunchMeta>,
+    pub total_flops: u64,
+}
+
+/// Static metadata of one batched launch: what the schedule looks like
+/// before any numerics run.
+#[derive(Clone, Copy, Debug)]
+pub struct LaunchMeta {
+    pub level: usize,
+    pub kernel: &'static str,
+    /// Number of batch items.
+    pub batch: usize,
+    /// Useful FLOPs (sum over the actual item shapes).
+    pub flops: u64,
+    /// FLOPs a constant-shape padded batch performs: every item padded to
+    /// the launch maximum (dims rounded to multiples of 4, paper §4.1) and
+    /// the batch rounded to the next compiled bucket.
+    pub padded_flops: u64,
+}
+
+impl LaunchMeta {
+    /// Build metadata from per-item `(rows, cols, flops)` triples and a
+    /// padded-FLOP model for the padded `(rows, cols)` shape.
+    pub(crate) fn new(
+        level: usize,
+        kernel: &'static str,
+        shapes: &[(usize, usize, u64)],
+        padded_item: impl Fn(usize, usize) -> u64,
+    ) -> LaunchMeta {
+        let batch = shapes.len();
+        let flops: u64 = shapes.iter().map(|&(_, _, f)| f).sum();
+        let max_r = shapes.iter().map(|&(r, _, _)| r).max().unwrap_or(0);
+        let max_c = shapes.iter().map(|&(_, c, _)| c).max().unwrap_or(0);
+        let padded = if batch == 0 {
+            0
+        } else {
+            padded_item(dim_pad(max_r), dim_pad(max_c)) * padded_batch(batch) as u64
+        };
+        LaunchMeta { level, kernel, batch, flops, padded_flops: padded }
+    }
+}
+
+/// Structural signature of an H² matrix: everything the recorder depends
+/// on. Two matrices with equal signatures produce identical plans, so a
+/// cached plan can be replayed against either ([`Plan::compatible`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanSig {
+    pub depth: usize,
+    pub leaf_ranges: Vec<(usize, usize)>,
+    /// Near interaction pairs per level (`0..=depth`).
+    pub near: Vec<Vec<(usize, usize)>>,
+    /// Far interaction pairs per level.
+    pub far: Vec<Vec<(usize, usize)>>,
+    /// `(ndof, rank)` per box per level.
+    pub shapes: Vec<Vec<(usize, usize)>>,
+}
+
+impl PlanSig {
+    /// Compute the signature of an H² matrix.
+    pub fn of(h2: &H2Matrix) -> PlanSig {
+        let depth = h2.tree.depth;
+        PlanSig {
+            depth,
+            leaf_ranges: h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect(),
+            near: (0..=depth).map(|l| h2.lists[l].near.clone()).collect(),
+            far: (0..=depth).map(|l| h2.lists[l].far.clone()).collect(),
+            shapes: (0..=depth)
+                .map(|l| h2.bases[l].iter().map(|b| (b.ndof(), b.rank)).collect())
+                .collect(),
+        }
+    }
+}
+
+/// Aggregated launch statistics of one tree level.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LevelScheduleStats {
+    pub level: usize,
+    /// Batched kernel launches at this level.
+    pub launches: usize,
+    /// Total batch items across those launches.
+    pub batch_items: usize,
+    /// Useful FLOPs.
+    pub flops: u64,
+    /// Constant-shape padded FLOPs (see [`LaunchMeta::padded_flops`]).
+    pub padded_flops: u64,
+}
+
+/// Schedule statistics computed directly from the IR — no execution needed.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleStats {
+    /// Factorization program, aggregated by level (root = level 0).
+    pub factor_levels: Vec<LevelScheduleStats>,
+    /// Parallel-substitution program, aggregated by level.
+    pub solve_levels: Vec<LevelScheduleStats>,
+}
+
+impl ScheduleStats {
+    fn aggregate(launches: &[LaunchMeta]) -> Vec<LevelScheduleStats> {
+        let max_level = launches.iter().map(|l| l.level).max().unwrap_or(0);
+        let mut out: Vec<LevelScheduleStats> = (0..=max_level)
+            .map(|level| LevelScheduleStats { level, ..Default::default() })
+            .collect();
+        for l in launches {
+            let s = &mut out[l.level];
+            s.launches += 1;
+            s.batch_items += l.batch;
+            s.flops += l.flops;
+            s.padded_flops += l.padded_flops;
+        }
+        out
+    }
+
+    /// Total factorization launches.
+    pub fn factor_launches(&self) -> usize {
+        self.factor_levels.iter().map(|s| s.launches).sum()
+    }
+
+    /// Total parallel-substitution launches.
+    pub fn solve_launches(&self) -> usize {
+        self.solve_levels.iter().map(|s| s.launches).sum()
+    }
+
+    /// Total useful factorization FLOPs.
+    pub fn factor_flops(&self) -> u64 {
+        self.factor_levels.iter().map(|s| s.flops).sum()
+    }
+
+    /// Total padded factorization FLOPs.
+    pub fn factor_padded_flops(&self) -> u64 {
+        self.factor_levels.iter().map(|s| s.padded_flops).sum()
+    }
+
+    /// Fraction of padded factorization FLOPs that are padding waste
+    /// (`1 - useful / padded`), in `[0, 1)`.
+    pub fn factor_padding_waste(&self) -> f64 {
+        let padded = self.factor_padded_flops();
+        if padded == 0 {
+            return 0.0;
+        }
+        1.0 - self.factor_flops() as f64 / padded as f64
+    }
+}
+
+/// A recorded execution plan: the complete, backend-neutral instruction
+/// stream for one H² structure. Record once, replay many times.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Tree depth.
+    pub depth: usize,
+    /// Structural signature of the H² matrix this was recorded from.
+    pub sig: PlanSig,
+    /// Algorithm 2/4: the level-ordered factorization program.
+    pub factor: FactorProgram,
+    /// §3.7 parallel substitution program.
+    pub solve_parallel: SolveProgram,
+    /// Algorithm 3 naive substitution program (batch-of-one launches with
+    /// the serial cross-box dependency order baked into the stream).
+    pub solve_naive: SolveProgram,
+}
+
+impl Plan {
+    /// Can this plan be replayed against `h2` (identical structure)?
+    pub fn compatible(&self, h2: &H2Matrix) -> bool {
+        self.sig == PlanSig::of(h2)
+    }
+
+    /// Launch/shape/FLOP statistics straight from the IR.
+    pub fn schedule_stats(&self) -> ScheduleStats {
+        let factor_metas: Vec<LaunchMeta> = self.factor.launches().copied().collect();
+        ScheduleStats {
+            factor_levels: ScheduleStats::aggregate(&factor_metas),
+            solve_levels: ScheduleStats::aggregate(&self.solve_parallel.launches),
+        }
+    }
+
+    /// Render a human-readable schedule dump (the CLI `plan-dump` body).
+    pub fn render_schedule(&self) -> String {
+        fn table(out: &mut String, header: &str, levels: &[LevelScheduleStats]) {
+            out.push_str(&format!(
+                "\n{header} (level, launches, batch_items, useful_gflop, padded_gflop, waste):\n"
+            ));
+            for s in levels.iter().rev() {
+                if s.launches == 0 {
+                    continue;
+                }
+                let waste = if s.padded_flops > 0 {
+                    100.0 * (1.0 - s.flops as f64 / s.padded_flops as f64)
+                } else {
+                    0.0
+                };
+                out.push_str(&format!(
+                    "  L{:<2} {:>4} {:>8} {:>12.4} {:>12.4} {:>6.1}%\n",
+                    s.level,
+                    s.launches,
+                    s.batch_items,
+                    s.flops as f64 / 1e9,
+                    s.padded_flops as f64 / 1e9,
+                    waste
+                ));
+            }
+        }
+        let stats = self.schedule_stats();
+        let mut out = format!(
+            "plan: N={}, depth={}, factor launches={}, subst launches={}\n",
+            self.n,
+            self.depth,
+            stats.factor_launches(),
+            stats.solve_launches()
+        );
+        table(&mut out, "factorization", &stats.factor_levels);
+        table(&mut out, "parallel substitution", &stats.solve_levels);
+        out.push_str(&format!(
+            "\ntotal factor: {:.4} useful GFLOP, {:.4} padded GFLOP, padding waste {:.1}%\n",
+            stats.factor_flops() as f64 / 1e9,
+            stats.factor_padded_flops() as f64 / 1e9,
+            100.0 * stats.factor_padding_waste()
+        ));
+        out
+    }
+
+    /// The substitution program for a mode.
+    pub fn solve_program(&self, mode: crate::ulv::SubstMode) -> &SolveProgram {
+        match mode {
+            crate::ulv::SubstMode::Parallel => &self.solve_parallel,
+            crate::ulv::SubstMode::Naive => &self.solve_naive,
+        }
+    }
+}
+
+/// FLOPs of a sparsification item `U_iᵀ (n_i × n_j) U_j` — two GEMMs,
+/// matching [`crate::batch::count_sparsify_flops`].
+pub(crate) fn sparsify_flops(ni: usize, nj: usize) -> u64 {
+    flops::gemm_flops(ni, nj, ni) + flops::gemm_flops(ni, nj, nj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construct::H2Config;
+    use crate::geometry::Geometry;
+    use crate::kernels::KernelFn;
+
+    fn small_h2() -> H2Matrix {
+        let g = Geometry::sphere_surface(256, 31);
+        let cfg = H2Config { leaf_size: 32, max_rank: 16, ..Default::default() };
+        H2Matrix::construct(&g, &KernelFn::laplace(), &cfg)
+    }
+
+    #[test]
+    fn signature_detects_structure_changes() {
+        let h2 = small_h2();
+        let sig = PlanSig::of(&h2);
+        assert_eq!(sig, PlanSig::of(&h2));
+        let g = Geometry::sphere_surface(256, 31);
+        let cfg = H2Config { leaf_size: 64, max_rank: 16, ..Default::default() };
+        let other = H2Matrix::construct(&g, &KernelFn::laplace(), &cfg);
+        assert_ne!(sig, PlanSig::of(&other));
+    }
+
+    #[test]
+    fn schedule_stats_nonempty_and_padded_dominates() {
+        let h2 = small_h2();
+        let plan = record(&h2);
+        let stats = plan.schedule_stats();
+        assert!(plan.factor.total_flops > 0);
+        assert!(stats.factor_launches() > 0);
+        assert!(stats.solve_launches() > 0);
+        assert!(
+            stats.factor_padded_flops() >= stats.factor_flops(),
+            "padding can only add work"
+        );
+        let waste = stats.factor_padding_waste();
+        assert!((0.0..1.0).contains(&waste), "waste {waste} out of range");
+        let dump = plan.render_schedule();
+        assert!(dump.contains("factor launches"));
+    }
+}

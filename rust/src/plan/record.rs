@@ -1,0 +1,762 @@
+//! The [`Recorder`]: one structural walk of the H² tree that emits the
+//! complete factorization program (paper Algorithms 2/4) and both
+//! substitution programs (Algorithm 3 naive; §3.7 parallel).
+//!
+//! Recording touches no matrix *values* — only the tree, the interaction
+//! lists, and the per-box `(ndof, rank)` shapes. That is the paper's
+//! "inherently parallel" property made concrete: the entire schedule is
+//! enumerable before any numeric kernel runs, and a plan recorded from one
+//! H² matrix replays bit-identically against any other matrix with the same
+//! structure (e.g. after a kernel-parameter change).
+
+use super::*;
+use crate::h2::H2Matrix;
+use crate::metrics::flops::{gemm_flops, potrf_flops, trsm_flops};
+use crate::ulv::SubstMode;
+use std::collections::{HashMap, HashSet};
+
+/// Record the full execution plan for an H² matrix.
+pub fn record(h2: &H2Matrix) -> Plan {
+    Recorder::new(h2).run()
+}
+
+/// Per-level structural info gathered while recording the factorization,
+/// reused to record the substitution programs.
+struct LevelInfo {
+    level: usize,
+    width: usize,
+    ranks: Vec<usize>,
+    nreds: Vec<usize>,
+    near: Vec<(usize, usize)>,
+    /// Sorted for deterministic launch grouping (the eager implementation
+    /// iterated hash maps here — same math, arbitrary round order).
+    lr_keys: Vec<(usize, usize)>,
+    ls_keys: Vec<(usize, usize)>,
+}
+
+/// Walks the H² structure once and emits a [`Plan`].
+pub struct Recorder<'a> {
+    h2: &'a H2Matrix,
+    buf_count: u32,
+    steps: Vec<Instr>,
+    launches: Vec<LaunchMeta>,
+    infos: Vec<LevelInfo>,
+}
+
+impl<'a> Recorder<'a> {
+    pub fn new(h2: &'a H2Matrix) -> Recorder<'a> {
+        Recorder { h2, buf_count: 0, steps: Vec::new(), launches: Vec::new(), infos: Vec::new() }
+    }
+
+    fn buf(&mut self) -> BufferId {
+        let id = BufferId(self.buf_count);
+        self.buf_count += 1;
+        id
+    }
+
+    /// Record a launch, skipping empty batches (no backend would issue
+    /// them, so they must not inflate the schedule statistics).
+    fn push_launch(&mut self, meta: LaunchMeta) {
+        if meta.batch > 0 {
+            self.launches.push(meta);
+        }
+    }
+
+    /// Drain the step/launch buffers into a [`LevelProgram`].
+    fn finish_level(&mut self, level: usize) -> LevelProgram {
+        LevelProgram {
+            level,
+            steps: std::mem::take(&mut self.steps),
+            launches: std::mem::take(&mut self.launches),
+        }
+    }
+
+    /// Record everything: factorization, then both substitution programs.
+    pub fn run(mut self) -> Plan {
+        let (prologue, levels, outputs, root_src, root_n, root_launch) = self.record_factor();
+        let total_flops: u64 = levels
+            .iter()
+            .flat_map(|l| l.launches.iter())
+            .map(|l| l.flops)
+            .sum::<u64>()
+            + root_launch.flops;
+        let factor = FactorProgram {
+            buf_count: self.buf_count as usize,
+            prologue,
+            levels,
+            outputs,
+            root_src,
+            root_n,
+            root_launch,
+            total_flops,
+        };
+        let solve_parallel = self.record_solve(SubstMode::Parallel, root_n);
+        let solve_naive = self.record_solve(SubstMode::Naive, root_n);
+        Plan {
+            n: self.h2.n(),
+            depth: self.h2.tree.depth,
+            sig: PlanSig::of(self.h2),
+            factor,
+            solve_parallel,
+            solve_naive,
+        }
+    }
+
+    // ---------------- Factorization (Algorithms 2 and 4) ----------------
+
+    #[allow(clippy::type_complexity)]
+    fn record_factor(
+        &mut self,
+    ) -> (Vec<Instr>, Vec<LevelProgram>, Vec<LevelOut>, BufferId, usize, LaunchMeta) {
+        let h2 = self.h2;
+        let depth = h2.tree.depth;
+
+        // Leaf near blocks enter the arena.
+        let leaf_near = h2.lists[depth].near.clone();
+        let mut current: HashMap<(usize, usize), BufferId> = HashMap::new();
+        let mut load_items = Vec::with_capacity(leaf_near.len());
+        for &key in &leaf_near {
+            let b = self.buf();
+            load_items.push((key, b));
+            current.insert(key, b);
+        }
+        let prologue = vec![Instr::LoadDense { items: load_items }];
+
+        let mut level_programs: Vec<LevelProgram> = Vec::with_capacity(depth);
+        let mut outputs: Vec<LevelOut> = Vec::with_capacity(depth);
+        let mut root_n = h2.n();
+
+        for l in (1..=depth).rev() {
+            let bases = &h2.bases[l];
+            let near = h2.lists[l].near.clone();
+            let width = h2.tree.width(l);
+            let ndof = |i: usize| bases[i].ndof();
+            let rank = |i: usize| bases[i].rank;
+            let nred = |i: usize| bases[i].nred();
+
+            // --- 1. Sparsify every near block: F_ij = U_iᵀ A_ij U_j. ---
+            let mut f: HashMap<(usize, usize), BufferId> = HashMap::new();
+            let mut sp_items = Vec::with_capacity(near.len());
+            let mut sp_shapes = Vec::with_capacity(near.len());
+            for &(i, j) in &near {
+                let a = current.remove(&(i, j)).expect("missing near block");
+                let dst = self.buf();
+                sp_items.push(SparsifyItem {
+                    u: BasisRef { level: l, index: i },
+                    a,
+                    v: BasisRef { level: l, index: j },
+                    dst,
+                });
+                sp_shapes.push((ndof(i), ndof(j), sparsify_flops(ndof(i), ndof(j))));
+                f.insert((i, j), dst);
+            }
+            self.push_launch(LaunchMeta::new(l, "SPARSIFY", &sp_shapes, |r, c| {
+                gemm_flops(r, c, r) + gemm_flops(r, c, c)
+            }));
+            self.steps.push(Instr::Sparsify { level: l, items: sp_items });
+
+            // --- 2. Extract RR diagonal blocks; batched POTRF on non-empty. ---
+            let mut rr: Vec<BufferId> = Vec::with_capacity(width);
+            let mut ex_items = Vec::with_capacity(width);
+            for i in 0..width {
+                let dst = self.buf();
+                ex_items.push(ExtractItem {
+                    src: f[&(i, i)],
+                    r0: rank(i),
+                    c0: rank(i),
+                    rows: nred(i),
+                    cols: nred(i),
+                    dst,
+                });
+                rr.push(dst);
+            }
+            self.steps.push(Instr::Extract { items: ex_items });
+            let nonempty: Vec<usize> = (0..width).filter(|&i| nred(i) > 0).collect();
+            let po_shapes: Vec<(usize, usize, u64)> =
+                nonempty.iter().map(|&i| (nred(i), nred(i), potrf_flops(nred(i)))).collect();
+            self.push_launch(LaunchMeta::new(l, "POTRF", &po_shapes, |r, _| potrf_flops(r)));
+            if !nonempty.is_empty() {
+                self.steps.push(Instr::Potrf {
+                    level: l,
+                    bufs: nonempty.iter().map(|&i| rr[i]).collect(),
+                });
+            }
+
+            // --- 3. Extract panels; two batched TRSM launches (L(r), L(s)). ---
+            let mut panel_extracts = Vec::new();
+            let mut lr_items = Vec::new();
+            let mut lr_shapes = Vec::new();
+            let mut lr_out: Vec<((usize, usize), BufferId)> = Vec::new();
+            let mut ls_items = Vec::new();
+            let mut ls_shapes = Vec::new();
+            let mut ls_out: Vec<((usize, usize), BufferId)> = Vec::new();
+            for &(j, i) in &near {
+                if nred(i) == 0 {
+                    continue;
+                }
+                let fji = f[&(j, i)];
+                if j > i && nred(j) > 0 {
+                    let dst = self.buf();
+                    panel_extracts.push(ExtractItem {
+                        src: fji,
+                        r0: rank(j),
+                        c0: rank(i),
+                        rows: nred(j),
+                        cols: nred(i),
+                        dst,
+                    });
+                    lr_items.push(TrsmItem { l: rr[i], b: dst });
+                    lr_shapes.push((nred(j), nred(i), trsm_flops(nred(i), nred(j))));
+                    lr_out.push(((j, i), dst));
+                }
+                if rank(j) > 0 {
+                    let dst = self.buf();
+                    panel_extracts.push(ExtractItem {
+                        src: fji,
+                        r0: 0,
+                        c0: rank(i),
+                        rows: rank(j),
+                        cols: nred(i),
+                        dst,
+                    });
+                    ls_items.push(TrsmItem { l: rr[i], b: dst });
+                    ls_shapes.push((rank(j), nred(i), trsm_flops(nred(i), rank(j))));
+                    ls_out.push(((j, i), dst));
+                }
+            }
+            if !panel_extracts.is_empty() {
+                self.steps.push(Instr::Extract { items: panel_extracts });
+            }
+            self.push_launch(LaunchMeta::new(l, "TRSM", &lr_shapes, |r, c| trsm_flops(c, r)));
+            if !lr_items.is_empty() {
+                self.steps.push(Instr::TrsmRightLt { level: l, items: lr_items });
+            }
+            self.push_launch(LaunchMeta::new(l, "TRSM", &ls_shapes, |r, c| trsm_flops(c, r)));
+            if !ls_items.is_empty() {
+                self.steps.push(Instr::TrsmRightLt { level: l, items: ls_items });
+            }
+
+            // --- 4. The single Schur update (eq 21): F_ii^SS -= L(s)_ii L(s)_iiᵀ. ---
+            let ls_buf: HashMap<(usize, usize), BufferId> = ls_out.iter().copied().collect();
+            let schur_idx: Vec<usize> =
+                (0..width).filter(|&i| rank(i) > 0 && nred(i) > 0).collect();
+            let mut ss_buf: HashMap<usize, BufferId> = HashMap::new();
+            let mut ss_extracts = Vec::new();
+            let mut sy_items = Vec::new();
+            let mut sy_shapes = Vec::new();
+            for &i in &schur_idx {
+                let dst = self.buf();
+                ss_extracts.push(ExtractItem {
+                    src: f[&(i, i)],
+                    r0: 0,
+                    c0: 0,
+                    rows: rank(i),
+                    cols: rank(i),
+                    dst,
+                });
+                sy_items.push(SyrkItem { a: ls_buf[&(i, i)], c: dst });
+                sy_shapes.push((rank(i), nred(i), gemm_flops(rank(i), rank(i), nred(i))));
+                ss_buf.insert(i, dst);
+            }
+            if !ss_extracts.is_empty() {
+                self.steps.push(Instr::Extract { items: ss_extracts });
+            }
+            self.push_launch(LaunchMeta::new(l, "SYRK", &sy_shapes, |r, c| gemm_flops(r, r, c)));
+            if !sy_items.is_empty() {
+                self.steps.push(Instr::SchurSelf { level: l, items: sy_items });
+            }
+
+            // --- 5. Merge to the parent level. ---
+            let mut next: HashMap<(usize, usize), BufferId> = HashMap::new();
+            let mut merge_items = Vec::new();
+            for &(pi, pj) in &h2.lists[l - 1].near {
+                let k_r0 = rank(2 * pi);
+                let k_r1 = rank(2 * pi + 1);
+                let k_c0 = rank(2 * pj);
+                let k_c1 = rank(2 * pj + 1);
+                let mut parts = Vec::with_capacity(4);
+                for (ci, roff, krow) in [(2 * pi, 0usize, k_r0), (2 * pi + 1, k_r0, k_r1)] {
+                    for (cj, coff, kcol) in [(2 * pj, 0usize, k_c0), (2 * pj + 1, k_c0, k_c1)] {
+                        let src = if f.contains_key(&(ci, cj)) {
+                            // Diagonal children read the post-Schur SS
+                            // buffer; everything else the leading part of F.
+                            if ci == cj && ss_buf.contains_key(&ci) {
+                                MergeSrc::BufferSub(ss_buf[&ci])
+                            } else {
+                                MergeSrc::BufferSub(f[&(ci, cj)])
+                            }
+                        } else if self.h2.coupling[l].contains_key(&(ci, cj)) {
+                            MergeSrc::Coupling(l, (ci, cj))
+                        } else {
+                            unreachable!("missing child block ({ci},{cj}) at level {l}")
+                        };
+                        parts.push(MergePart { roff, coff, rows: krow, cols: kcol, src });
+                    }
+                }
+                let dst = self.buf();
+                merge_items.push(MergeItem {
+                    dst,
+                    rows: k_r0 + k_r1,
+                    cols: k_c0 + k_c1,
+                    parts,
+                });
+                next.insert((pi, pj), dst);
+                if (pi, pj) == (0, 0) && l == 1 {
+                    root_n = k_r0 + k_r1;
+                }
+            }
+            self.steps.push(Instr::Merge { level: l, items: merge_items });
+
+            // F and SS content is fully consumed by the merge above.
+            let mut free: Vec<BufferId> = f.values().copied().collect();
+            free.extend(ss_buf.values().copied());
+            free.sort_by_key(|b| b.0);
+            self.steps.push(Instr::Free { bufs: free });
+
+            let mut lr_keys: Vec<(usize, usize)> = lr_out.iter().map(|&(k, _)| k).collect();
+            let mut ls_keys: Vec<(usize, usize)> = ls_out.iter().map(|&(k, _)| k).collect();
+            lr_keys.sort_unstable();
+            ls_keys.sort_unstable();
+            self.infos.push(LevelInfo {
+                level: l,
+                width,
+                ranks: (0..width).map(rank).collect(),
+                nreds: (0..width).map(nred).collect(),
+                near: near.clone(),
+                lr_keys,
+                ls_keys,
+            });
+            outputs.push(LevelOut {
+                level: l,
+                chol_rr: rr,
+                lr: lr_out,
+                ls: ls_out,
+                near,
+            });
+            level_programs.push(self.finish_level(l));
+            current = next;
+        }
+
+        // --- Root factorization (Algorithm 2 line 22). ---
+        let root_src = *current.get(&(0, 0)).expect("root block must exist after merging");
+        let root_launch = LaunchMeta::new(
+            0,
+            "POTRF",
+            &[(root_n, root_n, potrf_flops(root_n))],
+            |r, _| potrf_flops(r),
+        );
+        (prologue, level_programs, outputs, root_src, root_n, root_launch)
+    }
+
+    // ---------------- Substitution (Algorithm 3 / §3.7) ----------------
+
+    fn record_solve(&self, mode: SubstMode, root_n: usize) -> SolveProgram {
+        let mut rec = SolveRecorder::default();
+        let leaf_ranges: Vec<(usize, usize)> =
+            self.h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect();
+
+        // ---------- Forward pass (leaves -> root). ----------
+        let mut seg: Vec<VecId> =
+            leaf_ranges.iter().map(|&(s, e)| rec.vec(e - s)).collect();
+        rec.steps.push(SolveInstr::LoadRhs {
+            items: leaf_ranges
+                .iter()
+                .zip(&seg)
+                .map(|(&(s, e), &v)| (s, e, v))
+                .collect(),
+        });
+        let mut saved_r: Vec<Vec<VecId>> = Vec::with_capacity(self.infos.len());
+
+        for (li, info) in self.infos.iter().enumerate() {
+            let level = info.level;
+            let width = info.width;
+            // 1. Apply Uᵀ: c_i = U_iᵀ b_i (batched).
+            let c: Vec<VecId> =
+                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
+            rec.apply_basis(li, level, true, info, &seg, &c);
+            // Split into skeleton (first k) and redundant (rest).
+            let s_part: Vec<VecId> = (0..width).map(|i| rec.vec(info.ranks[i])).collect();
+            let mut r_part: Vec<VecId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
+            rec.steps.push(SolveInstr::Split {
+                items: (0..width)
+                    .map(|i| (c[i], info.ranks[i], s_part[i], r_part[i]))
+                    .collect(),
+            });
+
+            let active: Vec<usize> = (0..width).filter(|&i| info.nreds[i] > 0).collect();
+            match mode {
+                SubstMode::Naive => {
+                    // Algorithm 3: serial over boxes, batch-of-one launches.
+                    let lr_set: HashSet<(usize, usize)> =
+                        info.lr_keys.iter().copied().collect();
+                    let ls_set: HashSet<(usize, usize)> =
+                        info.ls_keys.iter().copied().collect();
+                    for &i in &active {
+                        rec.trsv(level, false, &[(
+                            MatRef::CholRr { level_idx: li, index: i },
+                            r_part[i],
+                            info.nreds[i],
+                        )]);
+                        for &(j, i2) in &info.near {
+                            if i2 != i {
+                                continue;
+                            }
+                            if lr_set.contains(&(j, i)) {
+                                rec.gemv_round(level, false, &[(
+                                    MatRef::Lr { level_idx: li, key: (j, i) },
+                                    r_part[i],
+                                    r_part[j],
+                                    (info.nreds[j], info.nreds[i]),
+                                )]);
+                            }
+                            if ls_set.contains(&(j, i)) {
+                                rec.gemv_round(level, false, &[(
+                                    MatRef::Ls { level_idx: li, key: (j, i) },
+                                    r_part[i],
+                                    s_part[j],
+                                    (info.ranks[j], info.nreds[i]),
+                                )]);
+                            }
+                        }
+                    }
+                }
+                SubstMode::Parallel => {
+                    // §3.7: z_i = L_ii⁻¹ r_i (batched, independent).
+                    let z: Vec<VecId> = active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                    rec.steps.push(SolveInstr::Copy {
+                        items: active.iter().zip(&z).map(|(&i, &zi)| (zi, r_part[i])).collect(),
+                    });
+                    let diag_items: Vec<(MatRef, VecId, usize)> = active
+                        .iter()
+                        .zip(&z)
+                        .map(|(&i, &zi)| {
+                            (MatRef::CholRr { level_idx: li, index: i }, zi, info.nreds[i])
+                        })
+                        .collect();
+                    rec.trsv(level, false, &diag_items);
+                    let slot_of: HashMap<usize, usize> =
+                        active.iter().enumerate().map(|(s, &i)| (i, s)).collect();
+                    // acc = -Σ L(r)_ij z_j in unique-target rounds.
+                    let acc: Vec<VecId> =
+                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                    let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                        .lr_keys
+                        .iter()
+                        .map(|&(row, col)| {
+                            (
+                                MatRef::Lr { level_idx: li, key: (row, col) },
+                                z[slot_of[&col]],
+                                acc[slot_of[&row]],
+                                (info.nreds[row], info.nreds[col]),
+                            )
+                        })
+                        .collect();
+                    rec.gemv_rounds(level, false, &entries);
+                    // corr = L⁻¹ acc; r = z + corr.
+                    let corr_items: Vec<(MatRef, VecId, usize)> = active
+                        .iter()
+                        .zip(&acc)
+                        .map(|(&i, &a)| {
+                            (MatRef::CholRr { level_idx: li, index: i }, a, info.nreds[i])
+                        })
+                        .collect();
+                    rec.trsv(level, false, &corr_items);
+                    let mut add_items = Vec::with_capacity(active.len());
+                    for (slot, &i) in active.iter().enumerate() {
+                        let r2 = rec.vec(info.nreds[i]);
+                        add_items.push((r2, z[slot], acc[slot]));
+                        r_part[i] = r2;
+                    }
+                    rec.steps.push(SolveInstr::Add { items: add_items });
+                    // s_j -= L(s)_ji r_i (unique-target rounds).
+                    let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                        .ls_keys
+                        .iter()
+                        .map(|&(j, i)| {
+                            (
+                                MatRef::Ls { level_idx: li, key: (j, i) },
+                                r_part[i],
+                                s_part[j],
+                                (info.ranks[j], info.nreds[i]),
+                            )
+                        })
+                        .collect();
+                    rec.gemv_rounds(level, false, &entries);
+                }
+            }
+
+            saved_r.push(r_part);
+            // Merge skeleton parts for the parent level.
+            let parent_width = width / 2;
+            let mut next: Vec<VecId> = Vec::with_capacity(parent_width);
+            let mut cat = Vec::with_capacity(parent_width);
+            for p in 0..parent_width {
+                let v = rec.vec(info.ranks[2 * p] + info.ranks[2 * p + 1]);
+                cat.push((v, s_part[2 * p], s_part[2 * p + 1]));
+                next.push(v);
+            }
+            rec.steps.push(SolveInstr::Concat { items: cat });
+            seg = next;
+        }
+
+        // ---------- Root solve. ----------
+        rec.steps.push(SolveInstr::RootSolve { vec: seg[0] });
+        rec.launches.push(LaunchMeta::new(
+            0,
+            "POTRS",
+            &[(root_n, root_n, 2 * (root_n * root_n) as u64)],
+            |r, _| 2 * (r * r) as u64,
+        ));
+
+        // ---------- Backward pass (root -> leaves). ----------
+        let mut sol: Vec<VecId> = vec![seg[0]];
+        for (li, info) in self.infos.iter().enumerate().rev() {
+            let level = info.level;
+            let width = info.width;
+            // Child skeleton solutions from the parent segments.
+            let mut x_s: Vec<VecId> = Vec::with_capacity(width);
+            let mut splits = Vec::with_capacity(width / 2);
+            for p in 0..width / 2 {
+                let a = rec.vec(info.ranks[2 * p]);
+                let b = rec.vec(info.ranks[2 * p + 1]);
+                splits.push((sol[p], info.ranks[2 * p], a, b));
+                x_s.push(a);
+                x_s.push(b);
+            }
+            rec.steps.push(SolveInstr::Split { items: splits });
+            // w_i = y_i^R - Σ L(s)_jiᵀ x_j^S.
+            let w: Vec<VecId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
+            rec.steps.push(SolveInstr::Copy {
+                items: (0..width).map(|i| (w[i], saved_r[li][i])).collect(),
+            });
+            let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                .ls_keys
+                .iter()
+                .map(|&(j, i)| {
+                    (
+                        MatRef::Ls { level_idx: li, key: (j, i) },
+                        x_s[j],
+                        w[i],
+                        (info.ranks[j], info.nreds[i]),
+                    )
+                })
+                .collect();
+            rec.gemv_rounds(level, true, &entries);
+
+            let active: Vec<usize> = (0..width).filter(|&i| info.nreds[i] > 0).collect();
+            let mut x_r: Vec<VecId> = (0..width).map(|_| VecId(u32::MAX)).collect();
+            match mode {
+                SubstMode::Naive => {
+                    // Reverse-order serial upper solve.
+                    for &i in active.iter().rev() {
+                        let rhs = rec.vec(info.nreds[i]);
+                        rec.steps.push(SolveInstr::Copy { items: vec![(rhs, w[i])] });
+                        for &(j, i2) in &info.lr_keys {
+                            if i2 != i {
+                                continue;
+                            }
+                            // j > i: already solved in reverse order.
+                            rec.gemv_round(level, true, &[(
+                                MatRef::Lr { level_idx: li, key: (j, i) },
+                                x_r[j],
+                                rhs,
+                                (info.nreds[j], info.nreds[i]),
+                            )]);
+                        }
+                        rec.trsv(level, true, &[(
+                            MatRef::CholRr { level_idx: li, index: i },
+                            rhs,
+                            info.nreds[i],
+                        )]);
+                        x_r[i] = rhs;
+                    }
+                }
+                SubstMode::Parallel => {
+                    // Single-hop: z = Lᵀ⁻¹ w; x = z + Lᵀ⁻¹(-Σ L(r)ᵀ z).
+                    let z: Vec<VecId> = active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                    rec.steps.push(SolveInstr::Copy {
+                        items: active.iter().zip(&z).map(|(&i, &zi)| (zi, w[i])).collect(),
+                    });
+                    let diag_items: Vec<(MatRef, VecId, usize)> = active
+                        .iter()
+                        .zip(&z)
+                        .map(|(&i, &zi)| {
+                            (MatRef::CholRr { level_idx: li, index: i }, zi, info.nreds[i])
+                        })
+                        .collect();
+                    rec.trsv(level, true, &diag_items);
+                    let slot_of: HashMap<usize, usize> =
+                        active.iter().enumerate().map(|(s, &i)| (i, s)).collect();
+                    let acc: Vec<VecId> =
+                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                    let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                        .lr_keys
+                        .iter()
+                        .map(|&(row, col)| {
+                            (
+                                MatRef::Lr { level_idx: li, key: (row, col) },
+                                z[slot_of[&row]],
+                                acc[slot_of[&col]],
+                                (info.nreds[row], info.nreds[col]),
+                            )
+                        })
+                        .collect();
+                    rec.gemv_rounds(level, true, &entries);
+                    let corr_items: Vec<(MatRef, VecId, usize)> = active
+                        .iter()
+                        .zip(&acc)
+                        .map(|(&i, &a)| {
+                            (MatRef::CholRr { level_idx: li, index: i }, a, info.nreds[i])
+                        })
+                        .collect();
+                    rec.trsv(level, true, &corr_items);
+                    let mut add_items = Vec::with_capacity(active.len());
+                    for (slot, &i) in active.iter().enumerate() {
+                        let xi = rec.vec(info.nreds[i]);
+                        add_items.push((xi, z[slot], acc[slot]));
+                        x_r[i] = xi;
+                    }
+                    rec.steps.push(SolveInstr::Add { items: add_items });
+                }
+            }
+            for i in 0..width {
+                if x_r[i] == VecId(u32::MAX) {
+                    x_r[i] = rec.vec(info.nreds[i]); // nred == 0: empty
+                }
+            }
+            // x_i = U_i [x_i^S; x_i^R] (batched).
+            let stacked: Vec<VecId> =
+                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
+            rec.steps.push(SolveInstr::Concat {
+                items: (0..width).map(|i| (stacked[i], x_s[i], x_r[i])).collect(),
+            });
+            let out: Vec<VecId> =
+                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
+            rec.apply_basis(li, level, false, info, &stacked, &out);
+            sol = out;
+        }
+
+        rec.steps.push(SolveInstr::StoreSol {
+            items: leaf_ranges
+                .iter()
+                .zip(&sol)
+                .map(|(&(s, e), &v)| (s, e, v))
+                .collect(),
+        });
+
+        let total_flops = rec.launches.iter().map(|l| l.flops).sum();
+        SolveProgram {
+            vec_count: rec.vec_lens.len(),
+            vec_lens: rec.vec_lens,
+            steps: rec.steps,
+            launches: rec.launches,
+            total_flops,
+        }
+    }
+}
+
+/// Scratch state while recording one substitution program.
+#[derive(Default)]
+struct SolveRecorder {
+    vec_lens: Vec<usize>,
+    steps: Vec<SolveInstr>,
+    launches: Vec<LaunchMeta>,
+}
+
+impl SolveRecorder {
+    fn vec(&mut self, len: usize) -> VecId {
+        let id = VecId(self.vec_lens.len() as u32);
+        self.vec_lens.push(len);
+        id
+    }
+
+    fn apply_basis(
+        &mut self,
+        level_idx: usize,
+        level: usize,
+        trans: bool,
+        info: &LevelInfo,
+        src: &[VecId],
+        dst: &[VecId],
+    ) {
+        let items: Vec<BasisItem> =
+            (0..info.width).map(|i| (i, src[i], dst[i])).collect();
+        let shapes: Vec<(usize, usize, u64)> = (0..info.width)
+            .map(|i| {
+                let n = info.ranks[i] + info.nreds[i];
+                (n, n, 2 * (n * n) as u64)
+            })
+            .collect();
+        self.launches.push(LaunchMeta::new(level, "BASIS", &shapes, |r, c| 2 * (r * c) as u64));
+        self.steps.push(SolveInstr::ApplyBasis { level_idx, level, trans, items });
+    }
+
+    fn trsv(&mut self, level: usize, bwd: bool, items: &[(MatRef, VecId, usize)]) {
+        if items.is_empty() {
+            return;
+        }
+        let shapes: Vec<(usize, usize, u64)> =
+            items.iter().map(|&(_, _, n)| (n, n, (n * n) as u64)).collect();
+        let kernel = if bwd { "TRSVT" } else { "TRSV" };
+        self.launches.push(LaunchMeta::new(level, kernel, &shapes, |r, _| (r * r) as u64));
+        let instr_items: Vec<(MatRef, VecId)> = items.iter().map(|&(m, v, _)| (m, v)).collect();
+        if bwd {
+            self.steps.push(SolveInstr::TrsvBwd { level, items: instr_items });
+        } else {
+            self.steps.push(SolveInstr::TrsvFwd { level, items: instr_items });
+        }
+    }
+
+    /// One batched `y += -op(A) x` launch; callers guarantee unique `y`.
+    fn gemv_round(
+        &mut self,
+        level: usize,
+        trans: bool,
+        entries: &[(MatRef, VecId, VecId, (usize, usize))],
+    ) {
+        if entries.is_empty() {
+            return;
+        }
+        debug_assert!({
+            let ys: HashSet<VecId> = entries.iter().map(|&(_, _, y, _)| y).collect();
+            ys.len() == entries.len() && entries.iter().all(|&(_, x, _, _)| !ys.contains(&x))
+        });
+        let shapes: Vec<(usize, usize, u64)> = entries
+            .iter()
+            .map(|&(_, _, _, (r, c))| (r, c, 2 * (r * c) as u64))
+            .collect();
+        self.launches.push(LaunchMeta::new(level, "GEMV", &shapes, |r, c| 2 * (r * c) as u64));
+        self.steps.push(SolveInstr::GemvAcc {
+            level,
+            trans,
+            items: entries.iter().map(|&(m, x, y, _)| (m, x, y)).collect(),
+        });
+    }
+
+    /// Split accumulations into launches with unique targets, mirroring the
+    /// conflict-free batched GEMV rounds of the GPU implementation.
+    fn gemv_rounds(
+        &mut self,
+        level: usize,
+        trans: bool,
+        entries: &[(MatRef, VecId, VecId, (usize, usize))],
+    ) {
+        let mut remaining: Vec<usize> = (0..entries.len()).collect();
+        while !remaining.is_empty() {
+            let mut used = HashSet::new();
+            let mut round = Vec::new();
+            let mut rest = Vec::new();
+            for &t in &remaining {
+                if used.insert(entries[t].2) {
+                    round.push(t);
+                } else {
+                    rest.push(t);
+                }
+            }
+            remaining = rest;
+            let batch: Vec<(MatRef, VecId, VecId, (usize, usize))> =
+                round.iter().map(|&t| entries[t]).collect();
+            self.gemv_round(level, trans, &batch);
+        }
+    }
+}

@@ -53,7 +53,7 @@ pub mod session;
 
 pub use backend::BackendSpec;
 pub use builder::H2SolverBuilder;
-pub use session::{BuildStats, DistSolveReport, H2Solver, SolveReport};
+pub use session::{BuildStats, DistSolveReport, H2Solver, SolveOptions, SolveReport};
 
 use std::fmt;
 

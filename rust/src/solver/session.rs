@@ -1,6 +1,12 @@
-//! The [`H2Solver`] session: owns the H² matrix, the ULV factor, and the
-//! execution backend; every solve handles tree-order permutation
-//! internally and reports through [`SolveReport`].
+//! The [`H2Solver`] session: owns the H² matrix, the ULV factor, the
+//! cached execution [`Plan`], and the execution backend; every solve
+//! handles tree-order permutation internally and reports through
+//! [`SolveReport`].
+//!
+//! The plan is recorded once per H² *structure*. Repeated solves,
+//! [`H2Solver::refactorize`] with an unchanged structure, and
+//! [`H2Solver::rebind_backend`] all replay the cached plan — schedule
+//! discovery never runs twice ([`H2Solver::plan_recordings`] counts it).
 
 use super::backend::BackendSpec;
 use super::builder::validate;
@@ -11,30 +17,64 @@ use crate::dist::{dist_solve_driver_with, NCCL_LIKE};
 use crate::geometry::Geometry;
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
-use crate::metrics::{flops, timer::timed};
-use crate::ulv::{factorize, pcg, SubstMode, UlvFactor};
+use crate::metrics::{flops::FlopScope, timer::timed};
+use crate::plan::{self, Executor, Plan, ScheduleStats};
+use crate::ulv::{pcg, SubstMode, UlvFactor};
+use std::sync::Arc;
 
 /// Seed for the sampled residual estimator (fixed so reports are
 /// reproducible across solves of the same problem).
 const RESIDUAL_SEED: u64 = 0xCAFE;
 
-/// Timings and footprint of one `build()`/`refactorize()`.
+/// Fallback sample count when a per-call override requests a residual but
+/// the builder disabled sampling.
+const DEFAULT_RESIDUAL_SAMPLES: usize = 128;
+
+/// Timings and footprint of one `build()`/`refactorize()`/
+/// `rebind_backend()`.
 #[derive(Clone, Debug)]
 pub struct BuildStats {
     /// Matrix dimension N.
     pub n: usize,
     /// Cluster-tree depth (leaf level index).
     pub depth: usize,
-    /// H² construction wall time in seconds.
+    /// H² construction wall time in seconds (0 when the H² matrix was
+    /// reused, i.e. after `rebind_backend`).
     pub construct_time: f64,
-    /// ULV factorization wall time in seconds.
+    /// ULV factorization wall time in seconds (plan replay only; schedule
+    /// recording is a separate structural walk, not included).
     pub factor_time: f64,
-    /// FLOPs attributed to the factorization phase.
+    /// FLOPs attributed to the factorization phase of *this session*
+    /// (scoped — concurrent sessions do not contaminate each other).
     pub factor_flops: u64,
     /// H² storage footprint in f64 entries.
     pub h2_entries: usize,
     /// ULV factor storage footprint in f64 entries.
     pub factor_entries: usize,
+    /// Schedule statistics straight from the plan IR: launch counts per
+    /// level, batch sizes, useful vs constant-shape padded FLOPs.
+    pub schedule: ScheduleStats,
+}
+
+/// Per-call overrides for [`H2Solver::solve_opts`].
+#[derive(Clone, Debug, Default)]
+pub struct SolveOptions {
+    /// Substitution algorithm; `None` uses the builder's choice.
+    pub subst_mode: Option<SubstMode>,
+    /// Override residual sampling for this call: `Some(false)` skips the
+    /// sampled-residual cost even when the builder enabled it (for solves
+    /// that discard [`SolveReport::residual`]); `Some(true)` forces an
+    /// estimate even when the builder disabled sampling (using the
+    /// builder's sample count, or 128 if it was 0). `None` follows the
+    /// builder.
+    pub sample_residual: Option<bool>,
+}
+
+impl SolveOptions {
+    /// Shorthand for "skip the residual estimate on this call".
+    pub fn no_residual() -> SolveOptions {
+        SolveOptions { sample_residual: Some(false), ..Default::default() }
+    }
 }
 
 /// Result of one [`H2Solver::solve`] (or one right-hand side of
@@ -46,7 +86,7 @@ pub struct SolveReport {
     /// Substitution wall time in seconds.
     pub subst_time: f64,
     /// Sampled exact-kernel relative residual `|Ax-b|/|b|`, or `None` when
-    /// the builder disabled residual sampling.
+    /// sampling is disabled (builder default or per-call override).
     pub residual: Option<f64>,
     /// Refinement iterations used (1 for a direct solve).
     pub iterations: usize,
@@ -79,9 +119,9 @@ pub struct DistSolveReport {
     pub residual: Option<f64>,
 }
 
-/// A built H² solver session: construction and factorization are done;
-/// [`solve`](H2Solver::solve) is cheap and reusable across right-hand
-/// sides.
+/// A built H² solver session: construction, plan recording, and
+/// factorization are done; [`solve`](H2Solver::solve) is cheap and
+/// reusable across right-hand sides.
 pub struct H2Solver {
     geometry: Geometry,
     kernel: KernelFn,
@@ -90,13 +130,16 @@ pub struct H2Solver {
     subst: SubstMode,
     residual_samples: usize,
     h2: H2Matrix,
+    plan: Arc<Plan>,
     factor: UlvFactor,
     stats: BuildStats,
+    scope: FlopScope,
+    plan_recordings: usize,
 }
 
 impl H2Solver {
-    /// Construct + factorize (called by the builder; inputs are already
-    /// validated).
+    /// Construct + record + factorize (called by the builder; inputs are
+    /// already validated).
     pub(crate) fn assemble(
         geometry: Geometry,
         kernel: KernelFn,
@@ -106,8 +149,11 @@ impl H2Solver {
         subst: SubstMode,
         residual_samples: usize,
     ) -> Result<H2Solver, H2Error> {
-        let (h2, factor, stats) =
-            build_pipeline(&geometry, &kernel, &config, backend.as_ref())?;
+        let scope = FlopScope::new();
+        let (h2, construct_time) = construct_timed(&geometry, &kernel, &config)?;
+        let plan = Arc::new(guard("planning", || plan::record(&h2))?);
+        let (factor, stats) =
+            replay_factor(&plan, &h2, backend.as_ref(), &scope, construct_time)?;
         Ok(H2Solver {
             geometry,
             kernel,
@@ -116,8 +162,11 @@ impl H2Solver {
             subst,
             residual_samples,
             h2,
+            plan,
             factor,
             stats,
+            scope,
+            plan_recordings: 1,
         })
     }
 
@@ -126,7 +175,7 @@ impl H2Solver {
         self.h2.n()
     }
 
-    /// Timings and footprint of the last build/refactorize.
+    /// Timings and footprint of the last build/refactorize/rebind.
     pub fn stats(&self) -> &BuildStats {
         &self.stats
     }
@@ -156,6 +205,24 @@ impl H2Solver {
         &self.factor
     }
 
+    /// The cached execution plan (launch schedule, FLOP/padding metadata).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// How many times this session has *recorded* a plan. Stays at 1 as
+    /// long as refactorizations keep the H² structure and backends are
+    /// only rebound — the assertion hook for "no re-planning occurs".
+    pub fn plan_recordings(&self) -> usize {
+        self.plan_recordings
+    }
+
+    /// This session's FLOP counters (scoped; see
+    /// [`crate::metrics::flops::FlopScope`]).
+    pub fn flop_scope(&self) -> &FlopScope {
+        &self.scope
+    }
+
     /// Solve `A x = b` with `b` in the caller's original point ordering;
     /// the returned [`SolveReport::x`] is in original ordering too. All
     /// tree-order permutation happens inside.
@@ -176,23 +243,44 @@ impl H2Solver {
     /// # Ok::<(), h2ulv::solver::H2Error>(())
     /// ```
     pub fn solve(&self, b: &[f64]) -> Result<SolveReport, H2Error> {
-        self.solve_with(b, self.subst)
+        self.solve_opts(b, &SolveOptions::default())
     }
 
     /// [`solve`](H2Solver::solve) with an explicit substitution mode
     /// (overriding the builder's choice for this call only).
     pub fn solve_with(&self, b: &[f64], mode: SubstMode) -> Result<SolveReport, H2Error> {
+        self.solve_opts(b, &SolveOptions { subst_mode: Some(mode), ..Default::default() })
+    }
+
+    /// [`solve`](H2Solver::solve) with per-call overrides — e.g. skip the
+    /// sampled-residual cost when the report's residual will be discarded:
+    ///
+    /// ```no_run
+    /// # use h2ulv::prelude::*;
+    /// # let solver = H2SolverBuilder::new(Geometry::sphere_surface(96, 1), KernelFn::laplace()).build()?;
+    /// # let b = vec![1.0; solver.n()];
+    /// let report = solver.solve_opts(&b, &SolveOptions::no_residual())?;
+    /// assert!(report.residual.is_none());
+    /// # Ok::<(), h2ulv::solver::H2Error>(())
+    /// ```
+    pub fn solve_opts(&self, b: &[f64], opts: &SolveOptions) -> Result<SolveReport, H2Error> {
         self.check_rhs(b)?;
+        let mode = opts.subst_mode.unwrap_or(self.subst);
         let bt = self.h2.tree.permute_vec(b);
         let (xt, subst_time) = {
             let (res, t) = timed(|| {
                 guard("substitution", || {
-                    self.factor.solve_tree_order(&bt, self.backend.as_ref(), mode)
+                    self.factor.solve_tree_order_scoped(
+                        &bt,
+                        self.backend.as_ref(),
+                        mode,
+                        &self.scope,
+                    )
                 })
             });
             (res?, t)
         };
-        let residual = self.sample_residual(&xt, &bt);
+        let residual = self.sample_residual_opts(&xt, &bt, opts);
         let x = self.h2.tree.unpermute_vec(&xt);
         Ok(SolveReport {
             x,
@@ -204,13 +292,24 @@ impl H2Solver {
         })
     }
 
-    /// Solve one factorization against many right-hand sides. Lengths are
-    /// validated up front so either every RHS is solved or none is.
+    /// Solve one factorization against many right-hand sides by replaying
+    /// the cached substitution program per RHS — no re-planning. Lengths
+    /// are validated up front so either every RHS is solved or none is.
     pub fn solve_many(&self, rhs: &[Vec<f64>]) -> Result<Vec<SolveReport>, H2Error> {
+        self.solve_many_opts(rhs, &SolveOptions::default())
+    }
+
+    /// [`solve_many`](H2Solver::solve_many) with per-call overrides
+    /// applied to every right-hand side.
+    pub fn solve_many_opts(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+    ) -> Result<Vec<SolveReport>, H2Error> {
         for b in rhs {
             self.check_rhs(b)?;
         }
-        rhs.iter().map(|b| self.solve_with(b, self.subst)).collect()
+        rhs.iter().map(|b| self.solve_opts(b, opts)).collect()
     }
 
     /// Direct solve + ULV-preconditioned CG refinement until the relative
@@ -290,18 +389,48 @@ impl H2Solver {
 
     /// Rebuild the H² matrix and the ULV factor with a new configuration
     /// (changed rank budget / tolerance / admissibility), reusing the
-    /// stored geometry, kernel, and backend. Returns the new build stats.
+    /// stored geometry, kernel, and backend. When the new configuration
+    /// keeps the block structure (same tree, lists, and ranks — e.g. only
+    /// kernel values changed through an identical config), the cached plan
+    /// is *replayed* without re-recording; otherwise a new plan is
+    /// recorded. Returns the new build stats.
     pub fn refactorize(&mut self, config: H2Config) -> Result<&BuildStats, H2Error> {
         validate(&self.geometry, &config)?;
-        let (h2, factor, stats) =
-            build_pipeline(&self.geometry, &self.kernel, &config, self.backend.as_ref())?;
+        let (h2, construct_time) = construct_timed(&self.geometry, &self.kernel, &config)?;
+        let plan = if self.plan.compatible(&h2) {
+            self.plan.clone()
+        } else {
+            let plan = Arc::new(guard("planning", || plan::record(&h2))?);
+            self.plan_recordings += 1;
+            plan
+        };
+        let (factor, stats) =
+            replay_factor(&plan, &h2, self.backend.as_ref(), &self.scope, construct_time)?;
         self.h2 = h2;
+        self.plan = plan;
         self.factor = factor;
         self.stats = stats;
         Ok(&self.stats)
     }
 
-    /// The backend spec this session was built with.
+    /// Re-execute the cached plan on a different backend *without*
+    /// rebuilding the H² matrix or re-deriving the schedule: the same
+    /// instruction stream is replayed against the new [`BackendSpec`].
+    /// This is how backend comparisons (native vs PJRT vs serial) share
+    /// one H² construction. Returns the new build stats
+    /// (`construct_time` is 0 — nothing was constructed).
+    pub fn rebind_backend(&mut self, spec: BackendSpec) -> Result<&BuildStats, H2Error> {
+        let backend = spec.instantiate()?;
+        let (factor, stats) =
+            replay_factor(&self.plan, &self.h2, backend.as_ref(), &self.scope, 0.0)?;
+        self.spec = spec;
+        self.backend = backend;
+        self.factor = factor;
+        self.stats = stats;
+        Ok(&self.stats)
+    }
+
+    /// The backend spec this session was built with (or last rebound to).
     pub fn backend_spec(&self) -> &BackendSpec {
         &self.spec
     }
@@ -321,27 +450,57 @@ impl H2Solver {
         }
         Some(self.h2.residual_sampled(xt, bt, self.residual_samples, RESIDUAL_SEED))
     }
+
+    /// [`sample_residual`](H2Solver::sample_residual) with the per-call
+    /// override applied.
+    fn sample_residual_opts(&self, xt: &[f64], bt: &[f64], opts: &SolveOptions) -> Option<f64> {
+        match opts.sample_residual {
+            Some(false) => None,
+            Some(true) => {
+                let samples = if self.residual_samples > 0 {
+                    self.residual_samples
+                } else {
+                    DEFAULT_RESIDUAL_SAMPLES
+                };
+                Some(self.h2.residual_sampled(xt, bt, samples, RESIDUAL_SEED))
+            }
+            None => self.sample_residual(xt, bt),
+        }
+    }
 }
 
-/// Guarded construct + factorize shared by `build()` and `refactorize()`.
-fn build_pipeline(
+/// Guarded, timed H² construction.
+fn construct_timed(
     geometry: &Geometry,
     kernel: &KernelFn,
     config: &H2Config,
+) -> Result<(H2Matrix, f64), H2Error> {
+    let (res, t) = timed(|| {
+        guard("construction", || H2Matrix::construct(geometry, kernel, config))
+    });
+    Ok((res?, t))
+}
+
+/// Guarded plan replay shared by `build()`, `refactorize()`, and
+/// `rebind_backend()`: executes the factorization program and derives the
+/// session's [`BuildStats`] from the scope and the plan IR.
+fn replay_factor(
+    plan: &Arc<Plan>,
+    h2: &H2Matrix,
     backend: &dyn BatchExec,
-) -> Result<(H2Matrix, UlvFactor, BuildStats), H2Error> {
-    let (h2, construct_time) = {
+    scope: &FlopScope,
+    construct_time: f64,
+) -> Result<(UlvFactor, BuildStats), H2Error> {
+    let before = scope.snapshot();
+    let (factor, factor_time) = {
         let (res, t) = timed(|| {
-            guard("construction", || H2Matrix::construct(geometry, kernel, config))
+            guard("factorization", || {
+                Executor::new(backend).with_scope(scope).factorize(plan, h2)
+            })
         });
         (res?, t)
     };
-    let before = flops::snapshot();
-    let (factor, factor_time) = {
-        let (res, t) = timed(|| guard("factorization", || factorize(&h2, backend)));
-        (res?, t)
-    };
-    let factor_flops = flops::delta(before, flops::snapshot()).factor;
+    let factor_flops = scope.snapshot().factor - before.factor;
     let stats = BuildStats {
         n: h2.n(),
         depth: h2.tree.depth,
@@ -350,6 +509,7 @@ fn build_pipeline(
         factor_flops,
         h2_entries: h2.storage_entries(),
         factor_entries: factor.storage_entries(),
+        schedule: plan.schedule_stats(),
     };
-    Ok((h2, factor, stats))
+    Ok((factor, stats))
 }

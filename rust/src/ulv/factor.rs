@@ -1,163 +1,35 @@
-//! ULV factorization driver (paper Algorithms 2 and 4).
+//! ULV factorization driver (paper Algorithms 2 and 4), implemented as
+//! record-then-execute over the [`crate::plan`] IR.
+//!
+//! [`factorize`] records the complete level-ordered launch schedule once
+//! (a structural walk — no numerics) and immediately replays it;
+//! [`factorize_with_plan`] replays an existing plan against a structurally
+//! identical H² matrix, which is how `H2Solver::refactorize` and
+//! `H2Solver::rebind_backend` skip schedule re-derivation entirely.
 
-use super::{LevelFactor, UlvFactor};
+use super::UlvFactor;
 use crate::batch::BatchExec;
 use crate::h2::H2Matrix;
-use crate::linalg::chol;
-use crate::linalg::Matrix;
-use crate::metrics::flops;
-use std::collections::HashMap;
+use crate::plan::{self, Executor, Plan};
+use std::sync::Arc;
 
 /// Factorize an H²-matrix with the inherently parallel ULV scheme.
 ///
 /// `exec` supplies the batched kernels (native thread pool or PJRT/XLA
 /// artifacts). All within-level launches are dependency-free; only the
 /// level loop and the merge are synchronization points — exactly the
-/// paper's structure.
+/// paper's structure. The schedule is recorded as a [`Plan`] before any
+/// kernel runs and is kept on the returned factor for replay.
 pub fn factorize(h2: &H2Matrix, exec: &dyn BatchExec) -> UlvFactor {
-    let prev_phase = flops::set_phase(flops::Phase::Factor);
-    let depth = h2.tree.depth;
-    let leaf_ranges: Vec<(usize, usize)> =
-        h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect();
+    let plan = Arc::new(plan::record(h2));
+    factorize_with_plan(h2, exec, plan)
+}
 
-    // Current working content: near blocks at the active level, in the
-    // coordinates produced by all finer-level transforms.
-    let mut current: HashMap<(usize, usize), Matrix> = h2.dense.clone();
-    let mut levels: Vec<LevelFactor> = Vec::with_capacity(depth);
-
-    for l in (1..=depth).rev() {
-        let bases = &h2.bases[l];
-        let near = h2.lists[l].near.clone();
-
-        // --- 1. Sparsify every near block: F_ij = U_iᵀ A_ij U_j. ---
-        // (Algorithm 4 computes V_j = U_j L(r)ᵀ⁻¹ to fuse this TRSM with the
-        // basis application; we keep the two launches separate — the fusion
-        // is an optimization toggle benchmarked in benches/ablation.)
-        let pairs: Vec<(usize, usize)> = near.clone();
-        let us: Vec<&Matrix> = pairs.iter().map(|&(i, _)| &bases[i].u).collect();
-        let vs: Vec<&Matrix> = pairs.iter().map(|&(_, j)| &bases[j].u).collect();
-        let blocks: Vec<Matrix> = pairs
-            .iter()
-            .map(|p| current.remove(p).expect("missing near block"))
-            .collect();
-        let transformed = exec.sparsify(l, &us, &blocks, &vs);
-        let mut f: HashMap<(usize, usize), Matrix> =
-            pairs.into_iter().zip(transformed).collect();
-
-        // --- 2. Batched POTRF on diagonal RR blocks. ---
-        let width = h2.tree.width(l);
-        let mut rr: Vec<Matrix> = (0..width)
-            .map(|i| {
-                let nb = &bases[i];
-                let fii = &f[&(i, i)];
-                fii.submatrix(nb.rank, nb.rank, nb.nred(), nb.nred())
-            })
-            .collect();
-        // Skip genuinely empty blocks but keep indices aligned by batching
-        // only the non-empty ones.
-        let nonempty: Vec<usize> = (0..width).filter(|&i| bases[i].nred() > 0).collect();
-        let mut rr_batch: Vec<Matrix> = nonempty.iter().map(|&i| rr[i].clone()).collect();
-        exec.potrf(l, &mut rr_batch);
-        for (slot, &i) in nonempty.iter().enumerate() {
-            rr[i] = rr_batch[slot].clone();
-        }
-        let chol_rr = rr;
-
-        // --- 3. Batched TRSM panels. ---
-        // L(r)_ji = F_ji^RR · L_iiᵀ⁻¹  for near (j,i), j > i;
-        // L(s)_ji = F_ji^SR · L_iiᵀ⁻¹  for all near (j,i).
-        let mut lr_keys: Vec<(usize, usize)> = Vec::new();
-        let mut lr_blocks: Vec<Matrix> = Vec::new();
-        let mut lr_diag: Vec<&Matrix> = Vec::new();
-        let mut ls_keys: Vec<(usize, usize)> = Vec::new();
-        let mut ls_blocks: Vec<Matrix> = Vec::new();
-        let mut ls_diag: Vec<&Matrix> = Vec::new();
-        for &(j, i) in &near {
-            let nbi = &bases[i];
-            let nbj = &bases[j];
-            if nbi.nred() == 0 {
-                continue;
-            }
-            let fji = &f[&(j, i)];
-            if j > i && nbj.nred() > 0 {
-                lr_keys.push((j, i));
-                lr_blocks.push(fji.submatrix(nbj.rank, nbi.rank, nbj.nred(), nbi.nred()));
-                lr_diag.push(&chol_rr[i]);
-            }
-            if nbj.rank > 0 {
-                ls_keys.push((j, i));
-                ls_blocks.push(fji.submatrix(0, nbi.rank, nbj.rank, nbi.nred()));
-                ls_diag.push(&chol_rr[i]);
-            }
-        }
-        exec.trsm_right_lt(l, &lr_diag, &mut lr_blocks);
-        exec.trsm_right_lt(l, &ls_diag, &mut ls_blocks);
-        let lr: HashMap<(usize, usize), Matrix> = lr_keys.into_iter().zip(lr_blocks).collect();
-        let ls: HashMap<(usize, usize), Matrix> = ls_keys.iter().copied().zip(ls_blocks).collect();
-
-        // --- 4. The single Schur update (eq 21): F_ii^SS -= L(s)_ii L(s)_iiᵀ. ---
-        let schur_idx: Vec<usize> = (0..width)
-            .filter(|&i| bases[i].rank > 0 && bases[i].nred() > 0)
-            .collect();
-        let schur_a: Vec<&Matrix> = schur_idx.iter().map(|&i| &ls[&(i, i)]).collect();
-        let mut schur_c: Vec<Matrix> = schur_idx
-            .iter()
-            .map(|&i| f[&(i, i)].submatrix(0, 0, bases[i].rank, bases[i].rank))
-            .collect();
-        exec.schur_self(l, &schur_a, &mut schur_c);
-        // Write the updated SS parts back into the F map.
-        for (slot, &i) in schur_idx.iter().enumerate() {
-            let fii = f.get_mut(&(i, i)).unwrap();
-            fii.set_submatrix(0, 0, &schur_c[slot]);
-        }
-
-        // --- 5. Merge to the parent level. ---
-        // Parent near block (I, J) = 2x2 assembly of children SS content:
-        // near child pair -> SS part of F; far child pair -> coupling Ŝ.
-        let mut next: HashMap<(usize, usize), Matrix> = HashMap::new();
-        for &(pi, pj) in &h2.lists[l - 1].near {
-            let k_r0 = bases[2 * pi].rank;
-            let k_r1 = bases[2 * pi + 1].rank;
-            let k_c0 = bases[2 * pj].rank;
-            let k_c1 = bases[2 * pj + 1].rank;
-            let mut merged = Matrix::zeros(k_r0 + k_r1, k_c0 + k_c1);
-            for (ci, roff, krow) in [(2 * pi, 0usize, k_r0), (2 * pi + 1, k_r0, k_r1)] {
-                for (cj, coff, kcol) in [(2 * pj, 0usize, k_c0), (2 * pj + 1, k_c0, k_c1)] {
-                    let blk: Matrix = if let Some(fij) = f.get(&(ci, cj)) {
-                        fij.submatrix(0, 0, krow, kcol)
-                    } else if let Some(s) = h2.coupling[l].get(&(ci, cj)) {
-                        s.clone()
-                    } else {
-                        // Parent near but child pair absent: structurally
-                        // impossible (lists are complete) — keep zero.
-                        unreachable!("missing child block ({ci},{cj}) at level {l}")
-                    };
-                    merged.set_submatrix(roff, coff, &blk);
-                }
-            }
-            next.insert((pi, pj), merged);
-        }
-
-        levels.push(LevelFactor {
-            level: l,
-            bases: bases.clone(),
-            chol_rr,
-            lr,
-            ls,
-            near,
-        });
-        current = next;
-    }
-
-    // --- Root factorization (Algorithm 2 line 22). ---
-    let root = current
-        .remove(&(0, 0))
-        .expect("root block must exist after merging");
-    flops::add(flops::potrf_flops(root.rows()));
-    let root_l = chol::cholesky(&root).expect("root block must stay SPD");
-    flops::set_phase(prev_phase);
-
-    UlvFactor { levels, root_l, depth, leaf_ranges, perm: h2.tree.perm.clone() }
+/// Replay an existing plan against `h2` (which must be structurally
+/// identical to the matrix the plan was recorded from — see
+/// [`Plan::compatible`]). No schedule discovery runs.
+pub fn factorize_with_plan(h2: &H2Matrix, exec: &dyn BatchExec, plan: Arc<Plan>) -> UlvFactor {
+    Executor::new(exec).factorize(&plan, h2)
 }
 
 #[cfg(test)]
@@ -192,6 +64,9 @@ mod tests {
         }
         assert!(fac.root_l.rows() > 0);
         assert!(fac.storage_entries() > 0);
+        // The factor carries its replayable schedule.
+        assert!(fac.plan.compatible(&h2));
+        assert!(fac.plan.schedule_stats().factor_launches() > 0);
     }
 
     #[test]
@@ -204,5 +79,28 @@ mod tests {
         assert_eq!(fac.depth, 0);
         assert_eq!(fac.levels.len(), 0);
         assert_eq!(fac.root_l.rows(), 40);
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let g = Geometry::sphere_surface(384, 115);
+        let k = KernelFn::laplace();
+        let cfg = H2Config { leaf_size: 64, max_rank: 16, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &k, &cfg);
+        let be = NativeBackend::new();
+        let fac1 = super::factorize(&h2, &be);
+        let fac2 = super::factorize_with_plan(&h2, &be, fac1.plan.clone());
+        assert_eq!(fac1.root_l.as_slice(), fac2.root_l.as_slice());
+        for (a, b) in fac1.levels.iter().zip(&fac2.levels) {
+            for (ca, cb) in a.chol_rr.iter().zip(&b.chol_rr) {
+                assert_eq!(ca.as_slice(), cb.as_slice());
+            }
+            for (k, m) in &a.lr {
+                assert_eq!(m.as_slice(), b.lr[k].as_slice());
+            }
+            for (k, m) in &a.ls {
+                assert_eq!(m.as_slice(), b.ls[k].as_slice());
+            }
+        }
     }
 }

@@ -18,15 +18,23 @@
 //!
 //! The root block is factorized densely (Algorithm 2 line 22).
 
+//! Both phases run exclusively through the recorded execution-plan IR
+//! ([`crate::plan`]): `factorize` records the instruction stream once per
+//! H² structure and replays it; every solve replays the recorded
+//! substitution program. The factor keeps its plan so refactorization and
+//! backend rebinding replay without re-planning.
+
 pub mod factor;
 pub mod precond;
 pub mod solve;
 
 use crate::construct::NodeBasis;
 use crate::linalg::Matrix;
+use crate::plan::Plan;
 use std::collections::HashMap;
+use std::sync::Arc;
 
-pub use factor::factorize;
+pub use factor::{factorize, factorize_with_plan};
 pub use precond::pcg;
 
 /// Which substitution algorithm to run (paper §3.7).
@@ -71,6 +79,10 @@ pub struct UlvFactor {
     pub leaf_ranges: Vec<(usize, usize)>,
     /// Tree permutation (`perm[p]` = original index of tree point p).
     pub perm: Vec<usize>,
+    /// The execution plan this factor was produced by; substitution
+    /// replays its recorded programs, and the same plan can re-factorize
+    /// a structurally identical H² matrix on any backend.
+    pub plan: Arc<Plan>,
 }
 
 impl UlvFactor {

@@ -1,9 +1,13 @@
-//! Forward and backward substitution (paper Algorithm 3 and §3.7).
+//! Forward and backward substitution (paper Algorithm 3 and §3.7),
+//! executed by replaying the recorded substitution programs of the
+//! factor's [`crate::plan::Plan`].
 //!
 //! Two variants share the factor data:
 //!
 //! * [`SubstMode::Naive`] — block-TRSV with serial cross-box dependencies
-//!   (Algorithm 3): `b_j^R -= L(r)_ji b_i^R` must wait for `b_i^R`.
+//!   (Algorithm 3): `b_j^R -= L(r)_ji b_i^R` must wait for `b_i^R`. The
+//!   recorded program bakes that dependency order into a stream of
+//!   batch-of-one launches.
 //! * [`SubstMode::Parallel`] — the paper's contribution: because the
 //!   factorization basis zeroes every second-order fill-in (eq 21), `L⁻¹`
 //!   has *single-hop* block structure (eq 31), so the triangular solve
@@ -15,18 +19,20 @@
 //!   ```
 //!
 //! Both produce the same solution up to the basis truncation error; the
-//! equivalence is asserted in tests.
+//! equivalence is asserted in tests. Because the programs are recorded,
+//! every solve of the same factor issues the identical launch sequence —
+//! replay is bit-deterministic per backend.
 
 use super::{SubstMode, UlvFactor};
 use crate::batch::BatchExec;
-use crate::linalg::blas;
-use crate::linalg::chol;
-use crate::linalg::matrix::Trans;
-use crate::metrics::flops;
+use crate::metrics::flops::FlopScope;
+use crate::plan::Executor;
 
 impl UlvFactor {
     /// Solve `A x = b` with `b` in *original* point ordering; returns `x`
     /// in original ordering. Convenience wrapper over [`solve_tree_order`].
+    ///
+    /// [`solve_tree_order`]: UlvFactor::solve_tree_order
     pub fn solve(&self, b: &[f64], exec: &dyn BatchExec, mode: SubstMode) -> Vec<f64> {
         assert_eq!(b.len(), self.n());
         // Permute into tree order.
@@ -40,338 +46,22 @@ impl UlvFactor {
         x
     }
 
-    /// Solve with `b` already in tree ordering.
+    /// Solve with `b` already in tree ordering: replays the recorded
+    /// substitution program for `mode`.
     pub fn solve_tree_order(&self, b: &[f64], exec: &dyn BatchExec, mode: SubstMode) -> Vec<f64> {
-        let prev_phase = flops::set_phase(flops::Phase::Substitute);
-        let x = self.solve_inner(b, exec, mode);
-        flops::set_phase(prev_phase);
-        x
+        Executor::new(exec).solve(&self.plan, self, b, mode)
     }
 
-    fn solve_inner(&self, b: &[f64], exec: &dyn BatchExec, mode: SubstMode) -> Vec<f64> {
-        // ---------- Forward pass (leaves -> root). ----------
-        // Per level, keep the solved redundant parts for the backward pass.
-        let mut saved_r: Vec<Vec<Vec<f64>>> = Vec::with_capacity(self.levels.len());
-        // Current segments: one vector per box at the active level.
-        let mut seg: Vec<Vec<f64>> = self
-            .leaf_ranges
-            .iter()
-            .map(|&(s, e)| b[s..e].to_vec())
-            .collect();
-
-        for lf in &self.levels {
-            let level = lf.level;
-            let width = lf.bases.len();
-            // 1. Apply Uᵀ: c_i = U_iᵀ b_i (batched).
-            let us: Vec<&crate::linalg::Matrix> = lf.bases.iter().map(|nb| &nb.u).collect();
-            let refs: Vec<&[f64]> = seg.iter().map(|v| v.as_slice()).collect();
-            let c = exec.apply_basis(level, &us, true, &refs);
-            // Split into skeleton (first k) and redundant (rest).
-            let mut s_part: Vec<Vec<f64>> = Vec::with_capacity(width);
-            let mut r_part: Vec<Vec<f64>> = Vec::with_capacity(width);
-            for (i, ci) in c.into_iter().enumerate() {
-                let k = lf.bases[i].rank;
-                s_part.push(ci[..k].to_vec());
-                r_part.push(ci[k..].to_vec());
-            }
-
-            match mode {
-                SubstMode::Naive => {
-                    // Algorithm 3: serial over boxes.
-                    for i in 0..width {
-                        if lf.bases[i].nred() == 0 {
-                            continue;
-                        }
-                        blas::trsv(
-                            crate::linalg::blas::Uplo::Lower,
-                            Trans::No,
-                            &lf.chol_rr[i],
-                            &mut r_part[i],
-                        );
-                        flops::add((lf.bases[i].nred() * lf.bases[i].nred()) as u64);
-                        // Trailing updates (read-after-write dependency).
-                        for &(j, i2) in &lf.near {
-                            if i2 != i {
-                                continue;
-                            }
-                            if let Some(lrm) = lf.lr.get(&(j, i)) {
-                                let (ri, rj) = split_two(&mut r_part, i, j);
-                                blas::gemv(-1.0, lrm, Trans::No, ri, 1.0, rj);
-                                flops::add(2 * (lrm.rows() * lrm.cols()) as u64);
-                            }
-                            if let Some(lsm) = lf.ls.get(&(j, i)) {
-                                blas::gemv(-1.0, lsm, Trans::No, &r_part[i].clone(), 1.0, &mut s_part[j]);
-                                flops::add(2 * (lsm.rows() * lsm.cols()) as u64);
-                            }
-                        }
-                    }
-                }
-                SubstMode::Parallel => {
-                    // Paper §3.7: single-hop inverse.
-                    // z_i = L_ii⁻¹ r_i (batched TRSV, independent).
-                    let active: Vec<usize> =
-                        (0..width).filter(|&i| lf.bases[i].nred() > 0).collect();
-                    let diag: Vec<&crate::linalg::Matrix> =
-                        active.iter().map(|&i| &lf.chol_rr[i]).collect();
-                    let mut z: Vec<Vec<f64>> = active.iter().map(|&i| r_part[i].clone()).collect();
-                    exec.trsv_fwd(level, &diag, &mut z);
-                    let z_of: std::collections::HashMap<usize, usize> =
-                        active.iter().enumerate().map(|(slot, &i)| (i, slot)).collect();
-                    // acc_i = Σ_{j<i near} L(r)_ij z_j  — batched matvecs.
-                    // L(r) keys are (row j, col i) with j > i; for target row
-                    // i we need L(r)_{i,j} with j < i, stored at key (i, j).
-                    let mut acc: Vec<Vec<f64>> =
-                        active.iter().map(|&i| vec![0.0; lf.bases[i].nred()]).collect();
-                    let mut mats = Vec::new();
-                    let mut xs: Vec<&[f64]> = Vec::new();
-                    let mut targets = Vec::new();
-                    for (&(row, col), m) in &lf.lr {
-                        // row > col; contributes to acc[row] from z[col].
-                        if let (Some(&tr), Some(&sc)) = (z_of.get(&row), z_of.get(&col)) {
-                            mats.push(m);
-                            xs.push(z[sc].as_slice());
-                            targets.push(tr);
-                        }
-                    }
-                    // Group-by-target accumulation (disjoint writes per launch
-                    // round: simple sequential rounds over duplicate targets).
-                    accumulate_rounds(exec, level, &mats, &xs, &targets, &mut acc);
-                    // r_i = z_i - L_ii⁻¹ Σ L_ij z_j. The batched GEMV runs
-                    // with the artifact-fixed alpha = -1, so `acc` already
-                    // holds -Σ L_ij z_j; after the TRSV we *add* it.
-                    let mut corr = acc;
-                    exec.trsv_fwd(level, &diag, &mut corr);
-                    for (slot, &i) in active.iter().enumerate() {
-                        for t in 0..r_part[i].len() {
-                            r_part[i][t] = z[slot][t] + corr[slot][t];
-                        }
-                    }
-                    // s_j -= L(s)_ji r_i (batched, independent of each other).
-                    let mut mats = Vec::new();
-                    let mut xs: Vec<&[f64]> = Vec::new();
-                    let mut targets = Vec::new();
-                    for (&(j, i), m) in &lf.ls {
-                        if lf.bases[i].nred() == 0 || lf.bases[j].rank == 0 {
-                            continue;
-                        }
-                        mats.push(m);
-                        xs.push(r_part[i].as_slice());
-                        targets.push(j);
-                    }
-                    accumulate_rounds(exec, level, &mats, &xs, &targets, &mut s_part);
-                }
-            }
-
-            saved_r.push(r_part);
-            // Merge skeleton parts for the parent level.
-            let parent_width = width / 2;
-            let mut next: Vec<Vec<f64>> = Vec::with_capacity(parent_width);
-            for p in 0..parent_width {
-                let mut v = s_part[2 * p].clone();
-                v.extend_from_slice(&s_part[2 * p + 1]);
-                next.push(v);
-            }
-            seg = next;
-        }
-
-        // ---------- Root solve. ----------
-        let mut root = std::mem::take(&mut seg[0]);
-        flops::add(2 * (self.root_l.rows() * self.root_l.rows()) as u64);
-        chol::potrs(&self.root_l, &mut root);
-
-        // ---------- Backward pass (root -> leaves). ----------
-        // `sol` holds the full solution segment per box at the active level.
-        let mut sol: Vec<Vec<f64>> = vec![root];
-        for (li, lf) in self.levels.iter().enumerate().rev() {
-            let level = lf.level;
-            let width = lf.bases.len();
-            let y_r = &saved_r[li];
-            // Child skeleton solutions from the parent segments.
-            let mut x_s: Vec<Vec<f64>> = Vec::with_capacity(width);
-            for p in 0..width / 2 {
-                let k0 = lf.bases[2 * p].rank;
-                let parent = &sol[p];
-                x_s.push(parent[..k0].to_vec());
-                x_s.push(parent[k0..].to_vec());
-            }
-            // w_i = y_i^R - Σ_{near (j,i)} L(s)_jiᵀ x_j^S.
-            let mut w: Vec<Vec<f64>> = y_r.clone();
-            {
-                let mut mats = Vec::new();
-                let mut xs: Vec<&[f64]> = Vec::new();
-                let mut targets = Vec::new();
-                for (&(j, i), m) in &lf.ls {
-                    if lf.bases[i].nred() == 0 || lf.bases[j].rank == 0 {
-                        continue;
-                    }
-                    mats.push(m);
-                    xs.push(x_s[j].as_slice());
-                    targets.push(i);
-                }
-                accumulate_rounds_trans(exec, level, &mats, &xs, &targets, &mut w);
-            }
-            // Solve L_RRᵀ x^R = w.
-            let active: Vec<usize> = (0..width).filter(|&i| lf.bases[i].nred() > 0).collect();
-            let diag: Vec<&crate::linalg::Matrix> =
-                active.iter().map(|&i| &lf.chol_rr[i]).collect();
-            let mut x_r: Vec<Vec<f64>> = vec![Vec::new(); width];
-            match mode {
-                SubstMode::Naive => {
-                    // Reverse order serial upper solve.
-                    for &i in active.iter().rev() {
-                        let mut rhs = w[i].clone();
-                        for (&(j, i2), m) in &lf.lr {
-                            if i2 == i && !x_r[j].is_empty() {
-                                blas::gemv(-1.0, m, Trans::Yes, &x_r[j], 1.0, &mut rhs);
-                                flops::add(2 * (m.rows() * m.cols()) as u64);
-                            }
-                        }
-                        blas::trsv(crate::linalg::blas::Uplo::Lower, Trans::Yes, &lf.chol_rr[i], &mut rhs);
-                        flops::add((lf.bases[i].nred() * lf.bases[i].nred()) as u64);
-                        x_r[i] = rhs;
-                    }
-                }
-                SubstMode::Parallel => {
-                    // Single-hop: z_i = L_iiᵀ⁻¹ w_i;
-                    // x_i = z_i - L_iiᵀ⁻¹ Σ_{j>i} L(r)_jiᵀ z_j.
-                    let mut z: Vec<Vec<f64>> = active.iter().map(|&i| w[i].clone()).collect();
-                    exec.trsv_bwd(level, &diag, &mut z);
-                    let z_of: std::collections::HashMap<usize, usize> =
-                        active.iter().enumerate().map(|(slot, &i)| (i, slot)).collect();
-                    let mut acc: Vec<Vec<f64>> =
-                        active.iter().map(|&i| vec![0.0; lf.bases[i].nred()]).collect();
-                    let mut mats = Vec::new();
-                    let mut xs: Vec<&[f64]> = Vec::new();
-                    let mut targets = Vec::new();
-                    for (&(row, col), m) in &lf.lr {
-                        // (row > col): L(r)_jiᵀ contributes to target col from z[row].
-                        if let (Some(&tc), Some(&sr)) = (z_of.get(&col), z_of.get(&row)) {
-                            mats.push(m);
-                            xs.push(z[sr].as_slice());
-                            targets.push(tc);
-                        }
-                    }
-                    accumulate_rounds_trans_slots(exec, level, &mats, &xs, &targets, &mut acc);
-                    // As in the forward pass: acc = -Σ L(r)_jiᵀ z_j, so add.
-                    let mut corr = acc;
-                    exec.trsv_bwd(level, &diag, &mut corr);
-                    for (slot, &i) in active.iter().enumerate() {
-                        let mut v = vec![0.0; lf.bases[i].nred()];
-                        for t in 0..v.len() {
-                            v[t] = z[slot][t] + corr[slot][t];
-                        }
-                        x_r[i] = v;
-                    }
-                }
-            }
-            for i in 0..width {
-                if x_r[i].is_empty() {
-                    x_r[i] = vec![0.0; lf.bases[i].nred()];
-                }
-            }
-            // x_i = U_i [x_i^S; x_i^R] (batched).
-            let us: Vec<&crate::linalg::Matrix> = lf.bases.iter().map(|nb| &nb.u).collect();
-            let stacked: Vec<Vec<f64>> = (0..width)
-                .map(|i| {
-                    let mut v = x_s[i].clone();
-                    v.extend_from_slice(&x_r[i]);
-                    v
-                })
-                .collect();
-            let refs: Vec<&[f64]> = stacked.iter().map(|v| v.as_slice()).collect();
-            sol = exec.apply_basis(level, &us, false, &refs);
-        }
-
-        // Flatten leaf segments into the tree-ordered solution.
-        let mut x = vec![0.0; self.n()];
-        for (i, &(s, e)) in self.leaf_ranges.iter().enumerate() {
-            x[s..e].copy_from_slice(&sol[i]);
-        }
-        x
-    }
-}
-
-/// Split two distinct mutable elements out of a slice.
-fn split_two<'a, T>(v: &'a mut [T], i: usize, j: usize) -> (&'a T, &'a mut T) {
-    assert_ne!(i, j);
-    if i < j {
-        let (a, b) = v.split_at_mut(j);
-        (&a[i], &mut b[0])
-    } else {
-        let (a, b) = v.split_at_mut(i);
-        (&b[0], &mut a[j])
-    }
-}
-
-/// Launch batched `y[target] += -1 * A x` accumulations, splitting into
-/// rounds so that within one launch every target is unique (batched calls
-/// must not alias outputs — mirrors how the GPU implementation issues
-/// conflict-free batched GEMV rounds).
-fn accumulate_rounds(
-    exec: &dyn BatchExec,
-    level: usize,
-    mats: &[&crate::linalg::Matrix],
-    xs: &[&[f64]],
-    targets: &[usize],
-    out: &mut [Vec<f64>],
-) {
-    accumulate_impl(exec, level, mats, xs, targets, out, false);
-}
-
-fn accumulate_rounds_trans(
-    exec: &dyn BatchExec,
-    level: usize,
-    mats: &[&crate::linalg::Matrix],
-    xs: &[&[f64]],
-    targets: &[usize],
-    out: &mut [Vec<f64>],
-) {
-    accumulate_impl(exec, level, mats, xs, targets, out, true);
-}
-
-/// Variant where `targets` index into `out` directly (already slot-mapped).
-fn accumulate_rounds_trans_slots(
-    exec: &dyn BatchExec,
-    level: usize,
-    mats: &[&crate::linalg::Matrix],
-    xs: &[&[f64]],
-    targets: &[usize],
-    out: &mut [Vec<f64>],
-) {
-    accumulate_impl(exec, level, mats, xs, targets, out, true);
-}
-
-fn accumulate_impl(
-    exec: &dyn BatchExec,
-    level: usize,
-    mats: &[&crate::linalg::Matrix],
-    xs: &[&[f64]],
-    targets: &[usize],
-    out: &mut [Vec<f64>],
-    trans: bool,
-) {
-    let mut remaining: Vec<usize> = (0..mats.len()).collect();
-    while !remaining.is_empty() {
-        let mut used = std::collections::HashSet::new();
-        let mut round = Vec::new();
-        let mut rest = Vec::new();
-        for &t in &remaining {
-            if used.insert(targets[t]) {
-                round.push(t);
-            } else {
-                rest.push(t);
-            }
-        }
-        remaining = rest;
-        // Gather round inputs; outputs are unique targets so we can split
-        // borrow via a temporary take.
-        let rmats: Vec<&crate::linalg::Matrix> = round.iter().map(|&t| mats[t]).collect();
-        let rxs: Vec<&[f64]> = round.iter().map(|&t| xs[t]).collect();
-        let mut rys: Vec<Vec<f64>> = round.iter().map(|&t| std::mem::take(&mut out[targets[t]])).collect();
-        exec.gemv_acc(level, -1.0, &rmats, trans, &rxs, &mut rys);
-        for (slot, &t) in round.iter().enumerate() {
-            out[targets[t]] = std::mem::take(&mut rys[slot]);
-        }
+    /// [`solve_tree_order`](UlvFactor::solve_tree_order) with per-session
+    /// FLOP attribution (used by the solver facade).
+    pub fn solve_tree_order_scoped(
+        &self,
+        b: &[f64],
+        exec: &dyn BatchExec,
+        mode: SubstMode,
+        scope: &FlopScope,
+    ) -> Vec<f64> {
+        Executor::new(exec).with_scope(scope).solve(&self.plan, self, b, mode)
     }
 }
 
@@ -516,5 +206,20 @@ mod tests {
         let want = crate::linalg::lu::solve(&a, &b).unwrap();
         let err = rel_err_vec(&x, &want);
         assert!(err < 1e-9, "single-leaf must be a plain dense solve: {err}");
+    }
+
+    #[test]
+    fn replayed_solves_are_bit_identical() {
+        let g = Geometry::sphere_surface(384, 133);
+        let k = KernelFn::laplace();
+        let cfg = H2Config { leaf_size: 64, max_rank: 24, ..Default::default() };
+        let h2 = H2Matrix::construct(&g, &k, &cfg);
+        let fac = factorize(&h2, &NativeBackend::new());
+        let b = rhs(384, 13);
+        for mode in [SubstMode::Parallel, SubstMode::Naive] {
+            let x1 = fac.solve_tree_order(&b, &NativeBackend::new(), mode);
+            let x2 = fac.solve_tree_order(&b, &NativeBackend::new(), mode);
+            assert_eq!(x1, x2, "{mode:?}: replay must be deterministic");
+        }
     }
 }

@@ -1,0 +1,169 @@
+//! Plan record/replay invariants (ISSUE 2 acceptance):
+//!
+//! * a recorded plan replayed twice is bit-identical, and the replayed
+//!   solve matches the dense oracle exactly where the eager path did;
+//! * replaying a cached plan after a refactorization with perturbed kernel
+//!   values matches a freshly recorded factorization;
+//! * `rebind_backend(SerialReference)` matches native to 1e-12;
+//! * `refactorize` (same structure), `solve_many`, and `rebind_backend`
+//!   never re-plan — launch counts come from the one cached plan.
+
+use h2ulv::batch::native::NativeBackend;
+use h2ulv::construct::H2Config;
+use h2ulv::geometry::Geometry;
+use h2ulv::h2::H2Matrix;
+use h2ulv::kernels::KernelFn;
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::prelude::*;
+use h2ulv::ulv::{factorize, factorize_with_plan, SubstMode};
+use h2ulv::util::Rng;
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn cfg() -> H2Config {
+    H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() }
+}
+
+#[test]
+fn recorded_plan_replays_bit_identically_and_matches_eager_accuracy() {
+    let g = Geometry::sphere_surface(512, 201);
+    let k = KernelFn::laplace();
+    let h2 = H2Matrix::construct(&g, &k, &cfg());
+    let be = NativeBackend::new();
+    let fac = factorize(&h2, &be);
+    let b = rhs(512, 1);
+    let bt = h2.tree.permute_vec(&b);
+    // Replay #1 and #2 of the same recorded substitution program are
+    // bit-identical (the plan fixes launch order and batch grouping).
+    for mode in [SubstMode::Parallel, SubstMode::Naive] {
+        let x1 = fac.solve_tree_order(&bt, &be, mode);
+        let x2 = fac.solve_tree_order(&bt, &be, mode);
+        assert_eq!(x1, x2, "{mode:?}: replay must be bit-deterministic");
+    }
+    // A second factorization replayed from the same plan bit-matches.
+    let fac2 = factorize_with_plan(&h2, &be, fac.plan.clone());
+    assert_eq!(fac.root_l.as_slice(), fac2.root_l.as_slice());
+    let x1 = fac.solve_tree_order(&bt, &be, SubstMode::Parallel);
+    let x2 = fac2.solve_tree_order(&bt, &be, SubstMode::Parallel);
+    assert_eq!(x1, x2);
+    // Accuracy is unchanged from the eager implementation: the replayed
+    // solve still inverts the problem to the H² approximation floor.
+    let a = k.dense(&h2.tree.points);
+    let want = h2ulv::linalg::lu::solve(&a, &bt).unwrap();
+    let err = rel_err_vec(&x1, &want);
+    assert!(err < 1e-3, "replayed solve accuracy regressed: {err}");
+}
+
+#[test]
+fn replay_after_kernel_perturbation_matches_fresh_factorization() {
+    // The plan is purely structural: record it from one H² matrix, then
+    // replay it against a matrix with *perturbed kernel values* (same
+    // geometry/config => same tree, lists, and ranks). The replayed factor
+    // must match a freshly planned factorization of the perturbed matrix.
+    let g = Geometry::sphere_surface(384, 203);
+    let be = NativeBackend::new();
+    let h2_a = H2Matrix::construct(&g, &KernelFn::laplace(), &cfg());
+    let fac_a = factorize(&h2_a, &be);
+
+    let perturbed = KernelFn { diag: 1.0e3, phi: |r| 1.0002 / r, name: "laplace-pert" };
+    let h2_b = H2Matrix::construct(&g, &perturbed, &cfg());
+    assert!(
+        fac_a.plan.compatible(&h2_b),
+        "kernel-value perturbation must not change the plan structure"
+    );
+
+    let fac_replay = factorize_with_plan(&h2_b, &be, fac_a.plan.clone());
+    let fac_fresh = factorize(&h2_b, &be);
+    let b = rhs(384, 7);
+    let bt = h2_b.tree.permute_vec(&b);
+    let x_replay = fac_replay.solve_tree_order(&bt, &be, SubstMode::Parallel);
+    let x_fresh = fac_fresh.solve_tree_order(&bt, &be, SubstMode::Parallel);
+    let err = rel_err_vec(&x_replay, &x_fresh);
+    assert!(err < 1e-12, "replayed factorization diverged from fresh: {err}");
+    // And the replayed factor genuinely reflects the perturbed values.
+    let x_old = fac_a.solve_tree_order(&bt, &be, SubstMode::Parallel);
+    assert!(rel_err_vec(&x_replay, &x_old) > 1e-8, "replay must use the new matrix values");
+}
+
+#[test]
+fn refactorize_reuses_cached_plan_and_rebind_matches_native() {
+    let g = Geometry::sphere_surface(512, 205);
+    let mut solver = H2SolverBuilder::new(g, KernelFn::laplace())
+        .config(cfg())
+        .residual_samples(0)
+        .build()
+        .expect("well-formed problem");
+    assert_eq!(solver.plan_recordings(), 1);
+    let launches = solver.stats().schedule.factor_launches();
+    assert!(launches > 0);
+    let b = rhs(512, 11);
+    let x_native = solver.solve(&b).expect("rhs matches").x;
+
+    // Multi-RHS solves replay the cached substitution program.
+    let reports = solver.solve_many(&[b.clone(), rhs(512, 13)]).expect("rhs match");
+    assert_eq!(reports.len(), 2);
+    assert_eq!(solver.plan_recordings(), 1, "solve_many must not re-plan");
+
+    // Refactorize with the same structure: plan replayed, not re-recorded.
+    solver.refactorize(cfg()).expect("refactorize");
+    assert_eq!(solver.plan_recordings(), 1, "same-structure refactorize must not re-plan");
+    assert_eq!(
+        solver.stats().schedule.factor_launches(),
+        launches,
+        "launch counts must come from the one cached plan"
+    );
+    let x_refac = solver.solve(&b).expect("rhs matches").x;
+    let err = rel_err_vec(&x_refac, &x_native);
+    assert!(err < 1e-12, "same-structure refactorize changed the solution: {err}");
+
+    // Rebind to the serial reference backend: same plan, same launches,
+    // results match native to 1e-12 (bit-identical kernels).
+    solver.rebind_backend(BackendSpec::SerialReference).expect("serial always available");
+    assert_eq!(solver.backend_name(), "serial");
+    assert_eq!(solver.plan_recordings(), 1, "rebind_backend must not re-plan");
+    assert_eq!(solver.stats().schedule.factor_launches(), launches);
+    assert_eq!(solver.stats().construct_time, 0.0, "rebind must not rebuild H2");
+    let x_serial = solver.solve(&b).expect("rhs matches").x;
+    let err = rel_err_vec(&x_serial, &x_native);
+    assert!(err < 1e-12, "serial rebind diverged from native: {err}");
+
+    // A structure-changing refactorize records a fresh plan.
+    solver
+        .refactorize(H2Config { leaf_size: 32, max_rank: 16, ..cfg() })
+        .expect("refactorize");
+    assert_eq!(solver.plan_recordings(), 2, "structure change must re-plan");
+}
+
+#[test]
+fn per_call_residual_override() {
+    let g = Geometry::sphere_surface(256, 207);
+    let solver = H2SolverBuilder::new(g, KernelFn::laplace())
+        .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
+        .residual_samples(64)
+        .build()
+        .expect("well-formed problem");
+    let b = rhs(256, 17);
+    // Builder default: sampled residual present.
+    assert!(solver.solve(&b).unwrap().residual.is_some());
+    // Per-call skip.
+    let rep = solver.solve_opts(&b, &SolveOptions::no_residual()).unwrap();
+    assert!(rep.residual.is_none());
+    // Per-call force on a sampling-disabled session.
+    let g2 = Geometry::sphere_surface(256, 207);
+    let quiet = H2SolverBuilder::new(g2, KernelFn::laplace())
+        .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
+        .residual_samples(0)
+        .build()
+        .expect("well-formed problem");
+    assert!(quiet.solve(&b).unwrap().residual.is_none());
+    let forced = quiet
+        .solve_opts(
+            &b,
+            &SolveOptions { sample_residual: Some(true), ..Default::default() },
+        )
+        .unwrap();
+    assert!(forced.residual.is_some());
+}
