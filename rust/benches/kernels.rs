@@ -4,7 +4,6 @@
 //! pass in EXPERIMENTS.md §Perf.
 
 use h2ulv::batch::native::NativeBackend;
-use h2ulv::batch::BatchExec;
 use h2ulv::linalg::blas::{self};
 use h2ulv::linalg::matrix::{Matrix, Trans};
 use h2ulv::linalg::chol;

@@ -1,0 +1,817 @@
+//! The device-resident launch API: the backend contract of the execution
+//! engine, designed around the plan IR's own vocabulary (paper §4 "Design
+//! considerations for GPUs").
+//!
+//! A [`Device`] executes [`Launch`]es — opcode + [`BufferId`] operand lists
+//! — against a device-owned [`DeviceArena`]. Host data crosses the boundary
+//! only through the arena's explicit `upload`/`download` calls (issued by
+//! the plan [`crate::plan::Executor`] for `Instr::Upload`, `LoadRhs`, and
+//! `StoreSol`); every launch in between references device-resident buffers
+//! by id. This is the shape of the paper's GPU implementation: the H²
+//! matrix is copied to the device once, the factor stays resident, and the
+//! batched cuBLAS/cuSOLVER calls consume device pointer arrays — never
+//! host slices.
+//!
+//! # Launch opcode ↔ paper batched call (§4)
+//!
+//! | [`Launch`] opcode | Paper batched call |
+//! |-------------------|--------------------|
+//! | `Potrf` | `cusolverDnDpotrfBatched` on the diagonal `F_ii^RR` blocks (Alg 2 l.8; batch-of-one for the merged root, Alg 2 l.22) |
+//! | `TrsmRightLt` | `cublasDtrsmBatched` (right, lower, transposed) panel solves (Alg 2 l.10-13) |
+//! | `SchurSelf` | SYRK-shaped `cublasDgemmBatched`, the *single* trailing update of eq 21 |
+//! | `Sparsify` | two chained `cublasDgemmBatched` calls, `F = Uᵀ A V` (Figure 2) |
+//! | `TrsvFwd` / `TrsvBwd` | `trsmBatched` with one right-hand column (§3.7 eq 31) |
+//! | `GemvAcc` | `cublasDgemvBatched` / the paper's "batched AXPY via a degenerate GEMM" (§4.1) |
+//! | `ApplyBasis` | `gemvBatched` applying `U_i` / `U_iᵀ` to segment vectors (Alg 3 l.3 and final line) |
+//! | `RootSolve` | dense `potrs` at the root — the one serialization point |
+//! | `Extract` / `Merge` / `Split` / `Concat` / `CopyBuf` / `AddVec` | device-side batched copies (no FLOPs, no host round-trip) |
+//!
+//! # Streams and fences
+//!
+//! Launches are issued in program order. [`Device::stream`] marks tree
+//! level boundaries: the plan guarantees launches *within* a level have no
+//! mutual data dependencies beyond the order the stream already encodes,
+//! so an implementation may double-buffer — e.g. overlap level *k*'s TRSM
+//! with level *k+1*'s sparsify uploads — provided [`Device::fence`] drains
+//! everything before the executor downloads results. The three in-tree
+//! backends are host-synchronous, so their hooks are no-ops; the seam
+//! exists for a real multi-stream GPU device.
+//!
+//! # Legacy adapter
+//!
+//! The pre-redesign slice-based [`BatchExec`](crate::batch::BatchExec)
+//! trait is deprecated. [`LegacyBatchExec`] adapts any [`Device`] to it by
+//! round-tripping each call through a scratch arena, so old benches and
+//! research code keep compiling until they migrate.
+
+use crate::linalg::{chol, Matrix};
+use crate::metrics::flops;
+use crate::plan::{BasisItem, BufferId, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem};
+use std::any::Any;
+
+/// One batched launch: an opcode plus `BufferId` operand lists borrowed
+/// straight from the plan IR — the executor never rebuilds host slices.
+#[derive(Clone, Copy, Debug)]
+pub enum Launch<'p> {
+    /// Batched in-place Cholesky of the listed buffers.
+    Potrf { level: usize, bufs: &'p [BufferId] },
+    /// Batched `b <- b · L_lᵀ⁻¹` panel solves.
+    TrsmRightLt { level: usize, items: &'p [TrsmItem] },
+    /// Batched `c <- c - a aᵀ` Schur updates.
+    SchurSelf { level: usize, items: &'p [SyrkItem] },
+    /// Batched two-sided basis transforms `dst = uᵀ · a · v`.
+    Sparsify { level: usize, items: &'p [SparsifyItem] },
+    /// Device-side submatrix extraction.
+    Extract { items: &'p [ExtractItem] },
+    /// Device-side parent-block assembly.
+    Merge { items: &'p [MergeItem] },
+    /// Batched `u`/`uᵀ` applied to vectors: items are `(u, src, dst)`.
+    ApplyBasis { level: usize, trans: bool, items: &'p [BasisItem] },
+    /// Batched in-place forward TRSV; items are `(l, x)`.
+    TrsvFwd { level: usize, items: &'p [(BufferId, BufferId)] },
+    /// Batched in-place backward TRSV; items are `(l, x)`.
+    TrsvBwd { level: usize, items: &'p [(BufferId, BufferId)] },
+    /// Batched `y += alpha · op(a) x`; items are `(a, x, y)`.
+    GemvAcc {
+        level: usize,
+        trans: bool,
+        alpha: f64,
+        items: &'p [(BufferId, BufferId, BufferId)],
+    },
+    /// Vector splits `(src, at, lo, hi)`.
+    Split { items: &'p [(BufferId, usize, BufferId, BufferId)] },
+    /// Vector concatenations `(dst, a, b)`.
+    Concat { items: &'p [(BufferId, BufferId, BufferId)] },
+    /// Buffer copies `(dst, src)`.
+    CopyBuf { items: &'p [(BufferId, BufferId)] },
+    /// Elementwise vector adds `(dst, a, b)`.
+    AddVec { items: &'p [(BufferId, BufferId, BufferId)] },
+    /// Dense root solve `x <- (L Lᵀ)⁻¹ x` against the resident root factor.
+    RootSolve { l: BufferId, x: BufferId },
+}
+
+impl Launch<'_> {
+    /// Short opcode name (diagnostics / traces).
+    pub fn opcode(&self) -> &'static str {
+        match self {
+            Launch::Potrf { .. } => "POTRF",
+            Launch::TrsmRightLt { .. } => "TRSM",
+            Launch::SchurSelf { .. } => "SYRK",
+            Launch::Sparsify { .. } => "SPARSIFY",
+            Launch::Extract { .. } => "EXTRACT",
+            Launch::Merge { .. } => "MERGE",
+            Launch::ApplyBasis { .. } => "BASIS",
+            Launch::TrsvFwd { .. } => "TRSV",
+            Launch::TrsvBwd { .. } => "TRSVT",
+            Launch::GemvAcc { .. } => "GEMV",
+            Launch::Split { .. } => "SPLIT",
+            Launch::Concat { .. } => "CONCAT",
+            Launch::CopyBuf { .. } => "COPY",
+            Launch::AddVec { .. } => "ADD",
+            Launch::RootSolve { .. } => "POTRS",
+        }
+    }
+}
+
+/// A device-owned buffer arena: the residency boundary of the execution
+/// engine. Buffers are matrices or vectors addressed by [`BufferId`];
+/// `upload`/`download` are the only host↔device transfers, `alloc`/`free`
+/// manage device-side lifetime. Implementations grow on demand, so the
+/// construction capacity is a hint.
+pub trait DeviceArena: Send {
+    /// Host → device: copy a matrix into slot `id` (overwrites).
+    fn upload(&mut self, id: BufferId, m: &Matrix);
+    /// Host → device: copy a vector into slot `id` (overwrites).
+    fn upload_vec(&mut self, id: BufferId, v: &[f64]);
+    /// Allocate a zero matrix at `id` (overwrites any previous content).
+    fn alloc(&mut self, id: BufferId, rows: usize, cols: usize);
+    /// Allocate a zero vector at `id` (overwrites any previous content).
+    fn alloc_vec(&mut self, id: BufferId, len: usize);
+    /// Device → host: copy the matrix at `id` out. Callers must
+    /// [`Device::fence`] first if launches may still be in flight.
+    fn download(&self, id: BufferId) -> Matrix;
+    /// Device → host, destructive: move the matrix at `id` out and free
+    /// the slot. Host-memory arenas override the default download+free
+    /// with a true move (no copy) — the transient-factorize fast path.
+    fn take(&mut self, id: BufferId) -> Matrix {
+        let m = self.download(id);
+        self.free(id);
+        m
+    }
+    /// Device → host: copy the vector at `id` out.
+    fn download_vec(&self, id: BufferId) -> Vec<f64>;
+    /// Release slot `id`. Panics on double-free — the plan's `Free` steps
+    /// are exact, so a double-free is a recorder bug.
+    fn free(&mut self, id: BufferId);
+    /// Release every live buffer with id ≥ `from`. Tolerant of
+    /// already-empty slots: the executor uses this to release a solve's
+    /// vector region even when a mid-launch panic left slots half-moved,
+    /// so the resident factor region below `from` keeps its balance.
+    fn free_region(&mut self, from: BufferId);
+    /// Number of live (allocated) buffers — the leak-check hook.
+    fn live(&self) -> usize;
+    /// Downcast support for concrete-device launch implementations.
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// The backend contract: create arenas, execute launches against them.
+/// This is the narrowest, hottest interface in the codebase — everything
+/// the ULV factorization and substitution do numerically flows through
+/// [`Device::launch`] with arena operands.
+pub trait Device: Sync {
+    /// Create an arena sized for `capacity` buffers (a hint; arenas grow).
+    fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena>;
+    /// Execute one batched launch against `arena`. May be asynchronous;
+    /// ordering with other launches on the same arena follows program
+    /// order unless the implementation can prove independence.
+    fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>);
+    /// Hint: subsequent launches belong to tree level `level`. A
+    /// multi-stream implementation may use this to double-buffer adjacent
+    /// levels; host-synchronous backends ignore it.
+    fn stream(&self, _level: usize) {}
+    /// Drain all outstanding asynchronous work. Must be called before any
+    /// `download` observes launch results; no-op for synchronous backends.
+    fn fence(&self) {}
+    /// Human-readable backend name (diagnostics / reports).
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// Host-memory arena shared by the in-tree backends.
+// ---------------------------------------------------------------------
+
+/// One arena slot: empty, a matrix block, or a substitution vector.
+enum Slot {
+    Empty,
+    Mat(Matrix),
+    Vec(Vec<f64>),
+}
+
+impl Slot {
+    fn is_empty(&self) -> bool {
+        matches!(self, Slot::Empty)
+    }
+}
+
+/// Host-memory [`DeviceArena`] used by the native, serial, and PJRT
+/// backends (for PJRT the "device" stages in host memory and ships padded
+/// buffers to the XLA executables per launch; a real GPU PJRT arena would
+/// hold device literals instead).
+pub struct HostArena {
+    slots: Vec<Slot>,
+    live: usize,
+}
+
+impl HostArena {
+    pub fn with_capacity(capacity: usize) -> HostArena {
+        let mut slots = Vec::new();
+        slots.resize_with(capacity, || Slot::Empty);
+        HostArena { slots, live: 0 }
+    }
+
+    fn ensure(&mut self, id: BufferId) {
+        let idx = id.0 as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, || Slot::Empty);
+        }
+    }
+
+    fn put_slot(&mut self, id: BufferId, slot: Slot) {
+        self.ensure(id);
+        let idx = id.0 as usize;
+        if self.slots[idx].is_empty() && !slot.is_empty() {
+            self.live += 1;
+        }
+        self.slots[idx] = slot;
+    }
+
+    /// Move a matrix out of the arena (cheap: a `Vec` pointer move).
+    pub(crate) fn take_mat(&mut self, id: BufferId) -> Matrix {
+        let idx = id.0 as usize;
+        match std::mem::replace(
+            self.slots.get_mut(idx).expect("buffer id out of arena range"),
+            Slot::Empty,
+        ) {
+            Slot::Mat(m) => {
+                self.live -= 1;
+                m
+            }
+            Slot::Vec(_) => panic!("buffer B{idx} holds a vector, matrix expected"),
+            Slot::Empty => panic!("buffer B{idx} read before upload (or after free)"),
+        }
+    }
+
+    pub(crate) fn put_mat(&mut self, id: BufferId, m: Matrix) {
+        self.put_slot(id, Slot::Mat(m));
+    }
+
+    pub(crate) fn get_mat(&self, id: BufferId) -> &Matrix {
+        let idx = id.0 as usize;
+        match self.slots.get(idx).expect("buffer id out of arena range") {
+            Slot::Mat(m) => m,
+            Slot::Vec(_) => panic!("buffer B{idx} holds a vector, matrix expected"),
+            Slot::Empty => panic!("buffer B{idx} read before upload (or after free)"),
+        }
+    }
+
+    pub(crate) fn take_vec(&mut self, id: BufferId) -> Vec<f64> {
+        let idx = id.0 as usize;
+        match std::mem::replace(
+            self.slots.get_mut(idx).expect("buffer id out of arena range"),
+            Slot::Empty,
+        ) {
+            Slot::Vec(v) => {
+                self.live -= 1;
+                v
+            }
+            Slot::Mat(_) => panic!("buffer B{idx} holds a matrix, vector expected"),
+            Slot::Empty => panic!("buffer B{idx} read before upload (or after free)"),
+        }
+    }
+
+    pub(crate) fn put_vec(&mut self, id: BufferId, v: Vec<f64>) {
+        self.put_slot(id, Slot::Vec(v));
+    }
+
+    pub(crate) fn get_vec(&self, id: BufferId) -> &Vec<f64> {
+        let idx = id.0 as usize;
+        match self.slots.get(idx).expect("buffer id out of arena range") {
+            Slot::Vec(v) => v,
+            Slot::Mat(_) => panic!("buffer B{idx} holds a matrix, vector expected"),
+            Slot::Empty => panic!("buffer B{idx} read before upload (or after free)"),
+        }
+    }
+}
+
+impl DeviceArena for HostArena {
+    fn upload(&mut self, id: BufferId, m: &Matrix) {
+        self.put_mat(id, m.clone());
+    }
+
+    fn upload_vec(&mut self, id: BufferId, v: &[f64]) {
+        self.put_vec(id, v.to_vec());
+    }
+
+    fn alloc(&mut self, id: BufferId, rows: usize, cols: usize) {
+        self.put_mat(id, Matrix::zeros(rows, cols));
+    }
+
+    fn alloc_vec(&mut self, id: BufferId, len: usize) {
+        self.put_vec(id, vec![0.0; len]);
+    }
+
+    fn download(&self, id: BufferId) -> Matrix {
+        self.get_mat(id).clone()
+    }
+
+    fn take(&mut self, id: BufferId) -> Matrix {
+        self.take_mat(id)
+    }
+
+    fn download_vec(&self, id: BufferId) -> Vec<f64> {
+        self.get_vec(id).clone()
+    }
+
+    fn free(&mut self, id: BufferId) {
+        let idx = id.0 as usize;
+        let slot = self.slots.get_mut(idx).expect("buffer id out of arena range");
+        assert!(!slot.is_empty(), "double free of buffer B{idx}");
+        *slot = Slot::Empty;
+        self.live -= 1;
+    }
+
+    fn free_region(&mut self, from: BufferId) {
+        for idx in (from.0 as usize)..self.slots.len() {
+            if !self.slots[idx].is_empty() {
+                self.slots[idx] = Slot::Empty;
+                self.live -= 1;
+            }
+        }
+    }
+
+    fn live(&self) -> usize {
+        self.live
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared launch execution for host-memory backends.
+// ---------------------------------------------------------------------
+
+/// The batched math kernels a host-memory backend supplies; the shared
+/// [`exec_host_launch`] handles arena operand gathering and all
+/// data-movement opcodes, so each backend only implements the math.
+/// Signatures mirror the batched cuBLAS/cuSOLVER calls of paper §4.
+pub(crate) trait HostKernels {
+    fn potrf(&self, level: usize, blocks: &mut [Matrix]);
+    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]);
+    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]);
+    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix>;
+    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]);
+    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]);
+    fn gemv_acc(
+        &self,
+        level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    );
+    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]])
+        -> Vec<Vec<f64>>;
+}
+
+/// Downcast a trait-object arena to the host arena the in-tree backends
+/// share.
+pub(crate) fn host_arena(arena: &mut dyn DeviceArena) -> &mut HostArena {
+    arena
+        .as_any_mut()
+        .downcast_mut::<HostArena>()
+        .expect("host-memory backend requires a HostArena (arena from another device?)")
+}
+
+/// Execute one launch against a [`HostArena`] using `kern`'s batched math.
+/// Matrix operands are *moved* out of the arena for in-place kernels and
+/// moved back afterwards — pointer moves, no data copies — which is this
+/// backend family's analog of building device pointer arrays for the
+/// batched cuBLAS calls.
+pub(crate) fn exec_host_launch(kern: &dyn HostKernels, arena: &mut HostArena, launch: &Launch) {
+    match launch {
+        Launch::Potrf { level, bufs } => {
+            let mut blocks: Vec<Matrix> = bufs.iter().map(|&b| arena.take_mat(b)).collect();
+            kern.potrf(*level, &mut blocks);
+            for (&b, m) in bufs.iter().zip(blocks) {
+                arena.put_mat(b, m);
+            }
+        }
+        Launch::TrsmRightLt { level, items } => {
+            let mut panels: Vec<Matrix> = items.iter().map(|it| arena.take_mat(it.b)).collect();
+            {
+                let diags: Vec<&Matrix> = items.iter().map(|it| arena.get_mat(it.l)).collect();
+                kern.trsm_right_lt(*level, &diags, &mut panels);
+            }
+            for (it, m) in items.iter().zip(panels) {
+                arena.put_mat(it.b, m);
+            }
+        }
+        Launch::SchurSelf { level, items } => {
+            let mut cs: Vec<Matrix> = items.iter().map(|it| arena.take_mat(it.c)).collect();
+            {
+                let aas: Vec<&Matrix> = items.iter().map(|it| arena.get_mat(it.a)).collect();
+                kern.schur_self(*level, &aas, &mut cs);
+            }
+            for (it, m) in items.iter().zip(cs) {
+                arena.put_mat(it.c, m);
+            }
+        }
+        Launch::Sparsify { level, items } => {
+            let a_mats: Vec<Matrix> = items.iter().map(|it| arena.take_mat(it.a)).collect();
+            let out = {
+                let us: Vec<&Matrix> = items.iter().map(|it| arena.get_mat(it.u)).collect();
+                let vs: Vec<&Matrix> = items.iter().map(|it| arena.get_mat(it.v)).collect();
+                kern.sparsify(*level, &us, &a_mats, &vs)
+            };
+            for (it, m) in items.iter().zip(a_mats) {
+                arena.put_mat(it.a, m);
+            }
+            for (it, m) in items.iter().zip(out) {
+                arena.put_mat(it.dst, m);
+            }
+        }
+        Launch::Extract { items } => {
+            for it in items.iter() {
+                let m = arena.get_mat(it.src).submatrix(it.r0, it.c0, it.rows, it.cols);
+                arena.put_mat(it.dst, m);
+            }
+        }
+        Launch::Merge { items } => {
+            for item in items.iter() {
+                let mut merged = Matrix::zeros(item.rows, item.cols);
+                for part in &item.parts {
+                    let src = arena.get_mat(part.src);
+                    if src.rows() == part.rows && src.cols() == part.cols {
+                        merged.set_submatrix(part.roff, part.coff, src);
+                    } else {
+                        let blk = src.submatrix(0, 0, part.rows, part.cols);
+                        merged.set_submatrix(part.roff, part.coff, &blk);
+                    }
+                }
+                arena.put_mat(item.dst, merged);
+            }
+        }
+        Launch::ApplyBasis { level, trans, items } => {
+            let outs = {
+                let us: Vec<&Matrix> = items.iter().map(|&(u, _, _)| arena.get_mat(u)).collect();
+                let xs: Vec<&[f64]> =
+                    items.iter().map(|&(_, s, _)| arena.get_vec(s).as_slice()).collect();
+                kern.apply_basis(*level, &us, *trans, &xs)
+            };
+            for (&(_, _, d), o) in items.iter().zip(outs) {
+                arena.put_vec(d, o);
+            }
+        }
+        Launch::TrsvFwd { level, items } => {
+            let mut xs: Vec<Vec<f64>> = items.iter().map(|&(_, v)| arena.take_vec(v)).collect();
+            {
+                let ls: Vec<&Matrix> = items.iter().map(|&(l, _)| arena.get_mat(l)).collect();
+                kern.trsv_fwd(*level, &ls, &mut xs);
+            }
+            for (&(_, v), xv) in items.iter().zip(xs) {
+                arena.put_vec(v, xv);
+            }
+        }
+        Launch::TrsvBwd { level, items } => {
+            let mut xs: Vec<Vec<f64>> = items.iter().map(|&(_, v)| arena.take_vec(v)).collect();
+            {
+                let ls: Vec<&Matrix> = items.iter().map(|&(l, _)| arena.get_mat(l)).collect();
+                kern.trsv_bwd(*level, &ls, &mut xs);
+            }
+            for (&(_, v), xv) in items.iter().zip(xs) {
+                arena.put_vec(v, xv);
+            }
+        }
+        Launch::GemvAcc { level, trans, alpha, items } => {
+            let mut ys: Vec<Vec<f64>> =
+                items.iter().map(|&(_, _, y)| arena.take_vec(y)).collect();
+            {
+                let mats: Vec<&Matrix> = items.iter().map(|&(a, _, _)| arena.get_mat(a)).collect();
+                let xs: Vec<&[f64]> =
+                    items.iter().map(|&(_, x, _)| arena.get_vec(x).as_slice()).collect();
+                kern.gemv_acc(*level, *alpha, &mats, *trans, &xs, &mut ys);
+            }
+            for (&(_, _, y), yv) in items.iter().zip(ys) {
+                arena.put_vec(y, yv);
+            }
+        }
+        Launch::Split { items } => {
+            for &(src, at, lo, hi) in items.iter() {
+                let (a, b) = {
+                    let s = arena.get_vec(src);
+                    (s[..at].to_vec(), s[at..].to_vec())
+                };
+                arena.put_vec(lo, a);
+                arena.put_vec(hi, b);
+            }
+        }
+        Launch::Concat { items } => {
+            for &(dst, a, b) in items.iter() {
+                let mut v = arena.get_vec(a).clone();
+                v.extend_from_slice(arena.get_vec(b));
+                arena.put_vec(dst, v);
+            }
+        }
+        Launch::CopyBuf { items } => {
+            for &(dst, src) in items.iter() {
+                let v = arena.get_vec(src).clone();
+                arena.put_vec(dst, v);
+            }
+        }
+        Launch::AddVec { items } => {
+            for &(dst, a, b) in items.iter() {
+                let v: Vec<f64> = arena
+                    .get_vec(a)
+                    .iter()
+                    .zip(arena.get_vec(b))
+                    .map(|(&p, &q)| p + q)
+                    .collect();
+                arena.put_vec(dst, v);
+            }
+        }
+        Launch::RootSolve { l, x } => {
+            let mut xv = arena.take_vec(*x);
+            {
+                let lm = arena.get_mat(*l);
+                flops::add(2 * (lm.rows() * lm.rows()) as u64);
+                chol::potrs(lm, &mut xv);
+            }
+            arena.put_vec(*x, xv);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legacy slice-based adapter.
+// ---------------------------------------------------------------------
+
+/// Adapts any [`Device`] to the deprecated slice-based
+/// [`BatchExec`](crate::batch::BatchExec) trait by round-tripping each call
+/// through a scratch arena (upload → launch → fence → download). Keeps
+/// pre-redesign call sites (kernel micro-benches, research scripts)
+/// compiling until they migrate to [`Device`] directly — at the cost of
+/// exactly the per-call host marshalling the redesign removed from the hot
+/// path, so do not use it inside the executor.
+pub struct LegacyBatchExec<'d> {
+    device: &'d dyn Device,
+}
+
+impl<'d> LegacyBatchExec<'d> {
+    pub fn new(device: &'d dyn Device) -> LegacyBatchExec<'d> {
+        LegacyBatchExec { device }
+    }
+
+    fn ids(from: usize, n: usize) -> Vec<BufferId> {
+        (from..from + n).map(|i| BufferId(i as u32)).collect()
+    }
+}
+
+#[allow(deprecated)]
+impl super::BatchExec for LegacyBatchExec<'_> {
+    fn potrf(&self, level: usize, blocks: &mut [Matrix]) {
+        let n = blocks.len();
+        let mut arena = self.device.new_arena(n);
+        let ids = Self::ids(0, n);
+        for (&id, b) in ids.iter().zip(blocks.iter()) {
+            arena.upload(id, b);
+        }
+        self.device.launch(arena.as_mut(), &Launch::Potrf { level, bufs: &ids });
+        self.device.fence();
+        for (&id, b) in ids.iter().zip(blocks.iter_mut()) {
+            *b = arena.download(id);
+        }
+    }
+
+    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]) {
+        assert_eq!(l.len(), b.len());
+        let n = b.len();
+        let mut arena = self.device.new_arena(2 * n);
+        let l_ids = Self::ids(0, n);
+        let b_ids = Self::ids(n, n);
+        for (&id, m) in l_ids.iter().zip(l) {
+            arena.upload(id, m);
+        }
+        for (&id, m) in b_ids.iter().zip(b.iter()) {
+            arena.upload(id, m);
+        }
+        let items: Vec<TrsmItem> = l_ids
+            .iter()
+            .zip(&b_ids)
+            .map(|(&l, &b)| TrsmItem { l, b })
+            .collect();
+        self.device.launch(arena.as_mut(), &Launch::TrsmRightLt { level, items: &items });
+        self.device.fence();
+        for (&id, m) in b_ids.iter().zip(b.iter_mut()) {
+            *m = arena.download(id);
+        }
+    }
+
+    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]) {
+        assert_eq!(a.len(), c.len());
+        let n = c.len();
+        let mut arena = self.device.new_arena(2 * n);
+        let a_ids = Self::ids(0, n);
+        let c_ids = Self::ids(n, n);
+        for (&id, m) in a_ids.iter().zip(a) {
+            arena.upload(id, m);
+        }
+        for (&id, m) in c_ids.iter().zip(c.iter()) {
+            arena.upload(id, m);
+        }
+        let items: Vec<SyrkItem> = a_ids
+            .iter()
+            .zip(&c_ids)
+            .map(|(&a, &c)| SyrkItem { a, c })
+            .collect();
+        self.device.launch(arena.as_mut(), &Launch::SchurSelf { level, items: &items });
+        self.device.fence();
+        for (&id, m) in c_ids.iter().zip(c.iter_mut()) {
+            *m = arena.download(id);
+        }
+    }
+
+    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
+        assert_eq!(u.len(), a.len());
+        assert_eq!(v.len(), a.len());
+        let n = a.len();
+        let mut arena = self.device.new_arena(4 * n);
+        let u_ids = Self::ids(0, n);
+        let a_ids = Self::ids(n, n);
+        let v_ids = Self::ids(2 * n, n);
+        let d_ids = Self::ids(3 * n, n);
+        for (&id, m) in u_ids.iter().zip(u) {
+            arena.upload(id, m);
+        }
+        for (&id, m) in a_ids.iter().zip(a) {
+            arena.upload(id, m);
+        }
+        for (&id, m) in v_ids.iter().zip(v) {
+            arena.upload(id, m);
+        }
+        let items: Vec<SparsifyItem> = (0..n)
+            .map(|t| SparsifyItem { u: u_ids[t], a: a_ids[t], v: v_ids[t], dst: d_ids[t] })
+            .collect();
+        self.device.launch(arena.as_mut(), &Launch::Sparsify { level, items: &items });
+        self.device.fence();
+        d_ids.iter().map(|&id| arena.download(id)).collect()
+    }
+
+    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        self.trsv_impl(level, l, x, false);
+    }
+
+    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        self.trsv_impl(level, l, x, true);
+    }
+
+    fn gemv_acc(
+        &self,
+        level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    ) {
+        assert_eq!(a.len(), x.len());
+        assert_eq!(a.len(), y.len());
+        let n = a.len();
+        let mut arena = self.device.new_arena(3 * n);
+        let a_ids = Self::ids(0, n);
+        let x_ids = Self::ids(n, n);
+        let y_ids = Self::ids(2 * n, n);
+        for (&id, m) in a_ids.iter().zip(a) {
+            arena.upload(id, m);
+        }
+        for (&id, xv) in x_ids.iter().zip(x) {
+            arena.upload_vec(id, xv);
+        }
+        for (&id, yv) in y_ids.iter().zip(y.iter()) {
+            arena.upload_vec(id, yv);
+        }
+        let items: Vec<(BufferId, BufferId, BufferId)> = (0..n)
+            .map(|t| (a_ids[t], x_ids[t], y_ids[t]))
+            .collect();
+        self.device
+            .launch(arena.as_mut(), &Launch::GemvAcc { level, trans, alpha, items: &items });
+        self.device.fence();
+        for (&id, yv) in y_ids.iter().zip(y.iter_mut()) {
+            *yv = arena.download_vec(id);
+        }
+    }
+
+    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
+        assert_eq!(u.len(), x.len());
+        let n = u.len();
+        let mut arena = self.device.new_arena(3 * n);
+        let u_ids = Self::ids(0, n);
+        let x_ids = Self::ids(n, n);
+        let d_ids = Self::ids(2 * n, n);
+        for (&id, m) in u_ids.iter().zip(u) {
+            arena.upload(id, m);
+        }
+        for (&id, xv) in x_ids.iter().zip(x) {
+            arena.upload_vec(id, xv);
+        }
+        for (&id, m) in d_ids.iter().zip(u) {
+            arena.alloc_vec(id, if trans { m.cols() } else { m.rows() });
+        }
+        let items: Vec<BasisItem> = (0..n).map(|t| (u_ids[t], x_ids[t], d_ids[t])).collect();
+        self.device
+            .launch(arena.as_mut(), &Launch::ApplyBasis { level, trans, items: &items });
+        self.device.fence();
+        d_ids.iter().map(|&id| arena.download_vec(id)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        self.device.name()
+    }
+}
+
+impl LegacyBatchExec<'_> {
+    fn trsv_impl(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>], bwd: bool) {
+        assert_eq!(l.len(), x.len());
+        let n = l.len();
+        let mut arena = self.device.new_arena(2 * n);
+        let l_ids = Self::ids(0, n);
+        let x_ids = Self::ids(n, n);
+        for (&id, m) in l_ids.iter().zip(l) {
+            arena.upload(id, m);
+        }
+        for (&id, xv) in x_ids.iter().zip(x.iter()) {
+            arena.upload_vec(id, xv);
+        }
+        let items: Vec<(BufferId, BufferId)> =
+            l_ids.iter().zip(&x_ids).map(|(&l, &x)| (l, x)).collect();
+        let launch = if bwd {
+            Launch::TrsvBwd { level, items: &items }
+        } else {
+            Launch::TrsvFwd { level, items: &items }
+        };
+        self.device.launch(arena.as_mut(), &launch);
+        self.device.fence();
+        for (&id, xv) in x_ids.iter().zip(x.iter_mut()) {
+            *xv = arena.download_vec(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_arena_tracks_live_buffers() {
+        let mut arena = HostArena::with_capacity(4);
+        assert_eq!(arena.live(), 0);
+        arena.upload(BufferId(0), &Matrix::eye(3));
+        arena.upload_vec(BufferId(1), &[1.0, 2.0]);
+        assert_eq!(arena.live(), 2);
+        // Overwrite keeps the count.
+        arena.alloc(BufferId(0), 2, 2);
+        assert_eq!(arena.live(), 2);
+        assert_eq!(arena.download(BufferId(0)).rows(), 2);
+        assert_eq!(arena.download_vec(BufferId(1)), vec![1.0, 2.0]);
+        arena.free(BufferId(0));
+        arena.free(BufferId(1));
+        assert_eq!(arena.live(), 0);
+        // Growth on demand past the construction capacity.
+        arena.alloc_vec(BufferId(17), 5);
+        assert_eq!(arena.live(), 1);
+        assert_eq!(arena.download_vec(BufferId(17)).len(), 5);
+        // Region free is tolerant of gaps and empty slots (the executor's
+        // vector-region cleanup after a mid-launch panic).
+        arena.alloc(BufferId(2), 1, 1);
+        arena.alloc_vec(BufferId(20), 3);
+        assert_eq!(arena.live(), 3);
+        arena.free_region(BufferId(10)); // frees 17 and 20, keeps 2
+        assert_eq!(arena.live(), 1);
+        assert_eq!(arena.download(BufferId(2)).rows(), 1);
+        arena.free_region(BufferId(10)); // idempotent on empty region
+        assert_eq!(arena.live(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn device_arena_rejects_double_free() {
+        let mut arena = HostArena::with_capacity(1);
+        arena.alloc(BufferId(0), 1, 1);
+        arena.free(BufferId(0));
+        arena.free(BufferId(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "read before upload")]
+    fn device_arena_rejects_use_after_free() {
+        let mut arena = HostArena::with_capacity(1);
+        arena.alloc(BufferId(0), 1, 1);
+        arena.free(BufferId(0));
+        let _ = arena.download(BufferId(0));
+    }
+
+    #[test]
+    fn device_launch_opcodes_are_named() {
+        let l = Launch::Potrf { level: 2, bufs: &[] };
+        assert_eq!(l.opcode(), "POTRF");
+        let l = Launch::RootSolve { l: BufferId(0), x: BufferId(1) };
+        assert_eq!(l.opcode(), "POTRS");
+    }
+}

@@ -2,10 +2,16 @@
 //!
 //! The inherently parallel ULV factorization issues its per-level work as
 //! *batched* kernel launches — the paper's cuBLAS/cuSOLVER batched calls.
-//! This module defines the backend-neutral interface ([`BatchExec`]) plus:
+//! The backend contract is the arena-native [`device::Device`] trait: a
+//! backend executes [`device::Launch`]es (opcode + `BufferId` operand
+//! lists, the plan IR's own vocabulary) against a device-owned
+//! [`device::DeviceArena`], so residency, streams, and fences belong to
+//! the backend. In-tree implementations:
 //!
 //! * [`native::NativeBackend`] — thread-pool execution of each batch item
 //!   with the from-scratch [`crate::linalg`] kernels (the paper's CPU path);
+//! * [`crate::solver::backend::SerialBackend`] — single-threaded golden
+//!   reference, bit-identical to native;
 //! * [`crate::runtime::PjrtBackend`] — constant-shape, zero-padded batches
 //!   executed by AOT-compiled XLA executables (the paper's GPU path; see
 //!   `python/compile/` for the JAX/Pallas kernels).
@@ -14,30 +20,32 @@
 //! maximum (multiples of 4), and POTRF padding writes unit diagonals so the
 //! Cholesky never divides by zero (the paper's "batched AXPY ... via a
 //! degenerate GEMM" trick).
+//!
+//! The pre-redesign slice-based [`BatchExec`] trait is deprecated; use
+//! [`device::LegacyBatchExec`] to adapt a [`device::Device`] for old call
+//! sites until they migrate.
 
+pub mod device;
 pub mod native;
 pub mod pad;
 
+pub use device::{Device, DeviceArena, HostArena, Launch, LegacyBatchExec};
+
 use crate::linalg::Matrix;
 
-/// Which backend executes batched kernels.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
-pub enum BackendChoice {
-    /// Thread-pool native kernels (CPU path).
-    #[default]
-    Native,
-    /// AOT XLA executables through PJRT (GPU-analog path). Falls back to
-    /// native per-op when an artifact for the shape bucket is missing.
-    Pjrt,
-}
-
-/// Backend-neutral batched kernels used by the ULV factorization and the
-/// parallel substitution. Every method is a single conceptual "launch";
-/// implementations may further split batches by shape bucket.
+/// Backend-neutral batched kernels over host slices — the pre-redesign
+/// backend contract, superseded by the arena-native [`device::Device`]
+/// trait (which backends now implement directly and the plan executor
+/// drives without per-launch slice reconstruction).
 ///
-/// Shapes within one call are homogeneous unless noted; the coordinator
-/// (see [`crate::ulv`]) groups work accordingly, zero-padding per level the
-/// way the paper pads to the level's maximum rank.
+/// Kept only so slice-based research code and micro-benches compile via
+/// [`device::LegacyBatchExec`]; every call through this trait round-trips
+/// host memory per launch.
+#[deprecated(
+    since = "0.1.0",
+    note = "implement batch::device::Device; wrap a Device in \
+            batch::device::LegacyBatchExec for slice-based call sites"
+)]
 pub trait BatchExec: Sync {
     /// In-place lower Cholesky of each block.
     fn potrf(&self, level: usize, blocks: &mut [Matrix]);
@@ -85,14 +93,4 @@ pub(crate) fn count_sparsify_flops(u: &Matrix, a: &Matrix, v: &Matrix) {
     flops::add(flops::gemm_flops(u.cols(), a.cols(), u.rows()));
     flops::add(flops::gemm_flops(u.cols(), v.cols(), a.cols()));
     let _ = v;
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn backend_choice_default() {
-        assert_eq!(BackendChoice::default(), BackendChoice::Native);
-    }
 }

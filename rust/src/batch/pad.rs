@@ -96,9 +96,29 @@ pub fn buffer_to_batch(
     out
 }
 
-/// Double-precision variants (the f64 artifacts).
+/// Double-precision variants (the f64 artifacts). Shares the padding and
+/// diag-fill rules with [`refs_to_buffer_f64`] so the AXPY-diagonal
+/// semantics live in one place.
 pub fn batch_to_buffer_f64(mats: &[Matrix], rows: usize, cols: usize, diag_fill: f64) -> Vec<f64> {
-    let mut buf = vec![0.0f64; mats.len() * rows * cols];
+    let refs: Vec<&Matrix> = mats.iter().collect();
+    refs_to_buffer_f64(&refs, mats.len(), rows, cols, diag_fill)
+}
+
+/// First-class padded upload: write a batch of matrix *references* straight
+/// into a constant-shape row-major `[slots, rows, cols]` buffer, including
+/// the padding slots past `mats.len()` (their diagonals get `diag_fill`, so
+/// a padded POTRF/TRSM sees identity blocks — the paper's batched-AXPY
+/// diagonal trick). Replaces the clone-resize-flatten round trip the PJRT
+/// backend used to perform per op.
+pub fn refs_to_buffer_f64(
+    mats: &[&Matrix],
+    slots: usize,
+    rows: usize,
+    cols: usize,
+    diag_fill: f64,
+) -> Vec<f64> {
+    assert!(slots >= mats.len());
+    let mut buf = vec![0.0f64; slots * rows * cols];
     for (t, m) in mats.iter().enumerate() {
         let base = t * rows * cols;
         for i in 0..m.rows() {
@@ -112,6 +132,25 @@ pub fn batch_to_buffer_f64(mats: &[Matrix], rows: usize, cols: usize, diag_fill:
                 buf[base + d * cols + d] = diag_fill;
             }
         }
+    }
+    if diag_fill != 0.0 {
+        for t in mats.len()..slots {
+            let base = t * rows * cols;
+            for d in 0..rows.min(cols) {
+                buf[base + d * cols + d] = diag_fill;
+            }
+        }
+    }
+    buf
+}
+
+/// Padded upload of vector references into a `[slots, rows, 1]` buffer
+/// (segment vectors for the batched TRSV/GEMV/BASIS artifacts).
+pub fn vecs_to_buffer_f64(xs: &[&[f64]], slots: usize, rows: usize) -> Vec<f64> {
+    assert!(slots >= xs.len());
+    let mut buf = vec![0.0f64; slots * rows];
+    for (t, x) in xs.iter().enumerate() {
+        buf[t * rows..t * rows + x.len()].copy_from_slice(x);
     }
     buf
 }
@@ -173,6 +212,36 @@ mod tests {
         let l = crate::linalg::chol::cholesky(&p).unwrap();
         assert!((l[(0, 0)] - 1.0).abs() < 1e-14);
         assert!((l[(3, 3)] - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn refs_buffer_matches_clone_resize_path() {
+        let mut rng = Rng::new(0xBEEF);
+        let mats: Vec<Matrix> = (0..3).map(|_| Matrix::randn(5, 7, &mut rng)).collect();
+        let refs: Vec<&Matrix> = mats.iter().collect();
+        let (pr, pc, slots) = (dim_pad(5), dim_pad(7), 4);
+        for diag in [0.0, 1.0] {
+            // Old path: clone, resize with eye/zeros, flatten.
+            let mut padded = mats.clone();
+            let filler = if diag != 0.0 {
+                Matrix::eye(pr.min(pc))
+            } else {
+                Matrix::zeros(pr, pc)
+            };
+            padded.resize(slots, filler);
+            let want = batch_to_buffer_f64(&padded, pr, pc, diag);
+            // New path: straight from refs.
+            let got = refs_to_buffer_f64(&refs, slots, pr, pc, diag);
+            assert_eq!(got, want, "diag_fill={diag}");
+        }
+        // Vector variant.
+        let xs: Vec<Vec<f64>> = (0..2).map(|i| vec![i as f64 + 1.0; 3]).collect();
+        let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let buf = vecs_to_buffer_f64(&xrefs, 4, 6);
+        assert_eq!(buf.len(), 24);
+        assert_eq!(&buf[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&buf[6..9], &[2.0, 2.0, 2.0]);
+        assert_eq!(&buf[12..], &[0.0; 12]);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! h2ulv solve     [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-//!                 [--eta E] [--backend native|pjrt|serial]
+//!                 [--eta E] [--backend native|pjrt|pjrt:DIR|serial]
 //!                 [--subst parallel|naive] [--ranks P]
 //! h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L] [--eta E]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
@@ -63,7 +63,7 @@ const USAGE: &str = "h2ulv — inherently parallel H²-ULV dense solver (Ma & Yo
 USAGE:
   h2ulv solve   [--n N] [--kernel laplace|yukawa|gaussian|matern32]
                 [--geometry sphere|cube|molecule] [--rank R] [--leaf L]
-                [--eta E] [--backend native|pjrt|serial]
+                [--eta E] [--backend native|pjrt|pjrt:DIR|serial]
                 [--subst parallel|naive] [--ranks P] [--seed S]
   h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
                 [--eta E] [--seed S]

@@ -24,11 +24,11 @@
 //! Modeled wall times combine the per-rank FLOP split with an α-β
 //! (latency/bandwidth) collective cost model ([`CommModel`], [`NCCL_LIKE`]).
 
+use crate::batch::device::{Device, DeviceArena};
 use crate::batch::native::NativeBackend;
-use crate::batch::BatchExec;
 use crate::h2::H2Matrix;
 use crate::metrics::flops;
-use crate::ulv::{factorize, SubstMode, UlvFactor};
+use crate::ulv::{SubstMode, UlvFactor};
 use std::collections::HashSet;
 
 /// α-β (latency/bandwidth) communication cost model plus a modeled
@@ -101,9 +101,10 @@ fn owner(i: usize, width: usize, p: usize) -> usize {
 /// the permutation for callers working in original point order). `ranks`
 /// is rounded down to a power of two and clamped to one rank per leaf.
 ///
-/// Factorizes `h2` on a fresh native backend; callers that already hold a
+/// Factorizes `h2` on a fresh native backend (keeping the factor resident
+/// in the device arena for the substitution); callers that already hold a
 /// ULV factor (notably [`crate::solver::H2Solver::solve_dist`]) should use
-/// [`dist_solve_driver_with`] to avoid the redundant factorization.
+/// [`dist_solve_driver_in`] to avoid the redundant factorization.
 pub fn dist_solve_driver(
     h2: &H2Matrix,
     ranks: usize,
@@ -111,17 +112,35 @@ pub fn dist_solve_driver(
     mode: SubstMode,
 ) -> DistReport {
     let exec = NativeBackend::new();
-    let fac = factorize(h2, &exec);
-    dist_solve_driver_with(h2, &fac, &exec, ranks, b, mode)
+    let plan = std::sync::Arc::new(crate::plan::record(h2));
+    let (fac, mut arena) = crate::plan::Executor::new(&exec).factorize_resident(&plan, h2);
+    dist_solve_driver_in(h2, &fac, &exec, arena.as_mut(), ranks, b, mode)
 }
 
 /// [`dist_solve_driver`] over an existing ULV factor and backend: only the
 /// substitution runs numerically; factorization cost is *modeled* from the
-/// factor's block shapes.
+/// factor's block shapes. Uploads the factor into a transient device arena;
+/// callers that already hold a resident arena (the session facade) use
+/// [`dist_solve_driver_in`].
 pub fn dist_solve_driver_with(
     h2: &H2Matrix,
     fac: &UlvFactor,
-    exec: &dyn BatchExec,
+    exec: &dyn Device,
+    ranks: usize,
+    b: &[f64],
+    mode: SubstMode,
+) -> DistReport {
+    let mut arena = crate::plan::Executor::new(exec).upload_factor(fac);
+    dist_solve_driver_in(h2, fac, exec, arena.as_mut(), ranks, b, mode)
+}
+
+/// [`dist_solve_driver_with`] against an arena that already holds the
+/// factor resident — no per-call factor upload.
+pub fn dist_solve_driver_in(
+    h2: &H2Matrix,
+    fac: &UlvFactor,
+    exec: &dyn Device,
+    arena: &mut dyn DeviceArena,
     ranks: usize,
     b: &[f64],
     mode: SubstMode,
@@ -133,7 +152,7 @@ pub fn dist_solve_driver_with(
     }
 
     // The numerical pipeline: identical math for every rank count.
-    let x = fac.solve_tree_order(b, exec, mode);
+    let x = crate::plan::Executor::new(exec).solve_in(&fac.plan, arena, b, mode);
 
     let mut rank_flops = vec![(0u64, 0u64); p];
     let mut factor_bytes = 0u64;

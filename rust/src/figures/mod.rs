@@ -8,7 +8,7 @@
 use crate::baselines::blr::{BlrConfig, BlrMatrix};
 use crate::batch::native::NativeBackend;
 use crate::construct::H2Config;
-use crate::dist::{dist_solve_driver, dist_solve_driver_with, CommModel, NCCL_LIKE};
+use crate::dist::{dist_solve_driver, dist_solve_driver_in, CommModel, NCCL_LIKE};
 use crate::geometry::{molecule, Geometry};
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
@@ -258,11 +258,21 @@ pub fn fig20(scale: Scale) -> String {
     let bt = h2.tree.permute_vec(&b);
     let model: CommModel = NCCL_LIKE;
     let mut out = format!("# Figure 20 (strong scaling): N={n}, P, h2_factor_s(modeled), h2_subst_s\n");
-    // One factorization serves every rank count (times are modeled).
+    // One factorization serves every rank count (times are modeled), and
+    // the factor stays resident in its arena for every substitution replay.
     let exec = NativeBackend::new();
-    let fac = factorize(&h2, &exec);
+    let plan = std::sync::Arc::new(crate::plan::record(&h2));
+    let (fac, mut arena) = crate::plan::Executor::new(&exec).factorize_resident(&plan, &h2);
     for &p in &ps {
-        let report = dist_solve_driver_with(&h2, &fac, &exec, p, &bt, SubstMode::Parallel);
+        let report = dist_solve_driver_in(
+            &h2,
+            &fac,
+            &exec,
+            arena.as_mut(),
+            p,
+            &bt,
+            SubstMode::Parallel,
+        );
         out.push_str(&format!(
             "{p}, {:.4}, {:.4}\n",
             report.factor_time(&model),

@@ -14,9 +14,10 @@
 //! * the inherently parallel ULV factorization and the novel parallel
 //!   forward/backward substitution ([`ulv`]), driven by a recorded,
 //!   replayable execution-plan IR ([`plan`]),
-//! * a batched-execution engine with a native thread-pool backend and an
-//!   XLA/PJRT backend that runs AOT-compiled JAX/Pallas artifacts
-//!   ([`batch`], [`runtime`]),
+//! * a batched-execution engine behind the arena-native device-resident
+//!   launch API ([`batch::device::Device`]), with a native thread-pool
+//!   backend and an XLA/PJRT backend that runs AOT-compiled JAX/Pallas
+//!   artifacts ([`batch`], [`runtime`]),
 //! * a simulated distributed-memory runtime with NCCL-like collectives
 //!   ([`dist`]),
 //! * baselines (dense Cholesky, BLR tile-Cholesky ≈ LORAPO) ([`baselines`]),

@@ -1,32 +1,45 @@
 //! The [`Executor`]: replays a recorded [`Plan`] against any
-//! [`BatchExec`] backend.
+//! [`Device`] backend.
+//!
+//! The executor performs **zero per-launch host-slice marshalling**: every
+//! factorization and substitution instruction maps 1:1 onto a
+//! [`Launch`] whose operands are the plan's own `BufferId` lists, issued
+//! against a device-owned arena. Host memory is touched only at the
+//! explicit transfer points — `Instr::Upload` (H² data in), `LoadRhs`
+//! (right-hand side in), `StoreSol` and the factor download (results out).
 //!
 //! Replay is deterministic: the instruction stream fixes the launch order
 //! and the grouping of every batch, so two replays of the same plan on the
 //! same backend are bit-identical — the property the plan-replay tests
 //! assert and the property that makes backend rebinding
 //! ([`crate::solver::H2Solver::rebind_backend`]) a pure re-execution.
+//!
+//! After [`Executor::factorize_resident`] the factor matrices (and bases
+//! and root factor) are still live in the arena; substitution programs
+//! reference them by the same `BufferId`s, so a session can replay solves
+//! against the resident arena without re-uploading the factor
+//! ([`Executor::solve_in`]). [`Executor::upload_factor`] rebuilds such an
+//! arena from a host-side [`UlvFactor`] for standalone solves.
 
 use super::*;
-use crate::batch::BatchExec;
+use crate::batch::device::{Device, DeviceArena, Launch};
 use crate::h2::H2Matrix;
-use crate::linalg::chol;
 use crate::linalg::Matrix;
 use crate::metrics::flops::{self, FlopScope, Phase};
 use crate::ulv::{LevelFactor, SubstMode, UlvFactor};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Replays plans. Holds the backend and an optional per-session
+/// Replays plans. Holds the device and an optional per-session
 /// [`FlopScope`] that the plan's static FLOP metadata is credited to.
 pub struct Executor<'a> {
-    exec: &'a dyn BatchExec,
+    device: &'a dyn Device,
     scope: Option<&'a FlopScope>,
 }
 
 impl<'a> Executor<'a> {
-    pub fn new(exec: &'a dyn BatchExec) -> Executor<'a> {
-        Executor { exec, scope: None }
+    pub fn new(device: &'a dyn Device) -> Executor<'a> {
+        Executor { device, scope: None }
     }
 
     /// Credit executed FLOPs (from the plan's metadata) to `scope` in
@@ -40,140 +53,127 @@ impl<'a> Executor<'a> {
     // ---------------- Factorization replay ----------------
 
     /// Replay the factorization program against `h2`, producing a
-    /// [`UlvFactor`] that shares `plan` for its substitution replays.
+    /// [`UlvFactor`] that shares `plan` for its substitution replays. The
+    /// device arena is dropped — the factor is *moved* out of it
+    /// (copy-free on host-memory arenas); use
+    /// [`Executor::factorize_resident`] to keep the factor device-resident
+    /// for subsequent solves instead.
     ///
     /// `h2` may be any matrix structurally identical to the one the plan
     /// was recorded from ([`Plan::compatible`]).
     pub fn factorize(&self, plan: &Arc<Plan>, h2: &H2Matrix) -> UlvFactor {
+        self.factorize_inner(plan, h2, false).0
+    }
+
+    /// [`factorize`](Executor::factorize), additionally returning the
+    /// arena with the factor still resident (outputs + bases + root — see
+    /// [`FactorProgram::resident_bufs`]); the returned [`UlvFactor`] is a
+    /// downloaded host mirror. The session facade holds the arena so
+    /// every solve replays against device-resident factors.
+    pub fn factorize_resident(
+        &self,
+        plan: &Arc<Plan>,
+        h2: &H2Matrix,
+    ) -> (UlvFactor, Box<dyn DeviceArena>) {
+        self.factorize_inner(plan, h2, true)
+    }
+
+    fn factorize_inner(
+        &self,
+        plan: &Arc<Plan>,
+        h2: &H2Matrix,
+        resident: bool,
+    ) -> (UlvFactor, Box<dyn DeviceArena>) {
         assert!(plan.compatible(h2), "plan recorded for a different H2 structure");
         let prev_phase = flops::set_phase(Phase::Factor);
         let prog = &plan.factor;
-        let mut arena: Vec<Option<Matrix>> = (0..prog.buf_count).map(|_| None).collect();
+        let mut arena = self.device.new_arena(prog.buf_count);
 
-        self.exec_factor_steps(&prog.prologue, &mut arena, h2);
+        self.run_factor_steps(&prog.prologue, arena.as_mut(), h2);
         for lp in &prog.levels {
-            self.exec_factor_steps(&lp.steps, &mut arena, h2);
+            self.device.stream(lp.level);
+            self.run_factor_steps(&lp.steps, arena.as_mut(), h2);
         }
-        self.finish_factor(plan, h2, arena, prev_phase)
+        // Root factorization (Algorithm 2 line 22): batch-of-one POTRF on
+        // the merged root buffer, which then holds L for RootSolve.
+        self.device.stream(0);
+        let root = [prog.root_src];
+        self.device.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &root });
+        self.device.fence();
+
+        let factor = {
+            let a = arena.as_mut();
+            if resident {
+                // Keep the arena intact: the factor is a downloaded mirror.
+                self.assemble_factor(plan, h2, &mut |b| a.download(b))
+            } else {
+                // The arena is about to be dropped: move the factor out
+                // (pointer moves, no data copies, on host-memory arenas).
+                self.assemble_factor(plan, h2, &mut |b| a.take(b))
+            }
+        };
+        flops::set_phase(prev_phase);
+        if let Some(scope) = self.scope {
+            scope.add(Phase::Factor, prog.total_flops);
+        }
+        (factor, arena)
     }
 
-    /// Execute one stream of factorization instructions against the arena.
-    fn exec_factor_steps(
-        &self,
-        steps: &[Instr],
-        arena: &mut Vec<Option<Matrix>>,
-        h2: &H2Matrix,
-    ) {
+    /// Issue one stream of factorization instructions. `Upload` and `Free`
+    /// are arena transfers; everything else is a device launch with the
+    /// instruction's own operand lists.
+    fn run_factor_steps(&self, steps: &[Instr], arena: &mut dyn DeviceArena, h2: &H2Matrix) {
         for step in steps {
             match step {
-                Instr::LoadDense { items } => {
-                    for &(key, dst) in items {
-                        put(&mut arena, dst, h2.dense[&key].clone());
-                    }
-                }
-                Instr::Sparsify { level, items } => {
-                    let blocks: Vec<Matrix> =
-                        items.iter().map(|it| take(&mut arena, it.a)).collect();
-                    let us: Vec<&Matrix> =
-                        items.iter().map(|it| &h2.bases[it.u.level][it.u.index].u).collect();
-                    let vs: Vec<&Matrix> =
-                        items.iter().map(|it| &h2.bases[it.v.level][it.v.index].u).collect();
-                    let out = self.exec.sparsify(*level, &us, &blocks, &vs);
-                    for (it, m) in items.iter().zip(out) {
-                        put(&mut arena, it.dst, m);
-                    }
-                }
-                Instr::Extract { items } => {
-                    for it in items {
-                        let m = get(&arena, it.src).submatrix(it.r0, it.c0, it.rows, it.cols);
-                        put(&mut arena, it.dst, m);
-                    }
-                }
-                Instr::Potrf { level, bufs } => {
-                    let mut batch: Vec<Matrix> =
-                        bufs.iter().map(|&b| take(&mut arena, b)).collect();
-                    self.exec.potrf(*level, &mut batch);
-                    for (&b, m) in bufs.iter().zip(batch) {
-                        put(&mut arena, b, m);
-                    }
-                }
-                Instr::TrsmRightLt { level, items } => {
-                    let mut panels: Vec<Matrix> =
-                        items.iter().map(|it| take(&mut arena, it.b)).collect();
-                    {
-                        let diags: Vec<&Matrix> =
-                            items.iter().map(|it| get(&arena, it.l)).collect();
-                        self.exec.trsm_right_lt(*level, &diags, &mut panels);
-                    }
-                    for (it, m) in items.iter().zip(panels) {
-                        put(&mut arena, it.b, m);
-                    }
-                }
-                Instr::SchurSelf { level, items } => {
-                    let mut cs: Vec<Matrix> =
-                        items.iter().map(|it| take(&mut arena, it.c)).collect();
-                    {
-                        let aas: Vec<&Matrix> =
-                            items.iter().map(|it| get(&arena, it.a)).collect();
-                        self.exec.schur_self(*level, &aas, &mut cs);
-                    }
-                    for (it, m) in items.iter().zip(cs) {
-                        put(&mut arena, it.c, m);
-                    }
-                }
-                Instr::Merge { level: _, items } => {
-                    for item in items {
-                        let mut merged = Matrix::zeros(item.rows, item.cols);
-                        for part in &item.parts {
-                            match &part.src {
-                                MergeSrc::BufferSub(b) => {
-                                    let src = get(&arena, *b);
-                                    if src.rows() == part.rows && src.cols() == part.cols {
-                                        merged.set_submatrix(part.roff, part.coff, src);
-                                    } else {
-                                        let blk = src.submatrix(0, 0, part.rows, part.cols);
-                                        merged.set_submatrix(part.roff, part.coff, &blk);
-                                    }
-                                }
-                                MergeSrc::Coupling(l, key) => {
-                                    let s = h2.coupling[*l]
-                                        .get(key)
-                                        .expect("plan coupling ref missing in H2 matrix");
-                                    merged.set_submatrix(part.roff, part.coff, s);
-                                }
-                            }
-                        }
-                        put(&mut arena, item.dst, merged);
+                Instr::Upload { items } => {
+                    for &(src, dst) in items {
+                        arena.upload(dst, host_src(h2, src));
                     }
                 }
                 Instr::Free { bufs } => {
                     for &b in bufs {
-                        arena[b.0 as usize] = None;
+                        arena.free(b);
                     }
+                }
+                Instr::Sparsify { level, items } => {
+                    self.device.launch(arena, &Launch::Sparsify { level: *level, items });
+                }
+                Instr::Extract { items } => {
+                    self.device.launch(arena, &Launch::Extract { items });
+                }
+                Instr::Potrf { level, bufs } => {
+                    self.device.launch(arena, &Launch::Potrf { level: *level, bufs });
+                }
+                Instr::TrsmRightLt { level, items } => {
+                    self.device.launch(arena, &Launch::TrsmRightLt { level: *level, items });
+                }
+                Instr::SchurSelf { level, items } => {
+                    self.device.launch(arena, &Launch::SchurSelf { level: *level, items });
+                }
+                Instr::Merge { level: _, items } => {
+                    self.device.launch(arena, &Launch::Merge { items });
                 }
             }
         }
     }
 
-    /// Assemble the [`UlvFactor`] from the output wiring and run the dense
-    /// root Cholesky (Algorithm 2 line 22).
-    fn finish_factor(
+    /// Build the factor's host form from the output wiring; `fetch`
+    /// decides whether buffers are downloaded (resident arena) or moved
+    /// out (transient arena).
+    fn assemble_factor(
         &self,
         plan: &Arc<Plan>,
         h2: &H2Matrix,
-        mut arena: Vec<Option<Matrix>>,
-        prev_phase: Phase,
+        fetch: &mut dyn FnMut(BufferId) -> Matrix,
     ) -> UlvFactor {
         let prog = &plan.factor;
-        // Assemble the factor from the output wiring.
         let mut levels: Vec<LevelFactor> = Vec::with_capacity(prog.outputs.len());
         for out in &prog.outputs {
-            let chol_rr: Vec<Matrix> =
-                out.chol_rr.iter().map(|&b| take(&mut arena, b)).collect();
+            let chol_rr: Vec<Matrix> = out.chol_rr.iter().map(|&b| fetch(b)).collect();
             let lr: HashMap<(usize, usize), Matrix> =
-                out.lr.iter().map(|&(k, b)| (k, take(&mut arena, b))).collect();
+                out.lr.iter().map(|&(k, b)| (k, fetch(b))).collect();
             let ls: HashMap<(usize, usize), Matrix> =
-                out.ls.iter().map(|&(k, b)| (k, take(&mut arena, b))).collect();
+                out.ls.iter().map(|&(k, b)| (k, fetch(b))).collect();
             levels.push(LevelFactor {
                 level: out.level,
                 bases: h2.bases[out.level].clone(),
@@ -183,19 +183,9 @@ impl<'a> Executor<'a> {
                 near: out.near.clone(),
             });
         }
-
-        // Root factorization (Algorithm 2 line 22).
-        let root = take(&mut arena, prog.root_src);
-        flops::add(flops::potrf_flops(root.rows()));
-        let root_l = chol::cholesky(&root).expect("root block must stay SPD");
-        flops::set_phase(prev_phase);
-        if let Some(scope) = self.scope {
-            scope.add(Phase::Factor, prog.total_flops);
-        }
-
         UlvFactor {
             levels,
-            root_l,
+            root_l: fetch(prog.root_src),
             depth: plan.depth,
             leaf_ranges: h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect(),
             perm: h2.tree.perm.clone(),
@@ -205,8 +195,34 @@ impl<'a> Executor<'a> {
 
     // ---------------- Substitution replay ----------------
 
+    /// Build an arena with the factor resident at the plan's output
+    /// wiring — the standalone-solve path (a session reuses the arena
+    /// kept by [`Executor::factorize_resident`] instead).
+    pub fn upload_factor(&self, factor: &UlvFactor) -> Box<dyn DeviceArena> {
+        let prog = &factor.plan.factor;
+        let mut arena = self.device.new_arena(prog.buf_count);
+        for (li, out) in prog.outputs.iter().enumerate() {
+            let lf = &factor.levels[li];
+            for (i, &b) in out.chol_rr.iter().enumerate() {
+                arena.upload(b, &lf.chol_rr[i]);
+            }
+            for &(k, b) in &out.lr {
+                arena.upload(b, &lf.lr[&k]);
+            }
+            for &(k, b) in &out.ls {
+                arena.upload(b, &lf.ls[&k]);
+            }
+            for (i, &b) in out.basis.iter().enumerate() {
+                arena.upload(b, &lf.bases[i].u);
+            }
+        }
+        arena.upload(prog.root_src, &factor.root_l);
+        arena
+    }
+
     /// Replay the substitution program for `mode` against a tree-ordered
-    /// right-hand side; returns the tree-ordered solution.
+    /// right-hand side, uploading the factor into a transient arena first;
+    /// returns the tree-ordered solution.
     pub fn solve(
         &self,
         plan: &Plan,
@@ -214,145 +230,120 @@ impl<'a> Executor<'a> {
         b: &[f64],
         mode: SubstMode,
     ) -> Vec<f64> {
+        let mut arena = self.upload_factor(factor);
+        self.solve_in(plan, arena.as_mut(), b, mode)
+    }
+
+    /// Replay the substitution program for `mode` against an arena that
+    /// already holds the factor resident (from
+    /// [`Executor::factorize_resident`] or [`Executor::upload_factor`]).
+    /// Vector buffers are allocated above the factorization arena and
+    /// freed before returning, so the arena's live-buffer count is
+    /// unchanged — the balance invariant the device tests assert.
+    pub fn solve_in(
+        &self,
+        plan: &Plan,
+        arena: &mut dyn DeviceArena,
+        b: &[f64],
+        mode: SubstMode,
+    ) -> Vec<f64> {
         assert_eq!(b.len(), plan.n);
         let prev_phase = flops::set_phase(Phase::Substitute);
         let prog = plan.solve_program(mode);
-        let mut varena: Vec<Vec<f64>> =
-            prog.vec_lens.iter().map(|&len| vec![0.0; len]).collect();
+        let base = prog.vec_base;
+        for (k, &len) in prog.vec_lens.iter().enumerate() {
+            arena.alloc_vec(BufferId(base + k as u32), len);
+        }
         let mut x = vec![0.0; plan.n];
 
-        for step in &prog.steps {
-            match step {
-                SolveInstr::LoadRhs { items } => {
-                    for &(s, e, v) in items {
-                        varena[v.0 as usize].copy_from_slice(&b[s..e]);
-                    }
-                }
-                SolveInstr::ApplyBasis { level_idx, level, trans, items } => {
-                    let us: Vec<&Matrix> = items
-                        .iter()
-                        .map(|&(i, _, _)| &factor.levels[*level_idx].bases[i].u)
-                        .collect();
-                    let outs = {
-                        let refs: Vec<&[f64]> = items
-                            .iter()
-                            .map(|&(_, s, _)| varena[s.0 as usize].as_slice())
-                            .collect();
-                        self.exec.apply_basis(*level, &us, *trans, &refs)
-                    };
-                    for (&(_, _, d), o) in items.iter().zip(outs) {
-                        varena[d.0 as usize] = o;
-                    }
-                }
-                SolveInstr::Split { items } => {
-                    for &(src, at, lo, hi) in items {
-                        let (a, b2) = {
-                            let s = &varena[src.0 as usize];
-                            (s[..at].to_vec(), s[at..].to_vec())
-                        };
-                        varena[lo.0 as usize] = a;
-                        varena[hi.0 as usize] = b2;
-                    }
-                }
-                SolveInstr::Concat { items } => {
-                    for &(dst, a, b2) in items {
-                        let mut v = varena[a.0 as usize].clone();
-                        v.extend_from_slice(&varena[b2.0 as usize]);
-                        varena[dst.0 as usize] = v;
-                    }
-                }
-                SolveInstr::Copy { items } => {
-                    for &(dst, src) in items {
-                        varena[dst.0 as usize] = varena[src.0 as usize].clone();
-                    }
-                }
-                SolveInstr::TrsvFwd { level, items } => {
-                    let mut xs: Vec<Vec<f64>> = items
-                        .iter()
-                        .map(|&(_, v)| std::mem::take(&mut varena[v.0 as usize]))
-                        .collect();
-                    let ls: Vec<&Matrix> = items.iter().map(|(m, _)| mat(factor, m)).collect();
-                    self.exec.trsv_fwd(*level, &ls, &mut xs);
-                    for (&(_, v), xv) in items.iter().zip(xs) {
-                        varena[v.0 as usize] = xv;
-                    }
-                }
-                SolveInstr::TrsvBwd { level, items } => {
-                    let mut xs: Vec<Vec<f64>> = items
-                        .iter()
-                        .map(|&(_, v)| std::mem::take(&mut varena[v.0 as usize]))
-                        .collect();
-                    let ls: Vec<&Matrix> = items.iter().map(|(m, _)| mat(factor, m)).collect();
-                    self.exec.trsv_bwd(*level, &ls, &mut xs);
-                    for (&(_, v), xv) in items.iter().zip(xs) {
-                        varena[v.0 as usize] = xv;
-                    }
-                }
-                SolveInstr::GemvAcc { level, trans, items } => {
-                    let mut ys: Vec<Vec<f64>> = items
-                        .iter()
-                        .map(|&(_, _, y)| std::mem::take(&mut varena[y.0 as usize]))
-                        .collect();
-                    {
-                        let mats: Vec<&Matrix> =
-                            items.iter().map(|(m, _, _)| mat(factor, m)).collect();
-                        let xs: Vec<&[f64]> = items
-                            .iter()
-                            .map(|&(_, xv, _)| varena[xv.0 as usize].as_slice())
-                            .collect();
-                        self.exec.gemv_acc(*level, -1.0, &mats, *trans, &xs, &mut ys);
-                    }
-                    for (&(_, _, y), yv) in items.iter().zip(ys) {
-                        varena[y.0 as usize] = yv;
-                    }
-                }
-                SolveInstr::Add { items } => {
-                    for &(dst, a, b2) in items {
-                        let v: Vec<f64> = varena[a.0 as usize]
-                            .iter()
-                            .zip(&varena[b2.0 as usize])
-                            .map(|(&p, &q)| p + q)
-                            .collect();
-                        varena[dst.0 as usize] = v;
-                    }
-                }
-                SolveInstr::RootSolve { vec } => {
-                    let n = factor.root_l.rows();
-                    flops::add(2 * (n * n) as u64);
-                    chol::potrs(&factor.root_l, &mut varena[vec.0 as usize]);
-                }
-                SolveInstr::StoreSol { items } => {
-                    for &(s, e, v) in items {
-                        x[s..e].copy_from_slice(&varena[v.0 as usize]);
-                    }
-                }
-            }
-        }
-
+        // Run the program under an unwind guard: a panicking launch (e.g.
+        // a non-SPD diagonal) must not leak the vector region into a
+        // session's long-lived resident arena — the live-buffer balance
+        // below `vec_base` is an invariant the facade relies on.
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.run_solve_steps(prog, arena, b, &mut x)
+        }));
+        // Tolerant region free: mid-launch panics leave half-moved slots.
+        arena.free_region(BufferId(base));
         flops::set_phase(prev_phase);
+        match run {
+            Ok(()) => {}
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
         if let Some(scope) = self.scope {
             scope.add(Phase::Substitute, prog.total_flops);
         }
         x
     }
+
+    /// Issue the substitution instruction stream (the body of
+    /// [`Executor::solve_in`], separated so the caller can guard it).
+    fn run_solve_steps(
+        &self,
+        prog: &SolveProgram,
+        arena: &mut dyn DeviceArena,
+        b: &[f64],
+        x: &mut [f64],
+    ) {
+        for step in &prog.steps {
+            match step {
+                SolveInstr::LoadRhs { items } => {
+                    for &(s, e, v) in items {
+                        arena.upload_vec(v, &b[s..e]);
+                    }
+                }
+                SolveInstr::StoreSol { items } => {
+                    self.device.fence();
+                    for &(s, e, v) in items {
+                        x[s..e].copy_from_slice(&arena.download_vec(v));
+                    }
+                }
+                SolveInstr::ApplyBasis { level, trans, items } => {
+                    self.device.launch(
+                        arena,
+                        &Launch::ApplyBasis { level: *level, trans: *trans, items },
+                    );
+                }
+                SolveInstr::Split { items } => {
+                    self.device.launch(arena, &Launch::Split { items });
+                }
+                SolveInstr::Concat { items } => {
+                    self.device.launch(arena, &Launch::Concat { items });
+                }
+                SolveInstr::Copy { items } => {
+                    self.device.launch(arena, &Launch::CopyBuf { items });
+                }
+                SolveInstr::TrsvFwd { level, items } => {
+                    self.device.launch(arena, &Launch::TrsvFwd { level: *level, items });
+                }
+                SolveInstr::TrsvBwd { level, items } => {
+                    self.device.launch(arena, &Launch::TrsvBwd { level: *level, items });
+                }
+                SolveInstr::GemvAcc { level, trans, items } => {
+                    self.device.launch(
+                        arena,
+                        &Launch::GemvAcc { level: *level, trans: *trans, alpha: -1.0, items },
+                    );
+                }
+                SolveInstr::Add { items } => {
+                    self.device.launch(arena, &Launch::AddVec { items });
+                }
+                SolveInstr::RootSolve { l, x } => {
+                    self.device.launch(arena, &Launch::RootSolve { l: *l, x: *x });
+                }
+            }
+        }
+    }
 }
 
-fn take(arena: &mut [Option<Matrix>], b: BufferId) -> Matrix {
-    arena[b.0 as usize].take().expect("plan buffer read after free")
-}
-
-fn get<'m>(arena: &'m [Option<Matrix>], b: BufferId) -> &'m Matrix {
-    arena[b.0 as usize].as_ref().expect("plan buffer read before write")
-}
-
-fn put(arena: &mut [Option<Matrix>], b: BufferId, m: Matrix) {
-    arena[b.0 as usize] = Some(m);
-}
-
-fn mat<'f>(factor: &'f UlvFactor, m: &MatRef) -> &'f Matrix {
-    match *m {
-        MatRef::CholRr { level_idx, index } => &factor.levels[level_idx].chol_rr[index],
-        MatRef::Lr { level_idx, key } => &factor.levels[level_idx].lr[&key],
-        MatRef::Ls { level_idx, key } => &factor.levels[level_idx].ls[&key],
+/// Resolve an upload source against the H² matrix (the only host reads of
+/// a factorization replay).
+fn host_src<'m>(h2: &'m H2Matrix, src: HostSrc) -> &'m Matrix {
+    match src {
+        HostSrc::Dense(key) => &h2.dense[&key],
+        HostSrc::Coupling { level, key } => h2.coupling[level]
+            .get(&key)
+            .expect("plan coupling ref missing in H2 matrix"),
+        HostSrc::Basis { level, index } => &h2.bases[level][index].u,
     }
 }

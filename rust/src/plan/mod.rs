@@ -9,7 +9,16 @@
 //! instruction stream recorded once per H² *structure* (tree + interaction
 //! lists + ranks) by the [`Recorder`](record::Recorder), and replayed any
 //! number of times by the [`Executor`](exec::Executor) against any
-//! [`crate::batch::BatchExec`] backend.
+//! [`crate::batch::device::Device`] backend.
+//!
+//! The IR is **arena-native**: every operand of every instruction is a
+//! [`BufferId`] into the device-owned buffer arena
+//! ([`crate::batch::device::DeviceArena`]). Host data (dense leaf blocks,
+//! far-field couplings, shared bases) enters the arena through explicit
+//! [`Instr::Upload`] steps, so a backend can own residency end to end:
+//! after the factorization replay the factor matrices are already
+//! device-resident and the substitution programs reference them by the
+//! same ids — no host marshalling happens between launches.
 //!
 //! Separating the task graph from its execution is the same move the
 //! runtime-system literature makes (Deshmukh & Yokota's O(N) distributed
@@ -23,9 +32,9 @@
 //!
 //! | `Instr` | Paper step |
 //! |---------|------------|
-//! | [`Instr::LoadDense`] | Algorithm 2 input: leaf near blocks `A_ij` |
+//! | [`Instr::Upload`] | host → device transfer of leaf near blocks `A_ij`, couplings `Ŝ`, and bases `U_i` |
 //! | [`Instr::Sparsify`] | Alg 2 l.6 / Alg 4 l.4: `F_ij = U_iᵀ A_ij U_j` (Figure 2 "matrix sparsification") |
-//! | [`Instr::Potrf`] | Alg 2 l.8: batched Cholesky of the diagonal `F_ii^RR` blocks |
+//! | [`Instr::Potrf`] | Alg 2 l.8: batched Cholesky of the diagonal `F_ii^RR` blocks (and, batch-of-one, the merged root — Alg 2 l.22) |
 //! | [`Instr::TrsmRightLt`] | Alg 2 l.10-13 / Alg 4 l.6-8: panels `L(r)_ji = F_ji^RR L_iiᵀ⁻¹`, `L(s)_ji = F_ji^SR L_iiᵀ⁻¹` |
 //! | [`Instr::SchurSelf`] | Alg 2 l.15, eq 21: the *single* trailing update `F_ii^SS -= L(s)_ii L(s)_iiᵀ` |
 //! | [`Instr::Merge`] | Alg 2 l.18-20: assemble parent near blocks from children `SS` parts and couplings `Ŝ` |
@@ -43,9 +52,9 @@
 //! | [`SolveInstr::ApplyBasis`] (no-trans) | Alg 3 end: `x_i = U_i [x^S; x^R]` |
 //!
 //! Data-movement steps ([`Instr::Extract`], [`SolveInstr::Split`],
-//! [`SolveInstr::Concat`], …) are bookkeeping the eager implementation did
-//! inline between launches; they carry no FLOPs and are not counted as
-//! launches in [`ScheduleStats`].
+//! [`SolveInstr::Concat`], …) are device-side buffer shuffles between
+//! launches; they carry no FLOPs and are not counted as launches in
+//! [`ScheduleStats`].
 //!
 //! # Why record?
 //!
@@ -53,11 +62,17 @@
 //!   every additional right-hand side re-execute the cached plan; schedule
 //!   discovery never runs twice ([`Plan::compatible`] guards reuse).
 //! * **Backend rebinding** — `H2Solver::rebind_backend` re-executes the
-//!   same plan on a different [`crate::solver::BackendSpec`] without
-//!   rebuilding the H² matrix.
+//!   same plan on a different [`crate::solver::BackendSpec`], which
+//!   re-materializes the buffer arena on the new device without rebuilding
+//!   the H² matrix.
 //! * **Introspection** — the plan carries per-launch shape/FLOP metadata,
 //!   so launch counts per level and constant-shape padding waste
 //!   ([`ScheduleStats`]) are reported from the IR, not measured.
+//!
+//! The naive-substitution program (Algorithm 3) is recorded **lazily** on
+//! the first `SubstMode::Naive` solve: the default mode is Parallel, so
+//! eager recording would walk the tree a second time and hold a second
+//! instruction stream in memory for nothing ([`Plan::solve_program`]).
 
 pub mod exec;
 pub mod record;
@@ -68,46 +83,39 @@ pub use record::{record, Recorder};
 use crate::batch::pad::{dim_pad, padded_batch};
 use crate::h2::H2Matrix;
 use crate::metrics::flops;
+use std::sync::OnceLock;
 
-/// Index of a matrix block in the factorization arena.
+/// Index of a buffer (matrix block or substitution vector) in the
+/// device-owned arena. Factorization buffers occupy `0..buf_count`;
+/// substitution vectors start at [`SolveProgram::vec_base`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BufferId(pub u32);
 
-/// Index of a vector in the substitution arena.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct VecId(pub u32);
-
-/// Reference to a shared basis `U_i` of the H² matrix, by `(level, box)`.
+/// Host-side source of an [`Instr::Upload`]: where the executor reads the
+/// data that enters the arena. These are the only points where host memory
+/// is touched during a factorization replay.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct BasisRef {
-    pub level: usize,
-    pub index: usize,
+pub enum HostSrc {
+    /// Dense leaf near block `A_ij` keyed by the leaf pair.
+    Dense((usize, usize)),
+    /// Far-field coupling `Ŝ_(i,j)` at `(level, key)`.
+    Coupling { level: usize, key: (usize, usize) },
+    /// Shared basis `U_i` of box `index` at `level`.
+    Basis { level: usize, index: usize },
 }
 
-/// Reference to a factor matrix resolved against a [`crate::ulv::UlvFactor`]
-/// during substitution replay. `level_idx` indexes `UlvFactor::levels`
-/// (0 = leaf level).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MatRef {
-    /// Diagonal Cholesky factor `L_ii` of box `index`.
-    CholRr { level_idx: usize, index: usize },
-    /// Redundant-row panel `L(r)_ji` keyed `(j, i)`.
-    Lr { level_idx: usize, key: (usize, usize) },
-    /// Skeleton-row panel `L(s)_ji` keyed `(j, i)`.
-    Ls { level_idx: usize, key: (usize, usize) },
-}
-
-/// One batched item of [`Instr::Sparsify`]: `dst = U_uᵀ · a · U_v`.
-#[derive(Clone, Debug)]
+/// One batched item of [`Instr::Sparsify`]: `dst = U_uᵀ · a · U_v`. All
+/// four operands are arena buffers (the bases are uploaded once per level).
+#[derive(Clone, Copy, Debug)]
 pub struct SparsifyItem {
-    pub u: BasisRef,
+    pub u: BufferId,
     pub a: BufferId,
-    pub v: BasisRef,
+    pub v: BufferId,
     pub dst: BufferId,
 }
 
 /// One item of [`Instr::Extract`]: `dst = src[r0.., c0..][..rows, ..cols]`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct ExtractItem {
     pub src: BufferId,
     pub r0: usize,
@@ -118,37 +126,29 @@ pub struct ExtractItem {
 }
 
 /// One batched item of [`Instr::TrsmRightLt`]: `b <- b · L_lᵀ⁻¹`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct TrsmItem {
     pub l: BufferId,
     pub b: BufferId,
 }
 
 /// One batched item of [`Instr::SchurSelf`]: `c <- c - a aᵀ`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct SyrkItem {
     pub a: BufferId,
     pub c: BufferId,
 }
 
-/// Where one tile of a merged parent block comes from.
-#[derive(Clone, Debug)]
-pub enum MergeSrc {
-    /// Leading `rows × cols` of a factorization buffer (a child's `SS`
-    /// part, post-Schur for diagonal children).
-    BufferSub(BufferId),
-    /// A far-field coupling `Ŝ_(i,j)` of the H² matrix at `(level, key)`.
-    Coupling(usize, (usize, usize)),
-}
-
-/// One tile of a [`MergeItem`].
-#[derive(Clone, Debug)]
+/// One tile of a [`MergeItem`]: the leading `rows × cols` of `src` lands at
+/// `(roff, coff)` of the destination. Couplings are uploaded into dedicated
+/// buffers before the merge, so every tile source is an arena buffer.
+#[derive(Clone, Copy, Debug)]
 pub struct MergePart {
     pub roff: usize,
     pub coff: usize,
     pub rows: usize,
     pub cols: usize,
-    pub src: MergeSrc,
+    pub src: BufferId,
 }
 
 /// One item of [`Instr::Merge`]: assemble a parent near block.
@@ -162,14 +162,15 @@ pub struct MergeItem {
 
 /// One factorization instruction. Batched variants are single conceptual
 /// kernel launches (the paper's batched cuBLAS/cuSOLVER calls);
-/// `LoadDense`/`Extract`/`Merge`/`Free` are data movement.
+/// `Upload`/`Extract`/`Merge`/`Free` are data movement — `Upload` is the
+/// only one that reads host memory.
 #[derive(Clone, Debug)]
 pub enum Instr {
-    /// Gather dense leaf near blocks `A_ij` from the H² matrix.
-    LoadDense { items: Vec<((usize, usize), BufferId)> },
+    /// Transfer host data (dense blocks, couplings, bases) into the arena.
+    Upload { items: Vec<(HostSrc, BufferId)> },
     /// Batched two-sided basis transform (matrix sparsification).
     Sparsify { level: usize, items: Vec<SparsifyItem> },
-    /// Submatrix extraction (data movement between launches).
+    /// Device-side submatrix extraction (data movement between launches).
     Extract { items: Vec<ExtractItem> },
     /// Batched in-place Cholesky of diagonal `RR` blocks.
     Potrf { level: usize, bufs: Vec<BufferId> },
@@ -184,7 +185,9 @@ pub enum Instr {
 }
 
 /// Output wiring of one factorization level: which arena buffers hold the
-/// [`crate::ulv::LevelFactor`] content after replay.
+/// [`crate::ulv::LevelFactor`] content after replay. These buffers stay
+/// resident in the arena at plan end, and the substitution programs
+/// reference them by the same ids — residency is the backend's.
 #[derive(Clone, Debug)]
 pub struct LevelOut {
     pub level: usize,
@@ -193,13 +196,17 @@ pub struct LevelOut {
     pub lr: Vec<((usize, usize), BufferId)>,
     pub ls: Vec<((usize, usize), BufferId)>,
     pub near: Vec<(usize, usize)>,
+    /// One basis buffer `U_i` per box (uploaded during the level replay,
+    /// reused by the substitution's `ApplyBasis` launches).
+    pub basis: Vec<BufferId>,
 }
 
 /// The instruction stream of one tree level: every batched launch of the
 /// level plus the data movement between launches. Within a level the
 /// launches have no mutual dependencies — the paper's core property — so
-/// a future async executor can overlap them freely; across levels the
-/// order is fixed.
+/// a multi-stream executor can overlap them freely (the
+/// [`crate::batch::device::Device::stream`] hook marks the level
+/// boundaries); across levels the order is fixed.
 #[derive(Clone, Debug)]
 pub struct LevelProgram {
     pub level: usize,
@@ -211,19 +218,21 @@ pub struct LevelProgram {
 /// The complete factorization program (Algorithm 2 end to end).
 #[derive(Clone, Debug)]
 pub struct FactorProgram {
-    /// Arena size needed to replay.
+    /// Number of factorization arena slots (`BufferId`s `0..buf_count`).
     pub buf_count: usize,
-    /// Arena prologue: gather the dense leaf blocks (no launches).
+    /// Arena prologue: upload the dense leaf blocks (no launches).
     pub prologue: Vec<Instr>,
     /// Level programs, finest level first (matching `UlvFactor::levels`).
     pub levels: Vec<LevelProgram>,
     /// Output wiring, leaf level first.
     pub outputs: Vec<LevelOut>,
-    /// Buffer holding the merged root block.
+    /// Buffer holding the merged root block (the root Cholesky factor
+    /// after replay — referenced by [`SolveInstr::RootSolve`]).
     pub root_src: BufferId,
     /// Root dimension.
     pub root_n: usize,
-    /// The dense root Cholesky (Algorithm 2 line 22).
+    /// The dense root Cholesky (Algorithm 2 line 22), replayed as a
+    /// batch-of-one `Potrf` launch on [`FactorProgram::root_src`].
     pub root_launch: LaunchMeta,
     /// Total useful FLOPs of the whole program.
     pub total_flops: u64,
@@ -237,46 +246,69 @@ impl FactorProgram {
             .flat_map(|l| l.launches.iter())
             .chain(std::iter::once(&self.root_launch))
     }
+
+    /// Buffers that are live in the arena after a full factorization
+    /// replay: factor outputs, bases, and the root factor. Everything else
+    /// has been released by the program's `Free` steps — the invariant the
+    /// arena-balance tests assert.
+    pub fn resident_bufs(&self) -> Vec<BufferId> {
+        let mut out = Vec::new();
+        for o in &self.outputs {
+            out.extend(o.chol_rr.iter().copied());
+            out.extend(o.lr.iter().map(|&(_, b)| b));
+            out.extend(o.ls.iter().map(|&(_, b)| b));
+            out.extend(o.basis.iter().copied());
+        }
+        out.push(self.root_src);
+        out
+    }
 }
 
-/// One batched item of [`SolveInstr::ApplyBasis`]: `(box, src, dst)`.
-pub type BasisItem = (usize, VecId, VecId);
+/// One batched item of [`SolveInstr::ApplyBasis`]: `(u, src, dst)` — the
+/// basis buffer and the source/destination vector buffers.
+pub type BasisItem = (BufferId, BufferId, BufferId);
 
 /// One substitution instruction. As in [`Instr`], batched variants are
-/// launches; the rest is segment bookkeeping.
+/// launches; the rest is device-side segment bookkeeping. Matrix operands
+/// (`L_ii`, `L(r)`, `L(s)`, `U_i`, the root factor) are the factorization
+/// program's resident buffers; vector operands live at
+/// [`SolveProgram::vec_base`] and above.
 #[derive(Clone, Debug)]
 pub enum SolveInstr {
-    /// `dst = b[begin..end]` — scatter the RHS into leaf segments.
-    LoadRhs { items: Vec<(usize, usize, VecId)> },
-    /// Batched `dst = U_iᵀ src` (trans) or `dst = U_i src`.
-    ApplyBasis { level_idx: usize, level: usize, trans: bool, items: Vec<BasisItem> },
+    /// `dst = b[begin..end]` — upload the RHS into leaf segment buffers.
+    LoadRhs { items: Vec<(usize, usize, BufferId)> },
+    /// Batched `dst = U_uᵀ src` (trans) or `dst = U_u src`.
+    ApplyBasis { level: usize, trans: bool, items: Vec<BasisItem> },
     /// `(src, at, lo, hi)`: `lo = src[..at]`, `hi = src[at..]`.
-    Split { items: Vec<(VecId, usize, VecId, VecId)> },
+    Split { items: Vec<(BufferId, usize, BufferId, BufferId)> },
     /// `(dst, a, b)`: `dst = [a; b]`.
-    Concat { items: Vec<(VecId, VecId, VecId)> },
+    Concat { items: Vec<(BufferId, BufferId, BufferId)> },
     /// `(dst, src)`: `dst = src`.
-    Copy { items: Vec<(VecId, VecId)> },
-    /// Batched forward TRSV `x <- L⁻¹ x` in place.
-    TrsvFwd { level: usize, items: Vec<(MatRef, VecId)> },
-    /// Batched backward TRSV `x <- Lᵀ⁻¹ x` in place.
-    TrsvBwd { level: usize, items: Vec<(MatRef, VecId)> },
+    Copy { items: Vec<(BufferId, BufferId)> },
+    /// Batched forward TRSV `x <- L⁻¹ x` in place; items are `(l, x)`.
+    TrsvFwd { level: usize, items: Vec<(BufferId, BufferId)> },
+    /// Batched backward TRSV `x <- Lᵀ⁻¹ x` in place; items are `(l, x)`.
+    TrsvBwd { level: usize, items: Vec<(BufferId, BufferId)> },
     /// Batched `y += -op(A) x`; `(a, x, y)` with unique `y` per launch.
-    GemvAcc { level: usize, trans: bool, items: Vec<(MatRef, VecId, VecId)> },
+    GemvAcc { level: usize, trans: bool, items: Vec<(BufferId, BufferId, BufferId)> },
     /// `(dst, a, b)`: elementwise `dst = a + b`.
-    Add { items: Vec<(VecId, VecId, VecId)> },
-    /// Dense root solve `x <- (L Lᵀ)⁻¹ x` in place.
-    RootSolve { vec: VecId },
-    /// `x[begin..end] = src` — gather leaf segments into the solution.
-    StoreSol { items: Vec<(usize, usize, VecId)> },
+    Add { items: Vec<(BufferId, BufferId, BufferId)> },
+    /// Dense root solve `x <- (L Lᵀ)⁻¹ x` in place against the resident
+    /// root factor `l` (= [`FactorProgram::root_src`]).
+    RootSolve { l: BufferId, x: BufferId },
+    /// `x[begin..end] = src` — download leaf segments into the solution.
+    StoreSol { items: Vec<(usize, usize, BufferId)> },
 }
 
 /// One substitution program (forward + root + backward) for a fixed
 /// [`crate::ulv::SubstMode`].
 #[derive(Clone, Debug)]
 pub struct SolveProgram {
-    /// Number of vectors in the replay arena.
-    pub vec_count: usize,
-    /// Length of each vector (arena slots are zero-initialized per replay).
+    /// First vector buffer id: vectors occupy
+    /// `vec_base .. vec_base + vec_lens.len()` in the arena, above the
+    /// factorization buffers.
+    pub vec_base: u32,
+    /// Length of each vector (slots are zero-allocated per replay).
     pub vec_lens: Vec<usize>,
     pub steps: Vec<SolveInstr>,
     pub launches: Vec<LaunchMeta>,
@@ -424,7 +456,7 @@ impl ScheduleStats {
 
 /// A recorded execution plan: the complete, backend-neutral instruction
 /// stream for one H² structure. Record once, replay many times.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Plan {
     /// Matrix dimension.
     pub n: usize,
@@ -434,14 +466,49 @@ pub struct Plan {
     pub sig: PlanSig,
     /// Algorithm 2/4: the level-ordered factorization program.
     pub factor: FactorProgram,
-    /// §3.7 parallel substitution program.
+    /// §3.7 parallel substitution program (the default solve path).
     pub solve_parallel: SolveProgram,
     /// Algorithm 3 naive substitution program (batch-of-one launches with
     /// the serial cross-box dependency order baked into the stream).
-    pub solve_naive: SolveProgram,
+    /// Recorded lazily on the first `SubstMode::Naive` solve — the second
+    /// tree walk and its instruction memory are skipped entirely for
+    /// sessions that never leave the default Parallel mode.
+    solve_naive: OnceLock<SolveProgram>,
+    /// Everything the lazy recording needs (level wiring, leaf ranges,
+    /// root buffer) — captured once by the recorder.
+    pub(crate) solve_ctx: record::SolveCtx,
+}
+
+impl Clone for Plan {
+    fn clone(&self) -> Plan {
+        let solve_naive = OnceLock::new();
+        if let Some(p) = self.solve_naive.get() {
+            let _ = solve_naive.set(p.clone());
+        }
+        Plan {
+            n: self.n,
+            depth: self.depth,
+            sig: self.sig.clone(),
+            factor: self.factor.clone(),
+            solve_parallel: self.solve_parallel.clone(),
+            solve_naive,
+            solve_ctx: self.solve_ctx.clone(),
+        }
+    }
 }
 
 impl Plan {
+    pub(crate) fn assemble(
+        n: usize,
+        depth: usize,
+        sig: PlanSig,
+        factor: FactorProgram,
+        solve_parallel: SolveProgram,
+        solve_ctx: record::SolveCtx,
+    ) -> Plan {
+        Plan { n, depth, sig, factor, solve_parallel, solve_naive: OnceLock::new(), solve_ctx }
+    }
+
     /// Can this plan be replayed against `h2` (identical structure)?
     pub fn compatible(&self, h2: &H2Matrix) -> bool {
         self.sig == PlanSig::of(h2)
@@ -501,12 +568,21 @@ impl Plan {
         out
     }
 
-    /// The substitution program for a mode.
+    /// The substitution program for a mode. The Naive program is recorded
+    /// on first use (a pure structural walk — no numerics, no backend).
     pub fn solve_program(&self, mode: crate::ulv::SubstMode) -> &SolveProgram {
         match mode {
             crate::ulv::SubstMode::Parallel => &self.solve_parallel,
-            crate::ulv::SubstMode::Naive => &self.solve_naive,
+            crate::ulv::SubstMode::Naive => self.solve_naive.get_or_init(|| {
+                self.solve_ctx.record_solve(crate::ulv::SubstMode::Naive, &self.factor)
+            }),
         }
+    }
+
+    /// Whether the lazily recorded naive program has materialized yet
+    /// (test hook for the recording-on-demand contract).
+    pub fn naive_recorded(&self) -> bool {
+        self.solve_naive.get().is_some()
     }
 }
 
@@ -522,6 +598,7 @@ mod tests {
     use crate::construct::H2Config;
     use crate::geometry::Geometry;
     use crate::kernels::KernelFn;
+    use crate::ulv::SubstMode;
 
     fn small_h2() -> H2Matrix {
         let g = Geometry::sphere_surface(256, 31);
@@ -556,5 +633,42 @@ mod tests {
         assert!((0.0..1.0).contains(&waste), "waste {waste} out of range");
         let dump = plan.render_schedule();
         assert!(dump.contains("factor launches"));
+    }
+
+    #[test]
+    fn naive_program_is_recorded_lazily_and_once() {
+        let h2 = small_h2();
+        let plan = record(&h2);
+        assert!(!plan.naive_recorded(), "naive program must not be recorded eagerly");
+        let naive = plan.solve_program(SubstMode::Naive);
+        assert!(plan.naive_recorded());
+        assert!(naive.total_flops > 0);
+        // Second access returns the same materialized program.
+        let again = plan.solve_program(SubstMode::Naive) as *const SolveProgram;
+        assert_eq!(naive as *const SolveProgram, again);
+        // A clone carries the already-recorded program along.
+        let cloned = plan.clone();
+        assert!(cloned.naive_recorded());
+    }
+
+    #[test]
+    fn resident_bufs_cover_outputs_and_root() {
+        let h2 = small_h2();
+        let plan = record(&h2);
+        let resident = plan.factor.resident_bufs();
+        assert!(resident.contains(&plan.factor.root_src));
+        for out in &plan.factor.outputs {
+            for &b in &out.chol_rr {
+                assert!(resident.contains(&b));
+            }
+            for &b in &out.basis {
+                assert!(resident.contains(&b));
+            }
+        }
+        // No id repeats: each resident buffer is owned by exactly one role.
+        let mut ids: Vec<u32> = resident.iter().map(|b| b.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), resident.len(), "resident buffer ids must be unique");
     }
 }

@@ -1,6 +1,7 @@
 //! The [`Recorder`]: one structural walk of the H² tree that emits the
-//! complete factorization program (paper Algorithms 2/4) and both
-//! substitution programs (Algorithm 3 naive; §3.7 parallel).
+//! complete factorization program (paper Algorithms 2/4) and the parallel
+//! substitution program (§3.7); the naive program (Algorithm 3) is
+//! recorded on demand from the captured [`SolveCtx`].
 //!
 //! Recording touches no matrix *values* — only the tree, the interaction
 //! lists, and the per-box `(ndof, rank)` shapes. That is the paper's
@@ -8,6 +9,12 @@
 //! enumerable before any numeric kernel runs, and a plan recorded from one
 //! H² matrix replays bit-identically against any other matrix with the same
 //! structure (e.g. after a kernel-parameter change).
+//!
+//! Every operand the recorder emits is an arena [`BufferId`]: host data
+//! (dense leaf blocks, couplings, bases) enters through explicit
+//! [`Instr::Upload`] steps, and the factor outputs stay resident so the
+//! substitution programs can reference them by id — the device owns
+//! residency, the executor never reconstructs host slices per launch.
 
 use super::*;
 use crate::h2::H2Matrix;
@@ -20,9 +27,15 @@ pub fn record(h2: &H2Matrix) -> Plan {
     Recorder::new(h2).run()
 }
 
+/// Placeholder for "no buffer assigned yet" while wiring the backward pass.
+const UNSET: BufferId = BufferId(u32::MAX);
+
 /// Per-level structural info gathered while recording the factorization,
-/// reused to record the substitution programs.
-struct LevelInfo {
+/// reused to record the substitution programs. Arena wiring (which buffer
+/// holds which factor block) is *not* duplicated here — it lives once in
+/// [`FactorProgram::outputs`], which `record_solve` reads.
+#[derive(Clone, Debug)]
+pub(crate) struct LevelInfo {
     level: usize,
     width: usize,
     ranks: Vec<usize>,
@@ -32,6 +45,16 @@ struct LevelInfo {
     /// iterated hash maps here — same math, arbitrary round order).
     lr_keys: Vec<(usize, usize)>,
     ls_keys: Vec<(usize, usize)>,
+}
+
+/// Everything a substitution recording needs beyond the factorization
+/// program itself, captured once by the factorization walk. [`Plan`] holds
+/// this so the naive program can be recorded lazily on first
+/// `SubstMode::Naive` solve (against the plan's own output wiring).
+#[derive(Clone, Debug)]
+pub(crate) struct SolveCtx {
+    infos: Vec<LevelInfo>,
+    leaf_ranges: Vec<(usize, usize)>,
 }
 
 /// Walks the H² structure once and emits a [`Plan`].
@@ -71,7 +94,8 @@ impl<'a> Recorder<'a> {
         }
     }
 
-    /// Record everything: factorization, then both substitution programs.
+    /// Record everything: factorization, then the parallel substitution
+    /// program. The naive program is deferred to first use.
     pub fn run(mut self) -> Plan {
         let (prologue, levels, outputs, root_src, root_n, root_launch) = self.record_factor();
         let total_flops: u64 = levels
@@ -90,16 +114,19 @@ impl<'a> Recorder<'a> {
             root_launch,
             total_flops,
         };
-        let solve_parallel = self.record_solve(SubstMode::Parallel, root_n);
-        let solve_naive = self.record_solve(SubstMode::Naive, root_n);
-        Plan {
-            n: self.h2.n(),
-            depth: self.h2.tree.depth,
-            sig: PlanSig::of(self.h2),
+        let ctx = SolveCtx {
+            infos: std::mem::take(&mut self.infos),
+            leaf_ranges: self.h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect(),
+        };
+        let solve_parallel = ctx.record_solve(SubstMode::Parallel, &factor);
+        Plan::assemble(
+            self.h2.n(),
+            self.h2.tree.depth,
+            PlanSig::of(self.h2),
             factor,
             solve_parallel,
-            solve_naive,
-        }
+            ctx,
+        )
     }
 
     // ---------------- Factorization (Algorithms 2 and 4) ----------------
@@ -111,16 +138,16 @@ impl<'a> Recorder<'a> {
         let h2 = self.h2;
         let depth = h2.tree.depth;
 
-        // Leaf near blocks enter the arena.
+        // Leaf near blocks enter the arena (host -> device prologue).
         let leaf_near = h2.lists[depth].near.clone();
         let mut current: HashMap<(usize, usize), BufferId> = HashMap::new();
         let mut load_items = Vec::with_capacity(leaf_near.len());
         for &key in &leaf_near {
             let b = self.buf();
-            load_items.push((key, b));
+            load_items.push((HostSrc::Dense(key), b));
             current.insert(key, b);
         }
-        let prologue = vec![Instr::LoadDense { items: load_items }];
+        let prologue = vec![Instr::Upload { items: load_items }];
 
         let mut level_programs: Vec<LevelProgram> = Vec::with_capacity(depth);
         let mut outputs: Vec<LevelOut> = Vec::with_capacity(depth);
@@ -134,26 +161,35 @@ impl<'a> Recorder<'a> {
             let rank = |i: usize| bases[i].rank;
             let nred = |i: usize| bases[i].nred();
 
+            // --- 0. Upload this level's shared bases U_i (reused by the
+            //        substitution's ApplyBasis launches — never freed). ---
+            let basis: Vec<BufferId> = (0..width).map(|_| self.buf()).collect();
+            self.steps.push(Instr::Upload {
+                items: (0..width)
+                    .map(|i| (HostSrc::Basis { level: l, index: i }, basis[i]))
+                    .collect(),
+            });
+
             // --- 1. Sparsify every near block: F_ij = U_iᵀ A_ij U_j. ---
             let mut f: HashMap<(usize, usize), BufferId> = HashMap::new();
             let mut sp_items = Vec::with_capacity(near.len());
             let mut sp_shapes = Vec::with_capacity(near.len());
+            let mut consumed: Vec<BufferId> = Vec::with_capacity(near.len());
             for &(i, j) in &near {
                 let a = current.remove(&(i, j)).expect("missing near block");
                 let dst = self.buf();
-                sp_items.push(SparsifyItem {
-                    u: BasisRef { level: l, index: i },
-                    a,
-                    v: BasisRef { level: l, index: j },
-                    dst,
-                });
+                sp_items.push(SparsifyItem { u: basis[i], a, v: basis[j], dst });
                 sp_shapes.push((ndof(i), ndof(j), sparsify_flops(ndof(i), ndof(j))));
+                consumed.push(a);
                 f.insert((i, j), dst);
             }
             self.push_launch(LaunchMeta::new(l, "SPARSIFY", &sp_shapes, |r, c| {
                 gemm_flops(r, c, r) + gemm_flops(r, c, c)
             }));
             self.steps.push(Instr::Sparsify { level: l, items: sp_items });
+            // The pre-sparsification blocks are dead once F exists.
+            consumed.sort_by_key(|b| b.0);
+            self.steps.push(Instr::Free { bufs: consumed });
 
             // --- 2. Extract RR diagonal blocks; batched POTRF on non-empty. ---
             let mut rr: Vec<BufferId> = Vec::with_capacity(width);
@@ -266,8 +302,12 @@ impl<'a> Recorder<'a> {
                 self.steps.push(Instr::SchurSelf { level: l, items: sy_items });
             }
 
-            // --- 5. Merge to the parent level. ---
+            // --- 5. Merge to the parent level. Couplings are uploaded into
+            //        dedicated buffers first so every tile source is an
+            //        arena buffer (no host reads inside the merge). ---
             let mut next: HashMap<(usize, usize), BufferId> = HashMap::new();
+            let mut coup_uploads: Vec<(HostSrc, BufferId)> = Vec::new();
+            let mut coup_bufs: Vec<BufferId> = Vec::new();
             let mut merge_items = Vec::new();
             for &(pi, pj) in &h2.lists[l - 1].near {
                 let k_r0 = rank(2 * pi);
@@ -281,12 +321,16 @@ impl<'a> Recorder<'a> {
                             // Diagonal children read the post-Schur SS
                             // buffer; everything else the leading part of F.
                             if ci == cj && ss_buf.contains_key(&ci) {
-                                MergeSrc::BufferSub(ss_buf[&ci])
+                                ss_buf[&ci]
                             } else {
-                                MergeSrc::BufferSub(f[&(ci, cj)])
+                                f[&(ci, cj)]
                             }
                         } else if self.h2.coupling[l].contains_key(&(ci, cj)) {
-                            MergeSrc::Coupling(l, (ci, cj))
+                            let b = self.buf();
+                            coup_uploads
+                                .push((HostSrc::Coupling { level: l, key: (ci, cj) }, b));
+                            coup_bufs.push(b);
+                            b
                         } else {
                             unreachable!("missing child block ({ci},{cj}) at level {l}")
                         };
@@ -305,11 +349,15 @@ impl<'a> Recorder<'a> {
                     root_n = k_r0 + k_r1;
                 }
             }
+            if !coup_uploads.is_empty() {
+                self.steps.push(Instr::Upload { items: coup_uploads });
+            }
             self.steps.push(Instr::Merge { level: l, items: merge_items });
 
-            // F and SS content is fully consumed by the merge above.
+            // F, SS, and coupling content is fully consumed by the merge.
             let mut free: Vec<BufferId> = f.values().copied().collect();
             free.extend(ss_buf.values().copied());
+            free.extend(coup_bufs);
             free.sort_by_key(|b| b.0);
             self.steps.push(Instr::Free { bufs: free });
 
@@ -332,12 +380,15 @@ impl<'a> Recorder<'a> {
                 lr: lr_out,
                 ls: ls_out,
                 near,
+                basis,
             });
             level_programs.push(self.finish_level(l));
             current = next;
         }
 
-        // --- Root factorization (Algorithm 2 line 22). ---
+        // --- Root factorization (Algorithm 2 line 22): a batch-of-one
+        //     Potrf launch issued by the executor on `root_src`; the
+        //     buffer then holds the root Cholesky factor for RootSolve. ---
         let root_src = *current.get(&(0, 0)).expect("root block must exist after merging");
         let root_launch = LaunchMeta::new(
             0,
@@ -347,16 +398,22 @@ impl<'a> Recorder<'a> {
         );
         (prologue, level_programs, outputs, root_src, root_n, root_launch)
     }
+}
 
-    // ---------------- Substitution (Algorithm 3 / §3.7) ----------------
+// ---------------- Substitution (Algorithm 3 / §3.7) ----------------
 
-    fn record_solve(&self, mode: SubstMode, root_n: usize) -> SolveProgram {
-        let mut rec = SolveRecorder::default();
-        let leaf_ranges: Vec<(usize, usize)> =
-            self.h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect();
+impl SolveCtx {
+    /// Record one substitution program against the factorization program's
+    /// own output wiring ([`FactorProgram::outputs`] — the single source of
+    /// truth for which buffer holds which factor block). Vector buffers
+    /// start right above the factorization arena.
+    pub(crate) fn record_solve(&self, mode: SubstMode, factor: &FactorProgram) -> SolveProgram {
+        let mut rec = SolveRecorder::new(factor.buf_count as u32);
+        let leaf_ranges = &self.leaf_ranges;
+        let root_n = factor.root_n;
 
         // ---------- Forward pass (leaves -> root). ----------
-        let mut seg: Vec<VecId> =
+        let mut seg: Vec<BufferId> =
             leaf_ranges.iter().map(|&(s, e)| rec.vec(e - s)).collect();
         rec.steps.push(SolveInstr::LoadRhs {
             items: leaf_ranges
@@ -365,18 +422,19 @@ impl<'a> Recorder<'a> {
                 .map(|(&(s, e), &v)| (s, e, v))
                 .collect(),
         });
-        let mut saved_r: Vec<Vec<VecId>> = Vec::with_capacity(self.infos.len());
+        let mut saved_r: Vec<Vec<BufferId>> = Vec::with_capacity(self.infos.len());
 
         for (li, info) in self.infos.iter().enumerate() {
             let level = info.level;
             let width = info.width;
+            let (rr, lr, ls, basis) = level_wiring(&factor.outputs[li]);
             // 1. Apply Uᵀ: c_i = U_iᵀ b_i (batched).
-            let c: Vec<VecId> =
+            let c: Vec<BufferId> =
                 (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
-            rec.apply_basis(li, level, true, info, &seg, &c);
+            rec.apply_basis(level, true, info, basis, &seg, &c);
             // Split into skeleton (first k) and redundant (rest).
-            let s_part: Vec<VecId> = (0..width).map(|i| rec.vec(info.ranks[i])).collect();
-            let mut r_part: Vec<VecId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
+            let s_part: Vec<BufferId> = (0..width).map(|i| rec.vec(info.ranks[i])).collect();
+            let mut r_part: Vec<BufferId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
             rec.steps.push(SolveInstr::Split {
                 items: (0..width)
                     .map(|i| (c[i], info.ranks[i], s_part[i], r_part[i]))
@@ -392,18 +450,14 @@ impl<'a> Recorder<'a> {
                     let ls_set: HashSet<(usize, usize)> =
                         info.ls_keys.iter().copied().collect();
                     for &i in &active {
-                        rec.trsv(level, false, &[(
-                            MatRef::CholRr { level_idx: li, index: i },
-                            r_part[i],
-                            info.nreds[i],
-                        )]);
+                        rec.trsv(level, false, &[(rr[i], r_part[i], info.nreds[i])]);
                         for &(j, i2) in &info.near {
                             if i2 != i {
                                 continue;
                             }
                             if lr_set.contains(&(j, i)) {
                                 rec.gemv_round(level, false, &[(
-                                    MatRef::Lr { level_idx: li, key: (j, i) },
+                                    lr[&(j, i)],
                                     r_part[i],
                                     r_part[j],
                                     (info.nreds[j], info.nreds[i]),
@@ -411,7 +465,7 @@ impl<'a> Recorder<'a> {
                             }
                             if ls_set.contains(&(j, i)) {
                                 rec.gemv_round(level, false, &[(
-                                    MatRef::Ls { level_idx: li, key: (j, i) },
+                                    ls[&(j, i)],
                                     r_part[i],
                                     s_part[j],
                                     (info.ranks[j], info.nreds[i]),
@@ -422,29 +476,28 @@ impl<'a> Recorder<'a> {
                 }
                 SubstMode::Parallel => {
                     // §3.7: z_i = L_ii⁻¹ r_i (batched, independent).
-                    let z: Vec<VecId> = active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                    let z: Vec<BufferId> =
+                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
                     rec.steps.push(SolveInstr::Copy {
                         items: active.iter().zip(&z).map(|(&i, &zi)| (zi, r_part[i])).collect(),
                     });
-                    let diag_items: Vec<(MatRef, VecId, usize)> = active
+                    let diag_items: Vec<(BufferId, BufferId, usize)> = active
                         .iter()
                         .zip(&z)
-                        .map(|(&i, &zi)| {
-                            (MatRef::CholRr { level_idx: li, index: i }, zi, info.nreds[i])
-                        })
+                        .map(|(&i, &zi)| (rr[i], zi, info.nreds[i]))
                         .collect();
                     rec.trsv(level, false, &diag_items);
                     let slot_of: HashMap<usize, usize> =
                         active.iter().enumerate().map(|(s, &i)| (i, s)).collect();
                     // acc = -Σ L(r)_ij z_j in unique-target rounds.
-                    let acc: Vec<VecId> =
+                    let acc: Vec<BufferId> =
                         active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
-                    let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                    let entries: Vec<(BufferId, BufferId, BufferId, (usize, usize))> = info
                         .lr_keys
                         .iter()
                         .map(|&(row, col)| {
                             (
-                                MatRef::Lr { level_idx: li, key: (row, col) },
+                                lr[&(row, col)],
                                 z[slot_of[&col]],
                                 acc[slot_of[&row]],
                                 (info.nreds[row], info.nreds[col]),
@@ -453,12 +506,10 @@ impl<'a> Recorder<'a> {
                         .collect();
                     rec.gemv_rounds(level, false, &entries);
                     // corr = L⁻¹ acc; r = z + corr.
-                    let corr_items: Vec<(MatRef, VecId, usize)> = active
+                    let corr_items: Vec<(BufferId, BufferId, usize)> = active
                         .iter()
                         .zip(&acc)
-                        .map(|(&i, &a)| {
-                            (MatRef::CholRr { level_idx: li, index: i }, a, info.nreds[i])
-                        })
+                        .map(|(&i, &a)| (rr[i], a, info.nreds[i]))
                         .collect();
                     rec.trsv(level, false, &corr_items);
                     let mut add_items = Vec::with_capacity(active.len());
@@ -469,12 +520,12 @@ impl<'a> Recorder<'a> {
                     }
                     rec.steps.push(SolveInstr::Add { items: add_items });
                     // s_j -= L(s)_ji r_i (unique-target rounds).
-                    let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                    let entries: Vec<(BufferId, BufferId, BufferId, (usize, usize))> = info
                         .ls_keys
                         .iter()
                         .map(|&(j, i)| {
                             (
-                                MatRef::Ls { level_idx: li, key: (j, i) },
+                                ls[&(j, i)],
                                 r_part[i],
                                 s_part[j],
                                 (info.ranks[j], info.nreds[i]),
@@ -488,7 +539,7 @@ impl<'a> Recorder<'a> {
             saved_r.push(r_part);
             // Merge skeleton parts for the parent level.
             let parent_width = width / 2;
-            let mut next: Vec<VecId> = Vec::with_capacity(parent_width);
+            let mut next: Vec<BufferId> = Vec::with_capacity(parent_width);
             let mut cat = Vec::with_capacity(parent_width);
             for p in 0..parent_width {
                 let v = rec.vec(info.ranks[2 * p] + info.ranks[2 * p + 1]);
@@ -499,8 +550,8 @@ impl<'a> Recorder<'a> {
             seg = next;
         }
 
-        // ---------- Root solve. ----------
-        rec.steps.push(SolveInstr::RootSolve { vec: seg[0] });
+        // ---------- Root solve (against the resident root factor). ----------
+        rec.steps.push(SolveInstr::RootSolve { l: factor.root_src, x: seg[0] });
         rec.launches.push(LaunchMeta::new(
             0,
             "POTRS",
@@ -509,12 +560,13 @@ impl<'a> Recorder<'a> {
         ));
 
         // ---------- Backward pass (root -> leaves). ----------
-        let mut sol: Vec<VecId> = vec![seg[0]];
+        let mut sol: Vec<BufferId> = vec![seg[0]];
         for (li, info) in self.infos.iter().enumerate().rev() {
             let level = info.level;
             let width = info.width;
+            let (rr, lr, ls, basis) = level_wiring(&factor.outputs[li]);
             // Child skeleton solutions from the parent segments.
-            let mut x_s: Vec<VecId> = Vec::with_capacity(width);
+            let mut x_s: Vec<BufferId> = Vec::with_capacity(width);
             let mut splits = Vec::with_capacity(width / 2);
             for p in 0..width / 2 {
                 let a = rec.vec(info.ranks[2 * p]);
@@ -525,26 +577,21 @@ impl<'a> Recorder<'a> {
             }
             rec.steps.push(SolveInstr::Split { items: splits });
             // w_i = y_i^R - Σ L(s)_jiᵀ x_j^S.
-            let w: Vec<VecId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
+            let w: Vec<BufferId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
             rec.steps.push(SolveInstr::Copy {
                 items: (0..width).map(|i| (w[i], saved_r[li][i])).collect(),
             });
-            let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+            let entries: Vec<(BufferId, BufferId, BufferId, (usize, usize))> = info
                 .ls_keys
                 .iter()
                 .map(|&(j, i)| {
-                    (
-                        MatRef::Ls { level_idx: li, key: (j, i) },
-                        x_s[j],
-                        w[i],
-                        (info.ranks[j], info.nreds[i]),
-                    )
+                    (ls[&(j, i)], x_s[j], w[i], (info.ranks[j], info.nreds[i]))
                 })
                 .collect();
             rec.gemv_rounds(level, true, &entries);
 
             let active: Vec<usize> = (0..width).filter(|&i| info.nreds[i] > 0).collect();
-            let mut x_r: Vec<VecId> = (0..width).map(|_| VecId(u32::MAX)).collect();
+            let mut x_r: Vec<BufferId> = (0..width).map(|_| UNSET).collect();
             match mode {
                 SubstMode::Naive => {
                     // Reverse-order serial upper solve.
@@ -557,44 +604,39 @@ impl<'a> Recorder<'a> {
                             }
                             // j > i: already solved in reverse order.
                             rec.gemv_round(level, true, &[(
-                                MatRef::Lr { level_idx: li, key: (j, i) },
+                                lr[&(j, i)],
                                 x_r[j],
                                 rhs,
                                 (info.nreds[j], info.nreds[i]),
                             )]);
                         }
-                        rec.trsv(level, true, &[(
-                            MatRef::CholRr { level_idx: li, index: i },
-                            rhs,
-                            info.nreds[i],
-                        )]);
+                        rec.trsv(level, true, &[(rr[i], rhs, info.nreds[i])]);
                         x_r[i] = rhs;
                     }
                 }
                 SubstMode::Parallel => {
                     // Single-hop: z = Lᵀ⁻¹ w; x = z + Lᵀ⁻¹(-Σ L(r)ᵀ z).
-                    let z: Vec<VecId> = active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                    let z: Vec<BufferId> =
+                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
                     rec.steps.push(SolveInstr::Copy {
                         items: active.iter().zip(&z).map(|(&i, &zi)| (zi, w[i])).collect(),
                     });
-                    let diag_items: Vec<(MatRef, VecId, usize)> = active
+                    let diag_items: Vec<(BufferId, BufferId, usize)> = active
                         .iter()
                         .zip(&z)
-                        .map(|(&i, &zi)| {
-                            (MatRef::CholRr { level_idx: li, index: i }, zi, info.nreds[i])
-                        })
+                        .map(|(&i, &zi)| (rr[i], zi, info.nreds[i]))
                         .collect();
                     rec.trsv(level, true, &diag_items);
                     let slot_of: HashMap<usize, usize> =
                         active.iter().enumerate().map(|(s, &i)| (i, s)).collect();
-                    let acc: Vec<VecId> =
+                    let acc: Vec<BufferId> =
                         active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
-                    let entries: Vec<(MatRef, VecId, VecId, (usize, usize))> = info
+                    let entries: Vec<(BufferId, BufferId, BufferId, (usize, usize))> = info
                         .lr_keys
                         .iter()
                         .map(|&(row, col)| {
                             (
-                                MatRef::Lr { level_idx: li, key: (row, col) },
+                                lr[&(row, col)],
                                 z[slot_of[&row]],
                                 acc[slot_of[&col]],
                                 (info.nreds[row], info.nreds[col]),
@@ -602,12 +644,10 @@ impl<'a> Recorder<'a> {
                         })
                         .collect();
                     rec.gemv_rounds(level, true, &entries);
-                    let corr_items: Vec<(MatRef, VecId, usize)> = active
+                    let corr_items: Vec<(BufferId, BufferId, usize)> = active
                         .iter()
                         .zip(&acc)
-                        .map(|(&i, &a)| {
-                            (MatRef::CholRr { level_idx: li, index: i }, a, info.nreds[i])
-                        })
+                        .map(|(&i, &a)| (rr[i], a, info.nreds[i]))
                         .collect();
                     rec.trsv(level, true, &corr_items);
                     let mut add_items = Vec::with_capacity(active.len());
@@ -620,19 +660,19 @@ impl<'a> Recorder<'a> {
                 }
             }
             for i in 0..width {
-                if x_r[i] == VecId(u32::MAX) {
+                if x_r[i] == UNSET {
                     x_r[i] = rec.vec(info.nreds[i]); // nred == 0: empty
                 }
             }
             // x_i = U_i [x_i^S; x_i^R] (batched).
-            let stacked: Vec<VecId> =
+            let stacked: Vec<BufferId> =
                 (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
             rec.steps.push(SolveInstr::Concat {
                 items: (0..width).map(|i| (stacked[i], x_s[i], x_r[i])).collect(),
             });
-            let out: Vec<VecId> =
+            let out: Vec<BufferId> =
                 (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
-            rec.apply_basis(li, level, false, info, &stacked, &out);
+            rec.apply_basis(level, false, info, basis, &stacked, &out);
             sol = out;
         }
 
@@ -646,7 +686,7 @@ impl<'a> Recorder<'a> {
 
         let total_flops = rec.launches.iter().map(|l| l.flops).sum();
         SolveProgram {
-            vec_count: rec.vec_lens.len(),
+            vec_base: factor.buf_count as u32,
             vec_lens: rec.vec_lens,
             steps: rec.steps,
             launches: rec.launches,
@@ -655,32 +695,58 @@ impl<'a> Recorder<'a> {
     }
 }
 
+/// Per-level arena wiring pulled from the factorization program's output
+/// table (lookup maps are built transiently; recording runs at most twice
+/// per plan).
+#[allow(clippy::type_complexity)]
+fn level_wiring(
+    out: &LevelOut,
+) -> (
+    &[BufferId],
+    HashMap<(usize, usize), BufferId>,
+    HashMap<(usize, usize), BufferId>,
+    &[BufferId],
+) {
+    (
+        &out.chol_rr,
+        out.lr.iter().copied().collect(),
+        out.ls.iter().copied().collect(),
+        &out.basis,
+    )
+}
+
 /// Scratch state while recording one substitution program.
-#[derive(Default)]
 struct SolveRecorder {
+    base: u32,
     vec_lens: Vec<usize>,
     steps: Vec<SolveInstr>,
     launches: Vec<LaunchMeta>,
 }
 
 impl SolveRecorder {
-    fn vec(&mut self, len: usize) -> VecId {
-        let id = VecId(self.vec_lens.len() as u32);
+    fn new(base: u32) -> SolveRecorder {
+        SolveRecorder { base, vec_lens: Vec::new(), steps: Vec::new(), launches: Vec::new() }
+    }
+
+    /// Allocate the next vector buffer (ids live above the factorization
+    /// arena so matrix and vector operands share one id space).
+    fn vec(&mut self, len: usize) -> BufferId {
+        let id = BufferId(self.base + self.vec_lens.len() as u32);
         self.vec_lens.push(len);
         id
     }
 
     fn apply_basis(
         &mut self,
-        level_idx: usize,
         level: usize,
         trans: bool,
         info: &LevelInfo,
-        src: &[VecId],
-        dst: &[VecId],
+        basis: &[BufferId],
+        src: &[BufferId],
+        dst: &[BufferId],
     ) {
         let items: Vec<BasisItem> =
-            (0..info.width).map(|i| (i, src[i], dst[i])).collect();
+            (0..info.width).map(|i| (basis[i], src[i], dst[i])).collect();
         let shapes: Vec<(usize, usize, u64)> = (0..info.width)
             .map(|i| {
                 let n = info.ranks[i] + info.nreds[i];
@@ -688,10 +754,10 @@ impl SolveRecorder {
             })
             .collect();
         self.launches.push(LaunchMeta::new(level, "BASIS", &shapes, |r, c| 2 * (r * c) as u64));
-        self.steps.push(SolveInstr::ApplyBasis { level_idx, level, trans, items });
+        self.steps.push(SolveInstr::ApplyBasis { level, trans, items });
     }
 
-    fn trsv(&mut self, level: usize, bwd: bool, items: &[(MatRef, VecId, usize)]) {
+    fn trsv(&mut self, level: usize, bwd: bool, items: &[(BufferId, BufferId, usize)]) {
         if items.is_empty() {
             return;
         }
@@ -699,7 +765,8 @@ impl SolveRecorder {
             items.iter().map(|&(_, _, n)| (n, n, (n * n) as u64)).collect();
         let kernel = if bwd { "TRSVT" } else { "TRSV" };
         self.launches.push(LaunchMeta::new(level, kernel, &shapes, |r, _| (r * r) as u64));
-        let instr_items: Vec<(MatRef, VecId)> = items.iter().map(|&(m, v, _)| (m, v)).collect();
+        let instr_items: Vec<(BufferId, BufferId)> =
+            items.iter().map(|&(m, v, _)| (m, v)).collect();
         if bwd {
             self.steps.push(SolveInstr::TrsvBwd { level, items: instr_items });
         } else {
@@ -712,13 +779,13 @@ impl SolveRecorder {
         &mut self,
         level: usize,
         trans: bool,
-        entries: &[(MatRef, VecId, VecId, (usize, usize))],
+        entries: &[(BufferId, BufferId, BufferId, (usize, usize))],
     ) {
         if entries.is_empty() {
             return;
         }
         debug_assert!({
-            let ys: HashSet<VecId> = entries.iter().map(|&(_, _, y, _)| y).collect();
+            let ys: HashSet<BufferId> = entries.iter().map(|&(_, _, y, _)| y).collect();
             ys.len() == entries.len() && entries.iter().all(|&(_, x, _, _)| !ys.contains(&x))
         });
         let shapes: Vec<(usize, usize, u64)> = entries
@@ -739,7 +806,7 @@ impl SolveRecorder {
         &mut self,
         level: usize,
         trans: bool,
-        entries: &[(MatRef, VecId, VecId, (usize, usize))],
+        entries: &[(BufferId, BufferId, BufferId, (usize, usize))],
     ) {
         let mut remaining: Vec<usize> = (0..entries.len()).collect();
         while !remaining.is_empty() {
@@ -754,7 +821,7 @@ impl SolveRecorder {
                 }
             }
             remaining = rest;
-            let batch: Vec<(MatRef, VecId, VecId, (usize, usize))> =
+            let batch: Vec<(BufferId, BufferId, BufferId, (usize, usize))> =
                 round.iter().map(|&t| entries[t]).collect();
             self.gemv_round(level, trans, &batch);
         }

@@ -1,5 +1,6 @@
 //! PJRT runtime: loads the AOT-compiled XLA executables (HLO text emitted
-//! by `python/compile/aot.py`) and exposes them as a [`BatchExec`] backend.
+//! by `python/compile/aot.py`) and exposes them as an arena-native
+//! [`crate::batch::device::Device`] backend.
 //!
 //! This is the repo's analog of the paper's GPU execution path: every
 //! batched launch maps to one AOT executable chosen by `(op, batch-bucket,

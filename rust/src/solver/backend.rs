@@ -3,12 +3,14 @@
 //!
 //! [`BackendSpec`] is the *description* of an execution engine; the facade
 //! instantiates it once at `build()` time and owns the resulting boxed
-//! [`BatchExec`], so no concrete backend type ever crosses the facade
+//! [`Device`], so no concrete backend type ever crosses the facade
 //! boundary.
 
 use super::H2Error;
+use crate::batch::device::{
+    exec_host_launch, host_arena, Device, DeviceArena, HostArena, HostKernels, Launch,
+};
 use crate::batch::native::NativeBackend;
-use crate::batch::BatchExec;
 use crate::linalg::blas::{self, Side, Uplo};
 use crate::linalg::chol;
 use crate::linalg::matrix::{Matrix, Trans};
@@ -40,13 +42,21 @@ impl BackendSpec {
         BackendSpec::Pjrt { artifacts_dir: PathBuf::from("artifacts") }
     }
 
-    /// Parse a CLI-style backend name (`native`, `pjrt`, `serial`).
+    /// Parse a CLI-style backend name: `native`, `serial`, `pjrt`, or
+    /// `pjrt:<artifacts_dir>` to point at a non-default artifact directory
+    /// without code changes.
     pub fn by_name(name: &str) -> Option<BackendSpec> {
         match name {
             "native" => Some(BackendSpec::Native),
             "pjrt" => Some(BackendSpec::pjrt()),
             "serial" => Some(BackendSpec::SerialReference),
-            _ => None,
+            _ => {
+                let dir = name.strip_prefix("pjrt:")?;
+                if dir.is_empty() {
+                    return None;
+                }
+                Some(BackendSpec::Pjrt { artifacts_dir: PathBuf::from(dir) })
+            }
         }
     }
 
@@ -59,8 +69,8 @@ impl BackendSpec {
         }
     }
 
-    /// Instantiate the described backend.
-    pub(crate) fn instantiate(&self) -> Result<Box<dyn BatchExec>, H2Error> {
+    /// Instantiate the described backend as an arena-native device.
+    pub(crate) fn instantiate(&self) -> Result<Box<dyn Device>, H2Error> {
         match self {
             BackendSpec::Native => Ok(Box::new(NativeBackend::new())),
             BackendSpec::SerialReference => Ok(Box::new(SerialBackend)),
@@ -77,7 +87,7 @@ impl BackendSpec {
     }
 }
 
-/// Single-threaded reference implementation of [`BatchExec`].
+/// Single-threaded reference implementation of the batched kernels.
 ///
 /// Runs every batch item sequentially with the same `linalg` kernels the
 /// native backend dispatches to the worker pool, so results are
@@ -85,8 +95,8 @@ impl BackendSpec {
 /// and free of unsafe pointer sharing.
 pub struct SerialBackend;
 
-impl BatchExec for SerialBackend {
-    fn potrf(&self, _level: usize, blocks: &mut [Matrix]) {
+impl SerialBackend {
+    pub fn potrf(&self, _level: usize, blocks: &mut [Matrix]) {
         for (t, blk) in blocks.iter_mut().enumerate() {
             flops::add(flops::potrf_flops(blk.rows()));
             if let Err(e) = chol::potrf(blk) {
@@ -95,7 +105,7 @@ impl BatchExec for SerialBackend {
         }
     }
 
-    fn trsm_right_lt(&self, _level: usize, l: &[&Matrix], b: &mut [Matrix]) {
+    pub fn trsm_right_lt(&self, _level: usize, l: &[&Matrix], b: &mut [Matrix]) {
         assert_eq!(l.len(), b.len());
         for (lt, bt) in l.iter().zip(b.iter_mut()) {
             flops::add(flops::trsm_flops(lt.rows(), bt.rows()));
@@ -103,7 +113,7 @@ impl BatchExec for SerialBackend {
         }
     }
 
-    fn schur_self(&self, _level: usize, a: &[&Matrix], c: &mut [Matrix]) {
+    pub fn schur_self(&self, _level: usize, a: &[&Matrix], c: &mut [Matrix]) {
         assert_eq!(a.len(), c.len());
         for (at, ct) in a.iter().zip(c.iter_mut()) {
             flops::add(flops::gemm_flops(at.rows(), at.rows(), at.cols()));
@@ -111,7 +121,7 @@ impl BatchExec for SerialBackend {
         }
     }
 
-    fn sparsify(&self, _level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
+    pub fn sparsify(&self, _level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
         assert_eq!(u.len(), a.len());
         assert_eq!(v.len(), a.len());
         let mut out = Vec::with_capacity(a.len());
@@ -126,7 +136,7 @@ impl BatchExec for SerialBackend {
         out
     }
 
-    fn trsv_fwd(&self, _level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+    pub fn trsv_fwd(&self, _level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
         assert_eq!(l.len(), x.len());
         for (lt, xt) in l.iter().zip(x.iter_mut()) {
             flops::add((lt.rows() * lt.rows()) as u64);
@@ -134,7 +144,7 @@ impl BatchExec for SerialBackend {
         }
     }
 
-    fn trsv_bwd(&self, _level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+    pub fn trsv_bwd(&self, _level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
         assert_eq!(l.len(), x.len());
         for (lt, xt) in l.iter().zip(x.iter_mut()) {
             flops::add((lt.rows() * lt.rows()) as u64);
@@ -142,7 +152,7 @@ impl BatchExec for SerialBackend {
         }
     }
 
-    fn gemv_acc(
+    pub fn gemv_acc(
         &self,
         _level: usize,
         alpha: f64,
@@ -160,7 +170,13 @@ impl BatchExec for SerialBackend {
         }
     }
 
-    fn apply_basis(&self, _level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
+    pub fn apply_basis(
+        &self,
+        _level: usize,
+        u: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+    ) -> Vec<Vec<f64>> {
         assert_eq!(u.len(), x.len());
         let ta = if trans { Trans::Yes } else { Trans::No };
         let mut out = Vec::with_capacity(u.len());
@@ -172,6 +188,57 @@ impl BatchExec for SerialBackend {
             out.push(y);
         }
         out
+    }
+}
+
+impl HostKernels for SerialBackend {
+    fn potrf(&self, level: usize, blocks: &mut [Matrix]) {
+        SerialBackend::potrf(self, level, blocks);
+    }
+    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]) {
+        SerialBackend::trsm_right_lt(self, level, l, b);
+    }
+    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]) {
+        SerialBackend::schur_self(self, level, a, c);
+    }
+    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
+        SerialBackend::sparsify(self, level, u, a, v)
+    }
+    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        SerialBackend::trsv_fwd(self, level, l, x);
+    }
+    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
+        SerialBackend::trsv_bwd(self, level, l, x);
+    }
+    fn gemv_acc(
+        &self,
+        level: usize,
+        alpha: f64,
+        a: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+        y: &mut [Vec<f64>],
+    ) {
+        SerialBackend::gemv_acc(self, level, alpha, a, trans, x, y);
+    }
+    fn apply_basis(
+        &self,
+        level: usize,
+        u: &[&Matrix],
+        trans: bool,
+        x: &[&[f64]],
+    ) -> Vec<Vec<f64>> {
+        SerialBackend::apply_basis(self, level, u, trans, x)
+    }
+}
+
+impl Device for SerialBackend {
+    fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena> {
+        Box::new(HostArena::with_capacity(capacity))
+    }
+
+    fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>) {
+        exec_host_launch(self, host_arena(arena), launch);
     }
 
     fn name(&self) -> &'static str {
@@ -192,6 +259,18 @@ mod tests {
         assert_eq!(BackendSpec::by_name("serial"), Some(BackendSpec::SerialReference));
         assert_eq!(BackendSpec::by_name("pjrt").map(|s| s.name()), Some("pjrt"));
         assert_eq!(BackendSpec::by_name("gpu"), None);
+    }
+
+    #[test]
+    fn spec_parses_pjrt_artifact_dir() {
+        let spec = BackendSpec::by_name("pjrt:custom/artifacts").expect("valid spec");
+        assert_eq!(
+            spec,
+            BackendSpec::Pjrt { artifacts_dir: PathBuf::from("custom/artifacts") }
+        );
+        assert_eq!(spec.name(), "pjrt");
+        assert_eq!(BackendSpec::by_name("pjrt:"), None, "empty dir is invalid");
+        assert_eq!(BackendSpec::by_name("pjrtx"), None);
     }
 
     #[test]

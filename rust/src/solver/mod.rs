@@ -15,8 +15,9 @@
 //!    validates inputs up front and converts any residual panic into a
 //!    structured [`H2Error`] via an unwind guard.
 //! 3. **Concrete backend types threaded through every call** — the facade
-//!    owns a boxed [`crate::batch::BatchExec`] selected by [`BackendSpec`]
-//!    at build time; callers never see backend types.
+//!    owns a boxed [`crate::batch::device::Device`] (and its resident
+//!    buffer arena) selected by [`BackendSpec`] at build time; callers
+//!    never see backend types.
 //!
 //! # Error taxonomy
 //!

@@ -11,16 +11,16 @@
 use super::backend::BackendSpec;
 use super::builder::validate;
 use super::{guard, H2Error};
-use crate::batch::BatchExec;
+use crate::batch::device::{Device, DeviceArena};
 use crate::construct::H2Config;
-use crate::dist::{dist_solve_driver_with, NCCL_LIKE};
+use crate::dist::{dist_solve_driver_in, NCCL_LIKE};
 use crate::geometry::Geometry;
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
 use crate::metrics::{flops::FlopScope, timer::timed};
 use crate::plan::{self, Executor, Plan, ScheduleStats};
-use crate::ulv::{pcg, SubstMode, UlvFactor};
-use std::sync::Arc;
+use crate::ulv::{pcg_in, SubstMode, UlvFactor};
+use std::sync::{Arc, Mutex};
 
 /// Seed for the sampled residual estimator (fixed so reports are
 /// reproducible across solves of the same problem).
@@ -126,7 +126,11 @@ pub struct H2Solver {
     geometry: Geometry,
     kernel: KernelFn,
     spec: BackendSpec,
-    backend: Box<dyn BatchExec>,
+    backend: Box<dyn Device>,
+    /// Device arena holding the factor resident (outputs + bases + root)
+    /// since the last factorization replay; every solve replays the
+    /// substitution program against these buffers without re-uploading.
+    arena: Mutex<Box<dyn DeviceArena>>,
     subst: SubstMode,
     residual_samples: usize,
     h2: H2Matrix,
@@ -145,20 +149,21 @@ impl H2Solver {
         kernel: KernelFn,
         config: H2Config,
         spec: BackendSpec,
-        backend: Box<dyn BatchExec>,
+        backend: Box<dyn Device>,
         subst: SubstMode,
         residual_samples: usize,
     ) -> Result<H2Solver, H2Error> {
         let scope = FlopScope::new();
         let (h2, construct_time) = construct_timed(&geometry, &kernel, &config)?;
         let plan = Arc::new(guard("planning", || plan::record(&h2))?);
-        let (factor, stats) =
+        let (factor, arena, stats) =
             replay_factor(&plan, &h2, backend.as_ref(), &scope, construct_time)?;
         Ok(H2Solver {
             geometry,
             kernel,
             spec,
             backend,
+            arena: Mutex::new(arena),
             subst,
             residual_samples,
             h2,
@@ -227,6 +232,13 @@ impl H2Solver {
     /// the returned [`SolveReport::x`] is in original ordering too. All
     /// tree-order permutation happens inside.
     ///
+    /// Concurrency: solves on one session replay against the session's
+    /// single resident device arena and are therefore **serialized** (the
+    /// arena lock is held for the whole substitution). Threads that need
+    /// parallel solves against one factorization should use separate
+    /// sessions, or [`crate::ulv::UlvFactor::solve_tree_order`] with
+    /// per-thread arenas.
+    ///
     /// ```
     /// use h2ulv::prelude::*;
     ///
@@ -268,14 +280,14 @@ impl H2Solver {
         let mode = opts.subst_mode.unwrap_or(self.subst);
         let bt = self.h2.tree.permute_vec(b);
         let (xt, subst_time) = {
+            // Replay against the resident arena: the factor never leaves
+            // the device between solves.
+            let mut arena = self.arena.lock().unwrap();
             let (res, t) = timed(|| {
                 guard("substitution", || {
-                    self.factor.solve_tree_order_scoped(
-                        &bt,
-                        self.backend.as_ref(),
-                        mode,
-                        &self.scope,
-                    )
+                    Executor::new(self.backend.as_ref())
+                        .with_scope(&self.scope)
+                        .solve_in(&self.plan, arena.as_mut(), &bt, mode)
                 })
             });
             (res?, t)
@@ -330,9 +342,18 @@ impl H2Solver {
         }
         let bt = self.h2.tree.permute_vec(b);
         let (result, subst_time) = {
+            let mut arena = self.arena.lock().unwrap();
             let (res, t) = timed(|| {
                 guard("refined substitution", || {
-                    pcg(&self.h2, &self.factor, self.backend.as_ref(), &bt, tol, max_iters)
+                    pcg_in(
+                        &self.h2,
+                        &self.factor,
+                        self.backend.as_ref(),
+                        arena.as_mut(),
+                        &bt,
+                        tol,
+                        max_iters,
+                    )
                 })
             });
             (res?, t)
@@ -364,16 +385,20 @@ impl H2Solver {
     pub fn solve_dist(&self, b: &[f64], ranks: usize) -> Result<DistSolveReport, H2Error> {
         self.check_rhs(b)?;
         let bt = self.h2.tree.permute_vec(b);
-        let report = guard("distributed solve", || {
-            dist_solve_driver_with(
-                &self.h2,
-                &self.factor,
-                self.backend.as_ref(),
-                ranks,
-                &bt,
-                self.subst,
-            )
-        })?;
+        let report = {
+            let mut arena = self.arena.lock().unwrap();
+            guard("distributed solve", || {
+                dist_solve_driver_in(
+                    &self.h2,
+                    &self.factor,
+                    self.backend.as_ref(),
+                    arena.as_mut(),
+                    ranks,
+                    &bt,
+                    self.subst,
+                )
+            })?
+        };
         let residual = self.sample_residual(&report.x, &bt);
         let x = self.h2.tree.unpermute_vec(&report.x);
         Ok(DistSolveReport {
@@ -404,28 +429,32 @@ impl H2Solver {
             self.plan_recordings += 1;
             plan
         };
-        let (factor, stats) =
+        let (factor, arena, stats) =
             replay_factor(&plan, &h2, self.backend.as_ref(), &self.scope, construct_time)?;
         self.h2 = h2;
         self.plan = plan;
         self.factor = factor;
+        self.arena = Mutex::new(arena);
         self.stats = stats;
         Ok(&self.stats)
     }
 
     /// Re-execute the cached plan on a different backend *without*
     /// rebuilding the H² matrix or re-deriving the schedule: the same
-    /// instruction stream is replayed against the new [`BackendSpec`].
-    /// This is how backend comparisons (native vs PJRT vs serial) share
-    /// one H² construction. Returns the new build stats
-    /// (`construct_time` is 0 — nothing was constructed).
+    /// instruction stream is replayed against the new [`BackendSpec`],
+    /// which re-materializes the buffer arena on the new device (the
+    /// host-side H² matrix is the transport — this is how the factor
+    /// "moves" across devices). Backend comparisons (native vs PJRT vs
+    /// serial) share one H² construction this way. Returns the new build
+    /// stats (`construct_time` is 0 — nothing was constructed).
     pub fn rebind_backend(&mut self, spec: BackendSpec) -> Result<&BuildStats, H2Error> {
         let backend = spec.instantiate()?;
-        let (factor, stats) =
+        let (factor, arena, stats) =
             replay_factor(&self.plan, &self.h2, backend.as_ref(), &self.scope, 0.0)?;
         self.spec = spec;
         self.backend = backend;
         self.factor = factor;
+        self.arena = Mutex::new(arena);
         self.stats = stats;
         Ok(&self.stats)
     }
@@ -482,20 +511,22 @@ fn construct_timed(
 }
 
 /// Guarded plan replay shared by `build()`, `refactorize()`, and
-/// `rebind_backend()`: executes the factorization program and derives the
-/// session's [`BuildStats`] from the scope and the plan IR.
+/// `rebind_backend()`: executes the factorization program, keeps the
+/// factor resident in the device arena, and derives the session's
+/// [`BuildStats`] from the scope and the plan IR.
+#[allow(clippy::type_complexity)]
 fn replay_factor(
     plan: &Arc<Plan>,
     h2: &H2Matrix,
-    backend: &dyn BatchExec,
+    backend: &dyn Device,
     scope: &FlopScope,
     construct_time: f64,
-) -> Result<(UlvFactor, BuildStats), H2Error> {
+) -> Result<(UlvFactor, Box<dyn DeviceArena>, BuildStats), H2Error> {
     let before = scope.snapshot();
-    let (factor, factor_time) = {
+    let ((factor, arena), factor_time) = {
         let (res, t) = timed(|| {
             guard("factorization", || {
-                Executor::new(backend).with_scope(scope).factorize(plan, h2)
+                Executor::new(backend).with_scope(scope).factorize_resident(plan, h2)
             })
         });
         (res?, t)
@@ -511,5 +542,5 @@ fn replay_factor(
         factor_entries: factor.storage_entries(),
         schedule: plan.schedule_stats(),
     };
-    Ok((factor, stats))
+    Ok((factor, arena, stats))
 }

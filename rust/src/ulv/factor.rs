@@ -2,34 +2,36 @@
 //! record-then-execute over the [`crate::plan`] IR.
 //!
 //! [`factorize`] records the complete level-ordered launch schedule once
-//! (a structural walk — no numerics) and immediately replays it;
-//! [`factorize_with_plan`] replays an existing plan against a structurally
-//! identical H² matrix, which is how `H2Solver::refactorize` and
-//! `H2Solver::rebind_backend` skip schedule re-derivation entirely.
+//! (a structural walk — no numerics) and immediately replays it on the
+//! given [`Device`]; [`factorize_with_plan`] replays an existing plan
+//! against a structurally identical H² matrix, which is how
+//! `H2Solver::refactorize` and `H2Solver::rebind_backend` skip schedule
+//! re-derivation entirely.
 
 use super::UlvFactor;
-use crate::batch::BatchExec;
+use crate::batch::device::Device;
 use crate::h2::H2Matrix;
 use crate::plan::{self, Executor, Plan};
 use std::sync::Arc;
 
 /// Factorize an H²-matrix with the inherently parallel ULV scheme.
 ///
-/// `exec` supplies the batched kernels (native thread pool or PJRT/XLA
-/// artifacts). All within-level launches are dependency-free; only the
-/// level loop and the merge are synchronization points — exactly the
-/// paper's structure. The schedule is recorded as a [`Plan`] before any
-/// kernel runs and is kept on the returned factor for replay.
-pub fn factorize(h2: &H2Matrix, exec: &dyn BatchExec) -> UlvFactor {
+/// `device` supplies the batched kernels (native thread pool or PJRT/XLA
+/// artifacts) and owns the buffer arena the replay runs in. All
+/// within-level launches are dependency-free; only the level loop and the
+/// merge are synchronization points — exactly the paper's structure. The
+/// schedule is recorded as a [`Plan`] before any kernel runs and is kept
+/// on the returned factor for replay.
+pub fn factorize(h2: &H2Matrix, device: &dyn Device) -> UlvFactor {
     let plan = Arc::new(plan::record(h2));
-    factorize_with_plan(h2, exec, plan)
+    factorize_with_plan(h2, device, plan)
 }
 
 /// Replay an existing plan against `h2` (which must be structurally
 /// identical to the matrix the plan was recorded from — see
 /// [`Plan::compatible`]). No schedule discovery runs.
-pub fn factorize_with_plan(h2: &H2Matrix, exec: &dyn BatchExec, plan: Arc<Plan>) -> UlvFactor {
-    Executor::new(exec).factorize(&plan, h2)
+pub fn factorize_with_plan(h2: &H2Matrix, device: &dyn Device, plan: Arc<Plan>) -> UlvFactor {
+    Executor::new(device).factorize(&plan, h2)
 }
 
 #[cfg(test)]

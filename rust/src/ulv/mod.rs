@@ -19,10 +19,13 @@
 //! The root block is factorized densely (Algorithm 2 line 22).
 
 //! Both phases run exclusively through the recorded execution-plan IR
-//! ([`crate::plan`]): `factorize` records the instruction stream once per
-//! H² structure and replays it; every solve replays the recorded
-//! substitution program. The factor keeps its plan so refactorization and
-//! backend rebinding replay without re-planning.
+//! ([`crate::plan`]) driven against an arena-native
+//! [`crate::batch::device::Device`]: `factorize` records the instruction
+//! stream once per H² structure and replays it, leaving the factor
+//! resident in the device arena; every solve replays the recorded
+//! substitution program against those resident buffers. The factor keeps
+//! its plan so refactorization and backend rebinding replay without
+//! re-planning.
 
 pub mod factor;
 pub mod precond;
@@ -35,7 +38,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 pub use factor::{factorize, factorize_with_plan};
-pub use precond::pcg;
+pub use precond::{pcg, pcg_in};
 
 /// Which substitution algorithm to run (paper §3.7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]

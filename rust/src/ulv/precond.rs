@@ -8,8 +8,9 @@
 //! (H² matvec + ULV substitution).
 
 use super::{SubstMode, UlvFactor};
-use crate::batch::BatchExec;
+use crate::batch::device::{Device, DeviceArena};
 use crate::h2::H2Matrix;
+use crate::plan::Executor;
 
 /// Outcome of a preconditioned-CG solve.
 #[derive(Debug, Clone)]
@@ -24,19 +25,39 @@ pub struct PcgResult {
 
 /// Solve `Â x = b` (tree ordering) by CG on the H² operator, preconditioned
 /// with the ULV factorization. `tol` is the relative residual target.
+///
+/// The factor is uploaded into the device arena once and every CG
+/// iteration replays the substitution program against the resident
+/// buffers; use [`pcg_in`] directly when a resident arena already exists
+/// (the session facade's case).
 pub fn pcg(
     h2: &H2Matrix,
     fac: &UlvFactor,
-    exec: &dyn BatchExec,
+    device: &dyn Device,
     b: &[f64],
     tol: f64,
     max_iters: usize,
 ) -> PcgResult {
+    let mut arena = Executor::new(device).upload_factor(fac);
+    pcg_in(h2, fac, device, arena.as_mut(), b, tol, max_iters)
+}
+
+/// [`pcg`] against an arena that already holds the factor resident.
+pub fn pcg_in(
+    h2: &H2Matrix,
+    fac: &UlvFactor,
+    device: &dyn Device,
+    arena: &mut dyn DeviceArena,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> PcgResult {
+    let exec = Executor::new(device);
     let n = b.len();
     let norm_b = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
-    let mut z = fac.solve_tree_order(&r, exec, SubstMode::Parallel);
+    let mut z = exec.solve_in(&fac.plan, arena, &r, SubstMode::Parallel);
     let mut p = z.clone();
     let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
     let mut iters = 0;
@@ -57,7 +78,7 @@ pub fn pcg(
         if rel < tol {
             break;
         }
-        z = fac.solve_tree_order(&r, exec, SubstMode::Parallel);
+        z = exec.solve_in(&fac.plan, arena, &r, SubstMode::Parallel);
         let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
         let beta = rz_new / rz;
         rz = rz_new;

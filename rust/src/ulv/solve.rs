@@ -24,7 +24,7 @@
 //! replay is bit-deterministic per backend.
 
 use super::{SubstMode, UlvFactor};
-use crate::batch::BatchExec;
+use crate::batch::device::Device;
 use crate::metrics::flops::FlopScope;
 use crate::plan::Executor;
 
@@ -33,11 +33,11 @@ impl UlvFactor {
     /// in original ordering. Convenience wrapper over [`solve_tree_order`].
     ///
     /// [`solve_tree_order`]: UlvFactor::solve_tree_order
-    pub fn solve(&self, b: &[f64], exec: &dyn BatchExec, mode: SubstMode) -> Vec<f64> {
+    pub fn solve(&self, b: &[f64], device: &dyn Device, mode: SubstMode) -> Vec<f64> {
         assert_eq!(b.len(), self.n());
         // Permute into tree order.
         let bt: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
-        let xt = self.solve_tree_order(&bt, exec, mode);
+        let xt = self.solve_tree_order(&bt, device, mode);
         // Back to original ordering.
         let mut x = vec![0.0; b.len()];
         for (t, &orig) in self.perm.iter().enumerate() {
@@ -47,9 +47,12 @@ impl UlvFactor {
     }
 
     /// Solve with `b` already in tree ordering: replays the recorded
-    /// substitution program for `mode`.
-    pub fn solve_tree_order(&self, b: &[f64], exec: &dyn BatchExec, mode: SubstMode) -> Vec<f64> {
-        Executor::new(exec).solve(&self.plan, self, b, mode)
+    /// substitution program for `mode`. The factor is uploaded into a
+    /// transient device arena for this call; sessions that solve
+    /// repeatedly keep a resident arena instead
+    /// ([`Executor::factorize_resident`] / [`Executor::solve_in`]).
+    pub fn solve_tree_order(&self, b: &[f64], device: &dyn Device, mode: SubstMode) -> Vec<f64> {
+        Executor::new(device).solve(&self.plan, self, b, mode)
     }
 
     /// [`solve_tree_order`](UlvFactor::solve_tree_order) with per-session
@@ -57,11 +60,11 @@ impl UlvFactor {
     pub fn solve_tree_order_scoped(
         &self,
         b: &[f64],
-        exec: &dyn BatchExec,
+        device: &dyn Device,
         mode: SubstMode,
         scope: &FlopScope,
     ) -> Vec<f64> {
-        Executor::new(exec).with_scope(scope).solve(&self.plan, self, b, mode)
+        Executor::new(device).with_scope(scope).solve(&self.plan, self, b, mode)
     }
 }
 

@@ -3,7 +3,6 @@
 //! paper's CPU vs GPU implementations of one algorithm).
 
 use h2ulv::batch::native::NativeBackend;
-use h2ulv::batch::BatchExec;
 use h2ulv::construct::H2Config;
 use h2ulv::geometry::Geometry;
 use h2ulv::h2::H2Matrix;
