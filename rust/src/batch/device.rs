@@ -37,6 +37,31 @@
 //! backends are host-synchronous, so their hooks are no-ops; the seam
 //! exists for a real multi-stream GPU device.
 //!
+//! # Factor region vs. vector regions (concurrent solves)
+//!
+//! Factorization owns its arena exclusively (`&mut` through
+//! [`Device::launch`]). Once the factor is resident, the arena becomes an
+//! **immutable factor region**: substitution programs only *read* the
+//! factor matrices (diagonal Cholesky blocks, panels, bases, root) and
+//! write exclusively to vector buffers at ids ≥
+//! [`SolveProgram::vec_base`](crate::plan::SolveProgram::vec_base). That
+//! split is what makes the solve phase inherently concurrent — the
+//! paper's throughput-serving scenario of many right-hand sides against
+//! one resident factor:
+//!
+//! * a [`VecRegion`] is one solve's private vector region, carved above
+//!   the factor region in the buffer-id space;
+//! * a [`WorkspacePool`] leases regions to callers ([`Workspace`] returns
+//!   the region on drop — even on panic, so a failed launch can never
+//!   shrink pool capacity);
+//! * [`Device::launch_solve`] executes a substitution launch with matrix
+//!   operands resolved in the shared read-only factor region and vector
+//!   operands in the caller's exclusive workspace.
+//!
+//! Any number of threads may run [`Device::launch_solve`] against the same
+//! factor region with distinct workspaces; no lock is held across
+//! launches.
+//!
 //! # Legacy adapter
 //!
 //! The pre-redesign slice-based [`BatchExec`](crate::batch::BatchExec)
@@ -118,7 +143,13 @@ impl Launch<'_> {
 /// `upload`/`download` are the only host↔device transfers, `alloc`/`free`
 /// manage device-side lifetime. Implementations grow on demand, so the
 /// construction capacity is a hint.
-pub trait DeviceArena: Send {
+///
+/// Arenas are `Send + Sync`: after factorization a session shares its
+/// factor arena read-only across concurrently solving threads (all `&self`
+/// methods); mutation still requires `&mut self`, so exclusive phases
+/// (factorization, refactorization) are enforced by the borrow checker
+/// rather than a runtime lock.
+pub trait DeviceArena: Send + Sync {
     /// Host → device: copy a matrix into slot `id` (overwrites).
     fn upload(&mut self, id: BufferId, m: &Matrix);
     /// Host → device: copy a vector into slot `id` (overwrites).
@@ -150,6 +181,16 @@ pub trait DeviceArena: Send {
     fn free_region(&mut self, from: BufferId);
     /// Number of live (allocated) buffers — the leak-check hook.
     fn live(&self) -> usize;
+    /// Payload bytes of the live buffers (8 bytes per f64 entry), or 0 if
+    /// the implementation does not track footprint.
+    fn bytes(&self) -> usize {
+        0
+    }
+    /// High-water mark of [`bytes`](DeviceArena::bytes) over this arena's
+    /// lifetime — the peak-footprint hook for `BuildStats`.
+    fn peak_bytes(&self) -> usize {
+        0
+    }
     /// Downcast support for concrete-device launch implementations.
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;
@@ -162,10 +203,28 @@ pub trait DeviceArena: Send {
 pub trait Device: Sync {
     /// Create an arena sized for `capacity` buffers (a hint; arenas grow).
     fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena>;
-    /// Execute one batched launch against `arena`. May be asynchronous;
-    /// ordering with other launches on the same arena follows program
-    /// order unless the implementation can prove independence.
+    /// Execute one batched *factorization-phase* launch against `arena`
+    /// (`Potrf`, `TrsmRightLt`, `SchurSelf`, `Sparsify`, `Extract`,
+    /// `Merge`). May be asynchronous; ordering with other launches on the
+    /// same arena follows program order unless the implementation can
+    /// prove independence. Substitution opcodes go through
+    /// [`Device::launch_solve`] instead (and panic here).
     fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>);
+    /// Execute one *substitution-phase* launch: matrix operands (diagonal
+    /// Cholesky blocks, `L(r)`/`L(s)` panels, bases, the root factor) are
+    /// **read** from the immutable `factor` region; vector operands live in
+    /// the caller's exclusive `ws` region. This is the concurrent-solve
+    /// entry point — any number of threads may call it simultaneously with
+    /// the same factor region and distinct workspaces; implementations must
+    /// not require external synchronization beyond that split. Panics on
+    /// factorization-only opcodes (`Potrf`, `TrsmRightLt`, `SchurSelf`,
+    /// `Sparsify`, `Extract`, `Merge`).
+    fn launch_solve(
+        &self,
+        factor: &dyn DeviceArena,
+        ws: &mut dyn DeviceArena,
+        launch: &Launch<'_>,
+    );
     /// Hint: subsequent launches belong to tree level `level`. A
     /// multi-stream implementation may use this to double-buffer adjacent
     /// levels; host-synchronous backends ignore it.
@@ -192,6 +251,15 @@ impl Slot {
     fn is_empty(&self) -> bool {
         matches!(self, Slot::Empty)
     }
+
+    /// Payload bytes of this slot (8 bytes per f64 entry).
+    fn bytes(&self) -> usize {
+        8 * match self {
+            Slot::Empty => 0,
+            Slot::Mat(m) => m.rows() * m.cols(),
+            Slot::Vec(v) => v.len(),
+        }
+    }
 }
 
 /// Host-memory [`DeviceArena`] used by the native, serial, and PJRT
@@ -201,13 +269,15 @@ impl Slot {
 pub struct HostArena {
     slots: Vec<Slot>,
     live: usize,
+    bytes: usize,
+    peak_bytes: usize,
 }
 
 impl HostArena {
     pub fn with_capacity(capacity: usize) -> HostArena {
         let mut slots = Vec::new();
         slots.resize_with(capacity, || Slot::Empty);
-        HostArena { slots, live: 0 }
+        HostArena { slots, live: 0, bytes: 0, peak_bytes: 0 }
     }
 
     fn ensure(&mut self, id: BufferId) {
@@ -223,6 +293,11 @@ impl HostArena {
         if self.slots[idx].is_empty() && !slot.is_empty() {
             self.live += 1;
         }
+        // Subtract the overwritten slot before adding, so overwriting a
+        // live buffer never transiently inflates the peak.
+        self.bytes -= self.slots[idx].bytes();
+        self.bytes += slot.bytes();
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
         self.slots[idx] = slot;
     }
 
@@ -235,6 +310,7 @@ impl HostArena {
         ) {
             Slot::Mat(m) => {
                 self.live -= 1;
+                self.bytes -= 8 * m.rows() * m.cols();
                 m
             }
             Slot::Vec(_) => panic!("buffer B{idx} holds a vector, matrix expected"),
@@ -263,6 +339,7 @@ impl HostArena {
         ) {
             Slot::Vec(v) => {
                 self.live -= 1;
+                self.bytes -= 8 * v.len();
                 v
             }
             Slot::Mat(_) => panic!("buffer B{idx} holds a matrix, vector expected"),
@@ -317,14 +394,16 @@ impl DeviceArena for HostArena {
         let idx = id.0 as usize;
         let slot = self.slots.get_mut(idx).expect("buffer id out of arena range");
         assert!(!slot.is_empty(), "double free of buffer B{idx}");
-        *slot = Slot::Empty;
+        let freed = std::mem::replace(slot, Slot::Empty);
+        self.bytes -= freed.bytes();
         self.live -= 1;
     }
 
     fn free_region(&mut self, from: BufferId) {
         for idx in (from.0 as usize)..self.slots.len() {
             if !self.slots[idx].is_empty() {
-                self.slots[idx] = Slot::Empty;
+                let freed = std::mem::replace(&mut self.slots[idx], Slot::Empty);
+                self.bytes -= freed.bytes();
                 self.live -= 1;
             }
         }
@@ -332,6 +411,14 @@ impl DeviceArena for HostArena {
 
     fn live(&self) -> usize {
         self.live
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn peak_bytes(&self) -> usize {
+        self.peak_bytes
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -380,11 +467,22 @@ pub(crate) fn host_arena(arena: &mut dyn DeviceArena) -> &mut HostArena {
         .expect("host-memory backend requires a HostArena (arena from another device?)")
 }
 
-/// Execute one launch against a [`HostArena`] using `kern`'s batched math.
-/// Matrix operands are *moved* out of the arena for in-place kernels and
-/// moved back afterwards — pointer moves, no data copies — which is this
-/// backend family's analog of building device pointer arrays for the
-/// batched cuBLAS calls.
+/// Shared read-only downcast (the factor region of a solve launch).
+pub(crate) fn host_arena_ref(arena: &dyn DeviceArena) -> &HostArena {
+    arena
+        .as_any()
+        .downcast_ref::<HostArena>()
+        .expect("host-memory backend requires a HostArena (arena from another device?)")
+}
+
+/// Execute one *factorization-phase* launch against a [`HostArena`] using
+/// `kern`'s batched math. Matrix operands are *moved* out of the arena for
+/// in-place kernels and moved back afterwards — pointer moves, no data
+/// copies — which is this backend family's analog of building device
+/// pointer arrays for the batched cuBLAS calls. Substitution opcodes have
+/// exactly one executor, [`exec_host_solve_launch`] (the factor/workspace
+/// split) — this function panics on them so the two launch paths can never
+/// silently diverge.
 pub(crate) fn exec_host_launch(kern: &dyn HostKernels, arena: &mut HostArena, launch: &Launch) {
     match launch {
         Launch::Potrf { level, bufs } => {
@@ -449,92 +547,256 @@ pub(crate) fn exec_host_launch(kern: &dyn HostKernels, arena: &mut HostArena, la
                 arena.put_mat(item.dst, merged);
             }
         }
+        other => panic!(
+            "{} is a substitution-phase launch; it executes through launch_solve \
+             (exec_host_solve_launch), never through the factorization launch path",
+            other.opcode()
+        ),
+    }
+}
+
+/// Execute one substitution-phase launch for a host-memory backend: matrix
+/// operands resolve read-only in `factor` (the session's resident factor
+/// region — shared by every concurrently solving thread), vector operands
+/// resolve in the caller's exclusive `ws` region. The split is total: the
+/// substitution programs never write a matrix and never read a vector
+/// outside their own region, which is exactly why no lock is needed.
+pub(crate) fn exec_host_solve_launch(
+    kern: &dyn HostKernels,
+    factor: &HostArena,
+    ws: &mut HostArena,
+    launch: &Launch,
+) {
+    match launch {
         Launch::ApplyBasis { level, trans, items } => {
             let outs = {
-                let us: Vec<&Matrix> = items.iter().map(|&(u, _, _)| arena.get_mat(u)).collect();
+                let us: Vec<&Matrix> = items.iter().map(|&(u, _, _)| factor.get_mat(u)).collect();
                 let xs: Vec<&[f64]> =
-                    items.iter().map(|&(_, s, _)| arena.get_vec(s).as_slice()).collect();
+                    items.iter().map(|&(_, s, _)| ws.get_vec(s).as_slice()).collect();
                 kern.apply_basis(*level, &us, *trans, &xs)
             };
             for (&(_, _, d), o) in items.iter().zip(outs) {
-                arena.put_vec(d, o);
+                ws.put_vec(d, o);
             }
         }
         Launch::TrsvFwd { level, items } => {
-            let mut xs: Vec<Vec<f64>> = items.iter().map(|&(_, v)| arena.take_vec(v)).collect();
+            let mut xs: Vec<Vec<f64>> = items.iter().map(|&(_, v)| ws.take_vec(v)).collect();
             {
-                let ls: Vec<&Matrix> = items.iter().map(|&(l, _)| arena.get_mat(l)).collect();
+                let ls: Vec<&Matrix> = items.iter().map(|&(l, _)| factor.get_mat(l)).collect();
                 kern.trsv_fwd(*level, &ls, &mut xs);
             }
             for (&(_, v), xv) in items.iter().zip(xs) {
-                arena.put_vec(v, xv);
+                ws.put_vec(v, xv);
             }
         }
         Launch::TrsvBwd { level, items } => {
-            let mut xs: Vec<Vec<f64>> = items.iter().map(|&(_, v)| arena.take_vec(v)).collect();
+            let mut xs: Vec<Vec<f64>> = items.iter().map(|&(_, v)| ws.take_vec(v)).collect();
             {
-                let ls: Vec<&Matrix> = items.iter().map(|&(l, _)| arena.get_mat(l)).collect();
+                let ls: Vec<&Matrix> = items.iter().map(|&(l, _)| factor.get_mat(l)).collect();
                 kern.trsv_bwd(*level, &ls, &mut xs);
             }
             for (&(_, v), xv) in items.iter().zip(xs) {
-                arena.put_vec(v, xv);
+                ws.put_vec(v, xv);
             }
         }
         Launch::GemvAcc { level, trans, alpha, items } => {
-            let mut ys: Vec<Vec<f64>> =
-                items.iter().map(|&(_, _, y)| arena.take_vec(y)).collect();
+            let mut ys: Vec<Vec<f64>> = items.iter().map(|&(_, _, y)| ws.take_vec(y)).collect();
             {
-                let mats: Vec<&Matrix> = items.iter().map(|&(a, _, _)| arena.get_mat(a)).collect();
+                let mats: Vec<&Matrix> =
+                    items.iter().map(|&(a, _, _)| factor.get_mat(a)).collect();
                 let xs: Vec<&[f64]> =
-                    items.iter().map(|&(_, x, _)| arena.get_vec(x).as_slice()).collect();
+                    items.iter().map(|&(_, x, _)| ws.get_vec(x).as_slice()).collect();
                 kern.gemv_acc(*level, *alpha, &mats, *trans, &xs, &mut ys);
             }
             for (&(_, _, y), yv) in items.iter().zip(ys) {
-                arena.put_vec(y, yv);
+                ws.put_vec(y, yv);
             }
         }
         Launch::Split { items } => {
             for &(src, at, lo, hi) in items.iter() {
                 let (a, b) = {
-                    let s = arena.get_vec(src);
+                    let s = ws.get_vec(src);
                     (s[..at].to_vec(), s[at..].to_vec())
                 };
-                arena.put_vec(lo, a);
-                arena.put_vec(hi, b);
+                ws.put_vec(lo, a);
+                ws.put_vec(hi, b);
             }
         }
         Launch::Concat { items } => {
             for &(dst, a, b) in items.iter() {
-                let mut v = arena.get_vec(a).clone();
-                v.extend_from_slice(arena.get_vec(b));
-                arena.put_vec(dst, v);
+                let mut v = ws.get_vec(a).clone();
+                v.extend_from_slice(ws.get_vec(b));
+                ws.put_vec(dst, v);
             }
         }
         Launch::CopyBuf { items } => {
             for &(dst, src) in items.iter() {
-                let v = arena.get_vec(src).clone();
-                arena.put_vec(dst, v);
+                let v = ws.get_vec(src).clone();
+                ws.put_vec(dst, v);
             }
         }
         Launch::AddVec { items } => {
             for &(dst, a, b) in items.iter() {
-                let v: Vec<f64> = arena
+                let v: Vec<f64> = ws
                     .get_vec(a)
                     .iter()
-                    .zip(arena.get_vec(b))
+                    .zip(ws.get_vec(b))
                     .map(|(&p, &q)| p + q)
                     .collect();
-                arena.put_vec(dst, v);
+                ws.put_vec(dst, v);
             }
         }
         Launch::RootSolve { l, x } => {
-            let mut xv = arena.take_vec(*x);
+            let mut xv = ws.take_vec(*x);
             {
-                let lm = arena.get_mat(*l);
+                let lm = factor.get_mat(*l);
                 flops::add(2 * (lm.rows() * lm.rows()) as u64);
                 chol::potrs(lm, &mut xv);
             }
-            arena.put_vec(*x, xv);
+            ws.put_vec(*x, xv);
+        }
+        other => panic!(
+            "{} is a factorization-phase launch; launch_solve only executes substitution opcodes",
+            other.opcode()
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pooled per-solve vector regions.
+// ---------------------------------------------------------------------
+
+/// One solve call's private vector region, carved above the resident
+/// factor region in the buffer-id space: every program id at or above
+/// [`SolveProgram::vec_base`](crate::plan::SolveProgram::vec_base) resolves
+/// in this region's backing slots, while matrix ids below it resolve in
+/// the shared read-only factor region. Distinct regions back disjoint
+/// storage, so concurrent solves never observe each other — the trait-
+/// object analog of carving per-call allocations at distinct offsets above
+/// the factor in one device heap.
+///
+/// Regions come from a [`WorkspacePool`] in session use (so a solve
+/// re-leases warm storage instead of allocating), or from
+/// [`VecRegion::new`] for standalone one-shot solves.
+pub struct VecRegion {
+    arena: Box<dyn DeviceArena>,
+    index: usize,
+}
+
+impl VecRegion {
+    /// Carve a fresh region on `device`. `index` identifies the region
+    /// (pool slot for pooled regions, 0 for standalone ones).
+    pub fn new(device: &dyn Device, index: usize) -> VecRegion {
+        VecRegion { arena: device.new_arena(0), index }
+    }
+
+    /// This region's slot index in its pool (diagnostics).
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Mutable access to the backing slots (vector uploads/allocs and the
+    /// workspace side of [`Device::launch_solve`]).
+    pub fn arena(&mut self) -> &mut dyn DeviceArena {
+        self.arena.as_mut()
+    }
+
+    /// Shared access to the backing slots (downloads).
+    pub fn arena_ref(&self) -> &dyn DeviceArena {
+        self.arena.as_ref()
+    }
+
+    /// Release every slot at or above `from` — tolerant of half-moved
+    /// slots after a mid-launch panic (built on
+    /// [`DeviceArena::free_region`]). The region itself stays usable and
+    /// returns to its pool, so a panicking launch can never shrink pool
+    /// capacity.
+    pub fn reset(&mut self, from: BufferId) {
+        self.arena.free_region(from);
+    }
+
+    /// Live vector buffers in this region (0 between solves — the balance
+    /// invariant the guard tests assert).
+    pub fn live(&self) -> usize {
+        self.arena.live()
+    }
+}
+
+/// A pool of [`VecRegion`]s shared by every solve entry point of one
+/// session: concurrent callers lease distinct regions and solve
+/// simultaneously against the session's shared factor region; sequential
+/// callers keep re-leasing the same warm region. The pool grows on demand
+/// (one region per concurrently in-flight solve) and never shrinks —
+/// a leased region always comes back, even when the solve panics
+/// ([`Workspace`] returns it on drop).
+#[derive(Default)]
+pub struct WorkspacePool {
+    idle: std::sync::Mutex<Vec<VecRegion>>,
+    created: std::sync::atomic::AtomicUsize,
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Lease a region: pops an idle one, or carves a new region on
+    /// `device` when every existing region is in flight.
+    pub fn acquire(&self, device: &dyn Device) -> Workspace<'_> {
+        // Drop the pool lock before carving: a cold-start burst of N
+        // concurrent solves must create its N regions in parallel, not
+        // serialize arena construction behind the idle-list mutex.
+        let popped = self.idle.lock().unwrap().pop();
+        let region = popped.unwrap_or_else(|| {
+            let index = self.created.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            VecRegion::new(device, index)
+        });
+        Workspace { region: Some(region), pool: self }
+    }
+
+    /// Regions currently idle in the pool (equals
+    /// [`created`](WorkspacePool::created) when no solve is in flight —
+    /// the no-leaked-regions invariant).
+    pub fn idle(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    /// Total regions ever carved (the high-water mark of solve
+    /// concurrency this pool has served).
+    pub fn created(&self) -> usize {
+        self.created.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn release(&self, mut region: VecRegion) {
+        if region.live() != 0 {
+            // A panic before the executor's own region reset (e.g. during
+            // vector allocation) can leave slots live; clear them so the
+            // region re-enters the pool empty.
+            region.reset(BufferId(0));
+        }
+        self.idle.lock().unwrap().push(region);
+    }
+}
+
+/// RAII lease of a [`VecRegion`]: returns the region to its pool on drop —
+/// including drops during unwinding, so a panicking solve can't shrink the
+/// pool.
+pub struct Workspace<'p> {
+    region: Option<VecRegion>,
+    pool: &'p WorkspacePool,
+}
+
+impl Workspace<'_> {
+    /// The leased region.
+    pub fn region(&mut self) -> &mut VecRegion {
+        self.region.as_mut().expect("workspace region already returned")
+    }
+}
+
+impl Drop for Workspace<'_> {
+    fn drop(&mut self) {
+        if let Some(region) = self.region.take() {
+            self.pool.release(region);
         }
     }
 }
@@ -545,7 +807,9 @@ pub(crate) fn exec_host_launch(kern: &dyn HostKernels, arena: &mut HostArena, la
 
 /// Adapts any [`Device`] to the deprecated slice-based
 /// [`BatchExec`](crate::batch::BatchExec) trait by round-tripping each call
-/// through a scratch arena (upload → launch → fence → download). Keeps
+/// through scratch arenas (upload → launch → fence → download; substitution
+/// calls stage matrices and vectors in separate arenas to satisfy the
+/// [`Device::launch_solve`] factor/workspace split). Keeps
 /// pre-redesign call sites (kernel micro-benches, research scripts)
 /// compiling until they migrate to [`Device`] directly — at the cost of
 /// exactly the per-call host marshalling the redesign removed from the hot
@@ -674,51 +938,61 @@ impl super::BatchExec for LegacyBatchExec<'_> {
         assert_eq!(a.len(), x.len());
         assert_eq!(a.len(), y.len());
         let n = a.len();
-        let mut arena = self.device.new_arena(3 * n);
+        // Substitution opcode: matrices stage in a (read-only) factor
+        // arena, vectors in a workspace arena — the launch_solve contract.
+        let mut mats = self.device.new_arena(n);
+        let mut vecs = self.device.new_arena(2 * n);
         let a_ids = Self::ids(0, n);
-        let x_ids = Self::ids(n, n);
-        let y_ids = Self::ids(2 * n, n);
+        let x_ids = Self::ids(0, n);
+        let y_ids = Self::ids(n, n);
         for (&id, m) in a_ids.iter().zip(a) {
-            arena.upload(id, m);
+            mats.upload(id, m);
         }
         for (&id, xv) in x_ids.iter().zip(x) {
-            arena.upload_vec(id, xv);
+            vecs.upload_vec(id, xv);
         }
         for (&id, yv) in y_ids.iter().zip(y.iter()) {
-            arena.upload_vec(id, yv);
+            vecs.upload_vec(id, yv);
         }
         let items: Vec<(BufferId, BufferId, BufferId)> = (0..n)
             .map(|t| (a_ids[t], x_ids[t], y_ids[t]))
             .collect();
-        self.device
-            .launch(arena.as_mut(), &Launch::GemvAcc { level, trans, alpha, items: &items });
+        self.device.launch_solve(
+            mats.as_ref(),
+            vecs.as_mut(),
+            &Launch::GemvAcc { level, trans, alpha, items: &items },
+        );
         self.device.fence();
         for (&id, yv) in y_ids.iter().zip(y.iter_mut()) {
-            *yv = arena.download_vec(id);
+            *yv = vecs.download_vec(id);
         }
     }
 
     fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
         assert_eq!(u.len(), x.len());
         let n = u.len();
-        let mut arena = self.device.new_arena(3 * n);
+        let mut mats = self.device.new_arena(n);
+        let mut vecs = self.device.new_arena(2 * n);
         let u_ids = Self::ids(0, n);
-        let x_ids = Self::ids(n, n);
-        let d_ids = Self::ids(2 * n, n);
+        let x_ids = Self::ids(0, n);
+        let d_ids = Self::ids(n, n);
         for (&id, m) in u_ids.iter().zip(u) {
-            arena.upload(id, m);
+            mats.upload(id, m);
         }
         for (&id, xv) in x_ids.iter().zip(x) {
-            arena.upload_vec(id, xv);
+            vecs.upload_vec(id, xv);
         }
         for (&id, m) in d_ids.iter().zip(u) {
-            arena.alloc_vec(id, if trans { m.cols() } else { m.rows() });
+            vecs.alloc_vec(id, if trans { m.cols() } else { m.rows() });
         }
         let items: Vec<BasisItem> = (0..n).map(|t| (u_ids[t], x_ids[t], d_ids[t])).collect();
-        self.device
-            .launch(arena.as_mut(), &Launch::ApplyBasis { level, trans, items: &items });
+        self.device.launch_solve(
+            mats.as_ref(),
+            vecs.as_mut(),
+            &Launch::ApplyBasis { level, trans, items: &items },
+        );
         self.device.fence();
-        d_ids.iter().map(|&id| arena.download_vec(id)).collect()
+        d_ids.iter().map(|&id| vecs.download_vec(id)).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -730,14 +1004,15 @@ impl LegacyBatchExec<'_> {
     fn trsv_impl(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>], bwd: bool) {
         assert_eq!(l.len(), x.len());
         let n = l.len();
-        let mut arena = self.device.new_arena(2 * n);
+        let mut mats = self.device.new_arena(n);
+        let mut vecs = self.device.new_arena(n);
         let l_ids = Self::ids(0, n);
-        let x_ids = Self::ids(n, n);
+        let x_ids = Self::ids(0, n);
         for (&id, m) in l_ids.iter().zip(l) {
-            arena.upload(id, m);
+            mats.upload(id, m);
         }
         for (&id, xv) in x_ids.iter().zip(x.iter()) {
-            arena.upload_vec(id, xv);
+            vecs.upload_vec(id, xv);
         }
         let items: Vec<(BufferId, BufferId)> =
             l_ids.iter().zip(&x_ids).map(|(&l, &x)| (l, x)).collect();
@@ -746,10 +1021,10 @@ impl LegacyBatchExec<'_> {
         } else {
             Launch::TrsvFwd { level, items: &items }
         };
-        self.device.launch(arena.as_mut(), &launch);
+        self.device.launch_solve(mats.as_ref(), vecs.as_mut(), &launch);
         self.device.fence();
         for (&id, xv) in x_ids.iter().zip(x.iter_mut()) {
-            *xv = arena.download_vec(id);
+            *xv = vecs.download_vec(id);
         }
     }
 }
@@ -813,5 +1088,71 @@ mod tests {
         assert_eq!(l.opcode(), "POTRF");
         let l = Launch::RootSolve { l: BufferId(0), x: BufferId(1) };
         assert_eq!(l.opcode(), "POTRS");
+    }
+
+    #[test]
+    fn device_arena_tracks_bytes_and_peak() {
+        let mut arena = HostArena::with_capacity(4);
+        assert_eq!(arena.bytes(), 0);
+        arena.upload(BufferId(0), &Matrix::eye(4)); // 16 entries
+        arena.upload_vec(BufferId(1), &[1.0, 2.0]); // 2 entries
+        assert_eq!(arena.bytes(), 8 * 18);
+        assert_eq!(arena.peak_bytes(), 8 * 18);
+        // Overwrite with a smaller block shrinks bytes, keeps the peak.
+        arena.alloc(BufferId(0), 2, 2);
+        assert_eq!(arena.bytes(), 8 * 6);
+        assert_eq!(arena.peak_bytes(), 8 * 18);
+        // take/free return their bytes.
+        let _ = arena.take(BufferId(0));
+        arena.free(BufferId(1));
+        assert_eq!(arena.bytes(), 0);
+        assert_eq!(arena.peak_bytes(), 8 * 18);
+        // Region free subtracts too.
+        arena.alloc_vec(BufferId(7), 5);
+        arena.free_region(BufferId(0));
+        assert_eq!(arena.bytes(), 0);
+        assert_eq!(arena.live(), 0);
+    }
+
+    #[test]
+    fn workspace_pool_leases_and_recycles_regions() {
+        // SerialBackend lives in solver::backend; use a tiny local device
+        // to keep this test self-contained.
+        struct Dev;
+        impl Device for Dev {
+            fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena> {
+                Box::new(HostArena::with_capacity(capacity))
+            }
+            fn launch(&self, _arena: &mut dyn DeviceArena, _launch: &Launch<'_>) {
+                unreachable!("pool test issues no launches")
+            }
+            fn launch_solve(
+                &self,
+                _factor: &dyn DeviceArena,
+                _ws: &mut dyn DeviceArena,
+                _launch: &Launch<'_>,
+            ) {
+                unreachable!("pool test issues no launches")
+            }
+            fn name(&self) -> &'static str {
+                "test"
+            }
+        }
+        let dev = Dev;
+        let pool = WorkspacePool::new();
+        assert_eq!((pool.created(), pool.idle()), (0, 0));
+        {
+            let mut a = pool.acquire(&dev);
+            let mut b = pool.acquire(&dev);
+            assert_eq!(pool.created(), 2, "two concurrent leases carve two regions");
+            assert_ne!(a.region().index(), b.region().index());
+            a.region().arena().alloc_vec(BufferId(10), 3);
+            assert_eq!(a.region().live(), 1);
+            // Dropping a lease with live slots resets the region first.
+        }
+        assert_eq!(pool.idle(), 2, "both regions returned on drop");
+        let mut c = pool.acquire(&dev);
+        assert_eq!(pool.created(), 2, "sequential reuse never grows the pool");
+        assert_eq!(c.region().live(), 0, "recycled regions come back empty");
     }
 }

@@ -29,7 +29,9 @@ pub mod device;
 pub mod native;
 pub mod pad;
 
-pub use device::{Device, DeviceArena, HostArena, Launch, LegacyBatchExec};
+pub use device::{
+    Device, DeviceArena, HostArena, Launch, LegacyBatchExec, VecRegion, Workspace, WorkspacePool,
+};
 
 use crate::linalg::Matrix;
 

@@ -9,7 +9,10 @@
 //! on the thread pool. The kernels are also exposed as inherent methods
 //! for micro-benchmarks.
 
-use super::device::{exec_host_launch, host_arena, Device, DeviceArena, HostArena, HostKernels, Launch};
+use super::device::{
+    exec_host_launch, exec_host_solve_launch, host_arena, host_arena_ref, Device, DeviceArena,
+    HostArena, HostKernels, Launch,
+};
 use crate::linalg::blas::{self, Side, Uplo};
 use crate::linalg::chol;
 use crate::linalg::matrix::{Matrix, Trans};
@@ -261,6 +264,15 @@ impl Device for NativeBackend {
 
     fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>) {
         exec_host_launch(self, host_arena(arena), launch);
+    }
+
+    fn launch_solve(
+        &self,
+        factor: &dyn DeviceArena,
+        ws: &mut dyn DeviceArena,
+        launch: &Launch<'_>,
+    ) {
+        exec_host_solve_launch(self, host_arena_ref(factor), host_arena(ws), launch);
     }
 
     fn name(&self) -> &'static str {

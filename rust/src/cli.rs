@@ -3,6 +3,7 @@
 //! ```text
 //! h2ulv solve     [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
 //!                 [--eta E] [--backend native|pjrt|pjrt:DIR|serial]
+//!                 [--storage mirrored|device-only]
 //!                 [--subst parallel|naive] [--ranks P]
 //! h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L] [--eta E]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
@@ -14,7 +15,7 @@ use crate::construct::H2Config;
 use crate::figures::{self, Scale};
 use crate::geometry::{molecule, Geometry};
 use crate::kernels::KernelFn;
-use crate::solver::{BackendSpec, H2Error, H2SolverBuilder};
+use crate::solver::{BackendSpec, FactorStorage, H2Error, H2SolverBuilder};
 use crate::ulv::SubstMode;
 use crate::util::Rng;
 
@@ -64,6 +65,10 @@ USAGE:
   h2ulv solve   [--n N] [--kernel laplace|yukawa|gaussian|matern32]
                 [--geometry sphere|cube|molecule] [--rank R] [--leaf L]
                 [--eta E] [--backend native|pjrt|pjrt:DIR|serial]
+                [--storage mirrored|device-only]
+                (device-only keeps the factor resident on the device with
+                 no host mirror — half the factor memory; mirrored is the
+                 default)
                 [--subst parallel|naive] [--ranks P] [--seed S]
   h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
                 [--eta E] [--seed S]
@@ -143,15 +148,31 @@ fn cmd_solve(args: &Args) -> i32 {
             }
         },
     };
+    let storage = match args.get("storage") {
+        None => FactorStorage::Mirrored,
+        Some(name) => match FactorStorage::by_name(name) {
+            Some(s) => s,
+            None => {
+                eprintln!("unknown storage mode: {name}\n{USAGE}");
+                return 2;
+            }
+        },
+    };
     println!(
-        "h2ulv solve: N={n} kernel={} geometry={} leaf={} rank={} eta={}",
-        kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
+        "h2ulv solve: N={n} kernel={} geometry={} leaf={} rank={} eta={} storage={}",
+        kernel.name,
+        g.name,
+        cfg.leaf_size,
+        cfg.max_rank,
+        cfg.eta,
+        storage.name()
     );
 
     let builder = H2SolverBuilder::new(g, kernel)
         .config(cfg)
         .backend(spec)
         .subst_mode(subst)
+        .factor_storage(storage)
         .residual_samples(128);
     // PJRT artifacts missing is a soft failure on the CLI: warn + native.
     let solver = match builder.clone().build() {
@@ -209,6 +230,12 @@ fn cmd_solve(args: &Args) -> i32 {
         stats.factor_time,
         stats.factor_flops as f64 / 1e9,
         stats.factor_flops as f64 / stats.factor_time / 1e9
+    );
+    println!(
+        "factor resident: {:.1} MB device arena (peak {:.1} MB) + {:.1} MB host mirror",
+        stats.arena_bytes as f64 / 1e6,
+        stats.arena_peak_bytes as f64 / 1e6,
+        8.0 * stats.mirror_entries as f64 / 1e6
     );
     match solver.solve(&b) {
         Ok(rep) => {

@@ -24,11 +24,12 @@
 //! Modeled wall times combine the per-rank FLOP split with an α-β
 //! (latency/bandwidth) collective cost model ([`CommModel`], [`NCCL_LIKE`]).
 
-use crate::batch::device::{Device, DeviceArena};
+use crate::batch::device::{Device, DeviceArena, VecRegion};
 use crate::batch::native::NativeBackend;
 use crate::h2::H2Matrix;
 use crate::metrics::flops;
-use crate::ulv::{SubstMode, UlvFactor};
+use crate::plan::Plan;
+use crate::ulv::{FactorMeta, SubstMode, UlvFactor};
 use std::collections::HashSet;
 
 /// α-β (latency/bandwidth) communication cost model plus a modeled
@@ -102,8 +103,9 @@ fn owner(i: usize, width: usize, p: usize) -> usize {
 /// is rounded down to a power of two and clamped to one rank per leaf.
 ///
 /// Factorizes `h2` on a fresh native backend (keeping the factor resident
-/// in the device arena for the substitution); callers that already hold a
-/// ULV factor (notably [`crate::solver::H2Solver::solve_dist`]) should use
+/// in the device arena, with no host mirror, for the substitution);
+/// callers that already hold a ULV factor (notably
+/// [`crate::solver::H2Solver::solve_dist`]) should use
 /// [`dist_solve_driver_in`] to avoid the redundant factorization.
 pub fn dist_solve_driver(
     h2: &H2Matrix,
@@ -113,46 +115,54 @@ pub fn dist_solve_driver(
 ) -> DistReport {
     let exec = NativeBackend::new();
     let plan = std::sync::Arc::new(crate::plan::record(h2));
-    let (fac, mut arena) = crate::plan::Executor::new(&exec).factorize_resident(&plan, h2);
-    dist_solve_driver_in(h2, &fac, &exec, arena.as_mut(), ranks, b, mode)
+    let arena = crate::plan::Executor::new(&exec).factorize_device_only(&plan, h2);
+    let meta = plan.factor_meta();
+    let mut ws = VecRegion::new(&exec, 0);
+    dist_solve_driver_in(&plan, &meta, &exec, arena.as_ref(), &mut ws, ranks, b, mode)
 }
 
 /// [`dist_solve_driver`] over an existing ULV factor and backend: only the
 /// substitution runs numerically; factorization cost is *modeled* from the
 /// factor's block shapes. Uploads the factor into a transient device arena;
-/// callers that already hold a resident arena (the session facade) use
-/// [`dist_solve_driver_in`].
+/// callers that already hold a resident factor region (the session facade)
+/// use [`dist_solve_driver_in`].
 pub fn dist_solve_driver_with(
-    h2: &H2Matrix,
     fac: &UlvFactor,
     exec: &dyn Device,
     ranks: usize,
     b: &[f64],
     mode: SubstMode,
 ) -> DistReport {
-    let mut arena = crate::plan::Executor::new(exec).upload_factor(fac);
-    dist_solve_driver_in(h2, fac, exec, arena.as_mut(), ranks, b, mode)
+    let arena = crate::plan::Executor::new(exec).upload_factor(fac);
+    let meta = fac.meta();
+    let mut ws = VecRegion::new(exec, 0);
+    dist_solve_driver_in(&fac.plan, &meta, exec, arena.as_ref(), &mut ws, ranks, b, mode)
 }
 
-/// [`dist_solve_driver_with`] against an arena that already holds the
-/// factor resident — no per-call factor upload.
+/// [`dist_solve_driver_with`] against a factor region that already holds
+/// the factor resident — no per-call factor upload, no host mirror: every
+/// block shape the model needs comes from [`FactorMeta`]. The factor
+/// region is only read and the substitution writes to the caller's
+/// workspace, so concurrent distributed solves on one session coexist
+/// with plain solves.
 pub fn dist_solve_driver_in(
-    h2: &H2Matrix,
-    fac: &UlvFactor,
+    plan: &Plan,
+    meta: &FactorMeta,
     exec: &dyn Device,
-    arena: &mut dyn DeviceArena,
+    factor: &dyn DeviceArena,
+    ws: &mut VecRegion,
     ranks: usize,
     b: &[f64],
     mode: SubstMode,
 ) -> DistReport {
-    let leaf_width = 1usize << h2.tree.depth;
+    let leaf_width = 1usize << meta.depth;
     let mut p = 1usize;
     while p * 2 <= ranks.max(1) && p * 2 <= leaf_width {
         p *= 2;
     }
 
     // The numerical pipeline: identical math for every rank count.
-    let x = crate::plan::Executor::new(exec).solve_in(&fac.plan, arena, b, mode);
+    let x = crate::plan::Executor::new(exec).solve_in(plan, factor, ws, b, mode);
 
     let mut rank_flops = vec![(0u64, 0u64); p];
     let mut factor_bytes = 0u64;
@@ -160,36 +170,40 @@ pub fn dist_solve_driver_in(
     let mut subst_bytes = 0u64;
     let mut subst_ops = 0u64;
 
-    for lf in &fac.levels {
-        let width = 1usize << lf.level;
+    for lm in &meta.levels {
+        let width = lm.width();
         let distributed = width >= p;
 
-        // Per-box compute estimates from the factor's actual block shapes.
+        // Per-box compute estimates from the factor's block shapes (all in
+        // the meta — the values themselves are never touched).
         let mut box_factor = vec![0u64; width];
         let mut box_subst = vec![0u64; width];
         for i in 0..width {
-            let nb = &lf.bases[i];
-            let ndof = nb.u.rows();
-            box_factor[i] += flops::potrf_flops(nb.nred());
-            if nb.rank > 0 && nb.nred() > 0 {
-                box_factor[i] += flops::gemm_flops(nb.rank, nb.rank, nb.nred());
+            let (ndof, rank, nred) = (lm.ndof(i), lm.rank(i), lm.nred(i));
+            box_factor[i] += flops::potrf_flops(nred);
+            if rank > 0 && nred > 0 {
+                box_factor[i] += flops::gemm_flops(rank, rank, nred);
             }
             // Basis applied twice (forward + backward) plus the two
             // diagonal TRSVs.
-            box_subst[i] += 4 * (ndof * ndof) as u64 + 4 * (nb.nred() * nb.nred()) as u64;
+            box_subst[i] += 4 * (ndof * ndof) as u64 + 4 * (nred * nred) as u64;
         }
-        for &(j, i) in &lf.near {
-            let ni = lf.bases[i].u.rows();
-            let nj = lf.bases[j].u.rows();
+        let lr_keys: HashSet<(usize, usize)> = lm.lr.iter().copied().collect();
+        let ls_keys: HashSet<(usize, usize)> = lm.ls.iter().copied().collect();
+        for &(j, i) in &lm.near {
+            let ni = lm.ndof(i);
+            let nj = lm.ndof(j);
             // Sparsify F_ji = U_jᵀ A_ji U_i, charged to the column owner.
             box_factor[i] += flops::gemm_flops(nj, ni, nj) + flops::gemm_flops(nj, ni, ni);
-            if let Some(m) = lf.lr.get(&(j, i)) {
-                box_factor[i] += flops::trsm_flops(lf.bases[i].nred(), m.rows());
-                box_subst[i] += 4 * (m.rows() * m.cols()) as u64;
+            if lr_keys.contains(&(j, i)) {
+                // L(r)_ji panel: (nred_j, nred_i).
+                box_factor[i] += flops::trsm_flops(lm.nred(i), lm.nred(j));
+                box_subst[i] += 4 * (lm.nred(j) * lm.nred(i)) as u64;
             }
-            if let Some(m) = lf.ls.get(&(j, i)) {
-                box_factor[i] += flops::trsm_flops(lf.bases[i].nred(), m.rows());
-                box_subst[i] += 4 * (m.rows() * m.cols()) as u64;
+            if ls_keys.contains(&(j, i)) {
+                // L(s)_ji panel: (rank_j, nred_i).
+                box_factor[i] += flops::trsm_flops(lm.nred(i), lm.rank(j));
+                box_subst[i] += 4 * (lm.rank(j) * lm.nred(i)) as u64;
             }
         }
 
@@ -202,11 +216,11 @@ pub fn dist_solve_driver_in(
             // Substitution-only neighbor exchange: near pairs straddling a
             // rank boundary ship the source box's solved segments.
             let mut links: HashSet<(usize, usize)> = HashSet::new();
-            for &(j, i) in &lf.near {
+            for &(j, i) in &lm.near {
                 let oi = owner(i, width, p);
                 let oj = owner(j, width, p);
                 if oi != oj {
-                    subst_bytes += 8 * (lf.bases[i].nred() + lf.bases[i].rank) as u64;
+                    subst_bytes += 8 * lm.ndof(i) as u64;
                     links.insert((oi.min(oj), oi.max(oj)));
                 }
             }
@@ -222,11 +236,11 @@ pub fn dist_solve_driver_in(
                 r.0 += bf;
                 r.1 += bs;
             }
-            for &(j, i) in &lf.near {
-                factor_bytes += 8 * (lf.bases[j].u.rows() * lf.bases[i].u.rows()) as u64;
+            for &(j, i) in &lm.near {
+                factor_bytes += 8 * (lm.ndof(j) * lm.ndof(i)) as u64;
             }
             factor_ops += 1;
-            let seg: usize = lf.bases.iter().map(|nb| nb.u.rows()).sum();
+            let seg: usize = (0..width).map(|i| lm.ndof(i)).sum();
             subst_bytes += 8 * seg as u64;
             subst_ops += 1;
         }
@@ -234,7 +248,7 @@ pub fn dist_solve_driver_in(
 
     // Root factorization + solve: redundant on every rank (Algorithm 2
     // line 22); the merged root block is allgathered first when P > 1.
-    let root_n = fac.root_l.rows();
+    let root_n = meta.root_n;
     for r in rank_flops.iter_mut() {
         r.0 += flops::potrf_flops(root_n);
         r.1 += 2 * (root_n * root_n) as u64;

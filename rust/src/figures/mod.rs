@@ -8,13 +8,13 @@
 use crate::baselines::blr::{BlrConfig, BlrMatrix};
 use crate::batch::native::NativeBackend;
 use crate::construct::H2Config;
-use crate::dist::{dist_solve_driver, dist_solve_driver_in, CommModel, NCCL_LIKE};
+use crate::dist::{dist_solve_driver, CommModel, NCCL_LIKE};
 use crate::geometry::{molecule, Geometry};
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
 use crate::linalg::norms::rel_err_vec;
 use crate::metrics::{flops, timer::timed};
-use crate::solver::{BackendSpec, H2SolverBuilder};
+use crate::solver::{BackendSpec, FactorStorage, H2SolverBuilder};
 use crate::tree::{leaf_near_count, ClusterTree};
 use crate::ulv::{factorize, SubstMode};
 use crate::util::Rng;
@@ -252,41 +252,34 @@ pub fn fig20(scale: Scale) -> String {
     let copies = n / base.len() + 1;
     let g = base.duplicate_lattice(copies, 6.0).truncated(n);
     let kern = KernelFn::yukawa();
-    let h2 = H2Matrix::construct(&g, &kern, &timing_cfg());
     let mut rng = Rng::new(21);
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let bt = h2.tree.permute_vec(&b);
-    let model: CommModel = NCCL_LIKE;
     let mut out = format!("# Figure 20 (strong scaling): N={n}, P, h2_factor_s(modeled), h2_subst_s\n");
-    // One factorization serves every rank count (times are modeled), and
-    // the factor stays resident in its arena for every substitution replay.
-    let exec = NativeBackend::new();
-    let plan = std::sync::Arc::new(crate::plan::record(&h2));
-    let (fac, mut arena) = crate::plan::Executor::new(&exec).factorize_resident(&plan, &h2);
-    for &p in &ps {
-        let report = dist_solve_driver_in(
-            &h2,
-            &fac,
-            &exec,
-            arena.as_mut(),
-            p,
-            &bt,
-            SubstMode::Parallel,
-        );
-        out.push_str(&format!(
-            "{p}, {:.4}, {:.4}\n",
-            report.factor_time(&model),
-            report.subst_time(&model)
-        ));
-    }
-    // BLR comparator: measured at a feasible size, extrapolated O(N²)
-    // (LORAPO could not reach the paper's sizes either — fig 20 shows it
-    // only at small N).
+    // BLR comparator geometry (carved before `g` moves into the builder):
+    // measured at a feasible size, extrapolated O(N²) below.
     let blr_n = match scale {
         Scale::Quick => 2048,
         Scale::Full => 4096,
     };
-    let tree = ClusterTree::build(&g.truncated(blr_n), 128);
+    let g_blr = g.truncated(blr_n);
+    // One DeviceOnly session serves every rank count: the factor stays
+    // resident with no host mirror at all (the distributed model reads
+    // every block shape from FactorMeta), and each call leases a pooled
+    // workspace — times are modeled with the NCCL-like constants.
+    let solver = H2SolverBuilder::new(g, kern.clone())
+        .config(timing_cfg())
+        .factor_storage(FactorStorage::DeviceOnly)
+        .residual_samples(0)
+        .build()
+        .expect("figure problem is well-formed");
+    debug_assert!(solver.factor().is_none(), "device-only session must not mirror");
+    for &p in &ps {
+        let report = solver.solve_dist(&b, p).expect("rhs length matches");
+        out.push_str(&format!("{p}, {:.4}, {:.4}\n", report.factor_time, report.subst_time));
+    }
+    // (LORAPO could not reach the paper's sizes either — fig 20 shows it
+    // only at small N.)
+    let tree = ClusterTree::build(&g_blr, 128);
     let (mut blr, t_build) = timed(|| BlrMatrix::build(&tree.points, &kern, &BlrConfig::default()));
     let (_, t_blr) = timed(|| blr.factorize());
     let scale_up = (n as f64 / blr_n as f64).powi(2);

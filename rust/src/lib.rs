@@ -57,8 +57,8 @@ pub mod prelude {
     pub use crate::kernels::KernelFn;
     pub use crate::linalg::Matrix;
     pub use crate::solver::{
-        BackendSpec, BuildStats, DistSolveReport, H2Error, H2Solver, H2SolverBuilder,
-        SolveOptions, SolveReport,
+        BackendSpec, BuildStats, DistSolveReport, FactorBlock, FactorStorage, H2Error, H2Solver,
+        H2SolverBuilder, SolveOptions, SolveReport,
     };
     pub use crate::ulv::SubstMode;
 }

@@ -36,8 +36,14 @@ pub enum Phase {
 }
 
 // Global (not thread-local): batched kernels run on pool workers that must
-// inherit the coordinator's phase attribution. Phases never overlap in time,
-// so a relaxed global is correct for our accounting.
+// inherit the coordinator's phase attribution. Within one single-threaded
+// harness phases never overlap in time, so a relaxed global is correct for
+// that (deprecated) accounting. Concurrent solves on one session — or
+// concurrent sessions — DO overlap: their set/restore pairs interleave, so
+// the global phase *split* is unreliable exactly where the global *totals*
+// already were. This is accepted: the globals exist only for the
+// single-session figure scripts; session-accurate numbers come from
+// [`FlopScope`], which has no phase global at all.
 static CURRENT_PHASE: AtomicU64 = AtomicU64::new(0);
 
 fn phase_to_u64(p: Phase) -> u64 {

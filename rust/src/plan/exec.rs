@@ -19,10 +19,18 @@
 //! reference them by the same `BufferId`s, so a session can replay solves
 //! against the resident arena without re-uploading the factor
 //! ([`Executor::solve_in`]). [`Executor::upload_factor`] rebuilds such an
-//! arena from a host-side [`UlvFactor`] for standalone solves.
+//! arena from a host-side [`UlvFactor`] for standalone solves;
+//! [`Executor::factorize_device_only`] skips the host mirror entirely
+//! (`FactorStorage::DeviceOnly`).
+//!
+//! Substitution replays are **concurrent**: [`Executor::solve_in`] takes
+//! the factor arena by shared reference (solve programs only *read* the
+//! factor) and a private [`VecRegion`] workspace for its vector buffers,
+//! so any number of threads can replay solves against one resident factor
+//! simultaneously — no lock is held across launches.
 
 use super::*;
-use crate::batch::device::{Device, DeviceArena, Launch};
+use crate::batch::device::{Device, DeviceArena, Launch, VecRegion};
 use crate::h2::H2Matrix;
 use crate::linalg::Matrix;
 use crate::metrics::flops::{self, FlopScope, Phase};
@@ -35,6 +43,16 @@ use std::sync::Arc;
 pub struct Executor<'a> {
     device: &'a dyn Device,
     scope: Option<&'a FlopScope>,
+}
+
+/// What happens to the factor when a factorization replay finishes.
+enum Mirror {
+    /// Move the factor out of the (about-to-drop) arena.
+    Move,
+    /// Download a host mirror, keeping the arena resident.
+    Download,
+    /// Keep only the resident arena (`FactorStorage::DeviceOnly`).
+    Skip,
 }
 
 impl<'a> Executor<'a> {
@@ -62,7 +80,7 @@ impl<'a> Executor<'a> {
     /// `h2` may be any matrix structurally identical to the one the plan
     /// was recorded from ([`Plan::compatible`]).
     pub fn factorize(&self, plan: &Arc<Plan>, h2: &H2Matrix) -> UlvFactor {
-        self.factorize_inner(plan, h2, false).0
+        self.factorize_inner(plan, h2, Mirror::Move).0.expect("Mirror::Move builds a factor")
     }
 
     /// [`factorize`](Executor::factorize), additionally returning the
@@ -75,15 +93,26 @@ impl<'a> Executor<'a> {
         plan: &Arc<Plan>,
         h2: &H2Matrix,
     ) -> (UlvFactor, Box<dyn DeviceArena>) {
-        self.factorize_inner(plan, h2, true)
+        let (factor, arena) = self.factorize_inner(plan, h2, Mirror::Download);
+        (factor.expect("Mirror::Download builds a factor"), arena)
+    }
+
+    /// Factorize keeping the factor device-resident **without**
+    /// materializing a host [`UlvFactor`] mirror — the
+    /// `FactorStorage::DeviceOnly` path: factor memory exists exactly once
+    /// (in the arena). Shape queries go through
+    /// [`Plan::factor_meta`]; individual blocks can still be downloaded on
+    /// demand straight from the returned arena.
+    pub fn factorize_device_only(&self, plan: &Arc<Plan>, h2: &H2Matrix) -> Box<dyn DeviceArena> {
+        self.factorize_inner(plan, h2, Mirror::Skip).1
     }
 
     fn factorize_inner(
         &self,
         plan: &Arc<Plan>,
         h2: &H2Matrix,
-        resident: bool,
-    ) -> (UlvFactor, Box<dyn DeviceArena>) {
+        mirror: Mirror,
+    ) -> (Option<UlvFactor>, Box<dyn DeviceArena>) {
         assert!(plan.compatible(h2), "plan recorded for a different H2 structure");
         let prev_phase = flops::set_phase(Phase::Factor);
         let prog = &plan.factor;
@@ -103,13 +132,14 @@ impl<'a> Executor<'a> {
 
         let factor = {
             let a = arena.as_mut();
-            if resident {
+            match mirror {
                 // Keep the arena intact: the factor is a downloaded mirror.
-                self.assemble_factor(plan, h2, &mut |b| a.download(b))
-            } else {
+                Mirror::Download => Some(self.assemble_factor(plan, h2, &mut |b| a.download(b))),
                 // The arena is about to be dropped: move the factor out
                 // (pointer moves, no data copies, on host-memory arenas).
-                self.assemble_factor(plan, h2, &mut |b| a.take(b))
+                Mirror::Move => Some(self.assemble_factor(plan, h2, &mut |b| a.take(b))),
+                // Device-only: the arena is the factor.
+                Mirror::Skip => None,
             }
         };
         flops::set_phase(prev_phase);
@@ -221,8 +251,9 @@ impl<'a> Executor<'a> {
     }
 
     /// Replay the substitution program for `mode` against a tree-ordered
-    /// right-hand side, uploading the factor into a transient arena first;
-    /// returns the tree-ordered solution.
+    /// right-hand side, uploading the factor into a transient arena (and
+    /// carving a one-shot workspace) first; returns the tree-ordered
+    /// solution.
     pub fn solve(
         &self,
         plan: &Plan,
@@ -230,20 +261,30 @@ impl<'a> Executor<'a> {
         b: &[f64],
         mode: SubstMode,
     ) -> Vec<f64> {
-        let mut arena = self.upload_factor(factor);
-        self.solve_in(plan, arena.as_mut(), b, mode)
+        let arena = self.upload_factor(factor);
+        let mut ws = VecRegion::new(self.device, 0);
+        self.solve_in(plan, arena.as_ref(), &mut ws, b, mode)
     }
 
-    /// Replay the substitution program for `mode` against an arena that
-    /// already holds the factor resident (from
-    /// [`Executor::factorize_resident`] or [`Executor::upload_factor`]).
-    /// Vector buffers are allocated above the factorization arena and
-    /// freed before returning, so the arena's live-buffer count is
-    /// unchanged — the balance invariant the device tests assert.
+    /// Replay the substitution program for `mode` against a factor region
+    /// that already holds the factor resident (from
+    /// [`Executor::factorize_resident`],
+    /// [`Executor::factorize_device_only`], or
+    /// [`Executor::upload_factor`]).
+    ///
+    /// The factor region is taken by **shared** reference — substitution
+    /// programs only read it — and all vector traffic goes to the caller's
+    /// private `ws` region, so concurrent callers with distinct workspaces
+    /// replay simultaneously with no lock held across launches. The
+    /// workspace is emptied before returning (its live count drops back to
+    /// 0 — the balance invariant the device tests assert), even when a
+    /// launch panics: the region is *reset*, not dropped, so it returns to
+    /// its pool at full capacity.
     pub fn solve_in(
         &self,
         plan: &Plan,
-        arena: &mut dyn DeviceArena,
+        factor: &dyn DeviceArena,
+        ws: &mut VecRegion,
         b: &[f64],
         mode: SubstMode,
     ) -> Vec<f64> {
@@ -251,20 +292,20 @@ impl<'a> Executor<'a> {
         let prev_phase = flops::set_phase(Phase::Substitute);
         let prog = plan.solve_program(mode);
         let base = prog.vec_base;
-        for (k, &len) in prog.vec_lens.iter().enumerate() {
-            arena.alloc_vec(BufferId(base + k as u32), len);
-        }
         let mut x = vec![0.0; plan.n];
 
-        // Run the program under an unwind guard: a panicking launch (e.g.
-        // a non-SPD diagonal) must not leak the vector region into a
-        // session's long-lived resident arena — the live-buffer balance
-        // below `vec_base` is an invariant the facade relies on.
+        // Allocate and run under one unwind guard: a panic anywhere (a
+        // non-SPD diagonal mid-launch, an allocation failure) must leave
+        // the workspace empty and intact, never shrink its pool, and never
+        // touch the shared factor region.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.run_solve_steps(prog, arena, b, &mut x)
+            for (k, &len) in prog.vec_lens.iter().enumerate() {
+                ws.arena().alloc_vec(BufferId(base + k as u32), len);
+            }
+            self.run_solve_steps(prog, factor, ws, b, &mut x)
         }));
-        // Tolerant region free: mid-launch panics leave half-moved slots.
-        arena.free_region(BufferId(base));
+        // Tolerant region reset: mid-launch panics leave half-moved slots.
+        ws.reset(BufferId(base));
         flops::set_phase(prev_phase);
         match run {
             Ok(()) => {}
@@ -281,7 +322,8 @@ impl<'a> Executor<'a> {
     fn run_solve_steps(
         &self,
         prog: &SolveProgram,
-        arena: &mut dyn DeviceArena,
+        factor: &dyn DeviceArena,
+        ws: &mut VecRegion,
         b: &[f64],
         x: &mut [f64],
     ) {
@@ -289,47 +331,61 @@ impl<'a> Executor<'a> {
             match step {
                 SolveInstr::LoadRhs { items } => {
                     for &(s, e, v) in items {
-                        arena.upload_vec(v, &b[s..e]);
+                        ws.arena().upload_vec(v, &b[s..e]);
                     }
                 }
                 SolveInstr::StoreSol { items } => {
                     self.device.fence();
                     for &(s, e, v) in items {
-                        x[s..e].copy_from_slice(&arena.download_vec(v));
+                        x[s..e].copy_from_slice(&ws.arena_ref().download_vec(v));
                     }
                 }
                 SolveInstr::ApplyBasis { level, trans, items } => {
-                    self.device.launch(
-                        arena,
+                    self.device.launch_solve(
+                        factor,
+                        ws.arena(),
                         &Launch::ApplyBasis { level: *level, trans: *trans, items },
                     );
                 }
                 SolveInstr::Split { items } => {
-                    self.device.launch(arena, &Launch::Split { items });
+                    self.device.launch_solve(factor, ws.arena(), &Launch::Split { items });
                 }
                 SolveInstr::Concat { items } => {
-                    self.device.launch(arena, &Launch::Concat { items });
+                    self.device.launch_solve(factor, ws.arena(), &Launch::Concat { items });
                 }
                 SolveInstr::Copy { items } => {
-                    self.device.launch(arena, &Launch::CopyBuf { items });
+                    self.device.launch_solve(factor, ws.arena(), &Launch::CopyBuf { items });
                 }
                 SolveInstr::TrsvFwd { level, items } => {
-                    self.device.launch(arena, &Launch::TrsvFwd { level: *level, items });
+                    self.device.launch_solve(
+                        factor,
+                        ws.arena(),
+                        &Launch::TrsvFwd { level: *level, items },
+                    );
                 }
                 SolveInstr::TrsvBwd { level, items } => {
-                    self.device.launch(arena, &Launch::TrsvBwd { level: *level, items });
+                    self.device.launch_solve(
+                        factor,
+                        ws.arena(),
+                        &Launch::TrsvBwd { level: *level, items },
+                    );
                 }
                 SolveInstr::GemvAcc { level, trans, items } => {
-                    self.device.launch(
-                        arena,
+                    self.device.launch_solve(
+                        factor,
+                        ws.arena(),
                         &Launch::GemvAcc { level: *level, trans: *trans, alpha: -1.0, items },
                     );
                 }
                 SolveInstr::Add { items } => {
-                    self.device.launch(arena, &Launch::AddVec { items });
+                    self.device.launch_solve(factor, ws.arena(), &Launch::AddVec { items });
                 }
                 SolveInstr::RootSolve { l, x } => {
-                    self.device.launch(arena, &Launch::RootSolve { l: *l, x: *x });
+                    self.device.launch_solve(
+                        factor,
+                        ws.arena(),
+                        &Launch::RootSolve { l: *l, x: *x },
+                    );
                 }
             }
         }

@@ -584,6 +584,13 @@ impl Plan {
     pub fn naive_recorded(&self) -> bool {
         self.solve_naive.get().is_some()
     }
+
+    /// Shape-only factor description derived from the recorded structure —
+    /// what `FactorStorage::DeviceOnly` sessions (and the distributed
+    /// model) read instead of a host [`crate::ulv::UlvFactor`] mirror.
+    pub fn factor_meta(&self) -> crate::ulv::FactorMeta {
+        self.solve_ctx.factor_meta(self.depth, &self.factor)
+    }
 }
 
 /// FLOPs of a sparsification item `U_iᵀ (n_i × n_j) U_j` — two GEMMs,

@@ -403,6 +403,38 @@ impl<'a> Recorder<'a> {
 // ---------------- Substitution (Algorithm 3 / §3.7) ----------------
 
 impl SolveCtx {
+    /// Build the shape-only factor description from the captured level
+    /// structure (see [`crate::ulv::FactorMeta`]): the recorder's
+    /// `(rank, nred)` tables and panel key sets are exactly the shapes the
+    /// host mirror used to supply, so `FactorStorage::DeviceOnly` sessions
+    /// derive them from the plan instead.
+    pub(crate) fn factor_meta(
+        &self,
+        depth: usize,
+        factor: &FactorProgram,
+    ) -> crate::ulv::FactorMeta {
+        crate::ulv::FactorMeta {
+            levels: self
+                .infos
+                .iter()
+                .map(|info| crate::ulv::LevelMeta {
+                    level: info.level,
+                    boxes: info
+                        .ranks
+                        .iter()
+                        .zip(&info.nreds)
+                        .map(|(&rank, &nred)| (rank + nred, rank))
+                        .collect(),
+                    near: info.near.clone(),
+                    lr: info.lr_keys.clone(),
+                    ls: info.ls_keys.clone(),
+                })
+                .collect(),
+            root_n: factor.root_n,
+            depth,
+        }
+    }
+
     /// Record one substitution program against the factorization program's
     /// own output wiring ([`FactorProgram::outputs`] — the single source of
     /// truth for which buffer holds which factor block). Vector buffers

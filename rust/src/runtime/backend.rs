@@ -16,7 +16,8 @@
 
 use super::manifest::Manifest;
 use crate::batch::device::{
-    exec_host_launch, host_arena, Device, DeviceArena, HostArena, HostKernels, Launch,
+    exec_host_launch, exec_host_solve_launch, host_arena, host_arena_ref, Device, DeviceArena,
+    HostArena, HostKernels, Launch,
 };
 use crate::batch::native::NativeBackend;
 use crate::batch::pad::{buffer_to_batch_f64, refs_to_buffer_f64, vecs_to_buffer_f64};
@@ -48,11 +49,13 @@ pub struct PjrtBackend {
     pub tracer: Option<Tracer>,
 }
 
-// SAFETY: all PJRT interactions go through &self methods that serialize
-// compile-cache mutation behind the Mutex; the coordinator issues batched
-// launches from a single thread (the level loop), and the PJRT CPU client
-// itself is internally synchronized. The raw pointers inside the xla
-// wrappers are never shared across threads concurrently by this type.
+// SAFETY: all PJRT interactions go through &self methods that funnel into
+// `run`, which holds the compile-cache Mutex for the whole
+// compile-and-execute sequence — so even concurrent `launch_solve` callers
+// (the session's multi-threaded solve path) serialize their XLA work, and
+// the PJRT CPU client itself is internally synchronized. The raw pointers
+// inside the xla wrappers are never shared across threads concurrently by
+// this type.
 unsafe impl Sync for PjrtBackend {}
 unsafe impl Send for PjrtBackend {}
 
@@ -514,6 +517,15 @@ impl Device for PjrtBackend {
 
     fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>) {
         exec_host_launch(self, host_arena(arena), launch);
+    }
+
+    fn launch_solve(
+        &self,
+        factor: &dyn DeviceArena,
+        ws: &mut dyn DeviceArena,
+        launch: &Launch<'_>,
+    ) {
+        exec_host_solve_launch(self, host_arena_ref(factor), host_arena(ws), launch);
     }
 
     fn name(&self) -> &'static str {

@@ -8,7 +8,8 @@
 
 use super::H2Error;
 use crate::batch::device::{
-    exec_host_launch, host_arena, Device, DeviceArena, HostArena, HostKernels, Launch,
+    exec_host_launch, exec_host_solve_launch, host_arena, host_arena_ref, Device, DeviceArena,
+    HostArena, HostKernels, Launch,
 };
 use crate::batch::native::NativeBackend;
 use crate::linalg::blas::{self, Side, Uplo};
@@ -239,6 +240,15 @@ impl Device for SerialBackend {
 
     fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>) {
         exec_host_launch(self, host_arena(arena), launch);
+    }
+
+    fn launch_solve(
+        &self,
+        factor: &dyn DeviceArena,
+        ws: &mut dyn DeviceArena,
+        launch: &Launch<'_>,
+    ) {
+        exec_host_solve_launch(self, host_arena_ref(factor), host_arena(ws), launch);
     }
 
     fn name(&self) -> &'static str {

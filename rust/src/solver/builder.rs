@@ -8,6 +8,47 @@ use crate::geometry::Geometry;
 use crate::kernels::KernelFn;
 use crate::ulv::SubstMode;
 
+/// Where the ULV factor lives for the lifetime of a session.
+///
+/// The factor is always device-resident (solves replay against the arena);
+/// the policy decides whether a *second*, host-side copy exists next to
+/// it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FactorStorage {
+    /// Keep a host [`crate::ulv::UlvFactor`] mirror next to the
+    /// device-resident factor (2x factor memory).
+    /// [`H2Solver::factor`](super::H2Solver::factor) returns `Some` and
+    /// host-side research code can read blocks directly. Default.
+    #[default]
+    Mirrored,
+    /// Device-resident only: the host mirror is never materialized, so
+    /// factor memory exists exactly once. Shape queries go through
+    /// [`H2Solver::factor_meta`](super::H2Solver::factor_meta); the rare
+    /// paths that need values download individual blocks with
+    /// [`H2Solver::download_block`](super::H2Solver::download_block).
+    DeviceOnly,
+}
+
+impl FactorStorage {
+    /// Parse a CLI-style mode name: `mirrored` or `device-only`
+    /// (also accepts `device_only`).
+    pub fn by_name(name: &str) -> Option<FactorStorage> {
+        match name {
+            "mirrored" => Some(FactorStorage::Mirrored),
+            "device-only" | "device_only" => Some(FactorStorage::DeviceOnly),
+            _ => None,
+        }
+    }
+
+    /// Human-readable mode name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FactorStorage::Mirrored => "mirrored",
+            FactorStorage::DeviceOnly => "device-only",
+        }
+    }
+}
+
 /// Configures and builds an [`H2Solver`]: geometry + kernel are mandatory
 /// (constructor arguments), everything else has sensible defaults.
 ///
@@ -17,9 +58,11 @@ use crate::ulv::SubstMode;
 /// let solver = H2SolverBuilder::new(Geometry::sphere_surface(128, 7), KernelFn::yukawa())
 ///     .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
 ///     .subst_mode(SubstMode::Parallel)
+///     .factor_storage(FactorStorage::DeviceOnly)
 ///     .residual_samples(64)
 ///     .build()?;
 /// assert_eq!(solver.n(), 128);
+/// assert!(solver.factor().is_none(), "device-only sessions keep no host mirror");
 /// # Ok::<(), h2ulv::solver::H2Error>(())
 /// ```
 #[derive(Clone)]
@@ -30,11 +73,13 @@ pub struct H2SolverBuilder {
     backend: BackendSpec,
     subst: SubstMode,
     residual_samples: usize,
+    storage: FactorStorage,
 }
 
 impl H2SolverBuilder {
     /// Start a builder for the given problem. Defaults: [`H2Config::default`],
-    /// [`BackendSpec::Native`], [`SubstMode::Parallel`], 128 residual samples.
+    /// [`BackendSpec::Native`], [`SubstMode::Parallel`], 128 residual
+    /// samples, [`FactorStorage::Mirrored`].
     pub fn new(geometry: Geometry, kernel: KernelFn) -> H2SolverBuilder {
         H2SolverBuilder {
             geometry,
@@ -43,6 +88,7 @@ impl H2SolverBuilder {
             backend: BackendSpec::Native,
             subst: SubstMode::default(),
             residual_samples: 128,
+            storage: FactorStorage::default(),
         }
     }
 
@@ -72,6 +118,14 @@ impl H2SolverBuilder {
         self
     }
 
+    /// Select where the factor lives (default [`FactorStorage::Mirrored`]);
+    /// [`FactorStorage::DeviceOnly`] halves factor memory by dropping the
+    /// host mirror.
+    pub fn factor_storage(mut self, storage: FactorStorage) -> Self {
+        self.storage = storage;
+        self
+    }
+
     /// Validate the problem, instantiate the backend, construct the H²
     /// matrix, and run the ULV factorization.
     ///
@@ -88,6 +142,7 @@ impl H2SolverBuilder {
             backend,
             self.subst,
             self.residual_samples,
+            self.storage,
         )
     }
 }

@@ -19,6 +19,15 @@
 //!    buffer arena) selected by [`BackendSpec`] at build time; callers
 //!    never see backend types.
 //!
+//! Sessions are **concurrent solve servers**: the resident factor region
+//! is shared read-only and every solve leases a private workspace from
+//! the session's [`crate::batch::device::WorkspacePool`], so N threads
+//! solve simultaneously on one `&H2Solver` with no lock held across
+//! launches (see the "Concurrency model" notes on [`session`]). The
+//! [`FactorStorage`] policy additionally controls whether a host factor
+//! mirror exists at all ([`FactorStorage::DeviceOnly`] halves factor
+//! memory).
+//!
 //! # Error taxonomy
 //!
 //! | Variant | Meaning | Typical cause |
@@ -53,8 +62,10 @@ pub mod builder;
 pub mod session;
 
 pub use backend::BackendSpec;
-pub use builder::H2SolverBuilder;
-pub use session::{BuildStats, DistSolveReport, H2Solver, SolveOptions, SolveReport};
+pub use builder::{FactorStorage, H2SolverBuilder};
+pub use session::{
+    BuildStats, DistSolveReport, FactorBlock, H2Solver, SolveOptions, SolveReport,
+};
 
 use std::fmt;
 

@@ -1,25 +1,47 @@
-//! The [`H2Solver`] session: owns the H² matrix, the ULV factor, the
-//! cached execution [`Plan`], and the execution backend; every solve
-//! handles tree-order permutation internally and reports through
-//! [`SolveReport`].
+//! The [`H2Solver`] session: owns the H² matrix, the cached execution
+//! [`Plan`], the device-resident factor region, a [`WorkspacePool`] of
+//! per-call vector regions, and the execution backend; every solve handles
+//! tree-order permutation internally and reports through [`SolveReport`].
 //!
 //! The plan is recorded once per H² *structure*. Repeated solves,
 //! [`H2Solver::refactorize`] with an unchanged structure, and
 //! [`H2Solver::rebind_backend`] all replay the cached plan — schedule
 //! discovery never runs twice ([`H2Solver::plan_recordings`] counts it).
+//!
+//! # Concurrency model
+//!
+//! After `build()` the factor arena is an **immutable factor region**:
+//! substitution programs only read it, and every solve entry point
+//! (`solve`, `solve_many`, `solve_refined`, `solve_dist`) leases a private
+//! [`VecRegion`](crate::batch::device::VecRegion) workspace from the
+//! session's pool for its vector buffers. `&self` solves therefore run
+//! concurrently from any number of threads with **no lock held across
+//! launches** — exclusivity is only required by the `&mut self` phases
+//! (`refactorize`, `rebind_backend`), which the borrow checker enforces
+//! statically.
+//!
+//! # Factor storage
+//!
+//! [`FactorStorage::Mirrored`] (default) keeps a host [`UlvFactor`] next
+//! to the device-resident factor; [`FactorStorage::DeviceOnly`] drops the
+//! mirror (factor memory exists exactly once), serving structural queries
+//! from [`FactorMeta`] and individual values through
+//! [`H2Solver::download_block`].
 
 use super::backend::BackendSpec;
-use super::builder::validate;
+use super::builder::{validate, FactorStorage};
 use super::{guard, H2Error};
-use crate::batch::device::{Device, DeviceArena};
+use crate::batch::device::{Device, DeviceArena, WorkspacePool};
 use crate::construct::H2Config;
 use crate::dist::{dist_solve_driver_in, NCCL_LIKE};
 use crate::geometry::Geometry;
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
+use crate::linalg::Matrix;
 use crate::metrics::{flops::FlopScope, timer::timed};
 use crate::plan::{self, Executor, Plan, ScheduleStats};
-use crate::ulv::{pcg_in, SubstMode, UlvFactor};
+use crate::ulv::{pcg_in, FactorMeta, SubstMode, UlvFactor};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Seed for the sampled residual estimator (fixed so reports are
@@ -49,11 +71,31 @@ pub struct BuildStats {
     pub factor_flops: u64,
     /// H² storage footprint in f64 entries.
     pub h2_entries: usize,
-    /// ULV factor storage footprint in f64 entries.
+    /// ULV factor storage footprint in f64 entries (device-resident; from
+    /// [`FactorMeta::storage_entries`], so it is exact in both storage
+    /// modes).
     pub factor_entries: usize,
+    /// Host-mirror footprint in f64 entries: equals `factor_entries` under
+    /// [`FactorStorage::Mirrored`], 0 under [`FactorStorage::DeviceOnly`]
+    /// — the memory the device-only mode saves.
+    pub mirror_entries: usize,
+    /// Device-arena bytes live after the factorization replay (the
+    /// resident factor region).
+    pub arena_bytes: usize,
+    /// Peak device-arena bytes during the factorization replay (factor
+    /// plus transient sparsify/merge buffers).
+    pub arena_peak_bytes: usize,
     /// Schedule statistics straight from the plan IR: launch counts per
     /// level, batch sizes, useful vs constant-shape padded FLOPs.
     pub schedule: ScheduleStats,
+}
+
+impl BuildStats {
+    /// Total factor bytes this session holds resident (device region plus
+    /// host mirror): the number [`FactorStorage::DeviceOnly`] halves.
+    pub fn factor_footprint_bytes(&self) -> usize {
+        self.arena_bytes + 8 * self.mirror_entries
+    }
 }
 
 /// Per-call overrides for [`H2Solver::solve_opts`].
@@ -119,23 +161,52 @@ pub struct DistSolveReport {
     pub residual: Option<f64>,
 }
 
+/// One block of the device-resident factor, addressable for on-demand
+/// download ([`H2Solver::download_block`]) — the escape hatch for the few
+/// paths that need factor *values* from a [`FactorStorage::DeviceOnly`]
+/// session. `level` indexes [`FactorMeta::levels`] (leaf level first).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FactorBlock {
+    /// Diagonal Cholesky factor `L_ii` of box `box_index`.
+    CholRr { level: usize, box_index: usize },
+    /// Off-diagonal panel `L(r)_ji` for near pair `(j, i)`.
+    Lr { level: usize, pair: (usize, usize) },
+    /// Skeleton panel `L(s)_ji` for near pair `(j, i)`.
+    Ls { level: usize, pair: (usize, usize) },
+    /// Shared basis `U_i` of box `box_index`.
+    Basis { level: usize, box_index: usize },
+    /// The merged-root Cholesky factor.
+    Root,
+}
+
 /// A built H² solver session: construction, plan recording, and
-/// factorization are done; [`solve`](H2Solver::solve) is cheap and
-/// reusable across right-hand sides.
+/// factorization are done; [`solve`](H2Solver::solve) is cheap, reusable
+/// across right-hand sides, and callable from many threads at once.
 pub struct H2Solver {
     geometry: Geometry,
     kernel: KernelFn,
     spec: BackendSpec,
     backend: Box<dyn Device>,
-    /// Device arena holding the factor resident (outputs + bases + root)
-    /// since the last factorization replay; every solve replays the
-    /// substitution program against these buffers without re-uploading.
-    arena: Mutex<Box<dyn DeviceArena>>,
+    /// The immutable factor region: holds the factor resident (outputs +
+    /// bases + root) since the last factorization replay. Solves only
+    /// *read* it (vector traffic goes to pooled workspaces), so `&self`
+    /// methods share it lock-free; `refactorize`/`rebind_backend` replace
+    /// it under `&mut self`.
+    arena: Box<dyn DeviceArena>,
+    /// Per-call vector regions: one leased per in-flight solve, returned
+    /// (even on panic) when the solve finishes.
+    pool: WorkspacePool,
+    storage: FactorStorage,
     subst: SubstMode,
     residual_samples: usize,
     h2: H2Matrix,
     plan: Arc<Plan>,
-    factor: UlvFactor,
+    /// Host mirror of the factor — `Some` only under
+    /// [`FactorStorage::Mirrored`].
+    factor: Option<UlvFactor>,
+    /// Shape-only factor description (always present; derived from the
+    /// plan, not from the mirror).
+    meta: FactorMeta,
     stats: BuildStats,
     scope: FlopScope,
     plan_recordings: usize,
@@ -152,23 +223,28 @@ impl H2Solver {
         backend: Box<dyn Device>,
         subst: SubstMode,
         residual_samples: usize,
+        storage: FactorStorage,
     ) -> Result<H2Solver, H2Error> {
         let scope = FlopScope::new();
         let (h2, construct_time) = construct_timed(&geometry, &kernel, &config)?;
         let plan = Arc::new(guard("planning", || plan::record(&h2))?);
+        let meta = plan.factor_meta();
         let (factor, arena, stats) =
-            replay_factor(&plan, &h2, backend.as_ref(), &scope, construct_time)?;
+            replay_factor(&plan, &h2, backend.as_ref(), &scope, construct_time, storage, &meta)?;
         Ok(H2Solver {
             geometry,
             kernel,
             spec,
             backend,
-            arena: Mutex::new(arena),
+            arena,
+            pool: WorkspacePool::new(),
+            storage,
             subst,
             residual_samples,
             h2,
             plan,
             factor,
+            meta,
             stats,
             scope,
             plan_recordings: 1,
@@ -200,14 +276,64 @@ impl H2Solver {
         self.subst
     }
 
+    /// The factor-storage policy this session was built with.
+    pub fn factor_storage(&self) -> FactorStorage {
+        self.storage
+    }
+
     /// Low-level access to the H² matrix (benchmarks, diagnostics).
     pub fn matrix(&self) -> &H2Matrix {
         &self.h2
     }
 
-    /// Low-level access to the ULV factor (benchmarks, diagnostics).
-    pub fn factor(&self) -> &UlvFactor {
-        &self.factor
+    /// The host-side factor mirror: `Some` under
+    /// [`FactorStorage::Mirrored`] (the default), `None` under
+    /// [`FactorStorage::DeviceOnly`] — shape queries then go through
+    /// [`factor_meta`](H2Solver::factor_meta) and values through
+    /// [`download_block`](H2Solver::download_block).
+    pub fn factor(&self) -> Option<&UlvFactor> {
+        self.factor.as_ref()
+    }
+
+    /// Shape-only description of the factor (block dimensions, ranks,
+    /// level layout). Always available — it is derived from the recorded
+    /// plan, never from the mirror.
+    pub fn factor_meta(&self) -> &FactorMeta {
+        &self.meta
+    }
+
+    /// Download one factor block from the device-resident factor region —
+    /// the on-demand value path for [`FactorStorage::DeviceOnly`]
+    /// sessions (works in both modes; under `Mirrored`,
+    /// [`factor`](H2Solver::factor) is the cheaper host-side read).
+    pub fn download_block(&self, block: FactorBlock) -> Result<Matrix, H2Error> {
+        let outputs = &self.plan.factor.outputs;
+        let buf = match block {
+            FactorBlock::Root => Some(self.plan.factor.root_src),
+            FactorBlock::CholRr { level, box_index } => {
+                outputs.get(level).and_then(|o| o.chol_rr.get(box_index)).copied()
+            }
+            FactorBlock::Basis { level, box_index } => {
+                outputs.get(level).and_then(|o| o.basis.get(box_index)).copied()
+            }
+            FactorBlock::Lr { level, pair } => outputs
+                .get(level)
+                .and_then(|o| o.lr.iter().find(|&&(k, _)| k == pair))
+                .map(|&(_, b)| b),
+            FactorBlock::Ls { level, pair } => outputs
+                .get(level)
+                .and_then(|o| o.ls.iter().find(|&&(k, _)| k == pair))
+                .map(|&(_, b)| b),
+        };
+        match buf {
+            Some(b) => {
+                self.backend.fence();
+                Ok(self.arena.download(b))
+            }
+            None => Err(H2Error::InvalidConfig(format!(
+                "no such factor block: {block:?} (levels index FactorMeta::levels, leaf first)"
+            ))),
+        }
     }
 
     /// The cached execution plan (launch schedule, FLOP/padding metadata).
@@ -228,16 +354,29 @@ impl H2Solver {
         &self.scope
     }
 
+    /// Live buffers in the resident factor region — constant between
+    /// builds (solves never touch it), the no-leak assertion hook.
+    pub fn resident_buffers(&self) -> usize {
+        self.arena.live()
+    }
+
+    /// Workspace-pool counters `(created, idle)`: `created` is the
+    /// high-water mark of concurrently in-flight solves this session has
+    /// served; the two are equal whenever no solve is running (leased
+    /// regions always come back, even on panic).
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        (self.pool.created(), self.pool.idle())
+    }
+
     /// Solve `A x = b` with `b` in the caller's original point ordering;
     /// the returned [`SolveReport::x`] is in original ordering too. All
     /// tree-order permutation happens inside.
     ///
-    /// Concurrency: solves on one session replay against the session's
-    /// single resident device arena and are therefore **serialized** (the
-    /// arena lock is held for the whole substitution). Threads that need
-    /// parallel solves against one factorization should use separate
-    /// sessions, or [`crate::ulv::UlvFactor::solve_tree_order`] with
-    /// per-thread arenas.
+    /// Concurrency: solves share the session's resident factor region
+    /// read-only and lease a private vector workspace from the session's
+    /// pool, so **any number of threads may call `solve` on one session
+    /// simultaneously** — results are bit-identical to sequential calls,
+    /// and no lock is held across kernel launches.
     ///
     /// ```
     /// use h2ulv::prelude::*;
@@ -279,19 +418,18 @@ impl H2Solver {
         self.check_rhs(b)?;
         let mode = opts.subst_mode.unwrap_or(self.subst);
         let bt = self.h2.tree.permute_vec(b);
-        let (xt, subst_time) = {
-            // Replay against the resident arena: the factor never leaves
-            // the device between solves.
-            let mut arena = self.arena.lock().unwrap();
-            let (res, t) = timed(|| {
-                guard("substitution", || {
-                    Executor::new(self.backend.as_ref())
-                        .with_scope(&self.scope)
-                        .solve_in(&self.plan, arena.as_mut(), &bt, mode)
-                })
-            });
-            (res?, t)
-        };
+        // Lease a workspace; the factor region is shared read-only. The
+        // lease returns to the pool when `ws` drops — panic or not.
+        let mut ws = self.pool.acquire(self.backend.as_ref());
+        let (res, subst_time) = timed(|| {
+            guard("substitution", || {
+                Executor::new(self.backend.as_ref())
+                    .with_scope(&self.scope)
+                    .solve_in(&self.plan, self.arena.as_ref(), ws.region(), &bt, mode)
+            })
+        });
+        drop(ws);
+        let xt = res?;
         let residual = self.sample_residual_opts(&xt, &bt, opts);
         let x = self.h2.tree.unpermute_vec(&xt);
         Ok(SolveReport {
@@ -307,6 +445,12 @@ impl H2Solver {
     /// Solve one factorization against many right-hand sides by replaying
     /// the cached substitution program per RHS — no re-planning. Lengths
     /// are validated up front so either every RHS is solved or none is.
+    ///
+    /// The solves **fan out across the workspace pool**: worker threads
+    /// (up to the machine's parallelism) each lease their own vector
+    /// region and replay concurrently against the shared factor region.
+    /// Reports come back in input order and are bit-identical to
+    /// sequential [`solve_opts`](H2Solver::solve_opts) calls.
     pub fn solve_many(&self, rhs: &[Vec<f64>]) -> Result<Vec<SolveReport>, H2Error> {
         self.solve_many_opts(rhs, &SolveOptions::default())
     }
@@ -321,13 +465,41 @@ impl H2Solver {
         for b in rhs {
             self.check_rhs(b)?;
         }
-        rhs.iter().map(|b| self.solve_opts(b, opts)).collect()
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(rhs.len());
+        if workers <= 1 {
+            return rhs.iter().map(|b| self.solve_opts(b, opts)).collect();
+        }
+        // Fan out: an atomic cursor hands indices to workers; each solve
+        // leases its own workspace, so the replays run simultaneously.
+        let results: Vec<Mutex<Option<Result<SolveReport, H2Error>>>> =
+            rhs.iter().map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= rhs.len() {
+                        break;
+                    }
+                    *results[i].lock().unwrap() = Some(self.solve_opts(&rhs[i], opts));
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every index was claimed by a worker"))
+            .collect()
     }
 
     /// Direct solve + ULV-preconditioned CG refinement until the relative
     /// residual (w.r.t. the H² operator) drops below `tol`. Recovers full
     /// accuracy from aggressively compressed factorizations at O(N) cost
     /// per iteration (paper §3.7: "direct solver or preconditioner").
+    /// Like [`solve`](H2Solver::solve), safe to call from many threads at
+    /// once (each refinement leases its own workspace).
     pub fn solve_refined(
         &self,
         b: &[f64],
@@ -341,23 +513,23 @@ impl H2Solver {
             )));
         }
         let bt = self.h2.tree.permute_vec(b);
-        let (result, subst_time) = {
-            let mut arena = self.arena.lock().unwrap();
-            let (res, t) = timed(|| {
-                guard("refined substitution", || {
-                    pcg_in(
-                        &self.h2,
-                        &self.factor,
-                        self.backend.as_ref(),
-                        arena.as_mut(),
-                        &bt,
-                        tol,
-                        max_iters,
-                    )
-                })
-            });
-            (res?, t)
-        };
+        let mut ws = self.pool.acquire(self.backend.as_ref());
+        let (res, subst_time) = timed(|| {
+            guard("refined substitution", || {
+                pcg_in(
+                    &self.h2,
+                    &self.plan,
+                    self.backend.as_ref(),
+                    self.arena.as_ref(),
+                    ws.region(),
+                    &bt,
+                    tol,
+                    max_iters,
+                )
+            })
+        });
+        drop(ws);
+        let result = res?;
         if result.rel_residual > tol {
             return Err(H2Error::ConvergenceFailure {
                 achieved: result.rel_residual,
@@ -380,25 +552,27 @@ impl H2Solver {
     /// Simulated distributed solve over `ranks` ranks (paper §5); times
     /// are modeled with [`NCCL_LIKE`]. The solution is identical to
     /// [`solve`](H2Solver::solve) for every rank count. Reuses the
-    /// session's ULV factor and backend — only the substitution runs per
-    /// call; the factorization cost in the report is modeled.
+    /// session's resident factor and backend — only the substitution runs
+    /// per call; the factorization cost in the report is modeled from
+    /// [`FactorMeta`] (no host mirror needed).
     pub fn solve_dist(&self, b: &[f64], ranks: usize) -> Result<DistSolveReport, H2Error> {
         self.check_rhs(b)?;
         let bt = self.h2.tree.permute_vec(b);
-        let report = {
-            let mut arena = self.arena.lock().unwrap();
-            guard("distributed solve", || {
-                dist_solve_driver_in(
-                    &self.h2,
-                    &self.factor,
-                    self.backend.as_ref(),
-                    arena.as_mut(),
-                    ranks,
-                    &bt,
-                    self.subst,
-                )
-            })?
-        };
+        let mut ws = self.pool.acquire(self.backend.as_ref());
+        let res = guard("distributed solve", || {
+            dist_solve_driver_in(
+                &self.plan,
+                &self.meta,
+                self.backend.as_ref(),
+                self.arena.as_ref(),
+                ws.region(),
+                ranks,
+                &bt,
+                self.subst,
+            )
+        });
+        drop(ws);
+        let report = res?;
         let residual = self.sample_residual(&report.x, &bt);
         let x = self.h2.tree.unpermute_vec(&report.x);
         Ok(DistSolveReport {
@@ -414,11 +588,11 @@ impl H2Solver {
 
     /// Rebuild the H² matrix and the ULV factor with a new configuration
     /// (changed rank budget / tolerance / admissibility), reusing the
-    /// stored geometry, kernel, and backend. When the new configuration
-    /// keeps the block structure (same tree, lists, and ranks — e.g. only
-    /// kernel values changed through an identical config), the cached plan
-    /// is *replayed* without re-recording; otherwise a new plan is
-    /// recorded. Returns the new build stats.
+    /// stored geometry, kernel, backend, and storage policy. When the new
+    /// configuration keeps the block structure (same tree, lists, and
+    /// ranks — e.g. only kernel values changed through an identical
+    /// config), the cached plan is *replayed* without re-recording;
+    /// otherwise a new plan is recorded. Returns the new build stats.
     pub fn refactorize(&mut self, config: H2Config) -> Result<&BuildStats, H2Error> {
         validate(&self.geometry, &config)?;
         let (h2, construct_time) = construct_timed(&self.geometry, &self.kernel, &config)?;
@@ -429,12 +603,25 @@ impl H2Solver {
             self.plan_recordings += 1;
             plan
         };
-        let (factor, arena, stats) =
-            replay_factor(&plan, &h2, self.backend.as_ref(), &self.scope, construct_time)?;
+        let meta = plan.factor_meta();
+        let (factor, arena, stats) = replay_factor(
+            &plan,
+            &h2,
+            self.backend.as_ref(),
+            &self.scope,
+            construct_time,
+            self.storage,
+            &meta,
+        )?;
         self.h2 = h2;
         self.plan = plan;
         self.factor = factor;
-        self.arena = Mutex::new(arena);
+        self.meta = meta;
+        self.arena = arena;
+        // Workspace sizes depend on the solve programs: retire the old
+        // regions (they would be resized on next use anyway, but a fresh
+        // pool keeps the footprint tight after a shrink).
+        self.pool = WorkspacePool::new();
         self.stats = stats;
         Ok(&self.stats)
     }
@@ -449,12 +636,21 @@ impl H2Solver {
     /// stats (`construct_time` is 0 — nothing was constructed).
     pub fn rebind_backend(&mut self, spec: BackendSpec) -> Result<&BuildStats, H2Error> {
         let backend = spec.instantiate()?;
-        let (factor, arena, stats) =
-            replay_factor(&self.plan, &self.h2, backend.as_ref(), &self.scope, 0.0)?;
+        let (factor, arena, stats) = replay_factor(
+            &self.plan,
+            &self.h2,
+            backend.as_ref(),
+            &self.scope,
+            0.0,
+            self.storage,
+            &self.meta,
+        )?;
         self.spec = spec;
         self.backend = backend;
         self.factor = factor;
-        self.arena = Mutex::new(arena);
+        self.arena = arena;
+        // Old regions belong to the old device; lease fresh ones lazily.
+        self.pool = WorkspacePool::new();
         self.stats = stats;
         Ok(&self.stats)
     }
@@ -512,8 +708,9 @@ fn construct_timed(
 
 /// Guarded plan replay shared by `build()`, `refactorize()`, and
 /// `rebind_backend()`: executes the factorization program, keeps the
-/// factor resident in the device arena, and derives the session's
-/// [`BuildStats`] from the scope and the plan IR.
+/// factor resident in the device arena (with or without a host mirror, per
+/// the storage policy), and derives the session's [`BuildStats`] from the
+/// scope, the meta, and the plan IR.
 #[allow(clippy::type_complexity)]
 fn replay_factor(
     plan: &Arc<Plan>,
@@ -521,12 +718,21 @@ fn replay_factor(
     backend: &dyn Device,
     scope: &FlopScope,
     construct_time: f64,
-) -> Result<(UlvFactor, Box<dyn DeviceArena>, BuildStats), H2Error> {
+    storage: FactorStorage,
+    meta: &FactorMeta,
+) -> Result<(Option<UlvFactor>, Box<dyn DeviceArena>, BuildStats), H2Error> {
     let before = scope.snapshot();
     let ((factor, arena), factor_time) = {
         let (res, t) = timed(|| {
             guard("factorization", || {
-                Executor::new(backend).with_scope(scope).factorize_resident(plan, h2)
+                let exec = Executor::new(backend).with_scope(scope);
+                match storage {
+                    FactorStorage::Mirrored => {
+                        let (f, a) = exec.factorize_resident(plan, h2);
+                        (Some(f), a)
+                    }
+                    FactorStorage::DeviceOnly => (None, exec.factorize_device_only(plan, h2)),
+                }
             })
         });
         (res?, t)
@@ -539,7 +745,10 @@ fn replay_factor(
         factor_time,
         factor_flops,
         h2_entries: h2.storage_entries(),
-        factor_entries: factor.storage_entries(),
+        factor_entries: meta.storage_entries(),
+        mirror_entries: factor.as_ref().map(|f| f.storage_entries()).unwrap_or(0),
+        arena_bytes: arena.bytes(),
+        arena_peak_bytes: arena.peak_bytes(),
         schedule: plan.schedule_stats(),
     };
     Ok((factor, arena, stats))

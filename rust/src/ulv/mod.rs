@@ -118,4 +118,88 @@ impl UlvFactor {
         }
         total
     }
+
+    /// Shape-only description of this factor (see [`FactorMeta`]).
+    pub fn meta(&self) -> FactorMeta {
+        self.plan.factor_meta()
+    }
+}
+
+/// Shape-only description of a ULV factor: block dimensions, ranks, and
+/// level layout — everything the distributed model ([`crate::dist`]) and
+/// the figure harnesses need without touching factor *values*. Derived
+/// from the recorded [`Plan`] structure alone, so it exists even when no
+/// host [`UlvFactor`] mirror does: sessions built with
+/// `FactorStorage::DeviceOnly` answer every structural query from this
+/// meta and fetch values (rarely) with `H2Solver::download_block`.
+#[derive(Clone, Debug)]
+pub struct FactorMeta {
+    /// Per-level shape tables, leaf level first (the order of
+    /// [`UlvFactor::levels`]).
+    pub levels: Vec<LevelMeta>,
+    /// Merged-root dimension.
+    pub root_n: usize,
+    /// Tree depth.
+    pub depth: usize,
+}
+
+/// Shapes of one factor level.
+#[derive(Clone, Debug)]
+pub struct LevelMeta {
+    /// Tree level this table describes.
+    pub level: usize,
+    /// `(ndof, rank)` per box; the redundant dimension is `ndof - rank`.
+    pub boxes: Vec<(usize, usize)>,
+    /// Near interaction pairs at this level.
+    pub near: Vec<(usize, usize)>,
+    /// Keys `(j, i)` holding an `L(r)` panel, of shape
+    /// `(nred(j), nred(i))`.
+    pub lr: Vec<(usize, usize)>,
+    /// Keys `(j, i)` holding an `L(s)` panel, of shape
+    /// `(rank(j), nred(i))`.
+    pub ls: Vec<(usize, usize)>,
+}
+
+impl LevelMeta {
+    /// Boxes at this level.
+    pub fn width(&self) -> usize {
+        self.boxes.len()
+    }
+
+    /// DOFs box `i` exposes to this level (`n_i`).
+    pub fn ndof(&self, i: usize) -> usize {
+        self.boxes[i].0
+    }
+
+    /// Skeleton rank `k_i`.
+    pub fn rank(&self, i: usize) -> usize {
+        self.boxes[i].1
+    }
+
+    /// Redundant dimension `n_i - k_i`.
+    pub fn nred(&self, i: usize) -> usize {
+        self.boxes[i].0 - self.boxes[i].1
+    }
+}
+
+impl FactorMeta {
+    /// Total factor entries (diagonal factors + panels + bases + root) —
+    /// equals [`UlvFactor::storage_entries`] of the mirrored factor, but
+    /// computed from shapes alone.
+    pub fn storage_entries(&self) -> usize {
+        let mut total = self.root_n * self.root_n;
+        for lm in &self.levels {
+            for i in 0..lm.width() {
+                total += lm.nred(i) * lm.nred(i); // chol_rr
+                total += lm.ndof(i) * lm.ndof(i); // square basis U_i
+            }
+            for &(j, i) in &lm.lr {
+                total += lm.nred(j) * lm.nred(i);
+            }
+            for &(j, i) in &lm.ls {
+                total += lm.rank(j) * lm.nred(i);
+            }
+        }
+        total
+    }
 }

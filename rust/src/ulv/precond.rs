@@ -8,9 +8,9 @@
 //! (H² matvec + ULV substitution).
 
 use super::{SubstMode, UlvFactor};
-use crate::batch::device::{Device, DeviceArena};
+use crate::batch::device::{Device, DeviceArena, VecRegion};
 use crate::h2::H2Matrix;
-use crate::plan::Executor;
+use crate::plan::{Executor, Plan};
 
 /// Outcome of a preconditioned-CG solve.
 #[derive(Debug, Clone)]
@@ -26,10 +26,10 @@ pub struct PcgResult {
 /// Solve `Â x = b` (tree ordering) by CG on the H² operator, preconditioned
 /// with the ULV factorization. `tol` is the relative residual target.
 ///
-/// The factor is uploaded into the device arena once and every CG
-/// iteration replays the substitution program against the resident
-/// buffers; use [`pcg_in`] directly when a resident arena already exists
-/// (the session facade's case).
+/// The factor is uploaded into a device arena once and every CG iteration
+/// replays the substitution program against the resident buffers; use
+/// [`pcg_in`] directly when a resident factor region (and a leased
+/// workspace) already exists — the session facade's case.
 pub fn pcg(
     h2: &H2Matrix,
     fac: &UlvFactor,
@@ -38,16 +38,21 @@ pub fn pcg(
     tol: f64,
     max_iters: usize,
 ) -> PcgResult {
-    let mut arena = Executor::new(device).upload_factor(fac);
-    pcg_in(h2, fac, device, arena.as_mut(), b, tol, max_iters)
+    let arena = Executor::new(device).upload_factor(fac);
+    let mut ws = VecRegion::new(device, 0);
+    pcg_in(h2, &fac.plan, device, arena.as_ref(), &mut ws, b, tol, max_iters)
 }
 
-/// [`pcg`] against an arena that already holds the factor resident.
+/// [`pcg`] against a factor region that already holds the factor resident.
+/// The region is only read (every iteration's preconditioner apply writes
+/// to `ws`), so concurrent refinement solves on one session each bring
+/// their own workspace.
 pub fn pcg_in(
     h2: &H2Matrix,
-    fac: &UlvFactor,
+    plan: &Plan,
     device: &dyn Device,
-    arena: &mut dyn DeviceArena,
+    factor: &dyn DeviceArena,
+    ws: &mut VecRegion,
     b: &[f64],
     tol: f64,
     max_iters: usize,
@@ -57,7 +62,7 @@ pub fn pcg_in(
     let norm_b = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
-    let mut z = exec.solve_in(&fac.plan, arena, &r, SubstMode::Parallel);
+    let mut z = exec.solve_in(plan, factor, ws, &r, SubstMode::Parallel);
     let mut p = z.clone();
     let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
     let mut iters = 0;
@@ -78,7 +83,7 @@ pub fn pcg_in(
         if rel < tol {
             break;
         }
-        z = exec.solve_in(&fac.plan, arena, &r, SubstMode::Parallel);
+        z = exec.solve_in(plan, factor, ws, &r, SubstMode::Parallel);
         let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
         let beta = rz_new / rz;
         rz = rz_new;

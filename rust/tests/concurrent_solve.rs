@@ -1,0 +1,159 @@
+//! Concurrent solve sessions (ISSUE 4 acceptance):
+//!
+//! * ≥4 threads solving distinct right-hand sides on **one** `H2Solver`
+//!   produce bit-identical results to sequential solves — the resident
+//!   factor region is shared read-only and every call leases a private
+//!   workspace, so no arena-wide mutex is held across launches;
+//! * no `BufferId` leaks: the factor region's live count is unchanged and
+//!   every pooled workspace returns empty;
+//! * no re-planning under contention (`plan_recordings()` stays 1), and
+//!   the lazily recorded naive program materializes exactly once even when
+//!   many threads race to first-use it;
+//! * `solve_many` fans out across the pool and still matches per-RHS
+//!   sequential solves exactly.
+//!
+//! CI runs this file under `RUST_TEST_THREADS=4` so the scheduler actually
+//! interleaves the in-flight solves.
+
+use h2ulv::prelude::*;
+use h2ulv::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+const N: usize = 512;
+const THREADS: usize = 6;
+
+fn build_solver() -> H2Solver {
+    let g = Geometry::sphere_surface(N, 501);
+    H2SolverBuilder::new(g, KernelFn::laplace())
+        .config(H2Config { leaf_size: 64, max_rank: 32, ..Default::default() })
+        .residual_samples(0)
+        .build()
+        .expect("well-formed problem")
+}
+
+fn rhs(seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..N).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn concurrent_solves_are_bit_identical_to_sequential() {
+    let solver = build_solver();
+    let resident = solver.resident_buffers();
+    let bs: Vec<Vec<f64>> = (0..THREADS as u64).map(|t| rhs(100 + t)).collect();
+    // Sequential ground truth.
+    let sequential: Vec<Vec<f64>> =
+        bs.iter().map(|b| solver.solve(b).expect("rhs matches").x).collect();
+
+    // ≥4 threads solving distinct RHS simultaneously on one session.
+    let started = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bs
+            .iter()
+            .zip(&sequential)
+            .map(|(b, want)| {
+                let started = &started;
+                let solver = &solver;
+                s.spawn(move || {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    // Crude rendezvous so the solves genuinely overlap.
+                    while started.load(Ordering::SeqCst) < THREADS {
+                        std::hint::spin_loop();
+                    }
+                    for _ in 0..3 {
+                        let rep = solver.solve(b).expect("rhs matches");
+                        assert_eq!(
+                            rep.x, *want,
+                            "concurrent solve diverged from sequential"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("solver thread panicked");
+        }
+    });
+
+    // No leaked BufferIds anywhere: the factor region is untouched and
+    // every leased workspace came back to the pool.
+    assert_eq!(solver.resident_buffers(), resident, "factor region live count changed");
+    let (created, idle) = solver.workspace_stats();
+    assert_eq!(created, idle, "a workspace region leaked");
+    assert!(created <= THREADS, "pool grew past the number of in-flight solves");
+    // The cached plan served every thread — recording never ran again.
+    assert_eq!(solver.plan_recordings(), 1, "re-planning occurred under contention");
+}
+
+#[test]
+fn concurrent_naive_solves_record_program_once() {
+    // The naive program is recorded lazily; racing first-users must agree
+    // bit-for-bit and leave plan_recordings untouched.
+    let solver = build_solver();
+    assert!(!solver.plan().naive_recorded());
+    let bs: Vec<Vec<f64>> = (0..4u64).map(|t| rhs(200 + t)).collect();
+    let xs: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = bs
+            .iter()
+            .map(|b| {
+                let solver = &solver;
+                s.spawn(move || solver.solve_with(b, SubstMode::Naive).expect("rhs matches").x)
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("thread panicked")).collect()
+    });
+    assert!(solver.plan().naive_recorded());
+    assert_eq!(solver.plan_recordings(), 1);
+    for (b, x) in bs.iter().zip(&xs) {
+        let again = solver.solve_with(b, SubstMode::Naive).expect("rhs matches").x;
+        assert_eq!(*x, again, "racing naive solves diverged from replay");
+    }
+}
+
+#[test]
+fn solve_many_fans_out_and_matches_sequential() {
+    let solver = build_solver();
+    let many: Vec<Vec<f64>> = (0..8u64).map(|t| rhs(300 + t)).collect();
+    let reports = solver.solve_many(&many).expect("all rhs lengths match");
+    assert_eq!(reports.len(), many.len());
+    for (b, rep) in many.iter().zip(&reports) {
+        let single = solver.solve(b).expect("rhs matches");
+        assert_eq!(rep.x, single.x, "solve_many must match per-rhs solve exactly");
+    }
+    let (created, idle) = solver.workspace_stats();
+    assert_eq!(created, idle, "solve_many leaked a workspace region");
+    assert_eq!(solver.plan_recordings(), 1, "solve_many must not re-plan");
+}
+
+#[test]
+fn concurrent_mixed_entry_points_share_one_factor() {
+    // solve / solve_refined / solve_dist all lease from one pool and read
+    // one factor region; running them simultaneously must not perturb any
+    // result.
+    let solver = build_solver();
+    let b = rhs(400);
+    let want_direct = solver.solve(&b).expect("rhs matches").x;
+    let want_dist = solver.solve_dist(&b, 4).expect("rhs matches").x;
+    std::thread::scope(|s| {
+        let solver = &solver;
+        let b = &b;
+        let want_direct = &want_direct;
+        let want_dist = &want_dist;
+        for _ in 0..2 {
+            s.spawn(move || {
+                let x = solver.solve(b).expect("rhs matches").x;
+                assert_eq!(x, *want_direct);
+            });
+            s.spawn(move || {
+                let x = solver.solve_dist(b, 4).expect("rhs matches").x;
+                assert_eq!(x, *want_dist);
+            });
+            s.spawn(move || {
+                let rep = solver.solve_refined(b, 1e-8, 50).expect("refinement converges");
+                assert!(rep.iterations >= 1);
+            });
+        }
+    });
+    let (created, idle) = solver.workspace_stats();
+    assert_eq!(created, idle, "mixed entry points leaked a workspace region");
+}

@@ -16,7 +16,7 @@
 // purpose; everything else uses the Device API.
 #![allow(deprecated)]
 
-use h2ulv::batch::device::{Device, LegacyBatchExec};
+use h2ulv::batch::device::{Device, LegacyBatchExec, WorkspacePool};
 use h2ulv::batch::native::NativeBackend;
 use h2ulv::batch::BatchExec;
 use h2ulv::construct::H2Config;
@@ -82,7 +82,7 @@ fn device_arena_alloc_free_balance() {
     let h2 = build_h2(384, 403);
     let plan = Arc::new(h2ulv::plan::record(&h2));
     let be = NativeBackend::new();
-    let (fac, mut arena) = Executor::new(&be).factorize_resident(&plan, &h2);
+    let (fac, arena) = Executor::new(&be).factorize_resident(&plan, &h2);
     // After the factorization replay exactly the factor's resident
     // buffers (outputs + bases + root) are live — no leaked BufferIds.
     let expected = plan.factor.resident_bufs().len();
@@ -91,19 +91,66 @@ fn device_arena_alloc_free_balance() {
         expected,
         "factorization must free every temporary buffer"
     );
-    // Every solve replay allocates its vector region and frees it again.
+    // Every solve replay allocates its vector region in a pooled
+    // workspace and empties it again; the factor region is never touched.
     let b = rhs(384, 3);
     let bt = h2.tree.permute_vec(&b);
     let exec = Executor::new(&be);
+    let pool = WorkspacePool::new();
     for mode in [SubstMode::Parallel, SubstMode::Naive, SubstMode::Parallel] {
-        let x = exec.solve_in(&plan, arena.as_mut(), &bt, mode);
+        let mut ws = pool.acquire(&be);
+        let x = exec.solve_in(&plan, arena.as_ref(), ws.region(), &bt, mode);
         assert_eq!(x.len(), 384);
-        assert_eq!(arena.live(), expected, "{mode:?}: solve leaked vector buffers");
+        assert_eq!(arena.live(), expected, "{mode:?}: solve touched the factor region");
+        assert_eq!(ws.region().live(), 0, "{mode:?}: solve leaked vector buffers");
     }
-    // Resident-arena solves bit-match the transient-upload path.
-    let x_resident = exec.solve_in(&plan, arena.as_mut(), &bt, SubstMode::Parallel);
+    assert_eq!(pool.created(), 1, "sequential solves must reuse one region");
+    assert_eq!(pool.idle(), 1, "the region must be back in the pool");
+    // Resident-region solves bit-match the transient-upload path.
+    let mut ws = pool.acquire(&be);
+    let x_resident = exec.solve_in(&plan, arena.as_ref(), ws.region(), &bt, SubstMode::Parallel);
     let x_transient = fac.solve_tree_order(&bt, &be, SubstMode::Parallel);
     assert_eq!(x_resident, x_transient, "residency must not change the numerics");
+}
+
+#[test]
+fn device_panicking_solve_returns_region_to_pool() {
+    // The unwind guard contract (workspace-pooled edition): a panicking
+    // launch empties the workspace via a region *reset* — not a drop — so
+    // the region returns to its pool and the pool never shrinks, and the
+    // shared factor region keeps its exact live-buffer balance.
+    let h2 = build_h2(256, 431);
+    let plan = Arc::new(h2ulv::plan::record(&h2));
+    let be = NativeBackend::new();
+    let (_fac, mut arena) = Executor::new(&be).factorize_resident(&plan, &h2);
+    let expected = plan.factor.resident_bufs().len();
+    assert_eq!(arena.live(), expected);
+    // Sabotage: free one resident basis buffer so the substitution's
+    // ApplyBasis launch panics ("read before upload") mid-program.
+    let victim = plan.factor.outputs[0].basis[0];
+    arena.free(victim);
+    let bt = h2.tree.permute_vec(&rhs(256, 19));
+    let pool = WorkspacePool::new();
+    let exec = Executor::new(&be);
+    {
+        let mut ws = pool.acquire(&be);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.solve_in(&plan, arena.as_ref(), ws.region(), &bt, SubstMode::Parallel)
+        }));
+        assert!(result.is_err(), "solve against a freed basis buffer must panic");
+        // The guard reset the region before re-raising: live balance is 0.
+        assert_eq!(ws.region().live(), 0, "panicking solve leaked vector buffers");
+    }
+    // RAII returned the (reset) region: full capacity, nothing leaked.
+    assert_eq!(pool.created(), 1);
+    assert_eq!(pool.idle(), 1, "panicking solve must return its region to the pool");
+    assert_eq!(arena.live(), expected - 1, "factor region balance must be untouched");
+    // The pool still serves solves after repair.
+    arena.upload(victim, &h2.bases[plan.factor.outputs[0].level][0].u);
+    let mut ws = pool.acquire(&be);
+    let x = exec.solve_in(&plan, arena.as_ref(), ws.region(), &bt, SubstMode::Parallel);
+    assert_eq!(x.len(), 256);
+    assert_eq!(pool.created(), 1, "recovery must reuse the recycled region");
 }
 
 #[test]

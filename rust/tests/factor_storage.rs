@@ -1,0 +1,148 @@
+//! `FactorStorage` policy (ISSUE 4 acceptance): a
+//! `FactorStorage::DeviceOnly` session runs the full
+//! factorize → solve → solve_dist → figure-style path with the `UlvFactor`
+//! host mirror never materialized, matching the default `Mirrored` session
+//! to 1e-12 (bit-identical on one backend, in fact), while the reported
+//! factor footprint shrinks by exactly the mirror's size.
+
+use h2ulv::prelude::*;
+use h2ulv::util::Rng;
+
+const N: usize = 512;
+
+fn builder(storage: FactorStorage) -> H2SolverBuilder {
+    let g = Geometry::sphere_surface(N, 601);
+    H2SolverBuilder::new(g, KernelFn::laplace())
+        .config(H2Config { leaf_size: 64, max_rank: 32, ..Default::default() })
+        .factor_storage(storage)
+        .residual_samples(0)
+}
+
+fn rhs(seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..N).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn device_only_full_path_matches_mirrored() {
+    let mirrored = builder(FactorStorage::Mirrored).build().expect("well-formed");
+    let device_only = builder(FactorStorage::DeviceOnly).build().expect("well-formed");
+    assert_eq!(mirrored.factor_storage(), FactorStorage::Mirrored);
+    assert_eq!(device_only.factor_storage(), FactorStorage::DeviceOnly);
+    assert!(mirrored.factor().is_some(), "mirrored session exposes the host factor");
+    assert!(device_only.factor().is_none(), "device-only must never materialize the mirror");
+
+    let b = rhs(1);
+    // Direct solve: same backend, same plan — bit-identical.
+    let xm = mirrored.solve(&b).expect("rhs matches").x;
+    let xd = device_only.solve(&b).expect("rhs matches").x;
+    assert_eq!(xm, xd, "device-only solve diverged from mirrored");
+
+    // Refined solve.
+    let rm = mirrored.solve_refined(&b, 1e-8, 50).expect("converges");
+    let rd = device_only.solve_refined(&b, 1e-8, 50).expect("converges");
+    assert_eq!(rm.x, rd.x, "device-only refinement diverged");
+
+    // Distributed path: the model reads FactorMeta, not the mirror —
+    // solutions and modeled times must agree exactly.
+    for p in [1, 4] {
+        let dm = mirrored.solve_dist(&b, p).expect("rhs matches");
+        let dd = device_only.solve_dist(&b, p).expect("rhs matches");
+        assert_eq!(dm.x, dd.x, "P={p}: device-only dist solve diverged");
+        assert_eq!(dm.ranks, dd.ranks);
+        assert_eq!(dm.factor_bytes, dd.factor_bytes, "P={p}: modeled comm diverged");
+        assert_eq!(dm.subst_bytes, dd.subst_bytes);
+        assert!((dm.factor_time - dd.factor_time).abs() < 1e-12);
+    }
+
+    // Figure-style introspection works without the mirror: schedule dump
+    // and meta-derived footprints.
+    let dump = device_only.plan().render_schedule();
+    assert!(dump.contains("factor launches"));
+    let err = rel_err(&xm, &xd);
+    assert!(err <= 1e-12, "parity budget exceeded: {err}");
+}
+
+fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+    let den: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+    num / den
+}
+
+#[test]
+fn device_only_shrinks_factor_footprint() {
+    let mirrored = builder(FactorStorage::Mirrored).build().expect("well-formed");
+    let device_only = builder(FactorStorage::DeviceOnly).build().expect("well-formed");
+    let sm = mirrored.stats();
+    let sd = device_only.stats();
+
+    // Same factor, same device residency, same schedule.
+    assert_eq!(sm.factor_entries, sd.factor_entries);
+    assert_eq!(sm.arena_bytes, sd.arena_bytes, "device residency must not depend on policy");
+    assert_eq!(sm.arena_peak_bytes, sd.arena_peak_bytes);
+    assert!(sd.arena_bytes > 0);
+    assert!(sd.arena_peak_bytes >= sd.arena_bytes);
+
+    // The mirror is the entire difference — and it is gone.
+    assert_eq!(sm.mirror_entries, sm.factor_entries);
+    assert_eq!(sd.mirror_entries, 0);
+    assert_eq!(
+        sm.factor_footprint_bytes() - sd.factor_footprint_bytes(),
+        8 * sm.mirror_entries,
+        "device-only must save exactly the mirror bytes"
+    );
+
+    // Meta agrees with the actual mirrored factor, shape for shape.
+    let fac = mirrored.factor().expect("mirrored");
+    assert_eq!(fac.storage_entries(), mirrored.factor_meta().storage_entries());
+    assert_eq!(fac.meta().storage_entries(), device_only.factor_meta().storage_entries());
+    assert_eq!(fac.root_l.rows(), device_only.factor_meta().root_n);
+}
+
+#[test]
+fn download_block_matches_mirror_values() {
+    let mirrored = builder(FactorStorage::Mirrored).build().expect("well-formed");
+    let device_only = builder(FactorStorage::DeviceOnly).build().expect("well-formed");
+    let fac = mirrored.factor().expect("mirrored");
+
+    // Root factor, a diagonal Cholesky block, and a basis, fetched from
+    // the device-only session's resident arena, must equal the mirror
+    // bit-for-bit (same backend, same replay).
+    let root = device_only.download_block(FactorBlock::Root).expect("root exists");
+    assert_eq!(root.as_slice(), fac.root_l.as_slice());
+
+    let chol = device_only
+        .download_block(FactorBlock::CholRr { level: 0, box_index: 0 })
+        .expect("leaf chol exists");
+    assert_eq!(chol.as_slice(), fac.levels[0].chol_rr[0].as_slice());
+
+    let basis = device_only
+        .download_block(FactorBlock::Basis { level: 0, box_index: 0 })
+        .expect("leaf basis exists");
+    assert_eq!(basis.as_slice(), fac.levels[0].bases[0].u.as_slice());
+
+    // A panel, through its meta-declared key.
+    let meta = device_only.factor_meta();
+    if let Some(&pair) = meta.levels[0].ls.first() {
+        let panel = device_only
+            .download_block(FactorBlock::Ls { level: 0, pair })
+            .expect("declared panel exists");
+        assert_eq!(panel.as_slice(), fac.levels[0].ls[&pair].as_slice());
+    }
+
+    // Unknown blocks are typed errors, not panics.
+    let err = device_only
+        .download_block(FactorBlock::CholRr { level: 99, box_index: 0 })
+        .expect_err("bogus level");
+    assert!(matches!(err, H2Error::InvalidConfig(_)));
+}
+
+#[test]
+fn storage_mode_parses_like_backend_spec() {
+    assert_eq!(FactorStorage::by_name("mirrored"), Some(FactorStorage::Mirrored));
+    assert_eq!(FactorStorage::by_name("device-only"), Some(FactorStorage::DeviceOnly));
+    assert_eq!(FactorStorage::by_name("device_only"), Some(FactorStorage::DeviceOnly));
+    assert_eq!(FactorStorage::by_name("gpu"), None);
+    assert_eq!(FactorStorage::default().name(), "mirrored");
+    assert_eq!(FactorStorage::DeviceOnly.name(), "device-only");
+}
