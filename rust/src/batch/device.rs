@@ -26,16 +26,48 @@
 //! | `RootSolve` | dense `potrs` at the root — the one serialization point |
 //! | `Extract` / `Merge` / `Split` / `Concat` / `CopyBuf` / `AddVec` | device-side batched copies (no FLOPs, no host round-trip) |
 //!
-//! # Streams and fences
+//! # Streams, fences, and hazards (normative)
 //!
-//! Launches are issued in program order. [`Device::stream`] marks tree
-//! level boundaries: the plan guarantees launches *within* a level have no
-//! mutual data dependencies beyond the order the stream already encodes,
-//! so an implementation may double-buffer — e.g. overlap level *k*'s TRSM
-//! with level *k+1*'s sparsify uploads — provided [`Device::fence`] drains
-//! everything before the executor downloads results. The three in-tree
-//! backends are host-synchronous, so their hooks are no-ops; the seam
-//! exists for a real multi-stream GPU device.
+//! These rules are the contract between the plan executor and every
+//! overlapping [`Device`] implementation (the in-tree one is
+//! [`AsyncDevice`](r#async::AsyncDevice); the three base backends are
+//! host-synchronous and satisfy the contract trivially):
+//!
+//! 1. **Program order is the semantic order.** The executor issues
+//!    launches and arena transfers in the recorded plan order; an
+//!    implementation may *execute* them in any order that preserves the
+//!    per-buffer data dependencies below. The result must be bit-identical
+//!    to in-order execution — overlap may only change *when* kernels run,
+//!    never their operands or arithmetic.
+//! 2. **Hazards are per `BufferId`.** Two operations conflict iff they
+//!    touch the same buffer of the same arena and at least one writes it
+//!    (write = `upload`/`alloc`/`free` of the id, or a launch operand in a
+//!    written role — POTRF blocks, TRSM panels, SYRK/Sparsify/Extract/
+//!    Merge destinations). Conflicting operations must execute in issue
+//!    order (RAW, WAR, and WAW edges all hold); non-conflicting operations
+//!    may overlap arbitrarily — the plan guarantees launches *within* a
+//!    level are mutually independent, and level *k+1*'s uploads are
+//!    independent of level *k*'s compute, which is exactly the overlap the
+//!    paper's schedule exposes.
+//! 3. **[`Device::stream`] is a placement hint, never a synchronization
+//!    point.** It marks tree-level boundaries (the executor emits it in
+//!    both the factorization and substitution replays); an implementation
+//!    may route subsequent work to a different queue, but correctness must
+//!    come from rule 2 alone — a device that needs `stream` calls to be
+//!    correct is broken.
+//! 4. **[`Device::fence`] drains.** After `fence` returns, every
+//!    previously issued operation has completed and its effects are
+//!    visible to `download`/`take`. The executor fences before every
+//!    result download ([`SolveInstr::StoreSol`](crate::plan::SolveInstr)
+//!    and the end of a factorization replay); arena reads outside a fence
+//!    observe unspecified intermediate state. A panic raised by any
+//!    asynchronous operation is re-raised by the next `fence` on the
+//!    issuing thread.
+//! 5. **[`Device::launch_solve`] is synchronous and concurrent.** It may
+//!    be called from many threads against one shared factor region with
+//!    distinct workspaces; implementations must not require the caller to
+//!    fence between solve launches of one workspace (their program order
+//!    on the calling thread is the dependency order).
 //!
 //! # Factor region vs. vector regions (concurrent solves)
 //!
@@ -69,8 +101,15 @@
 //! round-tripping each call through a scratch arena, so old benches and
 //! research code keep compiling until they migrate.
 
+pub mod r#async;
+pub mod validate;
+
+pub use r#async::AsyncDevice;
+pub use validate::ValidatingDevice;
+
 use crate::linalg::{chol, Matrix};
 use crate::metrics::flops;
+use crate::metrics::overlap::OverlapTrace;
 use crate::plan::{BasisItem, BufferId, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem};
 use std::any::Any;
 
@@ -181,6 +220,10 @@ pub trait DeviceArena: Send + Sync {
     fn free_region(&mut self, from: BufferId);
     /// Number of live (allocated) buffers — the leak-check hook.
     fn live(&self) -> usize;
+    /// Whether slot `id` currently holds a buffer. `false` for ids that
+    /// were never written, already freed, or out of the arena's range —
+    /// the [`validate::ValidatingDevice`] liveness-audit hook.
+    fn is_live(&self, id: BufferId) -> bool;
     /// Payload bytes of the live buffers (8 bytes per f64 entry), or 0 if
     /// the implementation does not track footprint.
     fn bytes(&self) -> usize {
@@ -232,6 +275,14 @@ pub trait Device: Sync {
     /// Drain all outstanding asynchronous work. Must be called before any
     /// `download` observes launch results; no-op for synchronous backends.
     fn fence(&self) {}
+    /// Drain and hand back the per-stream busy intervals recorded since
+    /// the last call — `Some` only on overlapping devices
+    /// ([`r#async::AsyncDevice`]); synchronous backends return `None`.
+    /// The session facade stores the factorization's trace in
+    /// [`crate::solver::BuildStats::overlap`].
+    fn take_overlap_trace(&self) -> Option<OverlapTrace> {
+        None
+    }
     /// Human-readable backend name (diagnostics / reports).
     fn name(&self) -> &'static str;
 }
@@ -413,6 +464,10 @@ impl DeviceArena for HostArena {
         self.live
     }
 
+    fn is_live(&self, id: BufferId) -> bool {
+        self.slots.get(id.0 as usize).map(|s| !s.is_empty()).unwrap_or(false)
+    }
+
     fn bytes(&self) -> usize {
         self.bytes
     }
@@ -473,6 +528,127 @@ pub(crate) fn host_arena_ref(arena: &dyn DeviceArena) -> &HostArena {
         .as_any()
         .downcast_ref::<HostArena>()
         .expect("host-memory backend requires a HostArena (arena from another device?)")
+}
+
+/// Insert an *owned* matrix into `arena` at `id`: a pointer move on the
+/// shared [`HostArena`] (all three in-tree backends), an `upload` copy on
+/// anything else. This is how the async executor moves buffers between the
+/// shared arena and a launch's private arena without per-launch host
+/// marshalling.
+pub(crate) fn put_owned(arena: &mut dyn DeviceArena, id: BufferId, m: Matrix) {
+    match arena.as_any_mut().downcast_mut::<HostArena>() {
+        Some(host) => host.put_mat(id, m),
+        None => arena.upload(id, &m),
+    }
+}
+
+/// A [`Launch`]'s operands classified by role — the single source of truth
+/// for hazard edges ([`r#async::AsyncDevice`]) and the hazard audit
+/// ([`validate::ValidatingDevice`]). Lists are *not* deduplicated: repeats
+/// (e.g. one diagonal block shared by many TRSM panels) are preserved so
+/// the audit can see per-item aliasing.
+///
+/// Matrix operands live in the factorization arena (the factor region for
+/// substitution launches); vector operands live in the solve workspace.
+/// `*_rw` buffers are read *and* written in place by the kernel; `*_writes`
+/// are created/overwritten outputs.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct LaunchOperands {
+    pub mat_reads: Vec<BufferId>,
+    pub mat_rw: Vec<BufferId>,
+    pub mat_writes: Vec<BufferId>,
+    pub vec_reads: Vec<BufferId>,
+    pub vec_rw: Vec<BufferId>,
+    pub vec_writes: Vec<BufferId>,
+}
+
+/// Classify every operand of a launch by role (see [`LaunchOperands`]).
+pub(crate) fn launch_operands(launch: &Launch<'_>) -> LaunchOperands {
+    let mut ops = LaunchOperands::default();
+    match launch {
+        Launch::Potrf { bufs, .. } => {
+            ops.mat_rw.extend_from_slice(bufs);
+        }
+        Launch::TrsmRightLt { items, .. } => {
+            for it in items.iter() {
+                ops.mat_reads.push(it.l);
+                ops.mat_rw.push(it.b);
+            }
+        }
+        Launch::SchurSelf { items, .. } => {
+            for it in items.iter() {
+                ops.mat_reads.push(it.a);
+                ops.mat_rw.push(it.c);
+            }
+        }
+        Launch::Sparsify { items, .. } => {
+            for it in items.iter() {
+                ops.mat_reads.push(it.u);
+                ops.mat_reads.push(it.a);
+                ops.mat_reads.push(it.v);
+                ops.mat_writes.push(it.dst);
+            }
+        }
+        Launch::Extract { items } => {
+            for it in items.iter() {
+                ops.mat_reads.push(it.src);
+                ops.mat_writes.push(it.dst);
+            }
+        }
+        Launch::Merge { items } => {
+            for it in items.iter() {
+                for p in &it.parts {
+                    ops.mat_reads.push(p.src);
+                }
+                ops.mat_writes.push(it.dst);
+            }
+        }
+        Launch::ApplyBasis { items, .. } => {
+            for &(u, src, dst) in items.iter() {
+                ops.mat_reads.push(u);
+                ops.vec_reads.push(src);
+                ops.vec_writes.push(dst);
+            }
+        }
+        Launch::TrsvFwd { items, .. } | Launch::TrsvBwd { items, .. } => {
+            for &(l, x) in items.iter() {
+                ops.mat_reads.push(l);
+                ops.vec_rw.push(x);
+            }
+        }
+        Launch::GemvAcc { items, .. } => {
+            for &(a, x, y) in items.iter() {
+                ops.mat_reads.push(a);
+                ops.vec_reads.push(x);
+                ops.vec_rw.push(y);
+            }
+        }
+        Launch::Split { items } => {
+            for &(src, _, lo, hi) in items.iter() {
+                ops.vec_reads.push(src);
+                ops.vec_writes.push(lo);
+                ops.vec_writes.push(hi);
+            }
+        }
+        Launch::Concat { items } | Launch::AddVec { items } => {
+            for &(dst, a, b) in items.iter() {
+                ops.vec_reads.push(a);
+                ops.vec_reads.push(b);
+                ops.vec_writes.push(dst);
+            }
+        }
+        Launch::CopyBuf { items } => {
+            for &(dst, src) in items.iter() {
+                ops.vec_reads.push(src);
+                ops.vec_writes.push(dst);
+            }
+        }
+        Launch::RootSolve { l, x } => {
+            ops.mat_reads.push(*l);
+            ops.vec_rw.push(*x);
+        }
+    }
+    ops
 }
 
 /// Execute one *factorization-phase* launch against a [`HostArena`] using

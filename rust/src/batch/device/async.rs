@@ -1,0 +1,848 @@
+//! [`AsyncDevice`]: an overlapping multi-stream executor wrapped around
+//! any host-synchronous [`Device`].
+//!
+//! The paper's schedule property — level *k*'s batched TRSM/Schur work has
+//! no dependency on level *k+1*'s sparsify uploads — only pays off if an
+//! executor actually runs them concurrently. `AsyncDevice` does exactly
+//! that for the factorization replay:
+//!
+//! * **Journaled arena traffic.** Arenas created by an `AsyncDevice` are
+//!   [`AsyncArena`]s: matrix `upload`s, `free`s, and every factorization
+//!   [`Launch`] are *journaled* as asynchronous operations instead of
+//!   executing on the issuing thread. `stream(level)` routes subsequent
+//!   operations to the queue `level % streams` (two queues by default —
+//!   the paper's double-buffer), each drained in FIFO order by its own
+//!   worker thread.
+//! * **A `BufferId`-granular hazard tracker.** At enqueue time every
+//!   operation declares its operand set (from the launch operand lists
+//!   via [`super::launch_operands`], or the touched id for
+//!   uploads/frees), held *exclusively*: because the staging strategy
+//!   below moves buffers instead of sharing them, per-buffer ordering is
+//!   a single last-toucher chain whose transitive closure yields every
+//!   RAW/WAR/WAW edge — read-read pairs serialize too; see
+//!   `OwnedLaunch::operand_set` for why no recorded plan loses overlap to
+//!   this. A worker only starts an operation once all its edges have
+//!   completed. Issue order is the semantic order (device.rs "Streams,
+//!   fences, and hazards"), so replay results are **bit-identical** to
+//!   the wrapped device — overlap reorders *when* kernels run, never
+//!   their operands.
+//! * **Zero-copy staging on host arenas.** A worker executes a launch by
+//!   *moving* its operand buffers from the shared arena into a private
+//!   arena (pointer moves via the `HostArena` fast path of
+//!   [`super::put_owned`]), running the wrapped device's kernel outside
+//!   any lock, and moving the results back. The shared-arena lock is held
+//!   only during the two pointer-move phases, which is what lets an
+//!   upload on one stream proceed while another stream computes.
+//! * **[`Device::fence`] drains.** It blocks until every journaled
+//!   operation has completed and re-raises the first worker panic (so a
+//!   non-SPD breakdown surfaces on the issuing thread exactly as on a
+//!   synchronous device). The executor already fences before every
+//!   download.
+//! * **Observable overlap.** Every executed operation is recorded as an
+//!   [`OverlapEvent`] (stream, level, wall-clock interval);
+//!   [`Device::take_overlap_trace`] drains the [`OverlapTrace`] that the
+//!   test harness and `BuildStats` interrogate.
+//!
+//! Substitution launches ([`Device::launch_solve`]) stay synchronous on
+//! the calling thread: their concurrency comes from the session's
+//! workspace pool (many threads, one read-only factor region), and their
+//! vector operands live in caller-borrowed regions that cannot outlive a
+//! journal entry. The wrapper resolves both regions to the wrapped
+//! device's arenas and delegates, so an `AsyncDevice` session keeps the
+//! lock-free concurrent-solve property of PR 4.
+//!
+//! The transfer clone in [`AsyncArena::upload`] is this emulation's analog
+//! of staging into pinned host memory: the borrowed source matrix cannot
+//! outlive the `upload` call, so the owned copy is taken at issue time and
+//! the device-side insertion (a pointer move on host arenas) happens on
+//! the worker — genuinely concurrent with other streams' compute.
+
+use super::{launch_operands, put_owned, Device, DeviceArena, Launch};
+use crate::linalg::Matrix;
+use crate::metrics::overlap::{OverlapEvent, OverlapKind, OverlapTrace};
+use crate::plan::{BufferId, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem};
+use std::any::Any;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Instant;
+
+/// Default number of stream queues: two adjacent tree levels in flight —
+/// the paper's double-buffering.
+pub const DEFAULT_STREAMS: usize = 2;
+
+// ---------------------------------------------------------------------
+// Owned launches (journal entries cannot borrow the plan).
+// ---------------------------------------------------------------------
+
+/// An owned factorization launch: the journal's copy of a [`Launch`] whose
+/// operand lists are borrowed from the plan. Substitution opcodes never
+/// enter the journal (they execute synchronously through `launch_solve`).
+#[derive(Clone, Debug)]
+enum OwnedLaunch {
+    Potrf { level: usize, bufs: Vec<BufferId> },
+    TrsmRightLt { level: usize, items: Vec<TrsmItem> },
+    SchurSelf { level: usize, items: Vec<SyrkItem> },
+    Sparsify { level: usize, items: Vec<SparsifyItem> },
+    Extract { items: Vec<ExtractItem> },
+    Merge { items: Vec<MergeItem> },
+}
+
+impl OwnedLaunch {
+    /// Copy a factorization-phase launch; `None` for substitution opcodes.
+    fn from_launch(launch: &Launch<'_>) -> Option<OwnedLaunch> {
+        Some(match launch {
+            Launch::Potrf { level, bufs } => {
+                OwnedLaunch::Potrf { level: *level, bufs: bufs.to_vec() }
+            }
+            Launch::TrsmRightLt { level, items } => {
+                OwnedLaunch::TrsmRightLt { level: *level, items: items.to_vec() }
+            }
+            Launch::SchurSelf { level, items } => {
+                OwnedLaunch::SchurSelf { level: *level, items: items.to_vec() }
+            }
+            Launch::Sparsify { level, items } => {
+                OwnedLaunch::Sparsify { level: *level, items: items.to_vec() }
+            }
+            Launch::Extract { items } => OwnedLaunch::Extract { items: items.to_vec() },
+            Launch::Merge { items } => OwnedLaunch::Merge { items: items.to_vec() },
+            _ => return None,
+        })
+    }
+
+    /// Re-borrow as the trait-level launch type.
+    fn as_launch(&self) -> Launch<'_> {
+        match self {
+            OwnedLaunch::Potrf { level, bufs } => Launch::Potrf { level: *level, bufs },
+            OwnedLaunch::TrsmRightLt { level, items } => {
+                Launch::TrsmRightLt { level: *level, items }
+            }
+            OwnedLaunch::SchurSelf { level, items } => {
+                Launch::SchurSelf { level: *level, items }
+            }
+            OwnedLaunch::Sparsify { level, items } => {
+                Launch::Sparsify { level: *level, items }
+            }
+            OwnedLaunch::Extract { items } => Launch::Extract { items },
+            OwnedLaunch::Merge { items } => Launch::Merge { items },
+        }
+    }
+
+    /// Every operand id, deduplicated, declared as an *exclusive* hazard
+    /// set. The contract (device.rs rule 2) permits concurrent readers,
+    /// but this executor's staging strategy physically *moves* operands
+    /// into a launch's private arena, so it conservatively serializes
+    /// read-read pairs too. No recorded plan loses overlap to this:
+    /// same-level launches are already FIFO on one stream, and every
+    /// cross-level pair is either buffer-disjoint (uploads vs prior
+    /// compute — the overlap that matters) or genuinely ordered (merge →
+    /// next-level sparsify).
+    fn operand_set(&self) -> Vec<BufferId> {
+        let ops = launch_operands(&self.as_launch());
+        let mut set = ops.mat_reads;
+        set.extend(ops.mat_rw);
+        set.extend(ops.mat_writes);
+        set.sort_unstable_by_key(|b| b.0);
+        set.dedup();
+        set
+    }
+
+    /// Rewrite every operand id through `map` (shared-arena id → private
+    /// execution-arena id).
+    fn remap(&mut self, map: &HashMap<u32, BufferId>) {
+        fn r(map: &HashMap<u32, BufferId>, b: &mut BufferId) {
+            *b = map[&b.0];
+        }
+        match self {
+            OwnedLaunch::Potrf { bufs, .. } => {
+                for b in bufs {
+                    r(map, b);
+                }
+            }
+            OwnedLaunch::TrsmRightLt { items, .. } => {
+                for it in items {
+                    r(map, &mut it.l);
+                    r(map, &mut it.b);
+                }
+            }
+            OwnedLaunch::SchurSelf { items, .. } => {
+                for it in items {
+                    r(map, &mut it.a);
+                    r(map, &mut it.c);
+                }
+            }
+            OwnedLaunch::Sparsify { items, .. } => {
+                for it in items {
+                    r(map, &mut it.u);
+                    r(map, &mut it.a);
+                    r(map, &mut it.v);
+                    r(map, &mut it.dst);
+                }
+            }
+            OwnedLaunch::Extract { items } => {
+                for it in items {
+                    r(map, &mut it.src);
+                    r(map, &mut it.dst);
+                }
+            }
+            OwnedLaunch::Merge { items } => {
+                for it in items {
+                    r(map, &mut it.dst);
+                    for p in &mut it.parts {
+                        r(map, &mut p.src);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The stream engine.
+// ---------------------------------------------------------------------
+
+/// The shared inner arena of one [`AsyncArena`]: the wrapped device's own
+/// arena behind a lock that workers (briefly, for pointer-move staging)
+/// and synchronous readers share.
+struct InnerArena {
+    id: u64,
+    cell: RwLock<Box<dyn DeviceArena>>,
+}
+
+/// Lock an arena cell for writing, recovering from poisoning. A panic
+/// while the guard is held (a kernel breakdown, a take of a dead buffer)
+/// is already recorded by the engine and re-raised at the next `fence`;
+/// the arena contents are then exactly as unspecified as on a synchronous
+/// device after the same panic — but the lock itself must stay usable so
+/// the PR-4 unwind guards (workspace reset, pool return) and post-repair
+/// traffic keep working.
+fn write_cell(cell: &RwLock<Box<dyn DeviceArena>>) -> RwLockWriteGuard<'_, Box<dyn DeviceArena>> {
+    cell.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shared-lock counterpart of [`write_cell`] (same poisoning rationale).
+fn read_cell(cell: &RwLock<Box<dyn DeviceArena>>) -> RwLockReadGuard<'_, Box<dyn DeviceArena>> {
+    cell.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One journaled operation's payload.
+enum OpAction {
+    /// Insert a staged matrix (the "device-side" half of an upload).
+    Upload { arena: Arc<InnerArena>, id: BufferId, mat: Matrix },
+    /// Release buffers (a plan `Free` step).
+    Free { arena: Arc<InnerArena>, bufs: Vec<BufferId> },
+    /// Execute a batched factorization launch.
+    Launch { arena: Arc<InnerArena>, launch: OwnedLaunch },
+}
+
+/// One journal entry: payload plus the hazard edges it must wait on.
+struct Op {
+    seq: u64,
+    /// Seqs of still-pending conflicting operations (strictly earlier).
+    deps: Vec<u64>,
+    level: usize,
+    kind: OverlapKind,
+    opcode: &'static str,
+    action: OpAction,
+}
+
+/// Last operation touching one `(arena, buffer)` pair. Every journaled
+/// operation declares its operands exclusively (see
+/// `OwnedLaunch::operand_set`), so per-buffer ordering is a single
+/// last-writer chain: each new op depends on the previous toucher, and
+/// transitivity gives the full RAW/WAR/WAW order.
+#[derive(Default)]
+struct Access {
+    writer: Option<u64>,
+}
+
+struct EngineState {
+    queues: Vec<VecDeque<Op>>,
+    next_seq: u64,
+    /// Completed op seqs (cleared whenever the engine goes quiescent).
+    done: HashSet<u64>,
+    /// Hazard table: last toucher per (arena, buffer).
+    access: HashMap<(u64, u32), Access>,
+    /// Queued + executing operations.
+    inflight: usize,
+    current_stream: usize,
+    current_level: usize,
+    trace: Vec<OverlapEvent>,
+    /// First worker panic, re-raised by the next `fence`.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+/// The multi-stream scheduler shared by an [`AsyncDevice`] and every
+/// [`AsyncArena`] it creates.
+struct Engine {
+    device: Arc<dyn Device + Send + Sync>,
+    state: Mutex<EngineState>,
+    cv: Condvar,
+    origin: Instant,
+    streams: usize,
+    /// Mirror of `EngineState::inflight` for the lock-free drain fast
+    /// path (data visibility itself comes from the arena locks).
+    pending: AtomicUsize,
+    next_arena: AtomicU64,
+}
+
+impl Engine {
+    fn new(device: Arc<dyn Device + Send + Sync>, streams: usize) -> Engine {
+        Engine {
+            device,
+            state: Mutex::new(EngineState {
+                queues: (0..streams).map(|_| VecDeque::new()).collect(),
+                next_seq: 0,
+                done: HashSet::new(),
+                access: HashMap::new(),
+                inflight: 0,
+                current_stream: 0,
+                current_level: usize::MAX,
+                trace: Vec::new(),
+                panic: None,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            origin: Instant::now(),
+            streams,
+            pending: AtomicUsize::new(0),
+            next_arena: AtomicU64::new(0),
+        }
+    }
+
+    /// Journal one operation touching `operands` (exclusively): compute
+    /// its hazard edges against the pending set, append it to the current
+    /// stream's queue, and return without executing. After device
+    /// shutdown (late arena traffic) the operation degrades to
+    /// synchronous execution on the caller thread.
+    fn enqueue(
+        &self,
+        arena_id: u64,
+        operands: &[BufferId],
+        kind: OverlapKind,
+        opcode: &'static str,
+        action: OpAction,
+    ) {
+        let mut guard = self.state.lock().unwrap();
+        if guard.shutdown {
+            drop(guard);
+            exec_op(self.device.as_ref(), action);
+            return;
+        }
+        let seq = guard.next_seq;
+        guard.next_seq += 1;
+        let mut deps: Vec<u64> = Vec::new();
+        for &b in operands {
+            if let Some(acc) = guard.access.get(&(arena_id, b.0)) {
+                if let Some(prev) = acc.writer {
+                    if !guard.done.contains(&prev) {
+                        deps.push(prev);
+                    }
+                }
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        for &b in operands {
+            guard.access.entry((arena_id, b.0)).or_default().writer = Some(seq);
+        }
+        let stream = guard.current_stream;
+        let level = guard.current_level;
+        guard.inflight += 1;
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        guard.queues[stream].push_back(Op { seq, deps, level, kind, opcode, action });
+        drop(guard);
+        self.cv.notify_all();
+    }
+
+    /// Wait until every journaled operation has completed. Lock-free when
+    /// the engine is already quiescent — the per-solve-launch fast path.
+    fn drain(&self) {
+        if self.pending.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.inflight > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        // Quiescent: nothing references the bookkeeping any more.
+        st.done.clear();
+        st.access.clear();
+    }
+
+    /// [`drain`](Engine::drain), then re-raise the first worker panic on
+    /// this thread (the `Device::fence` contract).
+    fn fence(&self) {
+        self.drain();
+        let payload = self.state.lock().unwrap().panic.take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    fn set_stream(&self, level: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.current_stream = level % self.streams;
+        st.current_level = level;
+    }
+
+    fn take_trace(&self) -> OverlapTrace {
+        let mut st = self.state.lock().unwrap();
+        OverlapTrace { events: std::mem::take(&mut st.trace) }
+    }
+}
+
+/// Execute one journaled operation against the wrapped device.
+fn exec_op(device: &dyn Device, action: OpAction) {
+    match action {
+        OpAction::Upload { arena, id, mat } => {
+            let mut shared = write_cell(&arena.cell);
+            put_owned(&mut **shared, id, mat);
+        }
+        OpAction::Free { arena, bufs } => {
+            let mut shared = write_cell(&arena.cell);
+            for b in bufs {
+                shared.free(b);
+            }
+        }
+        OpAction::Launch { arena, launch } => exec_async_launch(device, &arena, launch),
+    }
+}
+
+/// Execute one batched launch: move its operands from the shared arena
+/// into a dense-id private arena (pointer moves on host arenas), run the
+/// wrapped device's kernel with **no lock held**, and move every operand
+/// and output back. The hazard tracker guarantees no other in-flight
+/// operation touches these buffers, so the round-trip is invisible.
+fn exec_async_launch(device: &dyn Device, arena: &InnerArena, mut launch: OwnedLaunch) {
+    let ops = launch_operands(&launch.as_launch());
+    let mut uniq: Vec<BufferId> = Vec::new();
+    let mut map: HashMap<u32, BufferId> = HashMap::new();
+    for &id in ops.mat_reads.iter().chain(&ops.mat_rw).chain(&ops.mat_writes) {
+        if let std::collections::hash_map::Entry::Vacant(e) = map.entry(id.0) {
+            e.insert(BufferId(uniq.len() as u32));
+            uniq.push(id);
+        }
+    }
+    // Pure outputs are created by the kernel; everything else moves in.
+    let gathered: HashSet<u32> =
+        ops.mat_reads.iter().chain(&ops.mat_rw).map(|b| b.0).collect();
+    let mut private = device.new_arena(uniq.len());
+    {
+        let mut shared = write_cell(&arena.cell);
+        for &id in &uniq {
+            if gathered.contains(&id.0) {
+                let m = shared.take(id);
+                put_owned(private.as_mut(), map[&id.0], m);
+            }
+        }
+    }
+    launch.remap(&map);
+    device.launch(private.as_mut(), &launch.as_launch());
+    device.fence();
+    {
+        let mut shared = write_cell(&arena.cell);
+        for &id in &uniq {
+            let m = private.take(map[&id.0]);
+            put_owned(&mut **shared, id, m);
+        }
+    }
+}
+
+/// Per-stream worker: pops the front of its queue once all hazard edges
+/// are done, executes it, and publishes completion. FIFO per queue plus
+/// strictly-earlier dependency seqs make the schedule deadlock-free (the
+/// minimal-seq unfinished operation is always runnable).
+fn worker_loop(engine: Arc<Engine>, stream: usize) {
+    loop {
+        let op = {
+            let mut st = engine.state.lock().unwrap();
+            loop {
+                // Honor shutdown only once this queue is empty: an op that
+                // raced past the enqueue-side shutdown check (journaled
+                // between Drop's drain and the flag flip) must still
+                // execute, or a surviving arena's next drain would hang on
+                // `inflight` forever.
+                if st.shutdown && st.queues[stream].is_empty() {
+                    return;
+                }
+                let ready = st.queues[stream]
+                    .front()
+                    .map(|op| op.deps.iter().all(|d| st.done.contains(d)))
+                    .unwrap_or(false);
+                if ready {
+                    break st.queues[stream].pop_front().unwrap();
+                }
+                st = engine.cv.wait(st).unwrap();
+            }
+        };
+        let Op { seq, level, kind, opcode, action, .. } = op;
+        let start = engine.origin.elapsed().as_secs_f64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec_op(engine.device.as_ref(), action)
+        }));
+        let end = engine.origin.elapsed().as_secs_f64();
+        let mut st = engine.state.lock().unwrap();
+        st.done.insert(seq);
+        st.inflight -= 1;
+        engine.pending.fetch_sub(1, Ordering::SeqCst);
+        st.trace.push(OverlapEvent { stream, level, kind, opcode, start, end });
+        if let Err(payload) = result {
+            // First failure wins; dependents still run (and may fail on
+            // the inconsistent state — also recorded) so the queues always
+            // drain and `fence` can re-raise deterministically.
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        drop(st);
+        engine.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// The journaling arena.
+// ---------------------------------------------------------------------
+
+/// The arena type an [`AsyncDevice`] hands out: journals matrix uploads
+/// and frees (the factorization-replay traffic) onto the stream queues,
+/// and serves everything synchronous — vector traffic, downloads, balance
+/// queries — by draining first. Downloads therefore always observe
+/// post-fence state, and the live/bytes invariants the device tests assert
+/// hold exactly as on the wrapped arena.
+pub struct AsyncArena {
+    handle: Arc<InnerArena>,
+    engine: Arc<Engine>,
+}
+
+impl AsyncArena {
+    /// Synchronous access after a drain (reads and solve-phase traffic).
+    fn sync<T>(&self, f: impl FnOnce(&dyn DeviceArena) -> T) -> T {
+        self.engine.drain();
+        let shared = read_cell(&self.handle.cell);
+        f(&**shared)
+    }
+
+    fn sync_mut<T>(&mut self, f: impl FnOnce(&mut dyn DeviceArena) -> T) -> T {
+        self.engine.drain();
+        let mut shared = write_cell(&self.handle.cell);
+        f(&mut **shared)
+    }
+}
+
+impl DeviceArena for AsyncArena {
+    fn upload(&mut self, id: BufferId, m: &Matrix) {
+        // The staging copy (pinned-memory analog) happens here; the
+        // device-side insertion runs on a stream worker.
+        self.engine.enqueue(
+            self.handle.id,
+            &[id],
+            OverlapKind::Transfer,
+            "UPLOAD",
+            OpAction::Upload { arena: self.handle.clone(), id, mat: m.clone() },
+        );
+    }
+
+    fn upload_vec(&mut self, id: BufferId, v: &[f64]) {
+        self.sync_mut(|a| a.upload_vec(id, v));
+    }
+
+    fn alloc(&mut self, id: BufferId, rows: usize, cols: usize) {
+        self.sync_mut(|a| a.alloc(id, rows, cols));
+    }
+
+    fn alloc_vec(&mut self, id: BufferId, len: usize) {
+        self.sync_mut(|a| a.alloc_vec(id, len));
+    }
+
+    fn download(&self, id: BufferId) -> Matrix {
+        self.sync(|a| a.download(id))
+    }
+
+    fn take(&mut self, id: BufferId) -> Matrix {
+        self.sync_mut(|a| a.take(id))
+    }
+
+    fn download_vec(&self, id: BufferId) -> Vec<f64> {
+        self.sync(|a| a.download_vec(id))
+    }
+
+    fn free(&mut self, id: BufferId) {
+        self.engine.enqueue(
+            self.handle.id,
+            &[id],
+            OverlapKind::Housekeeping,
+            "FREE",
+            OpAction::Free { arena: self.handle.clone(), bufs: vec![id] },
+        );
+    }
+
+    fn free_region(&mut self, from: BufferId) {
+        self.sync_mut(|a| a.free_region(from));
+    }
+
+    fn live(&self) -> usize {
+        self.sync(|a| a.live())
+    }
+
+    fn is_live(&self, id: BufferId) -> bool {
+        self.sync(|a| a.is_live(id))
+    }
+
+    fn bytes(&self) -> usize {
+        self.sync(|a| a.bytes())
+    }
+
+    fn peak_bytes(&self) -> usize {
+        self.sync(|a| a.peak_bytes())
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// The device wrapper.
+// ---------------------------------------------------------------------
+
+/// Overlapping multi-stream executor around any host-synchronous
+/// [`Device`] (see the module docs for the execution model). Construct
+/// with [`AsyncDevice::new`] (two streams) or
+/// [`AsyncDevice::with_streams`]; the facade spells it `async:<inner>`
+/// ([`crate::solver::BackendSpec`]).
+pub struct AsyncDevice<D: Device + Send + Sync + 'static> {
+    inner: Arc<D>,
+    engine: Arc<Engine>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<D: Device + Send + Sync + 'static> AsyncDevice<D> {
+    /// Wrap `inner` with the default double-buffered stream pair.
+    pub fn new(inner: D) -> AsyncDevice<D> {
+        AsyncDevice::with_streams(inner, DEFAULT_STREAMS)
+    }
+
+    /// Wrap `inner` with an explicit stream count (clamped to ≥ 1). One
+    /// worker thread per stream; `stream(level)` routes to
+    /// `level % streams`.
+    pub fn with_streams(inner: D, streams: usize) -> AsyncDevice<D> {
+        let streams = streams.max(1);
+        let inner = Arc::new(inner);
+        let device: Arc<dyn Device + Send + Sync> = inner.clone();
+        let engine = Arc::new(Engine::new(device, streams));
+        let workers = (0..streams)
+            .map(|s| {
+                let engine = engine.clone();
+                std::thread::Builder::new()
+                    .name(format!("h2ulv-stream-{s}"))
+                    .spawn(move || worker_loop(engine, s))
+                    .expect("failed to spawn stream worker")
+            })
+            .collect();
+        AsyncDevice { inner, engine, workers }
+    }
+
+    /// The wrapped device.
+    pub fn inner(&self) -> &D {
+        &self.inner
+    }
+
+    /// Number of stream queues.
+    pub fn streams(&self) -> usize {
+        self.engine.streams
+    }
+}
+
+impl<D: Device + Send + Sync + 'static> Drop for AsyncDevice<D> {
+    fn drop(&mut self) {
+        // Drain first: surviving arenas must never wait on ops that no
+        // worker will run.
+        self.engine.drain();
+        self.engine.state.lock().unwrap().shutdown = true;
+        self.engine.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<D: Device + Send + Sync + 'static> Device for AsyncDevice<D> {
+    fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena> {
+        Box::new(AsyncArena {
+            handle: Arc::new(InnerArena {
+                id: self.engine.next_arena.fetch_add(1, Ordering::Relaxed),
+                cell: RwLock::new(self.inner.new_arena(capacity)),
+            }),
+            engine: self.engine.clone(),
+        })
+    }
+
+    fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>) {
+        let owned = OwnedLaunch::from_launch(launch).unwrap_or_else(|| {
+            panic!(
+                "{} is a substitution-phase launch; AsyncDevice executes it \
+                 synchronously through launch_solve",
+                launch.opcode()
+            )
+        });
+        match arena.as_any_mut().downcast_mut::<AsyncArena>() {
+            Some(aa) => {
+                let operands = owned.operand_set();
+                let opcode = launch.opcode();
+                let handle = aa.handle.clone();
+                self.engine.enqueue(
+                    handle.id,
+                    &operands,
+                    OverlapKind::Compute,
+                    opcode,
+                    OpAction::Launch { arena: handle, launch: owned },
+                );
+            }
+            // A foreign arena (e.g. the wrapped device's own): execute
+            // synchronously — correct, just without overlap.
+            None => self.inner.launch(arena, launch),
+        }
+    }
+
+    fn launch_solve(
+        &self,
+        factor: &dyn DeviceArena,
+        ws: &mut dyn DeviceArena,
+        launch: &Launch<'_>,
+    ) {
+        // Quiesce journaled factor traffic (lock-free once the factor is
+        // resident), then delegate on the calling thread: solve
+        // concurrency is the workspace pool's job, not the journal's.
+        self.engine.drain();
+        {
+            let f_id = factor.as_any().downcast_ref::<AsyncArena>().map(|a| a.handle.id);
+            let w_id = ws.as_any().downcast_ref::<AsyncArena>().map(|a| a.handle.id);
+            if let (Some(f), Some(w)) = (f_id, w_id) {
+                assert_ne!(
+                    f, w,
+                    "launch_solve requires distinct factor and workspace regions"
+                );
+            }
+        }
+        let f_guard = factor
+            .as_any()
+            .downcast_ref::<AsyncArena>()
+            .map(|a| read_cell(&a.handle.cell));
+        let factor_ref: &dyn DeviceArena = match &f_guard {
+            Some(g) => &***g,
+            None => factor,
+        };
+        match ws.as_any_mut().downcast_mut::<AsyncArena>() {
+            Some(wa) => {
+                // write_cell recovers a workspace lock poisoned by an
+                // earlier panicking launch, so the executor's unwind
+                // guard can still reset the region and return it to its
+                // pool (the PR-4 contract).
+                let mut g = write_cell(&wa.handle.cell);
+                self.inner.launch_solve(factor_ref, &mut **g, launch);
+            }
+            None => self.inner.launch_solve(factor_ref, ws, launch),
+        }
+    }
+
+    fn stream(&self, level: usize) {
+        self.engine.set_stream(level);
+    }
+
+    fn fence(&self) {
+        self.engine.fence();
+    }
+
+    fn take_overlap_trace(&self) -> Option<OverlapTrace> {
+        self.engine.drain();
+        Some(self.engine.take_trace())
+    }
+
+    fn name(&self) -> &'static str {
+        match self.inner.name() {
+            "native" => "async:native",
+            "serial" => "async:serial",
+            "pjrt" => "async:pjrt",
+            _ => "async",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol;
+    use crate::solver::backend::SerialBackend;
+    use crate::util::Rng;
+
+    #[test]
+    fn async_device_replays_launches_bit_identically() {
+        let mut rng = Rng::new(42);
+        let mats: Vec<Matrix> = (0..3).map(|_| Matrix::rand_spd(10, &mut rng)).collect();
+        let dev = AsyncDevice::new(SerialBackend);
+        let mut arena = dev.new_arena(4);
+        let ids: Vec<BufferId> = (0..3u32).map(BufferId).collect();
+        dev.stream(2);
+        for (&id, m) in ids.iter().zip(&mats) {
+            arena.upload(id, m);
+        }
+        dev.launch(arena.as_mut(), &Launch::Potrf { level: 2, bufs: &ids });
+        // Cross-stream RAW hazard: the extract on the other queue reads a
+        // POTRF output and must wait for it.
+        dev.stream(1);
+        let ex = [ExtractItem { src: ids[0], r0: 0, c0: 0, rows: 4, cols: 4, dst: BufferId(3) }];
+        dev.launch(arena.as_mut(), &Launch::Extract { items: &ex });
+        dev.fence();
+        for (&id, m) in ids.iter().zip(&mats) {
+            let want = chol::cholesky(m).unwrap();
+            assert_eq!(arena.download(id).as_slice(), want.as_slice());
+        }
+        let want_block = chol::cholesky(&mats[0]).unwrap().submatrix(0, 0, 4, 4);
+        assert_eq!(arena.download(BufferId(3)).as_slice(), want_block.as_slice());
+        assert_eq!(arena.live(), 4);
+        let trace = dev.take_overlap_trace().expect("async devices trace");
+        assert_eq!(trace.events.len(), 5, "3 uploads + 2 launches");
+        assert!(trace.streams() >= 1);
+    }
+
+    #[test]
+    fn async_device_journals_frees_in_hazard_order() {
+        let mut rng = Rng::new(43);
+        let m = Matrix::rand_spd(8, &mut rng);
+        let dev = AsyncDevice::new(SerialBackend);
+        let mut arena = dev.new_arena(2);
+        dev.stream(0);
+        arena.upload(BufferId(0), &m);
+        let ex = [ExtractItem { src: BufferId(0), r0: 0, c0: 0, rows: 8, cols: 8, dst: BufferId(1) }];
+        dev.launch(arena.as_mut(), &Launch::Extract { items: &ex });
+        // The free on the other stream must wait for the extract's read.
+        dev.stream(1);
+        arena.free(BufferId(0));
+        dev.fence();
+        assert_eq!(arena.live(), 1);
+        assert_eq!(arena.download(BufferId(1)).as_slice(), m.as_slice());
+        assert!(!arena.is_live(BufferId(0)));
+    }
+
+    #[test]
+    fn async_fence_reraises_worker_panics() {
+        let dev = AsyncDevice::new(SerialBackend);
+        let mut arena = dev.new_arena(1);
+        // POTRF of a buffer that was never uploaded: the worker panics,
+        // fence re-raises on this thread.
+        let bufs = [BufferId(0)];
+        dev.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &bufs });
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dev.fence()));
+        assert!(err.is_err(), "fence must re-raise the worker panic");
+        // The engine stays usable afterwards.
+        arena.upload(BufferId(0), &Matrix::eye(2));
+        dev.fence();
+        assert_eq!(arena.live(), 1);
+    }
+}

@@ -1,0 +1,287 @@
+//! [`ValidatingDevice`]: a debug wrapper that audits every [`Launch`]
+//! against arena state before executing it.
+//!
+//! The hazard rules of the device contract (device.rs "Streams, fences,
+//! and hazards") are only trustworthy if something checks them. This
+//! wrapper enforces, per launch, the invariants every recorded plan must
+//! satisfy — and panics with the offending instruction when one is
+//! violated, so a recorder bug surfaces at the launch that exposes it
+//! rather than as a wrong number three levels later:
+//!
+//! 1. **Liveness** — every operand that is read (or updated in place) must
+//!    be live in its arena: matrices in the factorization arena (the
+//!    factor region for substitution launches), vectors in the workspace.
+//!    A dead or never-written operand is a use-after-free or a wiring bug.
+//! 2. **No out-of-range ids** — `BufferId(u32::MAX)` is the recorder's
+//!    "unset" placeholder; reaching a backend means the backward-pass
+//!    wiring left a hole.
+//! 3. **No write aliasing within one launch** — batch items execute
+//!    concurrently on real backends, so (a) no two items may write the
+//!    same buffer, and (b) no item may write a buffer another item reads.
+//!    In-place updates (POTRF blocks, TRSM panels, TRSV/GEMV vectors) are
+//!    the defined exception for their *own* operand, never across items.
+//!
+//! The wrapper is execution-transparent: it delegates to the wrapped
+//! device after the audit, so results are bit-identical and it composes
+//! with any backend (`ValidatingDevice<NativeBackend>` in the test suite;
+//! wrap it *inside* an [`super::AsyncDevice`] to audit at execution time
+//! with the journal's private arenas).
+
+use super::{launch_operands, Device, DeviceArena, Launch};
+use crate::metrics::overlap::OverlapTrace;
+use crate::plan::BufferId;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Debug wrapper auditing every launch (see the module docs). Panics on
+/// the first violated invariant; [`ValidatingDevice::audited`] counts the
+/// launches that passed.
+pub struct ValidatingDevice<D: Device> {
+    inner: D,
+    audited: AtomicUsize,
+}
+
+impl<D: Device> ValidatingDevice<D> {
+    pub fn new(inner: D) -> ValidatingDevice<D> {
+        ValidatingDevice { inner, audited: AtomicUsize::new(0) }
+    }
+
+    /// Number of launches audited (and passed) so far.
+    pub fn audited(&self) -> usize {
+        self.audited.load(Ordering::Relaxed)
+    }
+
+    /// The wrapped device.
+    pub fn inner(&self) -> &D {
+        &self.inner
+    }
+}
+
+/// Panic with the audit reason and the offending instruction.
+fn violation(launch: &Launch<'_>, reason: String) -> ! {
+    panic!(
+        "hazard audit failed for {}: {reason}\noffending instruction: {launch:?}",
+        launch.opcode()
+    )
+}
+
+fn check_id(launch: &Launch<'_>, id: BufferId, role: &str) {
+    if id.0 == u32::MAX {
+        violation(launch, format!("{role} operand is the unset placeholder B{} (out of range)", id.0));
+    }
+}
+
+fn check_live(arena: &dyn DeviceArena, launch: &Launch<'_>, id: BufferId, role: &str) {
+    check_id(launch, id, role);
+    if !arena.is_live(id) {
+        violation(
+            launch,
+            format!("{role} operand B{} is not live (never written, freed, or out of range)", id.0),
+        );
+    }
+}
+
+/// Shared write-set audit: no duplicate write targets, no write target
+/// aliasing a read operand of another item.
+fn check_write_aliasing(
+    launch: &Launch<'_>,
+    reads: &[BufferId],
+    rw: &[BufferId],
+    writes: &[BufferId],
+    space: &str,
+) {
+    let mut all_writes: Vec<u32> = rw.iter().chain(writes).map(|b| b.0).collect();
+    all_writes.sort_unstable();
+    for pair in all_writes.windows(2) {
+        if pair[0] == pair[1] {
+            violation(
+                launch,
+                format!("two batch items write the same {space} buffer B{}", pair[0]),
+            );
+        }
+    }
+    for r in reads {
+        if all_writes.binary_search(&r.0).is_ok() {
+            violation(
+                launch,
+                format!(
+                    "{space} buffer B{} is read by one batch item and written by another \
+                     (intra-launch aliasing)",
+                    r.0
+                ),
+            );
+        }
+    }
+}
+
+/// Audit a factorization-phase launch against its arena.
+fn audit_factor(arena: &dyn DeviceArena, launch: &Launch<'_>) {
+    let ops = launch_operands(launch);
+    for &id in &ops.mat_reads {
+        check_live(arena, launch, id, "read");
+    }
+    for &id in &ops.mat_rw {
+        check_live(arena, launch, id, "in-place");
+    }
+    for &id in &ops.mat_writes {
+        check_id(launch, id, "output");
+    }
+    check_write_aliasing(launch, &ops.mat_reads, &ops.mat_rw, &ops.mat_writes, "matrix");
+}
+
+/// Audit a substitution-phase launch: matrices resolve read-only in the
+/// factor region, vectors in the workspace.
+fn audit_solve(factor: &dyn DeviceArena, ws: &dyn DeviceArena, launch: &Launch<'_>) {
+    let ops = launch_operands(launch);
+    if !ops.mat_rw.is_empty() || !ops.mat_writes.is_empty() {
+        violation(
+            launch,
+            "substitution launches must not write matrix buffers (the factor region is \
+             read-only)"
+                .to_string(),
+        );
+    }
+    for &id in &ops.mat_reads {
+        check_live(factor, launch, id, "factor-region read");
+    }
+    for &id in &ops.vec_reads {
+        check_live(ws, launch, id, "workspace read");
+    }
+    for &id in &ops.vec_rw {
+        check_live(ws, launch, id, "workspace in-place");
+    }
+    for &id in &ops.vec_writes {
+        check_id(launch, id, "workspace output");
+    }
+    check_write_aliasing(launch, &ops.vec_reads, &ops.vec_rw, &ops.vec_writes, "vector");
+}
+
+impl<D: Device> Device for ValidatingDevice<D> {
+    fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena> {
+        self.inner.new_arena(capacity)
+    }
+
+    fn launch(&self, arena: &mut dyn DeviceArena, launch: &Launch<'_>) {
+        audit_factor(arena, launch);
+        self.audited.fetch_add(1, Ordering::Relaxed);
+        self.inner.launch(arena, launch);
+    }
+
+    fn launch_solve(
+        &self,
+        factor: &dyn DeviceArena,
+        ws: &mut dyn DeviceArena,
+        launch: &Launch<'_>,
+    ) {
+        audit_solve(factor, ws, launch);
+        self.audited.fetch_add(1, Ordering::Relaxed);
+        self.inner.launch_solve(factor, ws, launch);
+    }
+
+    fn stream(&self, level: usize) {
+        self.inner.stream(level);
+    }
+
+    fn fence(&self) {
+        self.inner.fence();
+    }
+
+    fn take_overlap_trace(&self) -> Option<OverlapTrace> {
+        self.inner.take_overlap_trace()
+    }
+
+    // Transparent: audits never change results, so reports keep the
+    // wrapped backend's name.
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::plan::ExtractItem;
+    use crate::solver::backend::SerialBackend;
+    use crate::util::Rng;
+
+    fn dev() -> ValidatingDevice<SerialBackend> {
+        ValidatingDevice::new(SerialBackend)
+    }
+
+    #[test]
+    fn audit_passes_well_formed_launches() {
+        let mut rng = Rng::new(7);
+        let d = dev();
+        let mut arena = d.new_arena(2);
+        arena.upload(BufferId(0), &Matrix::rand_spd(6, &mut rng));
+        let bufs = [BufferId(0)];
+        d.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &bufs });
+        let ex = [ExtractItem { src: BufferId(0), r0: 0, c0: 0, rows: 2, cols: 2, dst: BufferId(1) }];
+        d.launch(arena.as_mut(), &Launch::Extract { items: &ex });
+        assert_eq!(d.audited(), 2);
+        assert_eq!(arena.live(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "hazard audit failed for POTRF")]
+    fn audit_rejects_dead_operand() {
+        let d = dev();
+        let mut arena = d.new_arena(1);
+        let bufs = [BufferId(0)];
+        d.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &bufs });
+    }
+
+    #[test]
+    #[should_panic(expected = "two batch items write the same matrix buffer")]
+    fn audit_rejects_duplicate_write_targets() {
+        let mut rng = Rng::new(9);
+        let d = dev();
+        let mut arena = d.new_arena(1);
+        arena.upload(BufferId(0), &Matrix::rand_spd(4, &mut rng));
+        let bufs = [BufferId(0), BufferId(0)];
+        d.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &bufs });
+    }
+
+    #[test]
+    #[should_panic(expected = "intra-launch aliasing")]
+    fn audit_rejects_write_read_aliasing() {
+        let mut rng = Rng::new(11);
+        let d = dev();
+        let mut arena = d.new_arena(2);
+        arena.upload(BufferId(0), &Matrix::randn(4, 4, &mut rng));
+        arena.upload(BufferId(1), &Matrix::randn(4, 4, &mut rng));
+        // Item 1 reads B0; item 2 writes B0 while reading B1.
+        let ex = [
+            ExtractItem { src: BufferId(0), r0: 0, c0: 0, rows: 2, cols: 2, dst: BufferId(2) },
+            ExtractItem { src: BufferId(1), r0: 0, c0: 0, rows: 2, cols: 2, dst: BufferId(0) },
+        ];
+        d.launch(arena.as_mut(), &Launch::Extract { items: &ex });
+    }
+
+    #[test]
+    #[should_panic(expected = "unset placeholder")]
+    fn audit_rejects_out_of_range_ids() {
+        let d = dev();
+        let mut arena = d.new_arena(1);
+        let ex = [ExtractItem {
+            src: BufferId(u32::MAX),
+            r0: 0,
+            c0: 0,
+            rows: 1,
+            cols: 1,
+            dst: BufferId(0),
+        }];
+        d.launch(arena.as_mut(), &Launch::Extract { items: &ex });
+    }
+
+    #[test]
+    #[should_panic(expected = "factor region is read-only")]
+    fn audit_rejects_matrix_writes_in_solve_launches() {
+        let d = dev();
+        let factor = d.new_arena(1);
+        let mut ws = d.new_arena(1);
+        let bufs = [BufferId(0)];
+        // A factorization opcode routed through launch_solve.
+        d.launch_solve(factor.as_ref(), ws.as_mut(), &Launch::Potrf { level: 0, bufs: &bufs });
+    }
+}

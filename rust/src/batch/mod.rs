@@ -16,6 +16,13 @@
 //!   executed by AOT-compiled XLA executables (the paper's GPU path; see
 //!   `python/compile/` for the JAX/Pallas kernels).
 //!
+//! Two composable wrappers turn any of the above into richer executors:
+//! [`device::AsyncDevice`] overlaps adjacent tree levels on multiple
+//! stream queues with a `BufferId`-granular hazard tracker (the spec name
+//! is `async:<inner>`), and [`device::ValidatingDevice`] audits every
+//! launch against arena state (liveness, out-of-range ids, intra-launch
+//! write aliasing) before executing it.
+//!
 //! Padding follows the paper: batch elements are padded to the level
 //! maximum (multiples of 4), and POTRF padding writes unit diagonals so the
 //! Cholesky never divides by zero (the paper's "batched AXPY ... via a
@@ -30,7 +37,8 @@ pub mod native;
 pub mod pad;
 
 pub use device::{
-    Device, DeviceArena, HostArena, Launch, LegacyBatchExec, VecRegion, Workspace, WorkspacePool,
+    AsyncDevice, Device, DeviceArena, HostArena, Launch, LegacyBatchExec, ValidatingDevice,
+    VecRegion, Workspace, WorkspacePool,
 };
 
 use crate::linalg::Matrix;

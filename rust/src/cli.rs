@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! h2ulv solve     [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-//!                 [--eta E] [--backend native|pjrt|pjrt:DIR|serial]
+//!                 [--eta E] [--backend native|pjrt|pjrt:DIR|serial|async:INNER]
 //!                 [--storage mirrored|device-only]
 //!                 [--subst parallel|naive] [--ranks P]
 //! h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L] [--eta E]
+//!                 [--exec BACKEND]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
 //! h2ulv figures   [--full] [--out DIR]
 //! h2ulv info
@@ -64,16 +65,22 @@ const USAGE: &str = "h2ulv — inherently parallel H²-ULV dense solver (Ma & Yo
 USAGE:
   h2ulv solve   [--n N] [--kernel laplace|yukawa|gaussian|matern32]
                 [--geometry sphere|cube|molecule] [--rank R] [--leaf L]
-                [--eta E] [--backend native|pjrt|pjrt:DIR|serial]
+                [--eta E] [--backend native|pjrt|pjrt:DIR|serial|async:INNER]
+                (async:INNER — e.g. async:native — overlaps level k+1's
+                 uploads with level k's compute on multi-stream workers;
+                 bit-identical results, prints the observed overlap)
                 [--storage mirrored|device-only]
                 (device-only keeps the factor resident on the device with
                  no host mirror — half the factor memory; mirrored is the
                  default)
                 [--subst parallel|naive] [--ranks P] [--seed S]
   h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-                [--eta E] [--seed S]
+                [--eta E] [--seed S] [--exec BACKEND]
                 (record the execution plan only; print per-level launch
-                 counts and padded-vs-useful FLOP ratios — no numerics)
+                 counts and padded-vs-useful FLOP ratios — no numerics.
+                 --exec additionally replays the factorization on BACKEND
+                 and prints the observed per-stream schedule: on
+                 async:INNER backends this is the overlap evidence)
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
   h2ulv info
@@ -237,6 +244,9 @@ fn cmd_solve(args: &Args) -> i32 {
         stats.arena_peak_bytes as f64 / 1e6,
         8.0 * stats.mirror_entries as f64 / 1e6
     );
+    if let Some(trace) = &stats.overlap {
+        print!("{}", trace.render());
+    }
     match solver.solve(&b) {
         Ok(rep) => {
             println!("substitute[{subst:?}]: {:.4}s", rep.subst_time);
@@ -253,7 +263,10 @@ fn cmd_solve(args: &Args) -> i32 {
 /// Record the execution plan for a problem and print its schedule: the
 /// per-level launch counts and padded-vs-useful FLOP ratios come straight
 /// from the IR — no factorization (and no kernel numerics beyond H²
-/// construction) runs.
+/// construction) runs. With `--exec BACKEND` the factorization program is
+/// additionally replayed on that backend and the observed per-stream
+/// schedule is printed — on `async:<inner>` backends that is the
+/// upload/compute overlap evidence.
 fn cmd_plan_dump(args: &Args) -> i32 {
     let (n, _seed, kernel, g, cfg) = problem_from_args(args);
     if let Err(e) = crate::solver::builder::validate(&g, &cfg) {
@@ -264,17 +277,45 @@ fn cmd_plan_dump(args: &Args) -> i32 {
         "h2ulv plan-dump: N={n} kernel={} geometry={} leaf={} rank={} eta={}",
         kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
     );
-    let plan = match crate::solver::guard("planning", || {
+    let built = crate::solver::guard("planning", || {
         let h2 = crate::h2::H2Matrix::construct(&g, &kernel, &cfg);
-        crate::plan::record(&h2)
-    }) {
-        Ok(plan) => plan,
+        let plan = crate::plan::record(&h2);
+        (h2, plan)
+    });
+    let (h2, plan) = match built {
+        Ok(pair) => pair,
         Err(e) => {
             eprintln!("h2ulv plan-dump: {e}");
             return 1;
         }
     };
     print!("{}", plan.render_schedule());
+    if let Some(name) = args.get("exec") {
+        let Some(spec) = BackendSpec::by_name(name) else {
+            eprintln!("unknown backend: {name}\n{USAGE}");
+            return 2;
+        };
+        let device = match spec.instantiate() {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("h2ulv plan-dump: {e}");
+                return 1;
+            }
+        };
+        let plan = std::sync::Arc::new(plan);
+        println!("replaying factorization on {} ...", device.name());
+        let replay = crate::solver::guard("factorization", || {
+            crate::plan::Executor::new(device.as_ref()).factorize_device_only(&plan, &h2)
+        });
+        if let Err(e) = replay {
+            eprintln!("h2ulv plan-dump: {e}");
+            return 1;
+        }
+        match device.take_overlap_trace() {
+            Some(trace) => print!("{}", trace.render()),
+            None => println!("backend '{}' is synchronous — no overlap trace", device.name()),
+        }
+    }
     0
 }
 

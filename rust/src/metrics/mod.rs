@@ -4,8 +4,10 @@
 //! 15 (FLOP count), 17 (FLOP split), and 23 (compute/comm breakdown).
 
 pub mod flops;
+pub mod overlap;
 pub mod timer;
 pub mod trace;
 
+pub use overlap::{OverlapEvent, OverlapKind, OverlapTrace};
 pub use timer::Stopwatch;
 pub use trace::{TraceEvent, Tracer};

@@ -1,0 +1,214 @@
+//! Per-stream busy intervals of an overlapping executor — the evidence
+//! that asynchronous scheduling actually happened.
+//!
+//! The paper's central scheduling claim is that H²-ULV "removes the
+//! dependency on trailing sub-matrices", so level *k*'s batched compute
+//! can overlap level *k+1*'s uploads. A host-synchronous backend can only
+//! *assert* this; an overlapping one must *show* it. Every operation an
+//! [`crate::batch::device::AsyncDevice`] worker executes is recorded as an
+//! [`OverlapEvent`] (stream, level, kind, wall-clock interval), and the
+//! resulting [`OverlapTrace`] answers the two questions the test harness
+//! and `BuildStats` care about:
+//!
+//! * did a host→device transfer genuinely run while another stream was
+//!   computing ([`OverlapTrace::overlapped_transfer_pairs`])?
+//! * how busy was each stream ([`OverlapTrace::stream_busy`])?
+//!
+//! Events carry *wall-clock* intervals measured on the worker threads, not
+//! issue-order bookkeeping — an empty overlap list on an async device means
+//! the schedule degenerated to serial execution, whatever the stream tags
+//! claim.
+
+/// What kind of work an overlap event represents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapKind {
+    /// Host → device transfer (an `Instr::Upload` item).
+    Transfer,
+    /// A batched kernel launch (POTRF / TRSM / SYRK / SPARSIFY / ...).
+    Compute,
+    /// Arena bookkeeping with no data payload (`Free`).
+    Housekeeping,
+}
+
+/// One executed operation on one stream: `[start, end)` in seconds since
+/// the trace epoch (the device's creation instant).
+#[derive(Clone, Debug)]
+pub struct OverlapEvent {
+    /// Stream (worker queue) the operation executed on.
+    pub stream: usize,
+    /// Tree level active when the operation was issued (`usize::MAX` when
+    /// issued before the first `stream(level)` call).
+    pub level: usize,
+    pub kind: OverlapKind,
+    /// Opcode name (`UPLOAD`, `POTRF`, `TRSM`, ...).
+    pub opcode: &'static str,
+    /// Start offset in seconds since the trace epoch.
+    pub start: f64,
+    /// End offset in seconds since the trace epoch.
+    pub end: f64,
+}
+
+impl OverlapEvent {
+    /// Wall-clock overlap in seconds between two events (0 if disjoint).
+    pub fn overlap_with(&self, other: &OverlapEvent) -> f64 {
+        (self.end.min(other.end) - self.start.max(other.start)).max(0.0)
+    }
+}
+
+/// The recorded per-stream schedule of one (or more) replays on an
+/// overlapping device. Drained from the device via
+/// [`crate::batch::device::Device::take_overlap_trace`]; carried in
+/// [`crate::solver::BuildStats::overlap`] for facade builds.
+#[derive(Clone, Debug, Default)]
+pub struct OverlapTrace {
+    /// Executed operations in completion order.
+    pub events: Vec<OverlapEvent>,
+}
+
+impl OverlapTrace {
+    /// Number of distinct streams that executed at least one operation.
+    pub fn streams(&self) -> usize {
+        self.events.iter().map(|e| e.stream + 1).max().unwrap_or(0)
+    }
+
+    /// Total busy seconds of one stream.
+    pub fn stream_busy(&self, stream: usize) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.stream == stream)
+            .map(|e| e.end - e.start)
+            .sum()
+    }
+
+    /// `(transfer_level, compute_level)` pairs where a [`Transfer`]
+    /// event's wall-clock interval genuinely intersected a [`Compute`]
+    /// event running on a *different* stream — the paper's "level k+1
+    /// uploads while level k computes", observed rather than asserted.
+    /// Pairs are deduplicated; an empty result on an async device means no
+    /// overlap occurred.
+    ///
+    /// [`Transfer`]: OverlapKind::Transfer
+    /// [`Compute`]: OverlapKind::Compute
+    pub fn overlapped_transfer_pairs(&self) -> Vec<(usize, usize)> {
+        let mut pairs = Vec::new();
+        for t in self.events.iter().filter(|e| e.kind == OverlapKind::Transfer) {
+            for c in self.events.iter().filter(|e| e.kind == OverlapKind::Compute) {
+                if t.stream != c.stream && t.overlap_with(c) > 0.0 {
+                    let pair = (t.level, c.level);
+                    if !pairs.contains(&pair) {
+                        pairs.push(pair);
+                    }
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Whether any upload ran concurrently with compute on another stream.
+    pub fn has_transfer_compute_overlap(&self) -> bool {
+        !self.overlapped_transfer_pairs().is_empty()
+    }
+
+    /// Total seconds during which ≥2 streams were simultaneously busy
+    /// (any kinds), from an event-boundary sweep.
+    pub fn concurrent_busy(&self) -> f64 {
+        let mut edges: Vec<(f64, i32)> = Vec::with_capacity(2 * self.events.len());
+        for e in &self.events {
+            edges.push((e.start, 1));
+            edges.push((e.end, -1));
+        }
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut depth = 0;
+        let mut last = 0.0;
+        let mut out = 0.0;
+        for (t, d) in edges {
+            if depth >= 2 {
+                out += t - last;
+            }
+            depth += d;
+            last = t;
+        }
+        out
+    }
+
+    /// Human-readable per-stream summary plus the observed overlap pairs
+    /// (the `plan-dump --exec` / CLI `solve` report body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("overlap trace:\n");
+        for s in 0..self.streams() {
+            let n = self.events.iter().filter(|e| e.stream == s).count();
+            out.push_str(&format!(
+                "  stream {s}: {n} ops, busy {:.3} ms\n",
+                1e3 * self.stream_busy(s)
+            ));
+        }
+        out.push_str(&format!(
+            "  concurrent (≥2 streams busy): {:.3} ms\n",
+            1e3 * self.concurrent_busy()
+        ));
+        let pairs = self.overlapped_transfer_pairs();
+        if pairs.is_empty() {
+            out.push_str("  no upload/compute overlap observed\n");
+        } else {
+            for (tl, cl) in pairs {
+                let t = if tl == usize::MAX { "-".to_string() } else { format!("L{tl}") };
+                out.push_str(&format!(
+                    "  uploads at {t} overlapped compute at L{cl}\n"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stream: usize, level: usize, kind: OverlapKind, start: f64, end: f64) -> OverlapEvent {
+        OverlapEvent { stream, level, kind, opcode: "TEST", start, end }
+    }
+
+    #[test]
+    fn overlap_pairs_require_distinct_streams_and_intersection() {
+        let tr = OverlapTrace {
+            events: vec![
+                ev(0, 3, OverlapKind::Compute, 0.0, 1.0),
+                ev(1, 2, OverlapKind::Transfer, 0.5, 0.6),
+                ev(1, 1, OverlapKind::Transfer, 2.0, 2.1), // disjoint in time
+                ev(0, 3, OverlapKind::Transfer, 0.1, 0.2), // same stream
+            ],
+        };
+        assert_eq!(tr.overlapped_transfer_pairs(), vec![(2, 3)]);
+        assert!(tr.has_transfer_compute_overlap());
+        assert_eq!(tr.streams(), 2);
+        assert!((tr.stream_busy(0) - 1.1).abs() < 1e-12);
+        let rendered = tr.render();
+        assert!(rendered.contains("uploads at L2 overlapped compute at L3"), "{rendered}");
+    }
+
+    #[test]
+    fn serial_trace_reports_no_overlap() {
+        let tr = OverlapTrace {
+            events: vec![
+                ev(0, 3, OverlapKind::Compute, 0.0, 1.0),
+                ev(0, 2, OverlapKind::Transfer, 1.0, 1.5),
+            ],
+        };
+        assert!(!tr.has_transfer_compute_overlap());
+        assert_eq!(tr.concurrent_busy(), 0.0);
+        assert!(tr.render().contains("no upload/compute overlap"));
+    }
+
+    #[test]
+    fn concurrent_busy_sweeps_event_boundaries() {
+        let tr = OverlapTrace {
+            events: vec![
+                ev(0, 0, OverlapKind::Compute, 0.0, 2.0),
+                ev(1, 0, OverlapKind::Compute, 1.0, 3.0),
+            ],
+        };
+        assert!((tr.concurrent_busy() - 1.0).abs() < 1e-12);
+    }
+}

@@ -319,6 +319,11 @@ impl<'a> Executor<'a> {
 
     /// Issue the substitution instruction stream (the body of
     /// [`Executor::solve_in`], separated so the caller can guard it).
+    ///
+    /// Like the factorization replay, the stream marks tree-level
+    /// boundaries via [`Device::stream`] (from [`SolveInstr::level`]) so
+    /// an overlapping device can route adjacent levels to different
+    /// queues; correctness never depends on the hints (device.rs rule 3).
     fn run_solve_steps(
         &self,
         prog: &SolveProgram,
@@ -327,7 +332,14 @@ impl<'a> Executor<'a> {
         b: &[f64],
         x: &mut [f64],
     ) {
+        let mut cur_level = usize::MAX;
         for step in &prog.steps {
+            if let Some(level) = step.level() {
+                if level != cur_level {
+                    cur_level = level;
+                    self.device.stream(level);
+                }
+            }
             match step {
                 SolveInstr::LoadRhs { items } => {
                     for &(s, e, v) in items {

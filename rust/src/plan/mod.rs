@@ -300,6 +300,23 @@ pub enum SolveInstr {
     StoreSol { items: Vec<(usize, usize, BufferId)> },
 }
 
+impl SolveInstr {
+    /// Tree level of a batched launch; `None` for data-movement steps and
+    /// the root solve (they run on whatever stream is current). The
+    /// executor uses this to emit [`crate::batch::device::Device::stream`]
+    /// at the substitution program's level boundaries, mirroring the
+    /// factorization replay.
+    pub fn level(&self) -> Option<usize> {
+        match self {
+            SolveInstr::ApplyBasis { level, .. }
+            | SolveInstr::TrsvFwd { level, .. }
+            | SolveInstr::TrsvBwd { level, .. }
+            | SolveInstr::GemvAcc { level, .. } => Some(*level),
+            _ => None,
+        }
+    }
+}
+
 /// One substitution program (forward + root + backward) for a fixed
 /// [`crate::ulv::SubstMode`].
 #[derive(Clone, Debug)]

@@ -8,8 +8,8 @@
 
 use super::H2Error;
 use crate::batch::device::{
-    exec_host_launch, exec_host_solve_launch, host_arena, host_arena_ref, Device, DeviceArena,
-    HostArena, HostKernels, Launch,
+    exec_host_launch, exec_host_solve_launch, host_arena, host_arena_ref, AsyncDevice, Device,
+    DeviceArena, HostArena, HostKernels, Launch,
 };
 use crate::batch::native::NativeBackend;
 use crate::linalg::blas::{self, Side, Uplo};
@@ -35,6 +35,16 @@ pub enum BackendSpec {
     /// [`BackendSpec::Native`], no thread pool, no unsafe — bit-identical
     /// to native and useful for debugging and determinism checks.
     SerialReference,
+    /// Overlapping multi-stream executor
+    /// ([`crate::batch::device::AsyncDevice`]) wrapped around another
+    /// backend: level *k+1*'s uploads run concurrently with level *k*'s
+    /// compute under a `BufferId`-granular hazard tracker, bit-identical
+    /// to the wrapped backend. Spelled `async:<inner>` on the CLI;
+    /// nesting (`async:async:...`) is rejected.
+    Async {
+        /// The wrapped backend description (never `Async` itself).
+        inner: Box<BackendSpec>,
+    },
 }
 
 impl BackendSpec {
@@ -43,15 +53,30 @@ impl BackendSpec {
         BackendSpec::Pjrt { artifacts_dir: PathBuf::from("artifacts") }
     }
 
-    /// Parse a CLI-style backend name: `native`, `serial`, `pjrt`, or
-    /// `pjrt:<artifacts_dir>` to point at a non-default artifact directory
-    /// without code changes.
+    /// The overlapping executor over the native backend — the paper's
+    /// "level k compute overlaps level k+1 uploads" configuration.
+    pub fn async_native() -> BackendSpec {
+        BackendSpec::Async { inner: Box::new(BackendSpec::Native) }
+    }
+
+    /// Parse a CLI-style backend name: `native`, `serial`, `pjrt`,
+    /// `pjrt:<artifacts_dir>`, or `async:<inner>` (any non-async spec —
+    /// `async:native`, `async:serial`, `async:pjrt:DIR`; bare `async`
+    /// means `async:native`).
     pub fn by_name(name: &str) -> Option<BackendSpec> {
         match name {
             "native" => Some(BackendSpec::Native),
             "pjrt" => Some(BackendSpec::pjrt()),
             "serial" => Some(BackendSpec::SerialReference),
+            "async" => Some(BackendSpec::async_native()),
             _ => {
+                if let Some(rest) = name.strip_prefix("async:") {
+                    let inner = BackendSpec::by_name(rest)?;
+                    if matches!(inner, BackendSpec::Async { .. }) {
+                        return None; // async backends do not nest
+                    }
+                    return Some(BackendSpec::Async { inner: Box::new(inner) });
+                }
                 let dir = name.strip_prefix("pjrt:")?;
                 if dir.is_empty() {
                     return None;
@@ -67,6 +92,12 @@ impl BackendSpec {
             BackendSpec::Native => "native",
             BackendSpec::Pjrt { .. } => "pjrt",
             BackendSpec::SerialReference => "serial",
+            BackendSpec::Async { inner } => match inner.as_ref() {
+                BackendSpec::Native => "async:native",
+                BackendSpec::Pjrt { .. } => "async:pjrt",
+                BackendSpec::SerialReference => "async:serial",
+                BackendSpec::Async { .. } => "async",
+            },
         }
     }
 
@@ -84,6 +115,25 @@ impl BackendSpec {
                     }),
                 }
             }
+            // Concrete per-inner wrapping keeps AsyncDevice generic (and
+            // its worker threads free of double dynamic dispatch).
+            BackendSpec::Async { inner } => match inner.as_ref() {
+                BackendSpec::Native => Ok(Box::new(AsyncDevice::new(NativeBackend::new()))),
+                BackendSpec::SerialReference => Ok(Box::new(AsyncDevice::new(SerialBackend))),
+                BackendSpec::Pjrt { artifacts_dir } => {
+                    match crate::runtime::PjrtBackend::new(artifacts_dir) {
+                        Ok(be) => Ok(Box::new(AsyncDevice::new(be))),
+                        Err(e) => Err(H2Error::BackendUnavailable {
+                            backend: "async:pjrt".to_string(),
+                            reason: e.to_string(),
+                        }),
+                    }
+                }
+                BackendSpec::Async { .. } => Err(H2Error::BackendUnavailable {
+                    backend: "async".to_string(),
+                    reason: "async backends do not nest".to_string(),
+                }),
+            },
         }
     }
 }
@@ -269,6 +319,32 @@ mod tests {
         assert_eq!(BackendSpec::by_name("serial"), Some(BackendSpec::SerialReference));
         assert_eq!(BackendSpec::by_name("pjrt").map(|s| s.name()), Some("pjrt"));
         assert_eq!(BackendSpec::by_name("gpu"), None);
+    }
+
+    #[test]
+    fn spec_parses_async_wrappers() {
+        assert_eq!(BackendSpec::by_name("async"), Some(BackendSpec::async_native()));
+        assert_eq!(BackendSpec::by_name("async:native"), Some(BackendSpec::async_native()));
+        assert_eq!(
+            BackendSpec::by_name("async:serial"),
+            Some(BackendSpec::Async { inner: Box::new(BackendSpec::SerialReference) })
+        );
+        assert_eq!(
+            BackendSpec::by_name("async:pjrt:some/dir"),
+            Some(BackendSpec::Async {
+                inner: Box::new(BackendSpec::Pjrt { artifacts_dir: PathBuf::from("some/dir") })
+            })
+        );
+        assert_eq!(BackendSpec::async_native().name(), "async:native");
+        assert_eq!(
+            BackendSpec::by_name("async:async:native"),
+            None,
+            "async backends must not nest"
+        );
+        assert_eq!(BackendSpec::by_name("async:bogus"), None);
+        // The wrapper instantiates and reports a composed name.
+        let dev = BackendSpec::async_native().instantiate().expect("native always available");
+        assert_eq!(dev.name(), "async:native");
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::geometry::Geometry;
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
+use crate::metrics::overlap::OverlapTrace;
 use crate::metrics::{flops::FlopScope, timer::timed};
 use crate::plan::{self, Executor, Plan, ScheduleStats};
 use crate::ulv::{pcg_in, FactorMeta, SubstMode, UlvFactor};
@@ -88,6 +89,11 @@ pub struct BuildStats {
     /// Schedule statistics straight from the plan IR: launch counts per
     /// level, batch sizes, useful vs constant-shape padded FLOPs.
     pub schedule: ScheduleStats,
+    /// Per-stream busy intervals of the factorization replay — `Some` only
+    /// on overlapping backends (`async:<inner>`), where
+    /// [`OverlapTrace::overlapped_transfer_pairs`] shows which levels'
+    /// uploads genuinely ran during other levels' compute.
+    pub overlap: Option<OverlapTrace>,
 }
 
 impl BuildStats {
@@ -750,6 +756,9 @@ fn replay_factor(
         arena_bytes: arena.bytes(),
         arena_peak_bytes: arena.peak_bytes(),
         schedule: plan.schedule_stats(),
+        // Drains and takes the replay's per-stream schedule on overlapping
+        // backends; `None` on the synchronous ones.
+        overlap: backend.take_overlap_trace(),
     };
     Ok((factor, arena, stats))
 }

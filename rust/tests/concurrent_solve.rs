@@ -15,25 +15,26 @@
 //! CI runs this file under `RUST_TEST_THREADS=4` so the scheduler actually
 //! interleaves the in-flight solves.
 
+mod common;
+
+use common::{seeds, Case};
 use h2ulv::prelude::*;
-use h2ulv::util::Rng;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 const N: usize = 512;
 const THREADS: usize = 6;
 
 fn build_solver() -> H2Solver {
-    let g = Geometry::sphere_surface(N, 501);
-    H2SolverBuilder::new(g, KernelFn::laplace())
-        .config(H2Config { leaf_size: 64, max_rank: 32, ..Default::default() })
-        .residual_samples(0)
-        .build()
-        .expect("well-formed problem")
+    // The pre-migration fixture used the *default* sampled far field
+    // (far_samples = 128), unlike the exact-far-field `Case::fixed`
+    // shared with device_api/plan_replay — keep exercising the
+    // sampled-basis construction path under concurrency.
+    let case = Case { far_samples: H2Config::default().far_samples, ..Case::fixed(N, 501) };
+    case.solver(BackendSpec::Native)
 }
 
 fn rhs(seed: u64) -> Vec<f64> {
-    let mut rng = Rng::new(seed);
-    (0..N).map(|_| rng.normal()).collect()
+    common::rhs(N, seed)
 }
 
 #[test]
@@ -123,6 +124,33 @@ fn solve_many_fans_out_and_matches_sequential() {
     let (created, idle) = solver.workspace_stats();
     assert_eq!(created, idle, "solve_many leaked a workspace region");
     assert_eq!(solver.plan_recordings(), 1, "solve_many must not re-plan");
+}
+
+#[test]
+fn concurrent_solves_bit_match_sequential_across_fuzzed_structures() {
+    // The concurrency invariants hold across randomized H² structures
+    // (depth, leaf size, ranks, admissibility), not just the fixed
+    // fixture; `H2_TEST_SEEDS` (CI stress: 16) widens the sweep.
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        let solver = case.solver(BackendSpec::Native);
+        let bs: Vec<Vec<f64>> = (0..3u64).map(|t| case.rhs(500 + t)).collect();
+        let want: Vec<Vec<f64>> =
+            bs.iter().map(|b| solver.solve(b).expect("rhs matches").x).collect();
+        std::thread::scope(|s| {
+            for (b, want) in bs.iter().zip(&want) {
+                let solver = &solver;
+                let case = &case;
+                s.spawn(move || {
+                    let x = solver.solve(b).expect("rhs matches").x;
+                    assert_eq!(x, *want, "concurrent solve diverged for {case}");
+                });
+            }
+        });
+        let (created, idle) = solver.workspace_stats();
+        assert_eq!(created, idle, "workspace region leaked for {case}");
+        assert_eq!(solver.plan_recordings(), 1, "re-planning occurred for {case}");
+    }
 }
 
 #[test]

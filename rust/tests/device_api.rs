@@ -16,7 +16,10 @@
 // purpose; everything else uses the Device API.
 #![allow(deprecated)]
 
-use h2ulv::batch::device::{Device, LegacyBatchExec, WorkspacePool};
+mod common;
+
+use common::{rhs, seeds, Case};
+use h2ulv::batch::device::{Device, LegacyBatchExec, ValidatingDevice, WorkspacePool};
 use h2ulv::batch::native::NativeBackend;
 use h2ulv::batch::BatchExec;
 use h2ulv::construct::H2Config;
@@ -33,17 +36,11 @@ use h2ulv::util::Rng;
 use std::sync::Arc;
 
 fn cfg() -> H2Config {
-    H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() }
+    Case::fixed(0, 0).config()
 }
 
 fn build_h2(n: usize, seed: u64) -> H2Matrix {
-    let g = Geometry::sphere_surface(n, seed);
-    H2Matrix::construct(&g, &KernelFn::laplace(), &cfg())
-}
-
-fn rhs(n: usize, seed: u64) -> Vec<f64> {
-    let mut rng = Rng::new(seed);
-    (0..n).map(|_| rng.normal()).collect()
+    Case::fixed(n, seed).h2()
 }
 
 #[test]
@@ -194,9 +191,9 @@ fn device_lazy_naive_program_records_on_demand() {
 
 #[test]
 fn device_rebind_backend_roundtrips_arena() {
-    let g = Geometry::sphere_surface(512, 409);
-    let mut solver = H2SolverBuilder::new(g, KernelFn::laplace())
-        .config(cfg())
+    let case = Case::fixed(512, 409);
+    let mut solver = H2SolverBuilder::new(case.geometry(), KernelFn::laplace())
+        .config(case.config())
         .residual_samples(0)
         .build()
         .expect("well-formed problem");
@@ -332,4 +329,43 @@ fn device_legacy_batchexec_adapter() {
     let got = legacy.apply_basis(0, &[&m], true, &[&x0]);
     let want = native.apply_basis(0, &[&m], true, &[&x0]);
     assert_eq!(got, want);
+}
+
+#[test]
+fn device_validating_wrapper_passes_full_plan_suite() {
+    // Every launch of the recorded factorization and of both substitution
+    // programs satisfies the hazard-audit invariants (operands live, no
+    // out-of-range ids, no intra-launch write aliasing) — and the audited
+    // execution is bit-identical to the bare backend.
+    let h2 = build_h2(384, 421);
+    let vdev = ValidatingDevice::new(NativeBackend::new());
+    let bare = NativeBackend::new();
+    let fac_v = factorize(&h2, &vdev);
+    let fac_b = h2ulv::ulv::factorize_with_plan(&h2, &bare, fac_v.plan.clone());
+    assert_eq!(fac_v.root_l.as_slice(), fac_b.root_l.as_slice());
+    let bt = h2.tree.permute_vec(&rhs(384, 23));
+    for mode in [SubstMode::Parallel, SubstMode::Naive] {
+        let xv = fac_v.solve_tree_order(&bt, &vdev, mode);
+        let xb = fac_b.solve_tree_order(&bt, &bare, mode);
+        assert_eq!(xv, xb, "{mode:?}: audit wrapper must not change results");
+    }
+    assert!(vdev.audited() > 0, "the audit must have seen every launch");
+}
+
+#[test]
+fn device_validating_wrapper_passes_fuzzed_structures() {
+    // The audit holds across randomized structures (depth, leaf size,
+    // ranks, admissibility), not just the fixed fixture.
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        let h2 = case.h2();
+        let vdev = ValidatingDevice::new(NativeBackend::new());
+        let fac = factorize(&h2, &vdev);
+        let bt = h2.tree.permute_vec(&case.rhs(0));
+        for mode in [SubstMode::Parallel, SubstMode::Naive] {
+            let x = fac.solve_tree_order(&bt, &vdev, mode);
+            assert_eq!(x.len(), case.n, "solve failed for {case}");
+        }
+        assert!(vdev.audited() > 0, "no launches audited for {case}");
+    }
 }

@@ -8,30 +8,26 @@
 //! * `refactorize` (same structure), `solve_many`, and `rebind_backend`
 //!   never re-plan — launch counts come from the one cached plan.
 
+mod common;
+
+use common::{rhs, Case};
 use h2ulv::batch::native::NativeBackend;
 use h2ulv::construct::H2Config;
-use h2ulv::geometry::Geometry;
 use h2ulv::h2::H2Matrix;
 use h2ulv::kernels::KernelFn;
 use h2ulv::linalg::norms::rel_err_vec;
 use h2ulv::prelude::*;
 use h2ulv::ulv::{factorize, factorize_with_plan, SubstMode};
-use h2ulv::util::Rng;
-
-fn rhs(n: usize, seed: u64) -> Vec<f64> {
-    let mut rng = Rng::new(seed);
-    (0..n).map(|_| rng.normal()).collect()
-}
 
 fn cfg() -> H2Config {
-    H2Config { leaf_size: 64, max_rank: 32, far_samples: 0, ..Default::default() }
+    Case::fixed(0, 0).config()
 }
 
 #[test]
 fn recorded_plan_replays_bit_identically_and_matches_eager_accuracy() {
-    let g = Geometry::sphere_surface(512, 201);
+    let case = Case::fixed(512, 201);
     let k = KernelFn::laplace();
-    let h2 = H2Matrix::construct(&g, &k, &cfg());
+    let h2 = case.h2();
     let be = NativeBackend::new();
     let fac = factorize(&h2, &be);
     let b = rhs(512, 1);
@@ -63,7 +59,7 @@ fn replay_after_kernel_perturbation_matches_fresh_factorization() {
     // replay it against a matrix with *perturbed kernel values* (same
     // geometry/config => same tree, lists, and ranks). The replayed factor
     // must match a freshly planned factorization of the perturbed matrix.
-    let g = Geometry::sphere_surface(384, 203);
+    let g = Case::fixed(384, 203).geometry();
     let be = NativeBackend::new();
     let h2_a = H2Matrix::construct(&g, &KernelFn::laplace(), &cfg());
     let fac_a = factorize(&h2_a, &be);
@@ -90,12 +86,7 @@ fn replay_after_kernel_perturbation_matches_fresh_factorization() {
 
 #[test]
 fn refactorize_reuses_cached_plan_and_rebind_matches_native() {
-    let g = Geometry::sphere_surface(512, 205);
-    let mut solver = H2SolverBuilder::new(g, KernelFn::laplace())
-        .config(cfg())
-        .residual_samples(0)
-        .build()
-        .expect("well-formed problem");
+    let mut solver = Case::fixed(512, 205).solver(BackendSpec::Native);
     assert_eq!(solver.plan_recordings(), 1);
     let launches = solver.stats().schedule.factor_launches();
     assert!(launches > 0);
@@ -139,7 +130,7 @@ fn refactorize_reuses_cached_plan_and_rebind_matches_native() {
 
 #[test]
 fn per_call_residual_override() {
-    let g = Geometry::sphere_surface(256, 207);
+    let g = Case::fixed(256, 207).geometry();
     let solver = H2SolverBuilder::new(g, KernelFn::laplace())
         .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
         .residual_samples(64)
@@ -152,7 +143,7 @@ fn per_call_residual_override() {
     let rep = solver.solve_opts(&b, &SolveOptions::no_residual()).unwrap();
     assert!(rep.residual.is_none());
     // Per-call force on a sampling-disabled session.
-    let g2 = Geometry::sphere_surface(256, 207);
+    let g2 = Case::fixed(256, 207).geometry();
     let quiet = H2SolverBuilder::new(g2, KernelFn::laplace())
         .config(H2Config { leaf_size: 32, max_rank: 24, ..Default::default() })
         .residual_samples(0)
