@@ -24,9 +24,13 @@ fn main() {
     println!("solver, factor_s, solve_s, factor_gflop, solution_err");
 
     // Dense oracle.
-    let before = flops::snapshot();
-    let (dense, t_df) = timed(|| DenseSolver::factorize(&g.points, &kernel).unwrap());
-    let dfl = flops::delta(before, flops::snapshot()).total;
+    let dense_scope = flops::FlopScope::new();
+    let (dense, t_df) = timed(|| {
+        flops::scoped(&dense_scope, flops::Phase::Factor, || {
+            DenseSolver::factorize(&g.points, &kernel).unwrap()
+        })
+    });
+    let dfl = dense_scope.snapshot().total;
     let (x_dense, t_ds) = timed(|| dense.solve(&b));
     println!("dense,  {t_df:.3}, {t_ds:.4}, {:.2}, (oracle)", dfl as f64 / 1e9);
 
@@ -34,9 +38,11 @@ fn main() {
     let tree = ClusterTree::build(&g, 128);
     let bt = tree.permute_vec(&b);
     let mut blr = BlrMatrix::build(&tree.points, &kernel, &BlrConfig { rtol: 1e-9, ..Default::default() });
-    let before = flops::snapshot();
-    let ((), t_bf) = timed(|| blr.factorize());
-    let bfl = flops::delta(before, flops::snapshot()).factor;
+    let blr_scope = flops::FlopScope::new();
+    let ((), t_bf) = timed(|| {
+        flops::scoped(&blr_scope, flops::Phase::Factor, || blr.factorize())
+    });
+    let bfl = blr_scope.snapshot().factor;
     let (xt, t_bs) = timed(|| blr.solve(&bt));
     let x_blr = tree.unpermute_vec(&xt);
     println!(

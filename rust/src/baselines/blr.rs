@@ -177,7 +177,7 @@ impl BlrMatrix {
     /// In-place tile Cholesky (right-looking, full trailing updates).
     pub fn factorize(&mut self) {
         let nb = self.nb();
-        let prev = flops::set_phase(flops::Phase::Factor);
+        flops::with_phase(flops::Phase::Factor, || {
         for k in 0..nb {
             // 1. POTRF on the diagonal tile.
             let mut dkk = match self.tiles.remove(&(k, k)).unwrap() {
@@ -217,12 +217,12 @@ impl BlrMatrix {
                 }
             }
         }
-        flops::set_phase(prev);
+        });
     }
 
     /// Solve `A x = b` after [`factorize`].
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let prev = flops::set_phase(flops::Phase::Substitute);
+        flops::with_phase(flops::Phase::Substitute, || {
         let nb = self.nb();
         let mut x = b.to_vec();
         // Forward: L y = b.
@@ -262,8 +262,8 @@ impl BlrMatrix {
             blas::trsv(Uplo::Lower, Trans::Yes, dkk, &mut seg);
             x[kb..ke].copy_from_slice(&seg);
         }
-        flops::set_phase(prev);
         x
+        })
     }
 }
 
@@ -459,10 +459,11 @@ mod tests {
             let g = Geometry::sphere_surface(n, 507);
             let tree = ClusterTree::build(&g, 128);
             let mut blr = BlrMatrix::build(&tree.points, &k, &BlrConfig::default());
-            let before = crate::metrics::flops::snapshot();
-            blr.factorize();
-            let after = crate::metrics::flops::snapshot();
-            counts.push(crate::metrics::flops::delta(before, after).factor as f64);
+            let scope = crate::metrics::flops::FlopScope::new();
+            crate::metrics::flops::scoped(&scope, crate::metrics::flops::Phase::Factor, || {
+                blr.factorize()
+            });
+            counts.push(scope.snapshot().factor as f64);
         }
         let ratio = counts[1] / counts[0];
         assert!(

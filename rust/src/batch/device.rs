@@ -104,7 +104,7 @@
 pub mod r#async;
 pub mod validate;
 
-pub use r#async::AsyncDevice;
+pub use r#async::{AsyncDevice, HazardRecord};
 pub use validate::ValidatingDevice;
 
 use crate::linalg::{chol, Matrix};

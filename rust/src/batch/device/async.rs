@@ -71,6 +71,22 @@ use std::time::Instant;
 /// the paper's double-buffering.
 pub const DEFAULT_STREAMS: usize = 2;
 
+/// One journaled operation as the runtime hazard tracker saw it at
+/// enqueue time (recorded while [`AsyncDevice::enable_hazard_log`] is on):
+/// sequence number, placement, operand set, and the full last-toucher
+/// dependency edges *before* completed-op pruning — directly comparable,
+/// op for op, to the static graph from
+/// [`crate::plan::verify::hazard_graph`].
+#[derive(Clone, Debug)]
+pub struct HazardRecord {
+    pub seq: u64,
+    pub opcode: &'static str,
+    pub stream: usize,
+    pub level: usize,
+    pub operands: Vec<u32>,
+    pub deps: Vec<u64>,
+}
+
 // ---------------------------------------------------------------------
 // Owned launches (journal entries cannot borrow the plan).
 // ---------------------------------------------------------------------
@@ -268,6 +284,8 @@ struct EngineState {
     current_stream: usize,
     current_level: usize,
     trace: Vec<OverlapEvent>,
+    /// Differential-audit log: `Some` while hazard recording is enabled.
+    hazard_log: Option<Vec<HazardRecord>>,
     /// First worker panic, re-raised by the next `fence`.
     panic: Option<Box<dyn Any + Send>>,
     shutdown: bool,
@@ -300,6 +318,7 @@ impl Engine {
                 current_stream: 0,
                 current_level: usize::MAX,
                 trace: Vec::new(),
+                hazard_log: None,
                 panic: None,
                 shutdown: false,
             }),
@@ -332,18 +351,30 @@ impl Engine {
         }
         let seq = guard.next_seq;
         guard.next_seq += 1;
-        let mut deps: Vec<u64> = Vec::new();
+        // Full last-toucher edges first (the semantic dependency set the
+        // static hazard graph predicts), then prune already-completed ops
+        // for the scheduler's working set.
+        let mut full: Vec<u64> = Vec::new();
         for &b in operands {
             if let Some(acc) = guard.access.get(&(arena_id, b.0)) {
                 if let Some(prev) = acc.writer {
-                    if !guard.done.contains(&prev) {
-                        deps.push(prev);
-                    }
+                    full.push(prev);
                 }
             }
         }
-        deps.sort_unstable();
-        deps.dedup();
+        full.sort_unstable();
+        full.dedup();
+        let deps: Vec<u64> = full.iter().copied().filter(|d| !guard.done.contains(d)).collect();
+        if let Some(log) = guard.hazard_log.as_mut() {
+            log.push(HazardRecord {
+                seq,
+                opcode,
+                stream: guard.current_stream,
+                level: guard.current_level,
+                operands: operands.iter().map(|b| b.0).collect(),
+                deps: full,
+            });
+        }
         for &b in operands {
             guard.access.entry((arena_id, b.0)).or_default().writer = Some(seq);
         }
@@ -656,6 +687,21 @@ impl<D: Device + Send + Sync + 'static> AsyncDevice<D> {
     /// Number of stream queues.
     pub fn streams(&self) -> usize {
         self.engine.streams
+    }
+
+    /// Start recording every enqueue decision of the runtime hazard
+    /// tracker (sequence, stream, operand set, full last-toucher edges)
+    /// for differential comparison against the static graph from
+    /// [`crate::plan::verify::hazard_graph`].
+    pub fn enable_hazard_log(&self) {
+        self.engine.state.lock().unwrap().hazard_log = Some(Vec::new());
+    }
+
+    /// Drain the engine and take the recorded hazard log (empty if
+    /// recording was never enabled). Recording stops until re-enabled.
+    pub fn take_hazard_log(&self) -> Vec<HazardRecord> {
+        self.engine.drain();
+        self.engine.state.lock().unwrap().hazard_log.take().unwrap_or_default()
     }
 }
 

@@ -26,9 +26,17 @@
 //! with any backend (`ValidatingDevice<NativeBackend>` in the test suite;
 //! wrap it *inside* an [`super::AsyncDevice`] to audit at execution time
 //! with the journal's private arenas).
+//!
+//! Launch legality itself (unset ids, intra-launch write aliasing, the
+//! read-only factor region) has exactly one implementation — the static
+//! primitives in [`crate::plan::verify`] — applied here per launch against
+//! real arena state, and there per program at record time. Only the
+//! genuinely runtime-only check (is the operand actually live in *this*
+//! arena) stays local.
 
 use super::{launch_operands, Device, DeviceArena, Launch};
 use crate::metrics::overlap::OverlapTrace;
+use crate::plan::verify::{is_unset, solve_writes_matrices, write_alias_hazard, LaunchHazard};
 use crate::plan::BufferId;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -65,7 +73,7 @@ fn violation(launch: &Launch<'_>, reason: String) -> ! {
 }
 
 fn check_id(launch: &Launch<'_>, id: BufferId, role: &str) {
-    if id.0 == u32::MAX {
+    if is_unset(id) {
         violation(launch, format!("{role} operand is the unset placeholder B{} (out of range)", id.0));
     }
 }
@@ -81,7 +89,8 @@ fn check_live(arena: &dyn DeviceArena, launch: &Launch<'_>, id: BufferId, role: 
 }
 
 /// Shared write-set audit: no duplicate write targets, no write target
-/// aliasing a read operand of another item.
+/// aliasing a read operand of another item (the decision lives in
+/// [`write_alias_hazard`]; this wrapper just renders it as a panic).
 fn check_write_aliasing(
     launch: &Launch<'_>,
     reads: &[BufferId],
@@ -89,27 +98,20 @@ fn check_write_aliasing(
     writes: &[BufferId],
     space: &str,
 ) {
-    let mut all_writes: Vec<u32> = rw.iter().chain(writes).map(|b| b.0).collect();
-    all_writes.sort_unstable();
-    for pair in all_writes.windows(2) {
-        if pair[0] == pair[1] {
-            violation(
-                launch,
-                format!("two batch items write the same {space} buffer B{}", pair[0]),
-            );
-        }
-    }
-    for r in reads {
-        if all_writes.binary_search(&r.0).is_ok() {
-            violation(
-                launch,
-                format!(
-                    "{space} buffer B{} is read by one batch item and written by another \
-                     (intra-launch aliasing)",
-                    r.0
-                ),
-            );
-        }
+    match write_alias_hazard(reads, rw, writes) {
+        None => {}
+        Some(LaunchHazard::DuplicateWrite(b)) => violation(
+            launch,
+            format!("two batch items write the same {space} buffer B{}", b.0),
+        ),
+        Some(LaunchHazard::ReadWriteAlias(b)) => violation(
+            launch,
+            format!(
+                "{space} buffer B{} is read by one batch item and written by another \
+                 (intra-launch aliasing)",
+                b.0
+            ),
+        ),
     }
 }
 
@@ -132,7 +134,7 @@ fn audit_factor(arena: &dyn DeviceArena, launch: &Launch<'_>) {
 /// factor region, vectors in the workspace.
 fn audit_solve(factor: &dyn DeviceArena, ws: &dyn DeviceArena, launch: &Launch<'_>) {
     let ops = launch_operands(launch);
-    if !ops.mat_rw.is_empty() || !ops.mat_writes.is_empty() {
+    if solve_writes_matrices(&ops) {
         violation(
             launch,
             "substitution launches must not write matrix buffers (the factor region is \

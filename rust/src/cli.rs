@@ -6,7 +6,8 @@
 //!                 [--storage mirrored|device-only]
 //!                 [--subst parallel|naive] [--ranks P]
 //! h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L] [--eta E]
-//!                 [--exec BACKEND]
+//!                 [--lint] [--exec BACKEND]
+//! h2ulv plan-lint [--seeds S] [--json] | [--n N ...problem flags] [--json]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
 //! h2ulv figures   [--full] [--out DIR]
 //! h2ulv info
@@ -75,12 +76,24 @@ USAGE:
                  default)
                 [--subst parallel|naive] [--ranks P] [--seed S]
   h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-                [--eta E] [--seed S] [--exec BACKEND]
+                [--eta E] [--seed S] [--lint] [--exec BACKEND]
                 (record the execution plan only; print per-level launch
                  counts and padded-vs-useful FLOP ratios — no numerics.
+                 --lint additionally runs the static verifier and prints
+                 per-level critical-path / available-parallelism columns.
                  --exec additionally replays the factorization on BACKEND
                  and prints the observed per-stream schedule: on
                  async:INNER backends this is the overlap evidence)
+  h2ulv plan-lint [--seeds S] [--json]
+  h2ulv plan-lint --n N [--kernel K] [--geometry G] [--rank R] [--leaf L]
+                [--eta E] [--seed S] [--json]
+                (statically verify recorded plans — dataflow lint, exact
+                 peak-memory prediction, hazard-graph audit — for a sweep
+                 of fuzzed structures (default; S from --seeds or
+                 H2_TEST_SEEDS, else 8) or one explicit problem (--n).
+                 Factorization and both substitution programs are checked;
+                 exit 1 on any violation. --json emits machine-readable
+                 reports)
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
   h2ulv info
@@ -97,6 +110,7 @@ pub fn run(argv: Vec<String>) -> i32 {
     match cmd.as_str() {
         "solve" => cmd_solve(&args),
         "plan-dump" => cmd_plan_dump(&args),
+        "plan-lint" => cmd_plan_lint(&args),
         "figure" => cmd_figure(&args),
         "figures" => cmd_figures(&args),
         "info" => cmd_info(),
@@ -290,6 +304,46 @@ fn cmd_plan_dump(args: &Args) -> i32 {
         }
     };
     print!("{}", plan.render_schedule());
+    if args.get("lint").is_some() {
+        // Lint both substitution programs, then fold the static hazard
+        // graph into a per-level table next to the launch/FLOP columns.
+        plan.solve_program(SubstMode::Naive);
+        let report = match crate::plan::verify::verify(&plan) {
+            Ok(r) => r,
+            Err(v) => {
+                eprintln!("h2ulv plan-dump: {v}");
+                return 1;
+            }
+        };
+        let stats = plan.schedule_stats();
+        println!(
+            "\nstatic lint (level, ops, crit_path, parallelism, launches, useful_gflop, waste):"
+        );
+        for lh in &report.hazard.levels {
+            let (launches, gflop, waste) = stats
+                .factor_levels
+                .get(lh.level)
+                .map(|s| {
+                    let waste = if s.padded_flops > 0 {
+                        100.0 * (1.0 - s.flops as f64 / s.padded_flops as f64)
+                    } else {
+                        0.0
+                    };
+                    (s.launches, s.flops as f64 / 1e9, waste)
+                })
+                .unwrap_or((0, 0.0, 0.0));
+            let label = if lh.level == usize::MAX {
+                "pre".to_string()
+            } else {
+                format!("L{}", lh.level)
+            };
+            println!(
+                "  {label:<4} {:>5} {:>9} {:>11.2} {:>8} {:>12.4} {:>6.1}%",
+                lh.ops, lh.critical_path, lh.parallelism, launches, gflop, waste
+            );
+        }
+        print!("{}", report.render());
+    }
     if let Some(name) = args.get("exec") {
         let Some(spec) = BackendSpec::by_name(name) else {
             eprintln!("unknown backend: {name}\n{USAGE}");
@@ -317,6 +371,240 @@ fn cmd_plan_dump(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// One structure-fuzz problem for `plan-lint`, derived from a seed exactly
+/// like the test suite's `Case::from_seed` (tests/common/mod.rs) so a CLI
+/// seed reproduces the same structure a failing test names.
+struct FuzzCase {
+    seed: u64,
+    n: usize,
+    leaf_size: usize,
+    max_rank: usize,
+    eta: f64,
+}
+
+fn fuzz_case(seed: u64) -> FuzzCase {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xC0FFEE));
+    let leaf_size = [32, 48, 64][rng.below(3)];
+    let leaves = 4 + rng.below(9);
+    let n = leaf_size * leaves;
+    let max_rank = [leaf_size / 2, (3 * leaf_size) / 4][rng.below(2)];
+    let eta = [1.0, 1.5, 2.0][rng.below(3)];
+    FuzzCase { seed, n, leaf_size, max_rank, eta }
+}
+
+/// Record and statically verify the plan for one problem. The lazy naive
+/// substitution program is forced first so both modes are linted.
+fn lint_problem(
+    g: &Geometry,
+    kernel: &KernelFn,
+    cfg: &H2Config,
+) -> Result<Result<crate::plan::PlanReport, crate::plan::PlanViolation>, H2Error> {
+    crate::solver::guard("planning", || {
+        let h2 = crate::h2::H2Matrix::construct(g, kernel, cfg);
+        let plan = crate::plan::record(&h2);
+        let _ = plan.solve_program(SubstMode::Naive);
+        crate::plan::verify::verify(&plan)
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn report_json(r: &crate::plan::PlanReport) -> String {
+    let levels: Vec<String> = r
+        .hazard
+        .levels
+        .iter()
+        .map(|l| {
+            let level = if l.level == usize::MAX { -1 } else { l.level as i64 };
+            format!(
+                "{{\"level\":{level},\"ops\":{},\"critical_path\":{},\"parallelism\":{:.3}}}",
+                l.ops, l.critical_path, l.parallelism
+            )
+        })
+        .collect();
+    let solve = |s: &crate::plan::verify::SolveProgramReport| {
+        format!(
+            "{{\"instrs\":{},\"launches\":{},\"workspace_bytes\":{}}}",
+            s.instrs, s.launches, s.workspace_bytes
+        )
+    };
+    format!(
+        "{{\"n\":{},\"depth\":{},\"factor_instrs\":{},\"predicted_peak_bytes\":{},\
+         \"resident_bytes\":{},\"resident_buffers\":{},\
+         \"hazard\":{{\"streams\":{},\"ops\":{},\"edges\":{},\"critical_path\":{},\
+         \"levels\":[{}]}},\"solve_parallel\":{},\"solve_naive\":{}}}",
+        r.n,
+        r.depth,
+        r.factor_instrs,
+        r.predicted_peak_bytes,
+        r.resident_bytes,
+        r.resident_buffers,
+        r.hazard.streams,
+        r.hazard.ops.len(),
+        r.hazard.edges,
+        r.hazard.critical_path,
+        levels.join(","),
+        solve(&r.solve_parallel),
+        r.solve_naive.as_ref().map(solve).unwrap_or_else(|| "null".to_string()),
+    )
+}
+
+fn violation_json(v: &crate::plan::PlanViolation) -> String {
+    format!(
+        "{{\"program\":\"{}\",\"index\":{},\"opcode\":\"{}\",\"buffer\":{},\
+         \"kind\":\"{}\",\"detail\":\"{}\"}}",
+        v.program,
+        v.index,
+        json_escape(v.opcode),
+        v.buffer.map(|b| b.0.to_string()).unwrap_or_else(|| "null".to_string()),
+        v.kind,
+        json_escape(&v.detail),
+    )
+}
+
+/// Statically verify recorded plans: dataflow lint, exact peak-memory
+/// prediction, and the hazard-graph audit (see [`crate::plan::verify`]).
+/// Default: a structure-fuzz sweep over `--seeds`/`H2_TEST_SEEDS` seeds.
+/// With `--n`, lints the single problem the other flags describe (same
+/// flags as `plan-dump`). Exits 1 on any violation.
+fn cmd_plan_lint(args: &Args) -> i32 {
+    let json = args.get("json").is_some();
+    if args.get("n").is_some() {
+        let (n, _seed, kernel, g, cfg) = problem_from_args(args);
+        if let Err(e) = crate::solver::builder::validate(&g, &cfg) {
+            eprintln!("h2ulv plan-lint: {e}");
+            return 1;
+        }
+        if !json {
+            println!(
+                "h2ulv plan-lint: N={n} kernel={} geometry={} leaf={} rank={} eta={}",
+                kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
+            );
+        }
+        return match lint_problem(&g, &kernel, &cfg) {
+            Ok(Ok(report)) => {
+                if json {
+                    println!("{{\"ok\":true,\"report\":{}}}", report_json(&report));
+                } else {
+                    print!("{}", report.render());
+                }
+                0
+            }
+            Ok(Err(v)) => {
+                if json {
+                    println!("{{\"ok\":false,\"violation\":{}}}", violation_json(&v));
+                } else {
+                    eprintln!("h2ulv plan-lint: {v}");
+                }
+                1
+            }
+            Err(e) => {
+                eprintln!("h2ulv plan-lint: {e}");
+                1
+            }
+        };
+    }
+
+    // Structure-fuzz sweep (the CI gate).
+    let count = args
+        .get("seeds")
+        .and_then(|s| s.parse::<u64>().ok())
+        .or_else(|| {
+            std::env::var("H2_TEST_SEEDS").ok().and_then(|s| s.parse::<u64>().ok())
+        })
+        .unwrap_or(8);
+    let mut rows = Vec::new();
+    let mut failures = 0usize;
+    for seed in 0..count {
+        let case = fuzz_case(seed);
+        let g = Geometry::sphere_surface(case.n, case.seed);
+        let cfg = H2Config {
+            leaf_size: case.leaf_size,
+            max_rank: case.max_rank,
+            eta: case.eta,
+            far_samples: 0,
+            ..Default::default()
+        };
+        let head = format!(
+            "\"seed\":{},\"n\":{},\"leaf\":{},\"rank\":{},\"eta\":{}",
+            case.seed, case.n, case.leaf_size, case.max_rank, case.eta
+        );
+        match lint_problem(&g, &KernelFn::laplace(), &cfg) {
+            Ok(Ok(report)) => {
+                if json {
+                    rows.push(format!("{{{head},\"ok\":true,\"report\":{}}}", report_json(&report)));
+                } else {
+                    println!(
+                        "seed {:>2}: N={:<5} leaf={} rank={:<2} eta={} — ok: peak {} B, \
+                         {} ops / {} edges, crit path {}, parallelism {:.1}",
+                        case.seed,
+                        case.n,
+                        case.leaf_size,
+                        case.max_rank,
+                        case.eta,
+                        report.predicted_peak_bytes,
+                        report.hazard.ops.len(),
+                        report.hazard.edges,
+                        report.hazard.critical_path,
+                        if report.hazard.critical_path > 0 {
+                            report.hazard.ops.len() as f64 / report.hazard.critical_path as f64
+                        } else {
+                            0.0
+                        },
+                    );
+                }
+            }
+            Ok(Err(v)) => {
+                failures += 1;
+                if json {
+                    rows.push(format!("{{{head},\"ok\":false,\"violation\":{}}}", violation_json(&v)));
+                } else {
+                    eprintln!("seed {}: VIOLATION — {v}", case.seed);
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                if json {
+                    rows.push(format!(
+                        "{{{head},\"ok\":false,\"error\":\"{}\"}}",
+                        json_escape(&e.to_string())
+                    ));
+                } else {
+                    eprintln!("seed {}: ERROR — {e}", case.seed);
+                }
+            }
+        }
+    }
+    if json {
+        println!(
+            "{{\"seeds\":{count},\"failures\":{failures},\"results\":[{}]}}",
+            rows.join(",")
+        );
+    } else {
+        println!(
+            "plan-lint: {count} fuzzed structures, {failures} failure(s) \
+             (factorization + both substitution programs verified per structure)"
+        );
+    }
+    if failures > 0 {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_figure(args: &Args) -> i32 {

@@ -175,13 +175,18 @@ pub fn fig17(scale: Scale) -> String {
     for eta in [0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0] {
         let g = Geometry::sphere_surface(n, 17);
         let cfg = H2Config { eta, ..timing_cfg() };
-        let before = flops::snapshot();
-        let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &cfg);
-        let mid = flops::snapshot();
-        let _fac = factorize(&h2, &NativeBackend::new());
-        let after = flops::snapshot();
-        let pre = flops::delta(before, mid).prefactor;
-        let fac = flops::delta(mid, after).factor;
+        // One scope per data point: construction attributes its basis work
+        // to Prefactor internally (h2::construct uses with_phase).
+        let scope = flops::FlopScope::new();
+        let h2 = flops::scoped(&scope, flops::Phase::Construct, || {
+            H2Matrix::construct(&g, &KernelFn::laplace(), &cfg)
+        });
+        let _fac = flops::scoped(&scope, flops::Phase::Factor, || {
+            factorize(&h2, &NativeBackend::new())
+        });
+        let c = scope.snapshot();
+        let pre = c.prefactor;
+        let fac = c.factor;
         let share = pre as f64 / (pre + fac).max(1) as f64;
         out.push_str(&format!(
             "{eta:.1}, {:.3}, {:.3}, {:.1}%\n",

@@ -1,31 +1,29 @@
 //! FLOP counters with named phases: per-session [`FlopScope`] handles plus
-//! deprecated process-global totals.
+//! an ambient thread-local binding for kernel call sites.
 //!
 //! The paper reports FLOP *counts* (Fig 15), FLOP *rates* (Fig 14) and the
 //! pre-factorization vs factorization *split* (Fig 17). Counters are
 //! thread-safe atomics so batched parallel kernels can report from any
 //! worker.
 //!
-//! **Scoping.** The free functions ([`add`], [`snapshot`], …) feed
-//! process-global statics — concurrent solver sessions cross-contaminate
-//! them, so they are kept only as a deprecated process-wide sum for
-//! single-session harnesses (the figure scripts). Session-accurate
-//! accounting uses a [`FlopScope`]: the plan executor credits each
-//! program's statically-known FLOP total to the scope threaded through it,
-//! so `BuildStats::factor_flops` is correct even with concurrent sessions.
+//! **Scoping.** All accounting is per-[`FlopScope`]: scopes from different
+//! sessions never see each other's work, so `BuildStats::factor_flops` is
+//! correct even with concurrent sessions. Kernel call sites stay
+//! one-liners ([`add`]) by crediting the thread's *ambient* scope — bound
+//! with [`scoped`] around a pipeline stage, propagated to pool workers by
+//! [`crate::util::pool::par_for`], and simply a no-op when nothing is
+//! bound (the plan executor credits statically-known program totals
+//! directly via [`FlopScope::add`] instead). [`with_phase`] re-attributes
+//! the ambient scope to a different phase for a sub-stage (e.g. the
+//! `A_Close · A_cc⁻¹` pre-factorization work inside construction); without
+//! an ambient scope it is a transparent passthrough. There is no
+//! process-global counter: unscoped work is intentionally uncounted.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-static TOTAL: AtomicU64 = AtomicU64::new(0);
-
-// Named phase counters (paper phases).
-static CONSTRUCT: AtomicU64 = AtomicU64::new(0);
-static PREFACTOR: AtomicU64 = AtomicU64::new(0);
-static FACTOR: AtomicU64 = AtomicU64::new(0);
-static SUBSTITUTE: AtomicU64 = AtomicU64::new(0);
-
-/// Which phase subsequent [`add`] calls are attributed to.
+/// Which phase FLOPs are attributed to (the paper's pipeline stages).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Phase {
     Construct,
@@ -35,59 +33,64 @@ pub enum Phase {
     Substitute,
 }
 
-// Global (not thread-local): batched kernels run on pool workers that must
-// inherit the coordinator's phase attribution. Within one single-threaded
-// harness phases never overlap in time, so a relaxed global is correct for
-// that (deprecated) accounting. Concurrent solves on one session — or
-// concurrent sessions — DO overlap: their set/restore pairs interleave, so
-// the global phase *split* is unreliable exactly where the global *totals*
-// already were. This is accepted: the globals exist only for the
-// single-session figure scripts; session-accurate numbers come from
-// [`FlopScope`], which has no phase global at all.
-static CURRENT_PHASE: AtomicU64 = AtomicU64::new(0);
+thread_local! {
+    /// The scope+phase that [`add`] credits on this thread, if any.
+    static AMBIENT: RefCell<Option<(FlopScope, Phase)>> = const { RefCell::new(None) };
+}
 
-fn phase_to_u64(p: Phase) -> u64 {
-    match p {
-        Phase::Construct => 0,
-        Phase::Prefactor => 1,
-        Phase::Factor => 2,
-        Phase::Substitute => 3,
+/// RAII guard restoring the previous ambient binding on drop, so nested
+/// [`scoped`]/[`with_phase`] regions and pool workers unwind cleanly.
+pub(crate) struct AmbientGuard {
+    prev: Option<(FlopScope, Phase)>,
+}
+
+impl Drop for AmbientGuard {
+    fn drop(&mut self) {
+        AMBIENT.with(|a| *a.borrow_mut() = self.prev.take());
     }
 }
 
-fn phase_from_u64(v: u64) -> Phase {
-    match v {
-        1 => Phase::Prefactor,
-        2 => Phase::Factor,
-        3 => Phase::Substitute,
-        _ => Phase::Construct,
+/// Bind (or clear, with `None`) this thread's ambient scope until the
+/// returned guard drops. Used by the pool to mirror the coordinator's
+/// binding onto worker threads.
+pub(crate) fn bind_ambient(val: Option<(FlopScope, Phase)>) -> AmbientGuard {
+    let prev = AMBIENT.with(|a| std::mem::replace(&mut *a.borrow_mut(), val));
+    AmbientGuard { prev }
+}
+
+/// This thread's current ambient binding (cheap clone: scopes share
+/// atomics).
+pub(crate) fn ambient() -> Option<(FlopScope, Phase)> {
+    AMBIENT.with(|a| a.borrow().clone())
+}
+
+/// Run `f` with kernel-level [`add`] calls on this thread (and on pool
+/// workers it fans out to) credited to `scope` under `phase`.
+pub fn scoped<T>(scope: &FlopScope, phase: Phase, f: impl FnOnce() -> T) -> T {
+    let _guard = bind_ambient(Some((scope.clone(), phase)));
+    f()
+}
+
+/// Re-attribute the ambient scope to `phase` for the duration of `f`.
+/// Without an ambient binding this is a transparent passthrough: the work
+/// still runs, its FLOPs are simply uncounted.
+pub fn with_phase<T>(phase: Phase, f: impl FnOnce() -> T) -> T {
+    match ambient() {
+        Some((scope, _)) => scoped(&scope, phase, f),
+        None => f(),
     }
 }
 
-/// Set the global phase; returns the previous phase.
-pub fn set_phase(p: Phase) -> Phase {
-    phase_from_u64(CURRENT_PHASE.swap(phase_to_u64(p), Ordering::Relaxed))
-}
-
-/// Run `f` with the given phase attribution.
-pub fn with_phase<T>(p: Phase, f: impl FnOnce() -> T) -> T {
-    let old = set_phase(p);
-    let out = f();
-    set_phase(old);
-    out
-}
-
-/// Record `n` floating-point operations in the current phase.
+/// Record `n` floating-point operations against the ambient scope, if one
+/// is bound; a no-op otherwise. Kernels call this unconditionally — the
+/// binding decides whether anyone is listening.
 #[inline]
 pub fn add(n: u64) {
-    TOTAL.fetch_add(n, Ordering::Relaxed);
-    let phase = phase_from_u64(CURRENT_PHASE.load(Ordering::Relaxed));
-    match phase {
-        Phase::Construct => CONSTRUCT.fetch_add(n, Ordering::Relaxed),
-        Phase::Prefactor => PREFACTOR.fetch_add(n, Ordering::Relaxed),
-        Phase::Factor => FACTOR.fetch_add(n, Ordering::Relaxed),
-        Phase::Substitute => SUBSTITUTE.fetch_add(n, Ordering::Relaxed),
-    };
+    AMBIENT.with(|a| {
+        if let Some((scope, phase)) = a.borrow().as_ref() {
+            scope.add(*phase, n);
+        }
+    });
 }
 
 /// FLOPs for a GEMM of shape m x n x k.
@@ -108,7 +111,7 @@ pub fn trsm_flops(n: usize, m: usize) -> u64 {
     n as u64 * n as u64 * m as u64
 }
 
-/// Snapshot of all counters.
+/// Snapshot of one scope's counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Counts {
     pub total: u64,
@@ -118,22 +121,11 @@ pub struct Counts {
     pub substitute: u64,
 }
 
-/// Read the counters.
-pub fn snapshot() -> Counts {
-    Counts {
-        total: TOTAL.load(Ordering::Relaxed),
-        construct: CONSTRUCT.load(Ordering::Relaxed),
-        prefactor: PREFACTOR.load(Ordering::Relaxed),
-        factor: FACTOR.load(Ordering::Relaxed),
-        substitute: SUBSTITUTE.load(Ordering::Relaxed),
-    }
-}
-
 /// Per-session FLOP counters.
 ///
 /// Cheap to clone (shared atomics); thread the same scope through every
-/// executor of one session. Unlike the process-global statics, scopes from
-/// different sessions never see each other's work.
+/// executor of one session. Scopes from different sessions never see each
+/// other's work.
 #[derive(Clone, Debug, Default)]
 pub struct FlopScope {
     inner: Arc<ScopeCounters>,
@@ -196,14 +188,33 @@ mod tests {
 
     #[test]
     fn phases_attribute() {
-        let before = snapshot();
-        with_phase(Phase::Factor, || add(100));
-        with_phase(Phase::Prefactor, || add(40));
-        let after = snapshot();
-        let d = delta(before, after);
-        assert!(d.factor >= 100);
-        assert!(d.prefactor >= 40);
-        assert!(d.total >= 140);
+        let scope = FlopScope::new();
+        scoped(&scope, Phase::Construct, || {
+            add(5);
+            with_phase(Phase::Factor, || add(100));
+            with_phase(Phase::Prefactor, || add(40));
+            // with_phase restores the outer attribution on exit.
+            add(2);
+        });
+        let c = scope.snapshot();
+        assert_eq!(c.construct, 7);
+        assert_eq!(c.factor, 100);
+        assert_eq!(c.prefactor, 40);
+        assert_eq!(c.total, 147);
+    }
+
+    #[test]
+    fn unbound_adds_are_dropped() {
+        // No ambient scope on this thread: add() is a no-op, with_phase a
+        // passthrough, and nothing panics.
+        add(1_000_000);
+        let out = with_phase(Phase::Factor, || {
+            add(9);
+            7
+        });
+        assert_eq!(out, 7);
+        let scope = FlopScope::new();
+        assert_eq!(scope.snapshot().total, 0);
     }
 
     #[test]
@@ -221,6 +232,20 @@ mod tests {
         let a2 = a.clone();
         a2.add(Phase::Factor, 1);
         assert_eq!(a.snapshot().factor, 101);
+    }
+
+    #[test]
+    fn ambient_binding_nests_and_restores() {
+        let outer = FlopScope::new();
+        let inner = FlopScope::new();
+        scoped(&outer, Phase::Factor, || {
+            add(1);
+            scoped(&inner, Phase::Substitute, || add(10));
+            add(1);
+        });
+        assert_eq!(outer.snapshot().factor, 2);
+        assert_eq!(inner.snapshot().substitute, 10);
+        assert!(ambient().is_none(), "guard must clear the binding");
     }
 
     #[test]

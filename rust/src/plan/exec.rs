@@ -33,7 +33,7 @@ use super::*;
 use crate::batch::device::{Device, DeviceArena, Launch, VecRegion};
 use crate::h2::H2Matrix;
 use crate::linalg::Matrix;
-use crate::metrics::flops::{self, FlopScope, Phase};
+use crate::metrics::flops::{FlopScope, Phase};
 use crate::ulv::{LevelFactor, SubstMode, UlvFactor};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -60,9 +60,10 @@ impl<'a> Executor<'a> {
         Executor { device, scope: None }
     }
 
-    /// Credit executed FLOPs (from the plan's metadata) to `scope` in
-    /// addition to the deprecated process-global counters the backends
-    /// still feed.
+    /// Credit executed FLOPs (from the plan's statically-known metadata)
+    /// to `scope`. Kernel-level counting stays off during replay: the
+    /// executor binds no ambient scope, so backend `flops::add` calls are
+    /// no-ops and nothing double-counts.
     pub fn with_scope(mut self, scope: &'a FlopScope) -> Executor<'a> {
         self.scope = Some(scope);
         self
@@ -114,7 +115,6 @@ impl<'a> Executor<'a> {
         mirror: Mirror,
     ) -> (Option<UlvFactor>, Box<dyn DeviceArena>) {
         assert!(plan.compatible(h2), "plan recorded for a different H2 structure");
-        let prev_phase = flops::set_phase(Phase::Factor);
         let prog = &plan.factor;
         let mut arena = self.device.new_arena(prog.buf_count);
 
@@ -142,7 +142,6 @@ impl<'a> Executor<'a> {
                 Mirror::Skip => None,
             }
         };
-        flops::set_phase(prev_phase);
         if let Some(scope) = self.scope {
             scope.add(Phase::Factor, prog.total_flops);
         }
@@ -289,7 +288,6 @@ impl<'a> Executor<'a> {
         mode: SubstMode,
     ) -> Vec<f64> {
         assert_eq!(b.len(), plan.n);
-        let prev_phase = flops::set_phase(Phase::Substitute);
         let prog = plan.solve_program(mode);
         let base = prog.vec_base;
         let mut x = vec![0.0; plan.n];
@@ -306,7 +304,6 @@ impl<'a> Executor<'a> {
         }));
         // Tolerant region reset: mid-launch panics leave half-moved slots.
         ws.reset(BufferId(base));
-        flops::set_phase(prev_phase);
         match run {
             Ok(()) => {}
             Err(payload) => std::panic::resume_unwind(payload),

@@ -76,9 +76,11 @@
 
 pub mod exec;
 pub mod record;
+pub mod verify;
 
 pub use exec::Executor;
 pub use record::{record, Recorder};
+pub use verify::{PlanReport, PlanViolation};
 
 use crate::batch::pad::{dim_pad, padded_batch};
 use crate::h2::H2Matrix;
@@ -591,7 +593,9 @@ impl Plan {
         match mode {
             crate::ulv::SubstMode::Parallel => &self.solve_parallel,
             crate::ulv::SubstMode::Naive => self.solve_naive.get_or_init(|| {
-                self.solve_ctx.record_solve(crate::ulv::SubstMode::Naive, &self.factor)
+                let prog = self.solve_ctx.record_solve(crate::ulv::SubstMode::Naive, &self.factor);
+                verify::debug_verify_naive(&self.factor, &self.sig, self.n, &prog);
+                prog
             }),
         }
     }

@@ -119,14 +119,18 @@ impl<'a> Recorder<'a> {
             leaf_ranges: self.h2.tree.leaves().iter().map(|n| (n.begin, n.end)).collect(),
         };
         let solve_parallel = ctx.record_solve(SubstMode::Parallel, &factor);
-        Plan::assemble(
+        let plan = Plan::assemble(
             self.h2.n(),
             self.h2.tree.depth,
             PlanSig::of(self.h2),
             factor,
             solve_parallel,
             ctx,
-        )
+        );
+        // Debug builds statically verify every recorded plan before it
+        // leaves the recorder (release sessions opt in via the builder).
+        super::verify::debug_verify_recorded(&plan);
+        plan
     }
 
     // ---------------- Factorization (Algorithms 2 and 4) ----------------

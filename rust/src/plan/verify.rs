@@ -1,0 +1,1498 @@
+//! Static plan verification: a pure, numerics-free analysis pass over a
+//! recorded [`Plan`].
+//!
+//! The paper's structural claim — the H²-ULV schedule is *static* (every
+//! buffer, launch, and dependency is fixed by the tree before numerics
+//! run) — means plan legality is decidable at record time, once per
+//! structure, instead of per execution. This module is that decision
+//! procedure: [`verify`] walks the factorization and substitution
+//! instruction streams with an abstract arena (states and shapes, no
+//! values) and either returns a [`PlanReport`] or the first
+//! [`PlanViolation`] with the offending instruction index.
+//!
+//! # Violation classes and the paper invariants they guard
+//!
+//! | [`ViolationKind`] | Invariant |
+//! |-------------------|-----------|
+//! | [`UseBeforeDef`](ViolationKind::UseBeforeDef), [`UseAfterFree`](ViolationKind::UseAfterFree), [`FreeBeforeDef`](ViolationKind::FreeBeforeDef), [`DoubleFree`](ViolationKind::DoubleFree) | Algorithm 2/4 level ordering: sparsify → factor → merge consumes each block exactly once, finest level first |
+//! | [`Redefinition`](ViolationKind::Redefinition) | single-assignment IR: every buffer is produced by exactly one instruction, so replay is order-deterministic |
+//! | [`DuplicateWrite`](ViolationKind::DuplicateWrite), [`ReadWriteAlias`](ViolationKind::ReadWriteAlias) | §3.7 level independence: batch items of one launch execute concurrently, so intra-launch aliasing is a data race |
+//! | [`FactorRegionWrite`](ViolationKind::FactorRegionWrite) | Algorithm 3/§3.7 substitution reads the factor read-only — the property that makes concurrent solve sessions sound |
+//! | [`Leak`](ViolationKind::Leak), [`MissingResident`](ViolationKind::MissingResident) | arena balance: after replay exactly the factor outputs, bases, and root stay resident ([`FactorProgram::resident_bufs`]) |
+//! | [`ShapeMismatch`](ViolationKind::ShapeMismatch) | eq 21 / Figure 2 block conformality: `U_iᵀ A_ij U_j`, panel TRSMs, and merges must agree on `(ndof, rank)` per box |
+//! | [`UnsetOperand`](ViolationKind::UnsetOperand), [`OutOfRange`](ViolationKind::OutOfRange) | recorder wiring: no `BufferId(u32::MAX)` placeholder or out-of-arena id survives recording |
+//!
+//! # Liveness → exact peak prediction
+//!
+//! The walk folds per-instruction live-buffer byte totals into a predicted
+//! peak footprint. On host-synchronous backends this is **exact** (the
+//! arena's byte count only dips *within* a launch — kernels move operands
+//! out and back — and uploads grow it monotonically inside an
+//! instruction), so `BuildStats::predicted_peak_bytes` equals the runtime
+//! [`crate::batch::device::DeviceArena::peak_bytes`] bit-for-bit.
+//! Overlapping executors ([`crate::batch::device::AsyncDevice`]) may
+//! transiently exceed the prediction when a cross-stream `Free` retires
+//! after a later `Upload`.
+//!
+//! # Static hazard graph
+//!
+//! [`hazard_graph`] enumerates the exact operation sequence an
+//! [`crate::batch::device::AsyncDevice`] executor issues (per-item
+//! uploads, per-buffer frees, one op per launch) and derives last-toucher
+//! dependency edges per [`BufferId`] from the same
+//! `device::launch_operands` classifier the runtime tracker uses — one
+//! source of operand roles for both. The differential audit test replays a
+//! factorization with the runtime hazard log enabled and asserts the two
+//! edge sets are identical, op for op.
+
+use super::{FactorProgram, HostSrc, Instr, Plan, PlanSig, SolveInstr, SolveProgram};
+use crate::batch::device::{launch_operands, Launch, LaunchOperands};
+use crate::plan::BufferId;
+use std::collections::HashMap;
+use std::fmt;
+
+// ---------------------------------------------------------------------
+// Shared launch-legality primitives (used statically here, dynamically by
+// `batch::device::validate::ValidatingDevice`).
+// ---------------------------------------------------------------------
+
+/// Is `id` the recorder's "unset" placeholder (`BufferId(u32::MAX)`)?
+pub(crate) fn is_unset(id: BufferId) -> bool {
+    id.0 == u32::MAX
+}
+
+/// An intra-launch write hazard (see [`write_alias_hazard`]).
+pub(crate) enum LaunchHazard {
+    /// Two batch items write the same buffer.
+    DuplicateWrite(BufferId),
+    /// One batch item reads a buffer another item writes.
+    ReadWriteAlias(BufferId),
+}
+
+/// Decide whether one launch's operand lists contain an intra-launch write
+/// hazard: batch items execute concurrently on real backends, so no two
+/// items may write the same buffer and no item may write a buffer another
+/// item reads (in-place updates are the defined exception for their *own*
+/// operand). Returns the first hazard in the deterministic order the
+/// runtime auditor reports (duplicate writes first, then read/write
+/// aliases in read order).
+pub(crate) fn write_alias_hazard(
+    reads: &[BufferId],
+    rw: &[BufferId],
+    writes: &[BufferId],
+) -> Option<LaunchHazard> {
+    let mut all_writes: Vec<u32> = rw.iter().chain(writes).map(|b| b.0).collect();
+    all_writes.sort_unstable();
+    for pair in all_writes.windows(2) {
+        if pair[0] == pair[1] {
+            return Some(LaunchHazard::DuplicateWrite(BufferId(pair[0])));
+        }
+    }
+    for r in reads {
+        if all_writes.binary_search(&r.0).is_ok() {
+            return Some(LaunchHazard::ReadWriteAlias(*r));
+        }
+    }
+    None
+}
+
+/// Does a substitution launch write any matrix buffer? The factor region
+/// is read-only during solves.
+pub(crate) fn solve_writes_matrices(ops: &LaunchOperands) -> bool {
+    !ops.mat_rw.is_empty() || !ops.mat_writes.is_empty()
+}
+
+// ---------------------------------------------------------------------
+// Violations and reports.
+// ---------------------------------------------------------------------
+
+/// Which instruction stream a violation was found in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramKind {
+    Factor,
+    SolveParallel,
+    SolveNaive,
+}
+
+impl fmt::Display for ProgramKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ProgramKind::Factor => "factorization",
+            ProgramKind::SolveParallel => "parallel substitution",
+            ProgramKind::SolveNaive => "naive substitution",
+        })
+    }
+}
+
+/// The class of a [`PlanViolation`] (see the module docs for the paper
+/// invariant each class guards).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// An operand is the recorder's unset placeholder `BufferId(u32::MAX)`.
+    UnsetOperand,
+    /// An operand id lies outside the program's arena range.
+    OutOfRange,
+    /// A buffer is read before any instruction defines it.
+    UseBeforeDef,
+    /// A buffer is read after a `Free` released it.
+    UseAfterFree,
+    /// A buffer is written by more than one instruction.
+    Redefinition,
+    /// A `Free` targets a buffer that was never defined.
+    FreeBeforeDef,
+    /// A `Free` targets an already-freed buffer.
+    DoubleFree,
+    /// A buffer is still live at program end without being a declared
+    /// resident output.
+    Leak,
+    /// A declared resident output is not live at program end.
+    MissingResident,
+    /// Two batch items of one launch write the same buffer.
+    DuplicateWrite,
+    /// One batch item reads a buffer another item of the same launch
+    /// writes.
+    ReadWriteAlias,
+    /// A substitution instruction writes into the read-only factor region.
+    FactorRegionWrite,
+    /// Operand shapes/lengths do not conform.
+    ShapeMismatch,
+}
+
+impl fmt::Display for ViolationKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ViolationKind::UnsetOperand => "unset operand",
+            ViolationKind::OutOfRange => "operand out of range",
+            ViolationKind::UseBeforeDef => "use before definition",
+            ViolationKind::UseAfterFree => "use after free",
+            ViolationKind::Redefinition => "buffer redefinition",
+            ViolationKind::FreeBeforeDef => "free before definition",
+            ViolationKind::DoubleFree => "double free",
+            ViolationKind::Leak => "buffer leak at program end",
+            ViolationKind::MissingResident => "missing resident output",
+            ViolationKind::DuplicateWrite => "duplicate intra-launch write",
+            ViolationKind::ReadWriteAlias => "intra-launch read/write alias",
+            ViolationKind::FactorRegionWrite => "write into read-only factor region",
+            ViolationKind::ShapeMismatch => "shape mismatch",
+        })
+    }
+}
+
+/// One verification failure, pinned to the offending instruction.
+#[derive(Clone, Debug)]
+pub struct PlanViolation {
+    /// Which program the violation is in.
+    pub program: ProgramKind,
+    /// Flattened instruction index within that program (prologue first for
+    /// the factorization; the end-of-program residency audit reports one
+    /// past the last instruction).
+    pub index: usize,
+    /// Opcode of the offending instruction (`"UPLOAD"`, `"FREE"`,
+    /// `"LOADRHS"`, `"STORESOL"`, `"END"`, or a launch opcode).
+    pub opcode: &'static str,
+    /// The buffer involved, when one is identifiable.
+    pub buffer: Option<BufferId>,
+    pub kind: ViolationKind,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+impl fmt::Display for PlanViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} program, instruction {}: [{}] {} — {}",
+            self.program, self.index, self.opcode, self.kind, self.detail
+        )
+    }
+}
+
+impl std::error::Error for PlanViolation {}
+
+/// Static analysis of one substitution program.
+#[derive(Clone, Debug)]
+pub struct SolveProgramReport {
+    /// Instruction count.
+    pub instrs: usize,
+    /// Batched launch count (from the recorded metadata).
+    pub launches: usize,
+    /// Workspace bytes a solve replay allocates (8 bytes per f64 entry of
+    /// every vector buffer).
+    pub workspace_bytes: usize,
+}
+
+/// One node of the static hazard graph: an operation the async executor
+/// would enqueue (an upload, a free, or a batched launch).
+#[derive(Clone, Debug)]
+pub struct HazardOp {
+    /// Issue-order sequence number.
+    pub seq: usize,
+    pub opcode: &'static str,
+    /// Stream the op is enqueued on (`level % streams`).
+    pub stream: usize,
+    /// Tree level (`usize::MAX` for the prologue).
+    pub level: usize,
+    /// Touched buffers, sorted and deduplicated — the async engine's
+    /// operand set.
+    pub operands: Vec<u32>,
+    /// Sequence numbers of the ops this one must wait for (last toucher
+    /// per operand), sorted and deduplicated.
+    pub deps: Vec<usize>,
+}
+
+/// Per-level aggregation of the hazard graph.
+#[derive(Clone, Copy, Debug)]
+pub struct LevelHazard {
+    /// Tree level (`usize::MAX` for the prologue, rendered as "pre").
+    pub level: usize,
+    /// Operations at this level.
+    pub ops: usize,
+    /// Longest chain of intra-level dependencies (in ops).
+    pub critical_path: usize,
+    /// Available parallelism: `ops / critical_path`.
+    pub parallelism: f64,
+}
+
+/// The static RAW/WAW dependency graph of a factorization replay.
+#[derive(Clone, Debug)]
+pub struct HazardGraph {
+    /// Stream count the graph was built for.
+    pub streams: usize,
+    /// Operations in issue order.
+    pub ops: Vec<HazardOp>,
+    /// Per-level aggregation, in first-occurrence order.
+    pub levels: Vec<LevelHazard>,
+    /// Longest dependency chain across the whole program (in ops).
+    pub critical_path: usize,
+    /// Total dependency edges.
+    pub edges: usize,
+}
+
+/// The verifier's positive result: everything the static analysis knows
+/// about a plan.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    pub n: usize,
+    pub depth: usize,
+    /// Factorization instruction count (including the root Cholesky).
+    pub factor_instrs: usize,
+    /// Exact predicted arena peak (see the module docs).
+    pub predicted_peak_bytes: usize,
+    /// Bytes resident after the factorization replay (factor outputs,
+    /// bases, root).
+    pub resident_bytes: usize,
+    /// Resident buffer count.
+    pub resident_buffers: usize,
+    /// Static hazard graph (built for the async executor's default stream
+    /// count).
+    pub hazard: HazardGraph,
+    pub solve_parallel: SolveProgramReport,
+    /// `Some` only if the naive program was already materialized
+    /// ([`Plan::solve_program`] records it lazily).
+    pub solve_naive: Option<SolveProgramReport>,
+}
+
+impl PlanReport {
+    /// Human-readable report (the CLI `plan-lint` body).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "plan ok: N={}, depth={}, factor instrs={}, predicted peak {} B, \
+             resident {} B in {} buffers\n",
+            self.n,
+            self.depth,
+            self.factor_instrs,
+            self.predicted_peak_bytes,
+            self.resident_bytes,
+            self.resident_buffers,
+        );
+        out.push_str(&format!(
+            "hazard graph ({} streams): {} ops, {} edges, critical path {} \
+             (available parallelism {:.1})\n",
+            self.hazard.streams,
+            self.hazard.ops.len(),
+            self.hazard.edges,
+            self.hazard.critical_path,
+            if self.hazard.critical_path > 0 {
+                self.hazard.ops.len() as f64 / self.hazard.critical_path as f64
+            } else {
+                0.0
+            },
+        ));
+        out.push_str("  level   ops   crit   parallelism\n");
+        for lh in &self.hazard.levels {
+            let name = if lh.level == usize::MAX {
+                "pre".to_string()
+            } else {
+                format!("L{}", lh.level)
+            };
+            out.push_str(&format!(
+                "  {:<5} {:>5} {:>6} {:>12.1}\n",
+                name, lh.ops, lh.critical_path, lh.parallelism
+            ));
+        }
+        let solve = |name: &str, r: &SolveProgramReport| {
+            format!(
+                "{name}: {} instrs, {} launches, workspace {} B\n",
+                r.instrs, r.launches, r.workspace_bytes
+            )
+        };
+        out.push_str(&solve("parallel substitution", &self.solve_parallel));
+        if let Some(naive) = &self.solve_naive {
+            out.push_str(&solve("naive substitution", naive));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Factorization walk.
+// ---------------------------------------------------------------------
+
+/// Abstract state of one arena slot during the walk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BufState {
+    Never,
+    Live,
+    Freed,
+}
+
+/// Result of a passing factorization walk: final buffer states and shapes
+/// (the substitution walk resolves its matrix operands against these) plus
+/// the liveness-derived footprint numbers.
+pub(crate) struct FactorAnalysis {
+    pub peak_bytes: usize,
+    pub resident_bytes: usize,
+    pub resident_buffers: usize,
+    state: Vec<BufState>,
+    shape: Vec<(usize, usize)>,
+    /// Instruction count including the root Cholesky.
+    pub instrs: usize,
+}
+
+/// The walking abstract arena.
+struct Walk<'p> {
+    program: ProgramKind,
+    count: usize,
+    state: Vec<BufState>,
+    shape: Vec<(usize, usize)>,
+    live_bytes: usize,
+    peak_bytes: usize,
+    index: usize,
+    sig: &'p PlanSig,
+}
+
+impl<'p> Walk<'p> {
+    fn new(count: usize, sig: &'p PlanSig) -> Walk<'p> {
+        Walk {
+            program: ProgramKind::Factor,
+            count,
+            state: vec![BufState::Never; count],
+            shape: vec![(0, 0); count],
+            live_bytes: 0,
+            peak_bytes: 0,
+            index: 0,
+            sig,
+        }
+    }
+
+    fn violation(
+        &self,
+        opcode: &'static str,
+        kind: ViolationKind,
+        buffer: Option<BufferId>,
+        detail: String,
+    ) -> PlanViolation {
+        PlanViolation { program: self.program, index: self.index, opcode, kind, buffer, detail }
+    }
+
+    /// Operand id sanity: not the unset placeholder, inside the arena.
+    fn check_id(&self, opcode: &'static str, id: BufferId, role: &str) -> Result<(), PlanViolation> {
+        if is_unset(id) {
+            return Err(self.violation(
+                opcode,
+                ViolationKind::UnsetOperand,
+                Some(id),
+                format!("{role} operand is the unset placeholder B{}", id.0),
+            ));
+        }
+        if id.0 as usize >= self.count {
+            return Err(self.violation(
+                opcode,
+                ViolationKind::OutOfRange,
+                Some(id),
+                format!("{role} operand B{} is outside the arena (0..{})", id.0, self.count),
+            ));
+        }
+        Ok(())
+    }
+
+    /// A read (or in-place) operand must be live.
+    fn check_read(
+        &self,
+        opcode: &'static str,
+        id: BufferId,
+        role: &str,
+    ) -> Result<(usize, usize), PlanViolation> {
+        self.check_id(opcode, id, role)?;
+        match self.state[id.0 as usize] {
+            BufState::Live => Ok(self.shape[id.0 as usize]),
+            BufState::Never => Err(self.violation(
+                opcode,
+                ViolationKind::UseBeforeDef,
+                Some(id),
+                format!("{role} operand B{} is read before any instruction defines it", id.0),
+            )),
+            BufState::Freed => Err(self.violation(
+                opcode,
+                ViolationKind::UseAfterFree,
+                Some(id),
+                format!("{role} operand B{} was already freed", id.0),
+            )),
+        }
+    }
+
+    /// A write target must be untouched (single-assignment IR).
+    fn check_write(
+        &self,
+        opcode: &'static str,
+        id: BufferId,
+        role: &str,
+    ) -> Result<(), PlanViolation> {
+        self.check_id(opcode, id, role)?;
+        match self.state[id.0 as usize] {
+            BufState::Never => Ok(()),
+            BufState::Live => Err(self.violation(
+                opcode,
+                ViolationKind::Redefinition,
+                Some(id),
+                format!("{role} target B{} is already live (defined twice)", id.0),
+            )),
+            BufState::Freed => Err(self.violation(
+                opcode,
+                ViolationKind::Redefinition,
+                Some(id),
+                format!("{role} target B{} is redefined after being freed", id.0),
+            )),
+        }
+    }
+
+    /// Commit a definition: slot becomes live with `shape`.
+    fn define(&mut self, id: BufferId, shape: (usize, usize)) {
+        let idx = id.0 as usize;
+        self.state[idx] = BufState::Live;
+        self.shape[idx] = shape;
+        self.live_bytes += 8 * shape.0 * shape.1;
+    }
+
+    fn free(&mut self, opcode: &'static str, id: BufferId) -> Result<(), PlanViolation> {
+        self.check_id(opcode, id, "freed")?;
+        let idx = id.0 as usize;
+        match self.state[idx] {
+            BufState::Live => {
+                self.state[idx] = BufState::Freed;
+                self.live_bytes -= 8 * self.shape[idx].0 * self.shape[idx].1;
+                Ok(())
+            }
+            BufState::Never => Err(self.violation(
+                opcode,
+                ViolationKind::FreeBeforeDef,
+                Some(id),
+                format!("B{} is freed but was never defined", id.0),
+            )),
+            BufState::Freed => Err(self.violation(
+                opcode,
+                ViolationKind::DoubleFree,
+                Some(id),
+                format!("B{} is freed twice", id.0),
+            )),
+        }
+    }
+
+    fn shape_err(
+        &self,
+        opcode: &'static str,
+        buffer: Option<BufferId>,
+        detail: String,
+    ) -> PlanViolation {
+        self.violation(opcode, ViolationKind::ShapeMismatch, buffer, detail)
+    }
+
+    /// Close out one instruction: advance the index, fold the live-byte
+    /// total into the peak (byte counts only grow monotonically *within*
+    /// an instruction, so the post-instruction total is the instruction's
+    /// maximum — see the module docs).
+    fn step(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        self.index += 1;
+    }
+
+    /// Shape of an uploaded host source, derived from the structural
+    /// signature: dense leaf blocks are `ndof_i × ndof_j`, bases are
+    /// square `ndof × ndof` transforms, couplings are `rank_i × rank_j`.
+    fn host_shape(&self, src: HostSrc) -> (usize, usize) {
+        let shapes = &self.sig.shapes;
+        match src {
+            HostSrc::Dense((i, j)) => (shapes[self.sig.depth][i].0, shapes[self.sig.depth][j].0),
+            HostSrc::Basis { level, index } => {
+                let n = shapes[level][index].0;
+                (n, n)
+            }
+            HostSrc::Coupling { level, key: (i, j) } => (shapes[level][i].1, shapes[level][j].1),
+        }
+    }
+
+    /// Verify one factorization instruction.
+    fn factor_instr(&mut self, instr: &Instr) -> Result<(), PlanViolation> {
+        match instr {
+            Instr::Upload { items } => {
+                for &(src, dst) in items {
+                    self.check_write("UPLOAD", dst, "upload")?;
+                    self.define(dst, self.host_shape(src));
+                }
+            }
+            Instr::Free { bufs } => {
+                for &b in bufs {
+                    self.free("FREE", b)?;
+                }
+            }
+            _ => {
+                let launch = factor_launch(instr);
+                self.factor_launch_instr(&launch)?;
+            }
+        }
+        self.step();
+        Ok(())
+    }
+
+    /// Verify one factorization launch: operand legality, intra-launch
+    /// aliasing, per-opcode shape conformality, then commit the writes.
+    fn factor_launch_instr(&mut self, launch: &Launch<'_>) -> Result<(), PlanViolation> {
+        let opcode = launch.opcode();
+        let ops = launch_operands(launch);
+        for &id in &ops.mat_reads {
+            self.check_read(opcode, id, "read")?;
+        }
+        for &id in &ops.mat_rw {
+            self.check_read(opcode, id, "in-place")?;
+        }
+        for &id in &ops.mat_writes {
+            self.check_write(opcode, id, "output")?;
+        }
+        if let Some(hazard) = write_alias_hazard(&ops.mat_reads, &ops.mat_rw, &ops.mat_writes) {
+            return Err(self.alias_violation(opcode, hazard, "matrix"));
+        }
+
+        // Per-opcode shape rules; `define` the outputs as we go (write
+        // targets are disjoint from every other operand after the checks
+        // above, so the order within the launch does not matter).
+        match launch {
+            Launch::Sparsify { items, .. } => {
+                for it in items.iter() {
+                    let u = self.shape[it.u.0 as usize];
+                    let a = self.shape[it.a.0 as usize];
+                    let v = self.shape[it.v.0 as usize];
+                    if u.0 != u.1 || u.0 != a.0 {
+                        return Err(self.shape_err(
+                            opcode,
+                            Some(it.u),
+                            format!("basis U is {}x{} but block rows are {}", u.0, u.1, a.0),
+                        ));
+                    }
+                    if v.0 != v.1 || v.0 != a.1 {
+                        return Err(self.shape_err(
+                            opcode,
+                            Some(it.v),
+                            format!("basis V is {}x{} but block cols are {}", v.0, v.1, a.1),
+                        ));
+                    }
+                    self.define(it.dst, a);
+                }
+            }
+            Launch::Extract { items } => {
+                for it in items.iter() {
+                    let src = self.shape[it.src.0 as usize];
+                    if it.r0 + it.rows > src.0 || it.c0 + it.cols > src.1 {
+                        return Err(self.shape_err(
+                            opcode,
+                            Some(it.src),
+                            format!(
+                                "extract window ({},{})+({}x{}) exceeds source {}x{}",
+                                it.r0, it.c0, it.rows, it.cols, src.0, src.1
+                            ),
+                        ));
+                    }
+                    self.define(it.dst, (it.rows, it.cols));
+                }
+            }
+            Launch::Potrf { bufs, .. } => {
+                for &b in bufs.iter() {
+                    let s = self.shape[b.0 as usize];
+                    if s.0 != s.1 {
+                        return Err(self.shape_err(
+                            opcode,
+                            Some(b),
+                            format!("Cholesky block B{} is {}x{}, not square", b.0, s.0, s.1),
+                        ));
+                    }
+                }
+            }
+            Launch::TrsmRightLt { items, .. } => {
+                for it in items.iter() {
+                    let l = self.shape[it.l.0 as usize];
+                    let b = self.shape[it.b.0 as usize];
+                    if l.0 != l.1 || b.1 != l.0 {
+                        return Err(self.shape_err(
+                            opcode,
+                            Some(it.b),
+                            format!(
+                                "panel {}x{} does not conform with triangle {}x{}",
+                                b.0, b.1, l.0, l.1
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::SchurSelf { items, .. } => {
+                for it in items.iter() {
+                    let a = self.shape[it.a.0 as usize];
+                    let c = self.shape[it.c.0 as usize];
+                    if c.0 != c.1 || a.0 != c.0 {
+                        return Err(self.shape_err(
+                            opcode,
+                            Some(it.c),
+                            format!(
+                                "Schur update a={}x{} into c={}x{} does not conform",
+                                a.0, a.1, c.0, c.1
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::Merge { items } => {
+                for it in items.iter() {
+                    for p in &it.parts {
+                        let src = self.shape[p.src.0 as usize];
+                        if p.roff + p.rows > it.rows
+                            || p.coff + p.cols > it.cols
+                            || p.rows > src.0
+                            || p.cols > src.1
+                        {
+                            return Err(self.shape_err(
+                                opcode,
+                                Some(p.src),
+                                format!(
+                                    "merge tile ({},{})+({}x{}) from {}x{} source exceeds \
+                                     {}x{} destination",
+                                    p.roff, p.coff, p.rows, p.cols, src.0, src.1, it.rows,
+                                    it.cols
+                                ),
+                            ));
+                        }
+                    }
+                    self.define(it.dst, (it.rows, it.cols));
+                }
+            }
+            _ => unreachable!("substitution opcode in factorization stream"),
+        }
+        Ok(())
+    }
+
+    fn alias_violation(
+        &self,
+        opcode: &'static str,
+        hazard: LaunchHazard,
+        space: &str,
+    ) -> PlanViolation {
+        match hazard {
+            LaunchHazard::DuplicateWrite(b) => self.violation(
+                opcode,
+                ViolationKind::DuplicateWrite,
+                Some(b),
+                format!("two batch items write the same {space} buffer B{}", b.0),
+            ),
+            LaunchHazard::ReadWriteAlias(b) => self.violation(
+                opcode,
+                ViolationKind::ReadWriteAlias,
+                Some(b),
+                format!(
+                    "{space} buffer B{} is read by one batch item and written by another",
+                    b.0
+                ),
+            ),
+        }
+    }
+}
+
+/// Build the [`Launch`] a factorization instruction maps onto (mirrors
+/// `exec::Executor::run_factor_steps` — `Upload`/`Free` never reach here).
+fn factor_launch(instr: &Instr) -> Launch<'_> {
+    match instr {
+        Instr::Sparsify { level, items } => Launch::Sparsify { level: *level, items },
+        Instr::Extract { items } => Launch::Extract { items },
+        Instr::Potrf { level, bufs } => Launch::Potrf { level: *level, bufs },
+        Instr::TrsmRightLt { level, items } => Launch::TrsmRightLt { level: *level, items },
+        Instr::SchurSelf { level, items } => Launch::SchurSelf { level: *level, items },
+        Instr::Merge { level: _, items } => Launch::Merge { items },
+        Instr::Upload { .. } | Instr::Free { .. } => {
+            unreachable!("Upload/Free are arena transfers, not launches")
+        }
+    }
+}
+
+/// Walk the factorization program. On success the returned analysis holds
+/// the exact predicted peak and the final (resident) buffer states the
+/// substitution walks resolve their matrix operands against.
+pub(crate) fn verify_factor(
+    factor: &FactorProgram,
+    sig: &PlanSig,
+) -> Result<FactorAnalysis, PlanViolation> {
+    let mut walk = Walk::new(factor.buf_count, sig);
+    for instr in &factor.prologue {
+        walk.factor_instr(instr)?;
+    }
+    for lp in &factor.levels {
+        for instr in &lp.steps {
+            walk.factor_instr(instr)?;
+        }
+    }
+
+    // The root Cholesky (Algorithm 2 line 22) is issued by the executor,
+    // not recorded as a step — verify it as a virtual final instruction.
+    let root = [factor.root_src];
+    let root_launch = Launch::Potrf { level: 0, bufs: &root };
+    walk.factor_launch_instr(&root_launch)?;
+    let root_shape = walk.check_read("POTRF", factor.root_src, "root")?;
+    if root_shape != (factor.root_n, factor.root_n) {
+        return Err(walk.shape_err(
+            "POTRF",
+            Some(factor.root_src),
+            format!(
+                "root buffer is {}x{} but root_n is {}",
+                root_shape.0, root_shape.1, factor.root_n
+            ),
+        ));
+    }
+    walk.step();
+
+    // End-of-program residency audit: the live set must be exactly the
+    // declared resident outputs (factor blocks, bases, root).
+    let resident = factor.resident_bufs();
+    let mut is_resident = vec![false; factor.buf_count];
+    for &b in &resident {
+        walk.check_id("END", b, "resident")?;
+        is_resident[b.0 as usize] = true;
+    }
+    let mut resident_bytes = 0;
+    for idx in 0..factor.buf_count {
+        let live = walk.state[idx] == BufState::Live;
+        if live && !is_resident[idx] {
+            return Err(walk.violation(
+                "END",
+                ViolationKind::Leak,
+                Some(BufferId(idx as u32)),
+                format!("B{idx} is still live at program end but is not a resident output"),
+            ));
+        }
+        if !live && is_resident[idx] {
+            return Err(walk.violation(
+                "END",
+                ViolationKind::MissingResident,
+                Some(BufferId(idx as u32)),
+                format!("resident output B{idx} is not live at program end"),
+            ));
+        }
+        if live {
+            resident_bytes += 8 * walk.shape[idx].0 * walk.shape[idx].1;
+        }
+    }
+
+    Ok(FactorAnalysis {
+        peak_bytes: walk.peak_bytes,
+        resident_bytes,
+        resident_buffers: resident.len(),
+        state: walk.state,
+        shape: walk.shape,
+        instrs: walk.index,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Substitution walk.
+// ---------------------------------------------------------------------
+
+/// The substitution walk's view of the arena: the factorization's final
+/// (resident) matrix states plus the program's pre-allocated vector region
+/// (`Executor::solve_in` zero-allocates every vector up front, so vectors
+/// have no def-before-use discipline — only range, length, aliasing, and
+/// factor-region rules).
+struct SolveWalk<'a> {
+    kind: ProgramKind,
+    fa: &'a FactorAnalysis,
+    base: usize,
+    lens: &'a [usize],
+    n: usize,
+    index: usize,
+}
+
+impl SolveWalk<'_> {
+    fn violation(
+        &self,
+        opcode: &'static str,
+        kind: ViolationKind,
+        buffer: Option<BufferId>,
+        detail: String,
+    ) -> PlanViolation {
+        PlanViolation { program: self.kind, index: self.index, opcode, kind, buffer, detail }
+    }
+
+    /// Resolve a matrix operand against the resident factor region.
+    fn check_mat(
+        &self,
+        opcode: &'static str,
+        id: BufferId,
+        role: &str,
+    ) -> Result<(usize, usize), PlanViolation> {
+        if is_unset(id) {
+            return Err(self.violation(
+                opcode,
+                ViolationKind::UnsetOperand,
+                Some(id),
+                format!("{role} operand is the unset placeholder B{}", id.0),
+            ));
+        }
+        let idx = id.0 as usize;
+        if idx >= self.fa.state.len() {
+            return Err(self.violation(
+                opcode,
+                ViolationKind::OutOfRange,
+                Some(id),
+                format!(
+                    "{role} operand B{} is outside the factor region (0..{})",
+                    id.0,
+                    self.fa.state.len()
+                ),
+            ));
+        }
+        match self.fa.state[idx] {
+            BufState::Live => Ok(self.fa.shape[idx]),
+            BufState::Never => Err(self.violation(
+                opcode,
+                ViolationKind::UseBeforeDef,
+                Some(id),
+                format!("{role} operand B{} is never defined by the factorization", id.0),
+            )),
+            BufState::Freed => Err(self.violation(
+                opcode,
+                ViolationKind::UseAfterFree,
+                Some(id),
+                format!("{role} operand B{} is freed before the factorization ends", id.0),
+            )),
+        }
+    }
+
+    /// Resolve a vector operand: must lie in the program's vector region.
+    /// `write` distinguishes the factor-region-write violation from a
+    /// plain out-of-range read.
+    fn check_vec(
+        &self,
+        opcode: &'static str,
+        id: BufferId,
+        role: &str,
+        write: bool,
+    ) -> Result<usize, PlanViolation> {
+        if is_unset(id) {
+            return Err(self.violation(
+                opcode,
+                ViolationKind::UnsetOperand,
+                Some(id),
+                format!("{role} operand is the unset placeholder B{}", id.0),
+            ));
+        }
+        let idx = id.0 as usize;
+        if idx < self.base {
+            if write {
+                return Err(self.violation(
+                    opcode,
+                    ViolationKind::FactorRegionWrite,
+                    Some(id),
+                    format!(
+                        "{role} target B{} lies in the read-only factor region (vectors \
+                         start at B{})",
+                        id.0, self.base
+                    ),
+                ));
+            }
+            return Err(self.violation(
+                opcode,
+                ViolationKind::OutOfRange,
+                Some(id),
+                format!(
+                    "{role} operand B{} lies below the vector region (vectors start at B{})",
+                    id.0, self.base
+                ),
+            ));
+        }
+        if idx >= self.base + self.lens.len() {
+            return Err(self.violation(
+                opcode,
+                ViolationKind::OutOfRange,
+                Some(id),
+                format!(
+                    "{role} operand B{} is outside the vector region ({}..{})",
+                    id.0,
+                    self.base,
+                    self.base + self.lens.len()
+                ),
+            ));
+        }
+        Ok(self.lens[idx - self.base])
+    }
+
+    fn len_err(
+        &self,
+        opcode: &'static str,
+        buffer: Option<BufferId>,
+        detail: String,
+    ) -> PlanViolation {
+        self.violation(opcode, ViolationKind::ShapeMismatch, buffer, detail)
+    }
+
+    /// Verify one RHS/solution transfer step (`LoadRhs`/`StoreSol`).
+    fn check_segments(
+        &self,
+        opcode: &'static str,
+        items: &[(usize, usize, BufferId)],
+        write: bool,
+    ) -> Result<(), PlanViolation> {
+        for &(s, e, v) in items {
+            if s > e || e > self.n {
+                return Err(self.len_err(
+                    opcode,
+                    Some(v),
+                    format!("segment {s}..{e} is outside the vector 0..{}", self.n),
+                ));
+            }
+            let len = self.check_vec(opcode, v, "segment", write)?;
+            if len != e - s {
+                return Err(self.len_err(
+                    opcode,
+                    Some(v),
+                    format!("segment {s}..{e} has {} elements but B{} holds {len}", e - s, v.0),
+                ));
+            }
+        }
+        if write {
+            let bufs: Vec<BufferId> = items.iter().map(|&(_, _, v)| v).collect();
+            if let Some(hazard) = write_alias_hazard(&[], &[], &bufs) {
+                return Err(match hazard {
+                    LaunchHazard::DuplicateWrite(b) => self.violation(
+                        opcode,
+                        ViolationKind::DuplicateWrite,
+                        Some(b),
+                        format!("two segments load into the same buffer B{}", b.0),
+                    ),
+                    LaunchHazard::ReadWriteAlias(_) => unreachable!("no reads supplied"),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify one launch-like substitution step.
+    fn check_launch(&self, launch: &Launch<'_>) -> Result<(), PlanViolation> {
+        let opcode = launch.opcode();
+        let ops = launch_operands(launch);
+        if solve_writes_matrices(&ops) {
+            let b = ops.mat_rw.first().or(ops.mat_writes.first()).copied();
+            return Err(self.violation(
+                opcode,
+                ViolationKind::FactorRegionWrite,
+                b,
+                "substitution launches must not write matrix buffers (the factor region is \
+                 read-only)"
+                    .to_string(),
+            ));
+        }
+        for &id in &ops.mat_reads {
+            self.check_mat(opcode, id, "factor-region read")?;
+        }
+        for &id in &ops.vec_reads {
+            self.check_vec(opcode, id, "workspace read", false)?;
+        }
+        for &id in &ops.vec_rw {
+            self.check_vec(opcode, id, "workspace in-place", true)?;
+        }
+        for &id in &ops.vec_writes {
+            self.check_vec(opcode, id, "workspace output", true)?;
+        }
+        if let Some(hazard) = write_alias_hazard(&ops.vec_reads, &ops.vec_rw, &ops.vec_writes) {
+            return Err(match hazard {
+                LaunchHazard::DuplicateWrite(b) => self.violation(
+                    opcode,
+                    ViolationKind::DuplicateWrite,
+                    Some(b),
+                    format!("two batch items write the same vector buffer B{}", b.0),
+                ),
+                LaunchHazard::ReadWriteAlias(b) => self.violation(
+                    opcode,
+                    ViolationKind::ReadWriteAlias,
+                    Some(b),
+                    format!(
+                        "vector buffer B{} is read by one batch item and written by another",
+                        b.0
+                    ),
+                ),
+            });
+        }
+
+        // Length conformality per opcode.
+        let vlen = |id: BufferId| self.lens[id.0 as usize - self.base];
+        let mshape = |id: BufferId| self.fa.shape[id.0 as usize];
+        match launch {
+            Launch::ApplyBasis { items, .. } => {
+                for &(u, src, dst) in items.iter() {
+                    let us = mshape(u);
+                    if us.0 != us.1 || vlen(src) != us.0 || vlen(dst) != us.0 {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(u),
+                            format!(
+                                "basis {}x{} applied to vectors of length {} -> {}",
+                                us.0,
+                                us.1,
+                                vlen(src),
+                                vlen(dst)
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::Split { items } => {
+                for &(src, at, lo, hi) in items.iter() {
+                    if at > vlen(src) || vlen(lo) != at || vlen(hi) != vlen(src) - at {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(src),
+                            format!(
+                                "split of length-{} vector at {} into {} + {}",
+                                vlen(src),
+                                at,
+                                vlen(lo),
+                                vlen(hi)
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::Concat { items } => {
+                for &(dst, a, b) in items.iter() {
+                    if vlen(dst) != vlen(a) + vlen(b) {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(dst),
+                            format!(
+                                "concat of lengths {} + {} into length {}",
+                                vlen(a),
+                                vlen(b),
+                                vlen(dst)
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::CopyBuf { items } => {
+                for &(dst, src) in items.iter() {
+                    if vlen(dst) != vlen(src) {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(dst),
+                            format!("copy of length {} into length {}", vlen(src), vlen(dst)),
+                        ));
+                    }
+                }
+            }
+            Launch::AddVec { items } => {
+                for &(dst, a, b) in items.iter() {
+                    if vlen(dst) != vlen(a) || vlen(dst) != vlen(b) {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(dst),
+                            format!(
+                                "add of lengths {} + {} into length {}",
+                                vlen(a),
+                                vlen(b),
+                                vlen(dst)
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::TrsvFwd { items, .. } | Launch::TrsvBwd { items, .. } => {
+                for &(l, x) in items.iter() {
+                    let ls = mshape(l);
+                    if ls.0 != ls.1 || vlen(x) != ls.0 {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(l),
+                            format!(
+                                "triangular solve {}x{} against length-{} vector",
+                                ls.0,
+                                ls.1,
+                                vlen(x)
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::GemvAcc { trans, items, .. } => {
+                for &(a, x, y) in items.iter() {
+                    let s = mshape(a);
+                    let (rows, cols) = if *trans { (s.1, s.0) } else { (s.0, s.1) };
+                    if vlen(y) != rows || vlen(x) != cols {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(a),
+                            format!(
+                                "GEMV op(A)={rows}x{cols} against x of length {} into y of \
+                                 length {}",
+                                vlen(x),
+                                vlen(y)
+                            ),
+                        ));
+                    }
+                }
+            }
+            Launch::RootSolve { l, x } => {
+                let ls = mshape(*l);
+                if ls.0 != ls.1 || vlen(*x) != ls.0 {
+                    return Err(self.len_err(
+                        opcode,
+                        Some(*l),
+                        format!(
+                            "root solve {}x{} against length-{} vector",
+                            ls.0,
+                            ls.1,
+                            vlen(*x)
+                        ),
+                    ));
+                }
+            }
+            _ => unreachable!("factorization opcode in substitution stream"),
+        }
+        Ok(())
+    }
+}
+
+/// Walk one substitution program against a passing factorization analysis.
+fn verify_solve_inner(
+    fa: &FactorAnalysis,
+    n: usize,
+    prog: &SolveProgram,
+    kind: ProgramKind,
+) -> Result<SolveProgramReport, PlanViolation> {
+    let mut walk = SolveWalk {
+        kind,
+        fa,
+        base: prog.vec_base as usize,
+        lens: &prog.vec_lens,
+        n,
+        index: 0,
+    };
+    for step in &prog.steps {
+        match step {
+            SolveInstr::LoadRhs { items } => walk.check_segments("LOADRHS", items, true)?,
+            SolveInstr::StoreSol { items } => walk.check_segments("STORESOL", items, false)?,
+            SolveInstr::ApplyBasis { level, trans, items } => walk.check_launch(
+                &Launch::ApplyBasis { level: *level, trans: *trans, items },
+            )?,
+            SolveInstr::Split { items } => walk.check_launch(&Launch::Split { items })?,
+            SolveInstr::Concat { items } => walk.check_launch(&Launch::Concat { items })?,
+            SolveInstr::Copy { items } => walk.check_launch(&Launch::CopyBuf { items })?,
+            SolveInstr::TrsvFwd { level, items } => {
+                walk.check_launch(&Launch::TrsvFwd { level: *level, items })?
+            }
+            SolveInstr::TrsvBwd { level, items } => {
+                walk.check_launch(&Launch::TrsvBwd { level: *level, items })?
+            }
+            SolveInstr::GemvAcc { level, trans, items } => walk.check_launch(&Launch::GemvAcc {
+                level: *level,
+                trans: *trans,
+                alpha: -1.0,
+                items,
+            })?,
+            SolveInstr::Add { items } => walk.check_launch(&Launch::AddVec { items })?,
+            SolveInstr::RootSolve { l, x } => {
+                walk.check_launch(&Launch::RootSolve { l: *l, x: *x })?
+            }
+        }
+        walk.index += 1;
+    }
+    Ok(SolveProgramReport {
+        instrs: prog.steps.len(),
+        launches: prog.launches.len(),
+        workspace_bytes: 8 * prog.vec_lens.iter().sum::<usize>(),
+    })
+}
+
+/// Verify one substitution program standalone (runs the factorization walk
+/// internally to resolve matrix operands). [`Plan::solve_program`] uses
+/// this to debug-verify the lazily recorded naive program.
+pub fn verify_solve(
+    factor: &FactorProgram,
+    sig: &PlanSig,
+    n: usize,
+    prog: &SolveProgram,
+    kind: ProgramKind,
+) -> Result<SolveProgramReport, PlanViolation> {
+    let fa = verify_factor(factor, sig)?;
+    verify_solve_inner(&fa, n, prog, kind)
+}
+
+// ---------------------------------------------------------------------
+// Entry points.
+// ---------------------------------------------------------------------
+
+/// Verify a whole plan: the factorization program, the parallel
+/// substitution program, and — if it has already materialized — the lazy
+/// naive program. Returns the first violation found, or the full static
+/// report.
+pub fn verify(plan: &Plan) -> Result<PlanReport, PlanViolation> {
+    let fa = verify_factor(&plan.factor, &plan.sig)?;
+    let solve_parallel =
+        verify_solve_inner(&fa, plan.n, &plan.solve_parallel, ProgramKind::SolveParallel)?;
+    // Respect the lazy-recording contract: never force the naive program.
+    let solve_naive = if plan.naive_recorded() {
+        let prog = plan.solve_program(crate::ulv::SubstMode::Naive);
+        Some(verify_solve_inner(&fa, plan.n, prog, ProgramKind::SolveNaive)?)
+    } else {
+        None
+    };
+    Ok(PlanReport {
+        n: plan.n,
+        depth: plan.depth,
+        factor_instrs: fa.instrs,
+        predicted_peak_bytes: fa.peak_bytes,
+        resident_bytes: fa.resident_bytes,
+        resident_buffers: fa.resident_buffers,
+        hazard: hazard_graph(plan, crate::batch::device::r#async::DEFAULT_STREAMS),
+        solve_parallel,
+        solve_naive,
+    })
+}
+
+/// The exact arena peak a factorization replay reaches on a
+/// host-synchronous backend, or `None` if the program does not verify.
+pub fn predicted_peak_bytes(plan: &Plan) -> Option<usize> {
+    verify_factor(&plan.factor, &plan.sig).ok().map(|fa| fa.peak_bytes)
+}
+
+// ---------------------------------------------------------------------
+// Static hazard graph.
+// ---------------------------------------------------------------------
+
+/// Last-toucher chain builder: each op depends on the most recent prior op
+/// that touched any of its operands (the async engine's exact rule —
+/// every toucher updates the chain, reads included, so the graph is a
+/// conservative RAW/WAW/WAR order identical to the runtime tracker's).
+struct GraphBuilder {
+    ops: Vec<HazardOp>,
+    last: HashMap<u32, usize>,
+    edges: usize,
+}
+
+impl GraphBuilder {
+    fn push(&mut self, opcode: &'static str, stream: usize, level: usize, operands: Vec<u32>) {
+        let mut deps: Vec<usize> =
+            operands.iter().filter_map(|b| self.last.get(b).copied()).collect();
+        deps.sort_unstable();
+        deps.dedup();
+        let seq = self.ops.len();
+        for &b in &operands {
+            self.last.insert(b, seq);
+        }
+        self.edges += deps.len();
+        self.ops.push(HazardOp { seq, opcode, stream, level, operands, deps });
+    }
+
+    /// The async engine's operand set for a launch: every touched buffer,
+    /// sorted and deduplicated.
+    fn operand_set(launch: &Launch<'_>) -> Vec<u32> {
+        let ops = launch_operands(launch);
+        let mut set: Vec<u32> = ops
+            .mat_reads
+            .iter()
+            .chain(&ops.mat_rw)
+            .chain(&ops.mat_writes)
+            .map(|b| b.0)
+            .collect();
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    fn instr(&mut self, instr: &Instr, stream: usize, level: usize) {
+        match instr {
+            Instr::Upload { items } => {
+                for &(_, dst) in items {
+                    self.push("UPLOAD", stream, level, vec![dst.0]);
+                }
+            }
+            Instr::Free { bufs } => {
+                for &b in bufs {
+                    self.push("FREE", stream, level, vec![b.0]);
+                }
+            }
+            _ => {
+                let launch = factor_launch(instr);
+                self.push(launch.opcode(), stream, level, Self::operand_set(&launch));
+            }
+        }
+    }
+}
+
+/// Build the static hazard graph of a factorization replay on an async
+/// executor with `streams` queues: the exact op sequence
+/// (`Executor::factorize_*` issue order — per-item uploads, per-buffer
+/// frees, one op per launch) with last-toucher dependency edges and the
+/// engine's stream assignment (`level % streams`; the prologue runs on the
+/// initial stream 0).
+pub fn hazard_graph(plan: &Plan, streams: usize) -> HazardGraph {
+    let streams = streams.max(1);
+    let mut b = GraphBuilder { ops: Vec::new(), last: HashMap::new(), edges: 0 };
+
+    // Prologue: issued before any stream hint — the engine's initial state
+    // is stream 0, level unset.
+    for instr in &plan.factor.prologue {
+        b.instr(instr, 0, usize::MAX);
+    }
+    for lp in &plan.factor.levels {
+        let stream = lp.level % streams;
+        for instr in &lp.steps {
+            b.instr(instr, stream, lp.level);
+        }
+    }
+    // Root Cholesky: the executor switches to stream(0) first.
+    b.push("POTRF", 0, 0, vec![plan.factor.root_src.0]);
+
+    // Critical path: longest dependency chain, in ops.
+    let mut depth = vec![0usize; b.ops.len()];
+    let mut critical_path = 0;
+    for op in &b.ops {
+        let d = 1 + op.deps.iter().map(|&p| depth[p]).max().unwrap_or(0);
+        depth[op.seq] = d;
+        critical_path = critical_path.max(d);
+    }
+
+    // Per-level aggregation (intra-level chains only), in first-occurrence
+    // order.
+    let mut level_order: Vec<usize> = Vec::new();
+    let mut level_idx: HashMap<usize, usize> = HashMap::new();
+    for op in &b.ops {
+        level_idx.entry(op.level).or_insert_with(|| {
+            level_order.push(op.level);
+            level_order.len() - 1
+        });
+    }
+    let mut level_ops = vec![0usize; level_order.len()];
+    let mut level_crit = vec![0usize; level_order.len()];
+    let mut intra = vec![0usize; b.ops.len()];
+    for op in &b.ops {
+        let li = level_idx[&op.level];
+        level_ops[li] += 1;
+        let d = 1 + op
+            .deps
+            .iter()
+            .filter(|&&p| b.ops[p].level == op.level)
+            .map(|&p| intra[p])
+            .max()
+            .unwrap_or(0);
+        intra[op.seq] = d;
+        level_crit[li] = level_crit[li].max(d);
+    }
+    let levels = level_order
+        .iter()
+        .enumerate()
+        .map(|(li, &level)| LevelHazard {
+            level,
+            ops: level_ops[li],
+            critical_path: level_crit[li],
+            parallelism: if level_crit[li] > 0 {
+                level_ops[li] as f64 / level_crit[li] as f64
+            } else {
+                0.0
+            },
+        })
+        .collect();
+
+    HazardGraph { streams, ops: b.ops, levels, critical_path, edges: b.edges }
+}
+
+// Re-exported for the record-time hook (`Recorder::run` debug-verifies its
+// own output before handing the plan out).
+pub(crate) fn debug_verify_recorded(plan: &Plan) {
+    if cfg!(debug_assertions) {
+        if let Err(v) = verify(plan) {
+            panic!("recorder produced an invalid plan: {v}");
+        }
+    }
+}
+
+pub(crate) fn debug_verify_naive(
+    factor: &FactorProgram,
+    sig: &PlanSig,
+    n: usize,
+    prog: &SolveProgram,
+) {
+    if cfg!(debug_assertions) {
+        if let Err(v) = verify_solve(factor, sig, n, prog, ProgramKind::SolveNaive) {
+            panic!("recorder produced an invalid naive substitution program: {v}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_placeholder_is_detected() {
+        assert!(is_unset(BufferId(u32::MAX)));
+        assert!(!is_unset(BufferId(0)));
+    }
+
+    #[test]
+    fn alias_hazard_reports_duplicates_before_aliases() {
+        // Two items write B3; B3 is also read — the duplicate wins, in the
+        // same order the runtime auditor reports.
+        let reads = [BufferId(3)];
+        let writes = [BufferId(3), BufferId(3)];
+        match write_alias_hazard(&reads, &[], &writes) {
+            Some(LaunchHazard::DuplicateWrite(b)) => assert_eq!(b, BufferId(3)),
+            _ => panic!("expected a duplicate-write hazard"),
+        }
+        // Clean write sets pass.
+        let writes = [BufferId(4), BufferId(5)];
+        assert!(write_alias_hazard(&[BufferId(1)], &[], &writes).is_none());
+        // A read aliasing a write is the second class.
+        match write_alias_hazard(&[BufferId(4)], &[], &writes) {
+            Some(LaunchHazard::ReadWriteAlias(b)) => assert_eq!(b, BufferId(4)),
+            _ => panic!("expected a read/write alias hazard"),
+        }
+        // In-place operands count as writes.
+        match write_alias_hazard(&[], &[BufferId(7), BufferId(7)], &[]) {
+            Some(LaunchHazard::DuplicateWrite(b)) => assert_eq!(b, BufferId(7)),
+            _ => panic!("expected a duplicate-write hazard from rw operands"),
+        }
+    }
+
+    #[test]
+    fn solve_matrix_write_detection() {
+        let mut ops = LaunchOperands::default();
+        assert!(!solve_writes_matrices(&ops));
+        ops.mat_rw.push(BufferId(0));
+        assert!(solve_writes_matrices(&ops));
+        let mut ops = LaunchOperands::default();
+        ops.mat_writes.push(BufferId(1));
+        assert!(solve_writes_matrices(&ops));
+    }
+}

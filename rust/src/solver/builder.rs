@@ -74,6 +74,7 @@ pub struct H2SolverBuilder {
     subst: SubstMode,
     residual_samples: usize,
     storage: FactorStorage,
+    verify_plan: Option<bool>,
 }
 
 impl H2SolverBuilder {
@@ -89,6 +90,7 @@ impl H2SolverBuilder {
             subst: SubstMode::default(),
             residual_samples: 128,
             storage: FactorStorage::default(),
+            verify_plan: None,
         }
     }
 
@@ -126,6 +128,18 @@ impl H2SolverBuilder {
         self
     }
 
+    /// Force record-time static plan verification on or off
+    /// ([`crate::plan::verify`]). Unset, the `H2_VERIFY_PLAN` environment
+    /// variable decides (`0`/`false` disables, any other value enables),
+    /// and absent that it defaults to on in debug builds. A violation
+    /// surfaces as [`H2Error::PlanVerification`] from
+    /// [`H2SolverBuilder::build`] or
+    /// [`H2Solver::refactorize`](super::H2Solver::refactorize).
+    pub fn verify_plan(mut self, on: bool) -> Self {
+        self.verify_plan = Some(on);
+        self
+    }
+
     /// Validate the problem, instantiate the backend, construct the H²
     /// matrix, and run the ULV factorization.
     ///
@@ -134,6 +148,7 @@ impl H2SolverBuilder {
     pub fn build(self) -> Result<H2Solver, H2Error> {
         validate(&self.geometry, &self.config)?;
         let backend = self.backend.instantiate()?;
+        let verify_plan = self.verify_plan.unwrap_or_else(verify_plan_default);
         H2Solver::assemble(
             self.geometry,
             self.kernel,
@@ -143,7 +158,22 @@ impl H2SolverBuilder {
             self.subst,
             self.residual_samples,
             self.storage,
+            verify_plan,
         )
+    }
+}
+
+/// Resolve the default for record-time plan verification: the
+/// `H2_VERIFY_PLAN` environment variable wins (`0`/`false`, case
+/// insensitive, disables; any other value enables), else on in debug
+/// builds only.
+fn verify_plan_default() -> bool {
+    match std::env::var("H2_VERIFY_PLAN") {
+        Ok(v) => {
+            let v = v.to_lowercase();
+            v != "0" && v != "false"
+        }
+        Err(_) => cfg!(debug_assertions),
     }
 }
 

@@ -39,6 +39,7 @@
 //! | [`H2Error::BackendUnavailable`] | requested backend cannot start | PJRT artifacts missing, XLA runtime absent |
 //! | [`H2Error::NotPositiveDefinite`] | Cholesky broke down | kernel matrix not SPD (diagonal regularization removed) |
 //! | [`H2Error::ConvergenceFailure`] | iterative refinement missed its target | tolerance too tight for the factor quality |
+//! | [`H2Error::PlanVerification`] | the recorded plan failed the static verifier | recorder bug — see [`crate::plan::verify`] |
 //! | [`H2Error::Internal`] | a layered-code panic was caught | bug — please report |
 //!
 //! # Quickstart
@@ -90,6 +91,9 @@ pub enum H2Error {
     NotPositiveDefinite { stage: String, detail: String },
     /// Iterative refinement did not reach the requested tolerance.
     ConvergenceFailure { achieved: f64, target: f64, iterations: usize },
+    /// The recorded plan failed static verification
+    /// ([`crate::plan::verify`]) — a recorder bug, caught before replay.
+    PlanVerification(String),
     /// A panic from the layered code was caught and converted.
     Internal { stage: String, detail: String },
 }
@@ -118,6 +122,9 @@ impl fmt::Display for H2Error {
                 "iterative refinement stalled at relative residual {achieved:.3e} \
                  (target {target:.3e}) after {iterations} iteration(s)"
             ),
+            H2Error::PlanVerification(msg) => {
+                write!(f, "plan verification failed: {msg}")
+            }
             H2Error::Internal { stage, detail } => {
                 write!(f, "internal failure during {stage}: {detail}")
             }

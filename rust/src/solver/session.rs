@@ -86,6 +86,11 @@ pub struct BuildStats {
     /// Peak device-arena bytes during the factorization replay (factor
     /// plus transient sparsify/merge buffers).
     pub arena_peak_bytes: usize,
+    /// Statically predicted peak ([`crate::plan::verify`]): equals
+    /// `arena_peak_bytes` exactly on host-synchronous backends; overlapping
+    /// backends may transiently exceed it (cross-stream frees retiring
+    /// after later uploads).
+    pub predicted_peak_bytes: usize,
     /// Schedule statistics straight from the plan IR: launch counts per
     /// level, batch sizes, useful vs constant-shape padded FLOPs.
     pub schedule: ScheduleStats,
@@ -216,6 +221,9 @@ pub struct H2Solver {
     stats: BuildStats,
     scope: FlopScope,
     plan_recordings: usize,
+    /// Statically verify every newly recorded plan (builder flag /
+    /// `H2_VERIFY_PLAN` / debug default).
+    verify_plan: bool,
 }
 
 impl H2Solver {
@@ -230,10 +238,14 @@ impl H2Solver {
         subst: SubstMode,
         residual_samples: usize,
         storage: FactorStorage,
+        verify_plan: bool,
     ) -> Result<H2Solver, H2Error> {
         let scope = FlopScope::new();
         let (h2, construct_time) = construct_timed(&geometry, &kernel, &config)?;
         let plan = Arc::new(guard("planning", || plan::record(&h2))?);
+        if verify_plan {
+            plan::verify::verify(&plan).map_err(|v| H2Error::PlanVerification(v.to_string()))?;
+        }
         let meta = plan.factor_meta();
         let (factor, arena, stats) =
             replay_factor(&plan, &h2, backend.as_ref(), &scope, construct_time, storage, &meta)?;
@@ -254,6 +266,7 @@ impl H2Solver {
             stats,
             scope,
             plan_recordings: 1,
+            verify_plan,
         })
     }
 
@@ -606,6 +619,10 @@ impl H2Solver {
             self.plan.clone()
         } else {
             let plan = Arc::new(guard("planning", || plan::record(&h2))?);
+            if self.verify_plan {
+                plan::verify::verify(&plan)
+                    .map_err(|v| H2Error::PlanVerification(v.to_string()))?;
+            }
             self.plan_recordings += 1;
             plan
         };
@@ -755,10 +772,22 @@ fn replay_factor(
         mirror_entries: factor.as_ref().map(|f| f.storage_entries()).unwrap_or(0),
         arena_bytes: arena.bytes(),
         arena_peak_bytes: arena.peak_bytes(),
+        predicted_peak_bytes: plan::verify::predicted_peak_bytes(plan).unwrap_or(0),
         schedule: plan.schedule_stats(),
         // Drains and takes the replay's per-stream schedule on overlapping
         // backends; `None` on the synchronous ones.
         overlap: backend.take_overlap_trace(),
     };
+    // The static liveness analysis is exact on host-synchronous backends
+    // (overlapping executors may transiently exceed it; non-tracking
+    // arenas report 0).
+    debug_assert!(
+        stats.overlap.is_some()
+            || stats.arena_peak_bytes == 0
+            || stats.arena_peak_bytes == stats.predicted_peak_bytes,
+        "static peak prediction diverged from the arena: predicted {} B, measured {} B",
+        stats.predicted_peak_bytes,
+        stats.arena_peak_bytes
+    );
     Ok((factor, arena, stats))
 }

@@ -44,16 +44,25 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
     // Chunked dynamic scheduling: grab `chunk` items at a time.
     let chunk = (n / (workers * 4)).max(1);
     let cursor = AtomicUsize::new(0);
+    // Workers must credit FLOPs to the same ambient scope as the
+    // coordinator (flops::add is thread-local).
+    let ambient = crate::metrics::flops::ambient();
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    f(i);
+            let cursor = &cursor;
+            let f = &f;
+            let ambient = &ambient;
+            s.spawn(move || {
+                let _guard = crate::metrics::flops::bind_ambient(ambient.clone());
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
                 }
             });
         }
@@ -106,6 +115,16 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
         }
+    }
+
+    #[test]
+    fn par_for_propagates_flop_scope() {
+        use crate::metrics::flops::{self, FlopScope, Phase};
+        let scope = FlopScope::new();
+        flops::scoped(&scope, Phase::Factor, || {
+            par_for(64, |_| flops::add(1));
+        });
+        assert_eq!(scope.snapshot().factor, 64);
     }
 
     #[test]

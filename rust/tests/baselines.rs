@@ -94,15 +94,17 @@ fn h2_factorization_flops_scale_better_than_blr() {
         let g = Geometry::sphere_surface(n, 605);
         let cfg = H2Config { leaf_size: 64, max_rank: 24, ..Default::default() };
         let h2 = H2Matrix::construct(&g, &kern, &cfg);
-        let before = flops::snapshot();
-        let _fac = factorize(&h2, &NativeBackend::new());
-        h2_flops.push(flops::delta(before, flops::snapshot()).factor as f64);
+        let h2_scope = flops::FlopScope::new();
+        let _fac = flops::scoped(&h2_scope, flops::Phase::Factor, || {
+            factorize(&h2, &NativeBackend::new())
+        });
+        h2_flops.push(h2_scope.snapshot().factor as f64);
 
         let tree = ClusterTree::build(&g, 128);
         let mut blr = BlrMatrix::build(&tree.points, &kern, &BlrConfig::default());
-        let before = flops::snapshot();
-        blr.factorize();
-        blr_flops.push(flops::delta(before, flops::snapshot()).factor as f64);
+        let blr_scope = flops::FlopScope::new();
+        flops::scoped(&blr_scope, flops::Phase::Factor, || blr.factorize());
+        blr_flops.push(blr_scope.snapshot().factor as f64);
     }
     let h2_ratio = h2_flops[1] / h2_flops[0];
     let blr_ratio = blr_flops[1] / blr_flops[0];

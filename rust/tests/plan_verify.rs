@@ -1,0 +1,222 @@
+//! Static plan verifier integration tests (crate::plan::verify).
+//!
+//! Three angles, mirroring the verifier's three analyses:
+//!
+//! 1. **Positive sweep** — every fuzzed structure's recorded plan (the
+//!    factorization and *both* substitution programs) verifies clean.
+//! 2. **Peak exactness** — the liveness simulation's predicted arena peak
+//!    equals the byte-tracking arena's measured peak on host-synchronous
+//!    backends, for every fuzzed structure.
+//! 3. **Negative corruption** — hand-corrupting a recorded program makes
+//!    the verifier name the offending instruction index and violation
+//!    class (no false negatives on the defect classes it claims to catch).
+//!
+//! Plus the differential hazard audit: the async engine's runtime hazard
+//! tracker must order exactly the edges the static graph predicts.
+
+mod common;
+
+use common::{seeds, Case};
+use h2ulv::batch::device::AsyncDevice;
+use h2ulv::plan::verify::{self, ProgramKind, ViolationKind};
+use h2ulv::plan::{self, Instr, Plan, SolveInstr};
+use h2ulv::solver::backend::SerialBackend;
+use h2ulv::solver::BackendSpec;
+use h2ulv::ulv::SubstMode;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// 1. Positive sweep.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fuzzed_structures_verify_clean() {
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        let h2 = case.h2();
+        let plan = plan::record(&h2);
+        // Materialize the lazy naive program so both substitution modes
+        // are in scope for the verifier.
+        let _ = plan.solve_program(SubstMode::Naive);
+        let report = verify::verify(&plan)
+            .unwrap_or_else(|v| panic!("{case}: recorded plan flagged by the verifier: {v}"));
+        assert_eq!(report.n, case.n, "{case}");
+        assert!(
+            report.solve_naive.is_some(),
+            "{case}: materialized naive program must be verified too"
+        );
+        assert!(report.predicted_peak_bytes > 0, "{case}: peak prediction is empty");
+        assert!(report.hazard.critical_path > 0, "{case}: hazard graph is empty");
+        assert!(
+            report.hazard.ops.len() >= report.factor_instrs,
+            "{case}: per-item uploads/frees must not shrink the op count"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Predicted peak == measured arena peak (host-synchronous backends).
+// ---------------------------------------------------------------------
+
+#[test]
+fn predicted_peak_matches_arena_peak() {
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        for (name, spec) in
+            [("native", BackendSpec::Native), ("serial", BackendSpec::SerialReference)]
+        {
+            let solver = case.solver(spec);
+            let stats = solver.stats();
+            assert!(stats.predicted_peak_bytes > 0, "{case} on {name}: no prediction");
+            assert_eq!(
+                stats.predicted_peak_bytes, stats.arena_peak_bytes,
+                "{case} on {name}: static liveness peak must equal the arena's measured peak"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Negative corruption tests.
+// ---------------------------------------------------------------------
+
+/// A fixed plan to corrupt. The recorder's per-level layout is pinned by
+/// the index assertions below: steps[0] = basis Upload, steps[1] =
+/// Sparsify, steps[2] = Free of the consumed dense blocks, steps[3] = the
+/// RR Extract; the prologue is one Upload instruction, so
+/// `levels[0].steps[k]` sits at flattened index `1 + k`.
+fn fixed_plan(seed: u64) -> Plan {
+    plan::record(&Case::fixed(256, seed).h2())
+}
+
+#[test]
+fn verifier_flags_use_before_def_with_instruction_index() {
+    let mut plan = fixed_plan(3);
+    // Swap the basis upload behind the Sparsify that reads it.
+    assert!(matches!(plan.factor.levels[0].steps[0], Instr::Upload { .. }));
+    assert!(matches!(plan.factor.levels[0].steps[1], Instr::Sparsify { .. }));
+    plan.factor.levels[0].steps.swap(0, 1);
+    let v = verify::verify(&plan).expect_err("reordered basis upload must be flagged");
+    assert!(matches!(v.kind, ViolationKind::UseBeforeDef), "{v}");
+    assert_eq!(v.index, 1, "{v}");
+    assert_eq!(v.opcode, "SPARSIFY", "{v}");
+    assert!(matches!(v.program, ProgramKind::Factor), "{v}");
+}
+
+#[test]
+fn verifier_flags_use_after_free_with_instruction_index() {
+    let mut plan = fixed_plan(4);
+    // Hoist the consumed-blocks Free above the Sparsify that reads them.
+    assert!(matches!(plan.factor.levels[0].steps[2], Instr::Free { .. }));
+    plan.factor.levels[0].steps.swap(1, 2);
+    let v = verify::verify(&plan).expect_err("freed-then-read blocks must be flagged");
+    assert!(matches!(v.kind, ViolationKind::UseAfterFree), "{v}");
+    assert_eq!(v.index, 3, "{v}");
+    assert_eq!(v.opcode, "SPARSIFY", "{v}");
+}
+
+#[test]
+fn verifier_flags_duplicate_intra_launch_writes() {
+    let mut plan = fixed_plan(5);
+    let Instr::Extract { items } = &mut plan.factor.levels[0].steps[3] else {
+        panic!("recorder layout changed: steps[3] is not the RR Extract");
+    };
+    assert!(items.len() >= 2, "need two leaf boxes to alias");
+    items[1].dst = items[0].dst;
+    let dup = items[0].dst;
+    let v = verify::verify(&plan).expect_err("two items writing one buffer must be flagged");
+    assert!(matches!(v.kind, ViolationKind::DuplicateWrite), "{v}");
+    assert_eq!(v.index, 4, "{v}");
+    assert_eq!(v.opcode, "EXTRACT", "{v}");
+    assert_eq!(v.buffer, Some(dup), "{v}");
+}
+
+#[test]
+fn verifier_flags_double_free_with_instruction_index() {
+    let mut plan = fixed_plan(6);
+    let Instr::Free { bufs } = &mut plan.factor.levels[0].steps[2] else {
+        panic!("recorder layout changed: steps[2] is not the consumed-blocks Free");
+    };
+    let b = bufs[0];
+    bufs.push(b);
+    let v = verify::verify(&plan).expect_err("freeing a buffer twice must be flagged");
+    assert!(matches!(v.kind, ViolationKind::DoubleFree), "{v}");
+    assert_eq!(v.index, 3, "{v}");
+    assert_eq!(v.opcode, "FREE", "{v}");
+    assert_eq!(v.buffer, Some(b), "{v}");
+}
+
+#[test]
+fn verifier_flags_leak_at_program_end() {
+    let mut plan = fixed_plan(7);
+    let removed = plan.factor.levels[0].steps.remove(2);
+    assert!(matches!(removed, Instr::Free { .. }), "recorder layout changed");
+    // Index arithmetic on the corrupted program: the end-of-program
+    // residency audit reports one past the virtual root Cholesky.
+    let flat = 1 + plan.factor.levels.iter().map(|l| l.steps.len()).sum::<usize>();
+    let v = verify::verify(&plan).expect_err("undead buffers at program end must be flagged");
+    assert!(matches!(v.kind, ViolationKind::Leak), "{v}");
+    assert_eq!(v.index, flat + 1, "{v}");
+    assert_eq!(v.opcode, "END", "{v}");
+}
+
+#[test]
+fn verifier_flags_factor_region_writes_in_solve_programs() {
+    let mut plan = fixed_plan(8);
+    let idx = plan
+        .solve_parallel
+        .steps
+        .iter()
+        .position(|s| matches!(s, SolveInstr::TrsvFwd { .. }))
+        .expect("parallel substitution always forward-substitutes");
+    let SolveInstr::TrsvFwd { items, .. } = &mut plan.solve_parallel.steps[idx] else {
+        unreachable!()
+    };
+    // Point the in-place vector operand at the factor-region matrix: a
+    // substitution step may never write below the workspace base.
+    items[0].1 = items[0].0;
+    let v = verify::verify(&plan).expect_err("factor-region write must be flagged");
+    assert!(matches!(v.kind, ViolationKind::FactorRegionWrite), "{v}");
+    assert_eq!(v.index, idx, "{v}");
+    assert!(matches!(v.program, ProgramKind::SolveParallel), "{v}");
+}
+
+// ---------------------------------------------------------------------
+// Differential hazard audit: static graph vs the async runtime tracker.
+// ---------------------------------------------------------------------
+
+#[test]
+fn async_hazard_tracker_matches_static_graph() {
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        let h2 = case.h2();
+        let plan = Arc::new(plan::record(&h2));
+        let dev = AsyncDevice::new(SerialBackend);
+        dev.enable_hazard_log();
+        let _arena = plan::Executor::new(&dev).factorize_device_only(&plan, &h2);
+        let log = dev.take_hazard_log();
+        let graph = verify::hazard_graph(&plan, dev.streams());
+        assert_eq!(
+            log.len(),
+            graph.ops.len(),
+            "{case}: runtime issued a different op count than the static graph predicts"
+        );
+        for (r, s) in log.iter().zip(graph.ops.iter()) {
+            assert_eq!(r.seq as usize, s.seq, "{case}: sequence drift");
+            assert_eq!(r.opcode, s.opcode, "{case}: opcode at seq {}", s.seq);
+            assert_eq!(r.stream, s.stream, "{case}: stream at seq {} ({})", s.seq, s.opcode);
+            assert_eq!(r.level, s.level, "{case}: level at seq {} ({})", s.seq, s.opcode);
+            assert_eq!(
+                r.operands, s.operands,
+                "{case}: operand set at seq {} ({})",
+                s.seq, s.opcode
+            );
+            let deps: Vec<usize> = r.deps.iter().map(|&d| d as usize).collect();
+            assert_eq!(
+                deps, s.deps,
+                "{case}: dependency edges at seq {} ({})",
+                s.seq, s.opcode
+            );
+        }
+    }
+}
