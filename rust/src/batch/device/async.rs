@@ -49,7 +49,11 @@
 //! vector operands live in caller-borrowed regions that cannot outlive a
 //! journal entry. The wrapper resolves both regions to the wrapped
 //! device's arenas and delegates, so an `AsyncDevice` session keeps the
-//! lock-free concurrent-solve property of PR 4.
+//! lock-free concurrent-solve property of PR 4. Each delegated solve
+//! launch is still *timed* against the engine epoch and recorded as a
+//! [`OverlapKind::Compute`] event, so the overlap trace — and the
+//! `RunReport` built from it — covers the solve path too: concurrent
+//! solve threads show up as overlapping per-stream busy intervals.
 //!
 //! The transfer clone in [`AsyncArena::upload`] is this emulation's analog
 //! of staging into pinned host memory: the borrowed source matrix cannot
@@ -784,6 +788,13 @@ impl<D: Device + Send + Sync + 'static> Device for AsyncDevice<D> {
             Some(g) => &***g,
             None => factor,
         };
+        // Time the delegated call against the engine epoch so the solve
+        // path shows up in the overlap trace alongside the factorization
+        // workers' events (per-stream busy intervals, RunReport's
+        // `solve_trace_events`). Substitution runs on the calling thread;
+        // concurrent solve threads therefore appear as overlapping
+        // intervals tagged with the current stream/level.
+        let t_start = self.engine.origin.elapsed().as_secs_f64();
         match ws.as_any_mut().downcast_mut::<AsyncArena>() {
             Some(wa) => {
                 // write_cell recovers a workspace lock poisoned by an
@@ -795,6 +806,17 @@ impl<D: Device + Send + Sync + 'static> Device for AsyncDevice<D> {
             }
             None => self.inner.launch_solve(factor_ref, ws, launch),
         }
+        let t_end = self.engine.origin.elapsed().as_secs_f64();
+        let mut st = self.engine.state.lock().unwrap();
+        let (stream, level) = (st.current_stream, st.current_level);
+        st.trace.push(OverlapEvent {
+            stream,
+            level,
+            kind: OverlapKind::Compute,
+            opcode: launch.opcode(),
+            start: t_start,
+            end: t_end,
+        });
     }
 
     fn stream(&self, level: usize) {

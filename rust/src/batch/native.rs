@@ -17,20 +17,15 @@ use crate::linalg::blas::{self, Side, Uplo};
 use crate::linalg::chol;
 use crate::linalg::matrix::{Matrix, Trans};
 use crate::metrics::flops;
-use crate::metrics::Tracer;
+use crate::metrics::RunTrace;
 use crate::util::par_for;
 use std::sync::Mutex;
 
 /// Thread-pool batched backend.
+#[derive(Default)]
 pub struct NativeBackend {
-    /// Optional execution tracer (Figure 12 analog).
-    pub tracer: Option<Tracer>,
-}
-
-impl Default for NativeBackend {
-    fn default() -> Self {
-        NativeBackend { tracer: None }
-    }
+    /// Optional span trace recording every batched launch (Fig 12 analog).
+    pub trace: Option<RunTrace>,
 }
 
 impl NativeBackend {
@@ -38,8 +33,10 @@ impl NativeBackend {
         Self::default()
     }
 
-    pub fn with_tracer() -> Self {
-        NativeBackend { tracer: Some(Tracer::new(true)) }
+    /// Record every batched kernel launch into `trace` (a clone of the
+    /// caller's session-wide [`RunTrace`]).
+    pub fn with_trace(trace: RunTrace) -> Self {
+        NativeBackend { trace: Some(trace) }
     }
 
     fn trace<T>(
@@ -50,7 +47,7 @@ impl NativeBackend {
         shape: (usize, usize),
         f: impl FnOnce() -> T,
     ) -> T {
-        match &self.tracer {
+        match &self.trace {
             Some(tr) => tr.record(level, kernel, batch, shape, f),
             None => f(),
         }
@@ -353,16 +350,17 @@ mod tests {
     }
 
     #[test]
-    fn tracer_collects_launches() {
+    fn run_trace_collects_launches() {
         let mut rng = Rng::new(109);
-        let be = NativeBackend::with_tracer();
+        let tr = RunTrace::new();
+        let be = NativeBackend::with_trace(tr.clone());
         let mut blocks: Vec<Matrix> = (0..4).map(|_| Matrix::rand_spd(6, &mut rng)).collect();
         be.potrf(2, &mut blocks);
-        let tr = be.tracer.as_ref().unwrap();
-        let ev = tr.events();
-        assert_eq!(ev.len(), 1);
-        assert_eq!(ev[0].level, 2);
-        assert_eq!(ev[0].batch, 4);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].level, 2);
+        assert_eq!(spans[0].batch, 4);
+        assert_eq!(spans[0].name, "POTRF");
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! The canonical seeded problem generator (structure fuzz).
+//!
+//! One [`Case`] describes everything needed to build an H² test/bench
+//! problem: tree shape (n, leaf, rank, eta), far-field sampling, RHS
+//! count, kernel, and point distribution. It started life in
+//! `tests/common` (PR 5); it now lives in the library so the benchmark
+//! sweep, the CLI `plan-lint` fuzzer, and the integration tests all draw
+//! from one generator — `tests/common` re-exports it.
+//!
+//! `Display` is meant for assertion messages: a failing seed reproduces
+//! from test output alone.
+//!
+//! ## SPD envelope
+//!
+//! Every drawn combination must factorize (ULV = Cholesky at heart).
+//! The uniform sphere with the singular `1/r`-type kernels (laplace,
+//! yukawa) is the envelope the fixed fixtures proved out: Fibonacci
+//! spacing bounds `1/r` off-diagonals well below the `diag = 1e3`
+//! regularization. Clustered distributions concentrate points, so they
+//! pair only with the *bounded* kernels (gaussian, matérn-3/2, both
+//! ≤ 1 off-diagonal): with n ≤ 768 < diag, those matrices are strictly
+//! diagonally dominant — SPD regardless of how uneven the blobs are.
+
+use crate::construct::H2Config;
+use crate::geometry::Geometry;
+use crate::h2::H2Matrix;
+use crate::kernels::KernelFn;
+use crate::solver::{BackendSpec, H2Solver, H2SolverBuilder};
+use crate::util::Rng;
+use std::fmt;
+
+/// Point-distribution axis of a [`Case`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    /// Quasi-uniform Fibonacci sphere (the paper's §6.2 mesh).
+    Sphere,
+    /// Highly non-uniform blobs ([`Geometry::clustered`]) — the paper's
+    /// load-imbalance regime.
+    Clustered { clusters: usize },
+}
+
+impl Distribution {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Sphere => "sphere",
+            Distribution::Clustered { .. } => "clustered",
+        }
+    }
+}
+
+/// One randomized (or fixed) H² problem: everything needed to build the
+/// matrix, its right-hand sides, and a facade session.
+#[derive(Clone, Debug)]
+pub struct Case {
+    pub seed: u64,
+    pub n: usize,
+    pub leaf_size: usize,
+    pub max_rank: usize,
+    pub eta: f64,
+    pub far_samples: usize,
+    pub rhs_count: usize,
+    /// Kernel name (resolvable through [`KernelFn::by_name`]).
+    pub kernel: &'static str,
+    pub distribution: Distribution,
+}
+
+impl fmt::Display for Case {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Case {{ seed: {}, n: {}, leaf: {}, rank: {}, eta: {}, far: {}, rhs: {}, kernel: {}, dist: {} }}",
+            self.seed,
+            self.n,
+            self.leaf_size,
+            self.max_rank,
+            self.eta,
+            self.far_samples,
+            self.rhs_count,
+            self.kernel,
+            self.distribution.name()
+        )
+    }
+}
+
+impl Case {
+    /// Structure fuzz: derive a varied problem from one seed — tree depth
+    /// (via `n / leaf`), leaf size, rank budget, admissibility `eta`, RHS
+    /// count, kernel, and point distribution all vary. Parameter ranges
+    /// stay inside the SPD envelope (module docs), so every generated
+    /// case factorizes.
+    pub fn from_seed(seed: u64) -> Case {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xC0FFEE));
+        let leaf_size = [32, 48, 64][rng.below(3)];
+        // 4..=12 leaves' worth of points: depth 2–4 once the tree splits.
+        let leaves = 4 + rng.below(9);
+        let n = leaf_size * leaves;
+        let max_rank = [leaf_size / 2, (3 * leaf_size) / 4][rng.below(2)];
+        let eta = [1.0, 1.5, 2.0][rng.below(3)];
+        let rhs_count = 1 + rng.below(3);
+        // New axes (PR 7) draw *after* the structural ones, so the
+        // tree-shape corpus is a superset of the pre-existing sweep.
+        let distribution = if rng.below(3) == 0 {
+            Distribution::Clustered { clusters: 3 + rng.below(6) }
+        } else {
+            Distribution::Sphere
+        };
+        let kernel = match distribution {
+            Distribution::Sphere => ["laplace", "yukawa", "matern32", "gaussian"][rng.below(4)],
+            // Bounded kernels only: clustered points break the 1/r bound.
+            Distribution::Clustered { .. } => ["gaussian", "matern32"][rng.below(2)],
+        };
+        Case {
+            seed,
+            n,
+            leaf_size,
+            max_rank,
+            eta,
+            far_samples: 0,
+            rhs_count,
+            kernel,
+            distribution,
+        }
+    }
+
+    /// The fixed fixture `device_api.rs` and `plan_replay.rs` share
+    /// (leaf 64, rank 32, exact far field, default admissibility, sphere
+    /// + laplace — `plan_verify.rs` pins this recorder layout by index).
+    /// Override fields with struct-update syntax for variants.
+    pub fn fixed(n: usize, seed: u64) -> Case {
+        Case {
+            seed,
+            n,
+            leaf_size: 64,
+            max_rank: 32,
+            eta: H2Config::default().eta,
+            far_samples: 0,
+            rhs_count: 1,
+            kernel: "laplace",
+            distribution: Distribution::Sphere,
+        }
+    }
+
+    pub fn config(&self) -> H2Config {
+        H2Config {
+            leaf_size: self.leaf_size,
+            max_rank: self.max_rank,
+            eta: self.eta,
+            far_samples: self.far_samples,
+            ..Default::default()
+        }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        match self.distribution {
+            Distribution::Sphere => Geometry::sphere_surface(self.n, self.seed),
+            Distribution::Clustered { clusters } => {
+                Geometry::clustered(self.n, clusters, self.seed)
+            }
+        }
+    }
+
+    pub fn kernel_fn(&self) -> KernelFn {
+        KernelFn::by_name(self.kernel)
+            .unwrap_or_else(|| panic!("unknown kernel {:?} in {self}", self.kernel))
+    }
+
+    /// Construct the H² matrix for this case.
+    pub fn h2(&self) -> H2Matrix {
+        H2Matrix::construct(&self.geometry(), &self.kernel_fn(), &self.config())
+    }
+
+    /// The `k`-th deterministic right-hand side of this case.
+    pub fn rhs(&self, k: u64) -> Vec<f64> {
+        rhs(self.n, self.seed.wrapping_mul(1000).wrapping_add(k))
+    }
+
+    /// All `rhs_count` right-hand sides.
+    pub fn rhs_set(&self) -> Vec<Vec<f64>> {
+        (0..self.rhs_count as u64).map(|k| self.rhs(k)).collect()
+    }
+
+    /// Build a facade session on `spec` (residual sampling off — parity /
+    /// bench runs, not accuracy tests).
+    pub fn solver(&self, spec: BackendSpec) -> H2Solver {
+        H2SolverBuilder::new(self.geometry(), self.kernel_fn())
+            .config(self.config())
+            .backend(spec)
+            .residual_samples(0)
+            .build()
+            .unwrap_or_else(|e| panic!("failed to build solver for {self}: {e}"))
+    }
+}
+
+/// A deterministic normal right-hand side.
+pub fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Seed sweep for the randomized harnesses: `0..H2_TEST_SEEDS` (default
+/// 8). CI's stress jobs set `H2_TEST_SEEDS=16` to widen coverage.
+pub fn sweep_seeds() -> Vec<u64> {
+    let count = std::env::var("H2_TEST_SEEDS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(8);
+    (0..count as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seed_is_deterministic() {
+        for seed in 0..32 {
+            let a = Case::from_seed(seed);
+            let b = Case::from_seed(seed);
+            assert_eq!(a.to_string(), b.to_string());
+            assert_eq!(a.n % a.leaf_size, 0, "{a}");
+            assert!(a.max_rank >= a.leaf_size / 2, "{a}");
+        }
+    }
+
+    #[test]
+    fn clustered_cases_use_bounded_kernels_only() {
+        let mut saw_clustered = false;
+        let mut saw_new_kernel = false;
+        for seed in 0..64 {
+            let c = Case::from_seed(seed);
+            if matches!(c.distribution, Distribution::Clustered { .. }) {
+                saw_clustered = true;
+                assert!(
+                    matches!(c.kernel, "gaussian" | "matern32"),
+                    "{c}: clustered + unbounded kernel is outside the SPD envelope"
+                );
+            }
+            if matches!(c.kernel, "gaussian" | "matern32") {
+                saw_new_kernel = true;
+            }
+            // Every drawn kernel must resolve.
+            let _ = c.kernel_fn();
+        }
+        assert!(saw_clustered, "the sweep must cover the non-uniform regime");
+        assert!(saw_new_kernel, "the sweep must cover kernels beyond laplace/yukawa");
+    }
+
+    #[test]
+    fn fixed_pins_sphere_laplace() {
+        let c = Case::fixed(256, 3);
+        assert_eq!(c.kernel, "laplace");
+        assert_eq!(c.distribution, Distribution::Sphere);
+        assert_eq!(c.leaf_size, 64);
+        assert_eq!(c.max_rank, 32);
+    }
+
+    #[test]
+    fn geometry_matches_distribution() {
+        let mut c = Case::fixed(128, 5);
+        assert!(c.geometry().name.starts_with("sphere"));
+        c.distribution = Distribution::Clustered { clusters: 4 };
+        let g = c.geometry();
+        assert!(g.name.starts_with("clustered"), "{}", g.name);
+        assert_eq!(g.len(), 128);
+    }
+}

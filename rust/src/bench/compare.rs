@@ -1,0 +1,233 @@
+//! Trajectory comparator: diff two [`BenchReport`]s scenario by scenario.
+//!
+//! Counters derived from the plan IR and the arena — launch counts,
+//! useful/padded FLOPs, peak bytes — are bit-deterministic for a fixed
+//! structure, so *any* increase is a regression and any decrease an
+//! improvement; both are reported, only increases gate. Wall times are
+//! noisy, so they only gate when the caller passes a relative
+//! `time_threshold > 0` (e.g. `0.5` = fail if 50 % slower); the CI smoke
+//! job runs with 0 (report-only), keeping the gate machine-independent.
+
+use super::{BenchReport, ScenarioReport};
+use crate::metrics::run_trace::RunReport;
+
+/// How a metric participates in the regression gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricClass {
+    /// Deterministic counter: `after > before` regresses unconditionally.
+    Counter,
+    /// Measured wall time: regresses only past the relative threshold.
+    Time,
+}
+
+/// One metric's before/after on one scenario.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub scenario: String,
+    pub metric: &'static str,
+    pub class: MetricClass,
+    pub before: f64,
+    pub after: f64,
+    /// Whether this delta trips the gate (per the class rules above).
+    pub regressed: bool,
+}
+
+impl Delta {
+    /// Relative change `(after - before) / before` (0 when before is 0).
+    pub fn relative(&self) -> f64 {
+        if self.before == 0.0 {
+            return 0.0;
+        }
+        (self.after - self.before) / self.before
+    }
+}
+
+/// The full diff of two trajectory files.
+#[derive(Clone, Debug, Default)]
+pub struct Comparison {
+    /// Every changed metric on every matched scenario.
+    pub deltas: Vec<Delta>,
+    /// Scenario names present only in the newer report.
+    pub added: Vec<String>,
+    /// Scenario names present only in the older report.
+    pub dropped: Vec<String>,
+}
+
+/// The gated counters, in report order.
+fn counters(r: &RunReport) -> [(&'static str, f64); 6] {
+    [
+        ("factor_launches", r.factor_launches as f64),
+        ("factor_flops", r.factor_flops as f64),
+        ("factor_padded_flops", r.factor_padded_flops as f64),
+        ("arena_bytes", r.arena_bytes as f64),
+        ("arena_peak_bytes", r.arena_peak_bytes as f64),
+        ("predicted_peak_bytes", r.predicted_peak_bytes as f64),
+    ]
+}
+
+fn times(r: &RunReport) -> [(&'static str, f64); 2] {
+    [("factor_time", r.factor_time), ("solve_time", r.solve_time)]
+}
+
+fn diff_scenario(
+    prev: &ScenarioReport,
+    cur: &ScenarioReport,
+    time_threshold: f64,
+    out: &mut Vec<Delta>,
+) {
+    for ((name, before), (_, after)) in counters(&prev.run).into_iter().zip(counters(&cur.run)) {
+        if before != after {
+            out.push(Delta {
+                scenario: cur.name.clone(),
+                metric: name,
+                class: MetricClass::Counter,
+                before,
+                after,
+                regressed: after > before,
+            });
+        }
+    }
+    for ((name, before), (_, after)) in times(&prev.run).into_iter().zip(times(&cur.run)) {
+        if before != after {
+            let regressed = time_threshold > 0.0 && after > before * (1.0 + time_threshold);
+            out.push(Delta {
+                scenario: cur.name.clone(),
+                metric: name,
+                class: MetricClass::Time,
+                before,
+                after,
+                regressed,
+            });
+        }
+    }
+}
+
+/// Diff `cur` against `prev`, joining scenarios by name. Unmatched
+/// scenarios are listed as added/dropped and never gate — growing the
+/// matrix must not fail the trajectory check.
+pub fn compare(prev: &BenchReport, cur: &BenchReport, time_threshold: f64) -> Comparison {
+    let mut cmp = Comparison::default();
+    for c in &cur.scenarios {
+        match prev.scenarios.iter().find(|p| p.name == c.name) {
+            Some(p) => diff_scenario(p, c, time_threshold, &mut cmp.deltas),
+            None => cmp.added.push(c.name.clone()),
+        }
+    }
+    for p in &prev.scenarios {
+        if !cur.scenarios.iter().any(|c| c.name == p.name) {
+            cmp.dropped.push(p.name.clone());
+        }
+    }
+    cmp
+}
+
+impl Comparison {
+    /// Whether any delta trips the gate (the CLI's non-zero exit).
+    pub fn has_regressions(&self) -> bool {
+        self.deltas.iter().any(|d| d.regressed)
+    }
+
+    /// Deltas that trip the gate.
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// Human-readable diff (the `bench --compare` report body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.deltas.is_empty() && self.added.is_empty() && self.dropped.is_empty() {
+            out.push_str("no differences\n");
+            return out;
+        }
+        for d in &self.deltas {
+            let mark = if d.regressed { "REGRESSION" } else { "changed" };
+            out.push_str(&format!(
+                "{mark:<10} {} :: {} {} -> {} ({:+.1}%)\n",
+                d.scenario,
+                d.metric,
+                d.before,
+                d.after,
+                1e2 * d.relative()
+            ));
+        }
+        for name in &self.added {
+            out.push_str(&format!("added      {name}\n"));
+        }
+        for name in &self.dropped {
+            out.push_str(&format!("dropped    {name}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{sample_bench, sample_run};
+    use super::*;
+
+    #[test]
+    fn identical_reports_have_no_deltas() {
+        let r = sample_bench();
+        let cmp = compare(&r, &r, 0.0);
+        assert!(cmp.deltas.is_empty());
+        assert!(!cmp.has_regressions());
+        assert_eq!(cmp.render(), "no differences\n");
+    }
+
+    #[test]
+    fn counter_increase_regresses_decrease_reports_only() {
+        let prev = sample_bench();
+        let mut cur = prev.clone();
+        cur.scenarios[0].run.factor_flops += 100; // worse: more work
+        cur.scenarios[1].run.factor_launches -= 1; // better: fewer launches
+        let cmp = compare(&prev, &cur, 0.0);
+        assert_eq!(cmp.deltas.len(), 2);
+        let worse = cmp.deltas.iter().find(|d| d.metric == "factor_flops").unwrap();
+        assert!(worse.regressed);
+        assert_eq!(worse.scenario, "native/sphere-laplace/rhs1");
+        assert!((worse.after - worse.before - 100.0).abs() < 1e-9);
+        let better = cmp.deltas.iter().find(|d| d.metric == "factor_launches").unwrap();
+        assert!(!better.regressed);
+        assert!(cmp.has_regressions());
+        assert_eq!(cmp.regressions().len(), 1);
+        assert!(cmp.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn time_gates_only_past_threshold() {
+        let prev = sample_bench();
+        let mut cur = prev.clone();
+        cur.scenarios[0].run.factor_time = 0.6; // +20 % over 0.5
+        // Report-only mode: time changes never gate.
+        assert!(!compare(&prev, &cur, 0.0).has_regressions());
+        // 50 % threshold: +20 % passes.
+        assert!(!compare(&prev, &cur, 0.5).has_regressions());
+        // 10 % threshold: +20 % fails.
+        let cmp = compare(&prev, &cur, 0.1);
+        assert!(cmp.has_regressions());
+        assert_eq!(cmp.regressions()[0].metric, "factor_time");
+        assert_eq!(cmp.regressions()[0].class, MetricClass::Time);
+        let rel = cmp.deltas[0].relative();
+        assert!((rel - 0.2).abs() < 1e-9, "{rel}");
+    }
+
+    #[test]
+    fn added_and_dropped_scenarios_never_gate() {
+        let prev = sample_bench();
+        let mut cur = prev.clone();
+        cur.scenarios.remove(1);
+        cur.scenarios.push(ScenarioReport {
+            name: "native/fuzz-9".to_string(),
+            kernel: "gaussian".to_string(),
+            distribution: "clustered".to_string(),
+            run: sample_run(5_000, 0.1),
+        });
+        let cmp = compare(&prev, &cur, 0.0);
+        assert_eq!(cmp.added, vec!["native/fuzz-9".to_string()]);
+        assert_eq!(cmp.dropped, vec!["serial/sphere-laplace/rhs1".to_string()]);
+        assert!(!cmp.has_regressions());
+        let text = cmp.render();
+        assert!(text.contains("added      native/fuzz-9"), "{text}");
+        assert!(text.contains("dropped    serial/sphere-laplace/rhs1"), "{text}");
+    }
+}

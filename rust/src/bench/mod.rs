@@ -1,0 +1,389 @@
+//! Benchmark trajectory harness: a deterministic scenario matrix, a
+//! runner that condenses each scenario into a [`RunReport`], and the
+//! schema-versioned [`BenchReport`] that `BENCH_*.json` files persist.
+//!
+//! The matrix crosses the axes the paper's evaluation varies — execution
+//! backend (`native` / `async:native` / `serial`), point distribution
+//! (uniform sphere vs clustered blobs), kernel (singular and bounded),
+//! and RHS width (single vs wide) — plus a structure-fuzz tail drawn
+//! from [`cases::Case::from_seed`], the same generator the integration
+//! tests sweep. Scenario *names* are stable identifiers: the comparator
+//! ([`compare`]) matches previous trajectory files by name and is strict
+//! on plan-derived counters (launches, FLOPs, peak bytes — deterministic
+//! for a fixed structure) while treating wall times as noise unless a
+//! threshold is given. The CLI `bench` subcommand and the CI
+//! `bench-smoke` job are thin wrappers over this module.
+
+pub mod cases;
+pub mod compare;
+
+use crate::metrics::run_trace::RunReport;
+use crate::solver::{BackendSpec, H2Error};
+use crate::util::json::{Json, JsonError};
+use self::cases::{Case, Distribution};
+
+/// Current `BENCH_*.json` schema version.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Identifier this PR's trajectory file carries (`bench_id` field).
+pub const BENCH_ID: &str = "BENCH_7";
+
+/// Default output path for `h2ulv bench`, at the repo root.
+pub const DEFAULT_OUTPUT: &str = "BENCH_7.json";
+
+/// Seed shared by all base-matrix scenarios, so their geometries (and
+/// therefore plans) are fixed and counter comparisons are exact.
+const BASE_SEED: u64 = 7;
+
+/// One named benchmark configuration: a backend spec name plus a
+/// fully-specified problem [`Case`].
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Stable identifier (`backend/distribution-kernel/rhsW` or
+    /// `backend/fuzz-S`) — the comparator's join key.
+    pub name: String,
+    /// Backend spec name, resolvable through [`BackendSpec::by_name`].
+    pub backend: &'static str,
+    pub case: Case,
+}
+
+/// Backends every sweep covers: the batched thread-pool backend, its
+/// multi-stream overlapping wrapper, and the scalar reference.
+pub const BACKENDS: [&str; 3] = ["native", "async:native", "serial"];
+
+/// The deterministic scenario matrix for problem size `n`:
+/// 3 backends × 3 (distribution, kernel) pairs × 2 RHS widths, plus one
+/// structure-fuzz scenario per entry of `fuzz_seeds` on the native
+/// backend. Enumeration order (and every name) is a pure function of the
+/// arguments — pinned by a test, relied on by trajectory diffs.
+pub fn scenario_matrix(n: usize, fuzz_seeds: &[u64]) -> Vec<Scenario> {
+    let shapes: [(Distribution, &'static str); 3] = [
+        (Distribution::Sphere, "laplace"),
+        (Distribution::Sphere, "matern32"),
+        (Distribution::Clustered { clusters: 6 }, "gaussian"),
+    ];
+    let mut out = Vec::new();
+    for backend in BACKENDS {
+        for &(distribution, kernel) in &shapes {
+            for rhs_count in [1usize, 8] {
+                let case = Case {
+                    kernel,
+                    distribution,
+                    rhs_count,
+                    ..Case::fixed(n, BASE_SEED)
+                };
+                out.push(Scenario {
+                    name: format!("{backend}/{}-{kernel}/rhs{rhs_count}", distribution.name()),
+                    backend,
+                    case,
+                });
+            }
+        }
+    }
+    for &seed in fuzz_seeds {
+        out.push(Scenario {
+            name: format!("native/fuzz-{seed}"),
+            backend: "native",
+            case: Case::from_seed(seed),
+        });
+    }
+    out
+}
+
+/// Keep only scenarios whose name contains `filter` (empty = all).
+pub fn filter_scenarios(scenarios: Vec<Scenario>, filter: &str) -> Vec<Scenario> {
+    if filter.is_empty() {
+        return scenarios;
+    }
+    scenarios.into_iter().filter(|s| s.name.contains(filter)).collect()
+}
+
+/// One scenario's result: the identifying axes plus the condensed
+/// [`RunReport`] of a full build → factorize → solve-all-RHS run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub kernel: String,
+    pub distribution: String,
+    pub run: RunReport,
+}
+
+/// Build, factorize, and solve one scenario end to end, returning its
+/// report. All `rhs_count` right-hand sides are solved (fanning out over
+/// the session's workspace pool), so `run.solve_time` covers the whole
+/// width and `run.rhs` equals it.
+pub fn run_scenario(sc: &Scenario) -> Result<ScenarioReport, H2Error> {
+    let spec = BackendSpec::by_name(sc.backend).ok_or_else(|| {
+        H2Error::InvalidConfig(format!("unknown bench backend {:?}", sc.backend))
+    })?;
+    let solver = sc.case.solver(spec);
+    solver.solve_many(&sc.case.rhs_set())?;
+    Ok(ScenarioReport {
+        name: sc.name.clone(),
+        kernel: sc.case.kernel.to_string(),
+        distribution: sc.case.distribution.name().to_string(),
+        run: solver.run_report(),
+    })
+}
+
+/// A full sweep: what one `BENCH_*.json` trajectory file holds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: u64,
+    pub bench_id: String,
+    /// Problem size the base matrix ran at.
+    pub n: usize,
+    pub scenarios: Vec<ScenarioReport>,
+}
+
+impl BenchReport {
+    /// Wrap already-run scenario reports under the current schema.
+    pub fn new(n: usize, scenarios: Vec<ScenarioReport>) -> BenchReport {
+        BenchReport {
+            schema_version: BENCH_SCHEMA_VERSION,
+            bench_id: BENCH_ID.to_string(),
+            n,
+            scenarios,
+        }
+    }
+
+    /// Run every scenario in order (failures abort the sweep — a bench
+    /// case that cannot build is a bug, not a data point).
+    pub fn collect(n: usize, scenarios: &[Scenario]) -> Result<BenchReport, H2Error> {
+        Ok(Self::new(n, scenarios.iter().map(run_scenario).collect::<Result<Vec<_>, _>>()?))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema_version".into(), Json::Num(self.schema_version as f64)),
+            ("bench_id".into(), Json::Str(self.bench_id.clone())),
+            ("n".into(), Json::Num(self.n as f64)),
+            (
+                "scenarios".into(),
+                Json::Arr(
+                    self.scenarios
+                        .iter()
+                        .map(|s| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(s.name.clone())),
+                                ("kernel".into(), Json::Str(s.kernel.clone())),
+                                ("distribution".into(), Json::Str(s.distribution.clone())),
+                                ("run".into(), s.run.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchReport, JsonError> {
+        let miss = |msg: &'static str| JsonError { pos: 0, msg };
+        let scenarios = v
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .ok_or(miss("scenarios"))?
+            .iter()
+            .map(|s| {
+                Ok(ScenarioReport {
+                    name: s
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or(miss("scenario name"))?
+                        .to_string(),
+                    kernel: s
+                        .get("kernel")
+                        .and_then(Json::as_str)
+                        .ok_or(miss("scenario kernel"))?
+                        .to_string(),
+                    distribution: s
+                        .get("distribution")
+                        .and_then(Json::as_str)
+                        .ok_or(miss("scenario distribution"))?
+                        .to_string(),
+                    run: RunReport::from_json(s.get("run").ok_or(miss("scenario run"))?)?,
+                })
+            })
+            .collect::<Result<Vec<_>, JsonError>>()?;
+        Ok(BenchReport {
+            schema_version: v
+                .get("schema_version")
+                .and_then(Json::as_u64)
+                .ok_or(miss("schema_version"))?,
+            bench_id: v
+                .get("bench_id")
+                .and_then(Json::as_str)
+                .ok_or(miss("bench_id"))?
+                .to_string(),
+            n: v.get("n").and_then(Json::as_usize).ok_or(miss("n"))?,
+            scenarios,
+        })
+    }
+
+    pub fn from_json_str(src: &str) -> Result<BenchReport, JsonError> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    /// One summary line per scenario (the CLI `bench` table body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} (schema v{}, n {}): {} scenario(s)\n",
+            self.bench_id,
+            self.schema_version,
+            self.n,
+            self.scenarios.len()
+        ));
+        out.push_str(
+            "scenario                            factor[ms] solve[ms]  launches  \
+             waste%  overlap  peak[KB]\n",
+        );
+        for s in &self.scenarios {
+            let r = &s.run;
+            out.push_str(&format!(
+                "{:<35} {:>9.3} {:>9.3} {:>9} {:>7.1} {:>8.3} {:>9.1}\n",
+                s.name,
+                1e3 * r.factor_time,
+                1e3 * r.solve_time,
+                r.factor_launches,
+                1e2 * r.factor_padding_waste(),
+                r.overlap_ratio,
+                r.arena_peak_bytes as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::run_trace::{LevelReport, RUN_REPORT_SCHEMA_VERSION};
+
+    pub(super) fn sample_run(factor_flops: u64, factor_time: f64) -> RunReport {
+        RunReport {
+            schema_version: RUN_REPORT_SCHEMA_VERSION,
+            backend: "native".to_string(),
+            n: 256,
+            depth: 2,
+            rhs: 1,
+            construct_time: 0.01,
+            factor_time,
+            solve_time: 0.002,
+            factor_launches: 10,
+            factor_flops,
+            factor_padded_flops: factor_flops + factor_flops / 4,
+            factor_levels: vec![LevelReport {
+                level: 2,
+                launches: 10,
+                batch_items: 40,
+                flops: factor_flops,
+                padded_flops: factor_flops + factor_flops / 4,
+            }],
+            solve_levels: vec![],
+            overlap_ratio: 0.0,
+            overlapped_transfer_pairs: 0,
+            solve_trace_events: 0,
+            arena_bytes: 1024,
+            arena_peak_bytes: 2048,
+            predicted_peak_bytes: 2048,
+        }
+    }
+
+    pub(super) fn sample_bench() -> BenchReport {
+        BenchReport {
+            schema_version: BENCH_SCHEMA_VERSION,
+            bench_id: BENCH_ID.to_string(),
+            n: 256,
+            scenarios: vec![
+                ScenarioReport {
+                    name: "native/sphere-laplace/rhs1".to_string(),
+                    kernel: "laplace".to_string(),
+                    distribution: "sphere".to_string(),
+                    run: sample_run(1_000_000, 0.5),
+                },
+                ScenarioReport {
+                    name: "serial/sphere-laplace/rhs1".to_string(),
+                    kernel: "laplace".to_string(),
+                    distribution: "sphere".to_string(),
+                    run: sample_run(1_000_000, 2.0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn matrix_enumeration_is_deterministic() {
+        let a = scenario_matrix(256, &[0, 1]);
+        let b = scenario_matrix(256, &[0, 1]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.case.to_string(), y.case.to_string());
+        }
+    }
+
+    #[test]
+    fn matrix_covers_required_axes() {
+        let m = scenario_matrix(256, &[]);
+        assert_eq!(m.len(), 18);
+        let backends: std::collections::HashSet<_> = m.iter().map(|s| s.backend).collect();
+        assert_eq!(backends.len(), 3, "3 backends required");
+        let dists: std::collections::HashSet<_> =
+            m.iter().map(|s| s.case.distribution.name()).collect();
+        assert!(dists.len() >= 2, "2 distributions required");
+        let widths: std::collections::HashSet<_> = m.iter().map(|s| s.case.rhs_count).collect();
+        assert!(widths.len() >= 2, "2 RHS widths required");
+        let kernels: std::collections::HashSet<_> = m.iter().map(|s| s.case.kernel).collect();
+        assert!(kernels.len() >= 3, "kernels beyond laplace/yukawa required");
+        // Names are unique — the comparator joins on them.
+        let names: std::collections::HashSet<_> = m.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), m.len());
+    }
+
+    #[test]
+    fn fuzz_tail_appends_named_scenarios() {
+        let m = scenario_matrix(256, &[3, 5]);
+        assert_eq!(m.len(), 20);
+        assert_eq!(m[18].name, "native/fuzz-3");
+        assert_eq!(m[19].name, "native/fuzz-5");
+    }
+
+    #[test]
+    fn filter_matches_substrings() {
+        let m = scenario_matrix(256, &[]);
+        let serial = filter_scenarios(m.clone(), "serial/");
+        assert_eq!(serial.len(), 6);
+        assert!(serial.iter().all(|s| s.backend == "serial"));
+        assert_eq!(filter_scenarios(m.clone(), "").len(), m.len());
+    }
+
+    #[test]
+    fn bench_report_round_trips_byte_stable() {
+        let r = sample_bench();
+        let once = r.to_json_string();
+        let parsed = BenchReport::from_json_str(&once).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parsed.to_json_string(), once);
+    }
+
+    #[test]
+    fn bench_report_rejects_missing_fields() {
+        let mut j = sample_bench().to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "bench_id");
+        }
+        assert!(BenchReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn render_lists_every_scenario() {
+        let text = sample_bench().render();
+        assert!(text.contains("native/sphere-laplace/rhs1"), "{text}");
+        assert!(text.contains("serial/sphere-laplace/rhs1"), "{text}");
+    }
+}

@@ -8,6 +8,8 @@
 //! h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L] [--eta E]
 //!                 [--lint] [--exec BACKEND]
 //! h2ulv plan-lint [--seeds S] [--json] | [--n N ...problem flags] [--json]
+//! h2ulv bench     [--n N] [--fuzz S] [--scenarios FILTER] [--json]
+//!                 [--out PATH|-] [--compare FILE] [--threshold X]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
 //! h2ulv figures   [--full] [--out DIR]
 //! h2ulv info
@@ -94,6 +96,18 @@ USAGE:
                  Factorization and both substitution programs are checked;
                  exit 1 on any violation. --json emits machine-readable
                  reports)
+  h2ulv bench   [--n N] [--fuzz S] [--scenarios FILTER] [--json]
+                [--out PATH|-] [--compare FILE] [--threshold X]
+                (run the benchmark trajectory sweep: 3 backends × sphere/
+                 clustered distributions × single/wide RHS, plus S
+                 structure-fuzz scenarios (default from H2_TEST_SEEDS,
+                 else 8). Writes the schema-versioned trajectory JSON to
+                 PATH (default BENCH_7.json; '-' skips the file).
+                 --scenarios keeps only names containing FILTER.
+                 --compare diffs against a previous trajectory file:
+                 plan-derived counters (launches, FLOPs, peak bytes) gate
+                 strictly, wall times only beyond relative --threshold
+                 (default 0 = report-only); exit 1 on any regression)
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
   h2ulv info
@@ -111,6 +125,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "solve" => cmd_solve(&args),
         "plan-dump" => cmd_plan_dump(&args),
         "plan-lint" => cmd_plan_lint(&args),
+        "bench" => cmd_bench(&args),
         "figure" => cmd_figure(&args),
         "figures" => cmd_figures(&args),
         "info" => cmd_info(),
@@ -373,25 +388,12 @@ fn cmd_plan_dump(args: &Args) -> i32 {
     0
 }
 
-/// One structure-fuzz problem for `plan-lint`, derived from a seed exactly
-/// like the test suite's `Case::from_seed` (tests/common/mod.rs) so a CLI
-/// seed reproduces the same structure a failing test names.
-struct FuzzCase {
-    seed: u64,
-    n: usize,
-    leaf_size: usize,
-    max_rank: usize,
-    eta: f64,
-}
-
-fn fuzz_case(seed: u64) -> FuzzCase {
-    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xC0FFEE));
-    let leaf_size = [32, 48, 64][rng.below(3)];
-    let leaves = 4 + rng.below(9);
-    let n = leaf_size * leaves;
-    let max_rank = [leaf_size / 2, (3 * leaf_size) / 4][rng.below(2)];
-    let eta = [1.0, 1.5, 2.0][rng.below(3)];
-    FuzzCase { seed, n, leaf_size, max_rank, eta }
+/// One structure-fuzz problem for `plan-lint` — the library's canonical
+/// generator ([`crate::bench::cases::Case::from_seed`]), so a CLI seed
+/// reproduces the exact structure (and distribution and kernel) a failing
+/// test or bench scenario names.
+fn fuzz_case(seed: u64) -> crate::bench::cases::Case {
+    crate::bench::cases::Case::from_seed(seed)
 }
 
 /// Record and statically verify the plan for one problem. The lazy naive
@@ -531,31 +533,34 @@ fn cmd_plan_lint(args: &Args) -> i32 {
     let mut failures = 0usize;
     for seed in 0..count {
         let case = fuzz_case(seed);
-        let g = Geometry::sphere_surface(case.n, case.seed);
-        let cfg = H2Config {
-            leaf_size: case.leaf_size,
-            max_rank: case.max_rank,
-            eta: case.eta,
-            far_samples: 0,
-            ..Default::default()
-        };
+        let g = case.geometry();
+        let cfg = case.config();
         let head = format!(
-            "\"seed\":{},\"n\":{},\"leaf\":{},\"rank\":{},\"eta\":{}",
-            case.seed, case.n, case.leaf_size, case.max_rank, case.eta
+            "\"seed\":{},\"n\":{},\"leaf\":{},\"rank\":{},\"eta\":{},\"kernel\":\"{}\",\
+             \"distribution\":\"{}\"",
+            case.seed,
+            case.n,
+            case.leaf_size,
+            case.max_rank,
+            case.eta,
+            case.kernel,
+            case.distribution.name()
         );
-        match lint_problem(&g, &KernelFn::laplace(), &cfg) {
+        match lint_problem(&g, &case.kernel_fn(), &cfg) {
             Ok(Ok(report)) => {
                 if json {
                     rows.push(format!("{{{head},\"ok\":true,\"report\":{}}}", report_json(&report)));
                 } else {
                     println!(
-                        "seed {:>2}: N={:<5} leaf={} rank={:<2} eta={} — ok: peak {} B, \
+                        "seed {:>2}: N={:<5} leaf={} rank={:<2} eta={} {}/{} — ok: peak {} B, \
                          {} ops / {} edges, crit path {}, parallelism {:.1}",
                         case.seed,
                         case.n,
                         case.leaf_size,
                         case.max_rank,
                         case.eta,
+                        case.distribution.name(),
+                        case.kernel,
                         report.predicted_peak_bytes,
                         report.hazard.ops.len(),
                         report.hazard.edges,
@@ -605,6 +610,88 @@ fn cmd_plan_lint(args: &Args) -> i32 {
     } else {
         0
     }
+}
+
+/// Run the benchmark trajectory sweep and (optionally) diff it against a
+/// previous `BENCH_*.json`. See [`crate::bench`] for the scenario matrix
+/// and the comparator's strict-counters / loose-times policy.
+fn cmd_bench(args: &Args) -> i32 {
+    use crate::bench::{self, BenchReport};
+    let n = args.usize_or("n", 768);
+    let filter = args.get("scenarios").unwrap_or("");
+    let threshold = args.f64_or("threshold", 0.0);
+    let fuzz_seeds: Vec<u64> = match args.get("fuzz") {
+        Some(s) => match s.parse::<u64>() {
+            Ok(count) => (0..count).collect(),
+            Err(_) => {
+                eprintln!("--fuzz expects a seed count, got {s:?}\n{USAGE}");
+                return 2;
+            }
+        },
+        None => bench::cases::sweep_seeds(),
+    };
+    let scenarios = bench::filter_scenarios(bench::scenario_matrix(n, &fuzz_seeds), filter);
+    if scenarios.is_empty() {
+        eprintln!("h2ulv bench: no scenarios match filter {filter:?}");
+        return 2;
+    }
+    let json = args.get("json").is_some();
+    let mut results = Vec::new();
+    for sc in &scenarios {
+        if !json {
+            println!("running {} ({}) ...", sc.name, sc.case);
+        }
+        match bench::run_scenario(sc) {
+            Ok(r) => results.push(r),
+            Err(e) => {
+                eprintln!("h2ulv bench: {}: {e}", sc.name);
+                return 1;
+            }
+        }
+    }
+    let report = BenchReport::new(n, results);
+    let text = report.to_json_string();
+    if json {
+        println!("{text}");
+    } else {
+        print!("{}", report.render());
+    }
+    let out = args.get("out").unwrap_or(bench::DEFAULT_OUTPUT);
+    if out != "-" {
+        if let Err(e) = std::fs::write(out, format!("{text}\n")) {
+            eprintln!("h2ulv bench: cannot write {out}: {e}");
+            return 1;
+        }
+        if !json {
+            println!("wrote {out}");
+        }
+    }
+    if let Some(path) = args.get("compare") {
+        let prev = match std::fs::read_to_string(path) {
+            Ok(src) => match BenchReport::from_json_str(&src) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("h2ulv bench: {path} is not a trajectory file: {e}");
+                    return 1;
+                }
+            },
+            Err(e) => {
+                eprintln!("h2ulv bench: cannot read {path}: {e}");
+                return 1;
+            }
+        };
+        let cmp = bench::compare::compare(&prev, &report, threshold);
+        print!("{}", cmp.render());
+        if cmp.has_regressions() {
+            eprintln!(
+                "h2ulv bench: {} regression(s) vs {path} (threshold {threshold})",
+                cmp.regressions().len()
+            );
+            return 1;
+        }
+        println!("no regressions vs {path}");
+    }
+    0
 }
 
 fn cmd_figure(args: &Args) -> i32 {

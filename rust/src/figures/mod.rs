@@ -52,21 +52,20 @@ pub fn fig12(scale: Scale) -> String {
     let g = Geometry::sphere_surface(n, 12);
     let h2 = H2Matrix::construct(&g, &KernelFn::laplace(), &timing_cfg());
     let mut out = format!("# Figure 12 analog: batched launch trace, N={n}\n");
+    let tr = crate::metrics::RunTrace::new();
     // Prefer the PJRT (GPU-analog) backend; fall back to native tracing.
     if let Some(be) = pjrt_backend() {
-        let be = be.with_tracer();
+        let be = be.with_trace(tr.clone());
         let _ = factorize(&h2, &be);
-        let tr = be.tracer.as_ref().unwrap();
         out.push_str(&tr.render());
         out.push_str(&format!(
             "\nmean batch size (occupancy proxy): {:.1}\nlaunches: {}\n",
             tr.mean_batch(),
-            tr.events().len()
+            tr.spans().len()
         ));
     } else {
-        let be = NativeBackend::with_tracer();
+        let be = NativeBackend::with_trace(tr.clone());
         let _ = factorize(&h2, &be);
-        let tr = be.tracer.as_ref().unwrap();
         out.push_str(&tr.render());
         out.push_str(&format!("\nmean batch size: {:.1}\n", tr.mean_batch()));
     }

@@ -90,6 +90,61 @@ impl Geometry {
         Geometry { points, name: format!("{}x{}", self.name, copies) }
     }
 
+    /// Highly non-uniform cloud: `clusters` tight Fibonacci-sphere blobs
+    /// of *uneven* sizes, centered on well-separated cells of a cubic
+    /// lattice. Load imbalance from "unstructured distribution of points"
+    /// is the paper's stated scheduling challenge (§1): leaf boxes inside
+    /// a blob are dense and near-dominated while inter-blob interactions
+    /// are far-field, so near/far list sizes — and batched-kernel item
+    /// shapes — vary much more than on a uniform sphere. Blob radius is
+    /// small against the lattice spacing, keeping intra-blob spacing
+    /// bounded below (no near-duplicate points).
+    pub fn clustered(n: usize, clusters: usize, seed: u64) -> Geometry {
+        assert!(clusters >= 1);
+        let mut rng = Rng::new(seed ^ 0xC1A5_7E2D);
+        let side = (clusters as f64).cbrt().ceil() as usize;
+        let spacing = 4.0;
+        let radius = 0.5;
+        // Uneven split of n across clusters: weights 1..=4 per blob.
+        let weights: Vec<usize> = (0..clusters).map(|_| 1 + rng.below(4)).collect();
+        let total: usize = weights.iter().sum();
+        let mut sizes: Vec<usize> = weights.iter().map(|w| n * w / total).collect();
+        let mut assigned: usize = sizes.iter().sum();
+        let mut i = 0;
+        while assigned < n {
+            sizes[i % clusters] += 1;
+            assigned += 1;
+            i += 1;
+        }
+        let mut points = Vec::with_capacity(n);
+        let mut placed = 0;
+        'outer: for ix in 0..side {
+            for iy in 0..side {
+                for iz in 0..side {
+                    if placed == clusters {
+                        break 'outer;
+                    }
+                    let jitter = [rng.range(-0.5, 0.5), rng.range(-0.5, 0.5), rng.range(-0.5, 0.5)];
+                    let center = [
+                        ix as f64 * spacing + jitter[0],
+                        iy as f64 * spacing + jitter[1],
+                        iz as f64 * spacing + jitter[2],
+                    ];
+                    let blob = Geometry::sphere_surface(sizes[placed], rng.next_u64());
+                    for p in &blob.points {
+                        points.push([
+                            center[0] + radius * p[0],
+                            center[1] + radius * p[1],
+                            center[2] + radius * p[2],
+                        ]);
+                    }
+                    placed += 1;
+                }
+            }
+        }
+        Geometry { points, name: format!("clustered{n}x{clusters}") }
+    }
+
     /// Keep only the first `n` points ("By reading the portions of the
     /// geometry of the molecules, we create variations in the problem
     /// sizes", paper §6.4).
@@ -174,6 +229,50 @@ mod tests {
         let c0 = centroid(&dup.points[0..50]);
         let c1 = centroid(&dup.points[50..100]);
         assert!(dist(&c0, &c1) >= 3.9);
+    }
+
+    #[test]
+    fn clustered_counts_and_separation() {
+        let n = 300;
+        let g = Geometry::clustered(n, 4, 9);
+        assert_eq!(g.len(), n);
+        // Every point sits inside some blob (radius 0.5 + jitter 0.5
+        // around a lattice cell), so nearest-neighbor distances split into
+        // a tight intra-blob scale far below the 4.0 lattice spacing.
+        let mut max_nn = 0.0f64;
+        for (i, p) in g.points.iter().enumerate() {
+            let nn = g
+                .points
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, q)| dist(p, q))
+                .fold(f64::INFINITY, f64::min);
+            assert!(nn > 1e-6, "near-duplicate points break kernel matrices");
+            max_nn = max_nn.max(nn);
+        }
+        assert!(max_nn < 2.0, "blobs must be internally dense, got nn {max_nn}");
+    }
+
+    #[test]
+    fn clustered_sizes_are_uneven() {
+        // The generator's point of existence: per-blob populations differ,
+        // inducing the load imbalance the paper calls out. Blob membership
+        // recovered by rounding to the nearest lattice cell.
+        let g = Geometry::clustered(400, 8, 11);
+        let mut counts = std::collections::HashMap::new();
+        for p in &g.points {
+            let cell = (
+                (p[0] / 4.0).round() as i64,
+                (p[1] / 4.0).round() as i64,
+                (p[2] / 4.0).round() as i64,
+            );
+            *counts.entry(cell).or_insert(0usize) += 1;
+        }
+        let min = counts.values().min().copied().unwrap();
+        let max = counts.values().max().copied().unwrap();
+        assert!(counts.len() >= 2, "expected multiple blobs");
+        assert!(max > min, "cluster sizes must be uneven: min {min} == max {max}");
     }
 
     #[test]

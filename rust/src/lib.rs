@@ -23,6 +23,8 @@
 //! * baselines (dense Cholesky, BLR tile-Cholesky ≈ LORAPO) ([`baselines`]),
 //! * FLOP/time/communication metrics and the figure-regeneration harness
 //!   ([`metrics`], [`figures`]),
+//! * structured end-to-end run tracing and the benchmark trajectory
+//!   harness behind `BENCH_*.json` ([`metrics::run_trace`], [`bench`]),
 //! * the end-to-end session facade — builder-configured, `Result`-based,
 //!   backend-pluggable ([`solver`]). **Start here**: the layered modules
 //!   stay public for benchmarks, but [`solver::H2SolverBuilder`] /
@@ -32,6 +34,7 @@
 
 pub mod baselines;
 pub mod batch;
+pub mod bench;
 pub mod construct;
 pub mod dist;
 pub mod figures;

@@ -1,13 +1,13 @@
-//! FLOP accounting, wall-clock timing, and the batched-execution trace.
+//! FLOP accounting, wall-clock timing, and structured run tracing.
 //!
 //! These power the paper's Figures 12 (profiler view), 14 (TFLOP/s),
-//! 15 (FLOP count), 17 (FLOP split), and 23 (compute/comm breakdown).
+//! 15 (FLOP count), 17 (FLOP split), and 23 (compute/comm breakdown),
+//! plus the `BENCH_*.json` benchmark trajectory files.
 
 pub mod flops;
 pub mod overlap;
+pub mod run_trace;
 pub mod timer;
-pub mod trace;
 
 pub use overlap::{OverlapEvent, OverlapKind, OverlapTrace};
-pub use timer::Stopwatch;
-pub use trace::{TraceEvent, Tracer};
+pub use run_trace::{RunReport, RunTrace, Span};

@@ -1,0 +1,555 @@
+//! Span-based structured run tracing + the serializable [`RunReport`].
+//!
+//! One [`RunTrace`] follows a solver session end to end: the facade
+//! records the top-level phases (`construct` → `factorize` →
+//! `substitution`), [`crate::plan::Executor`] records one span per
+//! replayed level, and a backend built `with_trace` (native / PJRT)
+//! records every batched kernel launch — the repo's analog of the paper's
+//! Nsight profiler view (Figure 12), replacing the old Mutex-global
+//! `Tracer`. Cloning is cheap (`Arc`-shared, like
+//! [`crate::metrics::flops::FlopScope`]), so one trace threads through
+//! backends, executors, and worker threads without lifetime plumbing.
+//!
+//! [`RunReport`] condenses one run into the schema the benchmark
+//! trajectory files (`BENCH_*.json`) persist: per-phase wall times,
+//! per-level launch counts and padded-vs-useful FLOPs (from
+//! [`crate::plan::LaunchMeta`] via `ScheduleStats`), overlap metrics from
+//! [`crate::metrics::overlap::OverlapTrace`], and arena byte counters.
+//! It serializes through [`crate::util::json::Json`]; parse →
+//! re-serialize is byte-stable (pinned by tests).
+
+use crate::metrics::overlap::OverlapTrace;
+use crate::util::json::{Json, JsonError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Sentinel level for spans recorded outside any per-level loop.
+pub const NO_LEVEL: usize = usize::MAX;
+
+/// One traced interval: a top-level phase, a replayed level, or a single
+/// batched kernel launch.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Phase / kernel name (`construct`, `factor-level`, `POTRF`, ...).
+    pub name: &'static str,
+    /// Tree level ([`NO_LEVEL`] = outside the level loop).
+    pub level: usize,
+    /// Batch items covered by the span (0 for pure phase spans).
+    pub batch: usize,
+    /// Representative shape (m, n) of a batch element ((0, 0) for phases).
+    pub shape: (usize, usize),
+    /// Start offset in seconds since trace creation.
+    pub t_start: f64,
+    /// Duration in seconds.
+    pub dt: f64,
+}
+
+struct Inner {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+    enabled: bool,
+}
+
+/// Cheap-to-clone span collector; all clones append to one buffer.
+#[derive(Clone)]
+pub struct RunTrace {
+    inner: Arc<Inner>,
+}
+
+impl Default for RunTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunTrace {
+    /// An enabled trace with its epoch at the call instant.
+    pub fn new() -> Self {
+        RunTrace {
+            inner: Arc::new(Inner {
+                origin: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+                enabled: true,
+            }),
+        }
+    }
+
+    /// A no-op trace: `record`/`phase` run the closure untimed.
+    pub fn disabled() -> Self {
+        RunTrace {
+            inner: Arc::new(Inner {
+                origin: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+                enabled: false,
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled
+    }
+
+    /// Record a span around `f` (kernel-launch granularity).
+    pub fn record<T>(
+        &self,
+        level: usize,
+        name: &'static str,
+        batch: usize,
+        shape: (usize, usize),
+        f: impl FnOnce() -> T,
+    ) -> T {
+        if !self.inner.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let t_start = t0.duration_since(self.inner.origin).as_secs_f64();
+        self.push(Span { name, level, batch, shape, t_start, dt });
+        out
+    }
+
+    /// Record a top-level phase span around `f`.
+    pub fn phase<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        self.record(NO_LEVEL, name, 0, (0, 0), f)
+    }
+
+    /// Append a span for work that already ran for `dt` seconds ending
+    /// now — used when the caller timed the interval itself.
+    pub fn push_completed(
+        &self,
+        level: usize,
+        name: &'static str,
+        batch: usize,
+        shape: (usize, usize),
+        dt: f64,
+    ) {
+        if !self.inner.enabled {
+            return;
+        }
+        let end = self.inner.origin.elapsed().as_secs_f64();
+        let t_start = (end - dt).max(0.0);
+        self.push(Span { name, level, batch, shape, t_start, dt });
+    }
+
+    fn push(&self, span: Span) {
+        // Recover from poisoning: a panicking solve must not take the
+        // session's trace down with it (mirrors the async arena cells).
+        let mut g = self.inner.spans.lock().unwrap_or_else(|p| p.into_inner());
+        g.push(span);
+    }
+
+    /// Snapshot of all spans recorded so far.
+    pub fn spans(&self) -> Vec<Span> {
+        self.inner.spans.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Summed duration of all spans named `name`.
+    pub fn phase_time(&self, name: &str) -> f64 {
+        self.spans().iter().filter(|s| s.name == name).map(|s| s.dt).sum()
+    }
+
+    /// Mean batch size over launch spans (batch > 0) — the Figure 12
+    /// occupancy proxy (large batches saturate batched BLAS).
+    pub fn mean_batch(&self) -> f64 {
+        let spans = self.spans();
+        let launches: Vec<&Span> = spans.iter().filter(|s| s.batch > 0).collect();
+        if launches.is_empty() {
+            return 0.0;
+        }
+        launches.iter().map(|s| s.batch as f64).sum::<f64>() / launches.len() as f64
+    }
+
+    /// Text rendering, one line per span (Fig 12 analog).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("level  span          batch  shape        start[ms]  dur[ms]\n");
+        for s in self.spans() {
+            let lvl = if s.level == NO_LEVEL { "-".to_string() } else { s.level.to_string() };
+            out.push_str(&format!(
+                "{:>5}  {:<13} {:>5}  {:>5}x{:<5}  {:>9.3}  {:>7.3}\n",
+                lvl,
+                s.name,
+                s.batch,
+                s.shape.0,
+                s.shape.1,
+                s.t_start * 1e3,
+                s.dt * 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// Current `RunReport` / `BENCH_*.json` schema version.
+pub const RUN_REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// Per-level launch statistics inside a [`RunReport`] (a serializable
+/// mirror of [`crate::plan::LevelScheduleStats`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LevelReport {
+    pub level: usize,
+    pub launches: usize,
+    pub batch_items: usize,
+    pub flops: u64,
+    pub padded_flops: u64,
+}
+
+/// The condensed, serializable record of one solver run.
+///
+/// Wall times are measured and therefore noisy; everything else (launch
+/// counts, FLOPs, byte counters) is computed from the plan IR / arena and
+/// is bit-deterministic for a fixed structure — the comparator is strict
+/// on counters and tolerant on times for exactly this reason.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    pub schema_version: u64,
+    pub backend: String,
+    /// Problem size (matrix dimension).
+    pub n: usize,
+    /// Cluster-tree depth.
+    pub depth: usize,
+    /// RHS columns covered by `solve_time` (0 = no solve ran).
+    pub rhs: usize,
+    pub construct_time: f64,
+    pub factor_time: f64,
+    pub solve_time: f64,
+    pub factor_launches: usize,
+    pub factor_flops: u64,
+    pub factor_padded_flops: u64,
+    pub factor_levels: Vec<LevelReport>,
+    pub solve_levels: Vec<LevelReport>,
+    /// Fraction of the traced wall interval during which ≥2 streams were
+    /// simultaneously busy (0 on host-synchronous backends).
+    pub overlap_ratio: f64,
+    /// Distinct (transfer level, compute level) overlap pairs observed.
+    pub overlapped_transfer_pairs: usize,
+    /// Solve-path operations recorded in the overlap trace (0 until a
+    /// solve runs on an overlapping device).
+    pub solve_trace_events: usize,
+    pub arena_bytes: u64,
+    pub arena_peak_bytes: u64,
+    pub predicted_peak_bytes: u64,
+}
+
+/// `(overlap_ratio, overlapped_transfer_pairs)` from an optional trace.
+pub fn overlap_metrics(overlap: Option<&OverlapTrace>) -> (f64, usize) {
+    let Some(tr) = overlap else {
+        return (0.0, 0);
+    };
+    if tr.events.is_empty() {
+        return (0.0, 0);
+    }
+    let start = tr.events.iter().map(|e| e.start).fold(f64::INFINITY, f64::min);
+    let end = tr.events.iter().map(|e| e.end).fold(0.0, f64::max);
+    let wall = (end - start).max(0.0);
+    let ratio = if wall > 0.0 { tr.concurrent_busy() / wall } else { 0.0 };
+    (ratio, tr.overlapped_transfer_pairs().len())
+}
+
+fn levels_json(levels: &[LevelReport]) -> Json {
+    Json::Arr(
+        levels
+            .iter()
+            .map(|l| {
+                Json::Obj(vec![
+                    ("level".into(), Json::Num(l.level as f64)),
+                    ("launches".into(), Json::Num(l.launches as f64)),
+                    ("batch_items".into(), Json::Num(l.batch_items as f64)),
+                    ("flops".into(), Json::Num(l.flops as f64)),
+                    ("padded_flops".into(), Json::Num(l.padded_flops as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn levels_from_json(v: &Json, what: &'static str) -> Result<Vec<LevelReport>, JsonError> {
+    let miss = |_| JsonError { pos: 0, msg: what };
+    v.as_arr()
+        .ok_or(JsonError { pos: 0, msg: what })?
+        .iter()
+        .map(|l| {
+            Ok(LevelReport {
+                level: l.get("level").and_then(Json::as_usize).ok_or(()).map_err(miss)?,
+                launches: l.get("launches").and_then(Json::as_usize).ok_or(()).map_err(miss)?,
+                batch_items: l
+                    .get("batch_items")
+                    .and_then(Json::as_usize)
+                    .ok_or(())
+                    .map_err(miss)?,
+                flops: l.get("flops").and_then(Json::as_u64).ok_or(()).map_err(miss)?,
+                padded_flops: l
+                    .get("padded_flops")
+                    .and_then(Json::as_u64)
+                    .ok_or(())
+                    .map_err(miss)?,
+            })
+        })
+        .collect()
+}
+
+impl RunReport {
+    /// The report as a [`Json`] tree (field order fixed by the schema).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema_version".into(), Json::Num(self.schema_version as f64)),
+            ("backend".into(), Json::Str(self.backend.clone())),
+            ("n".into(), Json::Num(self.n as f64)),
+            ("depth".into(), Json::Num(self.depth as f64)),
+            ("rhs".into(), Json::Num(self.rhs as f64)),
+            ("construct_time".into(), Json::Num(self.construct_time)),
+            ("factor_time".into(), Json::Num(self.factor_time)),
+            ("solve_time".into(), Json::Num(self.solve_time)),
+            ("factor_launches".into(), Json::Num(self.factor_launches as f64)),
+            ("factor_flops".into(), Json::Num(self.factor_flops as f64)),
+            ("factor_padded_flops".into(), Json::Num(self.factor_padded_flops as f64)),
+            ("factor_levels".into(), levels_json(&self.factor_levels)),
+            ("solve_levels".into(), levels_json(&self.solve_levels)),
+            ("overlap_ratio".into(), Json::Num(self.overlap_ratio)),
+            (
+                "overlapped_transfer_pairs".into(),
+                Json::Num(self.overlapped_transfer_pairs as f64),
+            ),
+            ("solve_trace_events".into(), Json::Num(self.solve_trace_events as f64)),
+            ("arena_bytes".into(), Json::Num(self.arena_bytes as f64)),
+            ("arena_peak_bytes".into(), Json::Num(self.arena_peak_bytes as f64)),
+            ("predicted_peak_bytes".into(), Json::Num(self.predicted_peak_bytes as f64)),
+        ])
+    }
+
+    /// Compact JSON text of the report.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Rebuild a report from a parsed [`Json`] tree.
+    pub fn from_json(v: &Json) -> Result<RunReport, JsonError> {
+        fn num(v: &Json, key: &'static str) -> Result<f64, JsonError> {
+            v.get(key).and_then(Json::as_f64).ok_or(JsonError { pos: 0, msg: key })
+        }
+        fn count(v: &Json, key: &'static str) -> Result<usize, JsonError> {
+            v.get(key).and_then(Json::as_usize).ok_or(JsonError { pos: 0, msg: key })
+        }
+        fn counter(v: &Json, key: &'static str) -> Result<u64, JsonError> {
+            v.get(key).and_then(Json::as_u64).ok_or(JsonError { pos: 0, msg: key })
+        }
+        Ok(RunReport {
+            schema_version: counter(v, "schema_version")?,
+            backend: v
+                .get("backend")
+                .and_then(Json::as_str)
+                .ok_or(JsonError { pos: 0, msg: "backend" })?
+                .to_string(),
+            n: count(v, "n")?,
+            depth: count(v, "depth")?,
+            rhs: count(v, "rhs")?,
+            construct_time: num(v, "construct_time")?,
+            factor_time: num(v, "factor_time")?,
+            solve_time: num(v, "solve_time")?,
+            factor_launches: count(v, "factor_launches")?,
+            factor_flops: counter(v, "factor_flops")?,
+            factor_padded_flops: counter(v, "factor_padded_flops")?,
+            factor_levels: levels_from_json(
+                v.get("factor_levels").unwrap_or(&Json::Null),
+                "factor_levels",
+            )?,
+            solve_levels: levels_from_json(
+                v.get("solve_levels").unwrap_or(&Json::Null),
+                "solve_levels",
+            )?,
+            overlap_ratio: num(v, "overlap_ratio")?,
+            overlapped_transfer_pairs: count(v, "overlapped_transfer_pairs")?,
+            solve_trace_events: count(v, "solve_trace_events")?,
+            arena_bytes: counter(v, "arena_bytes")?,
+            arena_peak_bytes: counter(v, "arena_peak_bytes")?,
+            predicted_peak_bytes: counter(v, "predicted_peak_bytes")?,
+        })
+    }
+
+    /// Parse a report from JSON text.
+    pub fn from_json_str(src: &str) -> Result<RunReport, JsonError> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    /// Padding waste: padded FLOPs the factorization performed beyond the
+    /// useful ones, as a fraction of useful (0 = no padding).
+    pub fn factor_padding_waste(&self) -> f64 {
+        if self.factor_flops == 0 {
+            return 0.0;
+        }
+        (self.factor_padded_flops.saturating_sub(self.factor_flops)) as f64
+            / self.factor_flops as f64
+    }
+
+    /// Human-readable one-run summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "run report (schema v{}): backend {}, n {}, depth {}, rhs {}\n",
+            self.schema_version, self.backend, self.n, self.depth, self.rhs
+        ));
+        out.push_str(&format!(
+            "  construct {:.3} ms | factor {:.3} ms | solve {:.3} ms\n",
+            1e3 * self.construct_time,
+            1e3 * self.factor_time,
+            1e3 * self.solve_time
+        ));
+        out.push_str(&format!(
+            "  {} factor launches, {:.3e} useful / {:.3e} padded FLOPs ({:.1}% waste)\n",
+            self.factor_launches,
+            self.factor_flops as f64,
+            self.factor_padded_flops as f64,
+            1e2 * self.factor_padding_waste()
+        ));
+        out.push_str(&format!(
+            "  overlap ratio {:.3}, {} transfer/compute pairs, {} solve trace events\n",
+            self.overlap_ratio, self.overlapped_transfer_pairs, self.solve_trace_events
+        ));
+        out.push_str(&format!(
+            "  arena {} B (peak {} B, predicted {} B)\n",
+            self.arena_bytes, self.arena_peak_bytes, self.predicted_peak_bytes
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::overlap::{OverlapEvent, OverlapKind};
+
+    #[test]
+    fn records_spans_and_phases() {
+        let tr = RunTrace::new();
+        let v = tr.record(3, "POTRF", 16, (8, 8), || 5);
+        assert_eq!(v, 5);
+        let w = tr.phase("construct", || 7);
+        assert_eq!(w, 7);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "POTRF");
+        assert_eq!(spans[0].batch, 16);
+        assert_eq!(spans[1].level, NO_LEVEL);
+        // Phase spans (batch 0) stay out of the occupancy proxy.
+        assert_eq!(tr.mean_batch(), 16.0);
+        assert!(tr.render().contains("POTRF"));
+        assert!(tr.phase_time("construct") >= 0.0);
+    }
+
+    #[test]
+    fn disabled_trace_skips() {
+        let tr = RunTrace::disabled();
+        tr.record(0, "GEMM", 4, (2, 2), || ());
+        tr.push_completed(0, "factor-level", 1, (0, 0), 0.5);
+        assert!(tr.spans().is_empty());
+        assert!(!tr.is_enabled());
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let tr = RunTrace::new();
+        let clone = tr.clone();
+        clone.record(1, "TRSM", 2, (4, 4), || ());
+        assert_eq!(tr.spans().len(), 1);
+    }
+
+    #[test]
+    fn push_completed_backdates_start() {
+        let tr = RunTrace::new();
+        tr.push_completed(2, "factor-level", 3, (0, 0), 0.25);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 1);
+        assert!((spans[0].dt - 0.25).abs() < 1e-12);
+        assert!(spans[0].t_start >= 0.0);
+    }
+
+    fn sample_report() -> RunReport {
+        RunReport {
+            schema_version: RUN_REPORT_SCHEMA_VERSION,
+            backend: "native".to_string(),
+            n: 256,
+            depth: 2,
+            rhs: 4,
+            construct_time: 0.0125,
+            factor_time: 0.5,
+            solve_time: 0.03125,
+            factor_launches: 12,
+            factor_flops: 1_000_000,
+            factor_padded_flops: 1_250_000,
+            factor_levels: vec![LevelReport {
+                level: 2,
+                launches: 12,
+                batch_items: 48,
+                flops: 1_000_000,
+                padded_flops: 1_250_000,
+            }],
+            solve_levels: vec![LevelReport {
+                level: 2,
+                launches: 6,
+                batch_items: 24,
+                flops: 10_000,
+                padded_flops: 12_000,
+            }],
+            overlap_ratio: 0.25,
+            overlapped_transfer_pairs: 3,
+            solve_trace_events: 7,
+            arena_bytes: 4096,
+            arena_peak_bytes: 8192,
+            predicted_peak_bytes: 8192,
+        }
+    }
+
+    #[test]
+    fn report_round_trips_byte_stable() {
+        let r = sample_report();
+        let once = r.to_json_string();
+        let parsed = RunReport::from_json_str(&once).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parsed.to_json_string(), once);
+    }
+
+    #[test]
+    fn report_parse_rejects_missing_fields() {
+        let mut j = sample_report().to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "factor_flops");
+        }
+        assert!(RunReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn padding_waste_math() {
+        let r = sample_report();
+        assert!((r.factor_padding_waste() - 0.25).abs() < 1e-12);
+        assert!(r.render().contains("25.0% waste"));
+    }
+
+    #[test]
+    fn overlap_metrics_from_trace() {
+        let tr = OverlapTrace {
+            events: vec![
+                OverlapEvent {
+                    stream: 0,
+                    level: 2,
+                    kind: OverlapKind::Compute,
+                    opcode: "POTRF",
+                    start: 0.0,
+                    end: 1.0,
+                },
+                OverlapEvent {
+                    stream: 1,
+                    level: 1,
+                    kind: OverlapKind::Transfer,
+                    opcode: "UPLOAD",
+                    start: 0.5,
+                    end: 1.0,
+                },
+            ],
+        };
+        let (ratio, pairs) = overlap_metrics(Some(&tr));
+        assert!((ratio - 0.5).abs() < 1e-12);
+        assert_eq!(pairs, 1);
+        assert_eq!(overlap_metrics(None), (0.0, 0));
+    }
+}

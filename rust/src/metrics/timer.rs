@@ -1,51 +1,9 @@
-//! Simple wall-clock stopwatch with named laps.
+//! Simple wall-clock timing helper.
+//!
+//! Named-lap accumulation lives in [`crate::metrics::run_trace::RunTrace`]
+//! (`phase` / `phase_time`), which subsumed the old `Stopwatch`.
 
 use std::time::Instant;
-
-/// Accumulating stopwatch.
-#[derive(Debug)]
-pub struct Stopwatch {
-    start: Instant,
-    laps: Vec<(String, f64)>,
-    last: Instant,
-}
-
-impl Default for Stopwatch {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Stopwatch {
-    pub fn new() -> Self {
-        let now = Instant::now();
-        Stopwatch { start: now, laps: Vec::new(), last: now }
-    }
-
-    /// Record the time since the previous lap under `name`.
-    pub fn lap(&mut self, name: &str) -> f64 {
-        let now = Instant::now();
-        let dt = now.duration_since(self.last).as_secs_f64();
-        self.laps.push((name.to_string(), dt));
-        self.last = now;
-        dt
-    }
-
-    /// Total elapsed seconds since creation.
-    pub fn total(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    /// All recorded laps.
-    pub fn laps(&self) -> &[(String, f64)] {
-        &self.laps
-    }
-
-    /// Seconds recorded for a named lap (summed over repeats).
-    pub fn named(&self, name: &str) -> f64 {
-        self.laps.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
-    }
-}
 
 /// Time a closure, returning (result, seconds).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -57,18 +15,6 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn laps_accumulate() {
-        let mut sw = Stopwatch::new();
-        std::thread::sleep(std::time::Duration::from_millis(5));
-        let l1 = sw.lap("a");
-        assert!(l1 >= 0.004);
-        sw.lap("b");
-        assert_eq!(sw.laps().len(), 2);
-        assert!(sw.named("a") >= 0.004);
-        assert!(sw.total() >= l1);
-    }
 
     #[test]
     fn timed_returns_value() {

@@ -34,15 +34,18 @@ use crate::batch::device::{Device, DeviceArena, Launch, VecRegion};
 use crate::h2::H2Matrix;
 use crate::linalg::Matrix;
 use crate::metrics::flops::{FlopScope, Phase};
+use crate::metrics::RunTrace;
 use crate::ulv::{LevelFactor, SubstMode, UlvFactor};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Replays plans. Holds the device and an optional per-session
-/// [`FlopScope`] that the plan's static FLOP metadata is credited to.
+/// Replays plans. Holds the device, an optional per-session
+/// [`FlopScope`] that the plan's static FLOP metadata is credited to, and
+/// an optional [`RunTrace`] recording replay-level spans.
 pub struct Executor<'a> {
     device: &'a dyn Device,
     scope: Option<&'a FlopScope>,
+    trace: Option<RunTrace>,
 }
 
 /// What happens to the factor when a factorization replay finishes.
@@ -57,7 +60,7 @@ enum Mirror {
 
 impl<'a> Executor<'a> {
     pub fn new(device: &'a dyn Device) -> Executor<'a> {
-        Executor { device, scope: None }
+        Executor { device, scope: None, trace: None }
     }
 
     /// Credit executed FLOPs (from the plan's statically-known metadata)
@@ -67,6 +70,29 @@ impl<'a> Executor<'a> {
     pub fn with_scope(mut self, scope: &'a FlopScope) -> Executor<'a> {
         self.scope = Some(scope);
         self
+    }
+
+    /// Record one span per replayed level (`factor-level`, `factor-root`,
+    /// `solve-replay`) into `trace` — the executor's slice of the
+    /// session-wide structured run trace. Issue-side wall time: on an
+    /// overlapping device a level span covers journaling, not kernel
+    /// completion (that is the overlap trace's job).
+    pub fn with_trace(mut self, trace: RunTrace) -> Executor<'a> {
+        self.trace = Some(trace);
+        self
+    }
+
+    fn traced<T>(
+        &self,
+        level: usize,
+        name: &'static str,
+        batch: usize,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        match &self.trace {
+            Some(tr) => tr.record(level, name, batch, (0, 0), f),
+            None => f(),
+        }
     }
 
     // ---------------- Factorization replay ----------------
@@ -121,14 +147,18 @@ impl<'a> Executor<'a> {
         self.run_factor_steps(&prog.prologue, arena.as_mut(), h2);
         for lp in &prog.levels {
             self.device.stream(lp.level);
-            self.run_factor_steps(&lp.steps, arena.as_mut(), h2);
+            self.traced(lp.level, "factor-level", lp.steps.len(), || {
+                self.run_factor_steps(&lp.steps, arena.as_mut(), h2);
+            });
         }
         // Root factorization (Algorithm 2 line 22): batch-of-one POTRF on
         // the merged root buffer, which then holds L for RootSolve.
         self.device.stream(0);
         let root = [prog.root_src];
-        self.device.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &root });
-        self.device.fence();
+        self.traced(0, "factor-root", 1, || {
+            self.device.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &root });
+            self.device.fence();
+        });
 
         let factor = {
             let a = arena.as_mut();

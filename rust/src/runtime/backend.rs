@@ -23,7 +23,7 @@ use crate::batch::native::NativeBackend;
 use crate::batch::pad::{buffer_to_batch_f64, refs_to_buffer_f64, vecs_to_buffer_f64};
 use crate::linalg::Matrix;
 use crate::metrics::flops;
-use crate::metrics::Tracer;
+use crate::metrics::RunTrace;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,7 +46,7 @@ pub struct PjrtBackend {
     cache: Mutex<HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>>,
     fallback: NativeBackend,
     pub stats: PjrtStats,
-    pub tracer: Option<Tracer>,
+    pub trace: Option<RunTrace>,
 }
 
 // SAFETY: all PJRT interactions go through &self methods that funnel into
@@ -70,13 +70,13 @@ impl PjrtBackend {
             cache: Mutex::new(HashMap::new()),
             fallback: NativeBackend::new(),
             stats: PjrtStats::default(),
-            tracer: None,
+            trace: None,
         })
     }
 
-    /// Enable the execution tracer (fig 12 analog).
-    pub fn with_tracer(mut self) -> Self {
-        self.tracer = Some(Tracer::new(true));
+    /// Record every batched launch into `trace` (fig 12 analog).
+    pub fn with_trace(mut self, trace: RunTrace) -> Self {
+        self.trace = Some(trace);
         self
     }
 
@@ -88,7 +88,7 @@ impl PjrtBackend {
         shape: (usize, usize),
         f: impl FnOnce() -> T,
     ) -> T {
-        match &self.tracer {
+        match &self.trace {
             Some(tr) => tr.record(level, kernel, batch, shape, f),
             None => f(),
         }

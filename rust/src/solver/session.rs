@@ -39,8 +39,11 @@ use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
 use crate::metrics::overlap::OverlapTrace;
-use crate::metrics::{flops::FlopScope, timer::timed};
-use crate::plan::{self, Executor, Plan, ScheduleStats};
+use crate::metrics::run_trace::{
+    overlap_metrics, LevelReport, RunReport, NO_LEVEL, RUN_REPORT_SCHEMA_VERSION,
+};
+use crate::metrics::{flops::FlopScope, timer::timed, RunTrace};
+use crate::plan::{self, Executor, LevelScheduleStats, Plan, ScheduleStats};
 use crate::ulv::{pcg_in, FactorMeta, SubstMode, UlvFactor};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -220,6 +223,18 @@ pub struct H2Solver {
     meta: FactorMeta,
     stats: BuildStats,
     scope: FlopScope,
+    /// Session-lifetime structured span trace (`construct` → `factorize` →
+    /// per-level replay spans → `substitution`), shared by clone with the
+    /// executor and trace-aware backends.
+    run_trace: RunTrace,
+    /// Right-hand sides solved so far (all entry points) — the `rhs`
+    /// column of [`RunReport`].
+    solved_rhs: AtomicUsize,
+    /// Solve-path overlap events drained from the backend since the last
+    /// factorization replay (the factor-phase trace lives in
+    /// [`BuildStats::overlap`]). Accumulated lazily by
+    /// [`run_report`](H2Solver::run_report).
+    solve_overlap: Mutex<OverlapTrace>,
     plan_recordings: usize,
     /// Statically verify every newly recorded plan (builder flag /
     /// `H2_VERIFY_PLAN` / debug default).
@@ -241,14 +256,24 @@ impl H2Solver {
         verify_plan: bool,
     ) -> Result<H2Solver, H2Error> {
         let scope = FlopScope::new();
+        let run_trace = RunTrace::new();
         let (h2, construct_time) = construct_timed(&geometry, &kernel, &config)?;
+        run_trace.push_completed(NO_LEVEL, "construct", 0, (0, 0), construct_time);
         let plan = Arc::new(guard("planning", || plan::record(&h2))?);
         if verify_plan {
             plan::verify::verify(&plan).map_err(|v| H2Error::PlanVerification(v.to_string()))?;
         }
         let meta = plan.factor_meta();
-        let (factor, arena, stats) =
-            replay_factor(&plan, &h2, backend.as_ref(), &scope, construct_time, storage, &meta)?;
+        let (factor, arena, stats) = replay_factor(
+            &plan,
+            &h2,
+            backend.as_ref(),
+            &scope,
+            &run_trace,
+            construct_time,
+            storage,
+            &meta,
+        )?;
         Ok(H2Solver {
             geometry,
             kernel,
@@ -265,6 +290,9 @@ impl H2Solver {
             meta,
             stats,
             scope,
+            run_trace,
+            solved_rhs: AtomicUsize::new(0),
+            solve_overlap: Mutex::new(OverlapTrace::default()),
             plan_recordings: 1,
             verify_plan,
         })
@@ -448,7 +476,9 @@ impl H2Solver {
             })
         });
         drop(ws);
+        self.run_trace.push_completed(NO_LEVEL, "substitution", 1, (self.n(), 1), subst_time);
         let xt = res?;
+        self.solved_rhs.fetch_add(1, Ordering::Relaxed);
         let residual = self.sample_residual_opts(&xt, &bt, opts);
         let x = self.h2.tree.unpermute_vec(&xt);
         Ok(SolveReport {
@@ -548,7 +578,9 @@ impl H2Solver {
             })
         });
         drop(ws);
+        self.run_trace.push_completed(NO_LEVEL, "substitution", 1, (self.n(), 1), subst_time);
         let result = res?;
+        self.solved_rhs.fetch_add(1, Ordering::Relaxed);
         if result.rel_residual > tol {
             return Err(H2Error::ConvergenceFailure {
                 achieved: result.rel_residual,
@@ -578,20 +610,24 @@ impl H2Solver {
         self.check_rhs(b)?;
         let bt = self.h2.tree.permute_vec(b);
         let mut ws = self.pool.acquire(self.backend.as_ref());
-        let res = guard("distributed solve", || {
-            dist_solve_driver_in(
-                &self.plan,
-                &self.meta,
-                self.backend.as_ref(),
-                self.arena.as_ref(),
-                ws.region(),
-                ranks,
-                &bt,
-                self.subst,
-            )
+        let (res, subst_time) = timed(|| {
+            guard("distributed solve", || {
+                dist_solve_driver_in(
+                    &self.plan,
+                    &self.meta,
+                    self.backend.as_ref(),
+                    self.arena.as_ref(),
+                    ws.region(),
+                    ranks,
+                    &bt,
+                    self.subst,
+                )
+            })
         });
         drop(ws);
+        self.run_trace.push_completed(NO_LEVEL, "substitution", 1, (self.n(), 1), subst_time);
         let report = res?;
+        self.solved_rhs.fetch_add(1, Ordering::Relaxed);
         let residual = self.sample_residual(&report.x, &bt);
         let x = self.h2.tree.unpermute_vec(&report.x);
         Ok(DistSolveReport {
@@ -615,6 +651,7 @@ impl H2Solver {
     pub fn refactorize(&mut self, config: H2Config) -> Result<&BuildStats, H2Error> {
         validate(&self.geometry, &config)?;
         let (h2, construct_time) = construct_timed(&self.geometry, &self.kernel, &config)?;
+        self.run_trace.push_completed(NO_LEVEL, "construct", 0, (0, 0), construct_time);
         let plan = if self.plan.compatible(&h2) {
             self.plan.clone()
         } else {
@@ -632,10 +669,14 @@ impl H2Solver {
             &h2,
             self.backend.as_ref(),
             &self.scope,
+            &self.run_trace,
             construct_time,
             self.storage,
             &meta,
         )?;
+        // Stale by construction: the accumulated solve-path events refer
+        // to the factor that was just replaced.
+        *self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()) = OverlapTrace::default();
         self.h2 = h2;
         self.plan = plan;
         self.factor = factor;
@@ -664,10 +705,14 @@ impl H2Solver {
             &self.h2,
             backend.as_ref(),
             &self.scope,
+            &self.run_trace,
             0.0,
             self.storage,
             &self.meta,
         )?;
+        // The old device's trace epoch dies with it; events from before
+        // the rebind cannot be merged with the new backend's.
+        *self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()) = OverlapTrace::default();
         self.spec = spec;
         self.backend = backend;
         self.factor = factor;
@@ -681,6 +726,68 @@ impl H2Solver {
     /// The backend spec this session was built with (or last rebound to).
     pub fn backend_spec(&self) -> &BackendSpec {
         &self.spec
+    }
+
+    /// The session's structured span trace: `construct` → `factorize` →
+    /// per-level replay spans → one `substitution` span per solved RHS.
+    /// Clones share the buffer, so holding one across solves observes
+    /// them live.
+    pub fn run_trace(&self) -> &RunTrace {
+        &self.run_trace
+    }
+
+    /// Condense the session into the serializable [`RunReport`] that
+    /// benchmark trajectory files (`BENCH_*.json`) persist.
+    ///
+    /// Launch counts and FLOPs come from the *static* plan schedule
+    /// ([`ScheduleStats`]), not measured counters — bit-deterministic for
+    /// a fixed structure, which is what the trajectory comparator is
+    /// strict about. Wall times come from the run trace and are noisy.
+    /// Overlap metrics merge the factorization replay's trace
+    /// ([`BuildStats::overlap`]) with solve-path events drained from the
+    /// backend at call time; all are 0 on host-synchronous backends.
+    pub fn run_report(&self) -> RunReport {
+        // Solve launches recorded by an overlapping backend accumulate in
+        // its engine until drained; fold them into the session-held solve
+        // trace (the factor-phase events were drained into `BuildStats`
+        // when the replay finished).
+        if let Some(tr) = self.backend.take_overlap_trace() {
+            let mut acc = self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner());
+            acc.events.extend(tr.events);
+        }
+        let solve = self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        let combined = match &self.stats.overlap {
+            Some(factor_tr) => {
+                let mut all = factor_tr.clone();
+                all.events.extend(solve.events.iter().cloned());
+                Some(all)
+            }
+            None if !solve.events.is_empty() => Some(solve.clone()),
+            None => None,
+        };
+        let (overlap_ratio, overlapped_transfer_pairs) = overlap_metrics(combined.as_ref());
+        let sched = &self.stats.schedule;
+        RunReport {
+            schema_version: RUN_REPORT_SCHEMA_VERSION,
+            backend: self.backend.name().to_string(),
+            n: self.stats.n,
+            depth: self.stats.depth,
+            rhs: self.solved_rhs.load(Ordering::Relaxed),
+            construct_time: self.stats.construct_time,
+            factor_time: self.stats.factor_time,
+            solve_time: self.run_trace.phase_time("substitution"),
+            factor_launches: sched.factor_launches(),
+            factor_flops: sched.factor_flops(),
+            factor_padded_flops: sched.factor_padded_flops(),
+            factor_levels: level_reports(&sched.factor_levels),
+            solve_levels: level_reports(&sched.solve_levels),
+            overlap_ratio,
+            overlapped_transfer_pairs,
+            solve_trace_events: solve.events.len(),
+            arena_bytes: self.stats.arena_bytes as u64,
+            arena_peak_bytes: self.stats.arena_peak_bytes as u64,
+            predicted_peak_bytes: self.stats.predicted_peak_bytes as u64,
+        }
     }
 
     fn check_rhs(&self, b: &[f64]) -> Result<(), H2Error> {
@@ -717,6 +824,20 @@ impl H2Solver {
     }
 }
 
+/// Serializable mirror of a level-aggregated schedule slice.
+fn level_reports(levels: &[LevelScheduleStats]) -> Vec<LevelReport> {
+    levels
+        .iter()
+        .map(|l| LevelReport {
+            level: l.level,
+            launches: l.launches,
+            batch_items: l.batch_items,
+            flops: l.flops,
+            padded_flops: l.padded_flops,
+        })
+        .collect()
+}
+
 /// Guarded, timed H² construction.
 fn construct_timed(
     geometry: &Geometry,
@@ -740,6 +861,7 @@ fn replay_factor(
     h2: &H2Matrix,
     backend: &dyn Device,
     scope: &FlopScope,
+    trace: &RunTrace,
     construct_time: f64,
     storage: FactorStorage,
     meta: &FactorMeta,
@@ -748,7 +870,7 @@ fn replay_factor(
     let ((factor, arena), factor_time) = {
         let (res, t) = timed(|| {
             guard("factorization", || {
-                let exec = Executor::new(backend).with_scope(scope);
+                let exec = Executor::new(backend).with_scope(scope).with_trace(trace.clone());
                 match storage {
                     FactorStorage::Mirrored => {
                         let (f, a) = exec.factorize_resident(plan, h2);
@@ -760,6 +882,7 @@ fn replay_factor(
         });
         (res?, t)
     };
+    trace.push_completed(NO_LEVEL, "factorize", 0, (0, 0), factor_time);
     let factor_flops = scope.snapshot().factor - before.factor;
     let stats = BuildStats {
         n: h2.n(),

@@ -4,6 +4,7 @@
 //! so this module provides self-contained equivalents (documented in
 //! DESIGN.md §10).
 
+pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;

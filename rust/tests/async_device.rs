@@ -296,7 +296,8 @@ fn overlap_trace_shows_uploads_overlapping_prior_level_compute() {
     // level's uploads run concurrently with another level's compute. A
     // deep problem gives the scheduler many level pairs; the replay is
     // retried a few times to keep the assert robust on loaded CI runners.
-    let case = Case { seed: 0, n: 1024, leaf_size: 32, max_rank: 24, eta: 1.0, far_samples: 0, rhs_count: 1 };
+    let case =
+        Case { leaf_size: 32, max_rank: 24, eta: 1.0, rhs_count: 1, ..Case::fixed(1024, 0) };
     let h2 = case.h2();
     let plan = Arc::new(h2ulv::plan::record(&h2));
     let native = NativeBackend::new();
@@ -340,6 +341,38 @@ fn facade_build_stats_carry_the_overlap_trace() {
     // The async session keeps serving solves after the trace was taken.
     let b = case.rhs(0);
     assert_eq!(asynced.solve(&b).expect("rhs matches").x.len(), case.n);
+}
+
+#[test]
+fn solve_path_is_traced_and_surfaces_in_the_run_report() {
+    // PR 7 acceptance: `Device::launch_solve` records per-stream busy
+    // intervals too, so the overlap trace — and the RunReport built from
+    // it — covers substitution, not just the factorization replay.
+    let case = Case::fixed(512, 609);
+    let asynced = case.solver(BackendSpec::async_native());
+    let b = case.rhs(0);
+    asynced.solve(&b).expect("rhs matches");
+    let report = asynced.run_report();
+    assert!(
+        report.solve_trace_events > 0,
+        "solve launches on an async device must appear in the overlap trace"
+    );
+    assert_eq!(report.rhs, 1);
+    assert!(report.solve_time > 0.0);
+    assert_eq!(report.backend, "async:native");
+    assert!(report.factor_launches > 0);
+    // Events accumulate across solves; the RHS counter follows.
+    asynced.solve(&b).expect("rhs matches");
+    let again = asynced.run_report();
+    assert!(again.solve_trace_events >= report.solve_trace_events);
+    assert_eq!(again.rhs, 2);
+    // Host-synchronous sessions stay trace-free but still report times.
+    let native = case.solver(BackendSpec::Native);
+    native.solve(&b).expect("rhs matches");
+    let nr = native.run_report();
+    assert_eq!(nr.solve_trace_events, 0);
+    assert_eq!(nr.overlapped_transfer_pairs, 0);
+    assert!(nr.solve_time > 0.0);
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,167 @@
+//! The benchmark trajectory harness end to end (PR 7 acceptance):
+//!
+//! * [`RunReport`] from a *live* facade session round-trips through JSON
+//!   byte-stably and carries real phase times / schedule counters;
+//! * plan-derived counters are bit-deterministic across sessions and
+//!   across full sweep re-runs — the property the trajectory comparator's
+//!   strict gate rests on;
+//! * scenario enumeration is a pure function of `(n, fuzz_seeds)`;
+//! * the comparator flags counter regressions on real reports and stays
+//!   quiet on self-comparison.
+
+mod common;
+
+use common::Case;
+use h2ulv::bench::{self, compare::compare, BenchReport};
+use h2ulv::metrics::RunReport;
+use h2ulv::prelude::*;
+
+#[test]
+fn run_report_from_a_live_session_round_trips_byte_stable() {
+    let case = Case::fixed(256, 11);
+    let solver = case.solver(BackendSpec::Native);
+    solver.solve(&case.rhs(0)).expect("rhs matches");
+    let report = solver.run_report();
+    assert_eq!(report.backend, "native");
+    assert_eq!(report.n, 256);
+    assert_eq!(report.rhs, 1);
+    assert!(report.factor_launches > 0, "{}", report.render());
+    assert!(report.factor_flops > 0);
+    assert!(report.factor_padded_flops >= report.factor_flops);
+    assert!(!report.factor_levels.is_empty());
+    assert!(!report.solve_levels.is_empty());
+    assert!(report.construct_time > 0.0);
+    assert!(report.factor_time > 0.0);
+    assert!(report.solve_time > 0.0);
+    assert!(report.arena_peak_bytes >= report.arena_bytes);
+    assert_eq!(report.arena_peak_bytes, report.predicted_peak_bytes);
+
+    let text = report.to_json_string();
+    let parsed = RunReport::from_json_str(&text).expect("valid schema");
+    assert_eq!(parsed, report);
+    assert_eq!(parsed.to_json_string(), text, "parse → re-serialize must be byte-stable");
+}
+
+#[test]
+fn run_trace_spans_cover_every_phase() {
+    let case = Case::fixed(256, 13);
+    let solver = case.solver(BackendSpec::Native);
+    solver.solve(&case.rhs(0)).expect("rhs matches");
+    let trace = solver.run_trace();
+    let names: Vec<&str> = trace.spans().iter().map(|s| s.name).collect();
+    for phase in ["construct", "factorize", "factor-level", "factor-root", "substitution"] {
+        assert!(names.contains(&phase), "missing {phase} span; got {names:?}");
+    }
+    assert!(trace.phase_time("substitution") > 0.0);
+    // Per-level spans carry real level tags (the facade phases do not).
+    assert!(trace
+        .spans()
+        .iter()
+        .any(|s| s.name == "factor-level" && s.level != h2ulv::metrics::run_trace::NO_LEVEL));
+}
+
+#[test]
+fn plan_derived_counters_are_deterministic_across_sessions() {
+    let case = Case::fixed(256, 11);
+    let a = case.solver(BackendSpec::Native).run_report();
+    let b = case.solver(BackendSpec::Native).run_report();
+    assert_eq!(a.factor_launches, b.factor_launches);
+    assert_eq!(a.factor_flops, b.factor_flops);
+    assert_eq!(a.factor_padded_flops, b.factor_padded_flops);
+    assert_eq!(a.factor_levels, b.factor_levels);
+    assert_eq!(a.solve_levels, b.solve_levels);
+    assert_eq!(a.arena_bytes, b.arena_bytes);
+    assert_eq!(a.arena_peak_bytes, b.arena_peak_bytes);
+    assert_eq!(a.predicted_peak_bytes, b.predicted_peak_bytes);
+}
+
+#[test]
+fn scenario_enumeration_is_deterministic_for_fixed_seeds() {
+    let fuzz: Vec<u64> = vec![0, 1, 2, 3];
+    let a = bench::scenario_matrix(256, &fuzz);
+    let b = bench::scenario_matrix(256, &fuzz);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.backend, y.backend);
+        assert_eq!(x.case.to_string(), y.case.to_string());
+    }
+    let names: std::collections::HashSet<_> = a.iter().map(|s| s.name.clone()).collect();
+    assert_eq!(names.len(), a.len(), "scenario names are the comparator's join key");
+}
+
+#[test]
+fn small_sweep_round_trips_and_re_runs_counter_identical() {
+    // One (distribution, kernel, width) cell across all three backends:
+    // small enough for the default suite, wide enough to exercise the
+    // sweep → serialize → parse → compare pipeline end to end.
+    let scenarios =
+        bench::filter_scenarios(bench::scenario_matrix(128, &[]), "sphere-laplace/rhs1");
+    assert_eq!(scenarios.len(), 3, "one scenario per backend");
+    let report = BenchReport::collect(128, &scenarios).expect("sweep runs");
+    assert_eq!(report.scenarios.len(), 3);
+    for s in &report.scenarios {
+        assert!(s.run.factor_launches > 0, "{}", s.name);
+        assert_eq!(s.run.rhs, 1, "{}", s.name);
+    }
+
+    let text = report.to_json_string();
+    let parsed = BenchReport::from_json_str(&text).expect("valid schema");
+    assert_eq!(parsed, report);
+    assert_eq!(parsed.to_json_string(), text);
+
+    // Self-comparison is silent; a re-run differs only in wall times.
+    let cmp = compare(&parsed, &report, 0.0);
+    assert!(cmp.deltas.is_empty() && !cmp.has_regressions());
+    let rerun = BenchReport::collect(128, &scenarios).expect("sweep runs");
+    let cmp = compare(&report, &rerun, 0.0);
+    assert!(!cmp.has_regressions(), "counters drifted across re-runs:\n{}", cmp.render());
+    assert!(
+        cmp.deltas.iter().all(|d| d.class == bench::compare::MetricClass::Time),
+        "non-time delta across identical re-runs:\n{}",
+        cmp.render()
+    );
+}
+
+#[test]
+fn comparator_gates_counter_regressions_on_real_reports() {
+    let scenarios =
+        bench::filter_scenarios(bench::scenario_matrix(128, &[]), "serial/sphere-laplace/rhs1");
+    assert_eq!(scenarios.len(), 1);
+    let baseline = BenchReport::collect(128, &scenarios).expect("sweep runs");
+    let mut worse = baseline.clone();
+    worse.scenarios[0].run.arena_peak_bytes += 1;
+    let cmp = compare(&baseline, &worse, 0.0);
+    assert!(cmp.has_regressions());
+    assert_eq!(cmp.regressions()[0].metric, "arena_peak_bytes");
+    // The reverse direction (shrinking peak) reports but does not gate.
+    let cmp = compare(&worse, &baseline, 0.0);
+    assert!(!cmp.has_regressions());
+    assert_eq!(cmp.deltas.len(), 1);
+}
+
+#[test]
+fn wide_rhs_scenarios_report_the_full_width() {
+    let scenarios =
+        bench::filter_scenarios(bench::scenario_matrix(128, &[]), "serial/sphere-laplace/rhs8");
+    assert_eq!(scenarios.len(), 1);
+    let rep = bench::run_scenario(&scenarios[0]).expect("scenario runs");
+    assert_eq!(rep.run.rhs, 8);
+    assert!(rep.run.solve_time > 0.0);
+}
+
+#[test]
+fn clustered_bench_cases_build_and_solve() {
+    // The non-uniform regime of the matrix actually factorizes: bounded
+    // kernel (gaussian) + clustered blobs stay inside the SPD envelope.
+    let case = Case {
+        kernel: "gaussian",
+        distribution: common::Distribution::Clustered { clusters: 4 },
+        ..Case::fixed(192, 17)
+    };
+    let solver = case.solver(BackendSpec::Native);
+    let rep = solver.solve(&case.rhs(0)).expect("clustered gaussian solves");
+    assert_eq!(rep.x.len(), 192);
+    let run = solver.run_report();
+    assert!(run.factor_launches > 0);
+}

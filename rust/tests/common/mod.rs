@@ -1,15 +1,10 @@
-//! Shared test support: a seeded random H² problem generator (structure
-//! fuzz) plus the fixed fixtures the pre-existing integration tests used,
-//! so `device_api.rs`, `concurrent_solve.rs`, `plan_replay.rs`, and
-//! `async_device.rs` build their problems from one place.
-//!
-//! A [`Case`] is a compact problem descriptor; its `Display` form is meant
-//! to be embedded in assertion messages so a failing seed reproduces from
-//! the test output alone:
-//!
-//! ```text
-//! Case { seed: 5, n: 384, leaf: 48, rank: 24, eta: 1.5, far: 0, rhs: 2 }
-//! ```
+//! Shared test support — a thin re-export of the library's canonical
+//! seeded problem generator ([`h2ulv::bench::cases`]), so the integration
+//! tests, the CLI `plan-lint` fuzzer, and the benchmark sweep all draw
+//! their problems from one place. Since PR 7, [`Case::from_seed`] also
+//! varies the point distribution (sphere vs clustered blobs) and the
+//! kernel (laplace / yukawa / gaussian / matérn-3/2); a `Case`'s
+//! `Display` form still reproduces a failing seed from test output alone.
 //!
 //! [`seeds`] honours `H2_TEST_SEEDS` (default 8) so CI stress jobs can
 //! widen interleaving/structure coverage without slowing the default
@@ -18,126 +13,6 @@
 // Each test binary compiles its own copy of this module and uses a
 // different subset of it.
 #![allow(dead_code)]
+#![allow(unused_imports)]
 
-use h2ulv::construct::H2Config;
-use h2ulv::geometry::Geometry;
-use h2ulv::h2::H2Matrix;
-use h2ulv::kernels::KernelFn;
-use h2ulv::solver::{BackendSpec, H2Solver, H2SolverBuilder};
-use h2ulv::util::Rng;
-use std::fmt;
-
-/// One randomized (or fixed) H² test problem: everything needed to build
-/// the matrix, its right-hand sides, and a facade session.
-#[derive(Clone, Debug)]
-pub struct Case {
-    pub seed: u64,
-    pub n: usize,
-    pub leaf_size: usize,
-    pub max_rank: usize,
-    pub eta: f64,
-    pub far_samples: usize,
-    pub rhs_count: usize,
-}
-
-impl fmt::Display for Case {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "Case {{ seed: {}, n: {}, leaf: {}, rank: {}, eta: {}, far: {}, rhs: {} }}",
-            self.seed, self.n, self.leaf_size, self.max_rank, self.eta, self.far_samples,
-            self.rhs_count
-        )
-    }
-}
-
-impl Case {
-    /// Structure fuzz: derive a varied problem from one seed — tree depth
-    /// (via `n / leaf`), leaf size, rank budget, admissibility `eta`, and
-    /// RHS count all vary. Parameter ranges stay inside the envelope the
-    /// fixed-fixture tests have proven SPD-safe (rank ≥ leaf/2, exact far
-    /// field), so every generated case factorizes.
-    pub fn from_seed(seed: u64) -> Case {
-        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xC0FFEE));
-        let leaf_size = [32, 48, 64][rng.below(3)];
-        // 4..=12 leaves' worth of points: depth 2–4 once the tree splits.
-        let leaves = 4 + rng.below(9);
-        let n = leaf_size * leaves;
-        let max_rank = [leaf_size / 2, (3 * leaf_size) / 4][rng.below(2)];
-        let eta = [1.0, 1.5, 2.0][rng.below(3)];
-        let rhs_count = 1 + rng.below(3);
-        Case { seed, n, leaf_size, max_rank, eta, far_samples: 0, rhs_count }
-    }
-
-    /// The fixed fixture `device_api.rs` and `plan_replay.rs` shared
-    /// (leaf 64, rank 32, exact far field, default admissibility).
-    /// Override fields with struct-update syntax for variants — e.g.
-    /// `concurrent_solve.rs` restores the default sampled far field.
-    pub fn fixed(n: usize, seed: u64) -> Case {
-        Case {
-            seed,
-            n,
-            leaf_size: 64,
-            max_rank: 32,
-            eta: H2Config::default().eta,
-            far_samples: 0,
-            rhs_count: 1,
-        }
-    }
-
-    pub fn config(&self) -> H2Config {
-        H2Config {
-            leaf_size: self.leaf_size,
-            max_rank: self.max_rank,
-            eta: self.eta,
-            far_samples: self.far_samples,
-            ..Default::default()
-        }
-    }
-
-    pub fn geometry(&self) -> Geometry {
-        Geometry::sphere_surface(self.n, self.seed)
-    }
-
-    /// Construct the H² matrix for this case (Laplace kernel).
-    pub fn h2(&self) -> H2Matrix {
-        H2Matrix::construct(&self.geometry(), &KernelFn::laplace(), &self.config())
-    }
-
-    /// The `k`-th deterministic right-hand side of this case.
-    pub fn rhs(&self, k: u64) -> Vec<f64> {
-        rhs(self.n, self.seed.wrapping_mul(1000).wrapping_add(k))
-    }
-
-    /// All `rhs_count` right-hand sides.
-    pub fn rhs_set(&self) -> Vec<Vec<f64>> {
-        (0..self.rhs_count as u64).map(|k| self.rhs(k)).collect()
-    }
-
-    /// Build a facade session on `spec` (residual sampling off — these
-    /// are determinism/parity tests, not accuracy tests).
-    pub fn solver(&self, spec: BackendSpec) -> H2Solver {
-        H2SolverBuilder::new(self.geometry(), KernelFn::laplace())
-            .config(self.config())
-            .backend(spec)
-            .residual_samples(0)
-            .build()
-            .unwrap_or_else(|e| panic!("failed to build solver for {self}: {e}"))
-    }
-}
-
-/// A deterministic normal right-hand side.
-pub fn rhs(n: usize, seed: u64) -> Vec<f64> {
-    let mut rng = Rng::new(seed);
-    (0..n).map(|_| rng.normal()).collect()
-}
-
-/// Seed sweep for the randomized harnesses: `0..H2_TEST_SEEDS` (default
-/// 8). CI's stress job sets `H2_TEST_SEEDS=16` to widen coverage.
-pub fn seeds() -> Vec<u64> {
-    let count = std::env::var("H2_TEST_SEEDS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(8);
-    (0..count as u64).collect()
-}
+pub use h2ulv::bench::cases::{rhs, sweep_seeds as seeds, Case, Distribution};
