@@ -234,6 +234,16 @@ pub trait DeviceArena: Send + Sync {
     fn peak_bytes(&self) -> usize {
         0
     }
+    /// Total bytes this arena pins, including allocator bookkeeping (slot
+    /// tables etc.) on top of the live payload — always ≥
+    /// [`bytes`](DeviceArena::bytes). This is what an *empty* arena still
+    /// costs: a workspace region whose vectors were all freed reports
+    /// payload 0 here but keeps its slot table, which is exactly the
+    /// memory [`WorkspacePool::shrink_to`] releases. Default: payload
+    /// only.
+    fn footprint_bytes(&self) -> usize {
+        self.bytes()
+    }
     /// Downcast support for concrete-device launch implementations.
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;
@@ -474,6 +484,12 @@ impl DeviceArena for HostArena {
 
     fn peak_bytes(&self) -> usize {
         self.peak_bytes
+    }
+
+    fn footprint_bytes(&self) -> usize {
+        // The slot table never shrinks (ids are stable addresses), so an
+        // emptied workspace region still pins capacity × slot size.
+        self.bytes + self.slots.capacity() * std::mem::size_of::<Slot>()
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -896,15 +912,25 @@ impl VecRegion {
     pub fn live(&self) -> usize {
         self.arena.live()
     }
+
+    /// Bytes this region pins on the device, including allocator
+    /// bookkeeping ([`DeviceArena::footprint_bytes`]). Idle regions hold
+    /// no payload (they are reset on release) but still pin their slot
+    /// tables — the memory [`WorkspacePool::shrink_to`] releases.
+    pub fn footprint_bytes(&self) -> usize {
+        self.arena.footprint_bytes()
+    }
 }
 
 /// A pool of [`VecRegion`]s shared by every solve entry point of one
 /// session: concurrent callers lease distinct regions and solve
 /// simultaneously against the session's shared factor region; sequential
 /// callers keep re-leasing the same warm region. The pool grows on demand
-/// (one region per concurrently in-flight solve) and never shrinks —
-/// a leased region always comes back, even when the solve panics
-/// ([`Workspace`] returns it on drop).
+/// (one region per concurrently in-flight solve) and never shrinks on its
+/// own — a leased region always comes back, even when the solve panics
+/// ([`Workspace`] returns it on drop). Long-lived owners (the serve-layer
+/// session cache) call [`shrink_to`](WorkspacePool::shrink_to) on idle/
+/// evict paths to release post-burst capacity.
 #[derive(Default)]
 pub struct WorkspacePool {
     idle: std::sync::Mutex<Vec<VecRegion>>,
@@ -937,10 +963,33 @@ impl WorkspacePool {
         self.idle.lock().unwrap().len()
     }
 
-    /// Total regions ever carved (the high-water mark of solve
-    /// concurrency this pool has served).
+    /// Regions the pool currently owns (leased + idle). Tracks the
+    /// high-water mark of solve concurrency until a
+    /// [`shrink_to`](WorkspacePool::shrink_to) drops idle regions.
     pub fn created(&self) -> usize {
         self.created.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Bytes currently pinned by the *idle* regions (leased regions are
+    /// accounted by their in-flight solves). Because idle regions are
+    /// payload-free, this is pure bookkeeping overhead — exactly what
+    /// [`shrink_to`](WorkspacePool::shrink_to) reclaims.
+    pub fn bytes(&self) -> usize {
+        self.idle.lock().unwrap().iter().map(VecRegion::footprint_bytes).sum()
+    }
+
+    /// Drop idle regions until at most `keep` remain idle, returning how
+    /// many were dropped. In-flight regions are untouched (they return to
+    /// the pool as usual), so this is safe to call concurrently with
+    /// solves: a post-burst server session calls `shrink_to(1)` to stop
+    /// pinning peak-concurrency workspace memory while staying warm for
+    /// the steady-state request rate.
+    pub fn shrink_to(&self, keep: usize) -> usize {
+        let mut idle = self.idle.lock().unwrap();
+        let dropped = idle.len().saturating_sub(keep);
+        idle.truncate(keep);
+        self.created.fetch_sub(dropped, std::sync::atomic::Ordering::Relaxed);
+        dropped
     }
 
     fn release(&self, mut region: VecRegion) {

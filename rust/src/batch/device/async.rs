@@ -633,6 +633,10 @@ impl DeviceArena for AsyncArena {
         self.sync(|a| a.peak_bytes())
     }
 
+    fn footprint_bytes(&self) -> usize {
+        self.sync(|a| a.footprint_bytes())
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }

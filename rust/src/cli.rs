@@ -12,12 +12,15 @@
 //!                 [--out PATH|-] [--compare FILE] [--threshold X]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
 //! h2ulv figures   [--full] [--out DIR]
+//! h2ulv serve     [--tcp HOST:PORT] [--budget-bytes B] [--max-sessions S]
+//!                 [--batch-window-ms W] [--threads T] [--timeout-ms D]
+//! h2ulv serve-client --addr HOST:PORT [--shutdown]
 //! h2ulv info
 //! ```
 
 use crate::construct::H2Config;
 use crate::figures::{self, Scale};
-use crate::geometry::{molecule, Geometry};
+use crate::geometry::Geometry;
 use crate::kernels::KernelFn;
 use crate::solver::{BackendSpec, FactorStorage, H2Error, H2SolverBuilder};
 use crate::ulv::SubstMode;
@@ -76,7 +79,8 @@ USAGE:
                 (device-only keeps the factor resident on the device with
                  no host mirror — half the factor memory; mirrored is the
                  default)
-                [--subst parallel|naive] [--ranks P] [--seed S]
+                [--subst parallel|naive] [--ranks P] [--seed S] [--threads T]
+                (--threads caps the solve_many worker fan-out; 0 = all cores)
   h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
                 [--eta E] [--seed S] [--lint] [--exec BACKEND]
                 (record the execution plan only; print per-level launch
@@ -110,6 +114,21 @@ USAGE:
                  (default 0 = report-only); exit 1 on any regression)
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
+  h2ulv serve   [--tcp HOST:PORT] [--budget-bytes B] [--max-sessions S]
+                [--batch-window-ms W] [--threads T] [--timeout-ms D]
+                (multi-tenant solve service: line-oriented JSON requests
+                 over stdin/stdout, or a TCP accept loop with --tcp.
+                 Same-config builds share one cached, factorized session
+                 (LRU-evicted under the resident-byte budget B); queued
+                 single-RHS solves are coalesced into one solve_many
+                 within the W-millisecond batching window; T bounds the
+                 global solve-worker fan-out (0 = all cores); D is the
+                 default per-request timeout (0 = none))
+  h2ulv serve-client --addr HOST:PORT [--shutdown]
+                (scripted smoke client for a running serve --tcp: two
+                 tenants, mixed solve/solve_many traffic, asserts
+                 cache sharing, micro-batch coalescing, and bit-identical
+                 batched-vs-direct solutions; --shutdown stops the server)
   h2ulv info
 ";
 
@@ -128,6 +147,8 @@ pub fn run(argv: Vec<String>) -> i32 {
         "bench" => cmd_bench(&args),
         "figure" => cmd_figure(&args),
         "figures" => cmd_figures(&args),
+        "serve" => cmd_serve(&args),
+        "serve-client" => cmd_serve_client(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!("unknown command: {cmd}\n{USAGE}");
@@ -137,15 +158,9 @@ pub fn run(argv: Vec<String>) -> i32 {
 }
 
 fn make_geometry(name: &str, n: usize, seed: u64) -> Geometry {
-    match name {
-        "cube" => Geometry::uniform_cube(n, seed),
-        "molecule" => {
-            let base = molecule::hemoglobin_like(0.15, seed);
-            let copies = n / base.len() + 1;
-            base.duplicate_lattice(copies, 6.0).truncated(n)
-        }
-        _ => Geometry::sphere_surface(n, seed),
-    }
+    // Unknown names fall back to the sphere (the serve protocol rejects
+    // them instead — see `BuildParams::build_solver`).
+    Geometry::by_name(name, n, seed).unwrap_or_else(|| Geometry::sphere_surface(n, seed))
 }
 
 /// Problem setup shared by `solve` and `plan-dump`: same flags, same
@@ -209,7 +224,8 @@ fn cmd_solve(args: &Args) -> i32 {
         .backend(spec)
         .subst_mode(subst)
         .factor_storage(storage)
-        .residual_samples(128);
+        .residual_samples(128)
+        .max_solve_threads(args.usize_or("threads", 0));
     // PJRT artifacts missing is a soft failure on the CLI: warn + native.
     let solver = match builder.clone().build() {
         Ok(s) => s,
@@ -284,6 +300,75 @@ fn cmd_solve(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("h2ulv solve: {e}");
+            1
+        }
+    }
+}
+
+/// Run the multi-tenant solve service: line-oriented JSON over
+/// stdin/stdout by default, or a TCP accept loop with `--tcp HOST:PORT`
+/// (`:0` picks a free port; the chosen address is printed as
+/// `listening on ADDR` so scripted clients can connect).
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = crate::serve::ServeConfig {
+        budget_bytes: args.usize_or("budget-bytes", 256 << 20),
+        max_sessions: args.usize_or("max-sessions", 8),
+        batch_window_ms: args.usize_or("batch-window-ms", 2) as u64,
+        worker_budget: args.usize_or("threads", 0),
+        timeout_ms: args.usize_or("timeout-ms", 0) as u64,
+        idle_keep_workspaces: args.usize_or("idle-workspaces", 1),
+    };
+    let service = crate::serve::Service::new(cfg);
+    match args.get("tcp") {
+        Some(addr) => {
+            let listener = match service.bind_tcp(addr) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("h2ulv serve: cannot bind {addr}: {e}");
+                    return 1;
+                }
+            };
+            let bound = service.bound_addr().expect("bind_tcp records the address");
+            println!("h2ulv serve: listening on {bound}");
+            match service.serve_tcp(listener) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("h2ulv serve: {e}");
+                    1
+                }
+            }
+        }
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            match service.serve_stream(stdin.lock(), stdout.lock()) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("h2ulv serve: {e}");
+                    1
+                }
+            }
+        }
+    }
+}
+
+/// Drive the scripted smoke client against a running `serve --tcp`
+/// instance (see [`crate::serve::service::run_smoke_client`]): exit 0 only
+/// if cache sharing, micro-batch coalescing, and batched-vs-direct
+/// bit-identity all held.
+fn cmd_serve_client(args: &Args) -> i32 {
+    let Some(addr) = args.get("addr") else {
+        eprintln!("serve-client requires --addr HOST:PORT\n{USAGE}");
+        return 2;
+    };
+    let shutdown = args.get("shutdown").is_some();
+    match crate::serve::service::run_smoke_client(addr, shutdown) {
+        Ok(()) => {
+            println!("h2ulv serve-client: ok");
+            0
+        }
+        Err(e) => {
+            eprintln!("h2ulv serve-client: {e}");
             1
         }
     }

@@ -154,6 +154,25 @@ impl Geometry {
             name: format!("{}[..{n}]", self.name),
         }
     }
+
+    /// Build a named point distribution: `sphere`, `cube`, or `molecule`
+    /// (a hemoglobin-like cloud duplicated on a lattice and truncated to
+    /// `n`, the paper's weak-scaling construction). `None` for unknown
+    /// names — the shared constructor behind the CLI `--geometry` flag and
+    /// the serve protocol's `build` request, so both surfaces describe the
+    /// exact same problems.
+    pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Geometry> {
+        match name {
+            "sphere" => Some(Geometry::sphere_surface(n, seed)),
+            "cube" => Some(Geometry::uniform_cube(n, seed)),
+            "molecule" => {
+                let base = crate::geometry::molecule::hemoglobin_like(0.15, seed);
+                let copies = n / base.len() + 1;
+                Some(base.duplicate_lattice(copies, 6.0).truncated(n))
+            }
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -28,7 +28,10 @@
 //! * the end-to-end session facade — builder-configured, `Result`-based,
 //!   backend-pluggable ([`solver`]). **Start here**: the layered modules
 //!   stay public for benchmarks, but [`solver::H2SolverBuilder`] /
-//!   [`solver::H2Solver`] are the intended entry point.
+//!   [`solver::H2Solver`] are the intended entry point,
+//! * a multi-tenant solve service over the facade — line-oriented JSON
+//!   protocol, plan-keyed session cache with LRU byte-budget eviction,
+//!   admission control, and request micro-batching ([`serve`]).
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
@@ -45,6 +48,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod plan;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod tree;
 pub mod ulv;

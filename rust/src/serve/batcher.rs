@@ -1,0 +1,282 @@
+//! Admission control and the request micro-batcher.
+//!
+//! **Admission** bounds the service's total solve-worker fan-out: each
+//! request asks for the workers it could use (its RHS count) and receives
+//! a grant clamped to what is left of the global budget — never less than
+//! 1, so admission can throttle but not deadlock. The grant is passed to
+//! [`SolveOptions::max_threads`](crate::solver::SolveOptions), capping the
+//! `solve_many` atomic-cursor fan-out, and is released when the request's
+//! [`Permit`] drops.
+//!
+//! **Micro-batching** closes the gap between the protocol's natural
+//! request unit (one RHS per `solve` line) and the engine's efficient unit
+//! (a wide [`solve_many`](crate::solver::H2Solver::solve_many) fan-out):
+//! single-RHS requests against the same session queue briefly; the first
+//! arrival becomes the *leader* and, after a configurable window, drains
+//! the queue into one `solve_many` call. Coalescing changes scheduling
+//! only — `solve_many` replays each RHS through the exact same
+//! substitution path as a lone `solve`, so batched solutions are
+//! bit-identical to unbatched ones (the property the serve tests pin).
+
+use super::cache::SessionEntry;
+use super::protocol::ServeError;
+use crate::solver::{SolveOptions, SolveReport};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Global solve-worker budget with per-request grants.
+pub struct Admission {
+    budget: usize,
+    in_flight: AtomicUsize,
+    throttled: AtomicUsize,
+}
+
+impl Admission {
+    /// `budget` is the total worker count the service may have solving at
+    /// once (0 is clamped to 1).
+    pub fn new(budget: usize) -> Admission {
+        Admission {
+            budget: budget.max(1),
+            in_flight: AtomicUsize::new(0),
+            throttled: AtomicUsize::new(0),
+        }
+    }
+
+    /// Grant up to `want` workers from what is left of the budget. The
+    /// grant is always at least 1 — an oversubscribed service degrades to
+    /// sequential solves instead of rejecting or deadlocking — so the
+    /// budget is a soft bound: `in_flight` can exceed it by at most one
+    /// worker per concurrently admitted request.
+    pub fn admit(self: &Arc<Self>, want: usize) -> Permit {
+        let want = want.max(1);
+        let mut cur = self.in_flight.load(Ordering::Acquire);
+        loop {
+            let grant = want.min(self.budget.saturating_sub(cur).max(1));
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + grant,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if grant < want {
+                        self.throttled.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Permit { adm: Arc::clone(self), granted: grant };
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Workers currently granted to in-flight requests.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// The configured budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Requests that received fewer workers than they asked for.
+    pub fn throttled(&self) -> usize {
+        self.throttled.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII worker grant — returns its workers to the budget on drop (panic
+/// included, so a failed solve can't leak budget).
+pub struct Permit {
+    adm: Arc<Admission>,
+    granted: usize,
+}
+
+impl Permit {
+    /// Workers this request may use.
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.adm.in_flight.fetch_sub(self.granted, Ordering::AcqRel);
+    }
+}
+
+/// Service-wide micro-batching counters (surfaced in `stats` responses and
+/// per-response reports).
+#[derive(Default)]
+pub struct BatchCounters {
+    /// `solve_many` dispatches issued by the batcher.
+    pub dispatches: AtomicUsize,
+    /// Dispatches that coalesced ≥ 2 queued requests.
+    pub coalesced_batches: AtomicUsize,
+    /// Requests that rode in a coalesced (≥ 2) batch.
+    pub coalesced_requests: AtomicUsize,
+    /// All requests that went through the batcher.
+    pub batched_requests: AtomicUsize,
+    /// Largest batch dispatched so far.
+    pub max_batch: AtomicUsize,
+    /// Summed queue wait across batched requests, in microseconds.
+    pub waited_us: AtomicU64,
+}
+
+impl BatchCounters {
+    fn record(&self, size: usize, waited_us: u64) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size, Ordering::Relaxed);
+        if size >= 2 {
+            self.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+            self.coalesced_requests.fetch_add(size, Ordering::Relaxed);
+        }
+        self.max_batch.fetch_max(size, Ordering::Relaxed);
+        self.waited_us.fetch_add(waited_us, Ordering::Relaxed);
+    }
+
+    /// Mean queue wait per batched request, in microseconds.
+    pub fn avg_wait_us(&self) -> u64 {
+        let n = self.batched_requests.load(Ordering::Relaxed) as u64;
+        if n == 0 {
+            0
+        } else {
+            self.waited_us.load(Ordering::Relaxed) / n
+        }
+    }
+}
+
+/// What a batched request gets back: its own per-RHS report plus how the
+/// batch treated it.
+pub struct BatchOutcome {
+    pub report: SolveReport,
+    /// Requests coalesced into the dispatch this one rode in (1 = alone).
+    pub batch_size: usize,
+    /// This request's queue wait, in microseconds.
+    pub wait_us: u64,
+}
+
+struct Pending {
+    b: Vec<f64>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<BatchOutcome, ServeError>>,
+}
+
+/// Per-session queue of single-RHS requests awaiting coalescing.
+#[derive(Default)]
+pub struct SessionQueue {
+    pending: Mutex<Vec<Pending>>,
+}
+
+/// Enqueue one RHS against `entry`'s session and return the channel its
+/// result will arrive on. The caller is expected to `recv` (or
+/// `recv_timeout`, for deadlines — a timed-out receiver just drops, and
+/// the leader's send to it fails harmlessly).
+///
+/// The first request to find the queue empty is the leader: it spawns a
+/// dispatch thread that sleeps for `window`, drains everything queued by
+/// then, admits the batch, and runs one
+/// [`solve_many_opts`](crate::solver::H2Solver::solve_many_opts) capped at
+/// the admission grant. RHS dimensions must be validated against the
+/// session *before* submission — the whole batch shares one fate, so a
+/// malformed member would otherwise fail its neighbors.
+pub fn submit(
+    entry: &Arc<SessionEntry>,
+    b: Vec<f64>,
+    window: Duration,
+    admission: &Arc<Admission>,
+    counters: &Arc<BatchCounters>,
+) -> mpsc::Receiver<Result<BatchOutcome, ServeError>> {
+    let (tx, rx) = mpsc::channel();
+    let is_leader = {
+        let mut q = entry.queue.pending.lock().unwrap_or_else(|p| p.into_inner());
+        q.push(Pending { b, enqueued: Instant::now(), tx });
+        q.len() == 1
+    };
+    if is_leader {
+        let entry = Arc::clone(entry);
+        let admission = Arc::clone(admission);
+        let counters = Arc::clone(counters);
+        std::thread::spawn(move || {
+            std::thread::sleep(window);
+            dispatch(&entry, &admission, &counters);
+        });
+    }
+    rx
+}
+
+/// Drain the session queue and solve it as one batch (the leader thread's
+/// body).
+fn dispatch(entry: &Arc<SessionEntry>, admission: &Arc<Admission>, counters: &BatchCounters) {
+    let pendings = std::mem::take(
+        &mut *entry.queue.pending.lock().unwrap_or_else(|p| p.into_inner()),
+    );
+    if pendings.is_empty() {
+        return;
+    }
+    let size = pendings.len();
+    let permit = admission.admit(size);
+    let opts = SolveOptions { max_threads: Some(permit.granted()), ..Default::default() };
+    let rhs: Vec<Vec<f64>> = pendings.iter().map(|p| p.b.clone()).collect();
+    let solved = entry.solver.solve_many_opts(&rhs, &opts);
+    let done = Instant::now();
+    let waited: u64 = pendings
+        .iter()
+        .map(|p| done.duration_since(p.enqueued).as_micros() as u64)
+        .sum();
+    counters.record(size, waited);
+    match solved {
+        Ok(reports) => {
+            for (p, report) in pendings.into_iter().zip(reports) {
+                let wait_us = done.duration_since(p.enqueued).as_micros() as u64;
+                // A send can only fail when the requester gave up
+                // (timeout); its solution is discarded.
+                let _ = p.tx.send(Ok(BatchOutcome { report, batch_size: size, wait_us }));
+            }
+        }
+        Err(e) => {
+            let se = ServeError::from_h2(&e);
+            for p in pendings {
+                let _ = p.tx.send(Err(se.clone()));
+            }
+        }
+    }
+    drop(permit);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_grants_clamp_to_the_remaining_budget() {
+        let adm = Arc::new(Admission::new(4));
+        let a = adm.admit(3);
+        assert_eq!(a.granted(), 3);
+        let b = adm.admit(3);
+        assert_eq!(b.granted(), 1, "only 1 of 4 workers left");
+        assert_eq!(adm.throttled(), 1);
+        // Budget exhausted: the floor grant keeps requests moving.
+        let c = adm.admit(2);
+        assert_eq!(c.granted(), 1);
+        assert_eq!(adm.in_flight(), 5, "soft bound: one floor-grant over budget");
+        drop(a);
+        drop(b);
+        drop(c);
+        assert_eq!(adm.in_flight(), 0, "permits return their workers on drop");
+    }
+
+    #[test]
+    fn counters_track_coalescing() {
+        let c = BatchCounters::default();
+        c.record(1, 10);
+        c.record(3, 300);
+        assert_eq!(c.dispatches.load(Ordering::Relaxed), 2);
+        assert_eq!(c.coalesced_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(c.coalesced_requests.load(Ordering::Relaxed), 3);
+        assert_eq!(c.batched_requests.load(Ordering::Relaxed), 4);
+        assert_eq!(c.max_batch.load(Ordering::Relaxed), 3);
+        assert_eq!(c.avg_wait_us(), 77);
+    }
+}

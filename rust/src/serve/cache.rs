@@ -1,0 +1,301 @@
+//! Plan-keyed session cache with LRU eviction under a byte budget.
+//!
+//! Sessions are keyed by the build-config hash
+//! ([`BuildParams::cfg_hash`]): two tenants issuing identical `build`
+//! requests resolve to one cached [`H2Solver`] — one H² construction, one
+//! plan recording, one factorization ([`H2Solver::plan_recordings`] stays
+//! at 1, the acceptance assertion). Each entry also records the hash of
+//! its structural [`PlanSig`](crate::plan::PlanSig), so `stats` can show
+//! when distinct configs happen to share a structure (a future
+//! cross-config plan-sharing hook; today the cfg hash is the key because
+//! kernel *values*, not just structure, must match for a factor to be
+//! reusable).
+//!
+//! Eviction is LRU under two bounds: a resident-byte budget (summing
+//! [`H2Solver::resident_bytes`], i.e. `DeviceArena::bytes()` of each
+//! session's factor region) and a session-count cap. Eviction removes the
+//! entry from the cache but the `Arc` keeps in-flight solves alive; the
+//! factor memory is released when the last request on it finishes.
+
+use super::batcher::SessionQueue;
+use super::protocol::{fnv1a, BuildParams, ServeError};
+use crate::solver::H2Solver;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One cached, factorized session.
+pub struct SessionEntry {
+    /// Protocol-visible session id.
+    pub id: u64,
+    /// Hash of the canonical build parameters (the cache key).
+    pub cfg_hash: u64,
+    /// Hash of the recorded plan's structural signature.
+    pub sig_hash: u64,
+    /// The shared solver: `&self` solves are concurrent, so any number of
+    /// tenants use it simultaneously.
+    pub solver: H2Solver,
+    /// This session's micro-batching queue.
+    pub queue: SessionQueue,
+    /// Requests served from cache (build hits + solves).
+    pub hits: AtomicUsize,
+    /// LRU clock value at last use (monotonic counter, not wall time —
+    /// ordering is all eviction needs).
+    last_used: AtomicU64,
+}
+
+/// Cache counters for `stats` responses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheStats {
+    pub sessions: usize,
+    pub resident_bytes: usize,
+    pub budget_bytes: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+}
+
+impl CacheStats {
+    /// Fraction of `build` requests served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Inner {
+    entries: Vec<Arc<SessionEntry>>,
+    next_id: u64,
+    clock: u64,
+}
+
+/// The multi-tenant session cache (see the module docs).
+pub struct SessionCache {
+    inner: Mutex<Inner>,
+    budget_bytes: usize,
+    max_sessions: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl SessionCache {
+    /// `budget_bytes` bounds the summed resident factor bytes;
+    /// `max_sessions` bounds the entry count (clamped to ≥ 1: the cache
+    /// never evicts its only session mid-build, even over budget —
+    /// rejecting all work would be worse than exceeding the budget by one
+    /// tenant).
+    pub fn new(budget_bytes: usize, max_sessions: usize) -> SessionCache {
+        SessionCache {
+            inner: Mutex::new(Inner { entries: Vec::new(), next_id: 1, clock: 0 }),
+            budget_bytes,
+            max_sessions: max_sessions.max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    /// Resolve `params` to a session: a cache hit returns the existing
+    /// entry (no construction, no planning, no factorization); a miss runs
+    /// the full build *outside* the cache lock (other tenants keep
+    /// hitting), inserts, and LRU-evicts down to the budget. Returns the
+    /// entry and whether it was a hit.
+    pub fn get_or_build(
+        &self,
+        params: &BuildParams,
+    ) -> Result<(Arc<SessionEntry>, bool), ServeError> {
+        let cfg_hash = params.cfg_hash();
+        if let Some(entry) = self.lookup_cfg(cfg_hash) {
+            return Ok((entry, true));
+        }
+        let solver = params.build_solver()?;
+        let sig_hash = fnv1a(format!("{:?}", solver.plan().sig).as_bytes());
+        let mut inner = self.lock();
+        // Re-check under the lock: a racing tenant may have inserted the
+        // same config while we were building. The existing entry wins (the
+        // freshly built solver is dropped) so both tenants share one
+        // factor.
+        if let Some(entry) = find_cfg(&inner, cfg_hash) {
+            touch(&mut inner, &entry);
+            entry.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((entry, true));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let entry = Arc::new(SessionEntry {
+            id,
+            cfg_hash,
+            sig_hash,
+            solver,
+            queue: SessionQueue::default(),
+            hits: AtomicUsize::new(0),
+            last_used: AtomicU64::new(0),
+        });
+        touch(&mut inner, &entry);
+        inner.entries.push(Arc::clone(&entry));
+        self.evict_over_budget(&mut inner);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((entry, false))
+    }
+
+    /// Look up a resident session by protocol id, refreshing its LRU
+    /// position.
+    pub fn get(&self, id: u64) -> Option<Arc<SessionEntry>> {
+        let mut inner = self.lock();
+        let entry = inner.entries.iter().find(|e| e.id == id).cloned()?;
+        touch(&mut inner, &entry);
+        entry.hits.fetch_add(1, Ordering::Relaxed);
+        Some(entry)
+    }
+
+    /// Explicitly evict a session. Returns whether it was resident.
+    /// In-flight solves on the entry finish normally (the `Arc` keeps the
+    /// factor alive); its idle workspaces are released immediately.
+    pub fn evict(&self, id: u64) -> bool {
+        let removed = {
+            let mut inner = self.lock();
+            match inner.entries.iter().position(|e| e.id == id) {
+                Some(pos) => Some(inner.entries.swap_remove(pos)),
+                None => None,
+            }
+        };
+        match removed {
+            Some(entry) => {
+                entry.solver.trim_workspaces(0);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Snapshot of the resident entries (stats listing).
+    pub fn entries(&self) -> Vec<Arc<SessionEntry>> {
+        self.lock().entries.clone()
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        CacheStats {
+            sessions: inner.entries.len(),
+            resident_bytes: inner.entries.iter().map(|e| e.solver.resident_bytes()).sum(),
+            budget_bytes: self.budget_bytes,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lookup_cfg(&self, cfg_hash: u64) -> Option<Arc<SessionEntry>> {
+        let mut inner = self.lock();
+        let entry = find_cfg(&inner, cfg_hash)?;
+        touch(&mut inner, &entry);
+        entry.hits.fetch_add(1, Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(entry)
+    }
+
+    /// LRU-evict until both bounds hold (the most recently used entry is
+    /// always kept, so the bound is soft by at most one session).
+    fn evict_over_budget(&self, inner: &mut Inner) {
+        loop {
+            let over_count = inner.entries.len() > self.max_sessions;
+            let over_bytes = inner.entries.len() > 1
+                && inner.entries.iter().map(|e| e.solver.resident_bytes()).sum::<usize>()
+                    > self.budget_bytes;
+            if !over_count && !over_bytes {
+                return;
+            }
+            let lru = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .expect("eviction loop only runs with entries present");
+            let entry = inner.entries.swap_remove(lru);
+            entry.solver.trim_workspaces(0);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn find_cfg(inner: &Inner, cfg_hash: u64) -> Option<Arc<SessionEntry>> {
+    inner.entries.iter().find(|e| e.cfg_hash == cfg_hash).cloned()
+}
+
+fn touch(inner: &mut Inner, entry: &Arc<SessionEntry>) {
+    inner.clock += 1;
+    entry.last_used.store(inner.clock, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params(n: usize) -> BuildParams {
+        BuildParams {
+            n,
+            leaf_size: 32,
+            max_rank: 16,
+            far_samples: 32,
+            near_samples: 32,
+            residual_samples: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn identical_builds_share_one_session() {
+        let cache = SessionCache::new(usize::MAX, 8);
+        let (a, hit_a) = cache.get_or_build(&tiny_params(96)).unwrap();
+        let (b, hit_b) = cache.get_or_build(&tiny_params(96)).unwrap();
+        assert!(!hit_a);
+        assert!(hit_b, "second identical build must be served from cache");
+        assert_eq!(a.id, b.id);
+        assert!(Arc::ptr_eq(&a, &b), "both tenants hold the same entry");
+        assert_eq!(a.solver.plan_recordings(), 1, "no re-planning on the shared session");
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.sessions), (1, 1, 1));
+        assert!(stats.hit_rate() > 0.49 && stats.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn lru_eviction_under_a_tiny_byte_budget() {
+        // Budget of 1 byte: every insertion after the first pushes the
+        // least-recently-used session out.
+        let cache = SessionCache::new(1, 8);
+        let (a, _) = cache.get_or_build(&tiny_params(64)).unwrap();
+        assert!(a.solver.resident_bytes() > 1, "a real factor always exceeds 1 B");
+        let (_b, _) = cache.get_or_build(&tiny_params(96)).unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.sessions, 1, "over-budget cache keeps only the newest session");
+        assert_eq!(stats.evictions, 1);
+        assert!(cache.get(a.id).is_none(), "evicted id no longer resolves");
+    }
+
+    #[test]
+    fn explicit_evict_and_session_cap() {
+        let cache = SessionCache::new(usize::MAX, 2);
+        let (a, _) = cache.get_or_build(&tiny_params(64)).unwrap();
+        let (_b, _) = cache.get_or_build(&tiny_params(96)).unwrap();
+        // Touch `a` so the cap evicts the other session.
+        assert!(cache.get(a.id).is_some());
+        let (_c, _) = cache.get_or_build(&tiny_params(128)).unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.sessions, 2, "session cap holds");
+        assert!(cache.get(a.id).is_some(), "recently used session survived");
+        assert!(cache.evict(a.id));
+        assert!(!cache.evict(a.id), "double evict reports non-resident");
+    }
+}

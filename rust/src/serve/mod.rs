@@ -1,0 +1,40 @@
+//! Multi-tenant solve service over the [`crate::solver`] facade.
+//!
+//! Everything below the facade is built for reuse — the plan is recorded
+//! once per structure ([`crate::solver::H2Solver::plan_recordings`]), the
+//! factor stays device-resident, and `&self` solves fan out across a
+//! workspace pool — but the CLI drives it one-shot. This subsystem turns a
+//! session into a long-lived server:
+//!
+//! * [`protocol`] — a line-oriented JSON protocol (one request document
+//!   per line, one response document per line) built on
+//!   [`crate::util::json::Json`]; no serde, no framing beyond `\n`.
+//! * [`cache`] — a [`SessionCache`](cache::SessionCache) keyed by the
+//!   build-config hash (and recording the structural
+//!   [`PlanSig`](crate::plan::PlanSig) hash), with LRU eviction under a
+//!   resident-byte budget: same-structure builds from different tenants
+//!   share one factorized session and never re-plan.
+//! * [`batcher`] — admission control (a global worker budget with
+//!   per-request grants) and a micro-batcher that coalesces queued
+//!   single-RHS requests on one session into a single
+//!   [`solve_many`](crate::solver::H2Solver::solve_many) fan-out within a
+//!   configurable window.
+//! * [`service`] — the dispatch engine: [`Service`](service::Service)
+//!   turns request lines into response lines and runs the stdin/stdout
+//!   and [`std::net::TcpListener`] loops. A failed request degrades to a
+//!   typed error response ([`protocol::ServeError`], mapped from
+//!   [`crate::solver::H2Error`]); it never kills the loop.
+//!
+//! The CLI front end is `h2ulv serve` (and `serve-client`, the scripted
+//! smoke driver CI uses); see the README's "Solve service" section for the
+//! protocol grammar and a transcript.
+
+pub mod batcher;
+pub mod cache;
+pub mod protocol;
+pub mod service;
+
+pub use batcher::{Admission, BatchCounters};
+pub use cache::{CacheStats, SessionCache, SessionEntry};
+pub use protocol::{BuildParams, Request, ServeError};
+pub use service::{Service, ServeConfig};

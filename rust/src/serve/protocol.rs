@@ -1,0 +1,502 @@
+//! Wire protocol of the solve service.
+//!
+//! One JSON document per line in both directions. Requests carry an `"op"`
+//! discriminator; responses always carry `"ok"`. A failed request produces
+//! `{"ok":false,"error":{"kind":...,"message":...}}` — the error is typed
+//! by `kind` so scripted clients can branch without parsing prose, and the
+//! taxonomy extends [`H2Error`]'s (every facade error maps to a kind via
+//! [`ServeError::from_h2`]).
+//!
+//! # Grammar (informal)
+//!
+//! ```text
+//! request  := build | solve | solve_many | evict | stats | shutdown
+//! build    := {"op":"build", "n":4096?, "seed":42?, "geometry":"sphere"?,
+//!              "kernel":"laplace"?, "leaf_size":64?, "max_rank":32?,
+//!              "eta":1.0?, "rtol":0.0?, "far_samples":128?,
+//!              "near_samples":96?, "backend":"native"?,
+//!              "storage":"mirrored"?, "subst":"parallel"?,
+//!              "residual_samples":32?, "threads":0?}
+//! solve    := {"op":"solve", "session":ID, "b":[f64; n],
+//!              "timeout_ms":T?, "batch":true?, "residual":bool?,
+//!              "threads":N?}
+//! solve_many := {"op":"solve_many", "session":ID, "rhs":[[f64; n], ...],
+//!              "timeout_ms":T?, "residual":bool?, "threads":N?}
+//! evict    := {"op":"evict", "session":ID}
+//! stats    := {"op":"stats"}
+//! shutdown := {"op":"shutdown"}
+//! ```
+//!
+//! `?` marks optional fields with the shown defaults. `build` responds
+//! with a session id; identical build parameters from any client resolve
+//! to the same cached session (`"cache_hit":true`).
+
+use crate::construct::H2Config;
+use crate::geometry::Geometry;
+use crate::kernels::KernelFn;
+use crate::solver::{BackendSpec, FactorStorage, H2Error, H2Solver, H2SolverBuilder};
+use crate::ulv::SubstMode;
+use crate::util::json::Json;
+
+/// A typed protocol-level error: `kind` is a stable machine-readable
+/// discriminator, `message` is prose. Conversion from [`H2Error`] keeps
+/// the facade taxonomy visible on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeError {
+    pub kind: &'static str,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(kind: &'static str, message: impl Into<String>) -> ServeError {
+        ServeError { kind, message: message.into() }
+    }
+
+    /// The request line was not valid JSON.
+    pub fn parse(msg: impl Into<String>) -> ServeError {
+        ServeError::new("parse_error", msg)
+    }
+
+    /// The request was well-formed JSON but semantically invalid.
+    pub fn bad_request(msg: impl Into<String>) -> ServeError {
+        ServeError::new("bad_request", msg)
+    }
+
+    /// `"op"` missing or not one of the protocol's operations.
+    pub fn unknown_op(op: &str) -> ServeError {
+        ServeError::new("unknown_op", format!("unknown op '{op}'"))
+    }
+
+    /// The referenced session id is not resident (never built or evicted).
+    pub fn unknown_session(id: u64) -> ServeError {
+        ServeError::new(
+            "unknown_session",
+            format!("session {id} is not resident (never built, or evicted)"),
+        )
+    }
+
+    /// The request exceeded its deadline; the solve may still complete in
+    /// the background, but its result is discarded.
+    pub fn timeout(ms: u64) -> ServeError {
+        ServeError::new("timeout", format!("request exceeded its {ms} ms deadline"))
+    }
+
+    /// The service is draining after a `shutdown` request.
+    pub fn shutting_down() -> ServeError {
+        ServeError::new("shutting_down", "service is shutting down")
+    }
+
+    /// Map a facade error onto the wire taxonomy.
+    pub fn from_h2(err: &H2Error) -> ServeError {
+        let kind = match err {
+            H2Error::EmptyGeometry => "empty_geometry",
+            H2Error::ProblemTooSmall { .. } => "problem_too_small",
+            H2Error::InvalidConfig(_) => "invalid_config",
+            H2Error::DimensionMismatch { .. } => "dimension_mismatch",
+            H2Error::BackendUnavailable { .. } => "backend_unavailable",
+            H2Error::NotPositiveDefinite { .. } => "not_positive_definite",
+            H2Error::ConvergenceFailure { .. } => "convergence_failure",
+            H2Error::PlanVerification(_) => "plan_verification",
+            H2Error::Internal { .. } => "internal",
+        };
+        ServeError::new(kind, err.to_string())
+    }
+
+    /// The `{"ok":false,...}` response document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(false)),
+            (
+                "error".to_string(),
+                Json::Obj(vec![
+                    ("kind".to_string(), Json::Str(self.kind.to_string())),
+                    ("message".to_string(), Json::Str(self.message.clone())),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Per-request solve options (the optional fields of `solve` /
+/// `solve_many`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReqOpts {
+    /// Deadline override in milliseconds. Absent → the service default;
+    /// `0` with a non-zero batch window deterministically times out (the
+    /// result cannot be ready before the window elapses).
+    pub timeout_ms: Option<u64>,
+    /// `false` opts a `solve` out of micro-batching (default `true`).
+    pub batch: bool,
+    /// Residual-sampling override (maps to
+    /// [`SolveOptions::sample_residual`](crate::solver::SolveOptions)).
+    pub residual: Option<bool>,
+    /// Worker-thread override for this request (capped by the admission
+    /// grant).
+    pub threads: Option<usize>,
+}
+
+impl ReqOpts {
+    fn from_json(v: &Json) -> Result<ReqOpts, ServeError> {
+        let timeout_ms = match v.get("timeout_ms") {
+            None => None,
+            Some(t) => Some(
+                t.as_u64().ok_or_else(|| {
+                    ServeError::bad_request("'timeout_ms' must be a non-negative integer")
+                })?,
+            ),
+        };
+        let batch = match v.get("batch") {
+            None => true,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| ServeError::bad_request("'batch' must be a boolean"))?,
+        };
+        let residual = match v.get("residual") {
+            None => None,
+            Some(r) => Some(
+                r.as_bool()
+                    .ok_or_else(|| ServeError::bad_request("'residual' must be a boolean"))?,
+            ),
+        };
+        let threads = match v.get("threads") {
+            None => None,
+            Some(t) => Some(t.as_usize().ok_or_else(|| {
+                ServeError::bad_request("'threads' must be a non-negative integer")
+            })?),
+        };
+        Ok(ReqOpts { timeout_ms, batch, residual, threads })
+    }
+
+    /// True when this request can ride in a coalesced batch: batching is
+    /// on and there are no per-request overrides that would force a
+    /// different [`SolveOptions`](crate::solver::SolveOptions) than the
+    /// batch's.
+    pub fn batchable(&self) -> bool {
+        self.batch && self.residual.is_none() && self.threads.is_none()
+    }
+}
+
+/// Build-request parameters, all defaulted (see the module grammar). The
+/// canonical field tuple is also the session-cache key material
+/// ([`BuildParams::cfg_hash`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BuildParams {
+    pub n: usize,
+    pub seed: u64,
+    pub geometry: String,
+    pub kernel: String,
+    pub leaf_size: usize,
+    pub max_rank: usize,
+    pub eta: f64,
+    pub rtol: f64,
+    pub far_samples: usize,
+    pub near_samples: usize,
+    pub backend: String,
+    pub storage: String,
+    pub subst: String,
+    pub residual_samples: usize,
+    /// Session-wide `solve_many` worker cap (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl Default for BuildParams {
+    fn default() -> BuildParams {
+        BuildParams {
+            n: 4096,
+            seed: 42,
+            geometry: "sphere".to_string(),
+            kernel: "laplace".to_string(),
+            leaf_size: 64,
+            max_rank: 32,
+            eta: 1.0,
+            rtol: 0.0,
+            far_samples: 128,
+            near_samples: 96,
+            backend: "native".to_string(),
+            storage: "mirrored".to_string(),
+            subst: "parallel".to_string(),
+            residual_samples: 32,
+            threads: 0,
+        }
+    }
+}
+
+impl BuildParams {
+    fn from_json(v: &Json) -> Result<BuildParams, ServeError> {
+        let mut p = BuildParams::default();
+        let usize_field = |key: &str, default: usize| -> Result<usize, ServeError> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    ServeError::bad_request(format!("'{key}' must be a non-negative integer"))
+                }),
+            }
+        };
+        let f64_field = |key: &str, default: f64| -> Result<f64, ServeError> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x
+                    .as_f64()
+                    .ok_or_else(|| ServeError::bad_request(format!("'{key}' must be a number"))),
+            }
+        };
+        let str_field = |key: &str, default: &str| -> Result<String, ServeError> {
+            match v.get(key) {
+                None => Ok(default.to_string()),
+                Some(x) => x
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| ServeError::bad_request(format!("'{key}' must be a string"))),
+            }
+        };
+        p.n = usize_field("n", p.n)?;
+        p.seed = match v.get("seed") {
+            None => p.seed,
+            Some(x) => x
+                .as_u64()
+                .ok_or_else(|| ServeError::bad_request("'seed' must be a non-negative integer"))?,
+        };
+        p.geometry = str_field("geometry", &p.geometry)?;
+        p.kernel = str_field("kernel", &p.kernel)?;
+        p.leaf_size = usize_field("leaf_size", p.leaf_size)?;
+        p.max_rank = usize_field("max_rank", p.max_rank)?;
+        p.eta = f64_field("eta", p.eta)?;
+        p.rtol = f64_field("rtol", p.rtol)?;
+        p.far_samples = usize_field("far_samples", p.far_samples)?;
+        p.near_samples = usize_field("near_samples", p.near_samples)?;
+        p.backend = str_field("backend", &p.backend)?;
+        p.storage = str_field("storage", &p.storage)?;
+        p.subst = str_field("subst", &p.subst)?;
+        p.residual_samples = usize_field("residual_samples", p.residual_samples)?;
+        p.threads = usize_field("threads", p.threads)?;
+        Ok(p)
+    }
+
+    /// FNV-1a over the canonical field tuple — the session-cache key. Two
+    /// requests with equal hashes describe the same problem, backend, and
+    /// solve policy, so they can share one factorized session.
+    pub fn cfg_hash(&self) -> u64 {
+        let canon = format!(
+            "{}|{}|{}|{}|{}|{}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}",
+            self.n,
+            self.seed,
+            self.geometry,
+            self.kernel,
+            self.leaf_size,
+            self.max_rank,
+            self.eta,
+            self.rtol,
+            self.far_samples,
+            self.near_samples,
+            self.backend,
+            self.storage,
+            self.subst,
+            self.residual_samples,
+            self.threads,
+        );
+        fnv1a(canon.as_bytes())
+    }
+
+    /// The [`H2Config`] these parameters describe.
+    pub fn to_config(&self) -> H2Config {
+        H2Config {
+            leaf_size: self.leaf_size,
+            max_rank: self.max_rank,
+            rtol: self.rtol,
+            eta: self.eta,
+            far_samples: self.far_samples,
+            near_samples: self.near_samples,
+            ..H2Config::default()
+        }
+    }
+
+    /// Resolve the named pieces and run the full build (construction +
+    /// plan recording + factorization). This is the cache-miss path.
+    pub fn build_solver(&self) -> Result<H2Solver, ServeError> {
+        let geometry = Geometry::by_name(&self.geometry, self.n, self.seed).ok_or_else(|| {
+            ServeError::bad_request(format!(
+                "unknown geometry '{}' (expected sphere, cube, or molecule)",
+                self.geometry
+            ))
+        })?;
+        let kernel = KernelFn::by_name(&self.kernel).ok_or_else(|| {
+            ServeError::bad_request(format!(
+                "unknown kernel '{}' (expected laplace, yukawa, gaussian, or matern32)",
+                self.kernel
+            ))
+        })?;
+        let backend = BackendSpec::by_name(&self.backend).ok_or_else(|| {
+            ServeError::bad_request(format!("unknown backend '{}'", self.backend))
+        })?;
+        let storage = FactorStorage::by_name(&self.storage).ok_or_else(|| {
+            ServeError::bad_request(format!(
+                "unknown storage '{}' (expected mirrored or device-only)",
+                self.storage
+            ))
+        })?;
+        let subst = match self.subst.as_str() {
+            "parallel" => SubstMode::Parallel,
+            "naive" => SubstMode::Naive,
+            other => {
+                return Err(ServeError::bad_request(format!(
+                    "unknown subst mode '{other}' (expected parallel or naive)"
+                )))
+            }
+        };
+        H2SolverBuilder::new(geometry, kernel)
+            .config(self.to_config())
+            .backend(backend)
+            .subst_mode(subst)
+            .factor_storage(storage)
+            .residual_samples(self.residual_samples)
+            .max_solve_threads(self.threads)
+            .build()
+            .map_err(|e| ServeError::from_h2(&e))
+    }
+}
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Build(BuildParams),
+    Solve { session: u64, b: Vec<f64>, opts: ReqOpts },
+    SolveMany { session: u64, rhs: Vec<Vec<f64>>, opts: ReqOpts },
+    Evict { session: u64 },
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line. Every failure is a typed [`ServeError`]
+    /// (`parse_error` / `bad_request` / `unknown_op`) so the service can
+    /// respond and keep serving.
+    pub fn parse(line: &str) -> Result<Request, ServeError> {
+        let v = Json::parse(line).map_err(|e| ServeError::parse(e.to_string()))?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ServeError::bad_request("request must carry a string 'op' field"))?;
+        match op {
+            "build" => Ok(Request::Build(BuildParams::from_json(&v)?)),
+            "solve" => {
+                let session = session_field(&v)?;
+                let b = vec_field(&v, "b")?;
+                Ok(Request::Solve { session, b, opts: ReqOpts::from_json(&v)? })
+            }
+            "solve_many" => {
+                let session = session_field(&v)?;
+                let rhs_json = v
+                    .get("rhs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ServeError::bad_request("'rhs' must be an array of arrays"))?;
+                let rhs = rhs_json
+                    .iter()
+                    .map(parse_f64_vec)
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|_| ServeError::bad_request("'rhs' must be an array of f64 arrays"))?;
+                Ok(Request::SolveMany { session, rhs, opts: ReqOpts::from_json(&v)? })
+            }
+            "evict" => Ok(Request::Evict { session: session_field(&v)? }),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ServeError::unknown_op(other)),
+        }
+    }
+}
+
+fn session_field(v: &Json) -> Result<u64, ServeError> {
+    v.get("session")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| ServeError::bad_request("request must carry a numeric 'session' id"))
+}
+
+fn vec_field(v: &Json, key: &str) -> Result<Vec<f64>, ServeError> {
+    let arr = v
+        .get(key)
+        .ok_or_else(|| ServeError::bad_request(format!("missing '{key}' array")))?;
+    parse_f64_vec(arr).map_err(|_| ServeError::bad_request(format!("'{key}' must be an f64 array")))
+}
+
+fn parse_f64_vec(v: &Json) -> Result<Vec<f64>, ()> {
+    let arr = v.as_arr().ok_or(())?;
+    arr.iter().map(|x| x.as_f64().ok_or(())).collect()
+}
+
+/// Serialize a vector for a response (`Json` numbers round-trip f64 values
+/// bit-exactly — shortest-round-trip `Display`, `str::parse` back — so a
+/// client reading the response recovers the solver's exact solution).
+pub fn vec_json(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// FNV-1a 64-bit (the repo vendors no hash crates; stability across runs
+/// matters more than collision strength for a handful of cached sessions).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_build_applies_defaults_and_overrides() {
+        let req = Request::parse(r#"{"op":"build","n":512,"max_rank":16}"#).unwrap();
+        match req {
+            Request::Build(p) => {
+                assert_eq!(p.n, 512);
+                assert_eq!(p.max_rank, 16);
+                assert_eq!(p.kernel, "laplace");
+                assert_eq!(p.leaf_size, 64);
+            }
+            other => panic!("expected build, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cfg_hash_distinguishes_structures() {
+        let a = BuildParams { n: 512, ..Default::default() };
+        let b = BuildParams { n: 1024, ..Default::default() };
+        assert_eq!(a.cfg_hash(), a.clone().cfg_hash());
+        assert_ne!(a.cfg_hash(), b.cfg_hash());
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        assert_eq!(Request::parse("not json").unwrap_err().kind, "parse_error");
+        assert_eq!(Request::parse(r#"{"op":"frobnicate"}"#).unwrap_err().kind, "unknown_op");
+        assert_eq!(Request::parse(r#"{"n":1}"#).unwrap_err().kind, "bad_request");
+        assert_eq!(
+            Request::parse(r#"{"op":"solve","session":1,"b":"nope"}"#).unwrap_err().kind,
+            "bad_request"
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"solve","b":[1.0]}"#).unwrap_err().kind,
+            "bad_request"
+        );
+    }
+
+    #[test]
+    fn h2_error_mapping_covers_the_taxonomy() {
+        let e = ServeError::from_h2(&H2Error::DimensionMismatch { expected: 4, got: 2 });
+        assert_eq!(e.kind, "dimension_mismatch");
+        assert!(e.message.contains('4'));
+        let e = ServeError::from_h2(&H2Error::EmptyGeometry);
+        assert_eq!(e.kind, "empty_geometry");
+    }
+
+    #[test]
+    fn response_vectors_round_trip_bit_exactly() {
+        let xs = vec![1.0 / 3.0, -2.718281828459045e-7, 0.1 + 0.2];
+        let line = vec_json(&xs).to_string_compact();
+        let back = Json::parse(&line).unwrap();
+        let ys: Vec<f64> =
+            back.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()).collect();
+        assert_eq!(xs, ys, "wire round-trip must preserve every bit");
+    }
+}

@@ -1,0 +1,696 @@
+//! The dispatch engine: request lines in, response lines out.
+//!
+//! [`Service::handle_line`] is the whole protocol — the stdin/stdout loop
+//! ([`Service::serve_stream`]) and the TCP loop ([`Service::serve_tcp`])
+//! are thin transports over it, in the lean command-parse/dispatch
+//! engine-loop idiom. Every failure path produces a typed error *response*
+//! on the same line; nothing a client sends can kill the loop.
+
+use super::batcher::{self, Admission, BatchCounters};
+use super::cache::{SessionCache, SessionEntry};
+use super::protocol::{vec_json, ReqOpts, Request, ServeError};
+use crate::solver::{H2Error, SolveOptions};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Service-level knobs (the CLI `serve` flags map onto these).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Resident-byte budget for the session cache (LRU evicts above it).
+    pub budget_bytes: usize,
+    /// Session-count cap for the cache.
+    pub max_sessions: usize,
+    /// Micro-batching window: single-RHS `solve` requests against one
+    /// session queue this long so concurrent arrivals coalesce into one
+    /// `solve_many`. 0 disables batching (every solve dispatches alone).
+    pub batch_window_ms: u64,
+    /// Global solve-worker budget for admission control; 0 = the
+    /// machine's available parallelism.
+    pub worker_budget: usize,
+    /// Default per-request deadline in milliseconds; 0 = no deadline.
+    /// Requests override it with `timeout_ms`.
+    pub timeout_ms: u64,
+    /// Idle workspace regions to keep per session when the service goes
+    /// quiet (the rest are released via
+    /// [`trim_workspaces`](crate::solver::H2Solver::trim_workspaces)).
+    pub idle_keep_workspaces: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            budget_bytes: 256 << 20,
+            max_sessions: 8,
+            batch_window_ms: 2,
+            worker_budget: 0,
+            timeout_ms: 0,
+            idle_keep_workspaces: 1,
+        }
+    }
+}
+
+/// The multi-tenant solve service (see the module docs).
+pub struct Service {
+    cfg: ServeConfig,
+    cache: SessionCache,
+    admission: Arc<Admission>,
+    counters: Arc<BatchCounters>,
+    requests: AtomicUsize,
+    errors: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Bound TCP address, if serving TCP — the shutdown path self-connects
+    /// to it so the blocking `accept` loop observes the flag.
+    bound: Mutex<Option<SocketAddr>>,
+}
+
+impl Service {
+    pub fn new(cfg: ServeConfig) -> Arc<Service> {
+        let budget = if cfg.worker_budget > 0 {
+            cfg.worker_budget
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        Arc::new(Service {
+            cache: SessionCache::new(cfg.budget_bytes, cfg.max_sessions),
+            admission: Arc::new(Admission::new(budget)),
+            counters: Arc::new(BatchCounters::default()),
+            requests: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            bound: Mutex::new(None),
+            cfg,
+        })
+    }
+
+    /// The session cache (tests assert plan-sharing and eviction on it).
+    pub fn cache(&self) -> &SessionCache {
+        &self.cache
+    }
+
+    /// The micro-batching counters.
+    pub fn counters(&self) -> &BatchCounters {
+        &self.counters
+    }
+
+    /// Whether a `shutdown` request has been accepted.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Process one request line into one response line (no trailing
+    /// newline). Never panics outward and never returns a non-JSON
+    /// string: every failure is an `{"ok":false,...}` document.
+    pub fn handle_line(&self, line: &str) -> String {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let result = if self.is_shutdown() {
+            Err(ServeError::shutting_down())
+        } else {
+            Request::parse(line).and_then(|req| self.dispatch(req))
+        };
+        match result {
+            Ok(resp) => resp.to_string_compact(),
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                e.to_json().to_string_compact()
+            }
+        }
+    }
+
+    fn dispatch(&self, req: Request) -> Result<Json, ServeError> {
+        match req {
+            Request::Build(params) => {
+                let (entry, hit) = self.cache.get_or_build(&params)?;
+                Ok(Json::Obj(vec![
+                    ok_field(),
+                    op_field("build"),
+                    ("session".to_string(), Json::Num(entry.id as f64)),
+                    ("cache_hit".to_string(), Json::Bool(hit)),
+                    ("n".to_string(), Json::Num(entry.solver.n() as f64)),
+                    ("depth".to_string(), Json::Num(entry.solver.stats().depth as f64)),
+                    (
+                        "plan_recordings".to_string(),
+                        Json::Num(entry.solver.plan_recordings() as f64),
+                    ),
+                    (
+                        "resident_bytes".to_string(),
+                        Json::Num(entry.solver.resident_bytes() as f64),
+                    ),
+                ]))
+            }
+            Request::Solve { session, b, opts } => self.do_solve(session, b, &opts),
+            Request::SolveMany { session, rhs, opts } => self.do_solve_many(session, rhs, &opts),
+            Request::Evict { session } => {
+                let evicted = self.cache.evict(session);
+                Ok(Json::Obj(vec![
+                    ok_field(),
+                    op_field("evict"),
+                    ("session".to_string(), Json::Num(session as f64)),
+                    ("evicted".to_string(), Json::Bool(evicted)),
+                ]))
+            }
+            Request::Stats => Ok(self.stats_json()),
+            Request::Shutdown => {
+                self.shutdown.store(true, Ordering::Release);
+                // Unblock the accept loop: it only checks the flag between
+                // connections, so hand it one.
+                let bound = *self.bound.lock().unwrap_or_else(|p| p.into_inner());
+                if let Some(addr) = bound {
+                    let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+                }
+                Ok(Json::Obj(vec![ok_field(), op_field("shutdown")]))
+            }
+        }
+    }
+
+    fn do_solve(&self, session: u64, b: Vec<f64>, opts: &ReqOpts) -> Result<Json, ServeError> {
+        let entry = self.cache.get(session).ok_or_else(|| ServeError::unknown_session(session))?;
+        check_len(&entry, &b)?;
+        let deadline = self.deadline(opts);
+        let (report, batch_size, wait_us) =
+            if opts.batchable() && self.cfg.batch_window_ms > 0 {
+                let rx = batcher::submit(
+                    &entry,
+                    b,
+                    Duration::from_millis(self.cfg.batch_window_ms),
+                    &self.admission,
+                    &self.counters,
+                );
+                let outcome = match deadline {
+                    Some(d) => rx.recv_timeout(d).map_err(|_| timeout_err(d))?,
+                    None => rx
+                        .recv()
+                        .map_err(|_| ServeError::new("internal", "batch dispatcher vanished"))?,
+                }?;
+                (outcome.report, outcome.batch_size, outcome.wait_us)
+            } else {
+                let permit = self.admission.admit(opts.threads.unwrap_or(1));
+                let sopts =
+                    SolveOptions { sample_residual: opts.residual, ..Default::default() };
+                let report = self.with_deadline(deadline, {
+                    let entry = Arc::clone(&entry);
+                    move || entry.solver.solve_opts(&b, &sopts)
+                })?;
+                drop(permit);
+                (report, 1, 0)
+            };
+        self.maybe_trim(&entry);
+        Ok(Json::Obj(vec![
+            ok_field(),
+            op_field("solve"),
+            ("session".to_string(), Json::Num(entry.id as f64)),
+            ("x".to_string(), vec_json(&report.x)),
+            ("residual".to_string(), opt_num(report.residual)),
+            ("subst_time".to_string(), Json::Num(report.subst_time)),
+            ("batch_size".to_string(), Json::Num(batch_size as f64)),
+            ("wait_us".to_string(), Json::Num(wait_us as f64)),
+            ("report".to_string(), self.mini_report(&entry)),
+        ]))
+    }
+
+    fn do_solve_many(
+        &self,
+        session: u64,
+        rhs: Vec<Vec<f64>>,
+        opts: &ReqOpts,
+    ) -> Result<Json, ServeError> {
+        let entry = self.cache.get(session).ok_or_else(|| ServeError::unknown_session(session))?;
+        if rhs.is_empty() {
+            return Err(ServeError::bad_request("'rhs' must contain at least one vector"));
+        }
+        for b in &rhs {
+            check_len(&entry, b)?;
+        }
+        let permit = self.admission.admit(opts.threads.unwrap_or(rhs.len()));
+        let workers = permit.granted();
+        let sopts = SolveOptions {
+            sample_residual: opts.residual,
+            max_threads: Some(workers),
+            ..Default::default()
+        };
+        let deadline = self.deadline(opts);
+        let reports = self.with_deadline(deadline, {
+            let entry = Arc::clone(&entry);
+            move || entry.solver.solve_many_opts(&rhs, &sopts)
+        })?;
+        drop(permit);
+        self.maybe_trim(&entry);
+        Ok(Json::Obj(vec![
+            ok_field(),
+            op_field("solve_many"),
+            ("session".to_string(), Json::Num(entry.id as f64)),
+            ("count".to_string(), Json::Num(reports.len() as f64)),
+            ("workers".to_string(), Json::Num(workers as f64)),
+            ("x".to_string(), Json::Arr(reports.iter().map(|r| vec_json(&r.x)).collect())),
+            (
+                "residuals".to_string(),
+                Json::Arr(reports.iter().map(|r| opt_num(r.residual)).collect()),
+            ),
+            ("report".to_string(), self.mini_report(&entry)),
+        ]))
+    }
+
+    /// Effective deadline: the request override wins, else the service
+    /// default (0 = none). An explicit `timeout_ms: 0` with a non-zero
+    /// batch window is a deterministic timeout — the error-path hook the
+    /// serve tests use.
+    fn deadline(&self, opts: &ReqOpts) -> Option<Duration> {
+        match opts.timeout_ms {
+            Some(t) => Some(Duration::from_millis(t)),
+            None if self.cfg.timeout_ms > 0 => {
+                Some(Duration::from_millis(self.cfg.timeout_ms))
+            }
+            None => None,
+        }
+    }
+
+    /// Run a solve closure, optionally under a deadline. With a deadline
+    /// the solve runs on a helper thread; on timeout the request gets a
+    /// typed error while the solve finishes in the background and its
+    /// result is discarded (the session `Arc` keeps the factor alive).
+    fn with_deadline<T: Send + 'static>(
+        &self,
+        deadline: Option<Duration>,
+        f: impl FnOnce() -> Result<T, H2Error> + Send + 'static,
+    ) -> Result<T, ServeError> {
+        match deadline {
+            None => f().map_err(|e| ServeError::from_h2(&e)),
+            Some(d) => {
+                let (tx, rx) = mpsc::channel();
+                std::thread::spawn(move || {
+                    let _ = tx.send(f());
+                });
+                rx.recv_timeout(d)
+                    .map_err(|_| timeout_err(d))?
+                    .map_err(|e| ServeError::from_h2(&e))
+            }
+        }
+    }
+
+    /// Idle-path workspace release: once nothing is in flight, sessions
+    /// stop pinning the burst's workspace high-water mark.
+    fn maybe_trim(&self, entry: &Arc<SessionEntry>) {
+        if self.admission.in_flight() == 0 {
+            entry.solver.trim_workspaces(self.cfg.idle_keep_workspaces);
+        }
+    }
+
+    /// Compact per-response counters (the `report` field).
+    fn mini_report(&self, entry: &Arc<SessionEntry>) -> Json {
+        let cache = self.cache.stats();
+        Json::Obj(vec![
+            ("backend".to_string(), Json::Str(entry.solver.backend_name().to_string())),
+            ("session_rhs".to_string(), Json::Num(entry.solver.solved_rhs() as f64)),
+            (
+                "plan_recordings".to_string(),
+                Json::Num(entry.solver.plan_recordings() as f64),
+            ),
+            ("cache_hit_rate".to_string(), Json::Num(cache.hit_rate())),
+            (
+                "batches".to_string(),
+                Json::Num(self.counters.dispatches.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "coalesced".to_string(),
+                Json::Num(self.counters.coalesced_requests.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
+    /// The `stats` response document.
+    pub fn stats_json(&self) -> Json {
+        let cache = self.cache.stats();
+        let sessions: Vec<Json> = self
+            .cache
+            .entries()
+            .iter()
+            .map(|e| {
+                Json::Obj(vec![
+                    ("session".to_string(), Json::Num(e.id as f64)),
+                    ("n".to_string(), Json::Num(e.solver.n() as f64)),
+                    ("hits".to_string(), Json::Num(e.hits.load(Ordering::Relaxed) as f64)),
+                    ("rhs".to_string(), Json::Num(e.solver.solved_rhs() as f64)),
+                    (
+                        "resident_bytes".to_string(),
+                        Json::Num(e.solver.resident_bytes() as f64),
+                    ),
+                    (
+                        "workspace_bytes".to_string(),
+                        Json::Num(e.solver.workspace_bytes() as f64),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ok_field(),
+            op_field("stats"),
+            (
+                "cache".to_string(),
+                Json::Obj(vec![
+                    ("sessions".to_string(), Json::Num(cache.sessions as f64)),
+                    ("resident_bytes".to_string(), Json::Num(cache.resident_bytes as f64)),
+                    ("budget_bytes".to_string(), Json::Num(cache.budget_bytes as f64)),
+                    ("hits".to_string(), Json::Num(cache.hits as f64)),
+                    ("misses".to_string(), Json::Num(cache.misses as f64)),
+                    ("evictions".to_string(), Json::Num(cache.evictions as f64)),
+                    ("hit_rate".to_string(), Json::Num(cache.hit_rate())),
+                ]),
+            ),
+            (
+                "batch".to_string(),
+                Json::Obj(vec![
+                    (
+                        "dispatches".to_string(),
+                        Json::Num(self.counters.dispatches.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "coalesced_batches".to_string(),
+                        Json::Num(
+                            self.counters.coalesced_batches.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                    (
+                        "coalesced_requests".to_string(),
+                        Json::Num(
+                            self.counters.coalesced_requests.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                    (
+                        "batched_requests".to_string(),
+                        Json::Num(
+                            self.counters.batched_requests.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                    (
+                        "max_batch".to_string(),
+                        Json::Num(self.counters.max_batch.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "avg_wait_us".to_string(),
+                        Json::Num(self.counters.avg_wait_us() as f64),
+                    ),
+                ]),
+            ),
+            (
+                "admission".to_string(),
+                Json::Obj(vec![
+                    ("budget".to_string(), Json::Num(self.admission.budget() as f64)),
+                    ("in_flight".to_string(), Json::Num(self.admission.in_flight() as f64)),
+                    ("throttled".to_string(), Json::Num(self.admission.throttled() as f64)),
+                ]),
+            ),
+            ("requests".to_string(), Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("errors".to_string(), Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("sessions".to_string(), Json::Arr(sessions)),
+        ])
+    }
+
+    /// Serve a line stream (stdin/stdout, a TCP connection, or an
+    /// in-memory stream in tests): one response line per request line,
+    /// until EOF or an accepted `shutdown`.
+    pub fn serve_stream<R: BufRead, W: Write>(
+        self: &Arc<Self>,
+        reader: R,
+        mut writer: W,
+    ) -> std::io::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = self.handle_line(&line);
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            if self.is_shutdown() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bind the TCP listener and remember its address (so `shutdown` can
+    /// kick the accept loop, and so `--tcp 127.0.0.1:0` callers learn the
+    /// chosen port).
+    pub fn bind_tcp(&self, addr: &str) -> std::io::Result<TcpListener> {
+        let listener = TcpListener::bind(addr)?;
+        *self.bound.lock().unwrap_or_else(|p| p.into_inner()) = Some(listener.local_addr()?);
+        Ok(listener)
+    }
+
+    /// The bound TCP address, once [`bind_tcp`](Service::bind_tcp) ran.
+    pub fn bound_addr(&self) -> Option<SocketAddr> {
+        *self.bound.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Accept loop: one handler thread per connection, each running
+    /// [`serve_stream`](Service::serve_stream) over the socket. Returns
+    /// after `shutdown` is accepted (handler threads for still-open
+    /// connections are left to drain; clients that sent their requests
+    /// before the shutdown response was written have their responses).
+    pub fn serve_tcp(self: &Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
+        for stream in listener.incoming() {
+            if self.is_shutdown() {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let svc = Arc::clone(self);
+            std::thread::spawn(move || {
+                let reader = match stream.try_clone() {
+                    Ok(s) => BufReader::new(s),
+                    Err(_) => return,
+                };
+                let _ = svc.serve_stream(reader, stream);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn ok_field() -> (String, Json) {
+    ("ok".to_string(), Json::Bool(true))
+}
+
+fn op_field(op: &str) -> (String, Json) {
+    ("op".to_string(), Json::Str(op.to_string()))
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::Num(v),
+        None => Json::Null,
+    }
+}
+
+fn timeout_err(d: Duration) -> ServeError {
+    ServeError::timeout(d.as_millis() as u64)
+}
+
+fn check_len(entry: &Arc<SessionEntry>, b: &[f64]) -> Result<(), ServeError> {
+    if b.len() != entry.solver.n() {
+        return Err(ServeError::from_h2(&H2Error::DimensionMismatch {
+            expected: entry.solver.n(),
+            got: b.len(),
+        }));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Scripted smoke client (CI's serve-smoke job; `h2ulv serve-client`).
+// ---------------------------------------------------------------------
+
+/// One line-oriented protocol connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let writer = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let reader = BufReader::new(
+            writer.try_clone().map_err(|e| format!("clone stream: {e}"))?,
+        );
+        Ok(Client { reader, writer })
+    }
+
+    /// Send one request line, read one response line.
+    pub fn call(&mut self, line: &str) -> Result<Json, String> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| format!("send: {e}"))?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).map_err(|e| format!("recv: {e}"))?;
+        if resp.is_empty() {
+            return Err("server closed the connection".to_string());
+        }
+        Json::parse(resp.trim_end()).map_err(|e| format!("bad response: {e} in {resp}"))
+    }
+
+    /// `call` that additionally requires `"ok":true`.
+    pub fn call_ok(&mut self, line: &str) -> Result<Json, String> {
+        let resp = self.call(line)?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(format!("request failed: {} -> {}", line, resp.to_string_compact()));
+        }
+        Ok(resp)
+    }
+}
+
+/// Deterministic RHS for the smoke script.
+fn smoke_rhs(n: usize, salt: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.0 + ((i * 37 + salt * 131) % 101) as f64 / 101.0).collect()
+}
+
+fn rhs_literal(b: &[f64]) -> String {
+    vec_json(b).to_string_compact()
+}
+
+/// The CI smoke script: build two structures twice each (asserting the
+/// second build of each is a cache hit with `plan_recordings == 1`), fire
+/// 32 mixed `solve`/`solve_many` requests across them — including
+/// concurrent single-RHS volleys that the server's micro-batcher can
+/// coalesce — verify a batched solution bit-matches an unbatched one, and
+/// finally require the stats counters to show at least one coalesced
+/// batch. Leaves the server running unless `shutdown` is set.
+pub fn run_smoke_client(addr: &str, shutdown: bool) -> Result<(), String> {
+    let build_a = r#"{"op":"build","n":256,"leaf_size":32,"max_rank":16,"far_samples":32,"near_samples":32,"residual_samples":0}"#;
+    let build_b = r#"{"op":"build","n":384,"leaf_size":32,"max_rank":16,"far_samples":32,"near_samples":32,"residual_samples":0}"#;
+    let mut c = Client::connect(addr)?;
+
+    // Tenant 1 and tenant 2 build the same structure: one plan recording.
+    let a1 = c.call_ok(build_a)?;
+    let a2 = c.call_ok(build_a)?;
+    let sid_a = a1.get("session").and_then(Json::as_u64).ok_or("build: no session id")?;
+    if a2.get("session").and_then(Json::as_u64) != Some(sid_a) {
+        return Err("identical builds resolved to different sessions".to_string());
+    }
+    if a2.get("cache_hit").and_then(Json::as_bool) != Some(true) {
+        return Err("second identical build was not a cache hit".to_string());
+    }
+    if a2.get("plan_recordings").and_then(Json::as_u64) != Some(1) {
+        return Err("shared session re-recorded its plan".to_string());
+    }
+    let b1 = c.call_ok(build_b)?;
+    let sid_b = b1.get("session").and_then(Json::as_u64).ok_or("build: no session id")?;
+    let (n_a, n_b) = (256, 384);
+
+    // 10 sequential solves alternating across the two structures (batch
+    // disabled so they don't wait on the window), plus 2 solve_many with 3
+    // RHS each: 12 requests.
+    let mut reference_x = String::new();
+    for i in 0..10 {
+        let (sid, n) = if i % 2 == 0 { (sid_a, n_a) } else { (sid_b, n_b) };
+        let line = format!(
+            r#"{{"op":"solve","session":{sid},"b":{},"batch":false}}"#,
+            rhs_literal(&smoke_rhs(n, i))
+        );
+        let resp = c.call_ok(&line)?;
+        let x = resp.get("x").and_then(Json::as_arr).ok_or("solve: no solution")?;
+        if x.len() != n {
+            return Err(format!("solve returned {} entries, expected {n}", x.len()));
+        }
+        if i == 0 {
+            reference_x = resp.get("x").unwrap().to_string_compact();
+        }
+    }
+    for round in 0..2 {
+        let rhs: Vec<String> = (0..3).map(|i| rhs_literal(&smoke_rhs(n_b, 50 + round * 3 + i))).collect();
+        let line = format!(
+            r#"{{"op":"solve_many","session":{sid_b},"rhs":[{}]}}"#,
+            rhs.join(",")
+        );
+        let resp = c.call_ok(&line)?;
+        if resp.get("count").and_then(Json::as_usize) != Some(3) {
+            return Err("solve_many returned the wrong count".to_string());
+        }
+    }
+
+    // Concurrent volleys on session A: 4 rounds x 5 clients = 20 batched
+    // single-RHS requests (32 solve requests total). Retried rounds give
+    // the micro-batcher repeated chances to observe >= 2 requests inside
+    // one window even on slow machines.
+    let mut batched_x0 = String::new();
+    for round in 0..4 {
+        let mut threads = Vec::new();
+        for k in 0..5 {
+            let addr = addr.to_string();
+            threads.push(std::thread::spawn(move || -> Result<(u64, String), String> {
+                let mut c = Client::connect(&addr)?;
+                let salt = if round == 0 && k == 0 { 0 } else { 100 + round * 5 + k };
+                let line = format!(
+                    r#"{{"op":"solve","session":{sid_a},"b":{}}}"#,
+                    rhs_literal(&smoke_rhs(n_a, salt))
+                );
+                let resp = c.call_ok(&line)?;
+                let bs = resp.get("batch_size").and_then(Json::as_u64).unwrap_or(0);
+                let x = resp.get("x").map(|x| x.to_string_compact()).unwrap_or_default();
+                Ok((bs, x))
+            }));
+        }
+        for (k, t) in threads.into_iter().enumerate() {
+            let (_bs, x) = t.join().map_err(|_| "client thread panicked")??;
+            if round == 0 && k == 0 {
+                batched_x0 = x;
+            }
+        }
+        let stats = c.call_ok(r#"{"op":"stats"}"#)?;
+        let coalesced = stats
+            .get("batch")
+            .and_then(|b| b.get("coalesced_requests"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        if coalesced > 0 && round >= 1 {
+            break;
+        }
+    }
+
+    // Bit-exactness: the first volley request reused the first sequential
+    // solve's RHS, and its (possibly coalesced) solution must serialize to
+    // the identical byte string.
+    if batched_x0 != reference_x {
+        return Err("batched solution differs from the unbatched reference".to_string());
+    }
+
+    let stats = c.call_ok(r#"{"op":"stats"}"#)?;
+    let coalesced = stats
+        .get("batch")
+        .and_then(|b| b.get("coalesced_requests"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0);
+    if coalesced == 0 {
+        return Err(format!(
+            "micro-batcher never coalesced a batch: {}",
+            stats.to_string_compact()
+        ));
+    }
+    let hits = stats
+        .get("cache")
+        .and_then(|cache| cache.get("hits"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0);
+    if hits == 0 {
+        return Err("session cache recorded no hits".to_string());
+    }
+
+    // Error paths must degrade gracefully: the connection keeps serving.
+    let err = c.call(r#"{"op":"solve","session":999999,"b":[1.0]}"#)?;
+    if err.get("ok").and_then(Json::as_bool) != Some(false) {
+        return Err("unknown session must produce a typed error".to_string());
+    }
+    c.call_ok(&format!(r#"{{"op":"evict","session":{sid_b}}}"#))?;
+
+    if shutdown {
+        c.call_ok(r#"{"op":"shutdown"}"#)?;
+    }
+    Ok(())
+}

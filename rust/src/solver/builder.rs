@@ -75,6 +75,7 @@ pub struct H2SolverBuilder {
     residual_samples: usize,
     storage: FactorStorage,
     verify_plan: Option<bool>,
+    max_solve_threads: usize,
 }
 
 impl H2SolverBuilder {
@@ -91,6 +92,7 @@ impl H2SolverBuilder {
             residual_samples: 128,
             storage: FactorStorage::default(),
             verify_plan: None,
+            max_solve_threads: 0,
         }
     }
 
@@ -140,6 +142,20 @@ impl H2SolverBuilder {
         self
     }
 
+    /// Cap the worker fan-out of
+    /// [`H2Solver::solve_many`](super::H2Solver::solve_many) for the whole
+    /// session: at most `n` threads replay concurrently (`0`, the default,
+    /// scales to available parallelism; `1` solves sequentially in the
+    /// calling thread). Results are bit-identical at every cap — the
+    /// setting bounds resource use, not numerics. Per-call
+    /// [`SolveOptions::max_threads`](super::SolveOptions) overrides it;
+    /// the serve admission controller and the CLI `--threads` flag both
+    /// build on this.
+    pub fn max_solve_threads(mut self, n: usize) -> Self {
+        self.max_solve_threads = n;
+        self
+    }
+
     /// Validate the problem, instantiate the backend, construct the H²
     /// matrix, and run the ULV factorization.
     ///
@@ -159,6 +175,7 @@ impl H2SolverBuilder {
             self.residual_samples,
             self.storage,
             verify_plan,
+            self.max_solve_threads,
         )
     }
 }

@@ -124,6 +124,13 @@ pub struct SolveOptions {
     /// builder's sample count, or 128 if it was 0). `None` follows the
     /// builder.
     pub sample_residual: Option<bool>,
+    /// Cap the [`solve_many`](H2Solver::solve_many) worker fan-out for
+    /// this call: `Some(n)` uses at most `n` threads (1 solves in the
+    /// calling thread), `Some(0)` and `None` fall back to the builder's
+    /// [`max_solve_threads`](crate::solver::H2SolverBuilder::max_solve_threads)
+    /// cap (which itself defaults to available parallelism). The serve
+    /// admission controller passes its per-request worker grant here.
+    pub max_threads: Option<usize>,
 }
 
 impl SolveOptions {
@@ -232,9 +239,14 @@ pub struct H2Solver {
     solved_rhs: AtomicUsize,
     /// Solve-path overlap events drained from the backend since the last
     /// factorization replay (the factor-phase trace lives in
-    /// [`BuildStats::overlap`]). Accumulated lazily by
-    /// [`run_report`](H2Solver::run_report).
+    /// [`BuildStats::overlap`]). Synced lazily from the backend;
+    /// [`run_report`](H2Solver::run_report) snapshots it,
+    /// [`take_solve_overlap`](H2Solver::take_solve_overlap) drains it.
     solve_overlap: Mutex<OverlapTrace>,
+    /// Session-wide cap on the `solve_many` worker fan-out (0 = scale to
+    /// available parallelism). Per-call [`SolveOptions::max_threads`]
+    /// overrides it.
+    max_solve_threads: usize,
     plan_recordings: usize,
     /// Statically verify every newly recorded plan (builder flag /
     /// `H2_VERIFY_PLAN` / debug default).
@@ -254,6 +266,7 @@ impl H2Solver {
         residual_samples: usize,
         storage: FactorStorage,
         verify_plan: bool,
+        max_solve_threads: usize,
     ) -> Result<H2Solver, H2Error> {
         let scope = FlopScope::new();
         let run_trace = RunTrace::new();
@@ -293,6 +306,7 @@ impl H2Solver {
             run_trace,
             solved_rhs: AtomicUsize::new(0),
             solve_overlap: Mutex::new(OverlapTrace::default()),
+            max_solve_threads,
             plan_recordings: 1,
             verify_plan,
         })
@@ -407,12 +421,50 @@ impl H2Solver {
         self.arena.live()
     }
 
-    /// Workspace-pool counters `(created, idle)`: `created` is the
-    /// high-water mark of concurrently in-flight solves this session has
-    /// served; the two are equal whenever no solve is running (leased
-    /// regions always come back, even on panic).
+    /// Workspace-pool counters `(created, idle)`: `created` is the number
+    /// of regions the pool currently owns (tracks the high-water mark of
+    /// concurrently in-flight solves until
+    /// [`trim_workspaces`](H2Solver::trim_workspaces) drops some); the two
+    /// are equal whenever no solve is running (leased regions always come
+    /// back, even on panic).
     pub fn workspace_stats(&self) -> (usize, usize) {
         (self.pool.created(), self.pool.idle())
+    }
+
+    /// Bytes pinned by the idle workspace regions (allocator bookkeeping —
+    /// idle regions carry no payload). Grows with the session's solve
+    /// concurrency high-water mark; release it with
+    /// [`trim_workspaces`](H2Solver::trim_workspaces).
+    pub fn workspace_bytes(&self) -> usize {
+        self.pool.bytes()
+    }
+
+    /// Drop idle workspace regions until at most `keep` remain, returning
+    /// how many were dropped. Safe concurrently with in-flight solves
+    /// (leased regions are untouched and return to the pool as usual) —
+    /// the hook long-lived owners call on idle/evict paths so a burst of
+    /// concurrent solves doesn't pin peak workspace memory forever.
+    pub fn trim_workspaces(&self, keep: usize) -> usize {
+        self.pool.shrink_to(keep)
+    }
+
+    /// Bytes held by the device-resident factor region — the session's
+    /// dominant resident cost and the quantity the serve-layer cache
+    /// budgets its LRU eviction on.
+    pub fn resident_bytes(&self) -> usize {
+        self.arena.bytes()
+    }
+
+    /// Right-hand sides solved so far through any entry point.
+    pub fn solved_rhs(&self) -> usize {
+        self.solved_rhs.load(Ordering::Relaxed)
+    }
+
+    /// The session-wide `solve_many` worker cap (0 = scale to available
+    /// parallelism), as set by
+    /// [`max_solve_threads`](crate::solver::H2SolverBuilder::max_solve_threads).
+    pub fn max_solve_threads(&self) -> usize {
+        self.max_solve_threads
     }
 
     /// Solve `A x = b` with `b` in the caller's original point ordering;
@@ -496,10 +548,13 @@ impl H2Solver {
     /// are validated up front so either every RHS is solved or none is.
     ///
     /// The solves **fan out across the workspace pool**: worker threads
-    /// (up to the machine's parallelism) each lease their own vector
-    /// region and replay concurrently against the shared factor region.
-    /// Reports come back in input order and are bit-identical to
-    /// sequential [`solve_opts`](H2Solver::solve_opts) calls.
+    /// (up to the machine's parallelism, capped by the builder's
+    /// [`max_solve_threads`](crate::solver::H2SolverBuilder::max_solve_threads)
+    /// or a per-call [`SolveOptions::max_threads`]) each lease their own
+    /// vector region and replay concurrently against the shared factor
+    /// region. Reports come back in input order and are bit-identical to
+    /// sequential [`solve_opts`](H2Solver::solve_opts) calls — the thread
+    /// cap changes scheduling only, never results.
     pub fn solve_many(&self, rhs: &[Vec<f64>]) -> Result<Vec<SolveReport>, H2Error> {
         self.solve_many_opts(rhs, &SolveOptions::default())
     }
@@ -514,9 +569,23 @@ impl H2Solver {
         for b in rhs {
             self.check_rhs(b)?;
         }
+        // Fan-out width: available parallelism, capped by the session-wide
+        // builder setting unless the call overrides it (0 = uncapped in
+        // both positions).
+        let cap = match opts.max_threads {
+            Some(n) if n > 0 => n,
+            _ => {
+                if self.max_solve_threads > 0 {
+                    self.max_solve_threads
+                } else {
+                    usize::MAX
+                }
+            }
+        };
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
+            .min(cap)
             .min(rhs.len());
         if workers <= 1 {
             return rhs.iter().map(|b| self.solve_opts(b, opts)).collect();
@@ -736,6 +805,29 @@ impl H2Solver {
         &self.run_trace
     }
 
+    /// Fold solve-path overlap events still sitting in the backend's
+    /// engine into the session-held accumulator. Draining the *backend* is
+    /// safe at any time — the session trace keeps every event, so repeated
+    /// report calls never lose history.
+    fn sync_solve_overlap(&self) {
+        if let Some(tr) = self.backend.take_overlap_trace() {
+            let mut acc = self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner());
+            acc.events.extend(tr.events);
+        }
+    }
+
+    /// Drain and return the accumulated solve-path overlap trace, leaving
+    /// the session's accumulator empty — the *explicit* reset for callers
+    /// that want per-interval deltas (e.g. a monitoring scrape that
+    /// windows overlap per reporting period). [`run_report`]
+    /// (H2Solver::run_report) itself never drains: it snapshots, so calling
+    /// it twice on a live server session reports the same (monotonically
+    /// growing) history both times.
+    pub fn take_solve_overlap(&self) -> OverlapTrace {
+        self.sync_solve_overlap();
+        std::mem::take(&mut *self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+
     /// Condense the session into the serializable [`RunReport`] that
     /// benchmark trajectory files (`BENCH_*.json`) persist.
     ///
@@ -744,17 +836,20 @@ impl H2Solver {
     /// a fixed structure, which is what the trajectory comparator is
     /// strict about. Wall times come from the run trace and are noisy.
     /// Overlap metrics merge the factorization replay's trace
-    /// ([`BuildStats::overlap`]) with solve-path events drained from the
-    /// backend at call time; all are 0 on host-synchronous backends.
+    /// ([`BuildStats::overlap`]) with accumulated solve-path events; all
+    /// are 0 on host-synchronous backends.
+    ///
+    /// **Snapshot semantics**: this method synchronizes with the backend
+    /// but does not reset anything — solve-overlap counters
+    /// (`solve_trace_events`, `overlap_ratio`) are cumulative since the
+    /// last factorization replay, so a second `run_report()` on a live
+    /// server session sees everything the first one saw plus whatever
+    /// happened in between. Callers that want windowed deltas drain
+    /// explicitly with [`take_solve_overlap`](H2Solver::take_solve_overlap).
     pub fn run_report(&self) -> RunReport {
-        // Solve launches recorded by an overlapping backend accumulate in
-        // its engine until drained; fold them into the session-held solve
-        // trace (the factor-phase events were drained into `BuildStats`
-        // when the replay finished).
-        if let Some(tr) = self.backend.take_overlap_trace() {
-            let mut acc = self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner());
-            acc.events.extend(tr.events);
-        }
+        // The factor-phase events were drained into `BuildStats` when the
+        // replay finished; solve-path events accumulate in the session.
+        self.sync_solve_overlap();
         let solve = self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()).clone();
         let combined = match &self.stats.overlap {
             Some(factor_tr) => {

@@ -375,6 +375,40 @@ fn solve_path_is_traced_and_surfaces_in_the_run_report() {
     assert!(nr.solve_time > 0.0);
 }
 
+#[test]
+fn run_report_snapshots_and_take_solve_overlap_drains() {
+    // ISSUE 8 satellite: `run_report` has snapshot semantics — repeated
+    // calls on a live session see the same monotonically growing event
+    // history (nothing is drained behind the caller's back, so `bench`
+    // trajectory files stay byte-stable) — while `take_solve_overlap` is
+    // the explicit drain for callers that window overlap per interval.
+    let case = Case::fixed(512, 609);
+    let asynced = case.solver(BackendSpec::async_native());
+    let b = case.rhs(0);
+    asynced.solve(&b).expect("rhs matches");
+    let first = asynced.run_report();
+    assert!(first.solve_trace_events > 0);
+    // Snapshot: a second report without intervening solves carries the
+    // identical cumulative counters — no hidden drain.
+    let second = asynced.run_report();
+    assert_eq!(second.solve_trace_events, first.solve_trace_events, "run_report must not drain");
+    assert_eq!(second.rhs, first.rhs);
+    // More solves only grow the history.
+    asynced.solve(&b).expect("rhs matches");
+    let third = asynced.run_report();
+    assert!(third.solve_trace_events >= first.solve_trace_events);
+    assert_eq!(third.rhs, first.rhs + 1);
+    // Explicit drain: everything accumulated comes back once, and the next
+    // report starts from an empty solve-path window.
+    let drained = asynced.take_solve_overlap();
+    assert_eq!(drained.events.len(), third.solve_trace_events);
+    let after = asynced.run_report();
+    assert_eq!(after.solve_trace_events, 0, "post-drain report starts an empty window");
+    assert_eq!(after.rhs, third.rhs, "draining overlap must not reset the RHS counter");
+    // A second drain with no solves in between is empty.
+    assert!(asynced.take_solve_overlap().events.is_empty());
+}
+
 // ---------------------------------------------------------------------
 // (d) Concurrent solves on an async session.
 // ---------------------------------------------------------------------

@@ -185,3 +185,65 @@ fn concurrent_mixed_entry_points_share_one_factor() {
     let (created, idle) = solver.workspace_stats();
     assert_eq!(created, idle, "mixed entry points leaked a workspace region");
 }
+
+#[test]
+fn workspace_pool_shrinks_after_a_solve_burst() {
+    // ISSUE 8 satellite: `trim_workspaces` (the serve layer's idle/evict
+    // hook) must observably release pool memory — `workspace_bytes`
+    // counts slot-table capacity, so idle regions pin real bytes even
+    // after their payloads reset to empty.
+    let solver = build_solver();
+    let b = rhs(700);
+    let want = solver.solve(&b).expect("rhs matches").x;
+    let many: Vec<Vec<f64>> = (0..6u64).map(|t| rhs(600 + t)).collect();
+    solver.solve_many(&many).expect("all rhs lengths match");
+    let (created, idle) = solver.workspace_stats();
+    assert_eq!(created, idle, "burst leaked a workspace region");
+    assert!(created >= 1);
+    let before = solver.workspace_bytes();
+    assert!(before > 0, "idle regions pin slot-table bytes even when their payload is empty");
+    let dropped = solver.trim_workspaces(0);
+    assert_eq!(dropped, created, "trim_workspaces(0) drops every idle region");
+    assert_eq!(solver.workspace_bytes(), 0, "a fully trimmed pool pins no bytes");
+    assert_eq!(solver.workspace_stats(), (0, 0));
+    // The pool re-grows on demand and the session still solves bit-identically.
+    let again = solver.solve(&b).expect("rhs matches").x;
+    assert_eq!(want, again, "solve after trim diverged");
+    assert_eq!(solver.plan_recordings(), 1, "trimming must not force a re-plan");
+}
+
+#[test]
+fn solve_many_thread_cap_bounds_fanout_and_preserves_bits() {
+    // ISSUE 8 satellite: the builder-level `max_solve_threads` cap and the
+    // per-call `SolveOptions::max_threads` override both bound the
+    // `solve_many` fan-out without perturbing a single bit of the result
+    // (each RHS runs the identical per-solve path regardless of workers).
+    let case = Case { far_samples: H2Config::default().far_samples, ..Case::fixed(N, 501) };
+    let reference = case.solver(BackendSpec::Native);
+    let many: Vec<Vec<f64>> = (0..6u64).map(|t| rhs(800 + t)).collect();
+    let want = reference.solve_many(&many).expect("all rhs lengths match");
+
+    // Builder-level cap: the session never fans out past 2 workers, so
+    // the pool never creates more than 2 regions.
+    let capped = H2SolverBuilder::new(case.geometry(), case.kernel_fn())
+        .config(case.config())
+        .backend(BackendSpec::Native)
+        .residual_samples(0)
+        .max_solve_threads(2)
+        .build()
+        .expect("capped build succeeds");
+    assert_eq!(capped.max_solve_threads(), 2);
+    let got = capped.solve_many(&many).expect("all rhs lengths match");
+    let (created, _) = capped.workspace_stats();
+    assert!(created <= 2, "builder cap exceeded: pool grew to {created} regions");
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.x, g.x, "capped solve_many diverged from uncapped");
+    }
+
+    // Per-call override wins over the builder default: force 1 worker.
+    let one = SolveOptions { max_threads: Some(1), ..Default::default() };
+    let got1 = reference.solve_many_opts(&many, &one).expect("all rhs lengths match");
+    for (w, g) in want.iter().zip(&got1) {
+        assert_eq!(w.x, g.x, "single-threaded solve_many diverged");
+    }
+}

@@ -1,0 +1,329 @@
+//! The multi-tenant solve service (ISSUE 8 acceptance):
+//!
+//! * scripted protocol round-trip over an in-memory stream — the same
+//!   `serve_stream` loop that backs stdin/stdout and TCP transports;
+//! * two tenants issuing identical `build`s share one cached session and
+//!   the plan is recorded exactly once (`plan_recordings() == 1`);
+//! * LRU eviction under a tiny resident-byte budget, with the evicted
+//!   session producing a typed `unknown_session` error — not a dead loop;
+//! * malformed requests and deterministic timeouts degrade to typed
+//!   `{"ok":false,...}` responses on a connection that keeps serving;
+//! * concurrent single-RHS requests coalesce into one `solve_many`
+//!   dispatch, bit-identical to an unbatched solve;
+//! * concurrent TCP clients bit-match a direct (in-process) solve.
+
+mod common;
+
+use h2ulv::serve::protocol::vec_json;
+use h2ulv::serve::service::Client;
+use h2ulv::serve::{BuildParams, ServeConfig, Service};
+use h2ulv::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+const N: usize = 192;
+const BUILD: &str = r#"{"op":"build","n":192,"leaf_size":32,"max_rank":16,"far_samples":32,"near_samples":32,"residual_samples":0}"#;
+
+/// The `BuildParams` equivalent of the [`BUILD`] request line (unspecified
+/// wire fields take the same defaults `from_json` fills in).
+fn build_params() -> BuildParams {
+    BuildParams {
+        n: N,
+        leaf_size: 32,
+        max_rank: 16,
+        far_samples: 32,
+        near_samples: 32,
+        residual_samples: 0,
+        ..Default::default()
+    }
+}
+
+fn rhs_literal(seed: u64) -> String {
+    vec_json(&common::rhs(N, seed)).to_string_compact()
+}
+
+/// What an in-process solver (no service, no wire) returns for the same
+/// problem and RHS, serialized the same way.
+fn direct_x(seed: u64) -> String {
+    let solver = build_params().build_solver().expect("direct build succeeds");
+    let rep = solver.solve(&common::rhs(N, seed)).expect("rhs matches");
+    vec_json(&rep.x).to_string_compact()
+}
+
+fn no_batching() -> ServeConfig {
+    ServeConfig { batch_window_ms: 0, ..Default::default() }
+}
+
+#[test]
+fn scripted_round_trip_over_an_in_memory_stream() {
+    let svc = Service::new(no_batching());
+    // A fresh service numbers sessions from 1, so the script can refer to
+    // the session it is about to create.
+    let script = format!(
+        "{BUILD}\n\
+         {BUILD}\n\
+         {{\"op\":\"solve\",\"session\":1,\"b\":{rhs}}}\n\
+         {{\"op\":\"stats\"}}\n\
+         {{\"op\":\"evict\",\"session\":1}}\n\
+         {{\"op\":\"solve\",\"session\":1,\"b\":{rhs}}}\n\
+         {{\"op\":\"shutdown\"}}\n\
+         {{\"op\":\"stats\"}}\n",
+        rhs = rhs_literal(7)
+    );
+    let mut out = Vec::new();
+    svc.serve_stream(script.as_bytes(), &mut out).expect("in-memory stream never errors");
+    let text = String::from_utf8(out).expect("responses are UTF-8");
+    let resps: Vec<Json> =
+        text.lines().map(|l| Json::parse(l).expect("every response parses")).collect();
+    // The loop stops after the shutdown response: the trailing stats line
+    // is never processed.
+    assert_eq!(resps.len(), 7, "one response per request, until shutdown:\n{text}");
+
+    assert_eq!(resps[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resps[0].get("cache_hit").and_then(Json::as_bool), Some(false));
+    assert_eq!(resps[0].get("session").and_then(Json::as_u64), Some(1));
+    assert_eq!(resps[1].get("cache_hit").and_then(Json::as_bool), Some(true));
+    assert_eq!(resps[1].get("session").and_then(Json::as_u64), Some(1));
+    assert_eq!(resps[1].get("plan_recordings").and_then(Json::as_u64), Some(1));
+
+    let x = resps[2].get("x").and_then(Json::as_arr).expect("solve returns a solution");
+    assert_eq!(x.len(), N);
+    assert_eq!(
+        resps[2].get("x").unwrap().to_string_compact(),
+        direct_x(7),
+        "served solution must bit-match a direct in-process solve"
+    );
+
+    let cache = resps[3].get("cache").expect("stats carries a cache section");
+    assert_eq!(cache.get("sessions").and_then(Json::as_u64), Some(1));
+    // The global hit counter tracks `build` resolution only (hit_rate is
+    // the build-sharing metric); per-session counters absorb solve lookups.
+    assert_eq!(cache.get("hits").and_then(Json::as_u64), Some(1), "the second build hit");
+
+    assert_eq!(resps[4].get("evicted").and_then(Json::as_bool), Some(true));
+    // The solve after eviction fails typed — the loop kept serving.
+    assert_eq!(resps[5].get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        resps[5].get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("unknown_session")
+    );
+    assert_eq!(resps[6].get("op").and_then(Json::as_str), Some("shutdown"));
+    assert!(svc.is_shutdown());
+}
+
+#[test]
+fn two_tenants_share_one_plan_recording_at_the_service_level() {
+    let svc = Service::new(no_batching());
+    let a = Json::parse(&svc.handle_line(BUILD)).unwrap();
+    let b = Json::parse(&svc.handle_line(BUILD)).unwrap();
+    assert_eq!(a.get("session").and_then(Json::as_u64), b.get("session").and_then(Json::as_u64));
+    assert_eq!(b.get("cache_hit").and_then(Json::as_bool), Some(true));
+    // The acceptance counter, read off the cache itself rather than the
+    // wire: one entry, planned exactly once.
+    let entries = svc.cache().entries();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].solver.plan_recordings(), 1, "second tenant must not re-plan");
+    let stats = svc.cache().stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+}
+
+#[test]
+fn lru_eviction_under_a_tiny_byte_budget_keeps_serving() {
+    // A 1-byte budget forces every insertion after the first to evict the
+    // least-recently-used session.
+    let svc = Service::new(ServeConfig { budget_bytes: 1, ..no_batching() });
+    let a = Json::parse(&svc.handle_line(BUILD)).unwrap();
+    let sid_a = a.get("session").and_then(Json::as_u64).unwrap();
+    let build_b = r#"{"op":"build","n":224,"leaf_size":32,"max_rank":16,"far_samples":32,"near_samples":32,"residual_samples":0}"#;
+    let b = Json::parse(&svc.handle_line(build_b)).unwrap();
+    assert_eq!(b.get("ok").and_then(Json::as_bool), Some(true));
+    let stats = svc.cache().stats();
+    assert_eq!(stats.sessions, 1, "over-budget cache keeps only the newest session");
+    assert_eq!(stats.evictions, 1);
+    // The evicted tenant gets a typed error; the surviving one solves.
+    let gone = Json::parse(&svc.handle_line(&format!(
+        r#"{{"op":"solve","session":{sid_a},"b":{}}}"#,
+        rhs_literal(1)
+    )))
+    .unwrap();
+    assert_eq!(
+        gone.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("unknown_session")
+    );
+    let sid_b = b.get("session").and_then(Json::as_u64).unwrap();
+    let ok = Json::parse(&svc.handle_line(&format!(
+        r#"{{"op":"solve","session":{sid_b},"b":{}}}"#,
+        vec_json(&common::rhs(224, 2)).to_string_compact()
+    )))
+    .unwrap();
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn malformed_requests_produce_typed_errors_and_keep_the_loop_alive() {
+    let svc = Service::new(no_batching());
+    let kind = |line: &str| {
+        let resp = Json::parse(&svc.handle_line(line)).expect("error responses are JSON too");
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "for {line}");
+        resp.get("error")
+            .and_then(|e| e.get("kind"))
+            .and_then(Json::as_str)
+            .expect("typed error kind")
+            .to_string()
+    };
+    assert_eq!(kind("this is not json"), "parse_error");
+    assert_eq!(kind(r#"{"n":64}"#), "bad_request", "missing op");
+    assert_eq!(kind(r#"{"op":"dance"}"#), "unknown_op");
+    assert_eq!(kind(r#"{"op":"solve","b":[1.0]}"#), "bad_request", "missing session");
+    assert_eq!(kind(r#"{"op":"solve","session":1,"b":"nope"}"#), "bad_request");
+    assert_eq!(kind(r#"{"op":"build","n":"many"}"#), "bad_request", "mistyped field");
+    assert_eq!(kind(r#"{"op":"build","n":192,"geometry":"dodecahedron"}"#), "bad_request");
+    // Dimension mismatch on a real session maps through the H2Error taxonomy.
+    let a = Json::parse(&svc.handle_line(BUILD)).unwrap();
+    let sid = a.get("session").and_then(Json::as_u64).unwrap();
+    assert_eq!(kind(&format!(r#"{{"op":"solve","session":{sid},"b":[1.0,2.0]}}"#)), "dimension_mismatch");
+    // After all that abuse the service still does real work.
+    let ok = Json::parse(&svc.handle_line(&format!(
+        r#"{{"op":"solve","session":{sid},"b":{}}}"#,
+        rhs_literal(3)
+    )))
+    .unwrap();
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+    let stats = Json::parse(&svc.handle_line(r#"{"op":"stats"}"#)).unwrap();
+    assert!(stats.get("errors").and_then(Json::as_u64).unwrap() >= 8);
+}
+
+#[test]
+fn explicit_zero_timeout_deterministically_times_out() {
+    // A 0 ms deadline on a batched solve can never be met: the batcher
+    // holds the request for the full window, so `recv_timeout(0)` expires
+    // first — a deterministic timeout-path probe, no sleeps to tune.
+    let svc = Service::new(ServeConfig { batch_window_ms: 50, ..Default::default() });
+    let a = Json::parse(&svc.handle_line(BUILD)).unwrap();
+    let sid = a.get("session").and_then(Json::as_u64).unwrap();
+    let timed_out = Json::parse(&svc.handle_line(&format!(
+        r#"{{"op":"solve","session":{sid},"b":{},"timeout_ms":0}}"#,
+        rhs_literal(4)
+    )))
+    .unwrap();
+    assert_eq!(timed_out.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        timed_out.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("timeout")
+    );
+    // The same request without the deadline succeeds on the same session
+    // (the abandoned solve finished in the background and was discarded).
+    let ok = Json::parse(&svc.handle_line(&format!(
+        r#"{{"op":"solve","session":{sid},"b":{},"batch":false}}"#,
+        rhs_literal(4)
+    )))
+    .unwrap();
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn concurrent_single_rhs_requests_coalesce_into_one_batch() {
+    // A long window makes coalescing deterministic in practice: the second
+    // request only has to arrive within 250 ms of the first. Retry rounds
+    // guard against a pathologically descheduled spawner.
+    let svc = Service::new(ServeConfig { batch_window_ms: 250, ..Default::default() });
+    let a = Json::parse(&svc.handle_line(BUILD)).unwrap();
+    let sid = a.get("session").and_then(Json::as_u64).unwrap();
+    let unbatched = Json::parse(&svc.handle_line(&format!(
+        r#"{{"op":"solve","session":{sid},"b":{},"batch":false}}"#,
+        rhs_literal(5)
+    )))
+    .unwrap();
+    let want_x = unbatched.get("x").unwrap().to_string_compact();
+
+    let mut coalesced = false;
+    for _round in 0..5 {
+        let started = AtomicUsize::new(0);
+        let sizes: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2u64)
+                .map(|_k| {
+                    let svc = &svc;
+                    let started = &started;
+                    let want_x = &want_x;
+                    s.spawn(move || {
+                        started.fetch_add(1, Ordering::SeqCst);
+                        while started.load(Ordering::SeqCst) < 2 {
+                            std::hint::spin_loop();
+                        }
+                        // Both threads reuse RHS seed 5: every batched
+                        // solution must bit-match the unbatched reference.
+                        let resp = Json::parse(&svc.handle_line(&format!(
+                            r#"{{"op":"solve","session":{sid},"b":{}}}"#,
+                            rhs_literal(5)
+                        )))
+                        .unwrap();
+                        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+                        assert_eq!(
+                            resp.get("x").unwrap().to_string_compact(),
+                            *want_x,
+                            "batched solution diverged from the unbatched reference"
+                        );
+                        resp.get("batch_size").and_then(Json::as_u64).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+        });
+        if sizes.iter().any(|&s| s >= 2) {
+            coalesced = true;
+            break;
+        }
+    }
+    assert!(coalesced, "two simultaneous requests never shared a 250 ms window");
+    assert!(svc.counters().coalesced_batches.load(Ordering::Relaxed) >= 1);
+    assert!(svc.counters().coalesced_requests.load(Ordering::Relaxed) >= 2);
+}
+
+#[test]
+fn concurrent_tcp_clients_bit_match_a_direct_solve() {
+    const CLIENTS: usize = 3;
+    let svc = Service::new(ServeConfig { batch_window_ms: 5, ..Default::default() });
+    let listener = svc.bind_tcp("127.0.0.1:0").expect("ephemeral port binds");
+    let addr = svc.bound_addr().expect("bind recorded the address").to_string();
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || svc.serve_tcp(listener))
+    };
+
+    let want: Vec<String> = (0..CLIENTS as u64).map(|k| direct_x(30 + k)).collect();
+    std::thread::scope(|s| {
+        for (k, want_x) in want.iter().enumerate() {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut c = Client::connect(&addr).expect("client connects");
+                // All clients race the same build: the cache's in-lock
+                // re-check guarantees they converge on one session.
+                let built = c.call_ok(BUILD).expect("build succeeds");
+                let sid = built.get("session").and_then(Json::as_u64).unwrap();
+                let resp = c
+                    .call_ok(&format!(
+                        r#"{{"op":"solve","session":{sid},"b":{}}}"#,
+                        rhs_literal(30 + k as u64)
+                    ))
+                    .expect("solve succeeds");
+                assert_eq!(
+                    resp.get("x").unwrap().to_string_compact(),
+                    *want_x,
+                    "TCP-served solution diverged from the direct solve"
+                );
+            });
+        }
+    });
+
+    // All clients shared one session and one plan recording.
+    let entries = svc.cache().entries();
+    assert_eq!(entries.len(), 1, "racing identical builds must converge on one session");
+    assert_eq!(entries[0].solver.plan_recordings(), 1);
+
+    let mut c = Client::connect(&addr).expect("shutdown client connects");
+    c.call_ok(r#"{"op":"shutdown"}"#).expect("shutdown is acknowledged");
+    server
+        .join()
+        .expect("server thread panicked")
+        .expect("accept loop exits cleanly after shutdown");
+}
