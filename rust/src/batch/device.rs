@@ -93,13 +93,6 @@
 //! Any number of threads may run [`Device::launch_solve`] against the same
 //! factor region with distinct workspaces; no lock is held across
 //! launches.
-//!
-//! # Legacy adapter
-//!
-//! The pre-redesign slice-based [`BatchExec`](crate::batch::BatchExec)
-//! trait is deprecated. [`LegacyBatchExec`] adapts any [`Device`] to it by
-//! round-tripping each call through a scratch arena, so old benches and
-//! research code keep compiling until they migrate.
 
 pub mod r#async;
 pub mod validate;
@@ -110,7 +103,9 @@ pub use validate::ValidatingDevice;
 use crate::linalg::{chol, Matrix};
 use crate::metrics::flops;
 use crate::metrics::overlap::OverlapTrace;
-use crate::plan::{BasisItem, BufferId, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem};
+use crate::plan::{
+    BasisItem, BufferId, ExchangeRecv, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem,
+};
 use std::any::Any;
 
 /// One batched launch: an opcode plus `BufferId` operand lists borrowed
@@ -152,6 +147,20 @@ pub enum Launch<'p> {
     AddVec { items: &'p [(BufferId, BufferId, BufferId)] },
     /// Dense root solve `x <- (L Lᵀ)⁻¹ x` against the resident root factor.
     RootSolve { l: BufferId, x: BufferId },
+    /// Cross-rank matrix rendezvous (SPMD rank plans only): `sends` leave
+    /// this rank (staying live locally), `recvs` arrive and define their
+    /// buffers. Routed through the executor's [`Transport`] endpoint —
+    /// never dispatched to a device kernel.
+    ///
+    /// [`Transport`]: crate::dist::exec::Transport
+    Exchange { level: usize, sends: &'p [BufferId], recvs: &'p [ExchangeRecv] },
+    /// Cross-rank vector rendezvous (solve phase); recvs are
+    /// `(from, buf, len)`. Same executor-side routing as [`Launch::Exchange`].
+    ExchangeVec {
+        level: usize,
+        sends: &'p [BufferId],
+        recvs: &'p [(u32, BufferId, u32)],
+    },
 }
 
 impl Launch<'_> {
@@ -173,6 +182,8 @@ impl Launch<'_> {
             Launch::CopyBuf { .. } => "COPY",
             Launch::AddVec { .. } => "ADD",
             Launch::RootSolve { .. } => "POTRS",
+            Launch::Exchange { .. } => "EXCHANGE",
+            Launch::ExchangeVec { .. } => "EXCHANGEV",
         }
     }
 }
@@ -253,7 +264,7 @@ pub trait DeviceArena: Send + Sync {
 /// This is the narrowest, hottest interface in the codebase — everything
 /// the ULV factorization and substitution do numerically flows through
 /// [`Device::launch`] with arena operands.
-pub trait Device: Sync {
+pub trait Device: Send + Sync {
     /// Create an arena sized for `capacity` buffers (a hint; arenas grow).
     fn new_arena(&self, capacity: usize) -> Box<dyn DeviceArena>;
     /// Execute one batched *factorization-phase* launch against `arena`
@@ -663,6 +674,18 @@ pub(crate) fn launch_operands(launch: &Launch<'_>) -> LaunchOperands {
             ops.mat_reads.push(*l);
             ops.vec_rw.push(*x);
         }
+        Launch::Exchange { sends, recvs, .. } => {
+            ops.mat_reads.extend_from_slice(sends);
+            for r in recvs.iter() {
+                ops.mat_writes.push(r.buf);
+            }
+        }
+        Launch::ExchangeVec { sends, recvs, .. } => {
+            ops.vec_reads.extend_from_slice(sends);
+            for &(_, buf, _) in recvs.iter() {
+                ops.vec_writes.push(buf);
+            }
+        }
     }
     ops
 }
@@ -739,6 +762,11 @@ pub(crate) fn exec_host_launch(kern: &dyn HostKernels, arena: &mut HostArena, la
                 arena.put_mat(item.dst, merged);
             }
         }
+        Launch::Exchange { .. } | Launch::ExchangeVec { .. } => panic!(
+            "{} is a comm launch; it executes through the executor's transport \
+             endpoint, never through a device",
+            launch.opcode()
+        ),
         other => panic!(
             "{} is a substitution-phase launch; it executes through launch_solve \
              (exec_host_solve_launch), never through the factorization launch path",
@@ -847,6 +875,11 @@ pub(crate) fn exec_host_solve_launch(
             }
             ws.put_vec(*x, xv);
         }
+        Launch::Exchange { .. } | Launch::ExchangeVec { .. } => panic!(
+            "{} is a comm launch; it executes through the executor's transport \
+             endpoint, never through a device",
+            launch.opcode()
+        ),
         other => panic!(
             "{} is a factorization-phase launch; launch_solve only executes substitution opcodes",
             other.opcode()
@@ -1022,234 +1055,6 @@ impl Drop for Workspace<'_> {
     fn drop(&mut self) {
         if let Some(region) = self.region.take() {
             self.pool.release(region);
-        }
-    }
-}
-
-// ---------------------------------------------------------------------
-// Legacy slice-based adapter.
-// ---------------------------------------------------------------------
-
-/// Adapts any [`Device`] to the deprecated slice-based
-/// [`BatchExec`](crate::batch::BatchExec) trait by round-tripping each call
-/// through scratch arenas (upload → launch → fence → download; substitution
-/// calls stage matrices and vectors in separate arenas to satisfy the
-/// [`Device::launch_solve`] factor/workspace split). Keeps
-/// pre-redesign call sites (kernel micro-benches, research scripts)
-/// compiling until they migrate to [`Device`] directly — at the cost of
-/// exactly the per-call host marshalling the redesign removed from the hot
-/// path, so do not use it inside the executor.
-pub struct LegacyBatchExec<'d> {
-    device: &'d dyn Device,
-}
-
-impl<'d> LegacyBatchExec<'d> {
-    pub fn new(device: &'d dyn Device) -> LegacyBatchExec<'d> {
-        LegacyBatchExec { device }
-    }
-
-    fn ids(from: usize, n: usize) -> Vec<BufferId> {
-        (from..from + n).map(|i| BufferId(i as u32)).collect()
-    }
-}
-
-#[allow(deprecated)]
-impl super::BatchExec for LegacyBatchExec<'_> {
-    fn potrf(&self, level: usize, blocks: &mut [Matrix]) {
-        let n = blocks.len();
-        let mut arena = self.device.new_arena(n);
-        let ids = Self::ids(0, n);
-        for (&id, b) in ids.iter().zip(blocks.iter()) {
-            arena.upload(id, b);
-        }
-        self.device.launch(arena.as_mut(), &Launch::Potrf { level, bufs: &ids });
-        self.device.fence();
-        for (&id, b) in ids.iter().zip(blocks.iter_mut()) {
-            *b = arena.download(id);
-        }
-    }
-
-    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]) {
-        assert_eq!(l.len(), b.len());
-        let n = b.len();
-        let mut arena = self.device.new_arena(2 * n);
-        let l_ids = Self::ids(0, n);
-        let b_ids = Self::ids(n, n);
-        for (&id, m) in l_ids.iter().zip(l) {
-            arena.upload(id, m);
-        }
-        for (&id, m) in b_ids.iter().zip(b.iter()) {
-            arena.upload(id, m);
-        }
-        let items: Vec<TrsmItem> = l_ids
-            .iter()
-            .zip(&b_ids)
-            .map(|(&l, &b)| TrsmItem { l, b })
-            .collect();
-        self.device.launch(arena.as_mut(), &Launch::TrsmRightLt { level, items: &items });
-        self.device.fence();
-        for (&id, m) in b_ids.iter().zip(b.iter_mut()) {
-            *m = arena.download(id);
-        }
-    }
-
-    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]) {
-        assert_eq!(a.len(), c.len());
-        let n = c.len();
-        let mut arena = self.device.new_arena(2 * n);
-        let a_ids = Self::ids(0, n);
-        let c_ids = Self::ids(n, n);
-        for (&id, m) in a_ids.iter().zip(a) {
-            arena.upload(id, m);
-        }
-        for (&id, m) in c_ids.iter().zip(c.iter()) {
-            arena.upload(id, m);
-        }
-        let items: Vec<SyrkItem> = a_ids
-            .iter()
-            .zip(&c_ids)
-            .map(|(&a, &c)| SyrkItem { a, c })
-            .collect();
-        self.device.launch(arena.as_mut(), &Launch::SchurSelf { level, items: &items });
-        self.device.fence();
-        for (&id, m) in c_ids.iter().zip(c.iter_mut()) {
-            *m = arena.download(id);
-        }
-    }
-
-    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix> {
-        assert_eq!(u.len(), a.len());
-        assert_eq!(v.len(), a.len());
-        let n = a.len();
-        let mut arena = self.device.new_arena(4 * n);
-        let u_ids = Self::ids(0, n);
-        let a_ids = Self::ids(n, n);
-        let v_ids = Self::ids(2 * n, n);
-        let d_ids = Self::ids(3 * n, n);
-        for (&id, m) in u_ids.iter().zip(u) {
-            arena.upload(id, m);
-        }
-        for (&id, m) in a_ids.iter().zip(a) {
-            arena.upload(id, m);
-        }
-        for (&id, m) in v_ids.iter().zip(v) {
-            arena.upload(id, m);
-        }
-        let items: Vec<SparsifyItem> = (0..n)
-            .map(|t| SparsifyItem { u: u_ids[t], a: a_ids[t], v: v_ids[t], dst: d_ids[t] })
-            .collect();
-        self.device.launch(arena.as_mut(), &Launch::Sparsify { level, items: &items });
-        self.device.fence();
-        d_ids.iter().map(|&id| arena.download(id)).collect()
-    }
-
-    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
-        self.trsv_impl(level, l, x, false);
-    }
-
-    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]) {
-        self.trsv_impl(level, l, x, true);
-    }
-
-    fn gemv_acc(
-        &self,
-        level: usize,
-        alpha: f64,
-        a: &[&Matrix],
-        trans: bool,
-        x: &[&[f64]],
-        y: &mut [Vec<f64>],
-    ) {
-        assert_eq!(a.len(), x.len());
-        assert_eq!(a.len(), y.len());
-        let n = a.len();
-        // Substitution opcode: matrices stage in a (read-only) factor
-        // arena, vectors in a workspace arena — the launch_solve contract.
-        let mut mats = self.device.new_arena(n);
-        let mut vecs = self.device.new_arena(2 * n);
-        let a_ids = Self::ids(0, n);
-        let x_ids = Self::ids(0, n);
-        let y_ids = Self::ids(n, n);
-        for (&id, m) in a_ids.iter().zip(a) {
-            mats.upload(id, m);
-        }
-        for (&id, xv) in x_ids.iter().zip(x) {
-            vecs.upload_vec(id, xv);
-        }
-        for (&id, yv) in y_ids.iter().zip(y.iter()) {
-            vecs.upload_vec(id, yv);
-        }
-        let items: Vec<(BufferId, BufferId, BufferId)> = (0..n)
-            .map(|t| (a_ids[t], x_ids[t], y_ids[t]))
-            .collect();
-        self.device.launch_solve(
-            mats.as_ref(),
-            vecs.as_mut(),
-            &Launch::GemvAcc { level, trans, alpha, items: &items },
-        );
-        self.device.fence();
-        for (&id, yv) in y_ids.iter().zip(y.iter_mut()) {
-            *yv = vecs.download_vec(id);
-        }
-    }
-
-    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>> {
-        assert_eq!(u.len(), x.len());
-        let n = u.len();
-        let mut mats = self.device.new_arena(n);
-        let mut vecs = self.device.new_arena(2 * n);
-        let u_ids = Self::ids(0, n);
-        let x_ids = Self::ids(0, n);
-        let d_ids = Self::ids(n, n);
-        for (&id, m) in u_ids.iter().zip(u) {
-            mats.upload(id, m);
-        }
-        for (&id, xv) in x_ids.iter().zip(x) {
-            vecs.upload_vec(id, xv);
-        }
-        for (&id, m) in d_ids.iter().zip(u) {
-            vecs.alloc_vec(id, if trans { m.cols() } else { m.rows() });
-        }
-        let items: Vec<BasisItem> = (0..n).map(|t| (u_ids[t], x_ids[t], d_ids[t])).collect();
-        self.device.launch_solve(
-            mats.as_ref(),
-            vecs.as_mut(),
-            &Launch::ApplyBasis { level, trans, items: &items },
-        );
-        self.device.fence();
-        d_ids.iter().map(|&id| vecs.download_vec(id)).collect()
-    }
-
-    fn name(&self) -> &'static str {
-        self.device.name()
-    }
-}
-
-impl LegacyBatchExec<'_> {
-    fn trsv_impl(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>], bwd: bool) {
-        assert_eq!(l.len(), x.len());
-        let n = l.len();
-        let mut mats = self.device.new_arena(n);
-        let mut vecs = self.device.new_arena(n);
-        let l_ids = Self::ids(0, n);
-        let x_ids = Self::ids(0, n);
-        for (&id, m) in l_ids.iter().zip(l) {
-            mats.upload(id, m);
-        }
-        for (&id, xv) in x_ids.iter().zip(x.iter()) {
-            vecs.upload_vec(id, xv);
-        }
-        let items: Vec<(BufferId, BufferId)> =
-            l_ids.iter().zip(&x_ids).map(|(&l, &x)| (l, x)).collect();
-        let launch = if bwd {
-            Launch::TrsvBwd { level, items: &items }
-        } else {
-            Launch::TrsvFwd { level, items: &items }
-        };
-        self.device.launch_solve(mats.as_ref(), vecs.as_mut(), &launch);
-        self.device.fence();
-        for (&id, xv) in x_ids.iter().zip(x.iter_mut()) {
-            *xv = vecs.download_vec(id);
         }
     }
 }

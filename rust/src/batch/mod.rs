@@ -27,75 +27,17 @@
 //! maximum (multiples of 4), and POTRF padding writes unit diagonals so the
 //! Cholesky never divides by zero (the paper's "batched AXPY ... via a
 //! degenerate GEMM" trick).
-//!
-//! The pre-redesign slice-based [`BatchExec`] trait is deprecated; use
-//! [`device::LegacyBatchExec`] to adapt a [`device::Device`] for old call
-//! sites until they migrate.
 
 pub mod device;
 pub mod native;
 pub mod pad;
 
 pub use device::{
-    AsyncDevice, Device, DeviceArena, HostArena, Launch, LegacyBatchExec, ValidatingDevice,
-    VecRegion, Workspace, WorkspacePool,
+    AsyncDevice, Device, DeviceArena, HostArena, Launch, ValidatingDevice, VecRegion, Workspace,
+    WorkspacePool,
 };
 
 use crate::linalg::Matrix;
-
-/// Backend-neutral batched kernels over host slices — the pre-redesign
-/// backend contract, superseded by the arena-native [`device::Device`]
-/// trait (which backends now implement directly and the plan executor
-/// drives without per-launch slice reconstruction).
-///
-/// Kept only so slice-based research code and micro-benches compile via
-/// [`device::LegacyBatchExec`]; every call through this trait round-trips
-/// host memory per launch.
-#[deprecated(
-    since = "0.1.0",
-    note = "implement batch::device::Device; wrap a Device in \
-            batch::device::LegacyBatchExec for slice-based call sites"
-)]
-pub trait BatchExec: Sync {
-    /// In-place lower Cholesky of each block.
-    fn potrf(&self, level: usize, blocks: &mut [Matrix]);
-
-    /// `B_t <- B_t * L_tᵀ⁻¹` for each t (right-side lower-transposed TRSM —
-    /// the ULV panel solve `L_ji = A_ji L_iiᵀ⁻¹`).
-    fn trsm_right_lt(&self, level: usize, l: &[&Matrix], b: &mut [Matrix]);
-
-    /// `C_t <- C_t - A_t A_tᵀ` (SYRK-shaped Schur update of `A^SS`).
-    fn schur_self(&self, level: usize, a: &[&Matrix], c: &mut [Matrix]);
-
-    /// Two-sided basis transform `F_t = U_tᵀ A_t V_t` (matrix
-    /// sparsification, paper Figure 2). `U`/`V` are square orthogonal.
-    fn sparsify(&self, level: usize, u: &[&Matrix], a: &[Matrix], v: &[&Matrix]) -> Vec<Matrix>;
-
-    /// Batched `y_t <- L_t⁻¹ x_t` (forward TRSV on the diagonal blocks).
-    fn trsv_fwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]);
-
-    /// Batched `y_t <- L_tᵀ⁻¹ x_t` (backward TRSV).
-    fn trsv_bwd(&self, level: usize, l: &[&Matrix], x: &mut [Vec<f64>]);
-
-    /// Batched GEMV accumulate `y_t += alpha * op(A_t) x_t`. `trans` selects
-    /// `A` (false) or `Aᵀ` (true). Off-diagonal substitution updates.
-    fn gemv_acc(
-        &self,
-        level: usize,
-        alpha: f64,
-        a: &[&Matrix],
-        trans: bool,
-        x: &[&[f64]],
-        y: &mut [Vec<f64>],
-    );
-
-    /// Batched small dense `y_t = U_tᵀ x_t` / `y_t = U_t x_t` (basis applied
-    /// to vectors during substitution). `trans=true` applies `Uᵀ`.
-    fn apply_basis(&self, level: usize, u: &[&Matrix], trans: bool, x: &[&[f64]]) -> Vec<Vec<f64>>;
-
-    /// Human-readable backend name (diagnostics / traces).
-    fn name(&self) -> &'static str;
-}
 
 /// FLOP-count helpers shared by backends.
 pub(crate) fn count_sparsify_flops(u: &Matrix, a: &Matrix, v: &Matrix) {

@@ -80,24 +80,34 @@ USAGE:
                  no host mirror — half the factor memory; mirrored is the
                  default)
                 [--subst parallel|naive] [--ranks P] [--seed S] [--threads T]
-                (--threads caps the solve_many worker fan-out; 0 = all cores)
+                (--ranks P > 1 runs the real SPMD path: P thread-ranks,
+                 each with its own device + rank-sharded arena, exchanging
+                 buffers at the carved plan's Exchange instructions; prints
+                 modeled α-β comm next to the measured exchange wall time.
+                 --threads caps the solve_many worker fan-out; 0 = all cores)
   h2ulv plan-dump [--n N] [--kernel K] [--geometry G] [--rank R] [--leaf L]
-                [--eta E] [--seed S] [--lint] [--exec BACKEND]
+                [--eta E] [--seed S] [--lint] [--ranks P] [--exec BACKEND]
                 (record the execution plan only; print per-level launch
                  counts and padded-vs-useful FLOP ratios — no numerics.
                  --lint additionally runs the static verifier and prints
                  per-level critical-path / available-parallelism columns.
+                 --ranks P > 1 additionally carves the plan for P ranks
+                 and prints the cross-rank comm schedule (per-collective
+                 buffer counts and delivered bytes).
                  --exec additionally replays the factorization on BACKEND
                  and prints the observed per-stream schedule: on
                  async:INNER backends this is the overlap evidence)
-  h2ulv plan-lint [--seeds S] [--json]
+  h2ulv plan-lint [--seeds S] [--ranks P] [--json]
   h2ulv plan-lint --n N [--kernel K] [--geometry G] [--rank R] [--leaf L]
-                [--eta E] [--seed S] [--json]
+                [--eta E] [--seed S] [--ranks P] [--json]
                 (statically verify recorded plans — dataflow lint, exact
                  peak-memory prediction, hazard-graph audit — for a sweep
                  of fuzzed structures (default; S from --seeds or
                  H2_TEST_SEEDS, else 8) or one explicit problem (--n).
                  Factorization and both substitution programs are checked;
+                 with --ranks P > 1 each plan is also carved for P ranks
+                 and the cross-rank audit (per-rank dataflow, send/recv
+                 matching, collective-count agreement) must pass;
                  exit 1 on any violation. --json emits machine-readable
                  reports)
   h2ulv bench   [--n N] [--fuzz S] [--scenarios FILTER] [--json]
@@ -260,13 +270,28 @@ fn cmd_solve(args: &Args) -> i32 {
         match solver.solve_dist(&b, ranks) {
             Ok(rep) => {
                 println!(
-                    "distributed P={}: factor {:.3}s subst {:.3}s (modeled, NCCL-like), comm {:.1} KB, residual {:.2e}",
+                    "distributed P={}: thread-ranks on rank-sharded arenas (one {} device per rank)",
                     rep.ranks,
-                    rep.factor_time,
-                    rep.subst_time,
-                    (rep.factor_bytes + rep.subst_bytes) as f64 / 1e3,
-                    rep.residual.unwrap_or(f64::NAN)
+                    solver.backend_name()
                 );
+                let m = &rep.measured;
+                println!(
+                    "  factor: modeled {:.4}s / {:.1} KB (NCCL-like α-β) | measured {} collective(s), {:.1} KB sent, {:.4}s exchange wall",
+                    rep.factor_time,
+                    rep.factor_bytes as f64 / 1e3,
+                    m.factor.exchanges,
+                    m.factor.bytes as f64 / 1e3,
+                    m.factor.seconds
+                );
+                println!(
+                    "  subst:  modeled {:.4}s / {:.1} KB (NCCL-like α-β) | measured {} collective(s), {:.1} KB sent, {:.4}s exchange wall",
+                    rep.subst_time,
+                    rep.subst_bytes as f64 / 1e3,
+                    m.subst.exchanges,
+                    m.subst.bytes as f64 / 1e3,
+                    m.subst.seconds
+                );
+                println!("  sampled residual |Ax-b|/|b| = {:.3e}", rep.residual.unwrap_or(f64::NAN));
                 return 0;
             }
             Err(e) => {
@@ -444,6 +469,14 @@ fn cmd_plan_dump(args: &Args) -> i32 {
         }
         print!("{}", report.render());
     }
+    let ranks = args.usize_or("ranks", 1);
+    if ranks > 1 {
+        // Carve the plan for a thread-rank group and print the comm
+        // schedule — Exchange instructions are ordinary plan IR, so the
+        // whole distributed schedule is visible statically.
+        let rps = crate::plan::carve(&plan, ranks, SubstMode::Parallel);
+        print!("{}", crate::plan::render_comm(&rps));
+    }
     if let Some(name) = args.get("exec") {
         let Some(spec) = BackendSpec::by_name(name) else {
             eprintln!("unknown backend: {name}\n{USAGE}");
@@ -482,17 +515,38 @@ fn fuzz_case(seed: u64) -> crate::bench::cases::Case {
 }
 
 /// Record and statically verify the plan for one problem. The lazy naive
-/// substitution program is forced first so both modes are linted.
+/// substitution program is forced first so both modes are linted. With
+/// `ranks > 1` the plan is additionally carved for that thread-rank group
+/// and the cross-rank audit runs on the carved set (per-rank dataflow,
+/// collective-count agreement, send/recv matching).
 fn lint_problem(
     g: &Geometry,
     kernel: &KernelFn,
     cfg: &H2Config,
-) -> Result<Result<crate::plan::PlanReport, crate::plan::PlanViolation>, H2Error> {
+    ranks: usize,
+) -> Result<
+    Result<
+        (crate::plan::PlanReport, Option<crate::plan::verify::RankSetReport>),
+        crate::plan::PlanViolation,
+    >,
+    H2Error,
+> {
     crate::solver::guard("planning", || {
         let h2 = crate::h2::H2Matrix::construct(g, kernel, cfg);
         let plan = crate::plan::record(&h2);
         let _ = plan.solve_program(SubstMode::Naive);
-        crate::plan::verify::verify(&plan)
+        let report = match crate::plan::verify::verify(&plan) {
+            Ok(r) => r,
+            Err(v) => return Err(v),
+        };
+        if ranks > 1 {
+            match crate::plan::verify::verify_carved(&plan, ranks, SubstMode::Parallel) {
+                Ok(rs) => Ok((report, Some(rs))),
+                Err(v) => Err(v),
+            }
+        } else {
+            Ok((report, None))
+        }
     })
 }
 
@@ -550,6 +604,18 @@ fn report_json(r: &crate::plan::PlanReport) -> String {
     )
 }
 
+fn rank_set_json(rs: &crate::plan::verify::RankSetReport) -> String {
+    format!(
+        "{{\"ranks\":{},\"factor_collectives\":{},\"solve_collectives\":{},\
+         \"factor_comm_bytes\":{},\"solve_comm_bytes\":{}}}",
+        rs.ranks,
+        rs.factor_collectives,
+        rs.solve_collectives,
+        rs.factor_comm_bytes,
+        rs.solve_comm_bytes
+    )
+}
+
 fn violation_json(v: &crate::plan::PlanViolation) -> String {
     format!(
         "{{\"program\":\"{}\",\"index\":{},\"opcode\":\"{}\",\"buffer\":{},\
@@ -582,12 +648,30 @@ fn cmd_plan_lint(args: &Args) -> i32 {
                 kernel.name, g.name, cfg.leaf_size, cfg.max_rank, cfg.eta
             );
         }
-        return match lint_problem(&g, &kernel, &cfg) {
-            Ok(Ok(report)) => {
+        return match lint_problem(&g, &kernel, &cfg, args.usize_or("ranks", 1)) {
+            Ok(Ok((report, rank_set))) => {
                 if json {
-                    println!("{{\"ok\":true,\"report\":{}}}", report_json(&report));
+                    match &rank_set {
+                        Some(rs) => println!(
+                            "{{\"ok\":true,\"report\":{},\"rank_set\":{}}}",
+                            report_json(&report),
+                            rank_set_json(rs)
+                        ),
+                        None => println!("{{\"ok\":true,\"report\":{}}}", report_json(&report)),
+                    }
                 } else {
                     print!("{}", report.render());
+                    if let Some(rs) = &rank_set {
+                        println!(
+                            "rank-set audit P={}: ok — {} factor / {} solve collective(s), \
+                             {} B / {} B delivered",
+                            rs.ranks,
+                            rs.factor_collectives,
+                            rs.solve_collectives,
+                            rs.factor_comm_bytes,
+                            rs.solve_comm_bytes
+                        );
+                    }
                 }
                 0
             }
@@ -614,6 +698,7 @@ fn cmd_plan_lint(args: &Args) -> i32 {
             std::env::var("H2_TEST_SEEDS").ok().and_then(|s| s.parse::<u64>().ok())
         })
         .unwrap_or(8);
+    let ranks = args.usize_or("ranks", 1);
     let mut rows = Vec::new();
     let mut failures = 0usize;
     for seed in 0..count {
@@ -631,14 +716,31 @@ fn cmd_plan_lint(args: &Args) -> i32 {
             case.kernel,
             case.distribution.name()
         );
-        match lint_problem(&g, &case.kernel_fn(), &cfg) {
-            Ok(Ok(report)) => {
+        match lint_problem(&g, &case.kernel_fn(), &cfg, ranks) {
+            Ok(Ok((report, rank_set))) => {
                 if json {
-                    rows.push(format!("{{{head},\"ok\":true,\"report\":{}}}", report_json(&report)));
+                    let rs_field = rank_set
+                        .as_ref()
+                        .map(|rs| format!(",\"rank_set\":{}", rank_set_json(rs)))
+                        .unwrap_or_default();
+                    rows.push(format!(
+                        "{{{head},\"ok\":true,\"report\":{}{rs_field}}}",
+                        report_json(&report)
+                    ));
                 } else {
+                    let rs_note = rank_set
+                        .as_ref()
+                        .map(|rs| {
+                            format!(
+                                ", P={} comm ok ({} collectives)",
+                                rs.ranks,
+                                rs.factor_collectives + rs.solve_collectives
+                            )
+                        })
+                        .unwrap_or_default();
                     println!(
                         "seed {:>2}: N={:<5} leaf={} rank={:<2} eta={} {}/{} — ok: peak {} B, \
-                         {} ops / {} edges, crit path {}, parallelism {:.1}",
+                         {} ops / {} edges, crit path {}, parallelism {:.1}{rs_note}",
                         case.seed,
                         case.n,
                         case.leaf_size,

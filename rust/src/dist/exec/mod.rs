@@ -1,0 +1,196 @@
+//! Real multi-rank SPMD execution of carved rank plans.
+//!
+//! This is the runtime behind `H2Solver::solve_dist`: the global recorded
+//! plan is carved into per-rank [`RankPlan`]s
+//! ([`crate::plan::carve`]), each rank gets its **own** device instance
+//! and device arena, and the ranks execute their streams concurrently —
+//! one OS thread per rank — meeting only at the plan's explicit
+//! `Exchange` instructions, which a [`Transport`] endpoint per rank
+//! carries across the rank boundary.
+//!
+//! The division of labor:
+//!
+//! * [`crate::plan::rank`] decides *what* each rank runs (instruction
+//!   filtering, comm placement);
+//! * [`crate::plan::exec::Executor`] replays a rank's stream unchanged,
+//!   routing `Exchange` steps to the attached transport;
+//! * this module owns the *processes*: per-rank devices, per-rank arenas,
+//!   the thread-per-rank harness, and aggregation of measured
+//!   communication ([`crate::metrics::comm::CommTotals`]).
+//!
+//! [`ThreadTransport`] is the in-process transport; the [`Transport`]
+//! trait is the seam where an inter-process or NCCL-style backend would
+//! plug in. Because every rank replays the same collective sequence
+//! (statically checked by [`crate::plan::verify::verify_rank_set`]), the
+//! rendezvous needs no tags. A rank panic inside a collective would
+//! strand its peers, so the carved plans are verified before any thread
+//! is spawned (debug builds verify inside [`crate::plan::carve`] too).
+//!
+//! The modeled α-β driver in [`crate::dist`] is retained as the
+//! *prediction* — `DistReport` carries both the model and, when a run
+//! came through here, the measured totals, so the two render side by
+//! side.
+
+pub mod transport;
+
+pub use transport::{CommPayload, ExchangeMsg, ThreadTransport, Transport, TransportStats};
+
+use crate::batch::device::{Device, DeviceArena, VecRegion};
+use crate::h2::H2Matrix;
+use crate::metrics::comm::CommTotals;
+use crate::plan::{carve, Executor, Plan, RankPlan};
+use crate::solver::{BackendSpec, H2Error};
+use crate::ulv::SubstMode;
+
+/// Aggregate per-endpoint counters into phase totals: the collective
+/// count is per-rank (identical on every endpoint of a verified rank
+/// set), bytes sum over ranks, and seconds take the slowest endpoint
+/// (the critical path).
+fn aggregate(stats: &[TransportStats]) -> CommTotals {
+    let exchanges = stats.first().map(|s| s.exchanges).unwrap_or(0);
+    debug_assert!(
+        stats.iter().all(|s| s.exchanges == exchanges),
+        "ranks disagree on collective count: {stats:?}"
+    );
+    CommTotals {
+        exchanges,
+        bytes: stats.iter().map(|s| s.bytes_sent).sum(),
+        seconds: stats.iter().map(|s| s.seconds).fold(0.0, f64::max),
+    }
+}
+
+/// A factorized multi-rank session: `P` carved rank plans, `P` device
+/// instances, and `P` rank-sharded arenas holding the distributed ULV
+/// factor. Building the session runs the factorization once (SPMD,
+/// thread-per-rank); [`DistSession::solve`] then replays the carved
+/// substitution any number of times against the resident shards.
+///
+/// Solves take `&self` — each call gets fresh transport endpoints and
+/// per-thread workspaces, and the factor shards are only read — so a
+/// session can serve concurrent distributed solves.
+pub struct DistSession {
+    plans: Vec<RankPlan>,
+    devices: Vec<Box<dyn Device>>,
+    arenas: Vec<Box<dyn DeviceArena>>,
+    factor_comm: CommTotals,
+    mode: SubstMode,
+    n: usize,
+}
+
+impl DistSession {
+    /// Carve `plan` for (up to) `ranks` ranks and run the distributed
+    /// factorization: one device instantiated from `spec` per rank, one
+    /// thread per rank, arenas kept resident for later solves.
+    ///
+    /// The effective rank count is `ranks` rounded down to a power of two
+    /// and clamped to the leaf width ([`crate::plan::rank::clamp_ranks`]);
+    /// read it back with [`DistSession::ranks`]. Fails with
+    /// [`H2Error::BackendUnavailable`] when `spec` cannot instantiate.
+    pub fn build(
+        spec: &BackendSpec,
+        plan: &Plan,
+        h2: &H2Matrix,
+        ranks: usize,
+        mode: SubstMode,
+    ) -> Result<DistSession, H2Error> {
+        let plans = carve(plan, ranks, mode);
+        let p = plans.len();
+        let devices = (0..p)
+            .map(|_| spec.instantiate())
+            .collect::<Result<Vec<Box<dyn Device>>, H2Error>>()?;
+
+        let group = ThreadTransport::group(p);
+        let built: Vec<(Box<dyn DeviceArena>, TransportStats)> = std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .into_iter()
+                .enumerate()
+                .map(|(r, t)| {
+                    let dev: &dyn Device = devices[r].as_ref();
+                    let rp = &plans[r];
+                    s.spawn(move || {
+                        let arena = Executor::new(dev).with_comm(&t).factorize_rank(rp, h2);
+                        (arena, t.stats())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked during distributed factorization"))
+                .collect()
+        });
+
+        let stats: Vec<TransportStats> = built.iter().map(|(_, st)| *st).collect();
+        let arenas = built.into_iter().map(|(a, _)| a).collect();
+        Ok(DistSession {
+            n: plans[0].n,
+            plans,
+            devices,
+            arenas,
+            factor_comm: aggregate(&stats),
+            mode,
+        })
+    }
+
+    /// Effective rank count (power of two, clamped to the leaf width).
+    pub fn ranks(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The substitution mode the rank plans were carved for.
+    pub fn mode(&self) -> SubstMode {
+        self.mode
+    }
+
+    /// The carved per-rank plans (for inspection / plan dumps).
+    pub fn rank_plans(&self) -> &[RankPlan] {
+        &self.plans
+    }
+
+    /// Measured factorization-phase communication.
+    pub fn factor_comm(&self) -> CommTotals {
+        self.factor_comm
+    }
+
+    /// Run the carved substitution: `b` and the returned solution are in
+    /// tree ordering (the solver facade handles the permutation). Each
+    /// rank solves its stream against its resident factor shard; the
+    /// global solution is stitched from the per-rank owned leaf ranges,
+    /// which partition `0..n`. Also returns the measured
+    /// substitution-phase communication.
+    pub fn solve(&self, b: &[f64]) -> (Vec<f64>, CommTotals) {
+        assert_eq!(b.len(), self.n, "right-hand side length must match the plan");
+        let p = self.ranks();
+        let group = ThreadTransport::group(p);
+        let results: Vec<(Vec<f64>, TransportStats)> = std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .into_iter()
+                .enumerate()
+                .map(|(r, t)| {
+                    let dev: &dyn Device = self.devices[r].as_ref();
+                    let rp = &self.plans[r];
+                    let arena = self.arenas[r].as_ref();
+                    s.spawn(move || {
+                        let mut ws = VecRegion::new(dev, 0);
+                        let x = Executor::new(dev)
+                            .with_comm(&t)
+                            .solve_program_in(&rp.solve, rp.n, arena, &mut ws, b);
+                        (x, t.stats())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked during distributed substitution"))
+                .collect()
+        });
+
+        let mut x = vec![0.0; self.n];
+        for (r, (xr, _)) in results.iter().enumerate() {
+            for &(s0, e) in &self.plans[r].store_ranges {
+                x[s0..e].copy_from_slice(&xr[s0..e]);
+            }
+        }
+        let stats: Vec<TransportStats> = results.iter().map(|(_, st)| *st).collect();
+        (x, aggregate(&stats))
+    }
+}

@@ -1,0 +1,265 @@
+//! The rank boundary: a [`Transport`] endpoint per rank, carrying the
+//! payloads of the plan's `Exchange` instructions.
+//!
+//! The executor replays a [`crate::plan::RankPlan`] exactly like a global
+//! plan, except that `Exchange` steps are routed here instead of to a
+//! device kernel: the sending side downloads the named buffers from its
+//! arena, the transport rendezvouses with every peer's matching exchange,
+//! and the receiving side uploads the incoming payloads into its own
+//! arena. Because every rank's carved stream contains the *same* sequence
+//! of `Exchange` steps (possibly with empty send/recv lists), the k-th
+//! `exchange()` call on every endpoint belongs to the same collective —
+//! no tags are needed; the epoch counter is the tag.
+//!
+//! [`ThreadTransport`] is the in-process implementation (thread-per-rank
+//! over a shared mailbox). The trait is deliberately narrow — `ranks`,
+//! `rank`, one collective `exchange`, and counters — so a process or
+//! socket transport can slot in behind the same seam.
+
+use crate::linalg::Matrix;
+use crate::plan::BufferId;
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One buffer's worth of exchanged data. Matrix payloads carry
+/// factorization blocks (`Instr::Exchange`); vector payloads carry
+/// substitution segments (`SolveInstr::Exchange`).
+#[derive(Clone, Debug)]
+pub enum CommPayload {
+    /// A factor-phase matrix block.
+    Mat(Matrix),
+    /// A substitution-phase vector segment.
+    Vector(Vec<f64>),
+}
+
+impl CommPayload {
+    /// Payload size in bytes (f64 entries × 8).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            CommPayload::Mat(m) => (m.rows() * m.cols() * 8) as u64,
+            CommPayload::Vector(v) => (v.len() * 8) as u64,
+        }
+    }
+}
+
+/// One outgoing buffer in an exchange: the plan-global [`BufferId`] is the
+/// address — receivers ask for `(sender rank, BufferId)` pairs.
+#[derive(Clone, Debug)]
+pub struct ExchangeMsg {
+    pub buf: BufferId,
+    pub payload: CommPayload,
+}
+
+/// Per-endpoint communication counters, accumulated across every
+/// `exchange()` on this endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransportStats {
+    /// Collective exchanges this endpoint participated in.
+    pub exchanges: u64,
+    /// Bytes this endpoint sent (payload only).
+    pub bytes_sent: u64,
+    /// Wall time spent inside `exchange()` (serialization + rendezvous
+    /// wait), in seconds.
+    pub seconds: f64,
+}
+
+/// The rank boundary. One endpoint per rank; endpoints are `Send` so a
+/// rank thread can own its endpoint, and all methods take `&self` (state
+/// lives behind interior mutability) so the endpoint can sit next to the
+/// executor's other shared references.
+pub trait Transport: Send {
+    /// Number of ranks in the group.
+    fn ranks(&self) -> usize;
+    /// This endpoint's rank (0-based).
+    fn rank(&self) -> usize;
+    /// One collective exchange: post `sends`, rendezvous with every peer's
+    /// matching call, and return the payloads for `recvs` (as
+    /// `(sender rank, buffer)` pairs), in order. Every rank must call
+    /// `exchange` the same number of times — the call index is the
+    /// collective's identity.
+    fn exchange(&self, sends: Vec<ExchangeMsg>, recvs: &[(usize, BufferId)]) -> Vec<CommPayload>;
+    /// Counters accumulated on this endpoint so far.
+    fn stats(&self) -> TransportStats;
+}
+
+/// In-flight state of one collective: how many ranks have posted, how many
+/// have finished collecting, and the posted payloads keyed by
+/// `(sender rank, buffer)`.
+#[derive(Default)]
+struct EpochState {
+    posted: usize,
+    done: usize,
+    inbox: HashMap<(u32, u32), Arc<CommPayload>>,
+}
+
+/// Mailbox shared by every endpoint of one [`ThreadTransport::group`].
+struct Shared {
+    ranks: usize,
+    state: Mutex<HashMap<u64, EpochState>>,
+    cv: Condvar,
+}
+
+/// Thread-per-rank transport over a shared in-process mailbox. Epochs key
+/// the mailbox, so a fast rank may begin collective `e+1` while a slow
+/// rank is still collecting `e` — no barrier beyond the rendezvous itself.
+pub struct ThreadTransport {
+    shared: Arc<Shared>,
+    rank: usize,
+    epoch: Cell<u64>,
+    exchanges: Cell<u64>,
+    bytes_sent: Cell<u64>,
+    seconds: Cell<f64>,
+}
+
+impl ThreadTransport {
+    /// Create the endpoints of a `p`-rank group. Endpoint `i` is rank `i`.
+    pub fn group(p: usize) -> Vec<ThreadTransport> {
+        assert!(p >= 1, "a transport group needs at least one rank");
+        let shared = Arc::new(Shared {
+            ranks: p,
+            state: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        });
+        (0..p)
+            .map(|rank| ThreadTransport {
+                shared: shared.clone(),
+                rank,
+                epoch: Cell::new(0),
+                exchanges: Cell::new(0),
+                bytes_sent: Cell::new(0),
+                seconds: Cell::new(0.0),
+            })
+            .collect()
+    }
+}
+
+impl Transport for ThreadTransport {
+    fn ranks(&self) -> usize {
+        self.shared.ranks
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn exchange(&self, sends: Vec<ExchangeMsg>, recvs: &[(usize, BufferId)]) -> Vec<CommPayload> {
+        let start = Instant::now();
+        let e = self.epoch.get();
+        let sent_bytes: u64 = sends.iter().map(|m| m.payload.bytes()).sum();
+        let mut state = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let ep = state.entry(e).or_default();
+            for msg in sends {
+                let prev = ep.inbox.insert((self.rank as u32, msg.buf.0), Arc::new(msg.payload));
+                assert!(prev.is_none(), "rank {} re-sent buffer {} in one exchange", self.rank, msg.buf.0);
+            }
+            ep.posted += 1;
+        }
+        self.shared.cv.notify_all();
+        // Rendezvous: wait until every rank has posted this epoch's sends.
+        while state.get(&e).map(|ep| ep.posted).unwrap_or(0) < self.shared.ranks {
+            state = self.shared.cv.wait(state).unwrap_or_else(|p| p.into_inner());
+        }
+        let out: Vec<CommPayload> = {
+            let ep = state.get(&e).expect("epoch present until every rank is done");
+            recvs
+                .iter()
+                .map(|&(from, buf)| {
+                    let payload = ep.inbox.get(&(from as u32, buf.0)).unwrap_or_else(|| {
+                        panic!(
+                            "rank {} expected buffer {} from rank {} in exchange {}, \
+                             but it was never sent",
+                            self.rank, buf.0, from, e
+                        )
+                    });
+                    (**payload).clone()
+                })
+                .collect()
+        };
+        {
+            let ep = state.get_mut(&e).expect("epoch present until every rank is done");
+            ep.done += 1;
+            if ep.done == self.shared.ranks {
+                state.remove(&e);
+            }
+        }
+        drop(state);
+        self.shared.cv.notify_all();
+        self.epoch.set(e + 1);
+        self.exchanges.set(self.exchanges.get() + 1);
+        self.bytes_sent.set(self.bytes_sent.get() + sent_bytes);
+        self.seconds.set(self.seconds.get() + start.elapsed().as_secs_f64());
+        out
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            exchanges: self.exchanges.get(),
+            bytes_sent: self.bytes_sent.get(),
+            seconds: self.seconds.get(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_rank_exchange_delivers_both_ways() {
+        let group = ThreadTransport::group(2);
+        let (t0, t1) = {
+            let mut it = group.into_iter();
+            (it.next().unwrap(), it.next().unwrap())
+        };
+        let out = std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                let sends = vec![ExchangeMsg {
+                    buf: BufferId(7),
+                    payload: CommPayload::Vector(vec![1.0, 2.0]),
+                }];
+                let got = t0.exchange(sends, &[(1, BufferId(9))]);
+                (got, t0.stats())
+            });
+            let h1 = s.spawn(move || {
+                let sends = vec![ExchangeMsg {
+                    buf: BufferId(9),
+                    payload: CommPayload::Vector(vec![3.0]),
+                }];
+                let got = t1.exchange(sends, &[(0, BufferId(7))]);
+                (got, t1.stats())
+            });
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        let ((got0, st0), (got1, st1)) = out;
+        match &got0[0] {
+            CommPayload::Vector(v) => assert_eq!(v, &vec![3.0]),
+            _ => panic!("expected vector payload"),
+        }
+        match &got1[0] {
+            CommPayload::Vector(v) => assert_eq!(v, &vec![1.0, 2.0]),
+            _ => panic!("expected vector payload"),
+        }
+        assert_eq!(st0.exchanges, 1);
+        assert_eq!(st0.bytes_sent, 16);
+        assert_eq!(st1.bytes_sent, 8);
+    }
+
+    #[test]
+    fn empty_exchanges_still_rendezvous() {
+        let group = ThreadTransport::group(3);
+        std::thread::scope(|s| {
+            for t in group {
+                s.spawn(move || {
+                    for _ in 0..4 {
+                        let got = t.exchange(Vec::new(), &[]);
+                        assert!(got.is_empty());
+                    }
+                    assert_eq!(t.stats().exchanges, 4);
+                });
+            }
+        });
+    }
+}

@@ -1,12 +1,12 @@
-//! Simulated distributed-memory runtime with NCCL-like collectives
-//! (paper §5).
+//! Distributed-memory runtime: real SPMD execution plus an α-β
+//! prediction model (paper §5).
 //!
-//! SPMD execution over `P` ranks is *simulated*: the numerical pipeline
-//! runs exactly the same math as the single-process path (so every rank
-//! count produces bit-identical solutions — asserted in
-//! `tests/distributed.rs`), while communication volume and the per-rank
-//! FLOP split are modeled from the H² structure the way the paper's NCCL
-//! implementation communicates:
+//! Multi-rank execution is *real*: [`exec::DistSession`] carves the
+//! recorded plan into per-rank streams ([`crate::plan::carve`]), gives
+//! each rank its own device instance and rank-sharded arena, and runs
+//! the ranks concurrently — thread-per-rank behind the
+//! [`exec::Transport`] seam — meeting only at the plan's explicit
+//! `Exchange` instructions. The sharding follows the paper:
 //!
 //! * every rank owns a contiguous range of leaf subtrees — the 1-D
 //!   distribution enabled by the tree-ordered points (paper §5);
@@ -21,12 +21,20 @@
 //! * substitution additionally exchanges neighbor segments at distributed
 //!   levels — the O(P) neighbor-communication regime of Figure 22.
 //!
-//! Modeled wall times combine the per-rank FLOP split with an α-β
-//! (latency/bandwidth) collective cost model ([`CommModel`], [`NCCL_LIKE`]).
+//! This module keeps the *prediction* side: communication volume and the
+//! per-rank FLOP split are modeled from the H² structure, and modeled
+//! wall times combine that split with an α-β (latency/bandwidth)
+//! collective cost model ([`CommModel`], [`NCCL_LIKE`]). When a solve
+//! runs through the real path, [`DistReport::measured`] carries the
+//! transport's observed totals so prediction and measurement render side
+//! by side.
+
+pub mod exec;
 
 use crate::batch::device::{Device, DeviceArena, VecRegion};
 use crate::batch::native::NativeBackend;
 use crate::h2::H2Matrix;
+use crate::metrics::comm::CommMeasurement;
 use crate::metrics::flops;
 use crate::plan::Plan;
 use crate::ulv::{FactorMeta, SubstMode, UlvFactor};
@@ -55,23 +63,28 @@ impl CommModel {
 pub const NCCL_LIKE: CommModel =
     CommModel { latency_s: 12e-6, gb_per_s: 80.0, flop_per_s: 2.0e12 };
 
-/// Result of a simulated distributed factorize + solve.
+/// Result of a distributed factorize + solve: the solution, the modeled
+/// (predicted) communication volumes, and — when the run came through
+/// the real SPMD path ([`exec::DistSession`]) — the measured totals.
 pub struct DistReport {
     /// Solution in tree ordering (same ordering as the input right-hand
     /// side), identical across rank counts.
     pub x: Vec<f64>,
     /// Effective rank count used (power of two, clamped to the leaf width).
     pub ranks: usize,
-    /// Factorization communication volume in bytes.
+    /// Modeled factorization communication volume in bytes.
     pub factor_bytes: u64,
-    /// Factorization collective-call count.
+    /// Modeled factorization collective-call count.
     pub factor_ops: u64,
-    /// Substitution communication volume in bytes.
+    /// Modeled substitution communication volume in bytes.
     pub subst_bytes: u64,
-    /// Substitution communication-call count.
+    /// Modeled substitution communication-call count.
     pub subst_ops: u64,
     /// Per-rank `(factorization, substitution)` FLOPs.
     pub rank_flops: Vec<(u64, u64)>,
+    /// Measured communication from the real multi-rank run, `None` when
+    /// the report came from the modeled driver alone.
+    pub measured: Option<CommMeasurement>,
 }
 
 impl DistReport {
@@ -163,7 +176,15 @@ pub fn dist_solve_driver_in(
 
     // The numerical pipeline: identical math for every rank count.
     let x = crate::plan::Executor::new(exec).solve_in(plan, factor, ws, b, mode);
+    model_report(meta, p, x)
+}
 
+/// The α-β *prediction* alone: modeled communication volumes and per-rank
+/// FLOP splits for an (already clamped, power-of-two) rank count `p`,
+/// derived entirely from the factor's block shapes. `x` is wrapped into
+/// the report unchanged — pass the solution computed elsewhere (the real
+/// SPMD path computes it through [`exec::DistSession::solve`]).
+pub fn model_report(meta: &FactorMeta, p: usize, x: Vec<f64>) -> DistReport {
     let mut rank_flops = vec![(0u64, 0u64); p];
     let mut factor_bytes = 0u64;
     let mut factor_ops = 0u64;
@@ -260,7 +281,16 @@ pub fn dist_solve_driver_in(
         subst_ops += 1;
     }
 
-    DistReport { x, ranks: p, factor_bytes, factor_ops, subst_bytes, subst_ops, rank_flops }
+    DistReport {
+        x,
+        ranks: p,
+        factor_bytes,
+        factor_ops,
+        subst_bytes,
+        subst_ops,
+        rank_flops,
+        measured: None,
+    }
 }
 
 #[cfg(test)]

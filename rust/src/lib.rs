@@ -18,8 +18,10 @@
 //!   launch API ([`batch::device::Device`]), with a native thread-pool
 //!   backend and an XLA/PJRT backend that runs AOT-compiled JAX/Pallas
 //!   artifacts ([`batch`], [`runtime`]),
-//! * a simulated distributed-memory runtime with NCCL-like collectives
-//!   ([`dist`]),
+//! * a distributed-memory runtime: real SPMD thread-rank execution over
+//!   rank-sharded arenas with plan-level `Exchange` collectives
+//!   ([`dist::exec`]), plus the NCCL-like α-β communication model it is
+//!   validated against ([`dist`]),
 //! * baselines (dense Cholesky, BLR tile-Cholesky ≈ LORAPO) ([`baselines`]),
 //! * FLOP/time/communication metrics and the figure-regeneration harness
 //!   ([`metrics`], [`figures`]),

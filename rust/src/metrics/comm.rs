@@ -1,0 +1,43 @@
+//! Measured cross-rank communication totals.
+//!
+//! The modeled α-β numbers in [`crate::dist`] predict what the plan's
+//! `Exchange` instructions *should* cost; these types carry what the
+//! transport actually observed when the carved rank plans ran. The
+//! distributed solve report keeps both so prediction and measurement can
+//! be rendered side by side (paper Figure 23's compute/comm split).
+
+/// Measured totals for one phase (factorization or substitution) of a
+/// multi-rank run, aggregated across every rank's transport endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommTotals {
+    /// Collective exchanges per rank (every rank participates in the same
+    /// sequence of collectives, so this is the per-endpoint count).
+    pub exchanges: u64,
+    /// Total payload bytes sent, summed over all ranks.
+    pub bytes: u64,
+    /// Wall time inside `exchange()` on the critical path: the maximum
+    /// over ranks of per-endpoint cumulative exchange time, in seconds.
+    pub seconds: f64,
+}
+
+/// Measured communication for a full distributed factorize + solve.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommMeasurement {
+    /// Factorization-phase exchanges (`Instr::Exchange`).
+    pub factor: CommTotals,
+    /// Substitution-phase exchanges (`SolveInstr::Exchange`).
+    pub subst: CommTotals,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_zero() {
+        let m = CommMeasurement::default();
+        assert_eq!(m.factor.exchanges, 0);
+        assert_eq!(m.subst.bytes, 0);
+        assert_eq!(m.factor.seconds, 0.0);
+    }
+}

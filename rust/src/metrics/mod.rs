@@ -4,10 +4,12 @@
 //! 15 (FLOP count), 17 (FLOP split), and 23 (compute/comm breakdown),
 //! plus the `BENCH_*.json` benchmark trajectory files.
 
+pub mod comm;
 pub mod flops;
 pub mod overlap;
 pub mod run_trace;
 pub mod timer;
 
+pub use comm::{CommMeasurement, CommTotals};
 pub use overlap::{OverlapEvent, OverlapKind, OverlapTrace};
 pub use run_trace::{RunReport, RunTrace, Span};

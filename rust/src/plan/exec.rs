@@ -31,6 +31,7 @@
 
 use super::*;
 use crate::batch::device::{Device, DeviceArena, Launch, VecRegion};
+use crate::dist::exec::{CommPayload, ExchangeMsg, Transport};
 use crate::h2::H2Matrix;
 use crate::linalg::Matrix;
 use crate::metrics::flops::{FlopScope, Phase};
@@ -46,6 +47,10 @@ pub struct Executor<'a> {
     device: &'a dyn Device,
     scope: Option<&'a FlopScope>,
     trace: Option<RunTrace>,
+    /// Rank-boundary endpoint for `Exchange` instructions — `Some` only
+    /// when replaying a carved [`RankPlan`]; a global plan contains no
+    /// comm instructions and never consults it.
+    comm: Option<&'a dyn Transport>,
 }
 
 /// What happens to the factor when a factorization replay finishes.
@@ -60,7 +65,16 @@ enum Mirror {
 
 impl<'a> Executor<'a> {
     pub fn new(device: &'a dyn Device) -> Executor<'a> {
-        Executor { device, scope: None, trace: None }
+        Executor { device, scope: None, trace: None, comm: None }
+    }
+
+    /// Attach the rank-boundary [`Transport`] endpoint that `Exchange`
+    /// instructions execute through (SPMD replay of a carved
+    /// [`RankPlan`]). Replaying a stream that contains comm instructions
+    /// without an endpoint panics at the first exchange.
+    pub fn with_comm(mut self, comm: &'a dyn Transport) -> Executor<'a> {
+        self.comm = Some(comm);
+        self
     }
 
     /// Credit executed FLOPs (from the plan's statically-known metadata)
@@ -212,8 +226,62 @@ impl<'a> Executor<'a> {
                 Instr::Merge { level: _, items } => {
                     self.device.launch(arena, &Launch::Merge { items });
                 }
+                Instr::Exchange { level: _, sends, recvs } => {
+                    let comm = self
+                        .comm
+                        .expect("factor stream contains Exchange but no transport is attached");
+                    // The send payloads must reflect every launch issued so
+                    // far; comm is a synchronization point for this rank.
+                    self.device.fence();
+                    let msgs: Vec<ExchangeMsg> = sends
+                        .iter()
+                        .map(|&b| ExchangeMsg {
+                            buf: b,
+                            payload: CommPayload::Mat(arena.download(b)),
+                        })
+                        .collect();
+                    let want: Vec<(usize, BufferId)> =
+                        recvs.iter().map(|r| (r.from as usize, r.buf)).collect();
+                    let payloads = comm.exchange(msgs, &want);
+                    for (r, p) in recvs.iter().zip(payloads) {
+                        match p {
+                            CommPayload::Mat(m) => arena.upload(r.buf, &m),
+                            CommPayload::Vector(_) => {
+                                panic!("matrix exchange received a vector payload")
+                            }
+                        }
+                    }
+                }
             }
         }
+    }
+
+    /// Replay one rank's carved factorization program, leaving that rank's
+    /// shard of the factor resident in the returned arena. `Exchange`
+    /// steps route through the attached [`Transport`] endpoint
+    /// ([`Executor::with_comm`] is mandatory for multi-rank plans). The
+    /// root factor is computed redundantly on every rank (paper §5), so
+    /// each arena can serve its own substitution replays.
+    pub fn factorize_rank(&self, rp: &RankPlan, h2: &H2Matrix) -> Box<dyn DeviceArena> {
+        let prog = &rp.factor;
+        let mut arena = self.device.new_arena(prog.buf_count);
+        self.run_factor_steps(&prog.prologue, arena.as_mut(), h2);
+        for lp in &prog.levels {
+            self.device.stream(lp.level);
+            self.traced(lp.level, "factor-level", lp.steps.len(), || {
+                self.run_factor_steps(&lp.steps, arena.as_mut(), h2);
+            });
+        }
+        self.device.stream(0);
+        let root = [prog.root_src];
+        self.traced(0, "factor-root", 1, || {
+            self.device.launch(arena.as_mut(), &Launch::Potrf { level: 0, bufs: &root });
+            self.device.fence();
+        });
+        if let Some(scope) = self.scope {
+            scope.add(Phase::Factor, prog.total_flops);
+        }
+        arena
     }
 
     /// Build the factor's host form from the output wiring; `fetch`
@@ -319,8 +387,24 @@ impl<'a> Executor<'a> {
     ) -> Vec<f64> {
         assert_eq!(b.len(), plan.n);
         let prog = plan.solve_program(mode);
+        self.solve_program_in(prog, plan.n, factor, ws, b)
+    }
+
+    /// Replay an explicit substitution program (the body of
+    /// [`Executor::solve_in`], also the entry point for carved
+    /// [`RankPlan`] solve streams, whose `StoreSol` items cover only the
+    /// rank-owned leaf segments — the rest of the returned vector stays
+    /// zero for the caller to merge).
+    pub(crate) fn solve_program_in(
+        &self,
+        prog: &SolveProgram,
+        n: usize,
+        factor: &dyn DeviceArena,
+        ws: &mut VecRegion,
+        b: &[f64],
+    ) -> Vec<f64> {
         let base = prog.vec_base;
-        let mut x = vec![0.0; plan.n];
+        let mut x = vec![0.0; n];
 
         // Allocate and run under one unwind guard: a panic anywhere (a
         // non-SPD diagonal mid-launch, an allocation failure) must leave
@@ -425,6 +509,33 @@ impl<'a> Executor<'a> {
                         ws.arena(),
                         &Launch::RootSolve { l: *l, x: *x },
                     );
+                }
+                SolveInstr::Exchange { level: _, sends, recvs } => {
+                    let comm = self
+                        .comm
+                        .expect("solve stream contains Exchange but no transport is attached");
+                    self.device.fence();
+                    let msgs: Vec<ExchangeMsg> = sends
+                        .iter()
+                        .map(|&v| ExchangeMsg {
+                            buf: v,
+                            payload: CommPayload::Vector(ws.arena_ref().download_vec(v)),
+                        })
+                        .collect();
+                    let want: Vec<(usize, BufferId)> =
+                        recvs.iter().map(|&(from, v, _)| (from as usize, v)).collect();
+                    let payloads = comm.exchange(msgs, &want);
+                    for (&(_, v, len), p) in recvs.iter().zip(payloads) {
+                        match p {
+                            CommPayload::Vector(seg) => {
+                                assert_eq!(seg.len(), len as usize, "exchanged vector length");
+                                ws.arena().upload_vec(v, &seg);
+                            }
+                            CommPayload::Mat(_) => {
+                                panic!("vector exchange received a matrix payload")
+                            }
+                        }
+                    }
                 }
             }
         }

@@ -75,10 +75,12 @@
 //! instruction stream in memory for nothing ([`Plan::solve_program`]).
 
 pub mod exec;
+pub mod rank;
 pub mod record;
 pub mod verify;
 
 pub use exec::Executor;
+pub use rank::{carve, render_comm, RankPlan};
 pub use record::{record, Recorder};
 pub use verify::{PlanReport, PlanViolation};
 
@@ -162,10 +164,27 @@ pub struct MergeItem {
     pub parts: Vec<MergePart>,
 }
 
+/// One matrix buffer received by an [`Instr::Exchange`]: rank `from`
+/// publishes `buf`, and the receiving rank's arena defines `buf` with the
+/// annotated shape. Shapes are carried in the instruction so a rank plan
+/// stays verifiable on its own (the receiver never saw the sender's
+/// defining instruction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExchangeRecv {
+    /// Sending rank.
+    pub from: u32,
+    /// Buffer id (global id space — identical on sender and receiver).
+    pub buf: BufferId,
+    pub rows: u32,
+    pub cols: u32,
+}
+
 /// One factorization instruction. Batched variants are single conceptual
 /// kernel launches (the paper's batched cuBLAS/cuSOLVER calls);
 /// `Upload`/`Extract`/`Merge`/`Free` are data movement — `Upload` is the
-/// only one that reads host memory.
+/// only one that reads host memory. `Exchange` appears only in carved
+/// per-rank programs ([`rank::RankPlan`]); the global single-rank program
+/// never communicates.
 #[derive(Clone, Debug)]
 pub enum Instr {
     /// Transfer host data (dense blocks, couplings, bases) into the arena.
@@ -184,6 +203,14 @@ pub enum Instr {
     Merge { level: usize, items: Vec<MergeItem> },
     /// Release buffers that no later instruction reads.
     Free { bufs: Vec<BufferId> },
+    /// Collective rendezvous with the other ranks (SPMD programs only):
+    /// every rank executes its k-th `Exchange` together — the carved
+    /// analog of the paper's all-gather at the subtree-merge and
+    /// root-gather boundaries. `sends` publishes local matrices (they
+    /// stay live locally); each [`ExchangeRecv`] *defines* a remote
+    /// buffer in the local arena. Either list may be empty — a rank with
+    /// nothing to say still participates in the barrier.
+    Exchange { level: usize, sends: Vec<BufferId>, recvs: Vec<ExchangeRecv> },
 }
 
 /// Output wiring of one factorization level: which arena buffers hold the
@@ -300,6 +327,12 @@ pub enum SolveInstr {
     RootSolve { l: BufferId, x: BufferId },
     /// `x[begin..end] = src` — download leaf segments into the solution.
     StoreSol { items: Vec<(usize, usize, BufferId)> },
+    /// Collective segment exchange (SPMD programs only): the substitution
+    /// analog of [`Instr::Exchange`] — the paper's neighbor-segment
+    /// exchange and the redundant-region all-gather. `sends` publishes
+    /// local vectors; each recv `(from, buf, len)` *writes* a remote
+    /// rank's vector into the local workspace.
+    Exchange { level: usize, sends: Vec<BufferId>, recvs: Vec<(u32, BufferId, u32)> },
 }
 
 impl SolveInstr {
@@ -313,7 +346,8 @@ impl SolveInstr {
             SolveInstr::ApplyBasis { level, .. }
             | SolveInstr::TrsvFwd { level, .. }
             | SolveInstr::TrsvBwd { level, .. }
-            | SolveInstr::GemvAcc { level, .. } => Some(*level),
+            | SolveInstr::GemvAcc { level, .. }
+            | SolveInstr::Exchange { level, .. } => Some(*level),
             _ => None,
         }
     }
@@ -329,6 +363,12 @@ pub struct SolveProgram {
     pub vec_base: u32,
     /// Length of each vector (slots are zero-allocated per replay).
     pub vec_lens: Vec<usize>,
+    /// `(level, box)` the vector belongs to, parallel to `vec_lens`: the
+    /// tree position whose segment/accumulator the vector holds. This is
+    /// the recorder's ownership annotation — [`rank::carve`] maps it to a
+    /// rank set (`owner(box)` at distributed levels, every rank in the
+    /// redundant region), so SPMD carving needs no second structural walk.
+    pub vec_home: Vec<(u32, u32)>,
     pub steps: Vec<SolveInstr>,
     pub launches: Vec<LaunchMeta>,
     pub total_flops: u64,

@@ -1,0 +1,1202 @@
+//! SPMD carving: split one recorded [`Plan`] into `p` per-rank programs
+//! ([`RankPlan`]) with explicit [`Instr::Exchange`] / [`SolveInstr::Exchange`]
+//! collectives at the ownership boundaries (paper §5).
+//!
+//! # Ownership
+//!
+//! Rank `r` owns a contiguous run of leaf subtrees: box `i` at a level of
+//! width `w ≥ p` belongs to rank `i·p/w`. Levels with fewer than `p` boxes
+//! (the top `log2 p` levels) are *redundant*: every rank executes them on
+//! replicated data, which is exactly the paper's scheme — comm volume
+//! stays independent of `N` because only skeleton-sized blocks cross the
+//! boundary, once, at the widest redundant level.
+//!
+//! # Carving
+//!
+//! Three passes over the already-recorded instruction streams — carving
+//! never re-walks the H² tree:
+//!
+//! 1. **Substitution needs.** The solve program annotates every vector
+//!    with its tree position ([`SolveProgram::vec_home`]); a walk of the
+//!    solve steps collects, per factor-output matrix, the union of ranks
+//!    that will read it during substitution (`L(r)` panels on the row
+//!    owner, `L(s)` panels on the skeleton-target owner, bases on the box
+//!    owner).
+//! 2. **Factor executors.** Every batched item executes where its primary
+//!    operand was defined: a sparsification runs on the rank holding the
+//!    near block, a panel TRSM on the rank holding the panel, a merge on
+//!    the owner of the parent box (all four child tiles share it while the
+//!    parent level is distributed — the property that makes distributed
+//!    merges comm-free). Upload-defined buffers are seeded structurally
+//!    (dense/coupling blocks by column owner, bases by box owner).
+//! 3. **Emission.** One forward walk re-plays the global stream into `p`
+//!    filtered streams while tracking, per buffer, the set of ranks
+//!    holding its *current* value. A read whose executor set is not
+//!    covered inserts an `Exchange` immediately before the instruction —
+//!    on **every** rank's stream at the same position (possibly with empty
+//!    send/recv lists), so the k-th collective of every rank belongs to
+//!    the same rendezvous. Host uploads replicate to all eventual readers
+//!    for free (host memory is shared); factor outputs that substitution
+//!    will read elsewhere are haloed once at the end of their level.
+//!
+//! The global plan is never mutated: comm instructions exist only in the
+//! carved programs, and `carve(plan, 1, mode)` degenerates to the global
+//! program with zero exchanges. Each carved program is self-contained —
+//! [`super::verify::verify_factor`] accepts it unchanged, and
+//! [`super::verify::verify_rank_set`] additionally audits the cross-rank
+//! send/recv matching.
+
+use super::{
+    BufferId, ExchangeRecv, FactorProgram, HostSrc, Instr, LaunchMeta, LevelOut, LevelProgram,
+    MergeItem, Plan, PlanSig, SolveInstr, SolveProgram,
+};
+use crate::metrics::flops::{gemm_flops, potrf_flops, trsm_flops};
+use crate::ulv::SubstMode;
+use std::collections::HashMap;
+
+/// One rank's share of a carved plan: a complete, independently verifiable
+/// factorization + substitution program pair whose `Exchange` steps line
+/// up with every peer's (same collective count, matching send/recv pairs).
+#[derive(Clone, Debug)]
+pub struct RankPlan {
+    /// Group size the plan was carved for.
+    pub ranks: usize,
+    /// This plan's rank (0-based).
+    pub rank: usize,
+    /// Global problem size (every rank sees the full RHS).
+    pub n: usize,
+    pub depth: usize,
+    pub factor: FactorProgram,
+    pub solve: SolveProgram,
+    /// Solution index ranges this rank's `StoreSol` steps produce; their
+    /// union over the group is `0..n` and they are pairwise disjoint.
+    pub store_ranges: Vec<(usize, usize)>,
+}
+
+/// Bitmask over ranks (carving caps the group at 64).
+type RankSet = u64;
+
+/// Largest usable power-of-two group size: bounded by the request, by the
+/// leaf width (one subtree per rank minimum), and by the `u64` rank mask.
+pub fn clamp_ranks(requested: usize, depth: usize) -> usize {
+    let cap = 1usize << depth.min(6);
+    let want = requested.clamp(1, cap);
+    let mut p = 1;
+    while p * 2 <= want {
+        p *= 2;
+    }
+    p
+}
+
+fn bits(mut mask: RankSet) -> impl Iterator<Item = usize> {
+    std::iter::from_fn(move || {
+        if mask == 0 {
+            None
+        } else {
+            let r = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            Some(r)
+        }
+    })
+}
+
+/// Carve `plan` into per-rank SPMD programs for (up to) `ranks` ranks.
+/// The returned vector's length is the clamped group size; element `r` is
+/// rank `r`'s program. In debug builds the carved set is statically
+/// verified (per-rank dataflow plus cross-rank comm matching) before it is
+/// returned.
+pub fn carve(plan: &Plan, ranks: usize, mode: SubstMode) -> Vec<RankPlan> {
+    let p = clamp_ranks(ranks, plan.depth);
+    let solve = plan.solve_program(mode);
+    let mut cv = Carver::new(plan, solve, p);
+    cv.solve_needs();
+    cv.factor_defs();
+    let rps = cv.emit(plan);
+    #[cfg(debug_assertions)]
+    if let Err(v) = super::verify::verify_rank_set(&rps, &plan.sig) {
+        panic!("carved rank plans failed verification: {v:?}");
+    }
+    rps
+}
+
+/// One rank's in-construction factor stream.
+#[derive(Default)]
+struct Stream {
+    steps: Vec<Instr>,
+    launches: Vec<LaunchMeta>,
+}
+
+/// One rank's in-construction substitution stream.
+#[derive(Default)]
+struct SolveStream {
+    steps: Vec<SolveInstr>,
+    launches: Vec<LaunchMeta>,
+    store: Vec<(usize, usize)>,
+}
+
+struct Carver<'p> {
+    p: usize,
+    /// `log2(p)`: levels at or below depth `k` are distributed.
+    k: u32,
+    all: RankSet,
+    sig: &'p PlanSig,
+    prog: &'p FactorProgram,
+    solve: &'p SolveProgram,
+    /// Executor/defining rank set per matrix buffer (structural; never
+    /// widened by exchanges — both passes must compute identical sets).
+    def: Vec<RankSet>,
+    /// Ranks reading each matrix buffer during factorization.
+    readers: Vec<RankSet>,
+    /// Ranks reading each matrix buffer during substitution.
+    needs: Vec<RankSet>,
+    /// Ranks currently holding each matrix buffer's value (emission).
+    avail: Vec<RankSet>,
+    shape: Vec<(usize, usize)>,
+    /// Ranks holding each vector's *current* value. Vectors are
+    /// zero-allocated on every rank, so the initial state is "all"; every
+    /// write narrows it to the writing executor set.
+    vec_avail: Vec<RankSet>,
+}
+
+impl<'p> Carver<'p> {
+    fn new(plan: &'p Plan, solve: &'p SolveProgram, p: usize) -> Carver<'p> {
+        let all = if p >= 64 { u64::MAX } else { (1u64 << p) - 1 };
+        let bufs = plan.factor.buf_count;
+        Carver {
+            p,
+            k: p.trailing_zeros(),
+            all,
+            sig: &plan.sig,
+            prog: &plan.factor,
+            solve,
+            def: vec![0; bufs],
+            readers: vec![0; bufs],
+            needs: vec![0; bufs],
+            avail: vec![0; bufs],
+            shape: vec![(0, 0); bufs],
+            vec_avail: vec![all; solve.vec_lens.len()],
+        }
+    }
+
+    /// Owner mask of box `bx` at `level`: a singleton at distributed
+    /// levels (width `2^level ≥ p`), every rank in the redundant region.
+    fn owner_mask(&self, bx: usize, level: usize) -> RankSet {
+        if level as u32 >= self.k {
+            1u64 << ((bx * self.p) >> level)
+        } else {
+            self.all
+        }
+    }
+
+    /// Structural home of an upload-defined buffer: dense and coupling
+    /// blocks live with their column owner (the rank that eliminates that
+    /// column's redundant DOFs), bases with their box owner.
+    fn home(&self, src: &HostSrc) -> RankSet {
+        match src {
+            HostSrc::Dense((_, j)) => self.owner_mask(*j, self.sig.depth),
+            HostSrc::Basis { level, index } => self.owner_mask(*index, *level),
+            HostSrc::Coupling { level, key } => self.owner_mask(key.1, *level),
+        }
+    }
+
+    fn host_shape(&self, src: &HostSrc) -> (usize, usize) {
+        match src {
+            HostSrc::Dense((i, j)) => {
+                let d = self.sig.depth;
+                (self.sig.shapes[d][*i].0, self.sig.shapes[d][*j].0)
+            }
+            HostSrc::Basis { level, index } => {
+                let n = self.sig.shapes[*level][*index].0;
+                (n, n)
+            }
+            HostSrc::Coupling { level, key } => {
+                (self.sig.shapes[*level][key.0].1, self.sig.shapes[*level][key.1].1)
+            }
+        }
+    }
+
+    /// Rank set a solve vector belongs to, from the recorder's `(level,
+    /// box)` home annotation.
+    fn ann(&self, v: BufferId) -> RankSet {
+        let (level, bx) = self.solve.vec_home[self.vslot(v)];
+        self.owner_mask(bx as usize, level as usize)
+    }
+
+    fn vslot(&self, v: BufferId) -> usize {
+        debug_assert!(v.0 >= self.solve.vec_base, "B{} is not a vector buffer", v.0);
+        (v.0 - self.solve.vec_base) as usize
+    }
+
+    // ------------------- Pass 1: substitution needs -------------------
+
+    fn solve_needs(&mut self) {
+        for step in &self.solve.steps {
+            match step {
+                SolveInstr::ApplyBasis { items, .. } => {
+                    for &(u, _, dst) in items {
+                        self.needs[u.0 as usize] |= self.ann(dst);
+                    }
+                }
+                SolveInstr::TrsvFwd { items, .. } | SolveInstr::TrsvBwd { items, .. } => {
+                    for &(m, v) in items {
+                        self.needs[m.0 as usize] |= self.ann(v);
+                    }
+                }
+                SolveInstr::GemvAcc { items, .. } => {
+                    for &(m, _, y) in items {
+                        self.needs[m.0 as usize] |= self.ann(y);
+                    }
+                }
+                SolveInstr::RootSolve { l, .. } => {
+                    self.needs[l.0 as usize] |= self.all;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ------------------- Pass 2: factor executors -------------------
+
+    fn factor_defs(&mut self) {
+        let prog = self.prog;
+        for instr in prog.prologue.iter().chain(prog.levels.iter().flat_map(|l| l.steps.iter()))
+        {
+            self.def_instr(instr);
+        }
+        // The root Cholesky runs redundantly on every rank.
+        self.readers[prog.root_src.0 as usize] |= self.all;
+    }
+
+    fn def_instr(&mut self, instr: &Instr) {
+        match instr {
+            Instr::Upload { items } => {
+                for (src, b) in items {
+                    self.def[b.0 as usize] = self.home(src);
+                }
+            }
+            Instr::Sparsify { items, .. } => {
+                for it in items {
+                    let ex = self.def[it.a.0 as usize];
+                    self.readers[it.u.0 as usize] |= ex;
+                    self.readers[it.a.0 as usize] |= ex;
+                    self.readers[it.v.0 as usize] |= ex;
+                    self.def[it.dst.0 as usize] = ex;
+                }
+            }
+            Instr::Extract { items } => {
+                for it in items {
+                    let ex = self.def[it.src.0 as usize];
+                    self.readers[it.src.0 as usize] |= ex;
+                    self.def[it.dst.0 as usize] = ex;
+                }
+            }
+            Instr::Potrf { bufs, .. } => {
+                for b in bufs {
+                    self.readers[b.0 as usize] |= self.def[b.0 as usize];
+                }
+            }
+            Instr::TrsmRightLt { items, .. } => {
+                for it in items {
+                    let ex = self.def[it.b.0 as usize];
+                    self.readers[it.l.0 as usize] |= ex;
+                    self.readers[it.b.0 as usize] |= ex;
+                }
+            }
+            Instr::SchurSelf { items, .. } => {
+                for it in items {
+                    let ex = self.def[it.c.0 as usize];
+                    self.readers[it.a.0 as usize] |= ex;
+                    self.readers[it.c.0 as usize] |= ex;
+                }
+            }
+            Instr::Merge { level, items } => {
+                for it in items {
+                    let ex = self.merge_exec(*level, it);
+                    for pt in &it.parts {
+                        self.readers[pt.src.0 as usize] |= ex;
+                    }
+                    self.def[it.dst.0 as usize] = ex;
+                }
+            }
+            Instr::Free { .. } => {}
+            Instr::Exchange { .. } => unreachable!("global plans carry no comm"),
+        }
+    }
+
+    /// Executor of one merge item (`level` is the child level). While the
+    /// parent level is still distributed, all four child tiles share the
+    /// parent owner (children of one box never straddle a rank boundary);
+    /// below that the merge replicates onto every rank.
+    fn merge_exec(&self, level: usize, it: &MergeItem) -> RankSet {
+        if (level - 1) as u32 >= self.k {
+            let ex = self.def[it.parts[0].src.0 as usize];
+            debug_assert!(
+                it.parts.iter().all(|pt| self.def[pt.src.0 as usize] == ex),
+                "distributed merge tiles must share one owner"
+            );
+            ex
+        } else {
+            self.all
+        }
+    }
+
+    // ------------------- Pass 3: emission -------------------
+
+    fn emit(&mut self, plan: &Plan) -> Vec<RankPlan> {
+        let p = self.p;
+        let prog = self.prog;
+        let solve = self.solve;
+
+        let mut prologues: Vec<Vec<Instr>> = (0..p).map(|_| Vec::new()).collect();
+        for instr in &prog.prologue {
+            match instr {
+                Instr::Upload { items } => self.emit_upload(items, &mut prologues),
+                _ => unreachable!("the factorization prologue holds only uploads"),
+            }
+        }
+
+        let mut levels: Vec<Vec<LevelProgram>> = (0..p).map(|_| Vec::new()).collect();
+        for lp in &prog.levels {
+            let mut st: Vec<Stream> = (0..p).map(|_| Stream::default()).collect();
+            let mut defined: Vec<BufferId> = Vec::new();
+            for instr in &lp.steps {
+                self.emit_factor_instr(instr, &mut st, &mut defined);
+            }
+            // Halo: factor outputs of this level that substitution reads
+            // on ranks that do not hold them (boundary L(r)/L(s) panels)
+            // ship once, now, while every peer is at the same position.
+            let halo: Vec<(BufferId, RankSet)> = defined
+                .iter()
+                .filter(|b| {
+                    let i = b.0 as usize;
+                    self.avail[i] != 0 && self.needs[i] & !self.avail[i] != 0
+                })
+                .map(|&b| (b, self.needs[b.0 as usize]))
+                .collect();
+            self.settle_mats(lp.level, &halo, &mut st);
+            for (r, s) in st.into_iter().enumerate() {
+                levels[r].push(LevelProgram {
+                    level: lp.level,
+                    steps: s.steps,
+                    launches: s.launches,
+                });
+            }
+        }
+        debug_assert_eq!(
+            self.avail[prog.root_src.0 as usize],
+            self.all,
+            "the merged root block must be replicated on every rank"
+        );
+
+        let (solve_streams, store) = self.emit_solve();
+
+        let mut out = Vec::with_capacity(p);
+        let mut levels = levels.into_iter();
+        let mut prologues = prologues.into_iter();
+        let mut solve_streams = solve_streams.into_iter();
+        let mut store = store.into_iter();
+        for r in 0..p {
+            let rank_levels = levels.next().unwrap();
+            let bit = 1u64 << r;
+            let outputs: Vec<LevelOut> = prog
+                .outputs
+                .iter()
+                .map(|o| LevelOut {
+                    level: o.level,
+                    chol_rr: o
+                        .chol_rr
+                        .iter()
+                        .copied()
+                        .filter(|b| self.avail[b.0 as usize] & bit != 0)
+                        .collect(),
+                    lr: o
+                        .lr
+                        .iter()
+                        .copied()
+                        .filter(|&(_, b)| self.avail[b.0 as usize] & bit != 0)
+                        .collect(),
+                    ls: o
+                        .ls
+                        .iter()
+                        .copied()
+                        .filter(|&(_, b)| self.avail[b.0 as usize] & bit != 0)
+                        .collect(),
+                    near: o.near.clone(),
+                    basis: o
+                        .basis
+                        .iter()
+                        .copied()
+                        .filter(|b| self.avail[b.0 as usize] & bit != 0)
+                        .collect(),
+                })
+                .collect();
+            let total_flops: u64 = rank_levels
+                .iter()
+                .flat_map(|l| l.launches.iter())
+                .map(|l| l.flops)
+                .sum::<u64>()
+                + prog.root_launch.flops;
+            let factor = FactorProgram {
+                buf_count: prog.buf_count,
+                prologue: prologues.next().unwrap(),
+                levels: rank_levels,
+                outputs,
+                root_src: prog.root_src,
+                root_n: prog.root_n,
+                root_launch: prog.root_launch,
+                total_flops,
+            };
+            let ss = solve_streams.next().unwrap();
+            let solve_flops: u64 = ss.launches.iter().map(|l| l.flops).sum();
+            let rank_solve = SolveProgram {
+                vec_base: solve.vec_base,
+                vec_lens: solve.vec_lens.clone(),
+                vec_home: solve.vec_home.clone(),
+                steps: ss.steps,
+                launches: ss.launches,
+                total_flops: solve_flops,
+            };
+            out.push(RankPlan {
+                ranks: p,
+                rank: r,
+                n: plan.n,
+                depth: plan.depth,
+                factor,
+                solve: rank_solve,
+                store_ranges: store.next().unwrap(),
+            });
+        }
+        out
+    }
+
+    /// Emit one upload, replicated onto every rank that ever reads the
+    /// buffer (host memory is shared — replication costs no comm).
+    fn emit_upload(&mut self, items: &[(HostSrc, BufferId)], outs: &mut [Vec<Instr>]) {
+        let mut per: Vec<Vec<(HostSrc, BufferId)>> = (0..self.p).map(|_| Vec::new()).collect();
+        for &(src, b) in items {
+            let i = b.0 as usize;
+            let want = self.readers[i] | self.needs[i] | self.def[i];
+            debug_assert_eq!(self.avail[i], 0, "SSA: B{} uploaded twice", b.0);
+            self.avail[i] = want;
+            self.shape[i] = self.host_shape(&src);
+            for r in bits(want) {
+                per[r].push((src, b));
+            }
+        }
+        for (r, items) in per.into_iter().enumerate() {
+            if !items.is_empty() {
+                outs[r].push(Instr::Upload { items });
+            }
+        }
+    }
+
+    fn define(&mut self, b: BufferId, ex: RankSet, shape: (usize, usize)) {
+        let i = b.0 as usize;
+        debug_assert_eq!(self.avail[i], 0, "SSA: B{} defined twice", b.0);
+        debug_assert_eq!(self.def[i], ex, "executor passes disagree on B{}", b.0);
+        self.avail[i] = ex;
+        self.shape[i] = shape;
+    }
+
+    /// Cover a set of matrix reads: for every `(buffer, executor)` pair
+    /// whose executor set is not fully held, insert one `Exchange` on
+    /// *every* rank's stream (the sender is the lowest holding rank) and
+    /// widen availability. No-op when everything is already covered.
+    fn settle_mats(&mut self, level: usize, reads: &[(BufferId, RankSet)], st: &mut [Stream]) {
+        let mut order: Vec<u32> = Vec::new();
+        let mut need: HashMap<u32, RankSet> = HashMap::new();
+        for &(b, ex) in reads {
+            let have = self.avail[b.0 as usize];
+            assert!(have != 0, "B{} is read before any rank holds it", b.0);
+            let miss = ex & !have;
+            if miss != 0 {
+                *need.entry(b.0).or_insert_with(|| {
+                    order.push(b.0);
+                    0
+                }) |= miss;
+            }
+        }
+        if order.is_empty() {
+            return;
+        }
+        let mut sends: Vec<Vec<BufferId>> = (0..self.p).map(|_| Vec::new()).collect();
+        let mut recvs: Vec<Vec<ExchangeRecv>> = (0..self.p).map(|_| Vec::new()).collect();
+        for &id in &order {
+            let i = id as usize;
+            let miss = need[&id] & !self.avail[i];
+            if miss == 0 {
+                continue;
+            }
+            let from = self.avail[i].trailing_zeros();
+            let (rows, cols) = self.shape[i];
+            for r in bits(miss) {
+                recvs[r].push(ExchangeRecv {
+                    from,
+                    buf: BufferId(id),
+                    rows: rows as u32,
+                    cols: cols as u32,
+                });
+            }
+            sends[from as usize].push(BufferId(id));
+            self.avail[i] |= miss;
+        }
+        let mut sends = sends.into_iter();
+        let mut recvs = recvs.into_iter();
+        for s in st.iter_mut() {
+            s.steps.push(Instr::Exchange {
+                level,
+                sends: sends.next().unwrap(),
+                recvs: recvs.next().unwrap(),
+            });
+        }
+    }
+
+    fn emit_factor_instr(&mut self, instr: &Instr, st: &mut [Stream], defined: &mut Vec<BufferId>) {
+        let p = self.p;
+        match instr {
+            Instr::Upload { items } => {
+                let mut per: Vec<Vec<(HostSrc, BufferId)>> =
+                    (0..p).map(|_| Vec::new()).collect();
+                for &(src, b) in items {
+                    let i = b.0 as usize;
+                    let want = self.readers[i] | self.needs[i] | self.def[i];
+                    debug_assert_eq!(self.avail[i], 0, "SSA: B{} uploaded twice", b.0);
+                    self.avail[i] = want;
+                    self.shape[i] = self.host_shape(&src);
+                    defined.push(b);
+                    for r in bits(want) {
+                        per[r].push((src, b));
+                    }
+                }
+                for (r, items) in per.into_iter().enumerate() {
+                    if !items.is_empty() {
+                        st[r].steps.push(Instr::Upload { items });
+                    }
+                }
+            }
+            Instr::Sparsify { level, items } => {
+                let exs: Vec<RankSet> =
+                    items.iter().map(|it| self.def[it.a.0 as usize]).collect();
+                let mut reads = Vec::with_capacity(3 * items.len());
+                for (it, &ex) in items.iter().zip(&exs) {
+                    reads.push((it.u, ex));
+                    reads.push((it.a, ex));
+                    reads.push((it.v, ex));
+                }
+                self.settle_mats(*level, &reads, st);
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let mut sel = Vec::new();
+                    let mut shapes = Vec::new();
+                    for (it, &ex) in items.iter().zip(&exs) {
+                        if ex & bit != 0 {
+                            let (rr, cc) = self.shape[it.a.0 as usize];
+                            shapes.push((rr, cc, super::sparsify_flops(rr, cc)));
+                            sel.push(*it);
+                        }
+                    }
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    s.launches.push(LaunchMeta::new(*level, "SPARSIFY", &shapes, |r, c| {
+                        gemm_flops(r, c, r) + gemm_flops(r, c, c)
+                    }));
+                    s.steps.push(Instr::Sparsify { level: *level, items: sel });
+                }
+                for (it, &ex) in items.iter().zip(&exs) {
+                    let shape = self.shape[it.a.0 as usize];
+                    self.define(it.dst, ex, shape);
+                    defined.push(it.dst);
+                }
+            }
+            Instr::Extract { items } => {
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let sel: Vec<_> = items
+                        .iter()
+                        .filter(|it| self.def[it.src.0 as usize] & bit != 0)
+                        .copied()
+                        .collect();
+                    if !sel.is_empty() {
+                        s.steps.push(Instr::Extract { items: sel });
+                    }
+                }
+                for it in items {
+                    let ex = self.def[it.src.0 as usize];
+                    debug_assert!(
+                        self.avail[it.src.0 as usize] & ex == ex,
+                        "extract source B{} not resident on its executor",
+                        it.src.0
+                    );
+                    self.define(it.dst, ex, (it.rows, it.cols));
+                    defined.push(it.dst);
+                }
+            }
+            Instr::Potrf { level, bufs } => {
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let mut sel = Vec::new();
+                    let mut shapes = Vec::new();
+                    for &b in bufs {
+                        if self.def[b.0 as usize] & bit != 0 {
+                            let n = self.shape[b.0 as usize].0;
+                            shapes.push((n, n, potrf_flops(n)));
+                            sel.push(b);
+                        }
+                    }
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    s.launches.push(LaunchMeta::new(*level, "POTRF", &shapes, |r, _| {
+                        potrf_flops(r)
+                    }));
+                    s.steps.push(Instr::Potrf { level: *level, bufs: sel });
+                }
+            }
+            Instr::TrsmRightLt { level, items } => {
+                let reads: Vec<(BufferId, RankSet)> = items
+                    .iter()
+                    .map(|it| (it.l, self.def[it.b.0 as usize]))
+                    .collect();
+                self.settle_mats(*level, &reads, st);
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let mut sel = Vec::new();
+                    let mut shapes = Vec::new();
+                    for it in items {
+                        if self.def[it.b.0 as usize] & bit != 0 {
+                            let (rows, cols) = self.shape[it.b.0 as usize];
+                            shapes.push((rows, cols, trsm_flops(cols, rows)));
+                            sel.push(*it);
+                        }
+                    }
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    s.launches
+                        .push(LaunchMeta::new(*level, "TRSM", &shapes, |r, c| trsm_flops(c, r)));
+                    s.steps.push(Instr::TrsmRightLt { level: *level, items: sel });
+                }
+            }
+            Instr::SchurSelf { level, items } => {
+                let reads: Vec<(BufferId, RankSet)> = items
+                    .iter()
+                    .map(|it| (it.a, self.def[it.c.0 as usize]))
+                    .collect();
+                self.settle_mats(*level, &reads, st);
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let mut sel = Vec::new();
+                    let mut shapes = Vec::new();
+                    for it in items {
+                        if self.def[it.c.0 as usize] & bit != 0 {
+                            let (rows, cols) = self.shape[it.a.0 as usize];
+                            shapes.push((rows, cols, gemm_flops(rows, rows, cols)));
+                            sel.push(*it);
+                        }
+                    }
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    s.launches.push(LaunchMeta::new(*level, "SYRK", &shapes, |r, c| {
+                        gemm_flops(r, r, c)
+                    }));
+                    s.steps.push(Instr::SchurSelf { level: *level, items: sel });
+                }
+            }
+            Instr::Merge { level, items } => {
+                let exs: Vec<RankSet> =
+                    items.iter().map(|it| self.merge_exec(*level, it)).collect();
+                let mut reads = Vec::new();
+                for (it, &ex) in items.iter().zip(&exs) {
+                    for pt in &it.parts {
+                        reads.push((pt.src, ex));
+                    }
+                }
+                self.settle_mats(*level, &reads, st);
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let sel: Vec<MergeItem> = items
+                        .iter()
+                        .zip(&exs)
+                        .filter(|(_, &ex)| ex & bit != 0)
+                        .map(|(it, _)| it.clone())
+                        .collect();
+                    if !sel.is_empty() {
+                        s.steps.push(Instr::Merge { level: *level, items: sel });
+                    }
+                }
+                for (it, &ex) in items.iter().zip(&exs) {
+                    self.define(it.dst, ex, (it.rows, it.cols));
+                    defined.push(it.dst);
+                }
+            }
+            Instr::Free { bufs } => {
+                for (rk, s) in st.iter_mut().enumerate() {
+                    let bit = 1u64 << rk;
+                    let sel: Vec<BufferId> = bufs
+                        .iter()
+                        .copied()
+                        .filter(|b| self.avail[b.0 as usize] & bit != 0)
+                        .collect();
+                    if !sel.is_empty() {
+                        s.steps.push(Instr::Free { bufs: sel });
+                    }
+                }
+                for b in bufs {
+                    self.avail[b.0 as usize] = 0;
+                }
+            }
+            Instr::Exchange { .. } => unreachable!("global plans carry no comm"),
+        }
+    }
+
+    // ------------------- Pass 3b: substitution emission -------------------
+
+    /// Assert a substitution matrix operand is resident wherever the step
+    /// executes (the factor carving's upload replication + halos must have
+    /// covered it — a failure here is a carving bug, not a user error).
+    fn mat_check(&self, m: BufferId, ex: RankSet) {
+        assert!(
+            self.avail[m.0 as usize] & ex == ex,
+            "substitution reads matrix B{} on a rank that does not hold it",
+            m.0
+        );
+    }
+
+    /// Record an in-place vector write: the executor must hold the current
+    /// value, and afterwards only the executor does.
+    fn vrw(&mut self, v: BufferId, ex: RankSet) {
+        let s = self.vslot(v);
+        assert!(
+            self.vec_avail[s] & ex == ex,
+            "vector B{} updated in place on a rank that does not hold it",
+            v.0
+        );
+        self.vec_avail[s] = ex;
+    }
+
+    fn vdefine(&mut self, v: BufferId, ex: RankSet) {
+        let s = self.vslot(v);
+        self.vec_avail[s] = ex;
+    }
+
+    /// Vector analog of [`Carver::settle_mats`]. Zero-length vectors are
+    /// marked available without comm (every rank's zero allocation already
+    /// equals the value).
+    fn settle_vecs(&mut self, reads: &[(BufferId, RankSet)], st: &mut [SolveStream]) {
+        let mut order: Vec<u32> = Vec::new();
+        let mut need: HashMap<u32, RankSet> = HashMap::new();
+        for &(v, ex) in reads {
+            let s = self.vslot(v);
+            let miss = ex & !self.vec_avail[s];
+            if miss != 0 {
+                if self.solve.vec_lens[s] == 0 {
+                    self.vec_avail[s] |= miss;
+                    continue;
+                }
+                *need.entry(v.0).or_insert_with(|| {
+                    order.push(v.0);
+                    0
+                }) |= miss;
+            }
+        }
+        if order.is_empty() {
+            return;
+        }
+        let level = {
+            let (l, _) = self.solve.vec_home[(order[0] - self.solve.vec_base) as usize];
+            l as usize
+        };
+        let mut sends: Vec<Vec<BufferId>> = (0..self.p).map(|_| Vec::new()).collect();
+        let mut recvs: Vec<Vec<(u32, BufferId, u32)>> =
+            (0..self.p).map(|_| Vec::new()).collect();
+        for &id in &order {
+            let s = (id - self.solve.vec_base) as usize;
+            let miss = need[&id] & !self.vec_avail[s];
+            if miss == 0 {
+                continue;
+            }
+            let from = self.vec_avail[s].trailing_zeros();
+            let len = self.solve.vec_lens[s] as u32;
+            for r in bits(miss) {
+                recvs[r].push((from, BufferId(id), len));
+            }
+            sends[from as usize].push(BufferId(id));
+            self.vec_avail[s] |= miss;
+        }
+        let mut sends = sends.into_iter();
+        let mut recvs = recvs.into_iter();
+        for s in st.iter_mut() {
+            s.steps.push(SolveInstr::Exchange {
+                level,
+                sends: sends.next().unwrap(),
+                recvs: recvs.next().unwrap(),
+            });
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn emit_solve(&mut self) -> (Vec<SolveStream>, Vec<Vec<(usize, usize)>>) {
+        let p = self.p;
+        let solve = self.solve;
+        let mut st: Vec<SolveStream> = (0..p).map(|_| SolveStream::default()).collect();
+        for step in &solve.steps {
+            match step {
+                SolveInstr::LoadRhs { items } => {
+                    let mut per: Vec<Vec<(usize, usize, BufferId)>> =
+                        (0..p).map(|_| Vec::new()).collect();
+                    for &(b0, b1, v) in items {
+                        let ex = self.ann(v);
+                        self.vdefine(v, ex);
+                        for r in bits(ex) {
+                            per[r].push((b0, b1, v));
+                        }
+                    }
+                    for (r, items) in per.into_iter().enumerate() {
+                        if !items.is_empty() {
+                            st[r].steps.push(SolveInstr::LoadRhs { items });
+                        }
+                    }
+                }
+                SolveInstr::ApplyBasis { level, trans, items } => {
+                    let mut reads = Vec::with_capacity(items.len());
+                    for &(u, src, dst) in items {
+                        let ex = self.ann(dst);
+                        self.mat_check(u, ex);
+                        reads.push((src, ex));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let mut sel = Vec::new();
+                        let mut shapes = Vec::new();
+                        for &(u, src, dst) in items {
+                            if self.ann(dst) & bit != 0 {
+                                let n = solve.vec_lens[self.vslot(dst)];
+                                shapes.push((n, n, 2 * (n * n) as u64));
+                                sel.push((u, src, dst));
+                            }
+                        }
+                        if sel.is_empty() {
+                            continue;
+                        }
+                        s.launches.push(LaunchMeta::new(*level, "BASIS", &shapes, |r, c| {
+                            2 * (r * c) as u64
+                        }));
+                        s.steps.push(SolveInstr::ApplyBasis {
+                            level: *level,
+                            trans: *trans,
+                            items: sel,
+                        });
+                    }
+                    for &(_, _, dst) in items {
+                        let ex = self.ann(dst);
+                        self.vdefine(dst, ex);
+                    }
+                }
+                SolveInstr::Split { items } => {
+                    let mut reads = Vec::with_capacity(items.len());
+                    for &(src, _, lo, hi) in items {
+                        reads.push((src, self.ann(lo) | self.ann(hi)));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let sel: Vec<_> = items
+                            .iter()
+                            .copied()
+                            .filter(|&(_, _, lo, hi)| (self.ann(lo) | self.ann(hi)) & bit != 0)
+                            .collect();
+                        if !sel.is_empty() {
+                            s.steps.push(SolveInstr::Split { items: sel });
+                        }
+                    }
+                    for &(_, _, lo, hi) in items {
+                        let ex = self.ann(lo) | self.ann(hi);
+                        self.vdefine(lo, ex);
+                        self.vdefine(hi, ex);
+                    }
+                }
+                SolveInstr::Concat { items } => {
+                    let mut reads = Vec::with_capacity(2 * items.len());
+                    for &(dst, a, b) in items {
+                        let ex = self.ann(dst);
+                        reads.push((a, ex));
+                        reads.push((b, ex));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let sel: Vec<_> = items
+                            .iter()
+                            .copied()
+                            .filter(|&(dst, _, _)| self.ann(dst) & bit != 0)
+                            .collect();
+                        if !sel.is_empty() {
+                            s.steps.push(SolveInstr::Concat { items: sel });
+                        }
+                    }
+                    for &(dst, _, _) in items {
+                        let ex = self.ann(dst);
+                        self.vdefine(dst, ex);
+                    }
+                }
+                SolveInstr::Copy { items } => {
+                    let mut reads = Vec::with_capacity(items.len());
+                    for &(dst, src) in items {
+                        reads.push((src, self.ann(dst)));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let sel: Vec<_> = items
+                            .iter()
+                            .copied()
+                            .filter(|&(dst, _)| self.ann(dst) & bit != 0)
+                            .collect();
+                        if !sel.is_empty() {
+                            s.steps.push(SolveInstr::Copy { items: sel });
+                        }
+                    }
+                    for &(dst, _) in items {
+                        let ex = self.ann(dst);
+                        self.vdefine(dst, ex);
+                    }
+                }
+                SolveInstr::TrsvFwd { level, items } | SolveInstr::TrsvBwd { level, items } => {
+                    let bwd = matches!(step, SolveInstr::TrsvBwd { .. });
+                    for &(m, v) in items {
+                        self.mat_check(m, self.ann(v));
+                    }
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let mut sel = Vec::new();
+                        let mut shapes = Vec::new();
+                        for &(m, v) in items {
+                            if self.ann(v) & bit != 0 {
+                                let n = solve.vec_lens[self.vslot(v)];
+                                shapes.push((n, n, (n * n) as u64));
+                                sel.push((m, v));
+                            }
+                        }
+                        if sel.is_empty() {
+                            continue;
+                        }
+                        let kernel = if bwd { "TRSVT" } else { "TRSV" };
+                        s.launches.push(LaunchMeta::new(*level, kernel, &shapes, |r, _| {
+                            (r * r) as u64
+                        }));
+                        s.steps.push(if bwd {
+                            SolveInstr::TrsvBwd { level: *level, items: sel }
+                        } else {
+                            SolveInstr::TrsvFwd { level: *level, items: sel }
+                        });
+                    }
+                    for &(_, v) in items {
+                        let ex = self.ann(v);
+                        self.vrw(v, ex);
+                    }
+                }
+                SolveInstr::GemvAcc { level, trans, items } => {
+                    let mut reads = Vec::with_capacity(items.len());
+                    for &(m, x, y) in items {
+                        let ex = self.ann(y);
+                        self.mat_check(m, ex);
+                        reads.push((x, ex));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let mut sel = Vec::new();
+                        let mut shapes = Vec::new();
+                        for &(m, x, y) in items {
+                            if self.ann(y) & bit != 0 {
+                                let (rows, cols) = self.shape[m.0 as usize];
+                                shapes.push((rows, cols, 2 * (rows * cols) as u64));
+                                sel.push((m, x, y));
+                            }
+                        }
+                        if sel.is_empty() {
+                            continue;
+                        }
+                        s.launches.push(LaunchMeta::new(*level, "GEMV", &shapes, |r, c| {
+                            2 * (r * c) as u64
+                        }));
+                        s.steps.push(SolveInstr::GemvAcc {
+                            level: *level,
+                            trans: *trans,
+                            items: sel,
+                        });
+                    }
+                    for &(_, _, y) in items {
+                        let ex = self.ann(y);
+                        self.vrw(y, ex);
+                    }
+                }
+                SolveInstr::Add { items } => {
+                    let mut reads = Vec::with_capacity(2 * items.len());
+                    for &(dst, a, b) in items {
+                        let ex = self.ann(dst);
+                        reads.push((a, ex));
+                        reads.push((b, ex));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    for (rk, s) in st.iter_mut().enumerate() {
+                        let bit = 1u64 << rk;
+                        let sel: Vec<_> = items
+                            .iter()
+                            .copied()
+                            .filter(|&(dst, _, _)| self.ann(dst) & bit != 0)
+                            .collect();
+                        if !sel.is_empty() {
+                            s.steps.push(SolveInstr::Add { items: sel });
+                        }
+                    }
+                    for &(dst, _, _) in items {
+                        let ex = self.ann(dst);
+                        self.vdefine(dst, ex);
+                    }
+                }
+                SolveInstr::RootSolve { l, x } => {
+                    self.mat_check(*l, self.all);
+                    self.vrw(*x, self.all);
+                    let root_n = self.prog.root_n;
+                    for s in st.iter_mut() {
+                        s.launches.push(LaunchMeta::new(
+                            0,
+                            "POTRS",
+                            &[(root_n, root_n, 2 * (root_n * root_n) as u64)],
+                            |r, _| 2 * (r * r) as u64,
+                        ));
+                        s.steps.push(SolveInstr::RootSolve { l: *l, x: *x });
+                    }
+                }
+                SolveInstr::StoreSol { items } => {
+                    let mut reads = Vec::with_capacity(items.len());
+                    for &(_, _, v) in items {
+                        reads.push((v, self.ann(v)));
+                    }
+                    self.settle_vecs(&reads, &mut st);
+                    let mut per: Vec<Vec<(usize, usize, BufferId)>> =
+                        (0..p).map(|_| Vec::new()).collect();
+                    for &(b0, b1, v) in items {
+                        for r in bits(self.ann(v)) {
+                            per[r].push((b0, b1, v));
+                            st[r].store.push((b0, b1));
+                        }
+                    }
+                    for (r, items) in per.into_iter().enumerate() {
+                        if !items.is_empty() {
+                            st[r].steps.push(SolveInstr::StoreSol { items });
+                        }
+                    }
+                }
+                SolveInstr::Exchange { .. } => unreachable!("global plans carry no comm"),
+            }
+        }
+        let store: Vec<Vec<(usize, usize)>> =
+            st.iter_mut().map(|s| std::mem::take(&mut s.store)).collect();
+        (st, store)
+    }
+}
+
+/// Render the carved set's communication schedule: one line per
+/// collective — factor phase first, then substitution — with the tree
+/// level it belongs to, the total buffers posted, and the bytes delivered
+/// across the group. Comm instructions are ordinary plan IR, so the whole
+/// schedule is visible here before anything executes (the
+/// `plan-dump --ranks` view).
+pub fn render_comm(rps: &[RankPlan]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "carved comm schedule: P={}", rps.len());
+    let factor: Vec<Vec<&Instr>> = rps
+        .iter()
+        .map(|rp| {
+            rp.factor
+                .prologue
+                .iter()
+                .chain(rp.factor.levels.iter().flat_map(|l| l.steps.iter()))
+                .filter(|i| matches!(i, Instr::Exchange { .. }))
+                .collect()
+        })
+        .collect();
+    for k in 0..factor[0].len() {
+        let Instr::Exchange { level, .. } = factor[0][k] else { unreachable!() };
+        let mut sends = 0usize;
+        let mut bytes = 0u64;
+        for stream in &factor {
+            let Instr::Exchange { sends: s, recvs, .. } = stream[k] else { unreachable!() };
+            sends += s.len();
+            bytes += recvs.iter().map(|r| r.rows as u64 * r.cols as u64 * 8).sum::<u64>();
+        }
+        let _ = writeln!(
+            out,
+            "  factor exchange #{k} (level {level}): {sends} buffer(s) posted, {bytes} B delivered"
+        );
+    }
+    let solve: Vec<Vec<&SolveInstr>> = rps
+        .iter()
+        .map(|rp| {
+            rp.solve
+                .steps
+                .iter()
+                .filter(|i| matches!(i, SolveInstr::Exchange { .. }))
+                .collect()
+        })
+        .collect();
+    for k in 0..solve[0].len() {
+        let SolveInstr::Exchange { level, .. } = solve[0][k] else { unreachable!() };
+        let mut sends = 0usize;
+        let mut bytes = 0u64;
+        for stream in &solve {
+            let SolveInstr::Exchange { sends: s, recvs, .. } = stream[k] else { unreachable!() };
+            sends += s.len();
+            bytes += recvs.iter().map(|&(_, _, len)| len as u64 * 8).sum::<u64>();
+        }
+        let _ = writeln!(
+            out,
+            "  solve exchange #{k} (level {level}): {sends} buffer(s) posted, {bytes} B delivered"
+        );
+    }
+    if factor[0].is_empty() && solve[0].is_empty() {
+        let _ = writeln!(out, "  (no cross-rank communication — single rank)");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_is_a_power_of_two_within_bounds() {
+        assert_eq!(clamp_ranks(1, 4), 1);
+        assert_eq!(clamp_ranks(3, 4), 2);
+        assert_eq!(clamp_ranks(4, 4), 4);
+        assert_eq!(clamp_ranks(7, 2), 4); // leaf width caps at 2^2
+        assert_eq!(clamp_ranks(1000, 10), 64); // rank-mask cap
+        assert_eq!(clamp_ranks(0, 3), 1);
+    }
+
+    /// Children of one box never straddle a rank boundary while the parent
+    /// level is distributed — the property that makes distributed-level
+    /// merges and segment concats comm-free.
+    #[test]
+    fn children_share_the_parent_owner_at_distributed_levels() {
+        for k in 0..4u32 {
+            let p = 1usize << k;
+            for level in (k as usize + 1)..8 {
+                let parent_level = level - 1;
+                let owner = |bx: usize, l: usize| (bx * p) >> l;
+                for pj in 0..(1usize << parent_level) {
+                    let po = owner(pj, parent_level);
+                    assert_eq!(owner(2 * pj, level), po);
+                    assert_eq!(owner(2 * pj + 1, level), po);
+                    assert!(po < p);
+                }
+            }
+        }
+    }
+}

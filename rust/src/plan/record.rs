@@ -449,8 +449,12 @@ impl SolveCtx {
         let root_n = factor.root_n;
 
         // ---------- Forward pass (leaves -> root). ----------
-        let mut seg: Vec<BufferId> =
-            leaf_ranges.iter().map(|&(s, e)| rec.vec(e - s)).collect();
+        let leaf_level = self.infos.first().map(|i| i.level).unwrap_or(0);
+        let mut seg: Vec<BufferId> = leaf_ranges
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, e))| rec.vec(e - s, leaf_level, i))
+            .collect();
         rec.steps.push(SolveInstr::LoadRhs {
             items: leaf_ranges
                 .iter()
@@ -466,11 +470,13 @@ impl SolveCtx {
             let (rr, lr, ls, basis) = level_wiring(&factor.outputs[li]);
             // 1. Apply Uᵀ: c_i = U_iᵀ b_i (batched).
             let c: Vec<BufferId> =
-                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
+                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i], level, i)).collect();
             rec.apply_basis(level, true, info, basis, &seg, &c);
             // Split into skeleton (first k) and redundant (rest).
-            let s_part: Vec<BufferId> = (0..width).map(|i| rec.vec(info.ranks[i])).collect();
-            let mut r_part: Vec<BufferId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
+            let s_part: Vec<BufferId> =
+                (0..width).map(|i| rec.vec(info.ranks[i], level, i)).collect();
+            let mut r_part: Vec<BufferId> =
+                (0..width).map(|i| rec.vec(info.nreds[i], level, i)).collect();
             rec.steps.push(SolveInstr::Split {
                 items: (0..width)
                     .map(|i| (c[i], info.ranks[i], s_part[i], r_part[i]))
@@ -513,7 +519,7 @@ impl SolveCtx {
                 SubstMode::Parallel => {
                     // §3.7: z_i = L_ii⁻¹ r_i (batched, independent).
                     let z: Vec<BufferId> =
-                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                        active.iter().map(|&i| rec.vec(info.nreds[i], level, i)).collect();
                     rec.steps.push(SolveInstr::Copy {
                         items: active.iter().zip(&z).map(|(&i, &zi)| (zi, r_part[i])).collect(),
                     });
@@ -527,7 +533,7 @@ impl SolveCtx {
                         active.iter().enumerate().map(|(s, &i)| (i, s)).collect();
                     // acc = -Σ L(r)_ij z_j in unique-target rounds.
                     let acc: Vec<BufferId> =
-                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                        active.iter().map(|&i| rec.vec(info.nreds[i], level, i)).collect();
                     let entries: Vec<(BufferId, BufferId, BufferId, (usize, usize))> = info
                         .lr_keys
                         .iter()
@@ -550,7 +556,7 @@ impl SolveCtx {
                     rec.trsv(level, false, &corr_items);
                     let mut add_items = Vec::with_capacity(active.len());
                     for (slot, &i) in active.iter().enumerate() {
-                        let r2 = rec.vec(info.nreds[i]);
+                        let r2 = rec.vec(info.nreds[i], level, i);
                         add_items.push((r2, z[slot], acc[slot]));
                         r_part[i] = r2;
                     }
@@ -578,7 +584,7 @@ impl SolveCtx {
             let mut next: Vec<BufferId> = Vec::with_capacity(parent_width);
             let mut cat = Vec::with_capacity(parent_width);
             for p in 0..parent_width {
-                let v = rec.vec(info.ranks[2 * p] + info.ranks[2 * p + 1]);
+                let v = rec.vec(info.ranks[2 * p] + info.ranks[2 * p + 1], level - 1, p);
                 cat.push((v, s_part[2 * p], s_part[2 * p + 1]));
                 next.push(v);
             }
@@ -605,15 +611,16 @@ impl SolveCtx {
             let mut x_s: Vec<BufferId> = Vec::with_capacity(width);
             let mut splits = Vec::with_capacity(width / 2);
             for p in 0..width / 2 {
-                let a = rec.vec(info.ranks[2 * p]);
-                let b = rec.vec(info.ranks[2 * p + 1]);
+                let a = rec.vec(info.ranks[2 * p], level, 2 * p);
+                let b = rec.vec(info.ranks[2 * p + 1], level, 2 * p + 1);
                 splits.push((sol[p], info.ranks[2 * p], a, b));
                 x_s.push(a);
                 x_s.push(b);
             }
             rec.steps.push(SolveInstr::Split { items: splits });
             // w_i = y_i^R - Σ L(s)_jiᵀ x_j^S.
-            let w: Vec<BufferId> = (0..width).map(|i| rec.vec(info.nreds[i])).collect();
+            let w: Vec<BufferId> =
+                (0..width).map(|i| rec.vec(info.nreds[i], level, i)).collect();
             rec.steps.push(SolveInstr::Copy {
                 items: (0..width).map(|i| (w[i], saved_r[li][i])).collect(),
             });
@@ -632,7 +639,7 @@ impl SolveCtx {
                 SubstMode::Naive => {
                     // Reverse-order serial upper solve.
                     for &i in active.iter().rev() {
-                        let rhs = rec.vec(info.nreds[i]);
+                        let rhs = rec.vec(info.nreds[i], level, i);
                         rec.steps.push(SolveInstr::Copy { items: vec![(rhs, w[i])] });
                         for &(j, i2) in &info.lr_keys {
                             if i2 != i {
@@ -653,7 +660,7 @@ impl SolveCtx {
                 SubstMode::Parallel => {
                     // Single-hop: z = Lᵀ⁻¹ w; x = z + Lᵀ⁻¹(-Σ L(r)ᵀ z).
                     let z: Vec<BufferId> =
-                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                        active.iter().map(|&i| rec.vec(info.nreds[i], level, i)).collect();
                     rec.steps.push(SolveInstr::Copy {
                         items: active.iter().zip(&z).map(|(&i, &zi)| (zi, w[i])).collect(),
                     });
@@ -666,7 +673,7 @@ impl SolveCtx {
                     let slot_of: HashMap<usize, usize> =
                         active.iter().enumerate().map(|(s, &i)| (i, s)).collect();
                     let acc: Vec<BufferId> =
-                        active.iter().map(|&i| rec.vec(info.nreds[i])).collect();
+                        active.iter().map(|&i| rec.vec(info.nreds[i], level, i)).collect();
                     let entries: Vec<(BufferId, BufferId, BufferId, (usize, usize))> = info
                         .lr_keys
                         .iter()
@@ -688,7 +695,7 @@ impl SolveCtx {
                     rec.trsv(level, true, &corr_items);
                     let mut add_items = Vec::with_capacity(active.len());
                     for (slot, &i) in active.iter().enumerate() {
-                        let xi = rec.vec(info.nreds[i]);
+                        let xi = rec.vec(info.nreds[i], level, i);
                         add_items.push((xi, z[slot], acc[slot]));
                         x_r[i] = xi;
                     }
@@ -697,17 +704,17 @@ impl SolveCtx {
             }
             for i in 0..width {
                 if x_r[i] == UNSET {
-                    x_r[i] = rec.vec(info.nreds[i]); // nred == 0: empty
+                    x_r[i] = rec.vec(info.nreds[i], level, i); // nred == 0: empty
                 }
             }
             // x_i = U_i [x_i^S; x_i^R] (batched).
             let stacked: Vec<BufferId> =
-                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
+                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i], level, i)).collect();
             rec.steps.push(SolveInstr::Concat {
                 items: (0..width).map(|i| (stacked[i], x_s[i], x_r[i])).collect(),
             });
             let out: Vec<BufferId> =
-                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i])).collect();
+                (0..width).map(|i| rec.vec(info.ranks[i] + info.nreds[i], level, i)).collect();
             rec.apply_basis(level, false, info, basis, &stacked, &out);
             sol = out;
         }
@@ -724,6 +731,7 @@ impl SolveCtx {
         SolveProgram {
             vec_base: factor.buf_count as u32,
             vec_lens: rec.vec_lens,
+            vec_home: rec.vec_home,
             steps: rec.steps,
             launches: rec.launches,
             total_flops,
@@ -755,20 +763,30 @@ fn level_wiring(
 struct SolveRecorder {
     base: u32,
     vec_lens: Vec<usize>,
+    vec_home: Vec<(u32, u32)>,
     steps: Vec<SolveInstr>,
     launches: Vec<LaunchMeta>,
 }
 
 impl SolveRecorder {
     fn new(base: u32) -> SolveRecorder {
-        SolveRecorder { base, vec_lens: Vec::new(), steps: Vec::new(), launches: Vec::new() }
+        SolveRecorder {
+            base,
+            vec_lens: Vec::new(),
+            vec_home: Vec::new(),
+            steps: Vec::new(),
+            launches: Vec::new(),
+        }
     }
 
     /// Allocate the next vector buffer (ids live above the factorization
-    /// arena so matrix and vector operands share one id space).
-    fn vec(&mut self, len: usize) -> BufferId {
+    /// arena so matrix and vector operands share one id space). `(level,
+    /// bx)` is the tree position the vector belongs to — the ownership
+    /// annotation SPMD carving reads (see [`SolveProgram::vec_home`]).
+    fn vec(&mut self, len: usize, level: usize, bx: usize) -> BufferId {
         let id = BufferId(self.base + self.vec_lens.len() as u32);
         self.vec_lens.push(len);
+        self.vec_home.push((level as u32, bx as u32));
         id
     }
 

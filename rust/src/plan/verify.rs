@@ -45,7 +45,9 @@
 //! factorization with the runtime hazard log enabled and asserts the two
 //! edge sets are identical, op for op.
 
-use super::{FactorProgram, HostSrc, Instr, Plan, PlanSig, SolveInstr, SolveProgram};
+use super::{
+    ExchangeRecv, FactorProgram, HostSrc, Instr, Plan, PlanSig, RankPlan, SolveInstr, SolveProgram,
+};
 use crate::batch::device::{launch_operands, Launch, LaunchOperands};
 use crate::plan::BufferId;
 use std::collections::HashMap;
@@ -156,6 +158,10 @@ pub enum ViolationKind {
     FactorRegionWrite,
     /// Operand shapes/lengths do not conform.
     ShapeMismatch,
+    /// A cross-rank exchange is unbalanced: a posted send no peer
+    /// receives, a receive no peer sends, or collective counts that differ
+    /// across the rank streams.
+    UnmatchedComm,
 }
 
 impl fmt::Display for ViolationKind {
@@ -174,6 +180,7 @@ impl fmt::Display for ViolationKind {
             ViolationKind::ReadWriteAlias => "intra-launch read/write alias",
             ViolationKind::FactorRegionWrite => "write into read-only factor region",
             ViolationKind::ShapeMismatch => "shape mismatch",
+            ViolationKind::UnmatchedComm => "unmatched cross-rank communication",
         })
     }
 }
@@ -692,6 +699,14 @@ impl<'p> Walk<'p> {
                     self.define(it.dst, (it.rows, it.cols));
                 }
             }
+            Launch::Exchange { recvs, .. } => {
+                // The generic operand checks above already enforced the
+                // comm discipline (sends Live, receive targets Never);
+                // receiving defines each target at its wire shape.
+                for r in recvs.iter() {
+                    self.define(r.buf, (r.rows as usize, r.cols as usize));
+                }
+            }
             _ => unreachable!("substitution opcode in factorization stream"),
         }
         Ok(())
@@ -733,6 +748,9 @@ fn factor_launch(instr: &Instr) -> Launch<'_> {
         Instr::TrsmRightLt { level, items } => Launch::TrsmRightLt { level: *level, items },
         Instr::SchurSelf { level, items } => Launch::SchurSelf { level: *level, items },
         Instr::Merge { level: _, items } => Launch::Merge { items },
+        Instr::Exchange { level, sends, recvs } => {
+            Launch::Exchange { level: *level, sends, recvs }
+        }
         Instr::Upload { .. } | Instr::Free { .. } => {
             unreachable!("Upload/Free are arena transfers, not launches")
         }
@@ -1177,6 +1195,21 @@ impl SolveWalk<'_> {
                     ));
                 }
             }
+            Launch::ExchangeVec { recvs, .. } => {
+                for &(_, v, len) in recvs.iter() {
+                    if vlen(v) != len as usize {
+                        return Err(self.len_err(
+                            opcode,
+                            Some(v),
+                            format!(
+                                "exchange delivers {len} elements into length-{} buffer B{}",
+                                vlen(v),
+                                v.0
+                            ),
+                        ));
+                    }
+                }
+            }
             _ => unreachable!("factorization opcode in substitution stream"),
         }
         Ok(())
@@ -1224,6 +1257,9 @@ fn verify_solve_inner(
             SolveInstr::RootSolve { l, x } => {
                 walk.check_launch(&Launch::RootSolve { l: *l, x: *x })?
             }
+            SolveInstr::Exchange { level, sends, recvs } => walk.check_launch(
+                &Launch::ExchangeVec { level: *level, sends, recvs },
+            )?,
         }
         walk.index += 1;
     }
@@ -1284,6 +1320,260 @@ pub fn verify(plan: &Plan) -> Result<PlanReport, PlanViolation> {
 /// host-synchronous backend, or `None` if the program does not verify.
 pub fn predicted_peak_bytes(plan: &Plan) -> Option<usize> {
     verify_factor(&plan.factor, &plan.sig).ok().map(|fa| fa.peak_bytes)
+}
+
+/// The positive result of [`verify_rank_set`]: aggregate communication
+/// structure of a carved rank-plan set.
+#[derive(Clone, Copy, Debug)]
+pub struct RankSetReport {
+    /// Rank count.
+    pub ranks: usize,
+    /// Factor-phase collectives per rank stream (equal across ranks).
+    pub factor_collectives: usize,
+    /// Substitution collectives per rank stream.
+    pub solve_collectives: usize,
+    /// Factor-phase bytes delivered (summed over every receive).
+    pub factor_comm_bytes: u64,
+    /// Substitution bytes delivered.
+    pub solve_comm_bytes: u64,
+}
+
+/// Carve `plan` for `ranks` ranks and run the full cross-rank static
+/// audit ([`verify_rank_set`]) on the result — the `plan-lint --ranks`
+/// entry point. The plan's structural signature is crate-private, so
+/// out-of-crate callers come through here rather than carving and
+/// auditing separately.
+pub fn verify_carved(
+    plan: &super::Plan,
+    ranks: usize,
+    mode: crate::ulv::SubstMode,
+) -> Result<RankSetReport, PlanViolation> {
+    let rps = super::rank::carve(plan, ranks, mode);
+    verify_rank_set(&rps, &plan.sig)
+}
+
+/// Cross-rank static audit of a carved rank-plan set
+/// ([`crate::plan::carve`]). Every rank's factorization and substitution
+/// stream must verify on its own (the per-rank walk treats `Exchange` like
+/// any other launch: sends must be live, receive targets untouched), the
+/// ranks must agree on the number of collectives in each phase (the k-th
+/// `Exchange` on every rank is one rendezvous), every receive must name a
+/// buffer its peer actually sends in that collective — at a conforming
+/// shape — and every posted send must have at least one receiver.
+pub fn verify_rank_set(rps: &[RankPlan], sig: &PlanSig) -> Result<RankSetReport, PlanViolation> {
+    assert!(!rps.is_empty(), "verify_rank_set needs at least one rank plan");
+    let mut fas = Vec::with_capacity(rps.len());
+    for rp in rps {
+        let fa = verify_factor(&rp.factor, sig)?;
+        verify_solve_inner(&fa, rp.n, &rp.solve, ProgramKind::SolveParallel)?;
+        fas.push(fa);
+    }
+    let unmatched = |program: ProgramKind,
+                     index: usize,
+                     opcode: &'static str,
+                     buffer: Option<BufferId>,
+                     detail: String| PlanViolation {
+        program,
+        index,
+        opcode,
+        buffer,
+        kind: ViolationKind::UnmatchedComm,
+        detail,
+    };
+
+    // ---- Factor-phase collectives --------------------------------------
+    let factor_seqs: Vec<Vec<(&[BufferId], &[ExchangeRecv])>> = rps
+        .iter()
+        .map(|rp| {
+            rp.factor
+                .prologue
+                .iter()
+                .chain(rp.factor.levels.iter().flat_map(|lp| lp.steps.iter()))
+                .filter_map(|i| match i {
+                    Instr::Exchange { sends, recvs, .. } => {
+                        Some((sends.as_slice(), recvs.as_slice()))
+                    }
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+    let factor_epochs = factor_seqs[0].len();
+    for (r, seq) in factor_seqs.iter().enumerate() {
+        if seq.len() != factor_epochs {
+            return Err(unmatched(
+                ProgramKind::Factor,
+                seq.len().min(factor_epochs),
+                "EXCHANGE",
+                None,
+                format!(
+                    "rank {r} records {} factor collectives but rank 0 records {factor_epochs} \
+                     — the rendezvous would deadlock",
+                    seq.len()
+                ),
+            ));
+        }
+    }
+    let mut factor_comm_bytes = 0u64;
+    for k in 0..factor_epochs {
+        // (sender, buffer) -> (shape, received-by-someone).
+        let mut posted: HashMap<(usize, u32), ((usize, usize), bool)> = HashMap::new();
+        for (r, seq) in factor_seqs.iter().enumerate() {
+            for &b in seq[k].0 {
+                posted.insert((r, b.0), (fas[r].shape[b.0 as usize], false));
+            }
+        }
+        for (r, seq) in factor_seqs.iter().enumerate() {
+            for rv in seq[k].1 {
+                match posted.get_mut(&(rv.from as usize, rv.buf.0)) {
+                    None => {
+                        return Err(unmatched(
+                            ProgramKind::Factor,
+                            k,
+                            "EXCHANGE",
+                            Some(rv.buf),
+                            format!(
+                                "rank {r} expects B{} from rank {} in factor collective {k}, \
+                                 but rank {} never sends it",
+                                rv.buf.0, rv.from, rv.from
+                            ),
+                        ))
+                    }
+                    Some((shape, received)) => {
+                        if *shape != (rv.rows as usize, rv.cols as usize) {
+                            return Err(PlanViolation {
+                                program: ProgramKind::Factor,
+                                index: k,
+                                opcode: "EXCHANGE",
+                                buffer: Some(rv.buf),
+                                kind: ViolationKind::ShapeMismatch,
+                                detail: format!(
+                                    "rank {r} receives B{} as {}x{} but rank {} holds {}x{}",
+                                    rv.buf.0, rv.rows, rv.cols, rv.from, shape.0, shape.1
+                                ),
+                            });
+                        }
+                        *received = true;
+                        factor_comm_bytes += 8 * rv.rows as u64 * rv.cols as u64;
+                    }
+                }
+            }
+        }
+        let mut orphans: Vec<(usize, u32)> =
+            posted.iter().filter(|(_, &(_, rx))| !rx).map(|(&key, _)| key).collect();
+        orphans.sort_unstable();
+        if let Some(&(r, b)) = orphans.first() {
+            return Err(unmatched(
+                ProgramKind::Factor,
+                k,
+                "EXCHANGE",
+                Some(BufferId(b)),
+                format!("rank {r} sends B{b} in factor collective {k} but no rank receives it"),
+            ));
+        }
+    }
+
+    // ---- Substitution collectives --------------------------------------
+    let solve_seqs: Vec<Vec<(&[BufferId], &[(u32, BufferId, u32)])>> = rps
+        .iter()
+        .map(|rp| {
+            rp.solve
+                .steps
+                .iter()
+                .filter_map(|s| match s {
+                    SolveInstr::Exchange { sends, recvs, .. } => {
+                        Some((sends.as_slice(), recvs.as_slice()))
+                    }
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+    let solve_epochs = solve_seqs[0].len();
+    for (r, seq) in solve_seqs.iter().enumerate() {
+        if seq.len() != solve_epochs {
+            return Err(unmatched(
+                ProgramKind::SolveParallel,
+                seq.len().min(solve_epochs),
+                "EXCHANGEV",
+                None,
+                format!(
+                    "rank {r} records {} substitution collectives but rank 0 records \
+                     {solve_epochs} — the rendezvous would deadlock",
+                    seq.len()
+                ),
+            ));
+        }
+    }
+    let mut solve_comm_bytes = 0u64;
+    for k in 0..solve_epochs {
+        let mut posted: HashMap<(usize, u32), (usize, bool)> = HashMap::new();
+        for (r, seq) in solve_seqs.iter().enumerate() {
+            for &v in seq[k].0 {
+                let len = rps[r].solve.vec_lens[v.0 as usize - rps[r].solve.vec_base as usize];
+                posted.insert((r, v.0), (len, false));
+            }
+        }
+        for (r, seq) in solve_seqs.iter().enumerate() {
+            for &(from, v, len) in seq[k].1 {
+                match posted.get_mut(&(from as usize, v.0)) {
+                    None => {
+                        return Err(unmatched(
+                            ProgramKind::SolveParallel,
+                            k,
+                            "EXCHANGEV",
+                            Some(v),
+                            format!(
+                                "rank {r} expects B{} from rank {from} in substitution \
+                                 collective {k}, but rank {from} never sends it",
+                                v.0
+                            ),
+                        ))
+                    }
+                    Some((sent_len, received)) => {
+                        if *sent_len != len as usize {
+                            return Err(PlanViolation {
+                                program: ProgramKind::SolveParallel,
+                                index: k,
+                                opcode: "EXCHANGEV",
+                                buffer: Some(v),
+                                kind: ViolationKind::ShapeMismatch,
+                                detail: format!(
+                                    "rank {r} receives B{} at length {len} but rank {from} \
+                                     sends length {sent_len}",
+                                    v.0
+                                ),
+                            });
+                        }
+                        *received = true;
+                        solve_comm_bytes += 8 * len as u64;
+                    }
+                }
+            }
+        }
+        let mut orphans: Vec<(usize, u32)> =
+            posted.iter().filter(|(_, &(_, rx))| !rx).map(|(&key, _)| key).collect();
+        orphans.sort_unstable();
+        if let Some(&(r, b)) = orphans.first() {
+            return Err(unmatched(
+                ProgramKind::SolveParallel,
+                k,
+                "EXCHANGEV",
+                Some(BufferId(b)),
+                format!(
+                    "rank {r} sends B{b} in substitution collective {k} but no rank receives it"
+                ),
+            ));
+        }
+    }
+
+    Ok(RankSetReport {
+        ranks: rps.len(),
+        factor_collectives: factor_epochs,
+        solve_collectives: solve_epochs,
+        factor_comm_bytes,
+        solve_comm_bytes,
+    })
 }
 
 // ---------------------------------------------------------------------

@@ -33,11 +33,13 @@ use super::builder::{validate, FactorStorage};
 use super::{guard, H2Error};
 use crate::batch::device::{Device, DeviceArena, WorkspacePool};
 use crate::construct::H2Config;
-use crate::dist::{dist_solve_driver_in, NCCL_LIKE};
+use crate::dist::exec::DistSession;
+use crate::dist::{model_report, NCCL_LIKE};
 use crate::geometry::Geometry;
 use crate::h2::H2Matrix;
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
+use crate::metrics::comm::CommMeasurement;
 use crate::metrics::overlap::OverlapTrace;
 use crate::metrics::run_trace::{
     overlap_metrics, LevelReport, RunReport, NO_LEVEL, RUN_REPORT_SCHEMA_VERSION,
@@ -45,6 +47,7 @@ use crate::metrics::run_trace::{
 use crate::metrics::{flops::FlopScope, timer::timed, RunTrace};
 use crate::plan::{self, Executor, LevelScheduleStats, Plan, ScheduleStats};
 use crate::ulv::{pcg_in, FactorMeta, SubstMode, UlvFactor};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -159,14 +162,17 @@ pub struct SolveReport {
     pub backend: &'static str,
 }
 
-/// Result of a facade-level simulated distributed solve
-/// ([`H2Solver::solve_dist`]). Times are modeled with [`NCCL_LIKE`]; use
-/// [`crate::dist::dist_solve_driver`] directly for custom communication
-/// models.
+/// Result of a facade-level distributed solve ([`H2Solver::solve_dist`]):
+/// the solution computed by the real multi-rank SPMD runtime
+/// ([`crate::dist::exec::DistSession`]) alongside the α-β *prediction*
+/// (times modeled with [`NCCL_LIKE`]; use [`crate::dist::model_report`]
+/// directly for custom communication models) and the transport's
+/// *measured* communication, so the two render side by side.
 #[derive(Clone, Debug)]
 pub struct DistSolveReport {
-    /// Solution in the caller's original point ordering (identical across
-    /// rank counts).
+    /// Solution in the caller's original point ordering (matches
+    /// [`solve`](H2Solver::solve) to solver accuracy for every rank
+    /// count).
     pub x: Vec<f64>,
     /// Effective rank count (power of two, clamped to the leaf width).
     pub ranks: usize,
@@ -174,10 +180,14 @@ pub struct DistSolveReport {
     pub factor_time: f64,
     /// Modeled substitution time.
     pub subst_time: f64,
-    /// Factorization communication volume in bytes.
+    /// Modeled factorization communication volume in bytes.
     pub factor_bytes: u64,
-    /// Substitution communication volume in bytes.
+    /// Modeled substitution communication volume in bytes.
     pub subst_bytes: u64,
+    /// Measured communication from the rank transports: collective
+    /// counts, bytes actually shipped, and exchange wall time on the
+    /// critical path, for both phases.
+    pub measured: CommMeasurement,
     /// Sampled exact-kernel relative residual (as in [`SolveReport`]).
     pub residual: Option<f64>,
 }
@@ -243,6 +253,11 @@ pub struct H2Solver {
     /// [`run_report`](H2Solver::run_report) snapshots it,
     /// [`take_solve_overlap`](H2Solver::take_solve_overlap) drains it.
     solve_overlap: Mutex<OverlapTrace>,
+    /// Lazily built multi-rank SPMD sessions, keyed by effective rank
+    /// count: each holds per-rank devices and rank-sharded factor arenas
+    /// ([`crate::dist::exec::DistSession`]). Invalidated whenever the
+    /// factor is replaced (`refactorize`, `rebind_backend`).
+    dist_sessions: Mutex<HashMap<usize, Arc<DistSession>>>,
     /// Session-wide cap on the `solve_many` worker fan-out (0 = scale to
     /// available parallelism). Per-call [`SolveOptions::max_threads`]
     /// overrides it.
@@ -306,6 +321,7 @@ impl H2Solver {
             run_trace,
             solved_rhs: AtomicUsize::new(0),
             solve_overlap: Mutex::new(OverlapTrace::default()),
+            dist_sessions: Mutex::new(HashMap::new()),
             max_solve_threads,
             plan_recordings: 1,
             verify_plan,
@@ -669,45 +685,59 @@ impl H2Solver {
         })
     }
 
-    /// Simulated distributed solve over `ranks` ranks (paper §5); times
-    /// are modeled with [`NCCL_LIKE`]. The solution is identical to
-    /// [`solve`](H2Solver::solve) for every rank count. Reuses the
-    /// session's resident factor and backend — only the substitution runs
-    /// per call; the factorization cost in the report is modeled from
-    /// [`FactorMeta`] (no host mirror needed).
+    /// Real multi-rank SPMD solve over `ranks` ranks (paper §5): the
+    /// recorded plan is carved into per-rank streams
+    /// ([`crate::plan::carve`]), each rank runs on its **own** device
+    /// instance against its **own** rank-sharded arena (thread-per-rank
+    /// behind the [`crate::dist::exec::Transport`] seam), and ranks meet
+    /// only at the plan's explicit `Exchange` instructions. The first
+    /// call for a rank count runs the distributed factorization and
+    /// caches the [`DistSession`]; later calls replay the carved
+    /// substitution against the resident shards. The report carries both
+    /// the α-β *prediction* (times modeled with [`NCCL_LIKE`]) and the
+    /// transports' *measured* communication.
     pub fn solve_dist(&self, b: &[f64], ranks: usize) -> Result<DistSolveReport, H2Error> {
         self.check_rhs(b)?;
+        let session = self.dist_session(ranks)?;
         let bt = self.h2.tree.permute_vec(b);
-        let mut ws = self.pool.acquire(self.backend.as_ref());
-        let (res, subst_time) = timed(|| {
-            guard("distributed solve", || {
-                dist_solve_driver_in(
-                    &self.plan,
-                    &self.meta,
-                    self.backend.as_ref(),
-                    self.arena.as_ref(),
-                    ws.region(),
-                    ranks,
-                    &bt,
-                    self.subst,
-                )
-            })
-        });
-        drop(ws);
+        let (res, subst_time) =
+            timed(|| guard("distributed solve", || session.solve(&bt)));
         self.run_trace.push_completed(NO_LEVEL, "substitution", 1, (self.n(), 1), subst_time);
-        let report = res?;
+        let (xt, subst_comm) = res?;
         self.solved_rhs.fetch_add(1, Ordering::Relaxed);
-        let residual = self.sample_residual(&report.x, &bt);
-        let x = self.h2.tree.unpermute_vec(&report.x);
+        let residual = self.sample_residual(&xt, &bt);
+        let x = self.h2.tree.unpermute_vec(&xt);
+        let report = model_report(&self.meta, session.ranks(), Vec::new());
         Ok(DistSolveReport {
             x,
-            ranks: report.ranks,
+            ranks: session.ranks(),
             factor_time: report.factor_time(&NCCL_LIKE),
             subst_time: report.subst_time(&NCCL_LIKE),
             factor_bytes: report.factor_bytes,
             subst_bytes: report.subst_bytes,
+            measured: CommMeasurement { factor: session.factor_comm(), subst: subst_comm },
             residual,
         })
+    }
+
+    /// The cached multi-rank session for (clamped) `ranks`, building it —
+    /// per-rank devices from the session's [`BackendSpec`], distributed
+    /// factorization, rank-sharded arenas — on first use. The cache lock
+    /// is held across a build, so concurrent first solves at one rank
+    /// count factorize once.
+    fn dist_session(&self, ranks: usize) -> Result<Arc<DistSession>, H2Error> {
+        let p = plan::rank::clamp_ranks(ranks, self.meta.depth);
+        let mut cache = self.dist_sessions.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(s) = cache.get(&p) {
+            if s.mode() == self.subst {
+                return Ok(s.clone());
+            }
+        }
+        let session = Arc::new(guard("distributed factorization", || {
+            DistSession::build(&self.spec, &self.plan, &self.h2, p, self.subst)
+        })??);
+        cache.insert(p, session.clone());
+        Ok(session)
     }
 
     /// Rebuild the H² matrix and the ULV factor with a new configuration
@@ -746,6 +776,8 @@ impl H2Solver {
         // Stale by construction: the accumulated solve-path events refer
         // to the factor that was just replaced.
         *self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()) = OverlapTrace::default();
+        // Multi-rank sessions shard the factor that was just replaced.
+        self.dist_sessions.get_mut().unwrap_or_else(|p| p.into_inner()).clear();
         self.h2 = h2;
         self.plan = plan;
         self.factor = factor;
@@ -782,6 +814,8 @@ impl H2Solver {
         // The old device's trace epoch dies with it; events from before
         // the rebind cannot be merged with the new backend's.
         *self.solve_overlap.lock().unwrap_or_else(|p| p.into_inner()) = OverlapTrace::default();
+        // Multi-rank sessions were built from the old backend spec.
+        self.dist_sessions.get_mut().unwrap_or_else(|p| p.into_inner()).clear();
         self.spec = spec;
         self.backend = backend;
         self.factor = factor;

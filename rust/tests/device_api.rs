@@ -8,31 +8,22 @@
 //! * replays stay bit-identical (the PR 2 `plan_replay.rs` baselines) and
 //!   `rebind_backend` round-trips the arena across backends to 1e-12;
 //! * the naive substitution program records lazily on first use;
-//! * the deprecated slice-based `BatchExec` trait still works through the
-//!   `LegacyBatchExec` adapter;
 //! * `BackendSpec::by_name` accepts `pjrt:<artifacts_dir>`.
-
-// The legacy-adapter test exercises the deprecated BatchExec trait on
-// purpose; everything else uses the Device API.
-#![allow(deprecated)]
 
 mod common;
 
 use common::{rhs, seeds, Case};
-use h2ulv::batch::device::{Device, LegacyBatchExec, ValidatingDevice, WorkspacePool};
+use h2ulv::batch::device::{ValidatingDevice, WorkspacePool};
 use h2ulv::batch::native::NativeBackend;
-use h2ulv::batch::BatchExec;
 use h2ulv::construct::H2Config;
 use h2ulv::geometry::Geometry;
 use h2ulv::h2::H2Matrix;
 use h2ulv::kernels::KernelFn;
-use h2ulv::linalg::norms::{frob, rel_err_vec};
-use h2ulv::linalg::{chol, Matrix};
+use h2ulv::linalg::norms::rel_err_vec;
 use h2ulv::plan::Executor;
 use h2ulv::prelude::*;
 use h2ulv::solver::backend::SerialBackend;
 use h2ulv::ulv::{factorize, SubstMode};
-use h2ulv::util::Rng;
 use std::sync::Arc;
 
 fn cfg() -> H2Config {
@@ -273,62 +264,6 @@ fn device_pjrt_fallback_parity() {
     let xp = fac_p.solve_tree_order(&bt, &be, SubstMode::Parallel);
     assert_eq!(xn, xp, "all-fallback PJRT must be bit-identical to native");
     assert!(be.stats.fallbacks.load(std::sync::atomic::Ordering::Relaxed) > 0);
-}
-
-#[test]
-fn device_legacy_batchexec_adapter() {
-    // The deprecated slice-based trait, served by any Device through the
-    // scratch-arena adapter.
-    let native = NativeBackend::new();
-    let legacy = LegacyBatchExec::new(&native as &dyn Device);
-    assert_eq!(legacy.name(), "native");
-    let mut rng = Rng::new(415);
-
-    // POTRF round-trips through the arena and matches the direct kernel.
-    let mats: Vec<Matrix> = (0..4).map(|_| Matrix::rand_spd(12, &mut rng)).collect();
-    let mut batch = mats.clone();
-    legacy.potrf(0, &mut batch);
-    for (orig, got) in mats.iter().zip(&batch) {
-        let want = chol::cholesky(orig).unwrap();
-        assert_eq!(got.as_slice(), want.as_slice());
-    }
-
-    // Sparsify.
-    let u = Matrix::randn(6, 6, &mut rng);
-    let v = Matrix::randn(5, 5, &mut rng);
-    let a = Matrix::randn(6, 5, &mut rng);
-    let got = legacy.sparsify(0, &[&u], std::slice::from_ref(&a), &[&v]);
-    let want = native.sparsify(0, &[&u], std::slice::from_ref(&a), &[&v]);
-    let mut d = got[0].clone();
-    d.axpy(-1.0, &want[0]);
-    assert!(frob(&d) == 0.0, "adapter sparsify must be bit-identical");
-
-    // TRSM + TRSV + GEMV + basis.
-    let l = chol::cholesky(&Matrix::rand_spd(8, &mut rng)).unwrap();
-    let mut b1 = vec![Matrix::randn(6, 8, &mut rng)];
-    let mut b2 = b1.clone();
-    legacy.trsm_right_lt(0, &[&l], &mut b1);
-    native.trsm_right_lt(0, &[&l], &mut b2);
-    assert_eq!(b1[0].as_slice(), b2[0].as_slice());
-
-    let x0: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
-    let mut xa = vec![x0.clone()];
-    let mut xb = vec![x0.clone()];
-    legacy.trsv_fwd(0, &[&l], &mut xa);
-    native.trsv_fwd(0, &[&l], &mut xb);
-    assert_eq!(xa, xb);
-
-    let m = Matrix::randn(8, 8, &mut rng);
-    let y0: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
-    let mut ya = vec![y0.clone()];
-    let mut yb = vec![y0.clone()];
-    legacy.gemv_acc(0, -1.0, &[&m], false, &[&x0], &mut ya);
-    native.gemv_acc(0, -1.0, &[&m], false, &[&x0], &mut yb);
-    assert_eq!(ya, yb);
-
-    let got = legacy.apply_basis(0, &[&m], true, &[&x0]);
-    let want = native.apply_basis(0, &[&m], true, &[&x0]);
-    assert_eq!(got, want);
 }
 
 #[test]

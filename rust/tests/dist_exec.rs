@@ -1,0 +1,192 @@
+//! Integration tests for the real multi-rank SPMD runtime
+//! ([`h2ulv::dist::exec`]): P-rank `solve_dist` parity with the
+//! single-process facade solve, comm instructions visible in carved plans,
+//! the cross-rank static audit (positive fuzz sweep plus pinned negative
+//! violations), and the modeled-vs-measured communication report.
+
+mod common;
+
+use common::{seeds, Case};
+use h2ulv::linalg::norms::rel_err_vec;
+use h2ulv::plan::verify::{verify_carved, verify_rank_set, ViolationKind};
+use h2ulv::plan::{carve, record, render_comm, BufferId, Instr, PlanSig};
+use h2ulv::prelude::*;
+use h2ulv::util::Rng;
+
+const N: usize = 256;
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// N=256 at leaf 48 gives a depth-3 tree (8 leaves) — deep enough to carve
+/// for 4 ranks with both distributed and redundant (merged) levels.
+fn build() -> H2Solver {
+    let cfg = H2Config { leaf_size: 48, max_rank: 24, far_samples: 0, ..Default::default() };
+    H2SolverBuilder::new(Geometry::sphere_surface(N, 977), KernelFn::laplace())
+        .config(cfg)
+        .build()
+        .expect("well-formed problem")
+}
+
+#[test]
+fn spmd_solve_matches_single_process_for_p2_and_p4() {
+    let solver = build();
+    let b = rhs(N, 11);
+    let serial = solver.solve(&b).unwrap();
+    for p in [2usize, 4] {
+        let dist = solver.solve_dist(&b, p).unwrap();
+        assert_eq!(dist.ranks, p);
+        let err = rel_err_vec(&dist.x, &serial.x);
+        assert!(err < 1e-12, "P={p}: SPMD solve diverged from single-process: {err}");
+        // Real communication happened: the thread-transport measured it.
+        assert!(dist.measured.factor.exchanges > 0, "P={p}: no factor collectives measured");
+        assert!(dist.measured.subst.exchanges > 0, "P={p}: no subst collectives measured");
+        assert!(dist.measured.factor.bytes > 0 && dist.measured.subst.bytes > 0);
+    }
+}
+
+#[test]
+fn repeated_spmd_solves_are_bitwise_deterministic() {
+    // The carved replay is deterministic per rank and the rendezvous is a
+    // full barrier, so re-running the same solve on the cached session must
+    // reproduce the solution bit for bit.
+    let solver = build();
+    let b = rhs(N, 13);
+    let first = solver.solve_dist(&b, 4).unwrap();
+    let second = solver.solve_dist(&b, 4).unwrap();
+    assert_eq!(first.x, second.x, "SPMD solve is not deterministic");
+}
+
+#[test]
+fn modeled_and_measured_comm_are_reported_side_by_side() {
+    // The α-β model stays a *prediction*; the transport reports the
+    // *measurement*. Both must be populated for P > 1 — no tolerance gate
+    // between them (the model is a machine abstraction, not a stopwatch).
+    let solver = build();
+    let b = rhs(N, 17);
+    let dist = solver.solve_dist(&b, 4).unwrap();
+    assert!(dist.factor_bytes > 0 && dist.subst_bytes > 0, "modeled comm volume missing");
+    assert!(dist.factor_time > 0.0 && dist.subst_time > 0.0, "modeled times missing");
+    let m = &dist.measured;
+    assert!(m.factor.exchanges > 0 && m.factor.bytes > 0, "measured factor comm missing");
+    assert!(m.subst.exchanges > 0 && m.subst.bytes > 0, "measured subst comm missing");
+    assert!(m.factor.seconds >= 0.0 && m.subst.seconds >= 0.0);
+
+    // Single rank: no communication on either side of the report.
+    let single = solver.solve_dist(&b, 1).unwrap();
+    assert_eq!(single.factor_bytes, 0);
+    assert_eq!(single.subst_bytes, 0);
+    assert_eq!(single.measured.factor.exchanges, 0);
+    assert_eq!(single.measured.subst.bytes, 0);
+}
+
+#[test]
+fn carved_plans_expose_comm_instructions() {
+    let solver = build();
+    let plan = record(solver.matrix());
+    let rps = carve(&plan, 4, SubstMode::Parallel);
+    assert_eq!(rps.len(), 4);
+    for rp in &rps {
+        let exchanges = rp
+            .factor
+            .prologue
+            .iter()
+            .chain(rp.factor.levels.iter().flat_map(|lp| lp.steps.iter()))
+            .filter(|i| matches!(i, Instr::Exchange { .. }))
+            .count();
+        assert!(exchanges > 0, "rank {}: no Exchange instructions in carved factor", rp.rank);
+    }
+    let rendered = render_comm(&rps);
+    assert!(rendered.contains("factor exchange"), "comm schedule not rendered:\n{rendered}");
+    assert!(rendered.contains("B delivered"), "comm schedule lacks byte counts:\n{rendered}");
+}
+
+#[test]
+fn rank_set_audit_passes_over_fuzzed_structures() {
+    // Positive sweep: every fuzzed structure must carve into a rank set the
+    // cross-rank static audit accepts, for both group sizes the CI smoke
+    // job runs.
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        let h2 = case.h2();
+        let plan = record(&h2);
+        for p in [2usize, 4] {
+            let report = verify_carved(&plan, p, SubstMode::Parallel)
+                .unwrap_or_else(|v| panic!("{case}: P={p} rank-set audit failed: {v}"));
+            if report.ranks > 1 {
+                assert!(
+                    report.factor_collectives > 0,
+                    "{case}: P={} carved with no factor collectives",
+                    report.ranks
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn send_of_undefined_buffer_is_use_before_def() {
+    let solver = build();
+    let plan = record(solver.matrix());
+    let sig = PlanSig::of(solver.matrix());
+    let mut rps = carve(&plan, 2, SubstMode::Parallel);
+    // Post a send of a buffer nothing has defined yet: first prologue slot,
+    // before the uploads run.
+    let depth = rps[0].depth;
+    rps[0].factor.prologue.insert(
+        0,
+        Instr::Exchange { level: depth, sends: vec![BufferId(0)], recvs: Vec::new() },
+    );
+    let v = verify_rank_set(&rps, &sig).expect_err("undefined send must not verify");
+    assert_eq!(v.kind, ViolationKind::UseBeforeDef, "got {v}");
+    assert_eq!(v.opcode, "EXCHANGE");
+    assert_eq!(v.buffer, Some(BufferId(0)));
+}
+
+#[test]
+fn recv_without_peer_send_is_unmatched_comm() {
+    let solver = build();
+    let plan = record(solver.matrix());
+    let sig = PlanSig::of(solver.matrix());
+    let mut rps = carve(&plan, 2, SubstMode::Parallel);
+    // Drop every send rank 1 posts in its first factor collective. Rank 1's
+    // own dataflow stays legal (sends are reads), but its peer still
+    // expects the buffers — the audit must flag the now-orphaned receive.
+    let f = &mut rps[1].factor;
+    let mutated = f
+        .prologue
+        .iter_mut()
+        .chain(f.levels.iter_mut().flat_map(|lp| lp.steps.iter_mut()))
+        .find_map(|i| match i {
+            Instr::Exchange { sends, .. } if !sends.is_empty() => {
+                sends.clear();
+                Some(())
+            }
+            _ => None,
+        });
+    assert!(mutated.is_some(), "rank 1 posts no factor sends to drop");
+    let v = verify_rank_set(&rps, &sig).expect_err("orphaned receive must not verify");
+    assert_eq!(v.kind, ViolationKind::UnmatchedComm, "got {v}");
+    assert_eq!(v.opcode, "EXCHANGE");
+}
+
+#[test]
+fn duplicate_free_across_carved_stream_is_double_free() {
+    let solver = build();
+    let plan = record(solver.matrix());
+    let sig = PlanSig::of(solver.matrix());
+    let mut rps = carve(&plan, 2, SubstMode::Parallel);
+    // Free the root factor twice at the end of rank 0's coarsest level: the
+    // second Free must be pinned as a DoubleFree (not be reported as the
+    // later residency violation the first Free also causes).
+    let root = rps[0].factor.root_src;
+    let last = rps[0].factor.levels.last_mut().expect("carved plan has levels");
+    last.steps.push(Instr::Free { bufs: vec![root] });
+    last.steps.push(Instr::Free { bufs: vec![root] });
+    let v = verify_rank_set(&rps, &sig).expect_err("double free must not verify");
+    assert_eq!(v.kind, ViolationKind::DoubleFree, "got {v}");
+    assert_eq!(v.opcode, "FREE");
+    assert_eq!(v.buffer, Some(root));
+}
