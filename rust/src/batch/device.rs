@@ -39,35 +39,51 @@
 //!    per-buffer data dependencies below. The result must be bit-identical
 //!    to in-order execution — overlap may only change *when* kernels run,
 //!    never their operands or arithmetic.
-//! 2. **Hazards are per `BufferId`.** Two operations conflict iff they
-//!    touch the same buffer of the same arena and at least one writes it
-//!    (write = `upload`/`alloc`/`free` of the id, or a launch operand in a
-//!    written role — POTRF blocks, TRSM panels, SYRK/Sparsify/Extract/
-//!    Merge destinations). Conflicting operations must execute in issue
-//!    order (RAW, WAR, and WAW edges all hold); non-conflicting operations
-//!    may overlap arbitrarily — the plan guarantees launches *within* a
-//!    level are mutually independent, and level *k+1*'s uploads are
-//!    independent of level *k*'s compute, which is exactly the overlap the
-//!    paper's schedule exposes.
+//! 2. **Hazards are per `BufferId`, with shared readers.** Two operations
+//!    conflict iff they touch the same buffer of the same arena and at
+//!    least one writes it (write = `upload`/`alloc`/`free` of the id, or a
+//!    launch operand in a written role — POTRF blocks, TRSM panels,
+//!    SYRK/Sparsify/Extract/Merge destinations, updated/written solve
+//!    vectors; the shared role classification is [`launch_operands`]).
+//!    Conflicting operations must execute in issue order (RAW, WAR, and
+//!    WAW edges all hold); non-conflicting operations may overlap
+//!    arbitrarily, and in particular *reads of one buffer never order
+//!    against each other* — any number of in-flight operations (and
+//!    concurrent solve workspaces) may read the same factor matrix at
+//!    once. The plan guarantees launches *within* a level are mutually
+//!    independent, and level *k+1*'s uploads are independent of level
+//!    *k*'s compute — exactly the overlap the paper's schedule exposes.
 //! 3. **[`Device::stream`] is a placement hint, never a synchronization
 //!    point.** It marks tree-level boundaries (the executor emits it in
 //!    both the factorization and substitution replays); an implementation
 //!    may route subsequent work to a different queue, but correctness must
 //!    come from rule 2 alone — a device that needs `stream` calls to be
 //!    correct is broken.
-//! 4. **[`Device::fence`] drains.** After `fence` returns, every
-//!    previously issued operation has completed and its effects are
-//!    visible to `download`/`take`. The executor fences before every
-//!    result download ([`SolveInstr::StoreSol`](crate::plan::SolveInstr)
-//!    and the end of a factorization replay); arena reads outside a fence
-//!    observe unspecified intermediate state. A panic raised by any
-//!    asynchronous operation is re-raised by the next `fence` on the
-//!    issuing thread.
-//! 5. **[`Device::launch_solve`] is synchronous and concurrent.** It may
-//!    be called from many threads against one shared factor region with
-//!    distinct workspaces; implementations must not require the caller to
-//!    fence between solve launches of one workspace (their program order
-//!    on the calling thread is the dependency order).
+//! 4. **[`Device::fence`] drains; result reads observe *their arena's*
+//!    completed state.** After `fence` returns, every previously issued
+//!    operation has completed and its effects are visible to
+//!    `download`/`take`. Additionally, a result read
+//!    (`download`/`download_vec`/`take`) on any arena must itself observe
+//!    the completed state of every operation previously issued *against
+//!    that arena* — the arena-scoped half of the fence contract, which is
+//!    what lets [`SolveInstr::StoreSol`](crate::plan::SolveInstr) read a
+//!    workspace back without quiescing unrelated solves pipelining through
+//!    the same device. Arena reads outside those two forms observe
+//!    unspecified intermediate state. A panic raised by an asynchronous
+//!    operation is re-raised on the issuing side: by the next `fence`, or
+//!    by the next result read of the arena the failed operation targeted.
+//! 5. **[`Device::launch_solve`] is concurrent and may be asynchronous.**
+//!    It may be called from many threads against one shared factor region
+//!    with distinct workspaces; implementations must not require the
+//!    caller to fence between solve launches of one workspace (their
+//!    program order on the calling thread is the dependency order, per
+//!    rule 2 — an overlapping device journals them like any other
+//!    operation, with the factor matrices as shared reads and the
+//!    workspace vectors as writes). Factor and workspace must resolve to
+//!    *different* regions; an implementation that detects aliasing rejects
+//!    the launch through the typed hazard-violation path (a panic whose
+//!    message carries `hazard audit failed`, surfaced by the facade as
+//!    [`H2Error::PlanVerification`](crate::solver::H2Error)).
 //!
 //! # Factor region vs. vector regions (concurrent solves)
 //!

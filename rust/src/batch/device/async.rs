@@ -2,73 +2,81 @@
 //! any host-synchronous [`Device`].
 //!
 //! The paper's schedule property — level *k*'s batched TRSM/Schur work has
-//! no dependency on level *k+1*'s sparsify uploads — only pays off if an
+//! no dependency on level *k+1*'s sparsify uploads, and the substitution
+//! chain decomposes into dependency-free runs — only pays off if an
 //! executor actually runs them concurrently. `AsyncDevice` does exactly
-//! that for the factorization replay:
+//! that for the factorization replay **and** the solve path:
 //!
 //! * **Journaled arena traffic.** Arenas created by an `AsyncDevice` are
-//!   [`AsyncArena`]s: matrix `upload`s, `free`s, and every factorization
-//!   [`Launch`] are *journaled* as asynchronous operations instead of
-//!   executing on the issuing thread. `stream(level)` routes subsequent
-//!   operations to the queue `level % streams` (two queues by default —
-//!   the paper's double-buffer), each drained in FIFO order by its own
-//!   worker thread.
-//! * **A `BufferId`-granular hazard tracker.** At enqueue time every
-//!   operation declares its operand set (from the launch operand lists
-//!   via [`super::launch_operands`], or the touched id for
-//!   uploads/frees), held *exclusively*: because the staging strategy
-//!   below moves buffers instead of sharing them, per-buffer ordering is
-//!   a single last-toucher chain whose transitive closure yields every
-//!   RAW/WAR/WAW edge — read-read pairs serialize too; see
-//!   `OwnedLaunch::operand_set` for why no recorded plan loses overlap to
-//!   this. A worker only starts an operation once all its edges have
-//!   completed. Issue order is the semantic order (device.rs "Streams,
-//!   fences, and hazards"), so replay results are **bit-identical** to
-//!   the wrapped device — overlap reorders *when* kernels run, never
-//!   their operands.
-//! * **Zero-copy staging on host arenas.** A worker executes a launch by
+//!   [`AsyncArena`]s: matrix `upload`s, vector `upload_vec`s, `free`s,
+//!   every factorization [`Launch`], and every substitution launch
+//!   ([`Device::launch_solve`]) are *journaled* as asynchronous operations
+//!   instead of executing on the issuing thread. `stream(level)` routes
+//!   subsequent operations to the queue `level % streams` (two queues by
+//!   default — the paper's double-buffer), each drained in FIFO order by
+//!   its own worker thread.
+//! * **A `BufferId`-granular hazard tracker with a shared-reader role.**
+//!   At enqueue time every operation declares per-`(arena, buffer)` read
+//!   and write sets (from the launch operand lists via
+//!   [`super::launch_operands`], or the touched id for uploads/frees).
+//!   Factorization launches declare all operands as *writes* — their
+//!   staging strategy physically moves buffers, so per-buffer ordering is
+//!   a single last-toucher chain (see `OwnedLaunch::operand_set` for why
+//!   no recorded plan loses overlap to this). Substitution launches use
+//!   the role split for real: factor matrices are **shared reads**
+//!   (readers only order against the previous writer, never against each
+//!   other), so concurrent solves reading the same Cholesky panel do not
+//!   serialize; vector operands are writes in the owning workspace. A
+//!   write depends on the previous writer *and* every reader since — the
+//!   full RAW/WAR/WAW order. A worker only starts an operation once all
+//!   its edges have completed. Issue order is the semantic order
+//!   (device.rs "Streams, fences, and hazards"), so results are
+//!   **bit-identical** to the wrapped device — overlap reorders *when*
+//!   kernels run, never their operands.
+//! * **Zero-copy staging for factor launches; lock-shared execution for
+//!   solve launches.** A factorization worker executes a launch by
 //!   *moving* its operand buffers from the shared arena into a private
 //!   arena (pointer moves via the `HostArena` fast path of
 //!   [`super::put_owned`]), running the wrapped device's kernel outside
-//!   any lock, and moving the results back. The shared-arena lock is held
-//!   only during the two pointer-move phases, which is what lets an
-//!   upload on one stream proceed while another stream computes.
-//! * **[`Device::fence`] drains.** It blocks until every journaled
-//!   operation has completed and re-raises the first worker panic (so a
-//!   non-SPD breakdown surfaces on the issuing thread exactly as on a
-//!   synchronous device). The executor already fences before every
-//!   download.
+//!   any lock, and moving the results back. A substitution worker instead
+//!   takes the factor arena's **read** lock (many solve workers share it
+//!   simultaneously — the refcounted-reader analog of copy-on-read) and
+//!   the workspace's write lock, then runs the wrapped
+//!   `launch_solve` in place: the factor is never moved or copied.
+//! * **Per-arena scoped drains.** Synchronous arena traffic (allocs,
+//!   downloads, balance queries) waits only for *this arena's* in-flight
+//!   operations, so independent RHS batches pipelining through distinct
+//!   workspaces never quiesce each other. Result reads (`download`,
+//!   `download_vec`, `take`) additionally re-raise a panic recorded
+//!   against their arena — the per-arena form of the fence contract.
+//!   [`Device::fence`] still drains *everything* and re-raises the first
+//!   recorded panic on the issuing thread.
 //! * **Observable overlap.** Every executed operation is recorded as an
-//!   [`OverlapEvent`] (stream, level, wall-clock interval);
-//!   [`Device::take_overlap_trace`] drains the [`OverlapTrace`] that the
-//!   test harness and `BuildStats` interrogate.
+//!   [`OverlapEvent`] (stream, level, wall-clock interval); solve
+//!   launches and RHS uploads are first-class events, so
+//!   [`Device::take_overlap_trace`] — and the `RunReport` built from it —
+//!   shows solve-path transfer/compute overlap, not just the
+//!   factorization replay.
 //!
-//! Substitution launches ([`Device::launch_solve`]) stay synchronous on
-//! the calling thread: their concurrency comes from the session's
-//! workspace pool (many threads, one read-only factor region), and their
-//! vector operands live in caller-borrowed regions that cannot outlive a
-//! journal entry. The wrapper resolves both regions to the wrapped
-//! device's arenas and delegates, so an `AsyncDevice` session keeps the
-//! lock-free concurrent-solve property of PR 4. Each delegated solve
-//! launch is still *timed* against the engine epoch and recorded as a
-//! [`OverlapKind::Compute`] event, so the overlap trace — and the
-//! `RunReport` built from it — covers the solve path too: concurrent
-//! solve threads show up as overlapping per-stream busy intervals.
-//!
-//! The transfer clone in [`AsyncArena::upload`] is this emulation's analog
-//! of staging into pinned host memory: the borrowed source matrix cannot
-//! outlive the `upload` call, so the owned copy is taken at issue time and
-//! the device-side insertion (a pointer move on host arenas) happens on
-//! the worker — genuinely concurrent with other streams' compute.
+//! The transfer clone in [`AsyncArena::upload`] / `upload_vec` is this
+//! emulation's analog of staging into pinned host memory: the borrowed
+//! source cannot outlive the call, so the owned copy is taken at issue
+//! time and the device-side insertion (a pointer move on host arenas)
+//! happens on the worker — genuinely concurrent with other streams'
+//! compute.
 
 use super::{launch_operands, put_owned, Device, DeviceArena, Launch};
 use crate::linalg::Matrix;
 use crate::metrics::overlap::{OverlapEvent, OverlapKind, OverlapTrace};
-use crate::plan::{BufferId, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem};
+use crate::plan::{
+    BasisItem, BufferId, ExtractItem, MergeItem, SparsifyItem, SyrkItem, TrsmItem,
+};
 use std::any::Any;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
 use std::time::Instant;
 
 /// Default number of stream queues: two adjacent tree levels in flight —
@@ -77,10 +85,10 @@ pub const DEFAULT_STREAMS: usize = 2;
 
 /// One journaled operation as the runtime hazard tracker saw it at
 /// enqueue time (recorded while [`AsyncDevice::enable_hazard_log`] is on):
-/// sequence number, placement, operand set, and the full last-toucher
-/// dependency edges *before* completed-op pruning — directly comparable,
-/// op for op, to the static graph from
-/// [`crate::plan::verify::hazard_graph`].
+/// sequence number, placement, operand set, and the full dependency edges
+/// *before* completed-op pruning — directly comparable, op for op, to the
+/// static graphs from [`crate::plan::verify::hazard_graph`] (factor) and
+/// [`crate::plan::verify::solve_hazard_graph`] (substitution).
 #[derive(Clone, Debug)]
 pub struct HazardRecord {
     pub seq: u64,
@@ -96,8 +104,8 @@ pub struct HazardRecord {
 // ---------------------------------------------------------------------
 
 /// An owned factorization launch: the journal's copy of a [`Launch`] whose
-/// operand lists are borrowed from the plan. Substitution opcodes never
-/// enter the journal (they execute synchronously through `launch_solve`).
+/// operand lists are borrowed from the plan. Substitution opcodes take the
+/// [`OwnedSolveLaunch`] route instead.
 #[derive(Clone, Debug)]
 enum OwnedLaunch {
     Potrf { level: usize, bufs: Vec<BufferId> },
@@ -150,13 +158,15 @@ impl OwnedLaunch {
 
     /// Every operand id, deduplicated, declared as an *exclusive* hazard
     /// set. The contract (device.rs rule 2) permits concurrent readers,
-    /// but this executor's staging strategy physically *moves* operands
+    /// but the factor-launch staging strategy physically *moves* operands
     /// into a launch's private arena, so it conservatively serializes
     /// read-read pairs too. No recorded plan loses overlap to this:
     /// same-level launches are already FIFO on one stream, and every
     /// cross-level pair is either buffer-disjoint (uploads vs prior
     /// compute — the overlap that matters) or genuinely ordered (merge →
-    /// next-level sparsify).
+    /// next-level sparsify). Substitution launches, which *do* share the
+    /// factor across concurrent solves, use the shared-reader role
+    /// instead (see `solve_roles`).
     fn operand_set(&self) -> Vec<BufferId> {
         let ops = launch_operands(&self.as_launch());
         let mut set = ops.mat_reads;
@@ -217,13 +227,122 @@ impl OwnedLaunch {
     }
 }
 
+/// An owned substitution launch: the journal's copy of a solve-phase
+/// [`Launch`]. `Exchange`/`ExchangeVec` never enter the journal (the
+/// executor routes them through the transport around an explicit fence).
+#[derive(Clone, Debug)]
+enum OwnedSolveLaunch {
+    ApplyBasis { level: usize, trans: bool, items: Vec<BasisItem> },
+    TrsvFwd { level: usize, items: Vec<(BufferId, BufferId)> },
+    TrsvBwd { level: usize, items: Vec<(BufferId, BufferId)> },
+    GemvAcc {
+        level: usize,
+        trans: bool,
+        alpha: f64,
+        items: Vec<(BufferId, BufferId, BufferId)>,
+    },
+    Split { items: Vec<(BufferId, usize, BufferId, BufferId)> },
+    Concat { items: Vec<(BufferId, BufferId, BufferId)> },
+    CopyBuf { items: Vec<(BufferId, BufferId)> },
+    AddVec { items: Vec<(BufferId, BufferId, BufferId)> },
+    RootSolve { l: BufferId, x: BufferId },
+}
+
+impl OwnedSolveLaunch {
+    /// Copy a substitution-phase launch; `None` for factorization opcodes
+    /// and the transport-routed exchanges.
+    fn from_launch(launch: &Launch<'_>) -> Option<OwnedSolveLaunch> {
+        Some(match launch {
+            Launch::ApplyBasis { level, trans, items } => OwnedSolveLaunch::ApplyBasis {
+                level: *level,
+                trans: *trans,
+                items: items.to_vec(),
+            },
+            Launch::TrsvFwd { level, items } => {
+                OwnedSolveLaunch::TrsvFwd { level: *level, items: items.to_vec() }
+            }
+            Launch::TrsvBwd { level, items } => {
+                OwnedSolveLaunch::TrsvBwd { level: *level, items: items.to_vec() }
+            }
+            Launch::GemvAcc { level, trans, alpha, items } => OwnedSolveLaunch::GemvAcc {
+                level: *level,
+                trans: *trans,
+                alpha: *alpha,
+                items: items.to_vec(),
+            },
+            Launch::Split { items } => OwnedSolveLaunch::Split { items: items.to_vec() },
+            Launch::Concat { items } => OwnedSolveLaunch::Concat { items: items.to_vec() },
+            Launch::CopyBuf { items } => {
+                OwnedSolveLaunch::CopyBuf { items: items.to_vec() }
+            }
+            Launch::AddVec { items } => OwnedSolveLaunch::AddVec { items: items.to_vec() },
+            Launch::RootSolve { l, x } => OwnedSolveLaunch::RootSolve { l: *l, x: *x },
+            _ => return None,
+        })
+    }
+
+    /// Re-borrow as the trait-level launch type.
+    fn as_launch(&self) -> Launch<'_> {
+        match self {
+            OwnedSolveLaunch::ApplyBasis { level, trans, items } => {
+                Launch::ApplyBasis { level: *level, trans: *trans, items }
+            }
+            OwnedSolveLaunch::TrsvFwd { level, items } => {
+                Launch::TrsvFwd { level: *level, items }
+            }
+            OwnedSolveLaunch::TrsvBwd { level, items } => {
+                Launch::TrsvBwd { level: *level, items }
+            }
+            OwnedSolveLaunch::GemvAcc { level, trans, alpha, items } => Launch::GemvAcc {
+                level: *level,
+                trans: *trans,
+                alpha: *alpha,
+                items,
+            },
+            OwnedSolveLaunch::Split { items } => Launch::Split { items },
+            OwnedSolveLaunch::Concat { items } => Launch::Concat { items },
+            OwnedSolveLaunch::CopyBuf { items } => Launch::CopyBuf { items },
+            OwnedSolveLaunch::AddVec { items } => Launch::AddVec { items },
+            OwnedSolveLaunch::RootSolve { l, x } => Launch::RootSolve { l: *l, x: *x },
+        }
+    }
+}
+
+/// Classify a substitution launch's operands into the hazard tracker's
+/// shared-reader roles, keyed by arena: factor matrices are shared reads
+/// in the factor arena, vector reads are reads in the workspace, and
+/// updated/written vectors are workspace writes. Roles come from the one
+/// shared classifier ([`super::launch_operands`]) so this split, the
+/// synchronous backends, and the static solve hazard graph cannot drift.
+fn solve_roles(
+    launch: &Launch<'_>,
+    factor_id: u64,
+    ws_id: u64,
+) -> (Vec<(u64, BufferId)>, Vec<(u64, BufferId)>) {
+    let ops = launch_operands(launch);
+    let mut reads: Vec<(u64, BufferId)> =
+        ops.mat_reads.iter().map(|&b| (factor_id, b)).collect();
+    reads.extend(ops.vec_reads.iter().map(|&b| (ws_id, b)));
+    // Substitution launches never write factor matrices (the verifier's
+    // read-only-factor rule); mat_rw/mat_writes are mapped defensively.
+    let mut writes: Vec<(u64, BufferId)> =
+        ops.mat_rw.iter().chain(&ops.mat_writes).map(|&b| (factor_id, b)).collect();
+    writes.extend(ops.vec_rw.iter().chain(&ops.vec_writes).map(|&b| (ws_id, b)));
+    reads.sort_unstable();
+    reads.dedup();
+    writes.sort_unstable();
+    writes.dedup();
+    (reads, writes)
+}
+
 // ---------------------------------------------------------------------
 // The stream engine.
 // ---------------------------------------------------------------------
 
 /// The shared inner arena of one [`AsyncArena`]: the wrapped device's own
-/// arena behind a lock that workers (briefly, for pointer-move staging)
-/// and synchronous readers share.
+/// arena behind a lock that workers (briefly for pointer-move staging,
+/// shared for the whole kernel on solve launches) and synchronous readers
+/// share.
 struct InnerArena {
     id: u64,
     cell: RwLock<Box<dyn DeviceArena>>,
@@ -231,11 +350,11 @@ struct InnerArena {
 
 /// Lock an arena cell for writing, recovering from poisoning. A panic
 /// while the guard is held (a kernel breakdown, a take of a dead buffer)
-/// is already recorded by the engine and re-raised at the next `fence`;
-/// the arena contents are then exactly as unspecified as on a synchronous
-/// device after the same panic — but the lock itself must stay usable so
-/// the PR-4 unwind guards (workspace reset, pool return) and post-repair
-/// traffic keep working.
+/// is already recorded by the engine and re-raised at the next `fence` (or
+/// the owning arena's next result read); the arena contents are then
+/// exactly as unspecified as on a synchronous device after the same panic
+/// — but the lock itself must stay usable so the PR-4 unwind guards
+/// (workspace reset, pool return) and post-repair traffic keep working.
 fn write_cell(cell: &RwLock<Box<dyn DeviceArena>>) -> RwLockWriteGuard<'_, Box<dyn DeviceArena>> {
     cell.write().unwrap_or_else(|e| e.into_inner())
 }
@@ -249,10 +368,19 @@ fn read_cell(cell: &RwLock<Box<dyn DeviceArena>>) -> RwLockReadGuard<'_, Box<dyn
 enum OpAction {
     /// Insert a staged matrix (the "device-side" half of an upload).
     Upload { arena: Arc<InnerArena>, id: BufferId, mat: Matrix },
+    /// Insert a staged vector (an RHS segment upload).
+    UploadVec { arena: Arc<InnerArena>, id: BufferId, v: Vec<f64> },
     /// Release buffers (a plan `Free` step).
     Free { arena: Arc<InnerArena>, bufs: Vec<BufferId> },
-    /// Execute a batched factorization launch.
+    /// Execute a batched factorization launch (move-staged).
     Launch { arena: Arc<InnerArena>, launch: OwnedLaunch },
+    /// Execute a batched substitution launch: factor read-locked (shared
+    /// across concurrent solve workers), workspace write-locked.
+    SolveLaunch {
+        factor: Arc<InnerArena>,
+        ws: Arc<InnerArena>,
+        launch: OwnedSolveLaunch,
+    },
 }
 
 /// One journal entry: payload plus the hazard edges it must wait on.
@@ -260,20 +388,26 @@ struct Op {
     seq: u64,
     /// Seqs of still-pending conflicting operations (strictly earlier).
     deps: Vec<u64>,
+    /// Arena this operation is accounted against (scoped drains, panic
+    /// attribution): the touched arena, or the *workspace* for solve
+    /// launches (the factor is only read).
+    home: u64,
     level: usize,
     kind: OverlapKind,
     opcode: &'static str,
     action: OpAction,
 }
 
-/// Last operation touching one `(arena, buffer)` pair. Every journaled
-/// operation declares its operands exclusively (see
-/// `OwnedLaunch::operand_set`), so per-buffer ordering is a single
-/// last-writer chain: each new op depends on the previous toucher, and
-/// transitivity gives the full RAW/WAR/WAW order.
+/// Hazard-table entry for one `(arena, buffer)` pair: the last writer plus
+/// every shared reader journaled since. A read depends on the writer only
+/// (readers never order against each other); a write depends on the writer
+/// *and* all readers, then becomes the new writer. Factorization traffic
+/// declares writes exclusively, which degenerates to the old single
+/// last-toucher chain.
 #[derive(Default)]
 struct Access {
     writer: Option<u64>,
+    readers: Vec<u64>,
 }
 
 struct EngineState {
@@ -281,17 +415,20 @@ struct EngineState {
     next_seq: u64,
     /// Completed op seqs (cleared whenever the engine goes quiescent).
     done: HashSet<u64>,
-    /// Hazard table: last toucher per (arena, buffer).
+    /// Hazard table: last writer + readers per (arena, buffer).
     access: HashMap<(u64, u32), Access>,
     /// Queued + executing operations.
     inflight: usize,
+    /// Queued + executing operations per home arena (scoped drains).
+    arena_inflight: HashMap<u64, usize>,
     current_stream: usize,
     current_level: usize,
     trace: Vec<OverlapEvent>,
     /// Differential-audit log: `Some` while hazard recording is enabled.
     hazard_log: Option<Vec<HazardRecord>>,
-    /// First worker panic, re-raised by the next `fence`.
-    panic: Option<Box<dyn Any + Send>>,
+    /// First worker panic per home arena, in recording order. Re-raised by
+    /// the owning arena's next result read or the next `fence`.
+    panics: Vec<(u64, Box<dyn Any + Send>)>,
     shutdown: bool,
 }
 
@@ -306,6 +443,9 @@ struct Engine {
     /// Mirror of `EngineState::inflight` for the lock-free drain fast
     /// path (data visibility itself comes from the arena locks).
     pending: AtomicUsize,
+    /// Mirror of `EngineState::panics.len()` for the lock-free no-panic
+    /// fast path of result reads.
+    panic_count: AtomicUsize,
     next_arena: AtomicU64,
 }
 
@@ -319,35 +459,57 @@ impl Engine {
                 done: HashSet::new(),
                 access: HashMap::new(),
                 inflight: 0,
+                arena_inflight: HashMap::new(),
                 current_stream: 0,
                 current_level: usize::MAX,
                 trace: Vec::new(),
                 hazard_log: None,
-                panic: None,
+                panics: Vec::new(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
             origin: Instant::now(),
             streams,
             pending: AtomicUsize::new(0),
+            panic_count: AtomicUsize::new(0),
             next_arena: AtomicU64::new(0),
         }
     }
 
-    /// Journal one operation touching `operands` (exclusively): compute
-    /// its hazard edges against the pending set, append it to the current
-    /// stream's queue, and return without executing. After device
-    /// shutdown (late arena traffic) the operation degrades to
+    /// Lock the engine state, recovering from poisoning: a thread that
+    /// panicked while holding the lock (a poisoned `cv.wait`, an unwinding
+    /// issuer) must not turn every later `fence()` into a `PoisonError`
+    /// panic — the recorded worker payload is the error that matters, and
+    /// it is re-raised through the normal panic slots below.
+    fn lock_state(&self) -> MutexGuard<'_, EngineState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Condvar wait with the same poison recovery as [`Engine::lock_state`].
+    fn wait_state<'a>(
+        &'a self,
+        guard: MutexGuard<'a, EngineState>,
+    ) -> MutexGuard<'a, EngineState> {
+        self.cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Journal one operation: compute its hazard edges against the pending
+    /// set (reads order after the last writer; writes order after the
+    /// writer and every reader), append it to the current stream's queue,
+    /// and return without executing. `home` is the arena the operation is
+    /// accounted against for scoped drains and panic attribution. After
+    /// device shutdown (late arena traffic) the operation degrades to
     /// synchronous execution on the caller thread.
     fn enqueue(
         &self,
-        arena_id: u64,
-        operands: &[BufferId],
+        home: u64,
+        reads: &[(u64, BufferId)],
+        writes: &[(u64, BufferId)],
         kind: OverlapKind,
         opcode: &'static str,
         action: OpAction,
     ) {
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = self.lock_state();
         if guard.shutdown {
             drop(guard);
             exec_op(self.device.as_ref(), action);
@@ -355,75 +517,138 @@ impl Engine {
         }
         let seq = guard.next_seq;
         guard.next_seq += 1;
-        // Full last-toucher edges first (the semantic dependency set the
-        // static hazard graph predicts), then prune already-completed ops
-        // for the scheduler's working set.
+        // Full dependency edges first (the semantic set the static hazard
+        // graphs predict), then prune already-completed ops for the
+        // scheduler's working set.
         let mut full: Vec<u64> = Vec::new();
-        for &b in operands {
-            if let Some(acc) = guard.access.get(&(arena_id, b.0)) {
+        for &(aid, b) in reads {
+            if let Some(acc) = guard.access.get(&(aid, b.0)) {
                 if let Some(prev) = acc.writer {
                     full.push(prev);
                 }
+            }
+        }
+        for &(aid, b) in writes {
+            if let Some(acc) = guard.access.get(&(aid, b.0)) {
+                if let Some(prev) = acc.writer {
+                    full.push(prev);
+                }
+                full.extend(acc.readers.iter().copied());
             }
         }
         full.sort_unstable();
         full.dedup();
         let deps: Vec<u64> = full.iter().copied().filter(|d| !guard.done.contains(d)).collect();
         if let Some(log) = guard.hazard_log.as_mut() {
+            let mut operands: Vec<u32> =
+                reads.iter().chain(writes).map(|&(_, b)| b.0).collect();
+            operands.sort_unstable();
+            operands.dedup();
             log.push(HazardRecord {
                 seq,
                 opcode,
                 stream: guard.current_stream,
                 level: guard.current_level,
-                operands: operands.iter().map(|b| b.0).collect(),
+                operands,
                 deps: full,
             });
         }
-        for &b in operands {
-            guard.access.entry((arena_id, b.0)).or_default().writer = Some(seq);
+        for &(aid, b) in reads {
+            guard.access.entry((aid, b.0)).or_default().readers.push(seq);
+        }
+        for &(aid, b) in writes {
+            let acc = guard.access.entry((aid, b.0)).or_default();
+            acc.writer = Some(seq);
+            acc.readers.clear();
         }
         let stream = guard.current_stream;
         let level = guard.current_level;
         guard.inflight += 1;
+        *guard.arena_inflight.entry(home).or_insert(0) += 1;
         self.pending.fetch_add(1, Ordering::SeqCst);
-        guard.queues[stream].push_back(Op { seq, deps, level, kind, opcode, action });
+        guard.queues[stream].push_back(Op { seq, deps, home, level, kind, opcode, action });
         drop(guard);
         self.cv.notify_all();
     }
 
     /// Wait until every journaled operation has completed. Lock-free when
-    /// the engine is already quiescent — the per-solve-launch fast path.
+    /// the engine is already quiescent.
     fn drain(&self) {
         if self.pending.load(Ordering::SeqCst) == 0 {
             return;
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         while st.inflight > 0 {
-            st = self.cv.wait(st).unwrap();
+            st = self.wait_state(st);
         }
         // Quiescent: nothing references the bookkeeping any more.
         st.done.clear();
         st.access.clear();
+        st.arena_inflight.clear();
     }
 
-    /// [`drain`](Engine::drain), then re-raise the first worker panic on
-    /// this thread (the `Device::fence` contract).
+    /// Wait until every operation accounted against `home` has completed
+    /// (operations of *other* arenas keep flowing — this is what lets
+    /// independent RHS workspaces pipeline instead of quiescing each
+    /// other). With `raise`, additionally re-raise a panic recorded
+    /// against `home` — the per-arena half of the fence contract, used by
+    /// result reads. Never raises while the current thread is already
+    /// unwinding (the executor's tolerant reset path).
+    fn drain_arena(&self, home: u64, raise: bool) {
+        if self.pending.load(Ordering::SeqCst) != 0 {
+            let mut st = self.lock_state();
+            while st.arena_inflight.get(&home).is_some_and(|c| *c > 0) {
+                st = self.wait_state(st);
+            }
+            if st.inflight == 0 {
+                st.done.clear();
+                st.access.clear();
+                st.arena_inflight.clear();
+            }
+        }
+        if raise && self.panic_count.load(Ordering::SeqCst) != 0 && !std::thread::panicking() {
+            let payload = {
+                let mut st = self.lock_state();
+                st.panics.iter().position(|(h, _)| *h == home).map(|i| {
+                    self.panic_count.fetch_sub(1, Ordering::SeqCst);
+                    st.panics.remove(i).1
+                })
+            };
+            if let Some(payload) = payload {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+
+    /// [`drain`](Engine::drain), then re-raise the first recorded worker
+    /// panic on this thread (the `Device::fence` contract).
     fn fence(&self) {
         self.drain();
-        let payload = self.state.lock().unwrap().panic.take();
+        if self.panic_count.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let payload = {
+            let mut st = self.lock_state();
+            if st.panics.is_empty() {
+                None
+            } else {
+                self.panic_count.fetch_sub(1, Ordering::SeqCst);
+                Some(st.panics.remove(0).1)
+            }
+        };
         if let Some(payload) = payload {
             std::panic::resume_unwind(payload);
         }
     }
 
     fn set_stream(&self, level: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.current_stream = level % self.streams;
         st.current_level = level;
     }
 
     fn take_trace(&self) -> OverlapTrace {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         OverlapTrace { events: std::mem::take(&mut st.trace) }
     }
 }
@@ -435,6 +660,10 @@ fn exec_op(device: &dyn Device, action: OpAction) {
             let mut shared = write_cell(&arena.cell);
             put_owned(&mut **shared, id, mat);
         }
+        OpAction::UploadVec { arena, id, v } => {
+            let mut shared = write_cell(&arena.cell);
+            shared.upload_vec(id, &v);
+        }
         OpAction::Free { arena, bufs } => {
             let mut shared = write_cell(&arena.cell);
             for b in bufs {
@@ -442,6 +671,16 @@ fn exec_op(device: &dyn Device, action: OpAction) {
             }
         }
         OpAction::Launch { arena, launch } => exec_async_launch(device, &arena, launch),
+        OpAction::SolveLaunch { factor, ws, launch } => {
+            // Lock order is factor-then-workspace everywhere, so solve
+            // workers cannot deadlock against each other or against
+            // factor staging. The factor read lock is *shared*: any
+            // number of concurrent solve launches read the same panels
+            // simultaneously — nothing is moved or copied.
+            let f = read_cell(&factor.cell);
+            let mut w = write_cell(&ws.cell);
+            device.launch_solve(&**f, &mut **w, &launch.as_launch());
+        }
     }
 }
 
@@ -492,7 +731,7 @@ fn exec_async_launch(device: &dyn Device, arena: &InnerArena, mut launch: OwnedL
 fn worker_loop(engine: Arc<Engine>, stream: usize) {
     loop {
         let op = {
-            let mut st = engine.state.lock().unwrap();
+            let mut st = engine.lock_state();
             loop {
                 // Honor shutdown only once this queue is empty: an op that
                 // raced past the enqueue-side shutdown check (journaled
@@ -509,26 +748,34 @@ fn worker_loop(engine: Arc<Engine>, stream: usize) {
                 if ready {
                     break st.queues[stream].pop_front().unwrap();
                 }
-                st = engine.cv.wait(st).unwrap();
+                st = engine.wait_state(st);
             }
         };
-        let Op { seq, level, kind, opcode, action, .. } = op;
+        let Op { seq, home, level, kind, opcode, action, .. } = op;
         let start = engine.origin.elapsed().as_secs_f64();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             exec_op(engine.device.as_ref(), action)
         }));
         let end = engine.origin.elapsed().as_secs_f64();
-        let mut st = engine.state.lock().unwrap();
+        let mut st = engine.lock_state();
         st.done.insert(seq);
         st.inflight -= 1;
+        if let Some(c) = st.arena_inflight.get_mut(&home) {
+            *c -= 1;
+            if *c == 0 {
+                st.arena_inflight.remove(&home);
+            }
+        }
         engine.pending.fetch_sub(1, Ordering::SeqCst);
         st.trace.push(OverlapEvent { stream, level, kind, opcode, start, end });
         if let Err(payload) = result {
-            // First failure wins; dependents still run (and may fail on
-            // the inconsistent state — also recorded) so the queues always
-            // drain and `fence` can re-raise deterministically.
-            if st.panic.is_none() {
-                st.panic = Some(payload);
+            // First failure per arena wins; dependents still run (and may
+            // fail on the inconsistent state — also recorded) so the
+            // queues always drain and `fence` / result reads can re-raise
+            // deterministically.
+            if !st.panics.iter().any(|(h, _)| *h == home) {
+                st.panics.push((home, payload));
+                engine.panic_count.fetch_add(1, Ordering::SeqCst);
             }
         }
         drop(st);
@@ -540,27 +787,31 @@ fn worker_loop(engine: Arc<Engine>, stream: usize) {
 // The journaling arena.
 // ---------------------------------------------------------------------
 
-/// The arena type an [`AsyncDevice`] hands out: journals matrix uploads
-/// and frees (the factorization-replay traffic) onto the stream queues,
-/// and serves everything synchronous — vector traffic, downloads, balance
-/// queries — by draining first. Downloads therefore always observe
-/// post-fence state, and the live/bytes invariants the device tests assert
-/// hold exactly as on the wrapped arena.
+/// The arena type an [`AsyncDevice`] hands out: journals matrix and vector
+/// uploads, frees, and (through [`Device::launch_solve`]) substitution
+/// launches onto the stream queues. Everything else — allocs, downloads,
+/// balance queries — executes synchronously after a *scoped* drain of this
+/// arena's own in-flight operations, so independent workspaces never wait
+/// on each other. Result reads (`download`/`download_vec`/`take`) observe
+/// post-drain state and re-raise a panic recorded against this arena; the
+/// live/bytes invariants the device tests assert hold exactly as on the
+/// wrapped arena.
 pub struct AsyncArena {
     handle: Arc<InnerArena>,
     engine: Arc<Engine>,
 }
 
 impl AsyncArena {
-    /// Synchronous access after a drain (reads and solve-phase traffic).
-    fn sync<T>(&self, f: impl FnOnce(&dyn DeviceArena) -> T) -> T {
-        self.engine.drain();
+    /// Synchronous shared access after a scoped drain; `raise` re-raises
+    /// this arena's recorded panic (result reads only).
+    fn sync<T>(&self, raise: bool, f: impl FnOnce(&dyn DeviceArena) -> T) -> T {
+        self.engine.drain_arena(self.handle.id, raise);
         let shared = read_cell(&self.handle.cell);
         f(&**shared)
     }
 
-    fn sync_mut<T>(&mut self, f: impl FnOnce(&mut dyn DeviceArena) -> T) -> T {
-        self.engine.drain();
+    fn sync_mut<T>(&mut self, raise: bool, f: impl FnOnce(&mut dyn DeviceArena) -> T) -> T {
+        self.engine.drain_arena(self.handle.id, raise);
         let mut shared = write_cell(&self.handle.cell);
         f(&mut **shared)
     }
@@ -572,7 +823,8 @@ impl DeviceArena for AsyncArena {
         // device-side insertion runs on a stream worker.
         self.engine.enqueue(
             self.handle.id,
-            &[id],
+            &[],
+            &[(self.handle.id, id)],
             OverlapKind::Transfer,
             "UPLOAD",
             OpAction::Upload { arena: self.handle.clone(), id, mat: m.clone() },
@@ -580,33 +832,45 @@ impl DeviceArena for AsyncArena {
     }
 
     fn upload_vec(&mut self, id: BufferId, v: &[f64]) {
-        self.sync_mut(|a| a.upload_vec(id, v));
+        // RHS segment uploads are journaled like matrix uploads, so one
+        // solve's transfers overlap another solve's (or the same solve's
+        // independent) compute — the solve-path transfer half of the
+        // overlap trace.
+        self.engine.enqueue(
+            self.handle.id,
+            &[],
+            &[(self.handle.id, id)],
+            OverlapKind::Transfer,
+            "UPLOADV",
+            OpAction::UploadVec { arena: self.handle.clone(), id, v: v.to_vec() },
+        );
     }
 
     fn alloc(&mut self, id: BufferId, rows: usize, cols: usize) {
-        self.sync_mut(|a| a.alloc(id, rows, cols));
+        self.sync_mut(false, |a| a.alloc(id, rows, cols));
     }
 
     fn alloc_vec(&mut self, id: BufferId, len: usize) {
-        self.sync_mut(|a| a.alloc_vec(id, len));
+        self.sync_mut(false, |a| a.alloc_vec(id, len));
     }
 
     fn download(&self, id: BufferId) -> Matrix {
-        self.sync(|a| a.download(id))
+        self.sync(true, |a| a.download(id))
     }
 
     fn take(&mut self, id: BufferId) -> Matrix {
-        self.sync_mut(|a| a.take(id))
+        self.sync_mut(true, |a| a.take(id))
     }
 
     fn download_vec(&self, id: BufferId) -> Vec<f64> {
-        self.sync(|a| a.download_vec(id))
+        self.sync(true, |a| a.download_vec(id))
     }
 
     fn free(&mut self, id: BufferId) {
         self.engine.enqueue(
             self.handle.id,
-            &[id],
+            &[],
+            &[(self.handle.id, id)],
             OverlapKind::Housekeeping,
             "FREE",
             OpAction::Free { arena: self.handle.clone(), bufs: vec![id] },
@@ -614,27 +878,27 @@ impl DeviceArena for AsyncArena {
     }
 
     fn free_region(&mut self, from: BufferId) {
-        self.sync_mut(|a| a.free_region(from));
+        self.sync_mut(false, |a| a.free_region(from));
     }
 
     fn live(&self) -> usize {
-        self.sync(|a| a.live())
+        self.sync(false, |a| a.live())
     }
 
     fn is_live(&self, id: BufferId) -> bool {
-        self.sync(|a| a.is_live(id))
+        self.sync(false, |a| a.is_live(id))
     }
 
     fn bytes(&self) -> usize {
-        self.sync(|a| a.bytes())
+        self.sync(false, |a| a.bytes())
     }
 
     fn peak_bytes(&self) -> usize {
-        self.sync(|a| a.peak_bytes())
+        self.sync(false, |a| a.peak_bytes())
     }
 
     fn footprint_bytes(&self) -> usize {
-        self.sync(|a| a.footprint_bytes())
+        self.sync(false, |a| a.footprint_bytes())
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -698,18 +962,19 @@ impl<D: Device + Send + Sync + 'static> AsyncDevice<D> {
     }
 
     /// Start recording every enqueue decision of the runtime hazard
-    /// tracker (sequence, stream, operand set, full last-toucher edges)
-    /// for differential comparison against the static graph from
-    /// [`crate::plan::verify::hazard_graph`].
+    /// tracker (sequence, stream, operand set, full dependency edges) for
+    /// differential comparison against the static graphs from
+    /// [`crate::plan::verify::hazard_graph`] and
+    /// [`crate::plan::verify::solve_hazard_graph`].
     pub fn enable_hazard_log(&self) {
-        self.engine.state.lock().unwrap().hazard_log = Some(Vec::new());
+        self.engine.lock_state().hazard_log = Some(Vec::new());
     }
 
     /// Drain the engine and take the recorded hazard log (empty if
     /// recording was never enabled). Recording stops until re-enabled.
     pub fn take_hazard_log(&self) -> Vec<HazardRecord> {
         self.engine.drain();
-        self.engine.state.lock().unwrap().hazard_log.take().unwrap_or_default()
+        self.engine.lock_state().hazard_log.take().unwrap_or_default()
     }
 }
 
@@ -718,7 +983,7 @@ impl<D: Device + Send + Sync + 'static> Drop for AsyncDevice<D> {
         // Drain first: surviving arenas must never wait on ops that no
         // worker will run.
         self.engine.drain();
-        self.engine.state.lock().unwrap().shutdown = true;
+        self.engine.lock_state().shutdown = true;
         self.engine.cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -741,18 +1006,20 @@ impl<D: Device + Send + Sync + 'static> Device for AsyncDevice<D> {
         let owned = OwnedLaunch::from_launch(launch).unwrap_or_else(|| {
             panic!(
                 "{} is a substitution-phase launch; AsyncDevice executes it \
-                 synchronously through launch_solve",
+                 through launch_solve",
                 launch.opcode()
             )
         });
         match arena.as_any_mut().downcast_mut::<AsyncArena>() {
             Some(aa) => {
-                let operands = owned.operand_set();
+                let writes: Vec<(u64, BufferId)> =
+                    owned.operand_set().into_iter().map(|b| (aa.handle.id, b)).collect();
                 let opcode = launch.opcode();
                 let handle = aa.handle.clone();
                 self.engine.enqueue(
                     handle.id,
-                    &operands,
+                    &[],
+                    &writes,
                     OverlapKind::Compute,
                     opcode,
                     OpAction::Launch { arena: handle, launch: owned },
@@ -770,48 +1037,66 @@ impl<D: Device + Send + Sync + 'static> Device for AsyncDevice<D> {
         ws: &mut dyn DeviceArena,
         launch: &Launch<'_>,
     ) {
-        // Quiesce journaled factor traffic (lock-free once the factor is
-        // resident), then delegate on the calling thread: solve
-        // concurrency is the workspace pool's job, not the journal's.
-        self.engine.drain();
+        let f_handle = factor.as_any().downcast_ref::<AsyncArena>().map(|a| a.handle.clone());
+        if let (Some(f), Some(w)) =
+            (&f_handle, ws.as_any().downcast_ref::<AsyncArena>().map(|a| a.handle.id))
         {
-            let f_id = factor.as_any().downcast_ref::<AsyncArena>().map(|a| a.handle.id);
-            let w_id = ws.as_any().downcast_ref::<AsyncArena>().map(|a| a.handle.id);
-            if let (Some(f), Some(w)) = (f_id, w_id) {
-                assert_ne!(
-                    f, w,
-                    "launch_solve requires distinct factor and workspace regions"
+            if f.id == w {
+                // The typed violation path (same wording family as
+                // `ValidatingDevice`): the facade's substitution guard
+                // classifies "hazard audit failed" panics as
+                // `H2Error::PlanVerification` instead of letting a bare
+                // assert unwind as an opaque internal error.
+                panic!(
+                    "hazard audit failed for {}: factor and workspace resolve to the same \
+                     arena region (solve launches require the immutable-factor / private-\
+                     workspace split)\noffending instruction: {launch:?}",
+                    launch.opcode()
                 );
             }
         }
-        let f_guard = factor
-            .as_any()
-            .downcast_ref::<AsyncArena>()
-            .map(|a| read_cell(&a.handle.cell));
+        // Journaled path: both regions belong to this engine and the
+        // launch is an ordinary substitution opcode. The op is accounted
+        // against the *workspace* (scoped drains, panic attribution);
+        // factor matrices enter the hazard table as shared reads.
+        if let (Some(f), Some(owned)) = (&f_handle, OwnedSolveLaunch::from_launch(launch)) {
+            if let Some(wa) = ws.as_any_mut().downcast_mut::<AsyncArena>() {
+                let (reads, writes) = solve_roles(launch, f.id, wa.handle.id);
+                self.engine.enqueue(
+                    wa.handle.id,
+                    &reads,
+                    &writes,
+                    OverlapKind::Compute,
+                    launch.opcode(),
+                    OpAction::SolveLaunch {
+                        factor: f.clone(),
+                        ws: wa.handle.clone(),
+                        launch: owned,
+                    },
+                );
+                return;
+            }
+        }
+        // Fallback (a foreign region on either side): quiesce the journal,
+        // then delegate on the calling thread — correct, just without
+        // solve-path overlap. Still timed against the engine epoch so the
+        // overlap trace covers it.
+        self.engine.drain();
+        let f_guard = f_handle.as_ref().map(|h| read_cell(&h.cell));
         let factor_ref: &dyn DeviceArena = match &f_guard {
             Some(g) => &***g,
             None => factor,
         };
-        // Time the delegated call against the engine epoch so the solve
-        // path shows up in the overlap trace alongside the factorization
-        // workers' events (per-stream busy intervals, RunReport's
-        // `solve_trace_events`). Substitution runs on the calling thread;
-        // concurrent solve threads therefore appear as overlapping
-        // intervals tagged with the current stream/level.
         let t_start = self.engine.origin.elapsed().as_secs_f64();
         match ws.as_any_mut().downcast_mut::<AsyncArena>() {
             Some(wa) => {
-                // write_cell recovers a workspace lock poisoned by an
-                // earlier panicking launch, so the executor's unwind
-                // guard can still reset the region and return it to its
-                // pool (the PR-4 contract).
                 let mut g = write_cell(&wa.handle.cell);
                 self.inner.launch_solve(factor_ref, &mut **g, launch);
             }
             None => self.inner.launch_solve(factor_ref, ws, launch),
         }
         let t_end = self.engine.origin.elapsed().as_secs_f64();
-        let mut st = self.engine.state.lock().unwrap();
+        let mut st = self.engine.lock_state();
         let (stream, level) = (st.current_stream, st.current_level);
         st.trace.push(OverlapEvent {
             stream,
@@ -916,5 +1201,121 @@ mod tests {
         arena.upload(BufferId(0), &Matrix::eye(2));
         dev.fence();
         assert_eq!(arena.live(), 1);
+    }
+
+    #[test]
+    fn journaled_solve_launches_replay_in_hazard_order() {
+        // A substitution chain issued through launch_solve runs on the
+        // stream workers yet produces the synchronous result bit-for-bit:
+        // upload_vec → TRSV(fwd) → TRSV(bwd) with RAW edges on the vector.
+        let mut rng = Rng::new(44);
+        let spd = Matrix::rand_spd(6, &mut rng);
+        let l = chol::cholesky(&spd).unwrap();
+        let b: Vec<f64> = (0..6).map(|i| (i as f64) - 2.5).collect();
+
+        // Synchronous reference on the wrapped device.
+        let sync_dev = SerialBackend;
+        let mut f_ref = sync_dev.new_arena(1);
+        f_ref.upload(BufferId(0), &l);
+        let mut w_ref = sync_dev.new_arena(1);
+        w_ref.upload_vec(BufferId(1), &b);
+        let items = [(BufferId(0), BufferId(1))];
+        sync_dev.launch_solve(f_ref.as_ref(), w_ref.as_mut(), &Launch::TrsvFwd {
+            level: 1,
+            items: &items,
+        });
+        sync_dev.launch_solve(f_ref.as_ref(), w_ref.as_mut(), &Launch::TrsvBwd {
+            level: 1,
+            items: &items,
+        });
+        let want = w_ref.download_vec(BufferId(1));
+
+        let dev = AsyncDevice::new(SerialBackend);
+        let mut factor = dev.new_arena(1);
+        factor.upload(BufferId(0), &l);
+        dev.fence();
+        let mut ws = dev.new_arena(1);
+        dev.stream(1);
+        ws.upload_vec(BufferId(1), &b);
+        dev.launch_solve(factor.as_ref(), ws.as_mut(), &Launch::TrsvFwd {
+            level: 1,
+            items: &items,
+        });
+        dev.launch_solve(factor.as_ref(), ws.as_mut(), &Launch::TrsvBwd {
+            level: 1,
+            items: &items,
+        });
+        // No fence: download_vec scope-drains the workspace arena itself.
+        assert_eq!(ws.download_vec(BufferId(1)), want, "journaled solve diverged");
+        let trace = dev.take_overlap_trace().expect("async devices trace");
+        let solves: Vec<_> =
+            trace.events.iter().filter(|e| e.kind == OverlapKind::Compute).collect();
+        assert_eq!(solves.len(), 2, "both solve launches must be traced as compute");
+        assert!(
+            trace.events.iter().any(|e| e.opcode == "UPLOADV"),
+            "the RHS upload must be traced as a transfer"
+        );
+    }
+
+    #[test]
+    fn journaled_solve_panic_surfaces_its_own_message_through_fence() {
+        // Satellite (panic/poison): a panicking journaled launch must
+        // surface its *own* payload at the next fence — never a
+        // `PoisonError` from a lock the dying worker left behind.
+        let dev = AsyncDevice::new(SerialBackend);
+        let factor = dev.new_arena(1);
+        let mut ws = dev.new_arena(1);
+        // TRSV against buffers that were never written: the worker panics
+        // with the arena's "read before upload" message.
+        let items = [(BufferId(0), BufferId(1))];
+        dev.launch_solve(factor.as_ref(), ws.as_mut(), &Launch::TrsvFwd {
+            level: 0,
+            items: &items,
+        });
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dev.fence()))
+            .expect_err("fence must re-raise the solve worker panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&'static str>().map(|s| s.to_string()))
+            .expect("panic payload must be a message");
+        assert!(
+            msg.contains("read before upload"),
+            "fence re-raised the wrong payload: {msg:?}"
+        );
+        // The engine (and its state lock) stays usable afterwards.
+        ws.upload_vec(BufferId(1), &[1.0, 2.0]);
+        dev.fence();
+        assert_eq!(ws.download_vec(BufferId(1)), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn same_region_solve_launch_is_a_typed_violation() {
+        // Same region on both sides of launch_solve → the typed
+        // "hazard audit failed" violation, not a bare assert string. Two
+        // AsyncArena handles sharing one inner arena resolve to the same
+        // engine region id, which is exactly the aliasing the check
+        // rejects.
+        let dev = AsyncDevice::new(SerialBackend);
+        let arena = dev.new_arena(1);
+        let aa = arena.as_any().downcast_ref::<AsyncArena>().unwrap();
+        let factor =
+            AsyncArena { handle: aa.handle.clone(), engine: aa.engine.clone() };
+        let mut ws =
+            AsyncArena { handle: aa.handle.clone(), engine: aa.engine.clone() };
+        let items = [(BufferId(0), BufferId(1))];
+        let launch = Launch::TrsvFwd { level: 0, items: &items };
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dev.launch_solve(&factor, &mut ws, &launch);
+        }))
+        .expect_err("same-region launch_solve must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("violation panics carry a formatted message");
+        assert!(
+            msg.contains("hazard audit failed"),
+            "violation must use the typed hazard-audit wording: {msg}"
+        );
     }
 }

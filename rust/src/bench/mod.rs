@@ -288,6 +288,8 @@ mod tests {
             overlap_ratio: 0.0,
             overlapped_transfer_pairs: 0,
             solve_trace_events: 0,
+            solve_overlap_ratio: 0.0,
+            solve_overlapped_transfer_pairs: 0,
             arena_bytes: 1024,
             arena_peak_bytes: 2048,
             predicted_peak_bytes: 2048,

@@ -10,6 +10,7 @@
 //! h2ulv plan-lint [--seeds S] [--json] | [--n N ...problem flags] [--json]
 //! h2ulv bench     [--n N] [--fuzz S] [--scenarios FILTER] [--json]
 //!                 [--out PATH|-] [--compare FILE] [--threshold X]
+//!                 [--require-solve-overlap SUBSTR]
 //! h2ulv figure    <12|13|16|17|18|20|21> [--full] [--out DIR]
 //! h2ulv figures   [--full] [--out DIR]
 //! h2ulv serve     [--tcp HOST:PORT] [--budget-bytes B] [--max-sessions S]
@@ -112,6 +113,7 @@ USAGE:
                  reports)
   h2ulv bench   [--n N] [--fuzz S] [--scenarios FILTER] [--json]
                 [--out PATH|-] [--compare FILE] [--threshold X]
+                [--require-solve-overlap SUBSTR]
                 (run the benchmark trajectory sweep: 3 backends × sphere/
                  clustered distributions × single/wide RHS, plus S
                  structure-fuzz scenarios (default from H2_TEST_SEEDS,
@@ -121,7 +123,11 @@ USAGE:
                  --compare diffs against a previous trajectory file:
                  plan-derived counters (launches, FLOPs, peak bytes) gate
                  strictly, wall times only beyond relative --threshold
-                 (default 0 = report-only); exit 1 on any regression)
+                 (default 0 = report-only); exit 1 on any regression.
+                 --require-solve-overlap gates that at least one scenario
+                 whose name contains SUBSTR reports a nonzero solve-path
+                 overlap ratio — the CI proof that substitution pipelines
+                 through the async engine; exit 1 otherwise)
   h2ulv figure  <12|13|16|17|18|20|21> [--full] [--out DIR]
   h2ulv figures [--full] [--out DIR]
   h2ulv serve   [--tcp HOST:PORT] [--budget-bytes B] [--max-sessions S]
@@ -877,6 +883,32 @@ fn cmd_bench(args: &Args) -> i32 {
             return 1;
         }
         println!("no regressions vs {path}");
+    }
+    if let Some(substr) = args.get("require-solve-overlap") {
+        let matching: Vec<_> =
+            report.scenarios.iter().filter(|s| s.name.contains(substr)).collect();
+        if matching.is_empty() {
+            eprintln!(
+                "h2ulv bench: --require-solve-overlap {substr:?} matches no scenario in this sweep"
+            );
+            return 2;
+        }
+        let overlapped = matching.iter().filter(|s| s.run.solve_overlap_ratio > 0.0).count();
+        if overlapped == 0 {
+            eprintln!(
+                "h2ulv bench: no scenario matching {substr:?} reported solve-path overlap \
+                 ({} checked) — substitution is not pipelining through the async engine",
+                matching.len()
+            );
+            return 1;
+        }
+        if !json {
+            println!(
+                "solve-path overlap gate: {overlapped}/{} scenario(s) matching {substr:?} \
+                 overlapped",
+                matching.len()
+            );
+        }
     }
     0
 }

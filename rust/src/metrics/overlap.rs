@@ -109,6 +109,30 @@ impl OverlapTrace {
         !self.overlapped_transfer_pairs().is_empty()
     }
 
+    /// `(level_a, level_b)` pairs (`a ≤ b`) where two [`Compute`] events
+    /// on *different* streams genuinely intersected in wall-clock time —
+    /// the substitution-path evidence: two runs of the serial solve chain
+    /// (or two RHS workspaces) computing at once. Deduplicated, like
+    /// [`OverlapTrace::overlapped_transfer_pairs`].
+    ///
+    /// [`Compute`]: OverlapKind::Compute
+    pub fn overlapped_compute_pairs(&self) -> Vec<(usize, usize)> {
+        let mut pairs = Vec::new();
+        let computes: Vec<&OverlapEvent> =
+            self.events.iter().filter(|e| e.kind == OverlapKind::Compute).collect();
+        for (i, a) in computes.iter().enumerate() {
+            for b in &computes[i + 1..] {
+                if a.stream != b.stream && a.overlap_with(b) > 0.0 {
+                    let pair = (a.level.min(b.level), a.level.max(b.level));
+                    if !pairs.contains(&pair) {
+                        pairs.push(pair);
+                    }
+                }
+            }
+        }
+        pairs
+    }
+
     /// Total seconds during which ≥2 streams were simultaneously busy
     /// (any kinds), from an event-boundary sweep.
     pub fn concurrent_busy(&self) -> f64 {
@@ -182,6 +206,7 @@ mod tests {
         };
         assert_eq!(tr.overlapped_transfer_pairs(), vec![(2, 3)]);
         assert!(tr.has_transfer_compute_overlap());
+        assert!(tr.overlapped_compute_pairs().is_empty());
         assert_eq!(tr.streams(), 2);
         assert!((tr.stream_busy(0) - 1.1).abs() < 1e-12);
         let rendered = tr.render();
@@ -210,5 +235,18 @@ mod tests {
             ],
         };
         assert!((tr.concurrent_busy() - 1.0).abs() < 1e-12);
+        assert_eq!(tr.overlapped_compute_pairs(), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn compute_pairs_require_distinct_streams() {
+        let tr = OverlapTrace {
+            events: vec![
+                ev(0, 2, OverlapKind::Compute, 0.0, 2.0),
+                ev(0, 1, OverlapKind::Compute, 1.0, 3.0), // same stream
+                ev(1, 1, OverlapKind::Transfer, 1.0, 3.0), // not compute
+            ],
+        };
+        assert!(tr.overlapped_compute_pairs().is_empty());
     }
 }

@@ -182,7 +182,11 @@ impl RunTrace {
 }
 
 /// Current `RunReport` / `BENCH_*.json` schema version.
-pub const RUN_REPORT_SCHEMA_VERSION: u64 = 1;
+///
+/// v2 added the solve-path overlap split (`solve_overlap_ratio`,
+/// `solve_overlapped_transfer_pairs`) when substitution started pipelining
+/// through the async engine.
+pub const RUN_REPORT_SCHEMA_VERSION: u64 = 2;
 
 /// Per-level launch statistics inside a [`RunReport`] (a serializable
 /// mirror of [`crate::plan::LevelScheduleStats`]).
@@ -227,6 +231,13 @@ pub struct RunReport {
     /// Solve-path operations recorded in the overlap trace (0 until a
     /// solve runs on an overlapping device).
     pub solve_trace_events: usize,
+    /// [`overlap_ratio`](RunReport::overlap_ratio) restricted to the
+    /// substitution trace: the fraction of the solve wall interval with
+    /// ≥2 streams busy (0 until solves pipeline through the async engine).
+    pub solve_overlap_ratio: f64,
+    /// Distinct overlap pairs observed on the solve path alone: RHS
+    /// uploads overlapping substitution compute on another stream.
+    pub solve_overlapped_transfer_pairs: usize,
     pub arena_bytes: u64,
     pub arena_peak_bytes: u64,
     pub predicted_peak_bytes: u64,
@@ -312,6 +323,11 @@ impl RunReport {
                 Json::Num(self.overlapped_transfer_pairs as f64),
             ),
             ("solve_trace_events".into(), Json::Num(self.solve_trace_events as f64)),
+            ("solve_overlap_ratio".into(), Json::Num(self.solve_overlap_ratio)),
+            (
+                "solve_overlapped_transfer_pairs".into(),
+                Json::Num(self.solve_overlapped_transfer_pairs as f64),
+            ),
             ("arena_bytes".into(), Json::Num(self.arena_bytes as f64)),
             ("arena_peak_bytes".into(), Json::Num(self.arena_peak_bytes as f64)),
             ("predicted_peak_bytes".into(), Json::Num(self.predicted_peak_bytes as f64)),
@@ -361,6 +377,8 @@ impl RunReport {
             overlap_ratio: num(v, "overlap_ratio")?,
             overlapped_transfer_pairs: count(v, "overlapped_transfer_pairs")?,
             solve_trace_events: count(v, "solve_trace_events")?,
+            solve_overlap_ratio: num(v, "solve_overlap_ratio")?,
+            solve_overlapped_transfer_pairs: count(v, "solve_overlapped_transfer_pairs")?,
             arena_bytes: counter(v, "arena_bytes")?,
             arena_peak_bytes: counter(v, "arena_peak_bytes")?,
             predicted_peak_bytes: counter(v, "predicted_peak_bytes")?,
@@ -405,6 +423,10 @@ impl RunReport {
         out.push_str(&format!(
             "  overlap ratio {:.3}, {} transfer/compute pairs, {} solve trace events\n",
             self.overlap_ratio, self.overlapped_transfer_pairs, self.solve_trace_events
+        ));
+        out.push_str(&format!(
+            "  solve-path overlap ratio {:.3}, {} transfer/compute pairs\n",
+            self.solve_overlap_ratio, self.solve_overlapped_transfer_pairs
         ));
         out.push_str(&format!(
             "  arena {} B (peak {} B, predicted {} B)\n",
@@ -494,6 +516,8 @@ mod tests {
             overlap_ratio: 0.25,
             overlapped_transfer_pairs: 3,
             solve_trace_events: 7,
+            solve_overlap_ratio: 0.125,
+            solve_overlapped_transfer_pairs: 2,
             arena_bytes: 4096,
             arena_peak_bytes: 8192,
             predicted_peak_bytes: 8192,

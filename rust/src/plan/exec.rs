@@ -458,7 +458,12 @@ impl<'a> Executor<'a> {
                     }
                 }
                 SolveInstr::StoreSol { items } => {
-                    self.device.fence();
+                    // No device-wide fence here: `download_vec` itself
+                    // observes this workspace's completed state and
+                    // re-raises its recorded failures (device.rs rule 4's
+                    // arena-scoped form). A global fence would needlessly
+                    // quiesce *other* solves pipelining through the same
+                    // engine.
                     for &(s, e, v) in items {
                         x[s..e].copy_from_slice(&ws.arena_ref().download_vec(v));
                     }

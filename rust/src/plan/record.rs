@@ -600,6 +600,7 @@ impl SolveCtx {
             &[(root_n, root_n, 2 * (root_n * root_n) as u64)],
             |r, _| 2 * (r * r) as u64,
         ));
+        rec.shapes.push(vec![(root_n, root_n, 2 * (root_n * root_n) as u64)]);
 
         // ---------- Backward pass (root -> leaves). ----------
         let mut sol: Vec<BufferId> = vec![seg[0]];
@@ -727,6 +728,14 @@ impl SolveCtx {
                 .collect(),
         });
 
+        // Algorithm 3 emits batch-of-one launches along a serial chain;
+        // the dependency-aware pass widens them wherever the chain's runs
+        // are actually independent. The parallel program (§3.7) is already
+        // maximally batched by construction and is left untouched.
+        if matches!(mode, SubstMode::Naive) {
+            coalesce_naive(&mut rec);
+        }
+
         let total_flops = rec.launches.iter().map(|l| l.flops).sum();
         SolveProgram {
             vec_base: factor.buf_count as u32,
@@ -766,6 +775,11 @@ struct SolveRecorder {
     vec_home: Vec<(u32, u32)>,
     steps: Vec<SolveInstr>,
     launches: Vec<LaunchMeta>,
+    /// Per-launch `(rows, cols, flops)` shape lists, parallel to
+    /// `launches`. [`LaunchMeta`] aggregates shapes away at construction;
+    /// the coalescing pass needs them back to rebuild exact metadata for
+    /// merged batches.
+    shapes: Vec<Vec<(usize, usize, u64)>>,
 }
 
 impl SolveRecorder {
@@ -776,6 +790,7 @@ impl SolveRecorder {
             vec_home: Vec::new(),
             steps: Vec::new(),
             launches: Vec::new(),
+            shapes: Vec::new(),
         }
     }
 
@@ -808,6 +823,7 @@ impl SolveRecorder {
             })
             .collect();
         self.launches.push(LaunchMeta::new(level, "BASIS", &shapes, |r, c| 2 * (r * c) as u64));
+        self.shapes.push(shapes);
         self.steps.push(SolveInstr::ApplyBasis { level, trans, items });
     }
 
@@ -819,6 +835,7 @@ impl SolveRecorder {
             items.iter().map(|&(_, _, n)| (n, n, (n * n) as u64)).collect();
         let kernel = if bwd { "TRSVT" } else { "TRSV" };
         self.launches.push(LaunchMeta::new(level, kernel, &shapes, |r, _| (r * r) as u64));
+        self.shapes.push(shapes);
         let instr_items: Vec<(BufferId, BufferId)> =
             items.iter().map(|&(m, v, _)| (m, v)).collect();
         if bwd {
@@ -847,6 +864,7 @@ impl SolveRecorder {
             .map(|&(_, _, _, (r, c))| (r, c, 2 * (r * c) as u64))
             .collect();
         self.launches.push(LaunchMeta::new(level, "GEMV", &shapes, |r, c| 2 * (r * c) as u64));
+        self.shapes.push(shapes);
         self.steps.push(SolveInstr::GemvAcc {
             level,
             trans,
@@ -879,5 +897,238 @@ impl SolveRecorder {
                 round.iter().map(|&t| entries[t]).collect();
             self.gemv_round(level, trans, &batch);
         }
+    }
+}
+
+// ---------------- Naive-chain coalescing pass ----------------
+
+/// Per-step hazard sets `(reads, writes)` as sorted, deduplicated raw ids
+/// (matrix and vector ids share one space; read-modify-write operands
+/// count as writes — the same classification the async engine's runtime
+/// tracker applies at enqueue). `None` marks a scheduling barrier the pass
+/// never moves a launch across (`Exchange` — the transport runs outside
+/// the device's hazard discipline).
+pub(crate) fn solve_step_hazards(step: &SolveInstr) -> Option<(Vec<u32>, Vec<u32>)> {
+    use crate::batch::device::{launch_operands, Launch};
+    let ops = match step {
+        SolveInstr::LoadRhs { items } => {
+            return Some((Vec::new(), items.iter().map(|&(_, _, v)| v.0).collect()));
+        }
+        SolveInstr::StoreSol { items } => {
+            return Some((items.iter().map(|&(_, _, v)| v.0).collect(), Vec::new()));
+        }
+        SolveInstr::Exchange { .. } => return None,
+        SolveInstr::ApplyBasis { level, trans, items } => {
+            launch_operands(&Launch::ApplyBasis { level: *level, trans: *trans, items })
+        }
+        SolveInstr::Split { items } => launch_operands(&Launch::Split { items }),
+        SolveInstr::Concat { items } => launch_operands(&Launch::Concat { items }),
+        SolveInstr::Copy { items } => launch_operands(&Launch::CopyBuf { items }),
+        SolveInstr::TrsvFwd { level, items } => {
+            launch_operands(&Launch::TrsvFwd { level: *level, items })
+        }
+        SolveInstr::TrsvBwd { level, items } => {
+            launch_operands(&Launch::TrsvBwd { level: *level, items })
+        }
+        SolveInstr::GemvAcc { level, trans, items } => launch_operands(&Launch::GemvAcc {
+            level: *level,
+            trans: *trans,
+            alpha: -1.0,
+            items,
+        }),
+        SolveInstr::Add { items } => launch_operands(&Launch::AddVec { items }),
+        SolveInstr::RootSolve { l, x } => launch_operands(&Launch::RootSolve { l: *l, x: *x }),
+    };
+    let mut reads: Vec<u32> =
+        ops.mat_reads.iter().chain(&ops.vec_reads).map(|b| b.0).collect();
+    let mut writes: Vec<u32> = ops
+        .mat_rw
+        .iter()
+        .chain(&ops.mat_writes)
+        .chain(&ops.vec_rw)
+        .chain(&ops.vec_writes)
+        .map(|b| b.0)
+        .collect();
+    reads.sort_unstable();
+    reads.dedup();
+    writes.sort_unstable();
+    writes.dedup();
+    Some((reads, writes))
+}
+
+/// Coalescing key: two launches may merge only when they run the same
+/// kernel at the same tree level (and, for GEMV, the same transpose — the
+/// recorded accumulate alpha is the constant −1.0, so it never splits a
+/// key).
+fn merge_key(step: &SolveInstr) -> Option<(u8, usize, bool)> {
+    match step {
+        SolveInstr::TrsvFwd { level, .. } => Some((0, *level, false)),
+        SolveInstr::TrsvBwd { level, .. } => Some((1, *level, false)),
+        SolveInstr::GemvAcc { level, trans, .. } => Some((2, *level, *trans)),
+        // Copies carry no launch metadata, but merging them matters: the
+        // backward chain stages every box's RHS through a copy, and an
+        // unmerged copy pins its TRSV (which read-write-conflicts with it)
+        // at the original serial position.
+        SolveInstr::Copy { .. } => Some((3, 0, false)),
+        _ => None,
+    }
+}
+
+fn intersects(a: &[u32], b: &[u32]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => return true,
+        }
+    }
+    false
+}
+
+/// Rebuild exact launch metadata for a merged batch from the retained
+/// shape lists (the padding model is per-kernel, so flops and padded
+/// flops come out exactly as if the batch had been recorded wide).
+fn rebuild_meta(instr: &SolveInstr, shapes: &[(usize, usize, u64)]) -> LaunchMeta {
+    match instr {
+        SolveInstr::TrsvFwd { level, .. } => {
+            LaunchMeta::new(*level, "TRSV", shapes, |r, _| (r * r) as u64)
+        }
+        SolveInstr::TrsvBwd { level, .. } => {
+            LaunchMeta::new(*level, "TRSVT", shapes, |r, _| (r * r) as u64)
+        }
+        SolveInstr::GemvAcc { level, .. } => {
+            LaunchMeta::new(*level, "GEMV", shapes, |r, c| 2 * (r * c) as u64)
+        }
+        _ => unreachable!("only TRSV/TRSVT/GEMV launches are coalesced"),
+    }
+}
+
+/// Dependency-aware coalescing of a recorded **naive** substitution
+/// program. Algorithm 3's serial chain emits batch-of-one TRSV/GEMV
+/// launches, but most of its runs are independent (different boxes touch
+/// different diagonal blocks and vector segments). Each mergeable launch
+/// scans *backward* over the already-emitted stream, hopping past steps it
+/// shares no buffer hazard with, and merges into the nearest launch with
+/// the same key ([`merge_key`]); the scan stops at the first conflicting
+/// step or hard barrier, so every merge is a reordering the hazard graph
+/// already permitted — dataflow, and therefore bit-exactness, is
+/// preserved, and the static graph of the coalesced program is exactly
+/// what the async engine's runtime tracker journals. A merged batch keeps
+/// the recorder's alias discipline by construction: a duplicate write
+/// target or a write aliasing another item's read *is* a hazard, so the
+/// scan stops before ever proposing such a merge.
+///
+/// Launch metadata is rebuilt per merged batch from the retained shape
+/// lists; unmerged launches keep their original metadata objects, so the
+/// total-flops invariant (a shape-multiset sum) and the predicted peak
+/// (a function of `vec_lens`, untouched here) stay byte-exact.
+fn coalesce_naive(rec: &mut SolveRecorder) {
+    struct OutStep {
+        instr: SolveInstr,
+        reads: Vec<u32>,
+        writes: Vec<u32>,
+        /// `Some((original meta index, shapes, merged))` for launch steps.
+        launch: Option<(usize, Vec<(usize, usize, u64)>, bool)>,
+        barrier: bool,
+    }
+
+    let steps = std::mem::take(&mut rec.steps);
+    let mut metas: Vec<Option<LaunchMeta>> =
+        std::mem::take(&mut rec.launches).into_iter().map(Some).collect();
+    let shapes = std::mem::take(&mut rec.shapes);
+    debug_assert_eq!(metas.len(), shapes.len());
+
+    let mut out: Vec<OutStep> = Vec::with_capacity(steps.len());
+    let mut next_meta = 0usize;
+    for instr in steps {
+        let is_launch = matches!(
+            instr,
+            SolveInstr::ApplyBasis { .. }
+                | SolveInstr::TrsvFwd { .. }
+                | SolveInstr::TrsvBwd { .. }
+                | SolveInstr::GemvAcc { .. }
+                | SolveInstr::RootSolve { .. }
+        );
+        let launch = if is_launch {
+            let m = next_meta;
+            next_meta += 1;
+            Some((m, shapes[m].clone(), false))
+        } else {
+            None
+        };
+        let (reads, writes, barrier) = match solve_step_hazards(&instr) {
+            Some((r, w)) => (r, w, false),
+            None => (Vec::new(), Vec::new(), true),
+        };
+        if let Some(key) = merge_key(&instr) {
+            let mut target = None;
+            for k in (0..out.len()).rev() {
+                let o = &out[k];
+                if o.barrier {
+                    break;
+                }
+                if intersects(&writes, &o.reads)
+                    || intersects(&reads, &o.writes)
+                    || intersects(&writes, &o.writes)
+                {
+                    break;
+                }
+                if merge_key(&o.instr) == Some(key) {
+                    target = Some(k);
+                    break;
+                }
+            }
+            if let Some(k) = target {
+                let o = &mut out[k];
+                match (&mut o.instr, instr) {
+                    (
+                        SolveInstr::TrsvFwd { items: ti, .. },
+                        SolveInstr::TrsvFwd { items, .. },
+                    )
+                    | (
+                        SolveInstr::TrsvBwd { items: ti, .. },
+                        SolveInstr::TrsvBwd { items, .. },
+                    )
+                    | (SolveInstr::Copy { items: ti }, SolveInstr::Copy { items }) => {
+                        ti.extend(items)
+                    }
+                    (
+                        SolveInstr::GemvAcc { items: ti, .. },
+                        SolveInstr::GemvAcc { items, .. },
+                    ) => ti.extend(items),
+                    _ => unreachable!("merge key matched across launch kinds"),
+                }
+                // Copies carry no metadata; for real launches the merged
+                // batch is re-described from the combined shape list.
+                if let (Some((_, t_shapes, merged)), Some((_, s_shapes, _))) =
+                    (o.launch.as_mut(), launch)
+                {
+                    t_shapes.extend(s_shapes);
+                    *merged = true;
+                }
+                o.reads.extend(reads);
+                o.reads.sort_unstable();
+                o.reads.dedup();
+                o.writes.extend(writes);
+                o.writes.sort_unstable();
+                o.writes.dedup();
+                continue;
+            }
+        }
+        out.push(OutStep { instr, reads, writes, launch, barrier });
+    }
+    debug_assert_eq!(next_meta, metas.len());
+
+    for o in out {
+        if let Some((mi, shp, merged)) = o.launch {
+            let meta = if merged {
+                rebuild_meta(&o.instr, &shp)
+            } else {
+                metas[mi].take().expect("each original meta is consumed once")
+            };
+            rec.launches.push(meta);
+        }
+        rec.steps.push(o.instr);
     }
 }

@@ -1664,20 +1664,25 @@ pub fn hazard_graph(plan: &Plan, streams: usize) -> HazardGraph {
     // Root Cholesky: the executor switches to stream(0) first.
     b.push("POTRF", 0, 0, vec![plan.factor.root_src.0]);
 
-    // Critical path: longest dependency chain, in ops.
-    let mut depth = vec![0usize; b.ops.len()];
+    assemble_graph(streams, b.ops, b.edges)
+}
+
+/// Finish a hazard graph from its op list: longest dependency chain
+/// (critical path, in ops) plus per-level aggregation (intra-level chains
+/// only) in first-occurrence order. Shared by the factorization and
+/// substitution builders so the two reports stay comparable.
+fn assemble_graph(streams: usize, ops: Vec<HazardOp>, edges: usize) -> HazardGraph {
+    let mut depth = vec![0usize; ops.len()];
     let mut critical_path = 0;
-    for op in &b.ops {
+    for op in &ops {
         let d = 1 + op.deps.iter().map(|&p| depth[p]).max().unwrap_or(0);
         depth[op.seq] = d;
         critical_path = critical_path.max(d);
     }
 
-    // Per-level aggregation (intra-level chains only), in first-occurrence
-    // order.
     let mut level_order: Vec<usize> = Vec::new();
     let mut level_idx: HashMap<usize, usize> = HashMap::new();
-    for op in &b.ops {
+    for op in &ops {
         level_idx.entry(op.level).or_insert_with(|| {
             level_order.push(op.level);
             level_order.len() - 1
@@ -1685,14 +1690,14 @@ pub fn hazard_graph(plan: &Plan, streams: usize) -> HazardGraph {
     }
     let mut level_ops = vec![0usize; level_order.len()];
     let mut level_crit = vec![0usize; level_order.len()];
-    let mut intra = vec![0usize; b.ops.len()];
-    for op in &b.ops {
+    let mut intra = vec![0usize; ops.len()];
+    for op in &ops {
         let li = level_idx[&op.level];
         level_ops[li] += 1;
         let d = 1 + op
             .deps
             .iter()
-            .filter(|&&p| b.ops[p].level == op.level)
+            .filter(|&&p| ops[p].level == op.level)
             .map(|&p| intra[p])
             .max()
             .unwrap_or(0);
@@ -1714,7 +1719,166 @@ pub fn hazard_graph(plan: &Plan, streams: usize) -> HazardGraph {
         })
         .collect();
 
-    HazardGraph { streams, ops: b.ops, levels, critical_path, edges: b.edges }
+    HazardGraph { streams, ops, levels, critical_path, edges }
+}
+
+/// Shared-reader chain builder for the substitution stream: the exact dep
+/// rule of the async engine's hazard table (`Engine::enqueue`). A read
+/// depends on the last writer of its buffer only — concurrent readers
+/// never order against each other, which is what lets every box of a level
+/// read the same factor block at once — while a write depends on the last
+/// writer *and* every reader journaled since, then becomes the new writer.
+#[derive(Default)]
+struct SolveGraphBuilder {
+    ops: Vec<HazardOp>,
+    /// Per-buffer `(last writer, readers since)`. One u32 namespace is
+    /// exact: factor matrices live below `vec_base` and workspace vectors
+    /// at `vec_base..`, mirroring the runtime's disjoint (arena, buffer)
+    /// keys.
+    access: HashMap<u32, (Option<usize>, Vec<usize>)>,
+    edges: usize,
+}
+
+impl SolveGraphBuilder {
+    fn push(
+        &mut self,
+        opcode: &'static str,
+        stream: usize,
+        level: usize,
+        reads: &[u32],
+        writes: &[u32],
+    ) {
+        let mut deps: Vec<usize> = Vec::new();
+        for b in reads {
+            if let Some((Some(w), _)) = self.access.get(b) {
+                deps.push(*w);
+            }
+        }
+        for b in writes {
+            if let Some((w, rs)) = self.access.get(b) {
+                if let Some(w) = w {
+                    deps.push(*w);
+                }
+                deps.extend(rs.iter().copied());
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        let seq = self.ops.len();
+        for &b in reads {
+            self.access.entry(b).or_default().1.push(seq);
+        }
+        for &b in writes {
+            let entry = self.access.entry(b).or_default();
+            entry.0 = Some(seq);
+            entry.1.clear();
+        }
+        let mut operands: Vec<u32> = reads.iter().chain(writes).copied().collect();
+        operands.sort_unstable();
+        operands.dedup();
+        self.edges += deps.len();
+        self.ops.push(HazardOp { seq, opcode, stream, level, operands, deps });
+    }
+}
+
+/// Build the static hazard graph of one substitution replay on an async
+/// executor with `streams` queues — the journal [`AsyncDevice`] produces
+/// when `Executor::run_solve_steps` issues `prog` (one solve at a time):
+///
+/// * `LoadRhs` journals one `UPLOADV` transfer per segment (a workspace
+///   write); received `Exchange` segments do the same after the
+///   collective's full fence.
+/// * every launch step journals one op whose operand roles come from
+///   [`launch_operands`], split exactly like the engine's `solve_roles`:
+///   factor-matrix and vector reads are *shared reads*, updated or
+///   written vectors are writes.
+/// * `StoreSol` journals nothing — `download_vec` is a synchronous,
+///   arena-scoped drain that leaves the (single-solve) engine quiescent,
+///   so the hazard table resets there, as it does at an `Exchange` fence.
+///
+/// Stream assignment mirrors the replay's level hints (`level % streams`
+/// at each level boundary). The graph models a solve issued right after a
+/// completed factorization replay, which parks the engine on stream 0 /
+/// level 0 (the root Cholesky's hint) — the session's steady state.
+pub fn solve_hazard_graph(prog: &SolveProgram, streams: usize) -> HazardGraph {
+    let streams = streams.max(1);
+    let mut b = SolveGraphBuilder::default();
+    let mut stream = 0usize;
+    let mut level = 0usize;
+    let mut cur_level = usize::MAX;
+    for step in &prog.steps {
+        if let Some(l) = step.level() {
+            if l != cur_level {
+                cur_level = l;
+                stream = l % streams;
+                level = l;
+            }
+        }
+        match step {
+            SolveInstr::LoadRhs { items } => {
+                for &(_, _, v) in items {
+                    b.push("UPLOADV", stream, level, &[], &[v.0]);
+                }
+            }
+            SolveInstr::StoreSol { .. } => {
+                b.access.clear();
+            }
+            SolveInstr::Exchange { recvs, .. } => {
+                // `device.fence()` before the collective quiesces the
+                // engine; the received segments then re-enter as journaled
+                // uploads.
+                b.access.clear();
+                for &(_, v, _) in recvs {
+                    b.push("UPLOADV", stream, level, &[], &[v.0]);
+                }
+            }
+            _ => {
+                let launch = solve_step_launch(step)
+                    .expect("transfer steps are handled above");
+                let ops = launch_operands(&launch);
+                let mut reads: Vec<u32> =
+                    ops.mat_reads.iter().chain(&ops.vec_reads).map(|b| b.0).collect();
+                let mut writes: Vec<u32> = ops
+                    .mat_rw
+                    .iter()
+                    .chain(&ops.mat_writes)
+                    .chain(&ops.vec_rw)
+                    .chain(&ops.vec_writes)
+                    .map(|b| b.0)
+                    .collect();
+                reads.sort_unstable();
+                reads.dedup();
+                writes.sort_unstable();
+                writes.dedup();
+                b.push(launch.opcode(), stream, level, &reads, &writes);
+            }
+        }
+    }
+    assemble_graph(streams, b.ops, b.edges)
+}
+
+/// View a launch-like substitution step as the [`Launch`] the replay
+/// issues for it (`None` for the transfer/collective steps `LoadRhs`,
+/// `StoreSol`, and `Exchange`, which never reach `launch_solve`).
+fn solve_step_launch<'a>(step: &'a SolveInstr) -> Option<Launch<'a>> {
+    Some(match step {
+        SolveInstr::ApplyBasis { level, trans, items } => {
+            Launch::ApplyBasis { level: *level, trans: *trans, items }
+        }
+        SolveInstr::Split { items } => Launch::Split { items },
+        SolveInstr::Concat { items } => Launch::Concat { items },
+        SolveInstr::Copy { items } => Launch::CopyBuf { items },
+        SolveInstr::TrsvFwd { level, items } => Launch::TrsvFwd { level: *level, items },
+        SolveInstr::TrsvBwd { level, items } => Launch::TrsvBwd { level: *level, items },
+        SolveInstr::GemvAcc { level, trans, items } => {
+            Launch::GemvAcc { level: *level, trans: *trans, alpha: -1.0, items }
+        }
+        SolveInstr::Add { items } => Launch::AddVec { items },
+        SolveInstr::RootSolve { l, x } => Launch::RootSolve { l: *l, x: *x },
+        SolveInstr::LoadRhs { .. } | SolveInstr::StoreSol { .. } | SolveInstr::Exchange { .. } => {
+            return None
+        }
+    })
 }
 
 // Re-exported for the record-time hook (`Recorder::run` debug-verifies its

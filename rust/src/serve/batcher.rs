@@ -122,6 +122,12 @@ pub struct BatchCounters {
     pub max_batch: AtomicUsize,
     /// Summed queue wait across batched requests, in microseconds.
     pub waited_us: AtomicU64,
+    /// Results that never reached their requester: waiters whose deadline
+    /// expired while queued (dropped *before* the solve, so their work is
+    /// skipped, not wasted) plus post-solve sends to receivers that had
+    /// already hung up. Nonzero values mean clients are timing out faster
+    /// than the batch window + solve latency.
+    pub discarded: AtomicUsize,
 }
 
 impl BatchCounters {
@@ -160,6 +166,10 @@ pub struct BatchOutcome {
 struct Pending {
     b: Vec<f64>,
     enqueued: Instant,
+    /// Instant after which the requester has certainly stopped waiting
+    /// (its `recv_timeout` started strictly after this was computed).
+    /// `None` = the requester waits indefinitely.
+    deadline: Option<Instant>,
     tx: mpsc::Sender<Result<BatchOutcome, ServeError>>,
 }
 
@@ -185,13 +195,14 @@ pub fn submit(
     entry: &Arc<SessionEntry>,
     b: Vec<f64>,
     window: Duration,
+    deadline: Option<Instant>,
     admission: &Arc<Admission>,
     counters: &Arc<BatchCounters>,
 ) -> mpsc::Receiver<Result<BatchOutcome, ServeError>> {
     let (tx, rx) = mpsc::channel();
     let is_leader = {
         let mut q = entry.queue.pending.lock().unwrap_or_else(|p| p.into_inner());
-        q.push(Pending { b, enqueued: Instant::now(), tx });
+        q.push(Pending { b, enqueued: Instant::now(), deadline, tx });
         q.len() == 1
     };
     if is_leader {
@@ -206,12 +217,35 @@ pub fn submit(
     rx
 }
 
+/// Partition a drained queue into still-awaited requests and the count of
+/// waiters whose deadline passed while they queued. `Pending::deadline` is
+/// computed *before* the requester starts its `recv_timeout`, so
+/// `now >= deadline` proves the requester's wait either has expired or will
+/// expire before any solve could complete — dropping the entry (its sender
+/// with it) surfaces the same timeout to the client without spending a
+/// solve on an answer nobody reads.
+fn split_expired(pendings: Vec<Pending>, now: Instant) -> (Vec<Pending>, usize) {
+    let before = pendings.len();
+    let live: Vec<Pending> = pendings
+        .into_iter()
+        .filter(|p| p.deadline.map_or(true, |d| now < d))
+        .collect();
+    let expired = before - live.len();
+    (live, expired)
+}
+
 /// Drain the session queue and solve it as one batch (the leader thread's
-/// body).
+/// body). Waiters that timed out while queued are dropped *before* the
+/// dispatch and counted in [`BatchCounters::discarded`]; so are solutions
+/// whose requester hung up between dispatch and delivery.
 fn dispatch(entry: &Arc<SessionEntry>, admission: &Arc<Admission>, counters: &BatchCounters) {
     let pendings = std::mem::take(
         &mut *entry.queue.pending.lock().unwrap_or_else(|p| p.into_inner()),
     );
+    let (pendings, expired) = split_expired(pendings, Instant::now());
+    if expired > 0 {
+        counters.discarded.fetch_add(expired, Ordering::Relaxed);
+    }
     if pendings.is_empty() {
         return;
     }
@@ -230,9 +264,15 @@ fn dispatch(entry: &Arc<SessionEntry>, admission: &Arc<Admission>, counters: &Ba
         Ok(reports) => {
             for (p, report) in pendings.into_iter().zip(reports) {
                 let wait_us = done.duration_since(p.enqueued).as_micros() as u64;
-                // A send can only fail when the requester gave up
-                // (timeout); its solution is discarded.
-                let _ = p.tx.send(Ok(BatchOutcome { report, batch_size: size, wait_us }));
+                // A send can only fail when the requester gave up after
+                // dispatch; count the wasted solution instead of silently
+                // eating it.
+                if p.tx
+                    .send(Ok(BatchOutcome { report, batch_size: size, wait_us }))
+                    .is_err()
+                {
+                    counters.discarded.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
         Err(e) => {
@@ -278,5 +318,39 @@ mod tests {
         assert_eq!(c.batched_requests.load(Ordering::Relaxed), 4);
         assert_eq!(c.max_batch.load(Ordering::Relaxed), 3);
         assert_eq!(c.avg_wait_us(), 77);
+        assert_eq!(c.discarded.load(Ordering::Relaxed), 0);
+    }
+
+    fn pending(deadline: Option<Instant>) -> (Pending, mpsc::Receiver<Result<BatchOutcome, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        (Pending { b: vec![1.0], enqueued: Instant::now(), deadline, tx }, rx)
+    }
+
+    #[test]
+    fn split_expired_drops_only_passed_deadlines() {
+        let now = Instant::now();
+        let soon = now + Duration::from_secs(60);
+        let (p_live, rx_live) = pending(Some(soon));
+        let (p_none, rx_none) = pending(None);
+        let (p_dead, rx_dead) = pending(Some(now));
+        let (live, expired) = split_expired(vec![p_live, p_none, p_dead], now);
+        assert_eq!(expired, 1);
+        assert_eq!(live.len(), 2);
+        assert!(live.iter().all(|p| p.deadline != Some(now)));
+        // The expired waiter's sender is gone: its receiver observes a
+        // disconnect (the client-side timeout surface), not a hang.
+        assert!(matches!(rx_dead.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+        drop(live);
+        assert!(matches!(rx_live.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+        assert!(matches!(rx_none.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+    }
+
+    #[test]
+    fn split_expired_keeps_everything_without_deadlines() {
+        let now = Instant::now();
+        let (a, _rxa) = pending(None);
+        let (b, _rxb) = pending(None);
+        let (live, expired) = split_expired(vec![a, b], now);
+        assert_eq!((live.len(), expired), (2, 0));
     }
 }

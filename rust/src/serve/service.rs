@@ -15,7 +15,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Service-level knobs (the CLI `serve` flags map onto these).
 #[derive(Clone, Debug)]
@@ -172,10 +172,15 @@ impl Service {
         let deadline = self.deadline(opts);
         let (report, batch_size, wait_us) =
             if opts.batchable() && self.cfg.batch_window_ms > 0 {
+                // The absolute give-up instant, computed *before* submit so
+                // it lower-bounds the client's actual `recv_timeout` expiry
+                // — the batcher may safely drop this waiter once it passes.
+                let give_up = deadline.map(|d| Instant::now() + d);
                 let rx = batcher::submit(
                     &entry,
                     b,
                     Duration::from_millis(self.cfg.batch_window_ms),
+                    give_up,
                     &self.admission,
                     &self.counters,
                 );
@@ -391,6 +396,10 @@ impl Service {
                     (
                         "avg_wait_us".to_string(),
                         Json::Num(self.counters.avg_wait_us() as f64),
+                    ),
+                    (
+                        "discarded".to_string(),
+                        Json::Num(self.counters.discarded.load(Ordering::Relaxed) as f64),
                     ),
                 ]),
             ),

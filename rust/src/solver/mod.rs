@@ -173,6 +173,13 @@ pub(crate) fn guard<T>(stage: &str, f: impl FnOnce() -> T) -> Result<T, H2Error>
         let lower = detail.to_lowercase();
         if lower.contains("spd") || lower.contains("positive definite") {
             H2Error::NotPositiveDefinite { stage: stage.to_string(), detail }
+        } else if lower.contains("hazard audit failed") || lower.contains("plan verification") {
+            // The typed violation wording shared by `ValidatingDevice`,
+            // the static verifier, and `AsyncDevice::launch_solve`'s
+            // region-aliasing check: a launch the hazard discipline
+            // rejects is a plan/dispatch bug, not an opaque internal
+            // panic.
+            H2Error::PlanVerification(detail)
         } else {
             H2Error::Internal { stage: stage.to_string(), detail }
         }
@@ -203,6 +210,13 @@ mod tests {
         })
         .unwrap_err();
         assert!(matches!(err, H2Error::NotPositiveDefinite { .. }), "{err:?}");
+        // Typed hazard violations (ValidatingDevice, the async engine's
+        // region-aliasing check) classify as plan-verification failures.
+        let err = guard("test", || {
+            panic!("hazard audit failed for TRSV: factor and workspace resolve to the same arena region")
+        })
+        .unwrap_err();
+        assert!(matches!(err, H2Error::PlanVerification(_)), "{err:?}");
         let err = guard("test", || panic!("index out of bounds")).unwrap_err();
         assert!(matches!(err, H2Error::Internal { .. }), "{err:?}");
         let ok = guard("test", || 41 + 1).unwrap();

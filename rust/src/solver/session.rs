@@ -895,6 +895,11 @@ impl H2Solver {
             None => None,
         };
         let (overlap_ratio, overlapped_transfer_pairs) = overlap_metrics(combined.as_ref());
+        // Solve-path split: the same metrics over the substitution trace
+        // alone, so the report shows whether *solves* pipelined (the
+        // combined ratio is dominated by the factorization replay).
+        let (solve_overlap_ratio, solve_overlapped_transfer_pairs) =
+            overlap_metrics(if solve.events.is_empty() { None } else { Some(&solve) });
         let sched = &self.stats.schedule;
         RunReport {
             schema_version: RUN_REPORT_SCHEMA_VERSION,
@@ -913,6 +918,8 @@ impl H2Solver {
             overlap_ratio,
             overlapped_transfer_pairs,
             solve_trace_events: solve.events.len(),
+            solve_overlap_ratio,
+            solve_overlapped_transfer_pairs,
             arena_bytes: self.stats.arena_bytes as u64,
             arena_peak_bytes: self.stats.arena_peak_bytes as u64,
             predicted_peak_bytes: self.stats.predicted_peak_bytes as u64,

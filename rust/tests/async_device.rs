@@ -137,17 +137,29 @@ fn async_refactorize_and_naive_replay_match_native() {
 // (b) Delay-injecting mock inner device: fence drains, hazards hold.
 // ---------------------------------------------------------------------
 
-/// Serial-reference device that sleeps before every factorization launch,
-/// stretching compute so scheduling claims become deterministic facts.
+/// Serial-reference device that sleeps before every factorization launch
+/// (and, with [`SlowDevice::with_solve_delay`], before every substitution
+/// launch), stretching compute so scheduling claims become deterministic
+/// facts.
 struct SlowDevice {
     inner: SerialBackend,
     delay: Duration,
+    solve_delay: Duration,
     launches: AtomicUsize,
 }
 
 impl SlowDevice {
     fn new(delay: Duration) -> SlowDevice {
-        SlowDevice { inner: SerialBackend, delay, launches: AtomicUsize::new(0) }
+        SlowDevice {
+            inner: SerialBackend,
+            delay,
+            solve_delay: Duration::ZERO,
+            launches: AtomicUsize::new(0),
+        }
+    }
+
+    fn with_solve_delay(delay: Duration) -> SlowDevice {
+        SlowDevice { solve_delay: delay, ..SlowDevice::new(Duration::ZERO) }
     }
 }
 
@@ -168,7 +180,9 @@ impl Device for SlowDevice {
         ws: &mut dyn DeviceArena,
         launch: &Launch<'_>,
     ) {
+        std::thread::sleep(self.solve_delay);
         self.inner.launch_solve(factor, ws, launch);
+        self.launches.fetch_add(1, Ordering::SeqCst);
     }
 
     fn name(&self) -> &'static str {
@@ -286,6 +300,57 @@ fn hazard_free_streams_overlap_on_the_mock_device() {
     );
 }
 
+#[test]
+fn independent_solve_workspaces_overlap_on_the_mock_device() {
+    // ISSUE 10: two journaled TRSV launches against one shared factor, in
+    // distinct workspaces on distinct streams. Both *read* factor B0 — the
+    // shared-reader operand rule means neither orders against the other —
+    // so with each launch sleeping 400 ms their trace intervals must
+    // intersect unless the engine wrongly serialized the readers.
+    const DELAY_MS: u64 = 400;
+    let adev = AsyncDevice::new(SlowDevice::with_solve_delay(Duration::from_millis(DELAY_MS)));
+    let mut rng = Rng::new(103);
+    let spd = Matrix::rand_spd(8, &mut rng);
+    let l = chol::cholesky(&spd).unwrap();
+    let mut factor = adev.new_arena(1);
+    factor.upload(BufferId(0), &l);
+    adev.fence();
+    let mut ws_a = adev.new_arena(1);
+    let mut ws_b = adev.new_arena(1);
+    let b: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+    let items = [(BufferId(0), BufferId(1))];
+    adev.stream(0);
+    ws_a.upload_vec(BufferId(1), &b);
+    adev.launch_solve(factor.as_ref(), ws_a.as_mut(), &Launch::TrsvFwd { level: 0, items: &items });
+    adev.stream(1);
+    ws_b.upload_vec(BufferId(1), &b);
+    adev.launch_solve(factor.as_ref(), ws_b.as_mut(), &Launch::TrsvFwd { level: 1, items: &items });
+    adev.fence();
+
+    // Both workspaces hold the synchronous forward-substitution result.
+    let want = {
+        let sync = SerialBackend;
+        let mut f = sync.new_arena(1);
+        f.upload(BufferId(0), &l);
+        let mut w = sync.new_arena(1);
+        w.upload_vec(BufferId(1), &b);
+        sync.launch_solve(f.as_ref(), w.as_mut(), &Launch::TrsvFwd { level: 0, items: &items });
+        w.download_vec(BufferId(1))
+    };
+    assert_eq!(ws_a.download_vec(BufferId(1)), want, "workspace A diverged");
+    assert_eq!(ws_b.download_vec(BufferId(1)), want, "workspace B diverged");
+
+    let trace = adev.take_overlap_trace().expect("async devices trace");
+    let trsvs: Vec<_> = trace.events.iter().filter(|e| e.opcode == "TRSV").collect();
+    assert_eq!(trsvs.len(), 2, "both solve launches must be traced");
+    assert_ne!(trsvs[0].stream, trsvs[1].stream, "stream hints must route to distinct queues");
+    assert!(
+        trsvs[0].overlap_with(trsvs[1]) > 0.0,
+        "concurrent readers of one factor must not serialize; trace:\n{}",
+        trace.render()
+    );
+}
+
 // ---------------------------------------------------------------------
 // (c) Real overlap on AsyncDevice<NativeBackend>.
 // ---------------------------------------------------------------------
@@ -372,6 +437,8 @@ fn solve_path_is_traced_and_surfaces_in_the_run_report() {
     let nr = native.run_report();
     assert_eq!(nr.solve_trace_events, 0);
     assert_eq!(nr.overlapped_transfer_pairs, 0);
+    assert_eq!(nr.solve_overlapped_transfer_pairs, 0);
+    assert_eq!(nr.solve_overlap_ratio, 0.0);
     assert!(nr.solve_time > 0.0);
 }
 

@@ -154,6 +154,45 @@ fn concurrent_solves_bit_match_sequential_across_fuzzed_structures() {
 }
 
 #[test]
+fn concurrent_pipelined_solves_bit_match_native_across_fuzzed_structures() {
+    // ISSUE 10: the journaled solve path preserves the PR 4 concurrency
+    // invariants — threads solving simultaneously on one `async:native`
+    // session reproduce the synchronous native session bit-for-bit in
+    // *both* substitution modes, while their launches pipeline through
+    // one shared engine (`H2_TEST_SEEDS` widens the sweep in CI).
+    for seed in seeds() {
+        let case = Case::from_seed(seed);
+        let native = case.solver(BackendSpec::Native);
+        let asynced = case.solver(BackendSpec::async_native());
+        let bs: Vec<Vec<f64>> = (0..3u64).map(|t| case.rhs(900 + t)).collect();
+        let want: Vec<(Vec<f64>, Vec<f64>)> = bs
+            .iter()
+            .map(|b| {
+                (
+                    native.solve(b).expect("rhs matches").x,
+                    native.solve_with(b, SubstMode::Naive).expect("rhs matches").x,
+                )
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for (b, (parallel, naive)) in bs.iter().zip(&want) {
+                let asynced = &asynced;
+                let case = &case;
+                s.spawn(move || {
+                    let x = asynced.solve(b).expect("rhs matches").x;
+                    assert_eq!(x, *parallel, "concurrent pipelined solve diverged for {case}");
+                    let x = asynced.solve_with(b, SubstMode::Naive).expect("rhs matches").x;
+                    assert_eq!(x, *naive, "concurrent pipelined naive solve diverged for {case}");
+                });
+            }
+        });
+        let (created, idle) = asynced.workspace_stats();
+        assert_eq!(created, idle, "pipelined session leaked a workspace region for {case}");
+        assert_eq!(asynced.plan_recordings(), 1, "re-planning occurred for {case}");
+    }
+}
+
+#[test]
 fn concurrent_mixed_entry_points_share_one_factor() {
     // solve / solve_refined / solve_dist all lease from one pool and read
     // one factor region; running them simultaneously must not perturb any
